@@ -1,0 +1,105 @@
+"""AOT lowering: L2 model functions → HLO *text* artifacts + manifest.
+
+HLO text (not serialized HloModuleProto) is the interchange format: the
+xla crate's xla_extension 0.5.1 rejects jax≥0.5 protos with 64-bit
+instruction ids, while the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts`. Python never runs on the request path; the
+rust binary is self-contained once `artifacts/` exists.
+
+Manifest format (artifacts/manifest.txt), one line per artifact:
+    <name> <n_pad> <rounds_per_call> <relative_path>
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: Capacity buckets: the xla backend pads any graph into the smallest
+#: bucket that fits. Sizes are tile-divisible (kernels use 256/128 tiles).
+BUCKETS = [256, 1024, 2048]
+
+#: TC is cubic in the bucket size; cap it one bucket lower.
+TC_BUCKETS = [256, 1024]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text.
+
+    `return_tuple=False`: multi-output modules come back as separate
+    PJRT array buffers. (Tuple-shaped output buffers trip unreliable
+    `ByteSizeOf(tuple, pointer_size=-1)` paths in xla_extension 0.5.1 —
+    fetching arrays individually is the stable path.)
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(out_dir: str) -> list[tuple[str, int, int, str]]:
+    entries = []
+    f32 = jnp.float32
+
+    def write(name, n, rounds, lowered):
+        path = f"{name}_{n}.hlo.txt"
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(to_hlo_text(lowered))
+        entries.append((name, n, rounds, path))
+
+    for n in BUCKETS:
+        vec = jax.ShapeDtypeStruct((n,), f32)
+        mat = jax.ShapeDtypeStruct((n, n), f32)
+        scal = jax.ShapeDtypeStruct((), f32)
+
+        # jnp flavor (timing path) + pallas flavor (kernel-validation path)
+        write("sssp_rounds", n, model.ROUNDS_PER_CALL, jax.jit(model.sssp_rounds).lower(vec, mat))
+        write(
+            "sssp_rounds_pallas",
+            n,
+            model.ROUNDS_PER_CALL,
+            jax.jit(model.sssp_rounds_pallas).lower(vec, mat),
+        )
+        write("pr_rounds", n, model.ROUNDS_PER_CALL, jax.jit(model.pr_rounds).lower(vec, mat, scal, scal))
+        write(
+            "pr_rounds_pallas",
+            n,
+            model.ROUNDS_PER_CALL,
+            jax.jit(model.pr_rounds_pallas).lower(vec, mat, scal, scal),
+        )
+
+    for n in TC_BUCKETS:
+        mat = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        write("tc_dense", n, 1, jax.jit(model.tc_dense).lower(mat))
+        write("tc_dense_pallas", n, 1, jax.jit(model.tc_dense_pallas).lower(mat))
+
+    return entries
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = lower_all(args.out_dir)
+    manifest = os.path.join(args.out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        for name, n, rounds, path in entries:
+            f.write(f"{name} {n} {rounds} {path}\n")
+    total = sum(
+        os.path.getsize(os.path.join(args.out_dir, e[3])) for e in entries
+    )
+    print(f"wrote {len(entries)} artifacts ({total / 1e6:.1f} MB) + {manifest}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,7 @@
+"""L1 Pallas kernels (build-time only; lowered into the AOT artifacts)."""
+
+from .pagerank import pr_step
+from .relax import minplus_step
+from .triangle import tc_count
+
+__all__ = ["minplus_step", "pr_step", "tc_count"]

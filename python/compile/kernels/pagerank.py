@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: dense PageRank Jacobi step (matvec on the
+column-normalized adjacency).
+
+The CUDA PR kernel is one-thread-per-vertex pull with double buffering;
+the dense analogue is `rank @ A_norm` — an MXU-friendly (vector × matrix)
+product tiled identically to the relax kernel, plus the scalar damping
+epilogue applied in the same kernel (fused, no second pass — unlike the
+Ligra loop-separated variant the paper criticizes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+U_TILE = 256
+V_TILE = 128
+
+
+def _pr_kernel(rank_ref, a_ref, scal_ref, out_ref):
+    u = pl.program_id(1)
+    nu = pl.num_programs(1)
+    part = rank_ref[...] @ a_ref[...]
+    prev = jnp.where(u == 0, jnp.zeros_like(part), out_ref[...])
+    acc = prev + part
+    # epilogue on the last reduction step: teleport + damping
+    delta = scal_ref[0]
+    n_live_recip = scal_ref[1]
+    out_ref[...] = jnp.where(
+        u == nu - 1, (1.0 - delta) * n_live_recip + delta * acc, acc
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pr_step(rank, a_norm, delta, n_live_recip, interpret=True):
+    """One PR step: (1-delta)/n_live + delta * (rank @ a_norm)."""
+    n = rank.shape[0]
+    assert a_norm.shape == (n, n)
+    u_tile = min(U_TILE, n)
+    v_tile = min(V_TILE, n)
+    assert n % u_tile == 0 and n % v_tile == 0
+    scal = jnp.stack([jnp.asarray(delta, jnp.float32), jnp.asarray(n_live_recip, jnp.float32)])
+    return pl.pallas_call(
+        _pr_kernel,
+        grid=(n // v_tile, n // u_tile),
+        in_specs=[
+            pl.BlockSpec((u_tile,), lambda v, u: (u,)),
+            pl.BlockSpec((u_tile, v_tile), lambda v, u: (u, v)),
+            pl.BlockSpec((2,), lambda v, u: (0,)),
+        ],
+        out_specs=pl.BlockSpec((v_tile,), lambda v, u: (v,)),
+        out_shape=jax.ShapeDtypeStruct((n,), rank.dtype),
+        interpret=interpret,
+    )(rank, a_norm, scal)

@@ -1,0 +1,44 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every Pallas kernel in this package has an exact reference here; pytest
+(`python/tests/`) asserts allclose between the two across shapes/dtypes
+(hypothesis sweeps). These references are also the L2 fallbacks when a
+bucket has no kernel variant.
+"""
+
+import jax.numpy as jnp
+
+#: "Infinite" distance used in the dense min-plus formulation. Kept well
+#: below f32 overflow so INF + w stays finite and comparisons are exact.
+INF_F = jnp.float32(1e9)
+
+
+def minplus_step_ref(dist, adj_w):
+    """One dense SSSP relaxation round (min-plus matrix-vector product).
+
+    new_dist[v] = min(dist[v], min_u(dist[u] + adj_w[u, v]))
+
+    `adj_w[u, v]` is the edge weight or INF_F when no edge — the dense
+    analogue of the CUDA bulk relax kernel (every vertex processed,
+    atomicMin folded into an associative min reduction).
+    """
+    cand = jnp.min(dist[:, None] + adj_w, axis=0)
+    return jnp.minimum(dist, cand)
+
+
+def pr_step_ref(rank, a_norm, delta, n_live_recip):
+    """One dense PageRank Jacobi step.
+
+    a_norm[u, v] = 1/outdeg(u) if edge u->v else 0 (rows of dangling or
+    padded vertices are all-zero). `n_live_recip` = 1/|V_live| as a scalar
+    f32 (padded vertices excluded from the teleport term by masking in
+    the caller).
+    """
+    sums = rank @ a_norm
+    return (1.0 - delta) * n_live_recip + delta * sums
+
+
+def tc_count_ref(a):
+    """Dense triangle count: sum((A @ A) * A) == 6 * #triangles for a
+    symmetric 0/1 adjacency with zero diagonal."""
+    return jnp.sum((a @ a) * a)

@@ -1,0 +1,63 @@
+"""L1 Pallas kernel: dense SSSP min-plus relaxation round.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CUDA
+relax kernel assigns one thread per vertex and resolves write races with
+`atomicMin`. On a vector/matrix unit the same schedule is a *min-plus
+matrix-vector product*: races become an associative `min` reduction over
+the in-edge axis, tiled so each (U_TILE × V_TILE) block of the weight
+matrix streams HBM→VMEM once.
+
+VMEM budget per grid step (f32):
+  dist tile  U_TILE            = 4 KiB   (U_TILE = 1024)
+  adj tile   U_TILE × V_TILE   = 512 KiB (V_TILE = 128)
+  acc tile   V_TILE            = 0.5 KiB
+comfortably inside the ~16 MiB budget; the u-axis is the reduction
+(sequential) grid dimension, double-buffered by Pallas.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes chosen for the VMEM budget above; both divide every bucket
+# size used by aot.py (256 / 1024 / 2048).
+U_TILE = 256
+V_TILE = 128
+
+
+def _relax_kernel(dist_ref, adj_ref, out_ref):
+    """Grid = (V blocks, U blocks); U is the reduction axis."""
+    u = pl.program_id(1)
+    # candidate distances through this U-tile: min over u of dist[u] + w[u,v]
+    d = dist_ref[...]
+    cand = jnp.min(d[:, None] + adj_ref[...], axis=0)
+    prev = jnp.where(u == 0, jnp.full_like(cand, jnp.inf), out_ref[...])
+    out_ref[...] = jnp.minimum(prev, cand)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def minplus_step(dist, adj_w, interpret=True):
+    """One relaxation round: returns elementwise min(dist, dist ⊗ adj_w).
+
+    `interpret=True` is required for CPU-PJRT execution (real TPU lowering
+    emits a Mosaic custom-call the CPU plugin cannot run).
+    """
+    n = dist.shape[0]
+    assert adj_w.shape == (n, n), (dist.shape, adj_w.shape)
+    u_tile = min(U_TILE, n)
+    v_tile = min(V_TILE, n)
+    assert n % u_tile == 0 and n % v_tile == 0, f"n={n} not tile-divisible"
+    cand = pl.pallas_call(
+        _relax_kernel,
+        grid=(n // v_tile, n // u_tile),
+        in_specs=[
+            pl.BlockSpec((u_tile,), lambda v, u: (u,)),
+            pl.BlockSpec((u_tile, v_tile), lambda v, u: (u, v)),
+        ],
+        out_specs=pl.BlockSpec((v_tile,), lambda v, u: (v,)),
+        out_shape=jax.ShapeDtypeStruct((n,), dist.dtype),
+        interpret=interpret,
+    )(dist, adj_w)
+    return jnp.minimum(dist, cand)

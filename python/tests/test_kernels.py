@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and densities; fixed seeds keep CI deterministic.
+This is the core correctness signal for the AOT artifacts — the lowered
+HLO contains exactly these kernels.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import minplus_step, pr_step, tc_count
+from compile.kernels.ref import INF_F, minplus_step_ref, pr_step_ref, tc_count_ref
+
+SIZES = [128, 256, 512]
+
+
+def rand_adj_w(rng, n, density):
+    w = rng.integers(1, 10, (n, n)).astype(np.float32)
+    mask = rng.random((n, n)) < density
+    np.fill_diagonal(mask, False)
+    return np.where(mask, w, np.float32(INF_F))
+
+
+def rand_sym01(rng, n, density):
+    a = rng.random((n, n)) < density
+    a = np.triu(a, 1)
+    return (a | a.T).astype(np.float32)
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("density", [0.0, 0.01, 0.1])
+def test_minplus_matches_ref(n, density):
+    rng = np.random.default_rng(n + int(density * 100))
+    adj = rand_adj_w(rng, n, density)
+    dist = np.full(n, INF_F, np.float32)
+    dist[rng.integers(0, n)] = 0.0
+    got = np.asarray(minplus_step(jnp.array(dist), jnp.array(adj)))
+    want = np.asarray(minplus_step_ref(jnp.array(dist), jnp.array(adj)))
+    np.testing.assert_allclose(got, want)
+
+
+@pytest.mark.parametrize("n", SIZES)
+def test_minplus_iterated_reaches_shortest_paths(n):
+    """Iterating the kernel must converge to real shortest paths
+    (validated against a tiny host Dijkstra)."""
+    import heapq
+
+    rng = np.random.default_rng(7)
+    adj = rand_adj_w(rng, n, 0.03)
+    dist = np.full(n, INF_F, np.float32)
+    dist[0] = 0.0
+    d = jnp.array(dist)
+    a = jnp.array(adj)
+    for _ in range(n):
+        nd = minplus_step(d, a)
+        if bool(jnp.all(nd == d)):
+            break
+        d = nd
+    # host dijkstra
+    want = np.full(n, np.inf)
+    want[0] = 0.0
+    pq = [(0.0, 0)]
+    while pq:
+        dd, v = heapq.heappop(pq)
+        if dd > want[v]:
+            continue
+        for u in range(n):
+            w = adj[v, u]
+            if w < INF_F and dd + w < want[u]:
+                want[u] = dd + w
+                heapq.heappush(pq, (want[u], u))
+    got = np.asarray(d)
+    reach = want < np.inf
+    np.testing.assert_allclose(got[reach], want[reach])
+    assert np.all(got[~reach] >= INF_F)
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("density", [0.0, 0.02, 0.1])
+def test_pr_step_matches_ref(n, density):
+    rng = np.random.default_rng(n * 3 + int(density * 100))
+    a = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(a, 0.0)
+    deg = a.sum(axis=1, keepdims=True)
+    a_norm = np.where(deg > 0, a / np.maximum(deg, 1), 0.0).astype(np.float32)
+    rank = rng.random(n).astype(np.float32)
+    got = np.asarray(pr_step(jnp.array(rank), jnp.array(a_norm), 0.85, 1.0 / n))
+    want = np.asarray(pr_step_ref(jnp.array(rank), jnp.array(a_norm), 0.85, 1.0 / n))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("density", [0.0, 0.05, 0.15])
+def test_tc_matches_ref_and_is_6x_integer(n, density):
+    rng = np.random.default_rng(n + int(density * 1000))
+    a = rand_sym01(rng, n, density)
+    got = float(tc_count(jnp.array(a)))
+    want = float(tc_count_ref(jnp.array(a)))
+    assert got == pytest.approx(want)
+    assert got % 6 == 0, "symmetric zero-diagonal count must be 6*T"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([128, 256]),
+    density=st.floats(0.0, 0.2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_minplus(n, density, seed):
+    rng = np.random.default_rng(seed)
+    adj = rand_adj_w(rng, n, density)
+    dist = rng.choice([0.0, 5.0, float(INF_F)], n).astype(np.float32)
+    got = np.asarray(minplus_step(jnp.array(dist), jnp.array(adj)))
+    want = np.asarray(minplus_step_ref(jnp.array(dist), jnp.array(adj)))
+    np.testing.assert_allclose(got, want)
+    assert np.all(got <= dist + 1e-6), "min-plus is monotone non-increasing"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.sampled_from([128, 256]),
+    density=st.floats(0.0, 0.2),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_pr_step(n, density, seed):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(a, 0.0)
+    deg = a.sum(axis=1, keepdims=True)
+    a_norm = np.where(deg > 0, a / np.maximum(deg, 1), 0.0).astype(np.float32)
+    rank = (rng.random(n) / n).astype(np.float32)
+    got = np.asarray(pr_step(jnp.array(rank), jnp.array(a_norm), 0.85, 1.0 / n))
+    want = np.asarray(pr_step_ref(jnp.array(rank), jnp.array(a_norm), 0.85, 1.0 / n))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-7)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([128, 256]), seed=st.integers(0, 2**31 - 1))
+def test_hypothesis_tc(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rand_sym01(rng, n, 0.08)
+    got = float(tc_count(jnp.array(a)))
+    want = float(tc_count_ref(jnp.array(a)))
+    assert got == pytest.approx(want)

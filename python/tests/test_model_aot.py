@@ -1,0 +1,95 @@
+"""L2 + AOT: model round functions behave correctly and the lowered HLO
+artifacts are well-formed."""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.kernels.ref import INF_F
+
+
+def line_graph_adj(n, k):
+    """Path 0->1->...->k with unit weights inside an n-padded matrix."""
+    adj = np.full((n, n), float(INF_F), np.float32)
+    for i in range(k):
+        adj[i, i + 1] = 1.0
+    return adj
+
+
+def test_sssp_rounds_advances_rounds_per_call_hops():
+    n = 256
+    adj = line_graph_adj(n, 20)
+    dist = np.full(n, float(INF_F), np.float32)
+    dist[0] = 0.0
+    new, changed = model.sssp_rounds(jnp.array(dist), jnp.array(adj))
+    new = np.asarray(new)
+    # exactly ROUNDS_PER_CALL hops resolved per call on a path graph
+    for i in range(model.ROUNDS_PER_CALL + 1):
+        assert new[i] == i
+    assert new[model.ROUNDS_PER_CALL + 1] == float(INF_F)
+    assert float(changed) == model.ROUNDS_PER_CALL
+
+
+def test_sssp_rounds_converged_reports_zero_changed():
+    n = 256
+    adj = line_graph_adj(n, 3)
+    dist = np.full(n, float(INF_F), np.float32)
+    dist[0], dist[1], dist[2], dist[3] = 0, 1, 2, 3
+    _, changed = model.sssp_rounds(jnp.array(dist), jnp.array(adj))
+    assert float(changed) == 0.0
+
+
+def test_pr_rounds_converges_toward_fixpoint():
+    n = 256
+    rng = np.random.default_rng(3)
+    a = (rng.random((n, n)) < 0.05).astype(np.float32)
+    np.fill_diagonal(a, 0)
+    deg = a.sum(axis=1, keepdims=True)
+    a_norm = np.where(deg > 0, a / np.maximum(deg, 1), 0).astype(np.float32)
+    rank = np.full(n, 1.0 / n, np.float32)
+    r = jnp.array(rank)
+    diffs = []
+    for _ in range(6):
+        r, d = model.pr_rounds(r, jnp.array(a_norm), jnp.float32(0.85), jnp.float32(1.0 / n))
+        diffs.append(float(d))
+    assert diffs[-1] < diffs[0], f"PR not contracting: {diffs}"
+    assert diffs[-1] < 1e-4
+
+
+def test_aot_writes_all_bucket_artifacts():
+    from compile import aot
+
+    with tempfile.TemporaryDirectory() as d:
+        entries = aot.lower_all(d)
+        names = {(e[0], e[1]) for e in entries}
+        for n in aot.BUCKETS:
+            assert ("sssp_rounds", n) in names
+            assert ("pr_rounds", n) in names
+        for n in aot.TC_BUCKETS:
+            assert ("tc_dense", n) in names
+        for _, _, _, path in entries:
+            text = open(os.path.join(d, path)).read()
+            assert text.startswith("HloModule"), f"{path} is not HLO text"
+            assert "ENTRY" in text
+
+
+def test_aot_cli_writes_manifest():
+    with tempfile.TemporaryDirectory() as d:
+        r = subprocess.run(
+            [sys.executable, "-m", "compile.aot", "--out-dir", d],
+            cwd=os.path.join(os.path.dirname(__file__), ".."),
+            capture_output=True,
+            text=True,
+        )
+        assert r.returncode == 0, r.stderr
+        manifest = open(os.path.join(d, "manifest.txt")).read().strip().splitlines()
+        assert len(manifest) == 16
+        for line in manifest:
+            name, n, rounds, path = line.split()
+            assert os.path.exists(os.path.join(d, path))

@@ -1,0 +1,143 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!  * diff-CSR vs CSR-rebuild per batch (the §3.5 motivation);
+//!  * diff-chain merge period sweep;
+//!  * RMA-accumulate vs two-sided send-recv (§5.2);
+//!  * batch-size sweep (§3.3.1: batch size tunes available parallelism);
+//!  * block vs hash partition for the dist backend.
+//!
+//! Usage: `cargo bench --bench ablations [-- diffcsr|merge|rma|batch|partition]`
+
+use starplat_dyn::algorithms::sssp;
+use starplat_dyn::backend::dist::{CommMode, DistEngine};
+use starplat_dyn::bench::selected;
+use starplat_dyn::graph::{generators, Csr, DynGraph, Partition, UpdateStream};
+use starplat_dyn::util::timer::time_it;
+
+fn diffcsr_vs_rebuild() {
+    println!("--- ablation: diff-CSR vs full CSR rebuild per batch ---");
+    println!("{:<10} {:>14} {:>14} {:>8}", "updates", "diff-CSR s", "rebuild s", "ratio");
+    let g0 = generators::rmat(12, 40_000, 0.57, 0.19, 0.19, 5);
+    for pct in [1.0, 5.0, 10.0, 20.0] {
+        let stream = UpdateStream::generate_percent(&g0, pct, 256, 9, 77);
+        // diff-CSR path
+        let mut g = g0.clone();
+        g.merge_period = 0; // never merge: worst case for the chain
+        let (_, t_diff) = time_it(|| {
+            for b in stream.batches() {
+                g.apply_deletions(&b.deletions());
+                g.apply_additions(&b.additions());
+            }
+        });
+        // rebuild path: reconstruct the CSR from scratch per batch
+        let mut edges = g0.edges_sorted();
+        let n = g0.num_nodes();
+        let (_, t_rebuild) = time_it(|| {
+            for b in stream.batches() {
+                let dels: std::collections::HashSet<_> =
+                    b.deletions().into_iter().collect();
+                edges.retain(|&(u, v, _)| !dels.contains(&(u, v)));
+                edges.extend(b.additions());
+                let _ = Csr::from_edges(n, &edges);
+            }
+        });
+        println!("{pct:<10} {t_diff:>14.4} {t_rebuild:>14.4} {:>8.1}x", t_rebuild / t_diff);
+    }
+    println!();
+}
+
+fn merge_period() {
+    println!("--- ablation: diff-chain merge period (SSSP dynamic total secs) ---");
+    println!("{:<14} {:>10} {:>12} {:>12}", "merge period", "chain len", "update s", "query s");
+    let g0 = generators::rmat(11, 20_000, 0.57, 0.19, 0.19, 6);
+    let stream = UpdateStream::generate_percent(&g0, 20.0, 64, 9, 78);
+    for period in [0usize, 1, 4, 16] {
+        let mut g = g0.clone();
+        g.merge_period = period;
+        let (_, t_upd) = time_it(|| {
+            for b in stream.batches() {
+                g.apply_deletions(&b.deletions());
+                g.apply_additions(&b.additions());
+            }
+        });
+        let chain = g.diff_chain_len();
+        let (_, t_query) = time_it(|| sssp::static_sssp(&g, 0));
+        let label = if period == 0 { "never".to_string() } else { period.to_string() };
+        println!("{label:<14} {chain:>10} {t_upd:>12.4} {t_query:>12.4}");
+    }
+    println!();
+}
+
+fn rma_vs_sendrecv() {
+    println!("--- ablation: RMA accumulate vs send-recv (dist SSSP) ---");
+    println!("{:<12} {:>10} {:>12} {:>14} {:>12}", "mode", "ranks", "wall s", "remote ops", "modeled s");
+    let g = generators::rmat(11, 20_000, 0.57, 0.19, 0.19, 7);
+    for mode in [CommMode::RmaAccumulate, CommMode::SendRecv] {
+        for ranks in [4usize, 8, 16] {
+            let mut e = DistEngine::new(ranks, Partition::Block);
+            e.mode = mode;
+            let (_, wall) = time_it(|| e.sssp_static(&g, 0));
+            let s = e.take_stats();
+            let ops = s.gets + s.accumulates + s.sends;
+            println!(
+                "{:<12} {ranks:>10} {wall:>12.4} {ops:>14} {:>12.6}",
+                format!("{mode:?}"),
+                s.modeled_secs(&e.comm_model)
+            );
+        }
+    }
+    println!();
+}
+
+fn batch_size() {
+    println!("--- ablation: batch size (dynamic SSSP, 10% updates) ---");
+    println!("{:<12} {:>12} {:>10}", "batch", "dynamic s", "batches");
+    let g0 = generators::rmat(11, 20_000, 0.57, 0.19, 0.19, 8);
+    for batch in [16usize, 64, 256, 1024, 4096] {
+        let stream = UpdateStream::generate_percent(&g0, 10.0, batch, 9, 79);
+        let mut g = g0.clone();
+        let mut st = sssp::static_sssp(&g, 0);
+        let (_, t) = time_it(|| {
+            for b in stream.batches() {
+                sssp::dynamic_batch(&mut g, &mut st, &b);
+            }
+        });
+        println!("{batch:<12} {t:>12.4} {:>10}", stream.num_batches());
+    }
+    println!();
+}
+
+fn partition_kind() {
+    println!("--- ablation: block vs hash partition (dist SSSP remote ops) ---");
+    println!("{:<10} {:>14} {:>14}", "ranks", "block ops", "hash ops");
+    let g = generators::rmat(11, 20_000, 0.57, 0.19, 0.19, 9);
+    for ranks in [4usize, 8, 16] {
+        let mut ops = Vec::new();
+        for p in [Partition::Block, Partition::Hash] {
+            let e = DistEngine::new(ranks, p);
+            e.sssp_static(&g, 0);
+            let s = e.take_stats();
+            ops.push(s.gets + s.accumulates + s.sends);
+        }
+        println!("{ranks:<10} {:>14} {:>14}", ops[0], ops[1]);
+    }
+    println!();
+}
+
+fn main() {
+    let _ = DynGraph::from_edges(2, &[(0, 1, 1)]); // keep import used
+    if selected("diffcsr") {
+        diffcsr_vs_rebuild();
+    }
+    if selected("merge") {
+        merge_period();
+    }
+    if selected("rma") {
+        rma_vs_sendrecv();
+    }
+    if selected("batch") {
+        batch_size();
+    }
+    if selected("partition") {
+        partition_kind();
+    }
+}

@@ -1,0 +1,48 @@
+//! Regenerates the data series behind **Figures 10–18**: runtime vs
+//! update-% curves (one CSV block per figure/graph) for all three
+//! backends. Figures map as:
+//!   fig10/11/12 — OpenMP TC/SSSP/PR      (cpu backend)
+//!   fig13/14/15 — MPI   TC/SSSP/PR      (dist backend)
+//!   fig16/17/18 — CUDA  TC/SSSP/PR      (xla backend)
+//!
+//! Usage: `cargo bench --bench figures [-- fig11 fig14 …]`
+//! Output: CSV rows `figure,graph,percent,static_secs,dynamic_secs`.
+
+use starplat_dyn::backend::BackendKind;
+use starplat_dyn::bench::{bench_suite, selected};
+use starplat_dyn::coordinator::{run_cell, Algo};
+
+fn main() {
+    // fewer graphs per figure (the paper also plots 4 per figure)
+    let figs: [(&str, Algo, BackendKind, &[f64], &[&str]); 9] = [
+        ("fig10", Algo::Tc, BackendKind::Cpu, &[1., 2., 4., 8., 12., 16., 20.], &["PK", "US", "GR", "UR"]),
+        ("fig11", Algo::Sssp, BackendKind::Cpu, &[1., 2., 4., 8., 12., 16., 20.], &["OK", "LJ", "US", "UR"]),
+        ("fig12", Algo::Pr, BackendKind::Cpu, &[1., 2., 4., 8., 12., 16., 20.], &["OK", "LJ", "PK", "GR"]),
+        ("fig13", Algo::Tc, BackendKind::Dist, &[1., 4., 8., 16., 20.], &["PK", "US", "GR", "UR"]),
+        ("fig14", Algo::Sssp, BackendKind::Dist, &[0.1, 0.4, 0.8, 1.6, 2.0], &["OK", "WK", "LJ", "PK"]),
+        ("fig15", Algo::Pr, BackendKind::Dist, &[0.1, 0.4, 0.8, 1.6, 2.0], &["WK", "PK", "US", "RM"]),
+        ("fig16", Algo::Tc, BackendKind::Xla, &[1., 4., 8., 20.], &["OK", "PK", "US", "GR"]),
+        ("fig17", Algo::Sssp, BackendKind::Xla, &[1., 4., 8., 20.], &["OK", "WK", "PK", "UR"]),
+        ("fig18", Algo::Pr, BackendKind::Xla, &[1., 4., 8., 20.], &["OK", "PK", "US", "UR"]),
+    ];
+    let suite = bench_suite(0.04, 0xA11CE);
+    println!("figure,graph,percent,static_secs,dynamic_secs");
+    for (fig, algo, backend, percents, graphs) in figs {
+        if !selected(fig) {
+            continue;
+        }
+        for short in graphs {
+            let Some(g) = suite.iter().find(|g| g.short == *short) else { continue };
+            for &pct in percents {
+                match run_cell(algo, backend, &g.graph, pct, usize::MAX / 2, 0xF16 + pct as u64) {
+                    Ok(c) => println!(
+                        "{fig},{short},{pct},{:.6},{:.6}",
+                        c.static_total(),
+                        c.dynamic_total()
+                    ),
+                    Err(_) => println!("{fig},{short},{pct},nan,nan"),
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,129 @@
+//! Microbenchmarks for the §Perf profiling pass: substrate operation
+//! costs that bound every end-to-end number.
+//!
+//! Usage: `cargo bench --bench microbench`
+
+use starplat_dyn::backend::cpu::atomic_min;
+use starplat_dyn::graph::{generators, UpdateStream};
+use starplat_dyn::util::threadpool::{Sched, ThreadPool};
+use starplat_dyn::util::timer::time_it;
+use std::sync::atomic::AtomicI64;
+
+fn main() {
+    let g = generators::rmat(12, 80_000, 0.57, 0.19, 0.19, 3);
+    let n = g.num_nodes();
+    let m = g.num_edges();
+    println!("substrate microbenchmarks on rmat n={n} m={m}");
+
+    // CSR traversal throughput (the SSSP/PR inner loop)
+    let (sum, t) = time_it(|| {
+        let mut acc = 0u64;
+        for _ in 0..8 {
+            for v in 0..n as u32 {
+                for (nbr, w) in g.out_neighbors(v) {
+                    acc = acc.wrapping_add(nbr as u64 + w as u64);
+                }
+            }
+        }
+        acc
+    });
+    println!(
+        "edge traversal      : {:>10.1} Medges/s   (checksum {sum})",
+        8.0 * m as f64 / t / 1e6
+    );
+
+    // traversal through a dirty diff chain
+    let mut gd = g.clone();
+    gd.merge_period = 0;
+    let stream = UpdateStream::generate_percent(&gd, 20.0, 256, 9, 4);
+    for b in stream.batches() {
+        gd.apply_deletions(&b.deletions());
+        gd.apply_additions(&b.additions());
+    }
+    let (_, t_dirty) = time_it(|| {
+        let mut acc = 0u64;
+        for _ in 0..8 {
+            for v in 0..n as u32 {
+                for (nbr, _) in gd.out_neighbors(v) {
+                    acc = acc.wrapping_add(nbr as u64);
+                }
+            }
+        }
+        acc
+    });
+    println!(
+        "  …after 20% churn  : {:>10.1} Medges/s   (chain len {})",
+        8.0 * gd.num_edges() as f64 / t_dirty / 1e6,
+        gd.diff_chain_len()
+    );
+    let mut gm = gd.clone();
+    gm.merge();
+    let (_, t_merged) = time_it(|| {
+        let mut acc = 0u64;
+        for _ in 0..8 {
+            for v in 0..n as u32 {
+                for (nbr, _) in gm.out_neighbors(v) {
+                    acc = acc.wrapping_add(nbr as u64);
+                }
+            }
+        }
+        acc
+    });
+    println!(
+        "  …after merge      : {:>10.1} Medges/s",
+        8.0 * gm.num_edges() as f64 / t_merged / 1e6
+    );
+
+    // atomic CAS-min throughput (the Min construct)
+    let cells: Vec<AtomicI64> = (0..1024).map(|_| AtomicI64::new(i64::MAX / 4)).collect();
+    let (_, t) = time_it(|| {
+        for i in 0..4_000_000u64 {
+            atomic_min(&cells[(i % 1024) as usize], (4_000_000 - i) as i64);
+        }
+    });
+    println!("atomic_min          : {:>10.1} Mops/s", 4.0 / t);
+
+    // thread pool dispatch overhead
+    for threads in [1usize, 2, 4] {
+        let pool = ThreadPool::new(threads);
+        let (_, t) = time_it(|| {
+            for _ in 0..100 {
+                pool.parallel_for(n, Sched::Dynamic { chunk: 1024 }, |_| {});
+            }
+        });
+        println!(
+            "pool dispatch ({threads}t)  : {:>10.2} us/parallel_for over n={n}",
+            t / 100.0 * 1e6
+        );
+    }
+
+    // update application throughput
+    let stream = UpdateStream::generate_percent(&g, 10.0, 1024, 9, 5);
+    let mut gu = g.clone();
+    let (_, t) = time_it(|| {
+        for b in stream.batches() {
+            gu.apply_deletions(&b.deletions());
+            gu.apply_additions(&b.additions());
+        }
+    });
+    println!(
+        "diff-CSR updates    : {:>10.1} Kupd/s",
+        stream.len() as f64 / t / 1e3
+    );
+
+    // PJRT dispatch latency (xla backend round-trip floor)
+    match starplat_dyn::backend::xla::XlaEngine::new() {
+        Ok(e) => {
+            let gsmall = generators::uniform_random(200, 1000, 9, 6);
+            let (_, t_first) = time_it(|| e.sssp_static(&gsmall, 0));
+            let calls = e.calls.get().max(1);
+            println!(
+                "PJRT fixed point    : {:>10.2} ms total, {} dispatches, {:.2} ms/dispatch",
+                t_first * 1e3,
+                calls,
+                t_first * 1e3 / calls as f64
+            );
+        }
+        Err(e) => println!("PJRT: skipped ({e})"),
+    }
+}

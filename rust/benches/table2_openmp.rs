@@ -1,0 +1,43 @@
+//! Regenerates **Table 2** (and the data behind Figs. 10–12): StarPlat's
+//! OpenMP dynamic code vs static code across update percentages, on the
+//! ten-graph suite — `cpu` backend (thread pool + atomics).
+//!
+//! Usage: `cargo bench --bench table2_openmp [-- sssp|tc|pr]`
+//! Scale via env `STARPLAT_SCALE` (default 0.05 ≈ 1000× below paper).
+
+use starplat_dyn::backend::BackendKind;
+use starplat_dyn::bench::{bench_suite, print_suite, selected, TablePrinter};
+use starplat_dyn::coordinator::{run_cell, Algo};
+
+fn main() {
+    let suite = bench_suite(0.05, 0xA11CE);
+    println!("== Table 2: OpenMP(cpu backend) dynamic vs static — times in seconds ==");
+    print_suite(&suite);
+    let percents = [1.0, 4.0, 8.0, 12.0, 16.0, 20.0];
+    for (algo, name) in [(Algo::Sssp, "sssp"), (Algo::Tc, "tc"), (Algo::Pr, "pr")] {
+        if !selected(name) {
+            continue;
+        }
+        println!("--- {} ---", name.to_uppercase());
+        let t = TablePrinter::new("upd% / mode", &suite);
+        for &pct in &percents {
+            let mut stat = Vec::new();
+            let mut dynv = Vec::new();
+            for g in &suite {
+                match run_cell(algo, BackendKind::Cpu, &g.graph, pct, usize::MAX / 2, 0xBE + pct as u64) {
+                    Ok(c) => {
+                        stat.push(c.static_total());
+                        dynv.push(c.dynamic_total());
+                    }
+                    Err(_) => {
+                        stat.push(f64::NAN);
+                        dynv.push(f64::NAN);
+                    }
+                }
+            }
+            t.row(&format!("{pct:>4}% static"), &stat);
+            t.row(&format!("{pct:>4}% dynamic"), &dynv);
+        }
+        println!();
+    }
+}

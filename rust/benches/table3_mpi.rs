@@ -1,0 +1,47 @@
+//! Regenerates **Table 3** (and Figs. 13–15): MPI(dist backend) dynamic
+//! vs static. Reported time = wall compute + modeled one-sided-comm time
+//! (see `backend::dist::CommModel`). SSSP/PR sweep 0.1–2 % (the paper's
+//! §6.1 note); TC sweeps 1–20 %.
+//!
+//! Usage: `cargo bench --bench table3_mpi [-- sssp|tc|pr]`
+
+use starplat_dyn::backend::BackendKind;
+use starplat_dyn::bench::{bench_suite, print_suite, selected, TablePrinter};
+use starplat_dyn::coordinator::{run_cell, Algo};
+
+fn main() {
+    let suite = bench_suite(0.05, 0xA11CE);
+    println!("== Table 3: MPI(dist backend, 8 ranks) dynamic vs static — seconds (wall + modeled comm) ==");
+    print_suite(&suite);
+    let cases: [(Algo, &str, &[f64]); 3] = [
+        (Algo::Sssp, "sssp", &[0.1, 0.4, 0.8, 1.2, 2.0]),
+        (Algo::Tc, "tc", &[1.0, 4.0, 8.0, 20.0]),
+        (Algo::Pr, "pr", &[0.1, 0.4, 0.8, 1.2, 2.0]),
+    ];
+    for (algo, name, percents) in cases {
+        if !selected(name) {
+            continue;
+        }
+        println!("--- {} ---", name.to_uppercase());
+        let t = TablePrinter::new("upd% / mode", &suite);
+        for &pct in percents {
+            let mut stat = Vec::new();
+            let mut dynv = Vec::new();
+            for g in &suite {
+                match run_cell(algo, BackendKind::Dist, &g.graph, pct, usize::MAX / 2, 0xD1 + pct as u64) {
+                    Ok(c) => {
+                        stat.push(c.static_total());
+                        dynv.push(c.dynamic_total());
+                    }
+                    Err(_) => {
+                        stat.push(f64::NAN);
+                        dynv.push(f64::NAN);
+                    }
+                }
+            }
+            t.row(&format!("{pct:>4}% static"), &stat);
+            t.row(&format!("{pct:>4}% dynamic"), &dynv);
+        }
+        println!();
+    }
+}

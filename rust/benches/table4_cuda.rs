@@ -1,0 +1,46 @@
+//! Regenerates **Table 4** (and Figs. 16–18): CUDA(xla backend) dynamic
+//! vs static — the dense bulk-synchronous kernels AOT-compiled from
+//! JAX/Pallas and executed via PJRT. Graphs exceeding the largest TC
+//! bucket print `-` (the paper's own Table 4 has `>3hrs` entries there).
+//!
+//! Usage: `cargo bench --bench table4_cuda [-- sssp|tc|pr]`
+
+use starplat_dyn::backend::BackendKind;
+use starplat_dyn::bench::{bench_suite, print_suite, selected, TablePrinter};
+use starplat_dyn::coordinator::{run_cell, Algo};
+
+fn main() {
+    // xla buckets cap at 2048 vertices (TC at 1024) — scale accordingly.
+    let suite = bench_suite(0.04, 0xA11CE);
+    println!("== Table 4: CUDA(xla backend via PJRT) dynamic vs static — seconds ==");
+    print_suite(&suite);
+    let percents = [1.0, 4.0, 8.0, 20.0];
+    for (algo, name) in [(Algo::Sssp, "sssp"), (Algo::Tc, "tc"), (Algo::Pr, "pr")] {
+        if !selected(name) {
+            continue;
+        }
+        println!("--- {} ---", name.to_uppercase());
+        let t = TablePrinter::new("upd% / mode", &suite);
+        for &pct in &percents {
+            let mut stat = Vec::new();
+            let mut dynv = Vec::new();
+            for g in &suite {
+                match run_cell(algo, BackendKind::Xla, &g.graph, pct, usize::MAX / 2, 0xC0 + pct as u64)
+                {
+                    Ok(c) => {
+                        stat.push(c.static_total());
+                        dynv.push(c.dynamic_total());
+                    }
+                    Err(_) => {
+                        // graph exceeds the bucket (paper: ">3hrs" cells)
+                        stat.push(f64::NAN);
+                        dynv.push(f64::NAN);
+                    }
+                }
+            }
+            t.row(&format!("{pct:>4}% static"), &stat);
+            t.row(&format!("{pct:>4}% dynamic"), &dynv);
+        }
+        println!();
+    }
+}

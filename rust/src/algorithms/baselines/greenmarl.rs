@@ -1,0 +1,106 @@
+//! Green-Marl-style engine: *dense push* vertex processing.
+//!
+//! §6.2: "Both [Green-Marl and StarPlat] follow a dense push configuration
+//! for vertex processing which needs iterating over all the vertices to
+//! determine if they are active" — expensive on large-diameter road
+//! networks where only a small frontier is live each round.
+
+use crate::algorithms::sssp::INF;
+use crate::graph::{DynGraph, NodeId};
+
+/// Dense-push SSSP: every round scans *all* vertices for the active flag
+/// (no frontier compaction). Returns `(dist, rounds, vertex_scans)` so
+/// benches can expose the wasted-scan cost on road networks.
+pub fn sssp_dense_push(g: &DynGraph, source: NodeId) -> (Vec<i64>, usize, u64) {
+    let n = g.num_nodes();
+    let mut dist = vec![INF; n];
+    dist[source as usize] = 0;
+    let mut modified = vec![false; n];
+    modified[source as usize] = true;
+    let mut rounds = 0usize;
+    let mut scans = 0u64;
+    loop {
+        let mut any = false;
+        let mut nxt = vec![false; n];
+        for v in 0..n as NodeId {
+            scans += 1; // the dense-push cost: scan regardless of activity
+            if !modified[v as usize] || dist[v as usize] >= INF {
+                continue;
+            }
+            let dv = dist[v as usize];
+            for (nbr, w) in g.out_neighbors(v) {
+                let alt = dv + w as i64;
+                if alt < dist[nbr as usize] {
+                    dist[nbr as usize] = alt;
+                    nxt[nbr as usize] = true;
+                    any = true;
+                }
+            }
+        }
+        rounds += 1;
+        modified = nxt;
+        if !any {
+            return (dist, rounds, scans);
+        }
+    }
+}
+
+/// Green-Marl PR is double-buffered like StarPlat's; it differs mainly in
+/// lock implementation details, so we model it as the same Jacobi sweep.
+pub fn pagerank_jacobi(g: &DynGraph, beta: f64, delta: f64, max_iter: usize) -> (Vec<f64>, usize) {
+    let n = g.num_nodes();
+    let mut st = crate::algorithms::pagerank::PrState::new(n, beta, delta, max_iter);
+    let iters = crate::algorithms::pagerank::static_pagerank(g, &mut st);
+    (st.rank, iters)
+}
+
+/// Node-iterator TC with *linear* membership scan (no sorted adjacency) —
+/// the §6.2 explanation for Green-Marl's much slower TC.
+pub fn tc_linear_scan(g: &DynGraph) -> i64 {
+    let n = g.num_nodes();
+    let mut count = 0i64;
+    for v in 0..n as NodeId {
+        let nbrs: Vec<NodeId> = g.out_neighbors(v).map(|(x, _)| x).collect();
+        for &u in nbrs.iter().filter(|&&u| u < v) {
+            for &w in nbrs.iter().filter(|&&w| w > v) {
+                // linear scan of u's adjacency for w
+                if g.out_neighbors(u).any(|(x, _)| x == w) {
+                    count += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::sssp::dijkstra_oracle;
+    use crate::algorithms::triangle::{static_tc, symmetrize};
+    use crate::graph::generators;
+
+    #[test]
+    fn dense_push_matches_dijkstra() {
+        let g = generators::uniform_random(100, 600, 9, 12);
+        let (dist, _, _) = sssp_dense_push(&g, 0);
+        assert_eq!(dist, dijkstra_oracle(&g, 0));
+    }
+
+    #[test]
+    fn dense_push_scans_scale_with_rounds() {
+        // long path: rounds ≈ path length, scans = rounds * n — the road
+        // pathology the paper describes.
+        let edges: Vec<_> = (0..49u32).map(|i| (i, i + 1, 1)).collect();
+        let g = DynGraph::from_edges(50, &edges);
+        let (_, rounds, scans) = sssp_dense_push(&g, 0);
+        assert!(rounds >= 49, "rounds={rounds}");
+        assert_eq!(scans, rounds as u64 * 50);
+    }
+
+    #[test]
+    fn linear_scan_tc_matches_reference() {
+        let g = symmetrize(&generators::uniform_random(50, 300, 5, 7));
+        assert_eq!(tc_linear_scan(&g), static_tc(&g).triangles);
+    }
+}

@@ -1,0 +1,194 @@
+//! Dynamic BFS — the paper's own motivating example from §1 ("a dynamic
+//! BFS may maintain the underlying BFS DAG in addition to the BFS level
+//! number information"). Extension beyond the paper's three evaluated
+//! algorithms: static levels + parent DAG, incremental (added edges can
+//! only lower levels), and decremental (invalidate the affected subtree
+//! of the BFS tree, then pull-recompute) — the unit-weight instance of
+//! the SSSP pipeline, maintained separately because BFS keeps *levels*
+//! and can early-terminate per level.
+
+use crate::graph::updates::Batch;
+use crate::graph::{DynGraph, NodeId};
+
+/// Unreached level marker.
+pub const UNREACHED: i64 = i64::MAX / 4;
+
+/// BFS state: level per vertex + one tree parent (the maintained DAG is
+/// recoverable as all in-neighbors at level-1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BfsState {
+    pub level: Vec<i64>,
+    pub parent: Vec<i64>,
+    pub source: NodeId,
+}
+
+/// Static BFS from `source`.
+pub fn static_bfs(g: &DynGraph, source: NodeId) -> BfsState {
+    let n = g.num_nodes();
+    let mut st = BfsState { level: vec![UNREACHED; n], parent: vec![-1; n], source };
+    st.level[source as usize] = 0;
+    let mut frontier = vec![source];
+    let mut lvl = 0i64;
+    while !frontier.is_empty() {
+        lvl += 1;
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for (nbr, _) in g.out_neighbors(v) {
+                if st.level[nbr as usize] == UNREACHED {
+                    st.level[nbr as usize] = lvl;
+                    st.parent[nbr as usize] = v as i64;
+                    next.push(nbr);
+                }
+            }
+        }
+        frontier = next;
+    }
+    st
+}
+
+/// Incremental BFS: an added edge `(u, v)` with `level[u] + 1 < level[v]`
+/// seeds a relaxation wavefront (levels only decrease).
+pub fn incremental(g: &DynGraph, st: &mut BfsState, adds: &[(NodeId, NodeId, i32)]) {
+    let mut frontier: Vec<NodeId> = Vec::new();
+    for &(u, v, _) in adds {
+        if st.level[u as usize] < UNREACHED && st.level[u as usize] + 1 < st.level[v as usize]
+        {
+            st.level[v as usize] = st.level[u as usize] + 1;
+            st.parent[v as usize] = u as i64;
+            frontier.push(v);
+        }
+    }
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            let lv = st.level[v as usize];
+            for (nbr, _) in g.out_neighbors(v) {
+                if lv + 1 < st.level[nbr as usize] {
+                    st.level[nbr as usize] = lv + 1;
+                    st.parent[nbr as usize] = v as i64;
+                    next.push(nbr);
+                }
+            }
+        }
+        frontier = next;
+    }
+}
+
+/// Decremental BFS: deleted tree edges invalidate their subtree, which is
+/// then pull-recomputed from intact in-neighbors.
+pub fn decremental(g: &DynGraph, st: &mut BfsState, dels: &[(NodeId, NodeId)]) {
+    let n = g.num_nodes();
+    let mut modified = vec![false; n];
+    for &(u, v) in dels {
+        if st.parent[v as usize] == u as i64 {
+            st.level[v as usize] = UNREACHED;
+            st.parent[v as usize] = -1;
+            modified[v as usize] = true;
+        }
+    }
+    // cascade down the former tree
+    loop {
+        let mut changed = false;
+        for v in 0..n {
+            if modified[v] {
+                continue;
+            }
+            let p = st.parent[v];
+            if p > -1 && modified[p as usize] {
+                st.level[v] = UNREACHED;
+                st.parent[v] = -1;
+                modified[v] = true;
+                changed = true;
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // pull recompute restricted to the invalidated set
+    loop {
+        let mut changed = false;
+        for v in 0..n as NodeId {
+            if !modified[v as usize] {
+                continue;
+            }
+            for (u, _) in g.in_neighbors(v) {
+                let lu = st.level[u as usize];
+                if lu < UNREACHED && lu + 1 < st.level[v as usize] {
+                    st.level[v as usize] = lu + 1;
+                    st.parent[v as usize] = u as i64;
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+}
+
+/// Full dynamic batch: OnDelete → updateCSRDel → Decremental → OnAdd →
+/// updateCSRAdd → Incremental.
+pub fn dynamic_batch(g: &mut DynGraph, st: &mut BfsState, batch: &Batch<'_>) {
+    let dels = batch.deletions();
+    g.apply_deletions(&dels);
+    decremental(g, st, &dels);
+    let adds = batch.additions();
+    g.apply_additions(&adds);
+    incremental(g, st, &adds);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, UpdateStream};
+    use crate::util::propcheck::forall_checks;
+
+    #[test]
+    fn static_bfs_levels_on_path() {
+        let g = DynGraph::from_edges(4, &[(0, 1, 1), (1, 2, 1), (2, 3, 1)]);
+        let st = static_bfs(&g, 0);
+        assert_eq!(st.level, vec![0, 1, 2, 3]);
+        assert_eq!(st.parent, vec![-1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn incremental_shortcut_lowers_levels() {
+        let mut g = DynGraph::from_edges(5, &[(0, 1, 1), (1, 2, 1), (2, 3, 1), (3, 4, 1)]);
+        let mut st = static_bfs(&g, 0);
+        g.apply_additions(&[(0, 3, 1)]);
+        incremental(&g, &mut st, &[(0, 3, 1)]);
+        assert_eq!(st.level, vec![0, 1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn decremental_cuts_subtree() {
+        let mut g = DynGraph::from_edges(4, &[(0, 1, 1), (1, 2, 1), (2, 3, 1), (0, 3, 1)]);
+        let mut st = static_bfs(&g, 0);
+        let dels = [(1u32, 2u32)];
+        g.apply_deletions(&dels);
+        decremental(&g, &mut st, &dels);
+        assert_eq!(st.level[2], UNREACHED, "2 unreachable after cut");
+        assert_eq!(st.level[3], 1, "3 still reachable via direct edge");
+    }
+
+    #[test]
+    fn prop_dynamic_bfs_equals_static_recompute() {
+        forall_checks(0xBF5, 30, |gen| {
+            let n = gen.usize_in(8, 60);
+            let seed = gen.rng().next_u64();
+            let g0 = generators::uniform_random(n, n * 4, 3, seed);
+            let stream =
+                UpdateStream::generate_percent(&g0, 12.0, gen.usize_in(2, 32), 3, seed ^ 9);
+            let mut g = g0.clone();
+            let mut st = static_bfs(&g, 0);
+            for b in stream.batches() {
+                dynamic_batch(&mut g, &mut st, &b);
+            }
+            let mut g2 = g0.clone();
+            stream.apply_all_static(&mut g2);
+            let want = static_bfs(&g2, 0);
+            assert_eq!(st.level, want.level, "BFS levels diverged");
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! Hand-written reference implementations of the paper's three algorithms
+//! (SSSP, PageRank, Triangle Counting), each with static + incremental +
+//! decremental variants, plus the baseline-framework strategy engines used
+//! by the Table 5/7/8 comparisons.
+//!
+//! These serve three roles:
+//!  1. correctness oracles for the DSL/backend execution paths,
+//!  2. the workload bodies the `cpu`/`dist`/`xla` engines parallelize,
+//!  3. the static baselines the dynamic variants are benchmarked against.
+
+pub mod baselines;
+pub mod bfs;
+pub mod pagerank;
+pub mod sssp;
+pub mod triangle;
+
+pub use bfs::BfsState;
+pub use pagerank::PrState;
+pub use sssp::{SsspState, INF};
+pub use triangle::TcState;

@@ -1,0 +1,340 @@
+//! Single-Source Shortest Paths: static (Bellman-Ford-style fixed point,
+//! Appendix Fig. 21 `staticSSSP`), incremental (push relaxation from
+//! activated vertices), and decremental (parent-tree invalidation cascade
+//! followed by pull recomputation) — the exact structure of the paper's
+//! DSL programs.
+
+use crate::graph::updates::Batch;
+use crate::graph::{DynGraph, NodeId};
+
+/// "Infinity" distance (safe against `+ weight` overflow; the paper's
+/// generated code uses `INT_MAX/2` the same way).
+pub const INF: i64 = i64::MAX / 4;
+
+/// SSSP node state: distances and the shortest-path tree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SsspState {
+    pub dist: Vec<i64>,
+    /// Parent in the SP tree, or `-1`.
+    pub parent: Vec<i64>,
+    pub source: NodeId,
+}
+
+impl SsspState {
+    pub fn new(n: usize, source: NodeId) -> Self {
+        let mut s = SsspState { dist: vec![INF; n], parent: vec![-1; n], source };
+        s.dist[source as usize] = 0;
+        s
+    }
+}
+
+/// Static SSSP: Bellman-Ford fixed point over `modified` frontiers
+/// (Fig. 21 `staticSSSP`). Returns the converged state.
+pub fn static_sssp(g: &DynGraph, source: NodeId) -> SsspState {
+    let n = g.num_nodes();
+    let mut st = SsspState::new(n, source);
+    let mut modified = vec![false; n];
+    modified[source as usize] = true;
+    let mut any = true;
+    while any {
+        any = false;
+        let mut modified_nxt = vec![false; n];
+        for v in 0..n as NodeId {
+            if !modified[v as usize] {
+                continue;
+            }
+            let dv = st.dist[v as usize];
+            if dv >= INF {
+                continue;
+            }
+            for (nbr, w) in g.out_neighbors(v) {
+                let alt = dv + w as i64;
+                if alt < st.dist[nbr as usize] {
+                    st.dist[nbr as usize] = alt;
+                    st.parent[nbr as usize] = v as i64;
+                    modified_nxt[nbr as usize] = true;
+                    any = true;
+                }
+            }
+        }
+        modified = modified_nxt;
+    }
+    st
+}
+
+/// `OnDelete` preprocessing (Fig. 21): a deleted edge `u -> v` whose `v`
+/// had `parent == u` invalidates `v`. Returns the modified flags.
+pub fn on_delete(st: &mut SsspState, dels: &[(NodeId, NodeId)]) -> Vec<bool> {
+    let mut modified = vec![false; st.dist.len()];
+    for &(u, v) in dels {
+        if st.parent[v as usize] == u as i64 {
+            st.dist[v as usize] = INF;
+            st.parent[v as usize] = -1;
+            modified[v as usize] = true;
+        }
+    }
+    modified
+}
+
+/// Decremental SSSP (Fig. 21 `Decremental`), run *after* the graph has
+/// been updated with the deletions:
+/// phase 1 — cascade invalidation down the former SP tree;
+/// phase 2 — pull-based recomputation of invalidated vertices.
+pub fn decremental(g: &DynGraph, st: &mut SsspState, modified: &mut [bool]) {
+    let n = g.num_nodes();
+    // Phase 1: any vertex whose parent is invalidated becomes invalidated.
+    let mut finished = false;
+    while !finished {
+        finished = true;
+        for v in 0..n {
+            if modified[v] {
+                continue;
+            }
+            let p = st.parent[v];
+            if p > -1 && modified[p as usize] {
+                st.dist[v] = INF;
+                st.parent[v] = -1;
+                modified[v] = true;
+                finished = false;
+            }
+        }
+    }
+    // Phase 2: pull — recompute invalidated vertices from in-neighbors
+    // until a fixed point (restricted Bellman-Ford; converges because all
+    // paths into the invalidated set start at valid vertices).
+    let mut finished = false;
+    while !finished {
+        finished = true;
+        for v in 0..n as NodeId {
+            if !modified[v as usize] {
+                continue;
+            }
+            for (nbr, w) in g.in_neighbors(v) {
+                let dn = st.dist[nbr as usize];
+                if dn >= INF {
+                    continue;
+                }
+                let alt = dn + w as i64;
+                if alt < st.dist[v as usize] {
+                    st.dist[v as usize] = alt;
+                    st.parent[v as usize] = nbr as i64;
+                    finished = false;
+                }
+            }
+        }
+    }
+}
+
+/// `OnAdd` preprocessing (Fig. 3): an added edge that can shorten the
+/// destination's distance activates both endpoints.
+pub fn on_add(st: &SsspState, adds: &[(NodeId, NodeId, i32)]) -> Vec<bool> {
+    let mut modified = vec![false; st.dist.len()];
+    for &(u, v, w) in adds {
+        if st.dist[u as usize] < INF && st.dist[u as usize] + (w as i64) < st.dist[v as usize] {
+            modified[u as usize] = true;
+            modified[v as usize] = true;
+        }
+    }
+    modified
+}
+
+/// Incremental SSSP (Fig. 21 `Incremental`): push relaxation fixed point
+/// seeded by the activated vertices. Run *after* `updateCSRAdd`.
+pub fn incremental(g: &DynGraph, st: &mut SsspState, modified: &mut Vec<bool>) {
+    let n = g.num_nodes();
+    let mut any = modified.iter().any(|&m| m);
+    while any {
+        any = false;
+        let mut nxt = vec![false; n];
+        for v in 0..n as NodeId {
+            if !modified[v as usize] {
+                continue;
+            }
+            let dv = st.dist[v as usize];
+            if dv >= INF {
+                continue;
+            }
+            for (nbr, w) in g.out_neighbors(v) {
+                let alt = dv + w as i64;
+                if alt < st.dist[nbr as usize] {
+                    st.dist[nbr as usize] = alt;
+                    st.parent[nbr as usize] = v as i64;
+                    nxt[nbr as usize] = true;
+                    any = true;
+                }
+            }
+        }
+        *modified = nxt;
+    }
+}
+
+/// Process one update batch through the full dynamic pipeline
+/// (Fig. 3 `DynSSSP` body): OnDelete → updateCSRDel → Decremental →
+/// OnAdd → updateCSRAdd → Incremental.
+pub fn dynamic_batch(g: &mut DynGraph, st: &mut SsspState, batch: &Batch<'_>) {
+    let dels = batch.deletions();
+    let mut mod_del = on_delete(st, &dels);
+    g.apply_deletions(&dels);
+    decremental(g, st, &mut mod_del);
+
+    let adds = batch.additions();
+    let mut mod_add = on_add(st, &adds);
+    g.apply_additions(&adds);
+    incremental(g, st, &mut mod_add);
+}
+
+/// Dijkstra with a binary heap — an *independent* oracle used only by
+/// tests (the main implementations are all Bellman-Ford-shaped).
+pub fn dijkstra_oracle(g: &DynGraph, source: NodeId) -> Vec<i64> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let n = g.num_nodes();
+    let mut dist = vec![INF; n];
+    dist[source as usize] = 0;
+    let mut pq = BinaryHeap::new();
+    pq.push(Reverse((0i64, source)));
+    while let Some(Reverse((d, v))) = pq.pop() {
+        if d > dist[v as usize] {
+            continue;
+        }
+        for (nbr, w) in g.out_neighbors(v) {
+            let alt = d + w as i64;
+            if alt < dist[nbr as usize] {
+                dist[nbr as usize] = alt;
+                pq.push(Reverse((alt, nbr)));
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::graph::UpdateStream;
+    use crate::util::propcheck::forall_checks;
+
+    #[test]
+    fn static_matches_dijkstra_small() {
+        let g = generators::uniform_random(60, 300, 9, 17);
+        let st = static_sssp(&g, 0);
+        assert_eq!(st.dist, dijkstra_oracle(&g, 0));
+    }
+
+    #[test]
+    fn unreachable_stays_inf() {
+        let g = DynGraph::from_edges(4, &[(0, 1, 2), (1, 2, 3)]);
+        let st = static_sssp(&g, 0);
+        assert_eq!(st.dist, vec![0, 2, 5, INF]);
+        assert_eq!(st.parent[2], 1);
+        assert_eq!(st.parent[3], -1);
+    }
+
+    #[test]
+    fn parents_form_shortest_path_tree() {
+        let g = generators::uniform_random(80, 400, 9, 23);
+        let st = static_sssp(&g, 3);
+        for v in 0..80usize {
+            if st.dist[v] < INF && v != 3 {
+                let p = st.parent[v];
+                assert!(p >= 0, "reachable vertex {v} must have a parent");
+                let w = g.edge_weight(p as NodeId, v as NodeId).expect("parent edge exists");
+                assert_eq!(st.dist[v], st.dist[p as usize] + w as i64);
+            }
+        }
+    }
+
+    #[test]
+    fn incremental_edge_shortens_path() {
+        // paper's Fig. 2 example shape: adding a shortcut reduces distances
+        // downstream of the target.
+        let mut g = DynGraph::from_edges(
+            5,
+            &[(0, 1, 10), (1, 2, 10), (2, 3, 10), (3, 4, 10), (0, 2, 50)],
+        );
+        let mut st = static_sssp(&g, 0);
+        assert_eq!(st.dist[4], 40);
+        let adds = [(0u32, 3u32, 5i32)];
+        let mut m = on_add(&st, &adds);
+        g.apply_additions(&[(0, 3, 5)]);
+        incremental(&g, &mut st, &mut m);
+        assert_eq!(st.dist[3], 5);
+        assert_eq!(st.dist[4], 15);
+        assert_eq!(st.dist, dijkstra_oracle(&g, 0));
+    }
+
+    #[test]
+    fn decremental_edge_invalidates_subtree() {
+        let mut g =
+            DynGraph::from_edges(5, &[(0, 1, 1), (1, 2, 1), (2, 3, 1), (0, 3, 10), (3, 4, 1)]);
+        let mut st = static_sssp(&g, 0);
+        assert_eq!(st.dist[3], 3);
+        let dels = [(1u32, 2u32)];
+        let mut m = on_delete(&mut st, &dels);
+        g.apply_deletions(&dels);
+        decremental(&g, &mut st, &mut m);
+        assert_eq!(st.dist[2], INF, "2 became unreachable");
+        assert_eq!(st.dist[3], 10, "3 falls back to the direct edge");
+        assert_eq!(st.dist[4], 11);
+        assert_eq!(st.dist, dijkstra_oracle(&g, 0));
+    }
+
+    #[test]
+    fn delete_nontree_edge_changes_nothing() {
+        let mut g = DynGraph::from_edges(3, &[(0, 1, 1), (1, 2, 1), (0, 2, 5)]);
+        let mut st = static_sssp(&g, 0);
+        let before = st.clone();
+        let dels = [(0u32, 2u32)]; // not a tree edge (dist[2]=2 via 1)
+        let mut m = on_delete(&mut st, &dels);
+        assert!(!m.iter().any(|&x| x), "no invalidation needed");
+        g.apply_deletions(&dels);
+        decremental(&g, &mut st, &mut m);
+        assert_eq!(st.dist, before.dist);
+    }
+
+    #[test]
+    fn prop_dynamic_equals_static_recompute() {
+        forall_checks(0x5550, 30, |gen| {
+            let n = gen.usize_in(8, 60);
+            let e = gen.usize_in(n, n * 5);
+            let seed = gen.rng().next_u64();
+            let g0 = generators::uniform_random(n, e, 9, seed);
+            let pct = 1.0 + gen.f64_unit() * 19.0;
+            let stream =
+                UpdateStream::generate_percent(&g0, pct, gen.usize_in(2, 16), 9, seed ^ 0xAB);
+            let src = gen.usize_in(0, n - 1) as NodeId;
+
+            // dynamic pipeline
+            let mut g = g0.clone();
+            let mut st = static_sssp(&g, src);
+            for batch in stream.batches() {
+                dynamic_batch(&mut g, &mut st, &batch);
+            }
+
+            // static recompute on the fully-updated graph
+            let mut g2 = g0.clone();
+            stream.apply_all_static(&mut g2);
+            let want = dijkstra_oracle(&g2, src);
+            assert_eq!(st.dist, want, "dynamic != static recompute");
+        });
+    }
+
+    #[test]
+    fn prop_road_graph_dynamic_correct() {
+        forall_checks(0x5551, 8, |gen| {
+            let side = gen.usize_in(4, 10);
+            let seed = gen.rng().next_u64();
+            let g0 = generators::road_grid(side, side, 9, seed);
+            let stream = UpdateStream::generate_percent(&g0, 10.0, 8, 9, seed ^ 1);
+            let mut g = g0.clone();
+            let mut st = static_sssp(&g, 0);
+            for batch in stream.batches() {
+                dynamic_batch(&mut g, &mut st, &batch);
+            }
+            let mut g2 = g0.clone();
+            stream.apply_all_static(&mut g2);
+            assert_eq!(st.dist, dijkstra_oracle(&g2, 0));
+        });
+    }
+}

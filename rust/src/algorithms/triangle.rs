@@ -1,0 +1,321 @@
+//! Triangle Counting over the symmetric (undirected) view: static
+//! node-iterator count (Appendix Fig. 19 `staticTC`) and the paper's
+//! delta-counting dynamic variants with the 1/2, 1/4, 1/6 multiplicity
+//! corrections.
+//!
+//! Protocol notes (matching the paper's setup): TC runs on *symmetric*
+//! graphs — every undirected edge is stored as two directed arcs, and an
+//! update inserts/deletes both arcs in the same batch. The delta counter
+//! then sees each triangle with k new undirected edges exactly 2k times,
+//! which the `count_k / (2k)` division corrects.
+
+use crate::graph::{DynGraph, NodeId, Weight};
+use std::collections::HashSet;
+
+/// Triangle-count state: the running count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TcState {
+    pub triangles: i64,
+}
+
+/// Static TC (Fig. 19 `staticTC`): for every `v`, neighbors `u < v` and
+/// `w > v`, count if `u–w` is an edge. Counts each triangle once.
+pub fn static_tc(g: &DynGraph) -> TcState {
+    let n = g.num_nodes();
+    let mut count = 0i64;
+    for v in 0..n as NodeId {
+        let nbrs: Vec<NodeId> = g.out_neighbors(v).map(|(x, _)| x).collect();
+        for &u in nbrs.iter().filter(|&&u| u < v) {
+            for &w in nbrs.iter().filter(|&&w| w > v) {
+                if g.has_edge(u, w) {
+                    count += 1;
+                }
+            }
+        }
+    }
+    TcState { triangles: count }
+}
+
+/// Brute-force oracle: enumerate all vertex triples (tests only).
+pub fn brute_force_tc(g: &DynGraph) -> i64 {
+    let n = g.num_nodes();
+    let mut count = 0;
+    for a in 0..n as NodeId {
+        for b in (a + 1)..n as NodeId {
+            if !g.has_edge(a, b) {
+                continue;
+            }
+            for c in (b + 1)..n as NodeId {
+                if g.has_edge(a, c) && g.has_edge(b, c) {
+                    count += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
+/// Delta counting shared by incremental and decremental TC (Fig. 19):
+/// for each updated arc `(v1, v2)` and each neighbor `v3` of `v1`,
+/// a wedge closed by `v2–v3` is a triangle; its multiplicity class is the
+/// number of *updated* edges among `{v1v2, v1v3, v2v3}`.
+///
+/// `modified` answers "is this arc part of the update batch"; the graph
+/// must already contain the arcs being counted (incremental: after
+/// `updateCSRAdd`; decremental: before `updateCSRDel`).
+fn delta_count(
+    g: &DynGraph,
+    arcs: &[(NodeId, NodeId)],
+    modified: &HashSet<(NodeId, NodeId)>,
+) -> i64 {
+    let mut count1 = 0i64;
+    let mut count2 = 0i64;
+    let mut count3 = 0i64;
+    let is_mod = |a: NodeId, b: NodeId| modified.contains(&(a, b)) || modified.contains(&(b, a));
+    for &(v1, v2) in arcs {
+        if v1 == v2 {
+            continue;
+        }
+        for (v3, _) in g.out_neighbors(v1) {
+            if v3 == v2 || v3 == v1 {
+                continue;
+            }
+            if !g.has_edge(v2, v3) && !g.has_edge(v3, v2) {
+                continue;
+            }
+            let mut new_edges = 1; // the (v1, v2) update itself
+            if is_mod(v1, v3) {
+                new_edges += 1;
+            }
+            if is_mod(v2, v3) {
+                new_edges += 1;
+            }
+            match new_edges {
+                1 => count1 += 1,
+                2 => count2 += 1,
+                _ => count3 += 1,
+            }
+        }
+    }
+    count1 / 2 + count2 / 4 + count3 / 6
+}
+
+/// Incremental TC (Fig. 19): run *after* the additions are in the graph.
+/// `adds` contains both arcs of each undirected insertion.
+pub fn incremental(g: &DynGraph, st: &mut TcState, adds: &[(NodeId, NodeId, Weight)]) {
+    let arcs: Vec<(NodeId, NodeId)> = adds.iter().map(|&(u, v, _)| (u, v)).collect();
+    let modified: HashSet<(NodeId, NodeId)> = arcs.iter().copied().collect();
+    st.triangles += delta_count(g, &arcs, &modified);
+}
+
+/// Decremental TC (Fig. 19): run *before* the deletions leave the graph.
+pub fn decremental(g: &DynGraph, st: &mut TcState, dels: &[(NodeId, NodeId)]) {
+    let modified: HashSet<(NodeId, NodeId)> = dels.iter().copied().collect();
+    st.triangles -= delta_count(g, dels, &modified);
+}
+
+/// One dynamic TC batch (Fig. 19 `DynTC` body order): Decremental (graph
+/// intact) → updateCSRDel → updateCSRAdd → Incremental.
+pub fn dynamic_batch(
+    g: &mut DynGraph,
+    st: &mut TcState,
+    dels: &[(NodeId, NodeId)],
+    adds: &[(NodeId, NodeId, Weight)],
+) {
+    decremental(g, st, dels);
+    g.apply_deletions(dels);
+    g.apply_additions(adds);
+    incremental(g, st, adds);
+}
+
+/// Make a symmetric (undirected) version of a graph: both arcs for every
+/// edge, weight copied from the first arc seen.
+pub fn symmetrize(g: &DynGraph) -> DynGraph {
+    let n = g.num_nodes();
+    let mut seen = HashSet::new();
+    let mut edges = Vec::new();
+    for (u, v, w) in g.edges_sorted() {
+        let key = (u.min(v), u.max(v));
+        if u != v && seen.insert(key) {
+            edges.push((u, v, w));
+            edges.push((v, u, w));
+        }
+    }
+    DynGraph::from_edges(n, &edges)
+}
+
+/// Generate a symmetric update stream for TC: `total` undirected updates
+/// (each expanded into its two arcs, kept adjacent in the stream), half
+/// deletions of existing undirected edges, half fresh insertions.
+pub fn symmetric_updates(
+    g: &DynGraph,
+    percent: f64,
+    batch_size: usize,
+    seed: u64,
+) -> (Vec<Vec<(NodeId, NodeId)>>, Vec<Vec<(NodeId, NodeId, Weight)>>) {
+    use crate::util::Rng;
+    let mut rng = Rng::new(seed);
+    let n = g.num_nodes();
+    // undirected edge set
+    let mut und: Vec<(NodeId, NodeId)> = g
+        .edges_sorted()
+        .into_iter()
+        .filter(|&(u, v, _)| u < v)
+        .map(|(u, v, _)| (u, v))
+        .collect();
+    let m_und = und.len();
+    let total = ((m_und as f64) * percent / 100.0).round() as usize;
+    let n_del = (total / 2).min(m_und);
+    let n_add = total - n_del;
+
+    rng.shuffle(&mut und);
+    let dels: Vec<(NodeId, NodeId)> = und[..n_del].to_vec();
+
+    let mut present: HashSet<(NodeId, NodeId)> = und.iter().copied().collect();
+    let mut adds = Vec::new();
+    let mut attempts = 0;
+    while adds.len() < n_add && attempts < n_add * 64 + 1024 {
+        attempts += 1;
+        let a = rng.below_usize(n) as NodeId;
+        let b = rng.below_usize(n) as NodeId;
+        if a == b {
+            continue;
+        }
+        let key = (a.min(b), a.max(b));
+        if present.insert(key) {
+            adds.push(key);
+        }
+    }
+
+    // Split into per-batch arc lists (batch_size counts undirected updates,
+    // mixing deletions and additions like the paper's batches).
+    let mut del_batches = Vec::new();
+    let mut add_batches = Vec::new();
+    let num_batches = total.div_ceil(batch_size.max(1)).max(1);
+    for b in 0..num_batches {
+        let dlo = (b * dels.len()) / num_batches;
+        let dhi = ((b + 1) * dels.len()) / num_batches;
+        let alo = (b * adds.len()) / num_batches;
+        let ahi = ((b + 1) * adds.len()) / num_batches;
+        let mut darcs = Vec::new();
+        for &(u, v) in &dels[dlo..dhi] {
+            darcs.push((u, v));
+            darcs.push((v, u));
+        }
+        let mut aarcs = Vec::new();
+        for &(u, v) in &adds[alo..ahi] {
+            let w = 1 + rng.below(9) as Weight;
+            aarcs.push((u, v, w));
+            aarcs.push((v, u, w));
+        }
+        del_batches.push(darcs);
+        add_batches.push(aarcs);
+    }
+    (del_batches, add_batches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::propcheck::forall_checks;
+
+    fn und(n: usize, pairs: &[(NodeId, NodeId)]) -> DynGraph {
+        let mut edges = Vec::new();
+        for &(u, v) in pairs {
+            edges.push((u, v, 1));
+            edges.push((v, u, 1));
+        }
+        DynGraph::from_edges(n, &edges)
+    }
+
+    #[test]
+    fn counts_single_triangle() {
+        let g = und(3, &[(0, 1), (1, 2), (0, 2)]);
+        assert_eq!(static_tc(&g).triangles, 1);
+        assert_eq!(brute_force_tc(&g), 1);
+    }
+
+    #[test]
+    fn counts_k4_has_four_triangles() {
+        let g = und(4, &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        assert_eq!(static_tc(&g).triangles, 4);
+    }
+
+    #[test]
+    fn no_triangles_in_star() {
+        let g = und(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]);
+        assert_eq!(static_tc(&g).triangles, 0);
+    }
+
+    #[test]
+    fn incremental_single_new_edge() {
+        // path 0-1-2; adding 0-2 closes one triangle with exactly 1 new edge
+        let mut g = und(3, &[(0, 1), (1, 2)]);
+        let mut st = static_tc(&g);
+        assert_eq!(st.triangles, 0);
+        let adds = vec![(0, 2, 1), (2, 0, 1)];
+        g.apply_additions(&adds);
+        incremental(&g, &mut st, &adds);
+        assert_eq!(st.triangles, 1);
+        assert_eq!(st.triangles, static_tc(&g).triangles);
+    }
+
+    #[test]
+    fn incremental_all_three_edges_new() {
+        let mut g = und(3, &[]);
+        let mut st = static_tc(&g);
+        let adds =
+            vec![(0, 1, 1), (1, 0, 1), (1, 2, 1), (2, 1, 1), (0, 2, 1), (2, 0, 1)];
+        g.apply_additions(&adds);
+        incremental(&g, &mut st, &adds);
+        assert_eq!(st.triangles, 1, "3-new-edge triangle counted once via /6");
+    }
+
+    #[test]
+    fn decremental_removes_triangle() {
+        let mut g = und(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        let mut st = static_tc(&g);
+        assert_eq!(st.triangles, 1);
+        let dels = vec![(0, 1), (1, 0)];
+        decremental(&g, &mut st, &dels);
+        g.apply_deletions(&dels);
+        assert_eq!(st.triangles, 0);
+        assert_eq!(st.triangles, static_tc(&g).triangles);
+    }
+
+    #[test]
+    fn static_matches_brute_force_random() {
+        let g = symmetrize(&generators::uniform_random(40, 250, 5, 8));
+        assert_eq!(static_tc(&g).triangles, brute_force_tc(&g));
+    }
+
+    #[test]
+    fn prop_dynamic_tc_equals_static_recompute() {
+        forall_checks(0x7C7C, 25, |gen| {
+            let n = gen.usize_in(6, 40);
+            let e = gen.usize_in(n, n * 4);
+            let seed = gen.rng().next_u64();
+            let g0 = symmetrize(&generators::uniform_random(n, e, 5, seed));
+            let pct = 1.0 + gen.f64_unit() * 19.0;
+            let (dels, adds) = symmetric_updates(&g0, pct, gen.usize_in(1, 8), seed ^ 0xF00);
+
+            let mut g = g0.clone();
+            let mut st = static_tc(&g);
+            for (d, a) in dels.iter().zip(&adds) {
+                dynamic_batch(&mut g, &mut st, d, a);
+            }
+            let truth = static_tc(&g).triangles;
+            assert_eq!(st.triangles, truth, "delta counting diverged");
+            assert_eq!(truth, brute_force_tc(&g));
+        });
+    }
+
+    #[test]
+    fn symmetrize_makes_symmetric() {
+        let g = symmetrize(&generators::rmat(6, 150, 0.57, 0.19, 0.19, 4));
+        for (u, v, _) in g.edges_sorted() {
+            assert!(g.has_edge(v, u));
+        }
+    }
+}

@@ -1,0 +1,50 @@
+//! Execution backends — the paper's three code-generation targets mapped
+//! to this testbed (see DESIGN.md §2):
+//!
+//! * [`serial`] — single-thread reference interpreter (correctness oracle);
+//! * [`cpu`] — the OpenMP analogue: thread pool + gcc-atomics-style
+//!   lock-free `Min`, dynamic/static scheduling;
+//! * [`dist`] — the MPI analogue: rank-partitioned diff-CSR with simulated
+//!   one-sided RMA windows and communication accounting;
+//! * [`xla`] — the CUDA analogue: bulk-synchronous dense kernels authored
+//!   in JAX/Pallas, AOT-compiled to HLO and executed via PJRT.
+
+pub mod cpu;
+pub mod dist;
+pub mod serial;
+pub mod xla;
+
+/// Which backend executes a workload (CLI/bench selector).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    Serial,
+    Cpu,
+    Dist,
+    Xla,
+}
+
+impl std::str::FromStr for BackendKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "serial" => Ok(BackendKind::Serial),
+            "cpu" | "omp" | "openmp" => Ok(BackendKind::Cpu),
+            "dist" | "mpi" => Ok(BackendKind::Dist),
+            "xla" | "cuda" | "gpu" => Ok(BackendKind::Xla),
+            other => Err(format!("unknown backend {other:?} (serial|cpu|dist|xla)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses_aliases() {
+        assert_eq!("omp".parse::<BackendKind>().unwrap(), BackendKind::Cpu);
+        assert_eq!("cuda".parse::<BackendKind>().unwrap(), BackendKind::Xla);
+        assert_eq!("mpi".parse::<BackendKind>().unwrap(), BackendKind::Dist);
+        assert!("tpu9".parse::<BackendKind>().is_err());
+    }
+}

@@ -1,0 +1,63 @@
+//! Serial backend: thin wrapper over the hand-written reference
+//! algorithms in [`crate::algorithms`]. It is the oracle every parallel
+//! backend is validated against, and the "1-thread" row in scaling
+//! ablations.
+
+use crate::algorithms::{pagerank, sssp, triangle, PrState, SsspState, TcState};
+use crate::graph::updates::Batch;
+use crate::graph::{DynGraph, NodeId, Weight};
+
+/// The serial engine (stateless).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SerialEngine;
+
+impl SerialEngine {
+    pub fn sssp_static(&self, g: &DynGraph, source: NodeId) -> SsspState {
+        sssp::static_sssp(g, source)
+    }
+
+    pub fn sssp_dynamic_batch(&self, g: &mut DynGraph, st: &mut SsspState, batch: &Batch<'_>) {
+        sssp::dynamic_batch(g, st, batch);
+    }
+
+    pub fn pr_static(&self, g: &DynGraph, st: &mut PrState) -> usize {
+        pagerank::static_pagerank(g, st)
+    }
+
+    pub fn pr_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut PrState,
+        batch: &Batch<'_>,
+    ) -> pagerank::PrBatchStats {
+        pagerank::dynamic_batch(g, st, batch)
+    }
+
+    pub fn tc_static(&self, g: &DynGraph) -> TcState {
+        triangle::static_tc(g)
+    }
+
+    pub fn tc_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut TcState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) {
+        triangle::dynamic_batch(g, st, dels, adds);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn serial_engine_delegates_to_reference() {
+        let g = generators::uniform_random(40, 160, 9, 1);
+        let e = SerialEngine;
+        let st = e.sssp_static(&g, 0);
+        assert_eq!(st.dist, sssp::dijkstra_oracle(&g, 0));
+    }
+}

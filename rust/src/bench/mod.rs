@@ -1,0 +1,101 @@
+//! Local bench harness (the offline crates.io snapshot has no criterion):
+//! fixed-width table printing, suite construction, and argument handling
+//! shared by the `rust/benches/*.rs` binaries.
+
+use crate::graph::generators::{table1_suite, NamedGraph};
+
+/// Default suite scale for benches: ~1000× smaller than the paper's
+/// graphs, same shapes (override with env `STARPLAT_SCALE`).
+pub fn bench_suite(default_scale: f64, seed: u64) -> Vec<NamedGraph> {
+    let scale = std::env::var("STARPLAT_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default_scale);
+    table1_suite(scale, seed)
+}
+
+/// Print the Table 1 header block for a suite.
+pub fn print_suite(suite: &[NamedGraph]) {
+    println!("\nInput graphs (paper Table 1 analogues; δ = degree):");
+    println!("{:<6} {:<16} {:>8} {:>9} {:>7} {:>7}", "short", "stands for", "|V|", "|E|", "avg δ", "max δ");
+    for g in suite {
+        let n = g.graph.num_nodes();
+        let m = g.graph.num_edges();
+        let max_d = (0..n as u32).map(|v| g.graph.out_degree(v)).max().unwrap_or(0);
+        println!(
+            "{:<6} {:<16} {:>8} {:>9} {:>7.1} {:>7}",
+            g.short,
+            g.long,
+            n,
+            m,
+            m as f64 / n as f64,
+            max_d
+        );
+    }
+    println!();
+}
+
+/// Fixed-width row printer for static-vs-dynamic tables.
+pub struct TablePrinter {
+    pub cols: Vec<String>,
+}
+
+impl TablePrinter {
+    pub fn new(first: &str, suite: &[NamedGraph]) -> Self {
+        let mut cols = vec![first.to_string()];
+        cols.extend(suite.iter().map(|g| g.short.to_string()));
+        let t = TablePrinter { cols };
+        t.print_header();
+        t
+    }
+
+    fn print_header(&self) {
+        let mut line = format!("{:<22}", self.cols[0]);
+        for c in &self.cols[1..] {
+            line.push_str(&format!("{c:>10}"));
+        }
+        println!("{line}");
+        println!("{}", "-".repeat(line.len()));
+    }
+
+    pub fn row(&self, label: &str, values: &[f64]) {
+        let mut line = format!("{label:<22}");
+        for v in values {
+            if v.is_nan() {
+                line.push_str(&format!("{:>10}", "-"));
+            } else if *v >= 100.0 {
+                line.push_str(&format!("{v:>10.1}"));
+            } else {
+                line.push_str(&format!("{v:>10.4}"));
+            }
+        }
+        println!("{line}");
+    }
+}
+
+/// `cargo bench -- <filters>`: returns true if `name` matches any filter
+/// (or there are no filters).
+pub fn selected(name: &str) -> bool {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    args.is_empty() || args.iter().any(|a| name.contains(a.as_str()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_builds_at_small_scale() {
+        let s = bench_suite(0.01, 3);
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn printer_formats_without_panicking() {
+        let s = bench_suite(0.01, 4);
+        print_suite(&s);
+        let t = TablePrinter::new("updates %", &s);
+        t.row("1 static", &vec![0.5; 10]);
+        t.row("1 dynamic", &vec![f64::NAN; 10]);
+    }
+}

@@ -1,0 +1,385 @@
+//! Coordinator: the experiment pipeline of §6.
+//!
+//! For every (algorithm, backend, graph, update-%) cell the paper's
+//! protocol is:
+//!   * **static time** — apply all updates up-front, then recompute the
+//!     property from scratch;
+//!   * **dynamic time** — start from the pre-computed property on the
+//!     original graph, then process the updates batch-by-batch through
+//!     the dynamic pipeline (preprocess → updateCSR → propagate).
+//! The initial static solve that seeds the dynamic run is *not* part of
+//! the dynamic time (the paper measures update processing).
+
+use crate::algorithms::{pagerank, sssp, triangle, PrState, TcState};
+use crate::backend::cpu::CpuEngine;
+use crate::backend::dist::DistEngine;
+use crate::backend::xla::XlaEngine;
+use crate::backend::BackendKind;
+use crate::graph::{DynGraph, NodeId, UpdateStream};
+use crate::util::timer::time_it;
+use anyhow::Result;
+
+/// Algorithm selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    Sssp,
+    Pr,
+    Tc,
+}
+
+impl std::str::FromStr for Algo {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "sssp" => Ok(Algo::Sssp),
+            "pr" | "pagerank" => Ok(Algo::Pr),
+            "tc" | "triangle" => Ok(Algo::Tc),
+            other => Err(format!("unknown algo {other:?} (sssp|pr|tc)")),
+        }
+    }
+}
+
+/// One measured cell.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub static_secs: f64,
+    pub dynamic_secs: f64,
+    /// extra modeled communication seconds (dist backend only)
+    pub static_comm_secs: f64,
+    pub dynamic_comm_secs: f64,
+}
+
+impl Cell {
+    pub fn static_total(&self) -> f64 {
+        self.static_secs + self.static_comm_secs
+    }
+
+    pub fn dynamic_total(&self) -> f64 {
+        self.dynamic_secs + self.dynamic_comm_secs
+    }
+
+    pub fn speedup(&self) -> f64 {
+        self.static_total() / self.dynamic_total().max(1e-12)
+    }
+}
+
+/// PR parameters used across the evaluation (paper: beta=0.001 note in
+/// Table 7; damping 0.85; 100 iteration cap).
+pub fn pr_params(n: usize) -> PrState {
+    PrState::new(n, 1e-3, 0.85, 100)
+}
+
+/// Run one (algo, backend) experiment cell. `percent` follows the §6
+/// protocol (half deletions, half insertions). TC uses symmetric updates.
+pub fn run_cell(
+    algo: Algo,
+    backend: BackendKind,
+    g0: &DynGraph,
+    percent: f64,
+    batch_size: usize,
+    seed: u64,
+) -> Result<Cell> {
+    match algo {
+        Algo::Sssp => sssp_cell(backend, g0, percent, batch_size, seed),
+        Algo::Pr => pr_cell(backend, g0, percent, batch_size, seed),
+        Algo::Tc => tc_cell(backend, g0, percent, batch_size, seed),
+    }
+}
+
+fn sssp_cell(
+    backend: BackendKind,
+    g0: &DynGraph,
+    percent: f64,
+    batch_size: usize,
+    seed: u64,
+) -> Result<Cell> {
+    let stream = UpdateStream::generate_percent(g0, percent, batch_size, 9, seed);
+    let src: NodeId = 0;
+    let mut cell = Cell { static_secs: 0.0, dynamic_secs: 0.0, static_comm_secs: 0.0, dynamic_comm_secs: 0.0 };
+
+    // static protocol: updates applied up-front, recompute from scratch
+    let mut gs = g0.clone();
+    stream.apply_all_static(&mut gs);
+
+    match backend {
+        BackendKind::Serial | BackendKind::Cpu => {
+            // "StarPlat Static" comparator = the dense-push shape the
+            // paper's codegen emits (§6.2); see backend::cpu.
+            let run_static: Box<dyn Fn(&DynGraph) -> Vec<i64>> = match backend {
+                BackendKind::Serial => Box::new(move |g| sssp::static_sssp(g, src).dist),
+                _ => {
+                    let e = CpuEngine::default();
+                    Box::new(move |g| e.sssp_static_dense(g, src).dist)
+                }
+            };
+            let (_, t_static) = time_it(|| run_static(&gs));
+            cell.static_secs = t_static;
+
+            let mut gd = g0.clone();
+            let e = CpuEngine::default();
+            let mut st = if backend == BackendKind::Serial {
+                sssp::static_sssp(&gd, src)
+            } else {
+                e.sssp_static(&gd, src)
+            };
+            let (_, t_dyn) = time_it(|| {
+                for b in stream.batches() {
+                    if backend == BackendKind::Serial {
+                        sssp::dynamic_batch(&mut gd, &mut st, &b);
+                    } else {
+                        e.sssp_dynamic_batch(&mut gd, &mut st, &b);
+                    }
+                }
+            });
+            cell.dynamic_secs = t_dyn;
+        }
+        BackendKind::Dist => {
+            let e = DistEngine::new(8, crate::graph::Partition::Block);
+            let (_, t_static) = time_it(|| e.sssp_static(&gs, src));
+            cell.static_secs = t_static;
+            cell.static_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
+
+            let mut gd = g0.clone();
+            let mut st = e.sssp_static(&gd, src);
+            e.take_stats(); // seeding solve not counted
+            let (_, t_dyn) = time_it(|| {
+                for b in stream.batches() {
+                    e.sssp_dynamic_batch(&mut gd, &mut st, &b);
+                }
+            });
+            cell.dynamic_secs = t_dyn;
+            cell.dynamic_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
+        }
+        BackendKind::Xla => {
+            let e = XlaEngine::new()?;
+            let (_, t_static) = time_it(|| e.sssp_static(&gs, src));
+            cell.static_secs = t_static;
+
+            let mut gd = g0.clone();
+            let mut st = e.sssp_static(&gd, src)?;
+            let (r, t_dyn) = time_it(|| -> Result<()> {
+                for b in stream.batches() {
+                    e.sssp_dynamic_batch(&mut gd, &mut st, &b)?;
+                }
+                Ok(())
+            });
+            r?;
+            cell.dynamic_secs = t_dyn;
+        }
+    }
+    Ok(cell)
+}
+
+fn pr_cell(
+    backend: BackendKind,
+    g0: &DynGraph,
+    percent: f64,
+    batch_size: usize,
+    seed: u64,
+) -> Result<Cell> {
+    let stream = UpdateStream::generate_percent(g0, percent, batch_size, 9, seed);
+    let n = g0.num_nodes();
+    let mut cell = Cell { static_secs: 0.0, dynamic_secs: 0.0, static_comm_secs: 0.0, dynamic_comm_secs: 0.0 };
+    let mut gs = g0.clone();
+    stream.apply_all_static(&mut gs);
+
+    match backend {
+        BackendKind::Serial => {
+            let (_, t) = time_it(|| {
+                let mut st = pr_params(n);
+                pagerank::static_pagerank(&gs, &mut st)
+            });
+            cell.static_secs = t;
+            let mut gd = g0.clone();
+            let mut st = pr_params(n);
+            pagerank::static_pagerank(&gd, &mut st);
+            let (_, t) = time_it(|| {
+                for b in stream.batches() {
+                    pagerank::dynamic_batch(&mut gd, &mut st, &b);
+                }
+            });
+            cell.dynamic_secs = t;
+        }
+        BackendKind::Cpu => {
+            let e = CpuEngine::default();
+            let (_, t) = time_it(|| {
+                let mut st = pr_params(n);
+                e.pr_static(&gs, &mut st)
+            });
+            cell.static_secs = t;
+            let mut gd = g0.clone();
+            let mut st = pr_params(n);
+            e.pr_static(&gd, &mut st);
+            let (_, t) = time_it(|| {
+                for b in stream.batches() {
+                    e.pr_dynamic_batch(&mut gd, &mut st, &b);
+                }
+            });
+            cell.dynamic_secs = t;
+        }
+        BackendKind::Dist => {
+            let e = DistEngine::new(8, crate::graph::Partition::Block);
+            let (_, t) = time_it(|| {
+                let mut st = pr_params(n);
+                e.pr_static(&gs, &mut st)
+            });
+            cell.static_secs = t;
+            cell.static_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
+            let mut gd = g0.clone();
+            let mut st = pr_params(n);
+            e.pr_static(&gd, &mut st);
+            e.take_stats();
+            let (_, t) = time_it(|| {
+                for b in stream.batches() {
+                    e.pr_dynamic_batch(&mut gd, &mut st, &b);
+                }
+            });
+            cell.dynamic_secs = t;
+            cell.dynamic_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
+        }
+        BackendKind::Xla => {
+            let e = XlaEngine::new()?;
+            let (r, t) = time_it(|| -> Result<usize> {
+                let mut st = pr_params(n);
+                e.pr_static(&gs, &mut st)
+            });
+            r?;
+            cell.static_secs = t;
+            let mut gd = g0.clone();
+            let mut st = pr_params(n);
+            e.pr_static(&gd, &mut st)?;
+            let (r, t) = time_it(|| -> Result<()> {
+                for b in stream.batches() {
+                    e.pr_dynamic_batch(&mut gd, &mut st, &b)?;
+                }
+                Ok(())
+            });
+            r?;
+            cell.dynamic_secs = t;
+        }
+    }
+    Ok(cell)
+}
+
+fn tc_cell(
+    backend: BackendKind,
+    g0: &DynGraph,
+    percent: f64,
+    batch_size: usize,
+    seed: u64,
+) -> Result<Cell> {
+    // TC protocol: symmetric graph + symmetric updates (§A Fig. 19).
+    let gsym = triangle::symmetrize(g0);
+    let (dels, adds) = triangle::symmetric_updates(&gsym, percent, batch_size, seed);
+    let mut cell = Cell { static_secs: 0.0, dynamic_secs: 0.0, static_comm_secs: 0.0, dynamic_comm_secs: 0.0 };
+
+    let mut gs = gsym.clone();
+    for (d, a) in dels.iter().zip(&adds) {
+        gs.apply_deletions(d);
+        gs.apply_additions(a);
+    }
+
+    match backend {
+        BackendKind::Serial => {
+            let (_, t) = time_it(|| triangle::static_tc(&gs));
+            cell.static_secs = t;
+            let mut gd = gsym.clone();
+            let mut st = triangle::static_tc(&gd);
+            let (_, t) = time_it(|| {
+                for (d, a) in dels.iter().zip(&adds) {
+                    triangle::dynamic_batch(&mut gd, &mut st, d, a);
+                }
+            });
+            cell.dynamic_secs = t;
+        }
+        BackendKind::Cpu => {
+            let e = CpuEngine::default();
+            let (_, t) = time_it(|| e.tc_static(&gs));
+            cell.static_secs = t;
+            let mut gd = gsym.clone();
+            let mut st = e.tc_static(&gd);
+            let (_, t) = time_it(|| {
+                for (d, a) in dels.iter().zip(&adds) {
+                    e.tc_dynamic_batch(&mut gd, &mut st, d, a);
+                }
+            });
+            cell.dynamic_secs = t;
+        }
+        BackendKind::Dist => {
+            let e = DistEngine::new(8, crate::graph::Partition::Block);
+            let (_, t) = time_it(|| e.tc_static(&gs));
+            cell.static_secs = t;
+            cell.static_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
+            let mut gd = gsym.clone();
+            let mut st = e.tc_static(&gd);
+            e.take_stats();
+            let (_, t) = time_it(|| {
+                for (d, a) in dels.iter().zip(&adds) {
+                    e.tc_dynamic_batch(&mut gd, &mut st, d, a);
+                }
+            });
+            cell.dynamic_secs = t;
+            cell.dynamic_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
+        }
+        BackendKind::Xla => {
+            let e = XlaEngine::new()?;
+            let (r, t) = time_it(|| e.tc_static(&gs));
+            r?;
+            cell.static_secs = t;
+            let mut gd = gsym.clone();
+            let mut st = TcState { triangles: e.tc_static(&gd)?.triangles };
+            let (_, t) = time_it(|| {
+                for (d, a) in dels.iter().zip(&adds) {
+                    e.tc_dynamic_batch(&mut gd, &mut st, d, a);
+                }
+            });
+            cell.dynamic_secs = t;
+        }
+    }
+    Ok(cell)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn cell_speedup_math() {
+        let c = Cell {
+            static_secs: 2.0,
+            dynamic_secs: 0.5,
+            static_comm_secs: 0.0,
+            dynamic_comm_secs: 0.5,
+        };
+        assert!((c.speedup() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serial_sssp_cell_runs_and_dynamic_wins_low_pct() {
+        let g = generators::uniform_random(400, 2400, 9, 7);
+        let c = run_cell(Algo::Sssp, BackendKind::Serial, &g, 1.0, 64, 11).unwrap();
+        assert!(c.static_secs > 0.0 && c.dynamic_secs > 0.0);
+    }
+
+    #[test]
+    fn cpu_tc_cell_runs() {
+        let g = generators::uniform_random(150, 700, 5, 8);
+        let c = run_cell(Algo::Tc, BackendKind::Cpu, &g, 5.0, 16, 12).unwrap();
+        assert!(c.static_secs > 0.0);
+    }
+
+    #[test]
+    fn dist_cell_reports_comm_time() {
+        let g = generators::uniform_random(200, 1000, 9, 9);
+        let c = run_cell(Algo::Sssp, BackendKind::Dist, &g, 2.0, 32, 13).unwrap();
+        assert!(c.static_comm_secs >= 0.0);
+        assert!(c.dynamic_total() >= c.dynamic_secs);
+    }
+
+    #[test]
+    fn algo_parses() {
+        assert_eq!("pagerank".parse::<Algo>().unwrap(), Algo::Pr);
+        assert!("bfs".parse::<Algo>().is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! AST — the compiler's intermediate representation (§3.4).
+
+/// A parsed DSL translation unit: a set of functions.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub functions: Vec<Function>,
+}
+
+impl Program {
+    pub fn find(&self, name: &str) -> Option<&Function> {
+        self.functions.iter().find(|f| f.name == name)
+    }
+}
+
+/// Function kinds (§3.3): `Static`, `Dynamic` (the driver with the Batch
+/// construct), and the special `Incremental`/`Decremental` handlers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FnKind {
+    Static,
+    Dynamic,
+    Incremental,
+    Decremental,
+}
+
+#[derive(Debug, Clone)]
+pub struct Function {
+    pub kind: FnKind,
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Vec<Stmt>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub ty: Type,
+    pub name: String,
+}
+
+/// DSL types (§2: primitives + Graph/node/edge first-class types +
+/// attachable property types).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Type {
+    Int,
+    Long,
+    Bool,
+    Float,
+    Double,
+    Graph,
+    Node,
+    Edge,
+    PropNode(Box<Type>),
+    PropEdge(Box<Type>),
+    /// `updates<g>`
+    Updates,
+}
+
+/// Statements.
+#[derive(Debug, Clone)]
+pub enum Stmt {
+    /// `int x = e;` / `propNode<bool> m;` / `node v = e;`
+    Decl { ty: Type, name: String, init: Option<Expr> },
+    /// `lhs = e;`, `lhs += e;`, `lhs -= e;`
+    Assign { lhs: LValue, op: AssignOp, rhs: Expr },
+    /// `<l1, l2, l3> = <Min(a, b), e2, e3>;` — atomic multi-assign (§2)
+    MinAssign { lhs: Vec<LValue>, min_args: (Expr, Expr), rest: Vec<Expr> },
+    If { cond: Expr, then_branch: Vec<Stmt>, else_branch: Vec<Stmt> },
+    While { cond: Expr, body: Vec<Stmt> },
+    DoWhile { body: Vec<Stmt>, cond: Expr },
+    /// `forall (v in <iter>) { … }` — parallel aggregate (§2)
+    Forall { var: String, iter: Iter, body: Vec<Stmt> },
+    /// `for (v in <iter>) { … }` — sequential
+    For { var: String, iter: Iter, body: Vec<Stmt> },
+    /// `fixedPoint until (flag: !prop) { … }` (§2)
+    FixedPoint { flag: String, prop: String, body: Vec<Stmt> },
+    /// `Batch(updates:size) { … }` (§3.3.1)
+    Batch { updates: String, size: Expr, body: Vec<Stmt> },
+    /// `OnAdd (u in updates.currentBatch()) { … }` (§3.3.2)
+    OnAdd { var: String, updates: String, body: Vec<Stmt> },
+    /// `OnDelete (u in updates.currentBatch()) { … }`
+    OnDelete { var: String, updates: String, body: Vec<Stmt> },
+    Return(Expr),
+    /// expression statement (method calls: `g.updateCSRDel(b);`,
+    /// function calls: `staticSSSP(g, …);`)
+    Expr(Expr),
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AssignOp {
+    Set,
+    Add,
+    Sub,
+}
+
+/// Assignable places.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LValue {
+    Var(String),
+    /// `v.dist` — property of a node/edge expression
+    Member { base: Expr, prop: String },
+}
+
+/// Iteration domains for for/forall.
+#[derive(Debug, Clone)]
+pub enum Iter {
+    /// `g.nodes()` (+ optional `.filter(cond)`)
+    Nodes { graph: String, filter: Option<Expr> },
+    /// `g.neighbors(v)` (+ optional `.filter(cond)`)
+    Neighbors { graph: String, of: Expr, filter: Option<Expr> },
+    /// `g.nodes_to(v)` — in-neighbors
+    NodesTo { graph: String, of: Expr },
+    /// a named updates batch (`forall (u in addBatch)`)
+    UpdateList(String),
+}
+
+/// Expressions.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    IntLit(i64),
+    FloatLit(f64),
+    BoolLit(bool),
+    /// `INF` / `INT_MAX` (the parser folds `INT_MAX/2` into Inf too)
+    Inf,
+    Var(String),
+    /// `v.dist`, `e.source`, `u.weight`
+    Member { base: Box<Expr>, prop: String },
+    /// `g.num_nodes()`, `g.get_edge(u, v)`, `b.currentBatch(0)` …
+    MethodCall { base: Box<Expr>, method: String, args: Vec<Expr> },
+    /// free function call: `staticSSSP(g, …)`
+    Call { name: String, args: Vec<Expr> },
+    Unary { op: UnOp, expr: Box<Expr> },
+    Binary { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr> },
+    /// keyword argument `name = value` inside
+    /// `g.attachNodeProperty(dist = INF, …)`
+    KwArg { name: String, value: Box<Expr> },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UnOp {
+    Not,
+    Neg,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+impl Expr {
+    /// Convenience: does this expression mention identifier `name`?
+    pub fn mentions(&self, name: &str) -> bool {
+        match self {
+            Expr::Var(v) => v == name,
+            Expr::Member { base, .. } => base.mentions(name),
+            Expr::MethodCall { base, args, .. } => {
+                base.mentions(name) || args.iter().any(|a| a.mentions(name))
+            }
+            Expr::Call { args, .. } => args.iter().any(|a| a.mentions(name)),
+            Expr::Unary { expr, .. } => expr.mentions(name),
+            Expr::Binary { lhs, rhs, .. } => lhs.mentions(name) || rhs.mentions(name),
+            _ => false,
+        }
+    }
+}

@@ -1,0 +1,949 @@
+//! Reference interpreter: *executes* StarPlat Dynamic programs over the
+//! diff-CSR substrate.
+//!
+//! This is the semantic ground truth for the code generators: the
+//! `dsl/*.sp` programs run here and their results are asserted equal to
+//! the hand-written reference algorithms (tests below) and to the
+//! parallel backends. It plays the role of StarPlat's "generated serial
+//! code" — same AST, no parallel scheduling.
+
+use super::ast::*;
+use crate::algorithms::sssp::INF;
+use crate::graph::updates::{Batch as GBatch, UpdateKind, UpdateStream};
+use crate::graph::{DynGraph, NodeId};
+use anyhow::{anyhow, bail, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Runtime values.
+#[derive(Debug, Clone)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    /// an edge handle `(src, dst)`
+    Edge(i64, i64),
+    /// one update record (bound by OnAdd/OnDelete/forall-over-updates)
+    Update { src: i64, dst: i64, weight: i64 },
+    /// a shared node-property array
+    NodeProp(Rc<RefCell<Vec<Value>>>),
+    /// an updates list (subset view of the stream)
+    Updates(Rc<Vec<(i64, i64, i64)>>),
+    Unit,
+}
+
+impl Value {
+    fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(v) => Ok(*v),
+            Value::Float(v) => Ok(*v as i64),
+            Value::Bool(b) => Ok(*b as i64),
+            other => bail!("expected int, got {other:?}"),
+        }
+    }
+
+    fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Int(v) => Ok(*v as f64),
+            Value::Float(v) => Ok(*v),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            Value::Int(v) => Ok(*v != 0),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    fn truthy_default(ty: &Type) -> Value {
+        match ty {
+            Type::Bool => Value::Bool(false),
+            Type::Float | Type::Double => Value::Float(0.0),
+            _ => Value::Int(0),
+        }
+    }
+}
+
+enum Flow {
+    Normal,
+    Return(Value),
+}
+
+/// The interpreter: owns the graph and the update stream context.
+pub struct Interp<'p> {
+    program: &'p Program,
+    pub graph: DynGraph,
+    stream: Option<UpdateStream>,
+    /// current batch bounds during `Batch` execution
+    cur_batch: Option<(usize, usize)>,
+    /// iteration guard for fixedPoint/while loops
+    max_sweeps: usize,
+}
+
+struct Env {
+    scopes: Vec<HashMap<String, Value>>,
+    /// current filter subject (bare property names resolve against it)
+    subject: Option<i64>,
+}
+
+impl Env {
+    fn new() -> Self {
+        Env { scopes: vec![HashMap::new()], subject: None }
+    }
+
+    fn push(&mut self) {
+        self.scopes.push(HashMap::new());
+    }
+
+    fn pop(&mut self) {
+        self.scopes.pop();
+    }
+
+    fn get(&self, name: &str) -> Option<&Value> {
+        self.scopes.iter().rev().find_map(|s| s.get(name))
+    }
+
+    fn set_new(&mut self, name: &str, v: Value) {
+        self.scopes.last_mut().unwrap().insert(name.to_string(), v);
+    }
+
+    fn assign(&mut self, name: &str, v: Value) -> Result<()> {
+        for s in self.scopes.iter_mut().rev() {
+            if let Some(slot) = s.get_mut(name) {
+                *slot = v;
+                return Ok(());
+            }
+        }
+        bail!("assignment to undeclared variable {name:?}")
+    }
+}
+
+impl<'p> Interp<'p> {
+    pub fn new(program: &'p Program, graph: DynGraph) -> Self {
+        let n = graph.num_nodes();
+        Interp {
+            program,
+            graph,
+            stream: None,
+            cur_batch: None,
+            max_sweeps: n * 8 + 256,
+        }
+    }
+
+    /// Run a `Dynamic` driver: binds the graph, the update stream, and
+    /// scalar arguments positionally (Graph/updates/prop params are
+    /// created automatically). Returns (return value, node props).
+    pub fn run_dynamic(
+        &mut self,
+        name: &str,
+        stream: UpdateStream,
+        scalars: &[(&str, Value)],
+    ) -> Result<(Value, HashMap<String, Vec<Value>>)> {
+        self.stream = Some(stream);
+        let f = self
+            .program
+            .find(name)
+            .ok_or_else(|| anyhow!("no function {name:?}"))?
+            .clone();
+        let n = self.graph.num_nodes();
+        let mut env = Env::new();
+        let mut props: Vec<(String, Rc<RefCell<Vec<Value>>>)> = Vec::new();
+        for p in &f.params {
+            match &p.ty {
+                Type::Graph | Type::Updates | Type::PropEdge(_) => {
+                    env.set_new(&p.name, Value::Unit) // resolved natively
+                }
+                Type::PropNode(inner) => {
+                    let arr = Rc::new(RefCell::new(vec![
+                        Value::truthy_default(inner);
+                        n
+                    ]));
+                    props.push((p.name.clone(), Rc::clone(&arr)));
+                    env.set_new(&p.name, Value::NodeProp(arr));
+                }
+                _ => {
+                    let v = scalars
+                        .iter()
+                        .find(|(k, _)| k == &p.name)
+                        .map(|(_, v)| v.clone())
+                        .ok_or_else(|| anyhow!("missing scalar argument {:?}", p.name))?;
+                    env.set_new(&p.name, v);
+                }
+            }
+        }
+        let flow = self.exec_block(&f.body, &mut env)?;
+        let ret = match flow {
+            Flow::Return(v) => v,
+            Flow::Normal => Value::Unit,
+        };
+        let out = props
+            .into_iter()
+            .map(|(k, v)| (k, v.borrow().clone()))
+            .collect();
+        Ok((ret, out))
+    }
+
+    // ------------------------------------------------------ statements
+
+    fn exec_block(&mut self, body: &[Stmt], env: &mut Env) -> Result<Flow> {
+        for s in body {
+            if let Flow::Return(v) = self.exec(s, env)? {
+                return Ok(Flow::Return(v));
+            }
+        }
+        Ok(Flow::Normal)
+    }
+
+    fn exec(&mut self, s: &Stmt, env: &mut Env) -> Result<Flow> {
+        match s {
+            Stmt::Decl { ty, name, init } => {
+                let v = match (ty, init) {
+                    (Type::PropNode(inner), _) => {
+                        let n = self.graph.num_nodes();
+                        Value::NodeProp(Rc::new(RefCell::new(vec![
+                            Value::truthy_default(inner);
+                            n
+                        ])))
+                    }
+                    (_, Some(e)) => self.eval(e, env)?,
+                    (t, None) => Value::truthy_default(t),
+                };
+                env.set_new(name, v);
+            }
+            Stmt::Assign { lhs, op, rhs } => {
+                let rv = self.eval(rhs, env)?;
+                self.assign(lhs, *op, rv, env)?;
+            }
+            Stmt::MinAssign { lhs, min_args, rest } => {
+                let cur = self.eval(&min_args.0, env)?;
+                let cand = self.eval(&min_args.1, env)?;
+                let fire = match (&cur, &cand) {
+                    (Value::Float(a), _) | (_, Value::Float(a)) => {
+                        let _ = a;
+                        cand.as_f64()? < cur.as_f64()?
+                    }
+                    _ => cand.as_int()? < cur.as_int()?,
+                };
+                if fire {
+                    self.assign(&lhs[0], AssignOp::Set, cand, env)?;
+                    for (lv, e) in lhs[1..].iter().zip(rest) {
+                        let v = self.eval(e, env)?;
+                        self.assign(lv, AssignOp::Set, v, env)?;
+                    }
+                }
+            }
+            Stmt::If { cond, then_branch, else_branch } => {
+                if self.eval(cond, env)?.as_bool()? {
+                    env.push();
+                    let f = self.exec_block(then_branch, env)?;
+                    env.pop();
+                    if let Flow::Return(v) = f {
+                        return Ok(Flow::Return(v));
+                    }
+                } else {
+                    env.push();
+                    let f = self.exec_block(else_branch, env)?;
+                    env.pop();
+                    if let Flow::Return(v) = f {
+                        return Ok(Flow::Return(v));
+                    }
+                }
+            }
+            Stmt::While { cond, body } => {
+                let mut sweeps = 0;
+                while self.eval(cond, env)?.as_bool()? {
+                    env.push();
+                    let f = self.exec_block(body, env)?;
+                    env.pop();
+                    if let Flow::Return(v) = f {
+                        return Ok(Flow::Return(v));
+                    }
+                    sweeps += 1;
+                    if sweeps > self.max_sweeps {
+                        bail!("while loop exceeded {} sweeps (diverging?)", self.max_sweeps);
+                    }
+                }
+            }
+            Stmt::DoWhile { body, cond } => {
+                let mut sweeps = 0;
+                loop {
+                    env.push();
+                    let f = self.exec_block(body, env)?;
+                    env.pop();
+                    if let Flow::Return(v) = f {
+                        return Ok(Flow::Return(v));
+                    }
+                    if !self.eval(cond, env)?.as_bool()? {
+                        break;
+                    }
+                    sweeps += 1;
+                    if sweeps > self.max_sweeps {
+                        bail!("do-while exceeded {} sweeps", self.max_sweeps);
+                    }
+                }
+            }
+            Stmt::Forall { var, iter, body } | Stmt::For { var, iter, body } => {
+                let items = self.iter_items(iter, env)?;
+                for item in items {
+                    env.push();
+                    env.set_new(var, item);
+                    let f = self.exec_block(body, env)?;
+                    env.pop();
+                    if let Flow::Return(v) = f {
+                        return Ok(Flow::Return(v));
+                    }
+                }
+            }
+            Stmt::FixedPoint { flag: _, prop, body } => {
+                let mut sweeps = 0;
+                loop {
+                    env.push();
+                    let f = self.exec_block(body, env)?;
+                    env.pop();
+                    if let Flow::Return(v) = f {
+                        return Ok(Flow::Return(v));
+                    }
+                    // converged when no vertex has `prop` set
+                    let any = match env.get(prop) {
+                        Some(Value::NodeProp(arr)) => {
+                            arr.borrow().iter().any(|v| matches!(v, Value::Bool(true)))
+                        }
+                        _ => bail!("fixedPoint condition property {prop:?} not found"),
+                    };
+                    if !any {
+                        break;
+                    }
+                    sweeps += 1;
+                    if sweeps > self.max_sweeps {
+                        bail!("fixedPoint exceeded {} sweeps", self.max_sweeps);
+                    }
+                }
+            }
+            Stmt::Batch { updates: _, size, body } => {
+                let size = self.eval(size, env)?.as_int()?.max(1) as usize;
+                let total = self.stream.as_ref().map(|s| s.len()).unwrap_or(0);
+                let mut start = 0;
+                while start < total {
+                    let end = (start + size).min(total);
+                    self.cur_batch = Some((start, end));
+                    env.push();
+                    let f = self.exec_block(body, env)?;
+                    env.pop();
+                    self.cur_batch = None;
+                    if let Flow::Return(v) = f {
+                        return Ok(Flow::Return(v));
+                    }
+                    start = end;
+                }
+            }
+            Stmt::OnAdd { var, updates: _, body } => {
+                for u in self.batch_updates(UpdateKind::Add)? {
+                    env.push();
+                    env.set_new(var, u);
+                    let f = self.exec_block(body, env)?;
+                    env.pop();
+                    if let Flow::Return(v) = f {
+                        return Ok(Flow::Return(v));
+                    }
+                }
+            }
+            Stmt::OnDelete { var, updates: _, body } => {
+                for u in self.batch_updates(UpdateKind::Delete)? {
+                    env.push();
+                    env.set_new(var, u);
+                    let f = self.exec_block(body, env)?;
+                    env.pop();
+                    if let Flow::Return(v) = f {
+                        return Ok(Flow::Return(v));
+                    }
+                }
+            }
+            Stmt::Return(e) => {
+                let v = self.eval(e, env)?;
+                return Ok(Flow::Return(v));
+            }
+            Stmt::Expr(e) => {
+                self.eval(e, env)?;
+            }
+        }
+        Ok(Flow::Normal)
+    }
+
+    fn batch_updates(&self, kind: UpdateKind) -> Result<Vec<Value>> {
+        let (lo, hi) = self.cur_batch.ok_or_else(|| anyhow!("OnAdd/OnDelete outside Batch"))?;
+        let stream = self.stream.as_ref().unwrap();
+        Ok(stream.updates[lo..hi]
+            .iter()
+            .filter(|u| u.kind == kind)
+            .map(|u| Value::Update {
+                src: u.src as i64,
+                dst: u.dst as i64,
+                weight: u.weight as i64,
+            })
+            .collect())
+    }
+
+    fn current_gbatch(&self) -> Result<GBatch<'_>> {
+        let (lo, hi) = self.cur_batch.ok_or_else(|| anyhow!("no current batch"))?;
+        Ok(GBatch { updates: &self.stream.as_ref().unwrap().updates[lo..hi] })
+    }
+
+    // ------------------------------------------------------ iteration
+
+    fn iter_items(&mut self, iter: &Iter, env: &mut Env) -> Result<Vec<Value>> {
+        match iter {
+            Iter::Nodes { filter, .. } => {
+                let n = self.graph.num_nodes();
+                let mut out = Vec::new();
+                for v in 0..n as i64 {
+                    if let Some(f) = filter {
+                        if !self.eval_filter(f, v, env)? {
+                            continue;
+                        }
+                    }
+                    out.push(Value::Int(v));
+                }
+                Ok(out)
+            }
+            Iter::Neighbors { of, filter, .. } => {
+                let v = self.eval(of, env)?.as_int()?;
+                let nbrs: Vec<i64> = self
+                    .graph
+                    .out_neighbors(v as NodeId)
+                    .map(|(nbr, _)| nbr as i64)
+                    .collect();
+                let mut out = Vec::new();
+                for nbr in nbrs {
+                    if let Some(f) = filter {
+                        if !self.eval_filter(f, nbr, env)? {
+                            continue;
+                        }
+                    }
+                    out.push(Value::Int(nbr));
+                }
+                Ok(out)
+            }
+            Iter::NodesTo { of, .. } => {
+                let v = self.eval(of, env)?.as_int()?;
+                Ok(self
+                    .graph
+                    .in_neighbors(v as NodeId)
+                    .map(|(nbr, _)| Value::Int(nbr as i64))
+                    .collect())
+            }
+            Iter::UpdateList(name) => match env.get(name) {
+                Some(Value::Updates(list)) => Ok(list
+                    .iter()
+                    .map(|&(s, d, w)| Value::Update { src: s, dst: d, weight: w })
+                    .collect()),
+                other => bail!("{name:?} is not an updates list (got {other:?})"),
+            },
+        }
+    }
+
+    /// Evaluate a filter with `subject` as the candidate: bare property
+    /// names resolve against the subject (`filter(modified == True)`),
+    /// and the loop variable itself is bound via `subject` too
+    /// (`filter(u < v)` binds `u`).
+    fn eval_filter(&mut self, f: &Expr, subject: i64, env: &mut Env) -> Result<bool> {
+        let saved = env.subject;
+        env.subject = Some(subject);
+        let r = self.eval(f, env).and_then(|v| v.as_bool());
+        env.subject = saved;
+        r
+    }
+
+    // ------------------------------------------------------ assignment
+
+    fn assign(&mut self, lhs: &LValue, op: AssignOp, rv: Value, env: &mut Env) -> Result<()> {
+        match lhs {
+            LValue::Var(name) => {
+                // whole-property copy: `modified = modified_nxt`
+                if let (Some(Value::NodeProp(dst)), Value::NodeProp(src)) =
+                    (env.get(name), &rv)
+                {
+                    let src = src.borrow().clone();
+                    *dst.borrow_mut() = src;
+                    return Ok(());
+                }
+                let new = match op {
+                    AssignOp::Set => rv,
+                    AssignOp::Add | AssignOp::Sub => {
+                        let cur = env
+                            .get(name)
+                            .ok_or_else(|| anyhow!("undeclared {name:?}"))?
+                            .clone();
+                        numeric_binop(
+                            if op == AssignOp::Add { BinOp::Add } else { BinOp::Sub },
+                            &cur,
+                            &rv,
+                        )?
+                    }
+                };
+                env.assign(name, new)
+            }
+            LValue::Member { base, prop } => {
+                let id = self.eval(base, env)?.as_int()?;
+                if id < 0 {
+                    bail!("property write through negative node id");
+                }
+                let arr = match env.get(prop) {
+                    Some(Value::NodeProp(a)) => Rc::clone(a),
+                    other => bail!("unknown node property {prop:?} (got {other:?})"),
+                };
+                let mut arr = arr.borrow_mut();
+                let slot = arr
+                    .get_mut(id as usize)
+                    .ok_or_else(|| anyhow!("node id {id} out of range"))?;
+                let new = match op {
+                    AssignOp::Set => rv,
+                    AssignOp::Add => numeric_binop(BinOp::Add, slot, &rv)?,
+                    AssignOp::Sub => numeric_binop(BinOp::Sub, slot, &rv)?,
+                };
+                *slot = new;
+                Ok(())
+            }
+        }
+    }
+
+    // ------------------------------------------------------ expressions
+
+    fn eval(&mut self, e: &Expr, env: &mut Env) -> Result<Value> {
+        match e {
+            Expr::IntLit(v) => Ok(Value::Int(*v)),
+            Expr::FloatLit(v) => Ok(Value::Float(*v)),
+            Expr::BoolLit(b) => Ok(Value::Bool(*b)),
+            Expr::Inf => Ok(Value::Int(INF)),
+            Expr::Var(name) => {
+                if let Some(v) = env.get(name) {
+                    // bare property name inside a filter → subject.prop
+                    if let (Value::NodeProp(arr), Some(subj)) = (v, env.subject) {
+                        return Ok(arr
+                            .borrow()
+                            .get(subj as usize)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("filter subject {subj} out of range"))?);
+                    }
+                    return Ok(v.clone());
+                }
+                // the loop candidate itself inside a filter (`filter(u < v)`
+                // evaluates before `u` is bound — `u` is the subject)
+                if let Some(subj) = env.subject {
+                    return Ok(Value::Int(subj));
+                }
+                bail!("unknown identifier {name:?}")
+            }
+            Expr::Member { base, prop } => self.eval_member(base, prop, env),
+            Expr::MethodCall { base, method, args } => {
+                self.eval_method(base, method, args, env)
+            }
+            Expr::Call { name, args } => self.eval_call(name, args, env),
+            Expr::Unary { op, expr } => {
+                let v = self.eval(expr, env)?;
+                Ok(match op {
+                    UnOp::Not => Value::Bool(!v.as_bool()?),
+                    UnOp::Neg => match v {
+                        Value::Float(f) => Value::Float(-f),
+                        other => Value::Int(-other.as_int()?),
+                    },
+                })
+            }
+            Expr::Binary { op, lhs, rhs } => {
+                // short-circuit logicals
+                match op {
+                    BinOp::And => {
+                        return Ok(Value::Bool(
+                            self.eval(lhs, env)?.as_bool()?
+                                && self.eval(rhs, env)?.as_bool()?,
+                        ))
+                    }
+                    BinOp::Or => {
+                        return Ok(Value::Bool(
+                            self.eval(lhs, env)?.as_bool()?
+                                || self.eval(rhs, env)?.as_bool()?,
+                        ))
+                    }
+                    _ => {}
+                }
+                let a = self.eval(lhs, env)?;
+                let b = self.eval(rhs, env)?;
+                numeric_binop(*op, &a, &b)
+            }
+            Expr::KwArg { .. } => bail!("keyword argument outside attachNodeProperty"),
+        }
+    }
+
+    fn eval_member(&mut self, base: &Expr, prop: &str, env: &mut Env) -> Result<Value> {
+        let bv = self.eval(base, env)?;
+        match (&bv, prop) {
+            (Value::Update { src, .. }, "source") => Ok(Value::Int(*src)),
+            (Value::Update { dst, .. }, "destination") => Ok(Value::Int(*dst)),
+            (Value::Update { weight, .. }, "weight") => Ok(Value::Int(*weight)),
+            (Value::Edge(u, v), "weight") => {
+                let w = self
+                    .graph
+                    .edge_weight(*u as NodeId, *v as NodeId)
+                    .ok_or_else(|| anyhow!("edge {u}->{v} not in graph"))?;
+                Ok(Value::Int(w as i64))
+            }
+            (_, prop) => {
+                let id = bv.as_int()?;
+                if id < 0 {
+                    bail!("property read through negative node id {id}");
+                }
+                match env.get(prop) {
+                    Some(Value::NodeProp(arr)) => Ok(arr
+                        .borrow()
+                        .get(id as usize)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("node {id} out of range"))?),
+                    other => bail!("unknown property {prop:?} (got {other:?})"),
+                }
+            }
+        }
+    }
+
+    fn eval_method(
+        &mut self,
+        base: &Expr,
+        method: &str,
+        args: &[Expr],
+        env: &mut Env,
+    ) -> Result<Value> {
+        // updates-list methods
+        if let Expr::Var(name) = base {
+            if let Some(Value::Updates(list)) = env.get(name) {
+                let list = Rc::clone(list);
+                match method {
+                    "contains" => {
+                        let u = self.eval(&args[0], env)?.as_int()?;
+                        let v = self.eval(&args[1], env)?.as_int()?;
+                        return Ok(Value::Bool(
+                            list.iter().any(|&(s, d, _)| {
+                                (s == u && d == v) || (s == v && d == u)
+                            }),
+                        ));
+                    }
+                    other => bail!("unknown updates method {other:?}"),
+                }
+            }
+        }
+        // stream-level: updateBatch.currentBatch(k)
+        if method == "currentBatch" {
+            let k = if args.is_empty() {
+                -1
+            } else {
+                self.eval(&args[0], env)?.as_int()?
+            };
+            let b = self.current_gbatch()?;
+            let list: Vec<(i64, i64, i64)> = b
+                .updates
+                .iter()
+                .filter(|u| match k {
+                    0 => u.kind == UpdateKind::Delete,
+                    1 => u.kind == UpdateKind::Add,
+                    _ => true,
+                })
+                .map(|u| (u.src as i64, u.dst as i64, u.weight as i64))
+                .collect();
+            return Ok(Value::Updates(Rc::new(list)));
+        }
+        // graph methods (base must be the Graph param)
+        match method {
+            "num_nodes" => Ok(Value::Int(self.graph.num_nodes() as i64)),
+            "num_edges" => Ok(Value::Int(self.graph.num_edges() as i64)),
+            "count_outNbrs" => {
+                let v = self.eval(&args[0], env)?.as_int()?;
+                Ok(Value::Int(self.graph.out_degree(v as NodeId) as i64))
+            }
+            "is_an_edge" => {
+                let u = self.eval(&args[0], env)?.as_int()?;
+                let v = self.eval(&args[1], env)?.as_int()?;
+                Ok(Value::Bool(self.graph.has_edge(u as NodeId, v as NodeId)))
+            }
+            "get_edge" => {
+                let u = self.eval(&args[0], env)?.as_int()?;
+                let v = self.eval(&args[1], env)?.as_int()?;
+                Ok(Value::Edge(u, v))
+            }
+            "attachNodeProperty" => {
+                for a in args {
+                    let Expr::KwArg { name, value } = a else {
+                        bail!("attachNodeProperty takes prop = value arguments");
+                    };
+                    let fill = self.eval(value, env)?;
+                    let arr = match env.get(name) {
+                        Some(Value::NodeProp(arr)) => Rc::clone(arr),
+                        other => bail!("attach of unknown property {name:?} ({other:?})"),
+                    };
+                    let n = self.graph.num_nodes();
+                    *arr.borrow_mut() = vec![fill; n];
+                }
+                Ok(Value::Unit)
+            }
+            "attachEdgeProperty" => Ok(Value::Unit), // edge flags handled via contains()
+            "updateCSRDel" => {
+                let b = self.current_gbatch()?;
+                let dels = b.deletions();
+                self.graph.apply_deletions(&dels);
+                Ok(Value::Unit)
+            }
+            "updateCSRAdd" => {
+                let b = self.current_gbatch()?;
+                let adds = b.additions();
+                self.graph.apply_additions(&adds);
+                Ok(Value::Unit)
+            }
+            "propagateNodeFlags" => {
+                let Expr::Var(pname) = &args[0] else {
+                    bail!("propagateNodeFlags takes a property name");
+                };
+                let arr = match env.get(pname) {
+                    Some(Value::NodeProp(arr)) => Rc::clone(arr),
+                    other => bail!("unknown property {pname:?} ({other:?})"),
+                };
+                let mut flags: Vec<bool> = arr
+                    .borrow()
+                    .iter()
+                    .map(|v| matches!(v, Value::Bool(true)))
+                    .collect();
+                crate::algorithms::pagerank::propagate_node_flags(&self.graph, &mut flags);
+                *arr.borrow_mut() = flags.into_iter().map(Value::Bool).collect();
+                Ok(Value::Unit)
+            }
+            other => bail!("unknown graph method {other:?}"),
+        }
+    }
+
+    fn eval_call(&mut self, name: &str, args: &[Expr], env: &mut Env) -> Result<Value> {
+        let f = self
+            .program
+            .find(name)
+            .ok_or_else(|| anyhow!("call to unknown function {name:?}"))?
+            .clone();
+        if f.params.len() != args.len() {
+            bail!("{name}: expected {} args, got {}", f.params.len(), args.len());
+        }
+        let mut callee_env = Env::new();
+        for (p, a) in f.params.iter().zip(args) {
+            let v = match p.ty {
+                // Graph and propEdge resolve natively inside the callee
+                Type::Graph | Type::PropEdge(_) => Value::Unit,
+                _ => self.eval(a, env)?,
+            };
+            callee_env.set_new(&p.name, v);
+        }
+        match self.exec_block(&f.body, &mut callee_env)? {
+            Flow::Return(v) => Ok(v),
+            Flow::Normal => Ok(Value::Unit),
+        }
+    }
+}
+
+fn numeric_binop(op: BinOp, a: &Value, b: &Value) -> Result<Value> {
+    use BinOp::*;
+    let float = matches!(a, Value::Float(_)) || matches!(b, Value::Float(_));
+    if float {
+        let (x, y) = (a.as_f64()?, b.as_f64()?);
+        Ok(match op {
+            Add => Value::Float(x + y),
+            Sub => Value::Float(x - y),
+            Mul => Value::Float(x * y),
+            Div => Value::Float(x / y),
+            Mod => Value::Float(x % y),
+            Lt => Value::Bool(x < y),
+            Gt => Value::Bool(x > y),
+            Le => Value::Bool(x <= y),
+            Ge => Value::Bool(x >= y),
+            Eq => Value::Bool(x == y),
+            Ne => Value::Bool(x != y),
+            And | Or => bail!("logical op on floats"),
+        })
+    } else {
+        let (x, y) = (a.as_int()?, b.as_int()?);
+        Ok(match op {
+            Add => Value::Int(x + y),
+            Sub => Value::Int(x - y),
+            Mul => Value::Int(x * y),
+            Div => {
+                if y == 0 {
+                    bail!("division by zero");
+                }
+                Value::Int(x / y)
+            }
+            Mod => Value::Int(x % y),
+            Lt => Value::Bool(x < y),
+            Gt => Value::Bool(x > y),
+            Le => Value::Bool(x <= y),
+            Ge => Value::Bool(x >= y),
+            Eq => Value::Bool(x == y),
+            Ne => Value::Bool(x != y),
+            And => Value::Bool(x != 0 && y != 0),
+            Or => Value::Bool(x != 0 || y != 0),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{pagerank, sssp, triangle};
+    use crate::graph::generators;
+    use crate::graph::updates::Update;
+
+    fn load(name: &str) -> Program {
+        crate::dsl::parse_program(&std::fs::read_to_string(name).unwrap()).unwrap()
+    }
+
+    fn prop_ints(props: &HashMap<String, Vec<Value>>, name: &str) -> Vec<i64> {
+        props[name].iter().map(|v| v.as_int().unwrap()).collect()
+    }
+
+    #[test]
+    fn dsl_dynamic_sssp_matches_hand_written_oracle() {
+        let program = load("dsl/sssp_dynamic.sp");
+        let g0 = generators::uniform_random(60, 260, 9, 91);
+        let stream = UpdateStream::generate_percent(&g0, 12.0, 8, 9, 92);
+
+        let mut interp = Interp::new(&program, g0.clone());
+        let (_, props) = interp
+            .run_dynamic(
+                "DynSSSP",
+                stream.clone(),
+                &[("batchSize", Value::Int(8)), ("src", Value::Int(0))],
+            )
+            .unwrap();
+        let dist = prop_ints(&props, "dist");
+
+        // ground truth: dijkstra on fully-updated graph
+        let mut g2 = g0.clone();
+        stream.apply_all_static(&mut g2);
+        let want = sssp::dijkstra_oracle(&g2, 0);
+        assert_eq!(dist, want, "DSL-interpreted DynSSSP != oracle");
+        // and the interpreter's graph must equal the statically-updated one
+        assert_eq!(interp.graph.edges_sorted(), g2.edges_sorted());
+    }
+
+    #[test]
+    fn dsl_static_sssp_alone_matches() {
+        let program = load("dsl/sssp_dynamic.sp");
+        let g0 = generators::road_grid(7, 7, 9, 93);
+        let stream = UpdateStream::new(vec![], 8); // no updates
+        let mut interp = Interp::new(&program, g0.clone());
+        let (_, props) = interp
+            .run_dynamic(
+                "DynSSSP",
+                stream,
+                &[("batchSize", Value::Int(8)), ("src", Value::Int(3))],
+            )
+            .unwrap();
+        assert_eq!(prop_ints(&props, "dist"), sssp::dijkstra_oracle(&g0, 3));
+    }
+
+    #[test]
+    fn dsl_dynamic_pagerank_tracks_reference_pipeline() {
+        let program = load("dsl/pagerank_dynamic.sp");
+        let g0 = generators::rmat(6, 220, 0.5, 0.2, 0.2, 94);
+        let n = g0.num_nodes();
+        let stream = UpdateStream::generate_percent(&g0, 6.0, 16, 9, 95);
+
+        let mut interp = Interp::new(&program, g0.clone());
+        let (_, props) = interp
+            .run_dynamic(
+                "DynPR",
+                stream.clone(),
+                &[
+                    ("beta", Value::Float(1e-9)),
+                    ("delta", Value::Float(0.85)),
+                    ("maxIter", Value::Int(100)),
+                    ("batchSize", Value::Int(16)),
+                ],
+            )
+            .unwrap();
+        let got: Vec<f64> = props["pageRank"].iter().map(|v| v.as_f64().unwrap()).collect();
+
+        // reference: same pipeline, hand-written
+        let mut g = g0.clone();
+        let mut st = pagerank::PrState::new(n, 1e-9, 0.85, 100);
+        pagerank::static_pagerank(&g, &mut st);
+        for b in stream.batches() {
+            pagerank::dynamic_batch(&mut g, &mut st, &b);
+        }
+        let l1: f64 = got.iter().zip(&st.rank).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 < 1e-6, "DSL PR drifted from reference pipeline: l1={l1}");
+    }
+
+    #[test]
+    fn dsl_dynamic_tc_matches_recount() {
+        let program = load("dsl/tc_dynamic.sp");
+        let g0 = triangle::symmetrize(&generators::uniform_random(30, 160, 5, 96));
+        // symmetric updates: both arcs adjacent in the stream
+        let (dels, adds) = triangle::symmetric_updates(&g0, 14.0, 4, 97);
+        let mut upd = Vec::new();
+        for (db, ab) in dels.iter().zip(&adds) {
+            for &(u, v) in db {
+                upd.push(Update { kind: UpdateKind::Delete, src: u, dst: v, weight: 1 });
+            }
+            for &(u, v, w) in ab {
+                upd.push(Update { kind: UpdateKind::Add, src: u, dst: v, weight: w });
+            }
+        }
+        let total = upd.len().max(1);
+        let stream = UpdateStream::new(upd, total); // one batch per everything
+        let mut interp = Interp::new(&program, g0.clone());
+        let (ret, _) = interp
+            .run_dynamic("DynTC", stream, &[("batchSize", Value::Int(total as i64))])
+            .unwrap();
+        let got = ret.as_int().unwrap();
+        let want = triangle::static_tc(&interp.graph).triangles;
+        assert_eq!(got, want, "DSL delta TC != recount on updated graph");
+    }
+
+    #[test]
+    fn dsl_static_tc_counts_correctly() {
+        let program = load("dsl/tc_dynamic.sp");
+        let g = triangle::symmetrize(&generators::uniform_random(25, 120, 5, 98));
+        let stream = UpdateStream::new(vec![], 4);
+        let mut interp = Interp::new(&program, g.clone());
+        let (ret, _) =
+            interp.run_dynamic("DynTC", stream, &[("batchSize", Value::Int(4))]).unwrap();
+        assert_eq!(ret.as_int().unwrap(), triangle::static_tc(&g).triangles);
+    }
+
+    #[test]
+    fn dsl_dynamic_bfs_matches_hand_written() {
+        let program = load("dsl/bfs_dynamic.sp");
+        let g0 = generators::uniform_random(50, 180, 3, 99);
+        let stream = UpdateStream::generate_percent(&g0, 10.0, 8, 3, 100);
+        let mut interp = Interp::new(&program, g0.clone());
+        let (_, props) = interp
+            .run_dynamic(
+                "DynBFS",
+                stream.clone(),
+                &[("batchSize", Value::Int(8)), ("src", Value::Int(0))],
+            )
+            .unwrap();
+        let levels = prop_ints(&props, "level");
+        let mut g2 = g0.clone();
+        stream.apply_all_static(&mut g2);
+        let want = crate::algorithms::bfs::static_bfs(&g2, 0);
+        // DSL INF vs algorithms UNREACHED are the same constant (i64::MAX/4)
+        assert_eq!(levels, want.level, "DSL DynBFS != hand-written BFS");
+    }
+
+    #[test]
+    fn interp_rejects_unknown_property() {
+        let src = "Dynamic f(Graph g, updates<g> u, int batchSize) { forall (v in g.nodes()) { v.ghost = 1; } }";
+        let program = crate::dsl::parse_program(src).unwrap();
+        let g = generators::uniform_random(5, 8, 3, 1);
+        let mut interp = Interp::new(&program, g);
+        let err = interp
+            .run_dynamic("f", UpdateStream::new(vec![], 1), &[("batchSize", Value::Int(1))])
+            .unwrap_err();
+        assert!(err.to_string().contains("ghost"));
+    }
+}

@@ -1,0 +1,187 @@
+//! Tokenizer for the StarPlat Dynamic DSL.
+
+use anyhow::{bail, Result};
+
+/// A lexical token with its source line (for diagnostics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: Tok,
+    pub line: usize,
+}
+
+/// Token kinds. Keywords are recognized in the parser from `Ident` where
+/// that keeps the grammar simpler; structural keywords get their own
+/// variants.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Int(i64),
+    Float(f64),
+    // punctuation
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    EqEq,
+    Ne,
+    Assign,
+    PlusEq,
+    MinusEq,
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    Not,
+    AndAnd,
+    OrOr,
+    Comma,
+    Semi,
+    Colon,
+    Dot,
+    Eof,
+}
+
+/// Tokenize DSL source. `//` line comments and `/* */` block comments
+/// are skipped.
+pub fn lex(src: &str) -> Result<Vec<Token>> {
+    let b: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    let mut line = 1;
+    let n = b.len();
+    while i < n {
+        let c = b[i];
+        match c {
+            '\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_whitespace() => i += 1,
+            '/' if i + 1 < n && b[i + 1] == '/' => {
+                while i < n && b[i] != '\n' {
+                    i += 1;
+                }
+            }
+            '/' if i + 1 < n && b[i + 1] == '*' => {
+                i += 2;
+                while i + 1 < n && !(b[i] == '*' && b[i + 1] == '/') {
+                    if b[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                i = (i + 2).min(n);
+            }
+            c if c.is_ascii_alphabetic() || c == '_' => {
+                let start = i;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                let word: String = b[start..i].iter().collect();
+                out.push(Token { kind: Tok::Ident(word), line });
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                while i < n && (b[i].is_ascii_digit() || b[i] == '.') {
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                let kind = if text.contains('.') {
+                    Tok::Float(text.parse()?)
+                } else {
+                    Tok::Int(text.parse()?)
+                };
+                out.push(Token { kind, line });
+            }
+            _ => {
+                let two: String = b[i..(i + 2).min(n)].iter().collect();
+                let (kind, adv) = match two.as_str() {
+                    "==" => (Tok::EqEq, 2),
+                    "!=" => (Tok::Ne, 2),
+                    "<=" => (Tok::Le, 2),
+                    ">=" => (Tok::Ge, 2),
+                    "+=" => (Tok::PlusEq, 2),
+                    "-=" => (Tok::MinusEq, 2),
+                    "&&" => (Tok::AndAnd, 2),
+                    "||" => (Tok::OrOr, 2),
+                    _ => match c {
+                        '(' => (Tok::LParen, 1),
+                        ')' => (Tok::RParen, 1),
+                        '{' => (Tok::LBrace, 1),
+                        '}' => (Tok::RBrace, 1),
+                        '<' => (Tok::Lt, 1),
+                        '>' => (Tok::Gt, 1),
+                        '=' => (Tok::Assign, 1),
+                        '+' => (Tok::Plus, 1),
+                        '-' => (Tok::Minus, 1),
+                        '*' => (Tok::Star, 1),
+                        '/' => (Tok::Slash, 1),
+                        '%' => (Tok::Percent, 1),
+                        '!' => (Tok::Not, 1),
+                        ',' => (Tok::Comma, 1),
+                        ';' => (Tok::Semi, 1),
+                        ':' => (Tok::Colon, 1),
+                        '.' => (Tok::Dot, 1),
+                        other => bail!("line {line}: unexpected character {other:?}"),
+                    },
+                };
+                out.push(Token { kind, line });
+                i += adv;
+            }
+        }
+    }
+    out.push(Token { kind: Tok::Eof, line });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_declaration() {
+        let toks = lex("propNode<int> dist; // comment\n").unwrap();
+        let kinds: Vec<_> = toks.into_iter().map(|t| t.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                Tok::Ident("propNode".into()),
+                Tok::Lt,
+                Tok::Ident("int".into()),
+                Tok::Gt,
+                Tok::Ident("dist".into()),
+                Tok::Semi,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_operators_and_numbers() {
+        let toks = lex("a += 1.5 <= 2 != x && !y").unwrap();
+        let kinds: Vec<_> = toks.into_iter().map(|t| t.kind).collect();
+        assert!(kinds.contains(&Tok::PlusEq));
+        assert!(kinds.contains(&Tok::Float(1.5)));
+        assert!(kinds.contains(&Tok::Le));
+        assert!(kinds.contains(&Tok::Ne));
+        assert!(kinds.contains(&Tok::AndAnd));
+        assert!(kinds.contains(&Tok::Not));
+    }
+
+    #[test]
+    fn block_comments_and_lines() {
+        let toks = lex("a /* multi\nline */ b").unwrap();
+        assert_eq!(toks[0].line, 1);
+        assert_eq!(toks[1].line, 2, "line counting through block comment");
+    }
+
+    #[test]
+    fn rejects_stray_chars() {
+        assert!(lex("a # b").is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! The StarPlat Dynamic DSL front-end (§3): lexer, recursive-descent
+//! parser, AST (the compiler's IR, §3.4), semantic analysis (symbol
+//! table, read/write sets, data-race detection → synchronization
+//! insertion), a reference interpreter that *executes* DSL programs over
+//! the diff-CSR substrate, and the per-backend C++ code emitters (§4).
+//!
+//! The shipped programs in `dsl/*.sp` are the paper's Appendix A
+//! listings (Figs. 19–21).
+
+pub mod ast;
+pub mod emit;
+pub mod interp;
+pub mod lexer;
+pub mod parser;
+pub mod sema;
+
+pub use ast::Program;
+pub use parser::parse_program;
+pub use sema::analyze;

@@ -1,0 +1,679 @@
+//! Recursive-descent parser: tokens → AST.
+//!
+//! Grammar is the StarPlat Dynamic surface syntax used by the Appendix A
+//! programs shipped in `dsl/*.sp` (Figs. 19–21), including the dynamic
+//! constructs `Batch`, `OnAdd`, `OnDelete`, `fixedPoint until`, and the
+//! atomic `Min` multi-assignment.
+
+use super::ast::*;
+use super::lexer::{lex, Tok, Token};
+use anyhow::{anyhow, bail, Result};
+
+pub fn parse_program(src: &str) -> Result<Program> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    let mut functions = Vec::new();
+    while !p.at(&Tok::Eof) {
+        functions.push(p.function()?);
+    }
+    Ok(Program { functions })
+}
+
+struct Parser {
+    toks: Vec<Token>,
+    pos: usize,
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos.min(self.toks.len() - 1)].kind
+    }
+
+    fn peek2(&self) -> &Tok {
+        &self.toks[(self.pos + 1).min(self.toks.len() - 1)].kind
+    }
+
+    fn line(&self) -> usize {
+        self.toks[self.pos.min(self.toks.len() - 1)].line
+    }
+
+    fn at(&self, t: &Tok) -> bool {
+        self.peek() == t
+    }
+
+    fn bump(&mut self) -> Tok {
+        // clamped at Eof: an unterminated construct yields a parse error
+        // instead of running off the token vector
+        let t = self.toks[self.pos.min(self.toks.len() - 1)].kind.clone();
+        self.pos += 1;
+        t
+    }
+
+    fn expect(&mut self, t: Tok) -> Result<()> {
+        if self.peek() == &t {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("line {}: expected {:?}, found {:?}", self.line(), t, self.peek())
+        }
+    }
+
+    fn ident(&mut self) -> Result<String> {
+        match self.bump() {
+            Tok::Ident(s) => Ok(s),
+            other => bail!("line {}: expected identifier, found {other:?}", self.line()),
+        }
+    }
+
+    fn at_ident(&self, s: &str) -> bool {
+        matches!(self.peek(), Tok::Ident(w) if w == s)
+    }
+
+    fn eat_ident(&mut self, s: &str) -> bool {
+        if self.at_ident(s) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    // ---------------------------------------------------------- types
+
+    fn is_type_start(&self) -> bool {
+        matches!(self.peek(), Tok::Ident(w) if matches!(
+            w.as_str(),
+            "int" | "long" | "bool" | "float" | "double" | "Graph" | "node" | "edge"
+                | "propNode" | "propEdge" | "updates"
+        ))
+    }
+
+    fn ty(&mut self) -> Result<Type> {
+        let name = self.ident()?;
+        Ok(match name.as_str() {
+            "int" => Type::Int,
+            "long" => Type::Long,
+            "bool" => Type::Bool,
+            "float" => Type::Float,
+            "double" => Type::Double,
+            "Graph" => Type::Graph,
+            "node" => Type::Node,
+            "edge" => Type::Edge,
+            "propNode" => {
+                self.expect(Tok::Lt)?;
+                let inner = self.ty()?;
+                self.expect(Tok::Gt)?;
+                Type::PropNode(Box::new(inner))
+            }
+            "propEdge" => {
+                self.expect(Tok::Lt)?;
+                let inner = self.ty()?;
+                self.expect(Tok::Gt)?;
+                Type::PropEdge(Box::new(inner))
+            }
+            "updates" => {
+                self.expect(Tok::Lt)?;
+                let _g = self.ident()?;
+                self.expect(Tok::Gt)?;
+                Type::Updates
+            }
+            other => bail!("line {}: unknown type {other:?}", self.line()),
+        })
+    }
+
+    // ------------------------------------------------------ functions
+
+    fn function(&mut self) -> Result<Function> {
+        let kw = self.ident()?;
+        let (kind, name) = match kw.as_str() {
+            "Static" => (FnKind::Static, self.ident()?),
+            "Dynamic" => (FnKind::Dynamic, self.ident()?),
+            "Incremental" => (FnKind::Incremental, "Incremental".to_string()),
+            "Decremental" => (FnKind::Decremental, "Decremental".to_string()),
+            other => bail!(
+                "line {}: expected Static/Dynamic/Incremental/Decremental, found {other:?}",
+                self.line()
+            ),
+        };
+        self.expect(Tok::LParen)?;
+        let mut params = Vec::new();
+        if !self.at(&Tok::RParen) {
+            loop {
+                let ty = self.ty()?;
+                let name = self.ident()?;
+                params.push(Param { ty, name });
+                if !self.at(&Tok::Comma) {
+                    break;
+                }
+                self.bump();
+            }
+        }
+        self.expect(Tok::RParen)?;
+        let body = self.block()?;
+        Ok(Function { kind, name, params, body })
+    }
+
+    fn block(&mut self) -> Result<Vec<Stmt>> {
+        self.expect(Tok::LBrace)?;
+        let mut out = Vec::new();
+        while !self.at(&Tok::RBrace) {
+            out.push(self.stmt()?);
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(out)
+    }
+
+    // ------------------------------------------------------ statements
+
+    fn stmt(&mut self) -> Result<Stmt> {
+        // Min multi-assign: `<lv, lv, lv> = <Min(a,b), e, e>;`
+        if self.at(&Tok::Lt) {
+            return self.min_assign();
+        }
+        if let Tok::Ident(w) = self.peek() {
+            match w.as_str() {
+                "if" => return self.if_stmt(),
+                "while" => return self.while_stmt(),
+                "do" => return self.do_while(),
+                "forall" => return self.loop_stmt(true),
+                "for" => return self.loop_stmt(false),
+                "fixedPoint" => return self.fixed_point(),
+                "Batch" => return self.batch(),
+                "OnAdd" => return self.on_update(true),
+                "OnDelete" => return self.on_update(false),
+                "return" => {
+                    self.bump();
+                    let e = self.expr()?;
+                    self.expect(Tok::Semi)?;
+                    return Ok(Stmt::Return(e));
+                }
+                _ => {}
+            }
+        }
+        // Declaration? (type keyword followed by identifier)
+        if self.is_type_start() && !matches!(self.peek2(), Tok::Dot | Tok::Assign) {
+            let ty = self.ty()?;
+            let name = self.ident()?;
+            let init = if self.at(&Tok::Assign) {
+                self.bump();
+                Some(self.expr()?)
+            } else {
+                None
+            };
+            self.expect(Tok::Semi)?;
+            return Ok(Stmt::Decl { ty, name, init });
+        }
+        // Expression-led: assignment or expression statement.
+        let e = self.expr()?;
+        let op = match self.peek() {
+            Tok::Assign => Some(AssignOp::Set),
+            Tok::PlusEq => Some(AssignOp::Add),
+            Tok::MinusEq => Some(AssignOp::Sub),
+            _ => None,
+        };
+        if let Some(op) = op {
+            self.bump();
+            let rhs = self.expr()?;
+            self.expect(Tok::Semi)?;
+            let lhs = Self::lvalue(e, self.line())?;
+            return Ok(Stmt::Assign { lhs, op, rhs });
+        }
+        self.expect(Tok::Semi)?;
+        Ok(Stmt::Expr(e))
+    }
+
+    fn lvalue(e: Expr, line: usize) -> Result<LValue> {
+        match e {
+            Expr::Var(v) => Ok(LValue::Var(v)),
+            Expr::Member { base, prop } => Ok(LValue::Member { base: *base, prop }),
+            other => Err(anyhow!("line {line}: not assignable: {other:?}")),
+        }
+    }
+
+    fn min_assign(&mut self) -> Result<Stmt> {
+        self.expect(Tok::Lt)?;
+        let mut lhs = Vec::new();
+        loop {
+            let e = self.expr_primary_chain()?;
+            lhs.push(Self::lvalue(e, self.line())?);
+            if !self.at(&Tok::Comma) {
+                break;
+            }
+            self.bump();
+        }
+        self.expect(Tok::Gt)?;
+        self.expect(Tok::Assign)?;
+        self.expect(Tok::Lt)?;
+        // first element must be Min(a, b)
+        if !self.eat_ident("Min") {
+            bail!("line {}: Min(...) expected as first tuple element", self.line());
+        }
+        self.expect(Tok::LParen)?;
+        let a = self.expr()?;
+        self.expect(Tok::Comma)?;
+        let b = self.expr()?;
+        self.expect(Tok::RParen)?;
+        let mut rest = Vec::new();
+        while self.at(&Tok::Comma) {
+            self.bump();
+            // additive level only: a comparison would swallow the closing `>`
+            rest.push(self.add_expr()?);
+        }
+        self.expect(Tok::Gt)?;
+        self.expect(Tok::Semi)?;
+        if lhs.len() != rest.len() + 1 {
+            bail!("Min multi-assign arity mismatch: {} lhs vs {} rhs", lhs.len(), rest.len() + 1);
+        }
+        Ok(Stmt::MinAssign { lhs, min_args: (a, b), rest })
+    }
+
+    fn if_stmt(&mut self) -> Result<Stmt> {
+        self.bump(); // if
+        self.expect(Tok::LParen)?;
+        let cond = self.expr()?;
+        self.expect(Tok::RParen)?;
+        let then_branch = self.block()?;
+        let else_branch = if self.eat_ident("else") {
+            if self.at_ident("if") {
+                vec![self.if_stmt()?]
+            } else {
+                self.block()?
+            }
+        } else {
+            Vec::new()
+        };
+        Ok(Stmt::If { cond, then_branch, else_branch })
+    }
+
+    fn while_stmt(&mut self) -> Result<Stmt> {
+        self.bump();
+        self.expect(Tok::LParen)?;
+        let cond = self.expr()?;
+        self.expect(Tok::RParen)?;
+        let body = self.block()?;
+        Ok(Stmt::While { cond, body })
+    }
+
+    fn do_while(&mut self) -> Result<Stmt> {
+        self.bump(); // do
+        let body = self.block()?;
+        if !self.eat_ident("while") {
+            bail!("line {}: expected while after do-block", self.line());
+        }
+        self.expect(Tok::LParen)?;
+        let cond = self.expr()?;
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::Semi)?;
+        Ok(Stmt::DoWhile { body, cond })
+    }
+
+    /// `forall (v in <domain>) { … }` / `for (...)`.
+    fn loop_stmt(&mut self, parallel: bool) -> Result<Stmt> {
+        self.bump(); // forall | for
+        self.expect(Tok::LParen)?;
+        let var = self.ident()?;
+        if !self.eat_ident("in") {
+            bail!("line {}: expected `in`", self.line());
+        }
+        let iter = self.iter_domain()?;
+        self.expect(Tok::RParen)?;
+        let body = self.block()?;
+        Ok(if parallel {
+            Stmt::Forall { var, iter, body }
+        } else {
+            Stmt::For { var, iter, body }
+        })
+    }
+
+    fn iter_domain(&mut self) -> Result<Iter> {
+        let base = self.ident()?;
+        if !self.at(&Tok::Dot) {
+            return Ok(Iter::UpdateList(base));
+        }
+        self.bump(); // .
+        let method = self.ident()?;
+        self.expect(Tok::LParen)?;
+        let mut args = Vec::new();
+        if !self.at(&Tok::RParen) {
+            loop {
+                args.push(self.expr()?);
+                if !self.at(&Tok::Comma) {
+                    break;
+                }
+                self.bump();
+            }
+        }
+        self.expect(Tok::RParen)?;
+        let filter = if self.at(&Tok::Dot) {
+            self.bump();
+            if !self.eat_ident("filter") {
+                bail!("line {}: only .filter() may follow an iteration domain", self.line());
+            }
+            self.expect(Tok::LParen)?;
+            let f = self.expr()?;
+            self.expect(Tok::RParen)?;
+            Some(f)
+        } else {
+            None
+        };
+        match method.as_str() {
+            "nodes" => Ok(Iter::Nodes { graph: base, filter }),
+            "neighbors" => Ok(Iter::Neighbors {
+                graph: base,
+                of: args.into_iter().next().ok_or_else(|| anyhow!("neighbors() needs arg"))?,
+                filter,
+            }),
+            "nodes_to" => Ok(Iter::NodesTo {
+                graph: base,
+                of: args.into_iter().next().ok_or_else(|| anyhow!("nodes_to() needs arg"))?,
+            }),
+            other => bail!("line {}: unknown iteration domain .{other}()", self.line()),
+        }
+    }
+
+    fn fixed_point(&mut self) -> Result<Stmt> {
+        self.bump(); // fixedPoint
+        if !self.eat_ident("until") {
+            bail!("line {}: expected `until`", self.line());
+        }
+        self.expect(Tok::LParen)?;
+        let flag = self.ident()?;
+        self.expect(Tok::Colon)?;
+        self.expect(Tok::Not)?;
+        let prop = self.ident()?;
+        self.expect(Tok::RParen)?;
+        let body = self.block()?;
+        Ok(Stmt::FixedPoint { flag, prop, body })
+    }
+
+    fn batch(&mut self) -> Result<Stmt> {
+        self.bump(); // Batch
+        self.expect(Tok::LParen)?;
+        let updates = self.ident()?;
+        self.expect(Tok::Colon)?;
+        let size = self.expr()?;
+        self.expect(Tok::RParen)?;
+        let body = self.block()?;
+        Ok(Stmt::Batch { updates, size, body })
+    }
+
+    fn on_update(&mut self, add: bool) -> Result<Stmt> {
+        self.bump(); // OnAdd | OnDelete
+        self.expect(Tok::LParen)?;
+        let var = self.ident()?;
+        if !self.eat_ident("in") {
+            bail!("line {}: expected `in`", self.line());
+        }
+        let updates = self.ident()?;
+        self.expect(Tok::Dot)?;
+        if !self.eat_ident("currentBatch") {
+            bail!("line {}: expected currentBatch()", self.line());
+        }
+        self.expect(Tok::LParen)?;
+        // optional selector arg (0 = deletes, 1 = adds) — ignored here,
+        // the construct itself selects the subset.
+        if !self.at(&Tok::RParen) {
+            let _ = self.expr()?;
+        }
+        self.expect(Tok::RParen)?;
+        self.expect(Tok::RParen)?;
+        let body = self.block()?;
+        Ok(if add {
+            Stmt::OnAdd { var, updates, body }
+        } else {
+            Stmt::OnDelete { var, updates, body }
+        })
+    }
+
+    // ------------------------------------------------------ expressions
+
+    /// An argument: either `name = expr` (kwarg) or a plain expression.
+    fn arg_expr(&mut self) -> Result<Expr> {
+        if let (Tok::Ident(name), Tok::Assign) = (self.peek(), self.peek2()) {
+            let name = name.clone();
+            self.bump();
+            self.bump();
+            let value = self.expr()?;
+            return Ok(Expr::KwArg { name, value: Box::new(value) });
+        }
+        self.expr()
+    }
+
+    fn expr(&mut self) -> Result<Expr> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.and_expr()?;
+        while self.at(&Tok::OrOr) {
+            self.bump();
+            let rhs = self.and_expr()?;
+            lhs = Expr::Binary { op: BinOp::Or, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.cmp_expr()?;
+        while self.at(&Tok::AndAnd) {
+            self.bump();
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Binary { op: BinOp::And, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Tok::Lt => Some(BinOp::Lt),
+            Tok::Gt => Some(BinOp::Gt),
+            Tok::Le => Some(BinOp::Le),
+            Tok::Ge => Some(BinOp::Ge),
+            Tok::EqEq => Some(BinOp::Eq),
+            Tok::Ne => Some(BinOp::Ne),
+            _ => None,
+        };
+        if let Some(op) = op {
+            self.bump();
+            let rhs = self.add_expr()?;
+            Ok(Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) })
+        } else {
+            Ok(lhs)
+        }
+    }
+
+    fn add_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::Percent => BinOp::Mod,
+                _ => break,
+            };
+            self.bump();
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr> {
+        match self.peek() {
+            Tok::Not => {
+                self.bump();
+                Ok(Expr::Unary { op: UnOp::Not, expr: Box::new(self.unary_expr()?) })
+            }
+            Tok::Minus => {
+                self.bump();
+                Ok(Expr::Unary { op: UnOp::Neg, expr: Box::new(self.unary_expr()?) })
+            }
+            _ => self.expr_primary_chain(),
+        }
+    }
+
+    /// primary with member/method chains: `g.get_edge(u,v).weight` etc.
+    fn expr_primary_chain(&mut self) -> Result<Expr> {
+        let mut e = self.primary()?;
+        while self.at(&Tok::Dot) {
+            self.bump();
+            let name = self.ident()?;
+            if self.at(&Tok::LParen) {
+                self.bump();
+                let mut args = Vec::new();
+                if !self.at(&Tok::RParen) {
+                    loop {
+                        args.push(self.arg_expr()?);
+                        if !self.at(&Tok::Comma) {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                self.expect(Tok::RParen)?;
+                e = Expr::MethodCall { base: Box::new(e), method: name, args };
+            } else {
+                e = Expr::Member { base: Box::new(e), prop: name };
+            }
+        }
+        Ok(e)
+    }
+
+    fn primary(&mut self) -> Result<Expr> {
+        match self.bump() {
+            Tok::Int(v) => Ok(Expr::IntLit(v)),
+            Tok::Float(v) => Ok(Expr::FloatLit(v)),
+            Tok::LParen => {
+                let e = self.expr()?;
+                self.expect(Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(w) => match w.as_str() {
+                "True" => Ok(Expr::BoolLit(true)),
+                "False" => Ok(Expr::BoolLit(false)),
+                "INF" | "INT_MAX" => Ok(Expr::Inf),
+                _ => {
+                    if self.at(&Tok::LParen) {
+                        self.bump();
+                        let mut args = Vec::new();
+                        if !self.at(&Tok::RParen) {
+                            loop {
+                                args.push(self.expr()?);
+                                if !self.at(&Tok::Comma) {
+                                    break;
+                                }
+                                self.bump();
+                            }
+                        }
+                        self.expect(Tok::RParen)?;
+                        Ok(Expr::Call { name: w, args })
+                    } else {
+                        Ok(Expr::Var(w))
+                    }
+                }
+            },
+            other => bail!("line {}: unexpected token {other:?} in expression", self.line()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(path: &str) -> String {
+        std::fs::read_to_string(path).unwrap()
+    }
+
+    #[test]
+    fn parses_sssp_program() {
+        let p = parse_program(&sp("dsl/sssp_dynamic.sp")).unwrap();
+        assert_eq!(p.functions.len(), 4);
+        let names: Vec<_> = p.functions.iter().map(|f| f.name.as_str()).collect();
+        assert_eq!(names, vec!["staticSSSP", "Incremental", "Decremental", "DynSSSP"]);
+        let dyn_fn = p.find("DynSSSP").unwrap();
+        assert_eq!(dyn_fn.kind, FnKind::Dynamic);
+        assert_eq!(dyn_fn.params.len(), 7);
+        // driver: static call then a Batch construct
+        assert!(matches!(dyn_fn.body[0], Stmt::Expr(Expr::Call { .. })));
+        assert!(matches!(dyn_fn.body[1], Stmt::Batch { .. }));
+    }
+
+    #[test]
+    fn parses_pagerank_program() {
+        let p = parse_program(&sp("dsl/pagerank_dynamic.sp")).unwrap();
+        assert_eq!(p.functions.len(), 4);
+        let st = p.find("staticPR").unwrap();
+        // body ends with a do-while
+        assert!(st.body.iter().any(|s| matches!(s, Stmt::DoWhile { .. })));
+    }
+
+    #[test]
+    fn parses_tc_program() {
+        let p = parse_program(&sp("dsl/tc_dynamic.sp")).unwrap();
+        assert_eq!(p.functions.len(), 4);
+        let st = p.find("staticTC").unwrap();
+        assert!(matches!(st.body.last(), Some(Stmt::Return(_))));
+    }
+
+    #[test]
+    fn parses_min_multiassign() {
+        let src = r#"
+        Static f(Graph g, propNode<int> dist) {
+          forall (v in g.nodes()) {
+            forall (nbr in g.neighbors(v)) {
+              edge e = g.get_edge(v, nbr);
+              <nbr.dist, nbr.m, nbr.parent> = <Min(nbr.dist, v.dist + e.weight), True, v>;
+            }
+          }
+        }"#;
+        let p = parse_program(src).unwrap();
+        let f = &p.functions[0];
+        let Stmt::Forall { body, .. } = &f.body[0] else { panic!() };
+        let Stmt::Forall { body: inner, .. } = &body[0] else { panic!() };
+        assert!(matches!(inner[1], Stmt::MinAssign { ref lhs, .. } if lhs.len() == 3));
+    }
+
+    #[test]
+    fn parses_fixed_point_header() {
+        let src = "Static f(Graph g) { bool fin = False; fixedPoint until (fin : !modified) { fin = True; } }";
+        let p = parse_program(src).unwrap();
+        assert!(p.functions[0]
+            .body
+            .iter()
+            .any(|s| matches!(s, Stmt::FixedPoint { flag, prop, .. } if flag == "fin" && prop == "modified")));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_program("Static f(Graph g) { 5 = x; }").is_err());
+        assert!(parse_program("NotAKind f() {}").is_err());
+    }
+
+    #[test]
+    fn parses_filter_with_compound_condition() {
+        let src = "Static f(Graph g) { forall (v3 in g.neighbors(v1).filter(v3 != v2 && v3 != v1)) { int x = 0; } }";
+        let p = parse_program(src).unwrap();
+        let Stmt::Forall { iter: Iter::Neighbors { filter, .. }, .. } = &p.functions[0].body[0]
+        else {
+            panic!()
+        };
+        assert!(filter.is_some());
+    }
+}

@@ -1,0 +1,317 @@
+//! Semantic analysis (§2, §4): symbol table construction, read/write-set
+//! computation for every `forall`, and data-race detection that decides
+//! the synchronization the generated code needs:
+//!
+//! * `Min` multi-assignments → atomic min (`atomicMin` in CUDA, gcc
+//!   `__atomic` builtins in OpenMP, `MPI_Accumulate(MIN)` in MPI);
+//! * `+=`/`-=` on a scalar inside a `forall` → reduction clause;
+//! * a property written through a vertex other than the loop variable
+//!   (e.g. `nbr.dist` inside `forall (v …) forall (nbr …)`) → atomic /
+//!   critical section;
+//! * a property written only through the loop variable → owner-computes,
+//!   no synchronization (the common fast path).
+
+use super::ast::*;
+use anyhow::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// What kind of synchronization a write site needs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sync {
+    /// owner-computes, race-free
+    None,
+    /// atomic compare-exchange minimum
+    AtomicMin,
+    /// parallel reduction (`reduction(+: x)` in OpenMP)
+    Reduction,
+    /// generic atomic/critical update
+    Critical,
+}
+
+/// Analysis result for one `forall` site.
+#[derive(Debug, Clone)]
+pub struct ForallInfo {
+    /// properties read in the body
+    pub reads: BTreeSet<String>,
+    /// properties written in the body → required sync
+    pub writes: BTreeMap<String, Sync>,
+    /// scalar reduction variables (name → sync)
+    pub reductions: BTreeSet<String>,
+    /// nesting depth (outermost = 0); backends parallelize depth 0 only
+    pub depth: usize,
+}
+
+/// Per-function analysis.
+#[derive(Debug, Clone, Default)]
+pub struct FnAnalysis {
+    pub foralls: Vec<ForallInfo>,
+    /// node properties declared or attached in this function
+    pub node_props: BTreeSet<String>,
+    /// properties the xla backend must copy device→host after the kernel
+    /// (§5.3 transfer analysis: written properties only)
+    pub dirty_props: BTreeSet<String>,
+}
+
+/// Whole-program analysis keyed by function name.
+#[derive(Debug, Clone, Default)]
+pub struct Analysis {
+    pub functions: BTreeMap<String, FnAnalysis>,
+}
+
+/// Run semantic analysis. Errors on malformed programs (e.g. `Batch`
+/// outside a `Dynamic` function, unknown function calls).
+pub fn analyze(p: &Program) -> Result<Analysis> {
+    let known: BTreeSet<&str> = p.functions.iter().map(|f| f.name.as_str()).collect();
+    let mut out = Analysis::default();
+    for f in &p.functions {
+        let mut fa = FnAnalysis::default();
+        for param in &f.params {
+            if let Type::PropNode(_) = param.ty {
+                fa.node_props.insert(param.name.clone());
+            }
+        }
+        let mut ctx = Ctx { fa: &mut fa, known: &known, fn_kind: f.kind };
+        ctx.stmts(&f.body, 0)?;
+        out.functions.insert(f.name.clone(), fa);
+    }
+    Ok(out)
+}
+
+struct Ctx<'a> {
+    fa: &'a mut FnAnalysis,
+    known: &'a BTreeSet<&'a str>,
+    fn_kind: FnKind,
+}
+
+impl Ctx<'_> {
+    fn stmts(&mut self, body: &[Stmt], forall_depth: usize) -> Result<()> {
+        for s in body {
+            self.stmt(s, forall_depth)?;
+        }
+        Ok(())
+    }
+
+    fn stmt(&mut self, s: &Stmt, forall_depth: usize) -> Result<()> {
+        match s {
+            Stmt::Decl { ty, name, .. } => {
+                if matches!(ty, Type::PropNode(_) | Type::PropEdge(_)) {
+                    self.fa.node_props.insert(name.clone());
+                }
+            }
+            Stmt::Batch { body, .. } => {
+                if self.fn_kind != FnKind::Dynamic {
+                    bail!("Batch construct is only allowed in Dynamic functions (§3.3.1)");
+                }
+                self.stmts(body, forall_depth)?;
+            }
+            Stmt::OnAdd { body, .. } | Stmt::OnDelete { body, .. } => {
+                self.stmts(body, forall_depth)?;
+            }
+            Stmt::Forall { var, iter, body } => {
+                let mut info = ForallInfo {
+                    reads: BTreeSet::new(),
+                    writes: BTreeMap::new(),
+                    reductions: BTreeSet::new(),
+                    depth: forall_depth,
+                };
+                Self::scan_forall(var, body, &mut info);
+                if let Some(f) = iter_filter(iter) {
+                    collect_props(f, &mut info.reads);
+                }
+                for p in info.writes.keys() {
+                    self.fa.dirty_props.insert(p.clone());
+                }
+                self.fa.foralls.push(info);
+                self.stmts(body, forall_depth + 1)?;
+            }
+            Stmt::For { body, .. } => self.stmts(body, forall_depth)?,
+            Stmt::FixedPoint { body, .. } => self.stmts(body, forall_depth)?,
+            Stmt::If { then_branch, else_branch, .. } => {
+                self.stmts(then_branch, forall_depth)?;
+                self.stmts(else_branch, forall_depth)?;
+            }
+            Stmt::While { body, .. } | Stmt::DoWhile { body, .. } => {
+                self.stmts(body, forall_depth)?
+            }
+            Stmt::Expr(Expr::Call { name, .. }) => {
+                if !self.known.contains(name.as_str()) {
+                    bail!("call to unknown function {name:?}");
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Scan one forall body for read/write sets and sync requirements.
+    fn scan_forall(loop_var: &str, body: &[Stmt], info: &mut ForallInfo) {
+        for s in body {
+            match s {
+                Stmt::Assign { lhs, op, rhs } => {
+                    collect_props(rhs, &mut info.reads);
+                    match lhs {
+                        LValue::Member { base, prop } => {
+                            let owner_writes = matches!(base, Expr::Var(v) if v == loop_var);
+                            let sync = if owner_writes { Sync::None } else { Sync::Critical };
+                            upgrade(&mut info.writes, prop, sync);
+                        }
+                        LValue::Var(v) => {
+                            if *op != AssignOp::Set {
+                                // scalar accumulated across iterations
+                                info.reductions.insert(v.clone());
+                            }
+                        }
+                    }
+                }
+                Stmt::MinAssign { lhs, min_args, rest } => {
+                    collect_props(&min_args.0, &mut info.reads);
+                    collect_props(&min_args.1, &mut info.reads);
+                    for e in rest {
+                        collect_props(e, &mut info.reads);
+                    }
+                    for lv in lhs {
+                        if let LValue::Member { prop, .. } = lv {
+                            upgrade(&mut info.writes, prop, Sync::AtomicMin);
+                        }
+                    }
+                }
+                Stmt::If { cond, then_branch, else_branch } => {
+                    collect_props(cond, &mut info.reads);
+                    Self::scan_forall(loop_var, then_branch, info);
+                    Self::scan_forall(loop_var, else_branch, info);
+                }
+                Stmt::While { cond, body } | Stmt::DoWhile { body, cond } => {
+                    collect_props(cond, &mut info.reads);
+                    Self::scan_forall(loop_var, body, info);
+                }
+                // nested forall/for: writes through *their* loop vars are
+                // races for the outer loop; keep scanning with the outer
+                // loop var so `nbr.dist = …` is flagged.
+                Stmt::Forall { body, iter, .. } | Stmt::For { body, iter, .. } => {
+                    if let Some(f) = iter_filter(iter) {
+                        collect_props(f, &mut info.reads);
+                    }
+                    Self::scan_forall(loop_var, body, info);
+                }
+                Stmt::Decl { init: Some(e), .. } => collect_props(e, &mut info.reads),
+                Stmt::Expr(e) | Stmt::Return(e) => collect_props(e, &mut info.reads),
+                Stmt::FixedPoint { body, .. } => Self::scan_forall(loop_var, body, info),
+                _ => {}
+            }
+        }
+    }
+}
+
+fn iter_filter(iter: &Iter) -> Option<&Expr> {
+    match iter {
+        Iter::Nodes { filter, .. } | Iter::Neighbors { filter, .. } => filter.as_ref(),
+        _ => None,
+    }
+}
+
+fn upgrade(map: &mut BTreeMap<String, Sync>, prop: &str, sync: Sync) {
+    let cur = map.get(prop).copied().unwrap_or(Sync::None);
+    let rank = |s: Sync| match s {
+        Sync::None => 0,
+        Sync::Reduction => 1,
+        Sync::AtomicMin => 2,
+        Sync::Critical => 3,
+    };
+    if rank(sync) >= rank(cur) {
+        map.insert(prop.to_string(), sync);
+    }
+}
+
+/// Collect property names mentioned in an expression (member accesses).
+fn collect_props(e: &Expr, out: &mut BTreeSet<String>) {
+    match e {
+        Expr::Member { base, prop } => {
+            out.insert(prop.clone());
+            collect_props(base, out);
+        }
+        Expr::MethodCall { base, args, .. } => {
+            collect_props(base, out);
+            for a in args {
+                collect_props(a, out);
+            }
+        }
+        Expr::Call { args, .. } => {
+            for a in args {
+                collect_props(a, out);
+            }
+        }
+        Expr::Unary { expr, .. } => collect_props(expr, out),
+        Expr::Binary { lhs, rhs, .. } => {
+            collect_props(lhs, out);
+            collect_props(rhs, out);
+        }
+        Expr::KwArg { value, .. } => collect_props(value, out),
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parse_program;
+
+    fn sssp() -> Program {
+        parse_program(&std::fs::read_to_string("dsl/sssp_dynamic.sp").unwrap()).unwrap()
+    }
+
+    #[test]
+    fn min_assign_requires_atomic_min() {
+        let p = sssp();
+        let a = analyze(&p).unwrap();
+        let f = &a.functions["staticSSSP"];
+        // the outer forall over modified vertices writes dist via nbr →
+        // AtomicMin
+        let outer = f.foralls.iter().find(|fa| fa.depth == 0).unwrap();
+        assert_eq!(outer.writes.get("dist"), Some(&Sync::AtomicMin));
+        assert_eq!(outer.writes.get("modified_nxt"), Some(&Sync::AtomicMin));
+        assert!(outer.reads.contains("weight"));
+    }
+
+    #[test]
+    fn owner_writes_need_no_sync() {
+        let p = sssp();
+        let a = analyze(&p).unwrap();
+        let dec = &a.functions["Decremental"];
+        // phase-1 cascade writes v.dist with v the loop var → Sync::None
+        let first = &dec.foralls[0];
+        assert_eq!(first.writes.get("dist"), Some(&Sync::None));
+        assert!(first.reads.contains("modified"), "parent flag is read");
+    }
+
+    #[test]
+    fn tc_reduction_detected() {
+        let p = parse_program(&std::fs::read_to_string("dsl/tc_dynamic.sp").unwrap()).unwrap();
+        let a = analyze(&p).unwrap();
+        let tc = &a.functions["staticTC"];
+        let outer = tc.foralls.iter().find(|f| f.depth == 0).unwrap();
+        assert!(outer.reductions.contains("triangle_count"), "scalar += is a reduction");
+    }
+
+    #[test]
+    fn batch_outside_dynamic_rejected() {
+        let src = "Static f(Graph g, updates<g> u) { Batch(u : 10) { int x = 0; } }";
+        let p = parse_program(src).unwrap();
+        assert!(analyze(&p).is_err());
+    }
+
+    #[test]
+    fn unknown_call_rejected() {
+        let src = "Static f(Graph g) { mystery(g); }";
+        let p = parse_program(src).unwrap();
+        assert!(analyze(&p).is_err());
+    }
+
+    #[test]
+    fn dirty_props_feed_transfer_plan() {
+        let p = sssp();
+        let a = analyze(&p).unwrap();
+        let inc = &a.functions["Incremental"];
+        assert!(inc.dirty_props.contains("dist"));
+        assert!(inc.dirty_props.contains("parent"));
+    }
+}

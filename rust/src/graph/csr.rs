@@ -1,0 +1,254 @@
+//! Compressed Sparse Row storage with tombstoned deletion.
+//!
+//! `offsets[v]..offsets[v+1]` indexes `coords`/`weights`; a deleted edge is
+//! marked by writing [`TOMBSTONE`] into `coords` (the paper's ∞ sentinel),
+//! which avoids the cascading element shifts and cross-thread
+//! synchronization an in-place CSR delete would need (§3.5).
+
+use super::{NodeId, Weight};
+
+/// Sentinel marking a vacated (deleted) slot in `coords`.
+pub const TOMBSTONE: NodeId = NodeId::MAX;
+
+/// A CSR graph (directed; weighted). Slots may be tombstoned.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    /// `n + 1` entries; `offsets[v]` is the start of `v`'s slot range.
+    pub offsets: Vec<u32>,
+    /// Destination vertex per slot, or [`TOMBSTONE`].
+    pub coords: Vec<NodeId>,
+    /// Weight per slot (undefined for tombstoned slots).
+    pub weights: Vec<Weight>,
+}
+
+impl Csr {
+    /// Build from an edge list. Self-contained counting sort; parallel
+    /// edges are kept as-is (the generators de-duplicate when needed).
+    pub fn from_edges(n: usize, edges: &[(NodeId, NodeId, Weight)]) -> Csr {
+        let mut counts = vec![0u32; n + 1];
+        for &(u, _, _) in edges {
+            debug_assert!((u as usize) < n);
+            counts[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            counts[i + 1] += counts[i];
+        }
+        let offsets = counts.clone();
+        let mut coords = vec![TOMBSTONE; edges.len()];
+        let mut weights = vec![0; edges.len()];
+        let mut cursor = offsets.clone();
+        for &(u, v, w) in edges {
+            let slot = cursor[u as usize] as usize;
+            cursor[u as usize] += 1;
+            coords[slot] = v;
+            weights[slot] = w;
+        }
+        Csr { offsets, coords, weights }
+    }
+
+    /// An empty graph over `n` vertices.
+    pub fn empty(n: usize) -> Csr {
+        Csr { offsets: vec![0; n + 1], coords: Vec::new(), weights: Vec::new() }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total slots (live + tombstoned).
+    #[inline]
+    pub fn num_slots(&self) -> usize {
+        self.coords.len()
+    }
+
+    /// Count of live (non-tombstoned) edges. O(slots).
+    pub fn count_live(&self) -> usize {
+        self.coords.iter().filter(|&&c| c != TOMBSTONE).count()
+    }
+
+    /// Slot range of `v`.
+    #[inline]
+    pub fn slot_range(&self, v: NodeId) -> std::ops::Range<usize> {
+        self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize
+    }
+
+    /// Iterate live out-edges of `v` as `(dest, weight)`.
+    #[inline]
+    pub fn neighbors(&self, v: NodeId) -> impl Iterator<Item = (NodeId, Weight)> + '_ {
+        self.slot_range(v).filter_map(move |s| {
+            let c = self.coords[s];
+            (c != TOMBSTONE).then(|| (c, self.weights[s]))
+        })
+    }
+
+    /// Degree counting live slots only. O(degree).
+    pub fn live_degree(&self, v: NodeId) -> usize {
+        self.slot_range(v).filter(|&s| self.coords[s] != TOMBSTONE).count()
+    }
+
+    /// Find the slot of edge `u -> v`, if live.
+    pub fn find_edge(&self, u: NodeId, v: NodeId) -> Option<usize> {
+        self.slot_range(u).find(|&s| self.coords[s] == v)
+    }
+
+    /// Tombstone edge `u -> v`. Returns `true` if an edge was deleted.
+    pub fn delete_edge(&mut self, u: NodeId, v: NodeId) -> bool {
+        if let Some(s) = self.find_edge(u, v) {
+            self.coords[s] = TOMBSTONE;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Try to insert `u -> v` into a vacant (tombstoned) slot of `u`.
+    /// Returns `false` if `u`'s range has no vacancy (caller falls back to
+    /// the diff-CSR).
+    pub fn try_insert_in_place(&mut self, u: NodeId, v: NodeId, w: Weight) -> bool {
+        for s in self.slot_range(u) {
+            if self.coords[s] == TOMBSTONE {
+                self.coords[s] = v;
+                self.weights[s] = w;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// The transposed graph (in-edges become out-edges). Tombstones are
+    /// dropped.
+    pub fn transpose(&self) -> Csr {
+        let n = self.num_nodes();
+        let mut edges = Vec::with_capacity(self.count_live());
+        for u in 0..n as NodeId {
+            for (v, w) in self.neighbors(u) {
+                edges.push((v, u, w));
+            }
+        }
+        Csr::from_edges(n, &edges)
+    }
+
+    /// Collect all live edges.
+    pub fn edges(&self) -> Vec<(NodeId, NodeId, Weight)> {
+        let mut out = Vec::with_capacity(self.count_live());
+        for u in 0..self.num_nodes() as NodeId {
+            for (v, w) in self.neighbors(u) {
+                out.push((u, v, w));
+            }
+        }
+        out
+    }
+
+    /// Sort each adjacency range by destination (tombstones last). Enables
+    /// binary-search `is_an_edge` (the TC inner loop variant in §6.4).
+    pub fn sort_adjacencies(&mut self) {
+        let n = self.num_nodes();
+        for u in 0..n as NodeId {
+            let r = self.slot_range(u);
+            let mut pairs: Vec<(NodeId, Weight)> =
+                r.clone().map(|s| (self.coords[s], self.weights[s])).collect();
+            pairs.sort_unstable_by_key(|p| p.0);
+            for (i, s) in r.enumerate() {
+                self.coords[s] = pairs[i].0;
+                self.weights[s] = pairs[i].1;
+            }
+        }
+    }
+
+    /// Binary-search membership test; requires `sort_adjacencies` first.
+    pub fn has_edge_sorted(&self, u: NodeId, v: NodeId) -> bool {
+        let r = self.slot_range(u);
+        let slice = &self.coords[r];
+        slice.binary_search(&v).is_ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Csr {
+        // 0->1(5), 0->2(3), 1->2(1), 2->0(2), 3->1(7)
+        Csr::from_edges(4, &[(0, 1, 5), (0, 2, 3), (1, 2, 1), (2, 0, 2), (3, 1, 7)])
+    }
+
+    #[test]
+    fn from_edges_builds_correct_adjacency() {
+        let g = sample();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.count_live(), 5);
+        let n0: Vec<_> = g.neighbors(0).collect();
+        assert_eq!(n0, vec![(1, 5), (2, 3)]);
+        let n3: Vec<_> = g.neighbors(3).collect();
+        assert_eq!(n3, vec![(1, 7)]);
+        let n2: Vec<_> = g.neighbors(2).collect();
+        assert_eq!(n2, vec![(0, 2)]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::empty(3);
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.count_live(), 0);
+        assert_eq!(g.neighbors(1).count(), 0);
+    }
+
+    #[test]
+    fn delete_tombstones_without_shifting() {
+        let mut g = sample();
+        let slots_before = g.num_slots();
+        assert!(g.delete_edge(0, 2));
+        assert_eq!(g.num_slots(), slots_before, "no shift");
+        assert_eq!(g.count_live(), 4);
+        let n0: Vec<_> = g.neighbors(0).collect();
+        assert_eq!(n0, vec![(1, 5)]);
+        assert!(!g.delete_edge(0, 2), "double delete is a no-op");
+    }
+
+    #[test]
+    fn insert_reuses_vacant_slot() {
+        let mut g = sample();
+        g.delete_edge(0, 1);
+        assert!(g.try_insert_in_place(0, 3, 9), "vacancy available");
+        let n0: Vec<_> = g.neighbors(0).collect();
+        assert_eq!(n0, vec![(3, 9), (2, 3)]);
+        assert!(!g.try_insert_in_place(0, 1, 1), "no vacancy left");
+    }
+
+    #[test]
+    fn transpose_inverts_edges() {
+        let g = sample();
+        let t = g.transpose();
+        let mut e: Vec<_> = t.edges();
+        e.sort_unstable();
+        assert_eq!(e, vec![(0, 2, 2), (1, 0, 5), (1, 3, 7), (2, 0, 3), (2, 1, 1)]);
+    }
+
+    #[test]
+    fn transpose_skips_tombstones() {
+        let mut g = sample();
+        g.delete_edge(3, 1);
+        let t = g.transpose();
+        assert!(t.edges().iter().all(|&(u, v, _)| !(u == 1 && v == 3)));
+    }
+
+    #[test]
+    fn sorted_membership() {
+        let mut g = sample();
+        g.sort_adjacencies();
+        assert!(g.has_edge_sorted(0, 1));
+        assert!(g.has_edge_sorted(0, 2));
+        assert!(!g.has_edge_sorted(0, 3));
+        assert!(!g.has_edge_sorted(1, 0));
+    }
+
+    #[test]
+    fn live_degree_ignores_tombstones() {
+        let mut g = sample();
+        assert_eq!(g.live_degree(0), 2);
+        g.delete_edge(0, 1);
+        assert_eq!(g.live_degree(0), 1);
+    }
+}

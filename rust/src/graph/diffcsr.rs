@@ -1,0 +1,431 @@
+//! The paper's diff-CSR dynamic graph representation (§3.5), plus the
+//! in-edge (transpose) mirror needed by pull-style algorithms
+//! (PageRank's `nodes_to`, decremental SSSP).
+//!
+//! A [`DynGraph`] holds:
+//!  * `fwd`: base CSR with tombstoned deletions + a chain of diff blocks
+//!    holding insertions that found no vacant slot;
+//!  * `bwd`: the same structure for the transposed graph, kept in sync;
+//!  * live out-degrees (the paper's `count_outNbrs`, which must not count
+//!    tombstones).
+//!
+//! After a configurable number of batches the diff chain is merged back
+//! into a fresh compact CSR (`merge`), exactly as §3.5 describes.
+
+use super::csr::{Csr, TOMBSTONE};
+use super::{NodeId, Weight};
+use std::collections::HashMap;
+
+/// One auxiliary diff block: a small CSR over the same vertex set holding
+/// edges added in one batch that did not fit a vacant base slot.
+#[derive(Debug, Clone, Default)]
+pub struct DiffBlock {
+    /// Per-vertex adjacency (kept as a map-of-vecs; blocks are small —
+    /// bounded by the batch's insert count).
+    pub adj: HashMap<NodeId, Vec<(NodeId, Weight)>>,
+    /// Number of live entries (deletions may tombstone diff entries too).
+    pub live: usize,
+}
+
+impl DiffBlock {
+    fn insert(&mut self, u: NodeId, v: NodeId, w: Weight) {
+        self.adj.entry(u).or_default().push((v, w));
+        self.live += 1;
+    }
+
+    /// Tombstone `u -> v` inside this block. Returns true if found.
+    fn delete(&mut self, u: NodeId, v: NodeId) -> bool {
+        if let Some(list) = self.adj.get_mut(&u) {
+            if let Some(slot) = list.iter_mut().find(|e| e.0 == v) {
+                slot.0 = TOMBSTONE;
+                self.live -= 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn neighbors(&self, u: NodeId) -> impl Iterator<Item = (NodeId, Weight)> + '_ {
+        self.adj.get(&u).into_iter().flatten().copied().filter(|e| e.0 != TOMBSTONE)
+    }
+}
+
+/// One direction (out-edges or in-edges) of the dynamic structure.
+#[derive(Debug, Clone)]
+pub struct DiffCsr {
+    pub base: Csr,
+    pub diffs: Vec<DiffBlock>,
+}
+
+impl DiffCsr {
+    fn new(base: Csr) -> Self {
+        DiffCsr { base, diffs: Vec::new() }
+    }
+
+    fn neighbors(&self, u: NodeId) -> impl Iterator<Item = (NodeId, Weight)> + '_ {
+        self.base.neighbors(u).chain(self.diffs.iter().flat_map(move |d| d.neighbors(u)))
+    }
+
+    fn find(&self, u: NodeId, v: NodeId) -> Option<Weight> {
+        self.neighbors(u).find(|&(n, _)| n == v).map(|(_, w)| w)
+    }
+
+    fn delete(&mut self, u: NodeId, v: NodeId) -> bool {
+        if self.base.delete_edge(u, v) {
+            return true;
+        }
+        for d in self.diffs.iter_mut().rev() {
+            if d.delete(u, v) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Insert preferring a vacant base slot, else the current diff block
+    /// (creating one if needed) — the §3.5 placement policy.
+    fn insert(&mut self, u: NodeId, v: NodeId, w: Weight) {
+        if self.base.try_insert_in_place(u, v, w) {
+            return;
+        }
+        if self.diffs.is_empty() {
+            self.diffs.push(DiffBlock::default());
+        }
+        self.diffs.last_mut().unwrap().insert(u, v, w);
+    }
+
+    /// Start a new diff block for the next batch's overflow inserts.
+    fn seal_batch(&mut self) {
+        if self.diffs.last().map(|d| !d.adj.is_empty()).unwrap_or(false) {
+            self.diffs.push(DiffBlock::default());
+        }
+    }
+
+    fn live_edges(&self) -> Vec<(NodeId, NodeId, Weight)> {
+        let n = self.base.num_nodes();
+        let mut out = Vec::new();
+        for u in 0..n as NodeId {
+            for (v, w) in self.neighbors(u) {
+                out.push((u, v, w));
+            }
+        }
+        out
+    }
+
+    /// Compact everything into a fresh tombstone-free CSR.
+    fn merge(&mut self) {
+        let n = self.base.num_nodes();
+        let edges = self.live_edges();
+        self.base = Csr::from_edges(n, &edges);
+        self.diffs.clear();
+    }
+}
+
+/// The full dynamic graph: forward + backward diff-CSR kept in sync,
+/// live out-degree cache, and merge policy.
+#[derive(Debug, Clone)]
+pub struct DynGraph {
+    fwd: DiffCsr,
+    bwd: DiffCsr,
+    out_degree: Vec<u32>,
+    in_degree: Vec<u32>,
+    batches_since_merge: usize,
+    /// Merge the diff chain into the base CSR after this many batches
+    /// (§3.5: "after a configurable number of batches"). 0 disables.
+    pub merge_period: usize,
+}
+
+impl DynGraph {
+    /// Wrap a static CSR (computes the transpose and degree caches).
+    pub fn from_csr(base: Csr) -> Self {
+        let bwd = base.transpose();
+        let n = base.num_nodes();
+        let mut out_degree = vec![0u32; n];
+        let mut in_degree = vec![0u32; n];
+        for v in 0..n as NodeId {
+            out_degree[v as usize] = base.live_degree(v) as u32;
+            in_degree[v as usize] = bwd.live_degree(v) as u32;
+        }
+        DynGraph {
+            fwd: DiffCsr::new(base),
+            bwd: DiffCsr::new(bwd),
+            out_degree,
+            in_degree,
+            batches_since_merge: 0,
+            merge_period: 8,
+        }
+    }
+
+    /// Build from an edge list.
+    pub fn from_edges(n: usize, edges: &[(NodeId, NodeId, Weight)]) -> Self {
+        Self::from_csr(Csr::from_edges(n, edges))
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.fwd.base.num_nodes()
+    }
+
+    /// Live edge count.
+    pub fn num_edges(&self) -> usize {
+        self.out_degree.iter().map(|&d| d as usize).sum()
+    }
+
+    /// Live out-degree of `v` (`g.count_outNbrs` in the DSL).
+    #[inline]
+    pub fn out_degree(&self, v: NodeId) -> u32 {
+        self.out_degree[v as usize]
+    }
+
+    #[inline]
+    pub fn in_degree(&self, v: NodeId) -> u32 {
+        self.in_degree[v as usize]
+    }
+
+    /// Live out-neighbors `(dest, weight)` (`g.neighbors`).
+    #[inline]
+    pub fn out_neighbors(&self, v: NodeId) -> impl Iterator<Item = (NodeId, Weight)> + '_ {
+        self.fwd.neighbors(v)
+    }
+
+    /// Live in-neighbors `(src, weight)` (`g.nodes_to`).
+    #[inline]
+    pub fn in_neighbors(&self, v: NodeId) -> impl Iterator<Item = (NodeId, Weight)> + '_ {
+        self.bwd.neighbors(v)
+    }
+
+    /// `g.is_an_edge(u, v)`.
+    pub fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
+        self.fwd.find(u, v).is_some()
+    }
+
+    /// `g.get_edge(u, v).weight`.
+    pub fn edge_weight(&self, u: NodeId, v: NodeId) -> Option<Weight> {
+        self.fwd.find(u, v)
+    }
+
+    /// Delete edge `u -> v` from both directions. Returns true if present.
+    pub fn delete_edge(&mut self, u: NodeId, v: NodeId) -> bool {
+        if self.fwd.delete(u, v) {
+            let ok = self.bwd.delete(v, u);
+            debug_assert!(ok, "fwd/bwd desync on delete {u}->{v}");
+            self.out_degree[u as usize] -= 1;
+            self.in_degree[v as usize] -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Add edge `u -> v` (no-op returning false if already present —
+    /// the update generator produces simple graphs).
+    pub fn add_edge(&mut self, u: NodeId, v: NodeId, w: Weight) -> bool {
+        if self.has_edge(u, v) {
+            return false;
+        }
+        self.fwd.insert(u, v, w);
+        self.bwd.insert(v, u, w);
+        self.out_degree[u as usize] += 1;
+        self.in_degree[v as usize] += 1;
+        true
+    }
+
+    /// `g.updateCSRDel(batch)` — apply all deletions of a batch.
+    pub fn apply_deletions(&mut self, dels: &[(NodeId, NodeId)]) -> usize {
+        dels.iter().filter(|&&(u, v)| self.delete_edge(u, v)).count()
+    }
+
+    /// `g.updateCSRAdd(batch)` — apply all insertions of a batch, then seal
+    /// the diff block and maybe merge per the merge policy.
+    pub fn apply_additions(&mut self, adds: &[(NodeId, NodeId, Weight)]) -> usize {
+        let applied = adds.iter().filter(|&&(u, v, w)| self.add_edge(u, v, w)).count();
+        self.fwd.seal_batch();
+        self.bwd.seal_batch();
+        self.batches_since_merge += 1;
+        if self.merge_period > 0 && self.batches_since_merge >= self.merge_period {
+            self.merge();
+        }
+        applied
+    }
+
+    /// Compact both directions into fresh tombstone-free CSRs.
+    pub fn merge(&mut self) {
+        self.fwd.merge();
+        self.bwd.merge();
+        self.batches_since_merge = 0;
+    }
+
+    /// Number of live diff blocks (forward side), for ablation metrics.
+    pub fn diff_chain_len(&self) -> usize {
+        self.fwd.diffs.iter().filter(|d| !d.adj.is_empty()).count()
+    }
+
+    /// All live edges (sorted) — used by tests/oracles.
+    pub fn edges_sorted(&self) -> Vec<(NodeId, NodeId, Weight)> {
+        let mut e = self.fwd.live_edges();
+        e.sort_unstable();
+        e
+    }
+
+    /// Borrow the forward base CSR (read paths that want raw slot access,
+    /// e.g. the cpu engine hot loop).
+    pub fn fwd_base(&self) -> &Csr {
+        &self.fwd.base
+    }
+
+    /// Borrow the backward base CSR.
+    pub fn bwd_base(&self) -> &Csr {
+        &self.bwd.base
+    }
+
+    /// Forward diff blocks (hot-loop access for engines).
+    pub fn fwd_diffs(&self) -> &[DiffBlock] {
+        &self.fwd.diffs
+    }
+
+    /// Backward diff blocks.
+    pub fn bwd_diffs(&self) -> &[DiffBlock] {
+        &self.bwd.diffs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall_checks;
+    use std::collections::BTreeMap;
+
+    fn paper_example() -> DynGraph {
+        // Fig. 6: A..F = 0..5; edges of G0 (weights all 1).
+        // A->B, B->C, B->D, C->A, D->E, E->F, F->D  (7 edges, 6 vertices)
+        DynGraph::from_edges(
+            6,
+            &[(0, 1, 1), (1, 2, 1), (1, 3, 1), (2, 0, 1), (3, 4, 1), (4, 5, 1), (5, 3, 1)],
+        )
+    }
+
+    #[test]
+    fn figure6_delete_then_add() {
+        let mut g = paper_example();
+        assert_eq!(g.num_edges(), 7);
+        // delete B->D, add E->C (the paper's ΔG)
+        assert!(g.delete_edge(1, 3));
+        assert!(!g.has_edge(1, 3));
+        assert_eq!(g.out_degree(1), 1);
+        assert!(g.add_edge(4, 2, 1));
+        assert!(g.has_edge(4, 2));
+        assert_eq!(g.num_edges(), 7);
+        // E had no vacant slot, so the new edge must live in a diff block…
+        assert_eq!(g.diff_chain_len(), 1);
+        // …and a subsequent B->E insert can reuse B's vacancy in-place.
+        assert!(g.add_edge(1, 4, 1));
+        assert_eq!(g.diff_chain_len(), 1, "vacant slot reused, no new diff entry");
+        assert_eq!(g.fwd_base().live_degree(1), 2);
+    }
+
+    #[test]
+    fn in_neighbors_mirror_out_neighbors() {
+        let mut g = paper_example();
+        g.delete_edge(1, 3);
+        g.add_edge(4, 2, 9);
+        let ins: Vec<_> = g.in_neighbors(2).map(|(u, _)| u).collect();
+        assert!(ins.contains(&1) && ins.contains(&4));
+        assert_eq!(g.in_degree(3), 1, "only F->D remains");
+    }
+
+    #[test]
+    fn merge_preserves_graph() {
+        let mut g = paper_example();
+        g.delete_edge(1, 3);
+        g.add_edge(4, 2, 9);
+        g.add_edge(0, 5, 4);
+        let before = g.edges_sorted();
+        g.merge();
+        assert_eq!(g.edges_sorted(), before);
+        assert_eq!(g.diff_chain_len(), 0);
+        assert_eq!(g.fwd_base().count_live(), g.fwd_base().num_slots(), "no tombstones");
+    }
+
+    #[test]
+    fn add_existing_edge_is_rejected() {
+        let mut g = paper_example();
+        assert!(!g.add_edge(0, 1, 3));
+        assert_eq!(g.num_edges(), 7);
+    }
+
+    #[test]
+    fn delete_then_readd_roundtrip() {
+        let mut g = paper_example();
+        assert!(g.delete_edge(0, 1));
+        assert!(g.add_edge(0, 1, 42));
+        assert_eq!(g.edge_weight(0, 1), Some(42));
+        assert_eq!(g.out_degree(0), 1);
+        assert_eq!(g.in_degree(1), 1);
+    }
+
+    #[test]
+    fn batch_application_counts() {
+        let mut g = paper_example();
+        let d = g.apply_deletions(&[(1, 3), (1, 3), (9 % 6, 0)]); // second is dup
+        assert_eq!(d, 1);
+        let a = g.apply_additions(&[(4, 2, 1), (0, 1, 1)]); // second exists
+        assert_eq!(a, 1);
+    }
+
+    #[test]
+    fn merge_period_triggers_auto_merge() {
+        let mut g = paper_example();
+        g.merge_period = 2;
+        g.apply_additions(&[(4, 2, 1)]);
+        assert_eq!(g.diff_chain_len(), 1);
+        g.apply_additions(&[(4, 0, 1)]);
+        assert_eq!(g.diff_chain_len(), 0, "merged after 2 batches");
+    }
+
+    /// Reference model: adjacency map. diff-CSR must stay equivalent under
+    /// arbitrary interleaved update sequences.
+    #[test]
+    fn prop_diffcsr_equals_model() {
+        forall_checks(0xD1FF, 60, |gen| {
+            let n = gen.usize_in(2, 24);
+            let mut model: BTreeMap<(NodeId, NodeId), Weight> = BTreeMap::new();
+            let mut init = Vec::new();
+            for _ in 0..gen.usize_in(0, 40) {
+                let u = gen.usize_in(0, n - 1) as NodeId;
+                let v = gen.usize_in(0, n - 1) as NodeId;
+                let w = gen.i64_in(1, 50) as Weight;
+                if !model.contains_key(&(u, v)) {
+                    model.insert((u, v), w);
+                    init.push((u, v, w));
+                }
+            }
+            let mut g = DynGraph::from_edges(n, &init);
+            g.merge_period = gen.usize_in(0, 3);
+            for _ in 0..gen.usize_in(0, 60) {
+                let u = gen.usize_in(0, n - 1) as NodeId;
+                let v = gen.usize_in(0, n - 1) as NodeId;
+                if gen.bool() {
+                    let w = gen.i64_in(1, 50) as Weight;
+                    let fresh = !model.contains_key(&(u, v));
+                    assert_eq!(g.add_edge(u, v, w), fresh);
+                    model.entry((u, v)).or_insert(w);
+                } else {
+                    let present = model.remove(&(u, v)).is_some();
+                    assert_eq!(g.delete_edge(u, v), present);
+                }
+                if gen.chance(0.05) {
+                    g.merge();
+                }
+            }
+            let want: Vec<_> = model.iter().map(|(&(u, v), &w)| (u, v, w)).collect();
+            assert_eq!(g.edges_sorted(), want, "edge sets diverged");
+            // degree caches must agree with the model
+            for v in 0..n as NodeId {
+                let od = model.keys().filter(|&&(a, _)| a == v).count() as u32;
+                let id = model.keys().filter(|&&(_, b)| b == v).count() as u32;
+                assert_eq!(g.out_degree(v), od);
+                assert_eq!(g.in_degree(v), id);
+            }
+        });
+    }
+}

@@ -1,0 +1,234 @@
+//! Synthetic graph generators reproducing the *shapes* of the paper's
+//! Table 1 suite (the original multi-hundred-million-edge datasets are
+//! proprietary downloads; see DESIGN.md §2 for the substitution argument).
+//!
+//! * [`rmat`] — recursive-matrix generator with the paper's parameters
+//!   (a=0.57, b=0.19, c=0.19, d=0.05) for skewed social-network analogues;
+//! * [`uniform_random`] — Green-Marl-style uniform random graph;
+//! * [`road_grid`] — 2-D grid with perturbed weights: large diameter,
+//!   max degree ≤ 8, the road-network regime (usaroad / germany-osm);
+//! * [`table1_suite`] — the ten named graphs at reproduction scale.
+
+use super::csr::Csr;
+use super::diffcsr::DynGraph;
+use super::{NodeId, Weight};
+use crate::util::Rng;
+use std::collections::HashSet;
+
+/// De-duplicated directed edge accumulation helper.
+struct EdgeSet {
+    seen: HashSet<(NodeId, NodeId)>,
+    edges: Vec<(NodeId, NodeId, Weight)>,
+}
+
+impl EdgeSet {
+    fn new(cap: usize) -> Self {
+        EdgeSet { seen: HashSet::with_capacity(cap * 2), edges: Vec::with_capacity(cap) }
+    }
+
+    fn insert(&mut self, u: NodeId, v: NodeId, w: Weight) -> bool {
+        if u == v || !self.seen.insert((u, v)) {
+            return false;
+        }
+        self.edges.push((u, v, w));
+        true
+    }
+}
+
+/// RMAT generator (SNAP parameterization). Produces ~`m` distinct directed
+/// edges over `n = 2^scale` vertices with a skewed degree distribution.
+pub fn rmat(scale: u32, m: usize, a: f64, b: f64, c: f64, seed: u64) -> DynGraph {
+    let n = 1usize << scale;
+    let mut rng = Rng::new(seed);
+    let mut es = EdgeSet::new(m);
+    let mut attempts = 0usize;
+    while es.edges.len() < m && attempts < m * 32 {
+        attempts += 1;
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        let w = 1 + rng.below(10) as Weight;
+        es.insert(u as NodeId, v as NodeId, w);
+    }
+    DynGraph::from_csr(Csr::from_edges(n, &es.edges))
+}
+
+/// Uniform random directed graph: `m` distinct edges over `n` vertices,
+/// weights in `[1, max_w]`.
+pub fn uniform_random(n: usize, m: usize, max_w: Weight, seed: u64) -> DynGraph {
+    assert!(n >= 2);
+    let mut rng = Rng::new(seed);
+    let mut es = EdgeSet::new(m);
+    let cap = m.min(n * (n - 1));
+    let mut attempts = 0usize;
+    while es.edges.len() < cap && attempts < cap * 64 + 1024 {
+        attempts += 1;
+        let u = rng.below_usize(n) as NodeId;
+        let v = rng.below_usize(n) as NodeId;
+        let w = 1 + rng.below(max_w.max(1) as u64) as Weight;
+        es.insert(u, v, w);
+    }
+    DynGraph::from_csr(Csr::from_edges(n, &es.edges))
+}
+
+/// Road-network analogue: a `rows × cols` 4-connected grid (both edge
+/// directions) with a small fraction of random "highway" diagonals.
+/// Large diameter (rows+cols), max degree ≤ 8+ε — the usaroad/germany-osm
+/// regime that drives the paper's anomalies.
+pub fn road_grid(rows: usize, cols: usize, max_w: Weight, seed: u64) -> DynGraph {
+    let n = rows * cols;
+    let mut rng = Rng::new(seed);
+    let id = |r: usize, c: usize| (r * cols + c) as NodeId;
+    let mut es = EdgeSet::new(n * 4);
+    for r in 0..rows {
+        for c in 0..cols {
+            let w1 = 1 + rng.below(max_w.max(1) as u64) as Weight;
+            let w2 = 1 + rng.below(max_w.max(1) as u64) as Weight;
+            if c + 1 < cols {
+                es.insert(id(r, c), id(r, c + 1), w1);
+                es.insert(id(r, c + 1), id(r, c), w1);
+            }
+            if r + 1 < rows {
+                es.insert(id(r, c), id(r + 1, c), w2);
+                es.insert(id(r + 1, c), id(r, c), w2);
+            }
+        }
+    }
+    // sparse highways: ~0.5% of n extra shortcut pairs
+    for _ in 0..(n / 200) {
+        let a = rng.below_usize(n) as NodeId;
+        let b = rng.below_usize(n) as NodeId;
+        let w = 1 + rng.below(max_w.max(1) as u64) as Weight;
+        es.insert(a, b, w);
+        es.insert(b, a, w);
+    }
+    DynGraph::from_csr(Csr::from_edges(n, &es.edges))
+}
+
+/// One named graph of the reproduction suite.
+#[derive(Debug, Clone)]
+pub struct NamedGraph {
+    /// Paper short name (Table 1): TW, SW, OK, WK, LJ, PK, US, GR, RM, UR.
+    pub short: &'static str,
+    /// Long name of the original dataset this stands in for.
+    pub long: &'static str,
+    pub graph: DynGraph,
+}
+
+/// Scale factor for the suite: `1.0` ≈ 10–60 k vertices per graph
+/// (≈1000× smaller than the paper, same shape). Use smaller for tests.
+pub fn table1_suite(scale: f64, seed: u64) -> Vec<NamedGraph> {
+    let s = |x: usize| ((x as f64 * scale).round() as usize).max(16);
+    // (short, long, kind): kind 0 = rmat-ish social, 1 = uniform, 2 = road
+    let mk = |short: &'static str, long: &'static str, g: DynGraph| NamedGraph {
+        short,
+        long,
+        graph: g,
+    };
+    let rmat_scale = |target_nodes: usize| -> u32 {
+        (usize::BITS - target_nodes.next_power_of_two().leading_zeros() - 1).max(4)
+    };
+    vec![
+        // social networks: skewed (paper: avg degree 4–76, huge max degree)
+        mk("TW", "twitter-2010", rmat(rmat_scale(s(21_200)), s(265_000), 0.57, 0.19, 0.19, seed ^ 1)),
+        mk("SW", "soc-sinaweibo", rmat(rmat_scale(s(58_600)), s(261_000), 0.57, 0.19, 0.19, seed ^ 2)),
+        mk("OK", "orkut", rmat(rmat_scale(s(3_000)), s(234_000), 0.45, 0.22, 0.22, seed ^ 3)),
+        mk("WK", "wikipedia-ru", rmat(rmat_scale(s(3_300)), s(93_000), 0.57, 0.19, 0.19, seed ^ 4)),
+        mk("LJ", "livejournal", rmat(rmat_scale(s(4_800)), s(69_000), 0.48, 0.21, 0.21, seed ^ 5)),
+        mk("PK", "soc-pokec", rmat(rmat_scale(s(1_600)), s(30_600), 0.48, 0.21, 0.21, seed ^ 6)),
+        // road networks: grid, avg degree 2, large diameter
+        mk("US", "usaroad", {
+            let side = (s(24_000) as f64).sqrt() as usize;
+            road_grid(side.max(4), side.max(4), 10, seed ^ 7)
+        }),
+        mk("GR", "germany-osm", {
+            let side = (s(11_500) as f64).sqrt() as usize;
+            road_grid(side.max(4), side.max(4), 10, seed ^ 8)
+        }),
+        // synthetic
+        mk("RM", "rmat876", rmat(rmat_scale(s(16_700)), s(87_600), 0.57, 0.19, 0.19, seed ^ 9)),
+        mk("UR", "uniform-random", uniform_random(s(10_000), s(80_000), 10, seed ^ 10)),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = rmat(10, 4000, 0.57, 0.19, 0.19, 42);
+        assert_eq!(g.num_nodes(), 1024);
+        assert!(g.num_edges() > 3000, "got {}", g.num_edges());
+        let max_deg = (0..g.num_nodes() as NodeId).map(|v| g.out_degree(v)).max().unwrap();
+        let avg = g.num_edges() as f64 / g.num_nodes() as f64;
+        assert!(
+            (max_deg as f64) > avg * 8.0,
+            "rmat should be skewed: max={max_deg} avg={avg:.1}"
+        );
+    }
+
+    #[test]
+    fn uniform_is_not_skewed() {
+        let g = uniform_random(1000, 8000, 10, 7);
+        let max_deg = (0..1000u32).map(|v| g.out_degree(v)).max().unwrap();
+        let avg = g.num_edges() as f64 / 1000.0;
+        assert!((max_deg as f64) < avg * 5.0, "max={max_deg} avg={avg:.1}");
+    }
+
+    #[test]
+    fn road_grid_low_degree_symmetric() {
+        let g = road_grid(20, 30, 10, 3);
+        assert_eq!(g.num_nodes(), 600);
+        let max_deg = (0..600u32).map(|v| g.out_degree(v)).max().unwrap();
+        assert!(max_deg <= 9, "road max degree bounded: {max_deg}");
+        // spot-check symmetry of grid edges
+        for (u, v, _) in g.edges_sorted().into_iter().take(100) {
+            assert!(g.has_edge(v, u), "grid edge {u}->{v} missing reverse");
+        }
+    }
+
+    #[test]
+    fn no_self_loops_or_duplicates() {
+        for g in [
+            rmat(8, 800, 0.57, 0.19, 0.19, 1),
+            uniform_random(100, 500, 10, 2),
+            road_grid(8, 8, 10, 3),
+        ] {
+            let edges = g.edges_sorted();
+            let set: HashSet<_> = edges.iter().map(|&(u, v, _)| (u, v)).collect();
+            assert_eq!(set.len(), edges.len(), "duplicate edges");
+            assert!(edges.iter().all(|&(u, v, _)| u != v), "self loop");
+        }
+    }
+
+    #[test]
+    fn suite_has_ten_named_graphs() {
+        let suite = table1_suite(0.02, 11);
+        assert_eq!(suite.len(), 10);
+        let names: Vec<_> = suite.iter().map(|g| g.short).collect();
+        assert_eq!(names, vec!["TW", "SW", "OK", "WK", "LJ", "PK", "US", "GR", "RM", "UR"]);
+        for g in &suite {
+            assert!(g.graph.num_edges() > 0, "{} is empty", g.short);
+        }
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let a = rmat(8, 500, 0.57, 0.19, 0.19, 9).edges_sorted();
+        let b = rmat(8, 500, 0.57, 0.19, 0.19, 9).edges_sorted();
+        assert_eq!(a, b);
+    }
+}

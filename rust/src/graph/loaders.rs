@@ -1,0 +1,156 @@
+//! Edge-list file IO: load graphs and update streams from disk, and save
+//! them, so experiments can be re-run against fixed inputs.
+//!
+//! Format (text, one record per line, `#` comments allowed):
+//!   graph file:   `u v [w]`
+//!   update file:  `a u v w`  or  `d u v`
+
+use super::diffcsr::DynGraph;
+use super::updates::{Update, UpdateKind, UpdateStream};
+use super::{NodeId, Weight};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Load a directed weighted edge list. `n` is inferred as max id + 1.
+pub fn load_edge_list(path: &Path) -> Result<DynGraph> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut edges: Vec<(NodeId, NodeId, Weight)> = Vec::new();
+    let mut max_id: NodeId = 0;
+    for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: NodeId = it
+            .next()
+            .context("missing src")?
+            .parse()
+            .with_context(|| format!("line {}", lineno + 1))?;
+        let v: NodeId = it
+            .next()
+            .context("missing dst")?
+            .parse()
+            .with_context(|| format!("line {}", lineno + 1))?;
+        let w: Weight = match it.next() {
+            Some(s) => s.parse().with_context(|| format!("line {}", lineno + 1))?,
+            None => 1,
+        };
+        max_id = max_id.max(u).max(v);
+        edges.push((u, v, w));
+    }
+    if edges.is_empty() {
+        bail!("no edges in {}", path.display());
+    }
+    Ok(DynGraph::from_edges(max_id as usize + 1, &edges))
+}
+
+/// Save a graph as a weighted edge list.
+pub fn save_edge_list(g: &DynGraph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# {} nodes, {} edges", g.num_nodes(), g.num_edges())?;
+    for (u, v, wt) in g.edges_sorted() {
+        writeln!(w, "{u} {v} {wt}")?;
+    }
+    Ok(())
+}
+
+/// Load an update stream (`a u v w` / `d u v` lines).
+pub fn load_updates(path: &Path, batch_size: usize) -> Result<UpdateStream> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut updates = Vec::new();
+    for (lineno, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let tag = it.next().context("missing tag")?;
+        let ctx = || format!("line {}", lineno + 1);
+        let u: NodeId = it.next().context("missing src")?.parse().with_context(ctx)?;
+        let v: NodeId = it.next().context("missing dst")?.parse().with_context(ctx)?;
+        match tag {
+            "a" => {
+                let w: Weight = match it.next() {
+                    Some(s) => s.parse().with_context(ctx)?,
+                    None => 1,
+                };
+                updates.push(Update { kind: UpdateKind::Add, src: u, dst: v, weight: w });
+            }
+            "d" => {
+                let w: Weight = match it.next() {
+                    Some(s) => s.parse().with_context(ctx)?,
+                    None => 0,
+                };
+                updates.push(Update { kind: UpdateKind::Delete, src: u, dst: v, weight: w });
+            }
+            other => bail!("line {}: unknown tag {other:?}", lineno + 1),
+        }
+    }
+    Ok(UpdateStream::new(updates, batch_size))
+}
+
+/// Save an update stream.
+pub fn save_updates(s: &UpdateStream, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for u in &s.updates {
+        match u.kind {
+            UpdateKind::Add => writeln!(w, "a {} {} {}", u.src, u.dst, u.weight)?,
+            UpdateKind::Delete => writeln!(w, "d {} {} {}", u.src, u.dst, u.weight)?,
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("starplat_dyn_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn graph_roundtrip() {
+        let g = generators::uniform_random(50, 200, 10, 5);
+        let p = tmp("g_roundtrip.el");
+        save_edge_list(&g, &p).unwrap();
+        let g2 = load_edge_list(&p).unwrap();
+        assert_eq!(g.edges_sorted(), g2.edges_sorted());
+    }
+
+    #[test]
+    fn updates_roundtrip() {
+        let g = generators::uniform_random(50, 200, 10, 6);
+        let s = UpdateStream::generate_percent(&g, 10.0, 16, 10, 2);
+        let p = tmp("u_roundtrip.txt");
+        save_updates(&s, &p).unwrap();
+        let s2 = load_updates(&p, 16).unwrap();
+        assert_eq!(s.updates, s2.updates);
+    }
+
+    #[test]
+    fn comments_and_default_weight() {
+        let p = tmp("commented.el");
+        std::fs::write(&p, "# header\n0 1\n1 2 7\n\n# tail\n").unwrap();
+        let g = load_edge_list(&p).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.edge_weight(0, 1), Some(1));
+        assert_eq!(g.edge_weight(1, 2), Some(7));
+    }
+
+    #[test]
+    fn bad_tag_is_error() {
+        let p = tmp("bad.upd");
+        std::fs::write(&p, "x 1 2\n").unwrap();
+        assert!(load_updates(&p, 4).is_err());
+    }
+}

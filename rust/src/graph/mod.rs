@@ -1,0 +1,24 @@
+//! Graph substrate: CSR, the paper's diff-CSR dynamic representation,
+//! update streams, generators, loaders, and vertex partitioning.
+//!
+//! Terminology follows the paper (§3.5): the base structure is a CSR with
+//! tombstoned deletions (`TOMBSTONE` sentinel standing in for the paper's
+//! ∞ marker); insertions reuse vacant slots when possible and otherwise go
+//! to an auxiliary *diff-CSR* chain that can be merged back periodically.
+
+pub mod csr;
+pub mod diffcsr;
+pub mod generators;
+pub mod loaders;
+pub mod partition;
+pub mod updates;
+
+pub use csr::{Csr, TOMBSTONE};
+pub use diffcsr::DynGraph;
+pub use partition::Partition;
+pub use updates::{Update, UpdateKind, UpdateMix, UpdateStream};
+
+/// Vertex id type used throughout (graphs here are ≤ 2^32 vertices).
+pub type NodeId = u32;
+/// Edge weight type (paper uses integer weights for SSSP).
+pub type Weight = i32;

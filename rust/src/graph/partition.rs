@@ -1,0 +1,127 @@
+//! Vertex partitioning for the distributed (`dist`) backend.
+//!
+//! The paper's MPI backend stores the graph "in a distributed manner across
+//! all the processes, where each node is owned by a particular process. A
+//! process stores only those edges for which the source node is owned by
+//! that process" (§3.6). Both the contiguous block partition (StarPlat's
+//! default) and a hash partition (for the ablation) are provided.
+
+use super::NodeId;
+
+/// Assignment of vertices to ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Partition {
+    /// Contiguous blocks of `ceil(n/ranks)` vertices per rank.
+    Block,
+    /// `v % ranks` round-robin (better balance for sorted-degree graphs).
+    Hash,
+}
+
+/// A concrete partitioning of `n` vertices over `ranks` ranks.
+#[derive(Debug, Clone)]
+pub struct PartitionMap {
+    pub n: usize,
+    pub ranks: usize,
+    pub kind: Partition,
+    per_block: usize,
+}
+
+impl PartitionMap {
+    pub fn new(n: usize, ranks: usize, kind: Partition) -> Self {
+        assert!(ranks >= 1);
+        PartitionMap { n, ranks, kind, per_block: n.div_ceil(ranks.max(1)) }
+    }
+
+    /// Which rank owns vertex `v`.
+    #[inline]
+    pub fn owner(&self, v: NodeId) -> usize {
+        match self.kind {
+            Partition::Block => (v as usize / self.per_block.max(1)).min(self.ranks - 1),
+            Partition::Hash => v as usize % self.ranks,
+        }
+    }
+
+    /// The vertices owned by `rank`, in ascending order.
+    pub fn owned(&self, rank: usize) -> Vec<NodeId> {
+        match self.kind {
+            Partition::Block => {
+                let lo = rank * self.per_block;
+                let hi = ((rank + 1) * self.per_block).min(self.n);
+                (lo..hi).map(|v| v as NodeId).collect()
+            }
+            Partition::Hash => {
+                (rank..self.n).step_by(self.ranks).map(|v| v as NodeId).collect()
+            }
+        }
+    }
+
+    /// Number of vertices owned by `rank`.
+    pub fn owned_count(&self, rank: usize) -> usize {
+        match self.kind {
+            Partition::Block => {
+                let lo = rank * self.per_block;
+                let hi = ((rank + 1) * self.per_block).min(self.n);
+                hi.saturating_sub(lo)
+            }
+            Partition::Hash => {
+                if rank < self.n {
+                    (self.n - rank).div_ceil(self.ranks)
+                } else {
+                    0
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::forall_checks;
+
+    #[test]
+    fn block_partition_covers_all_vertices_once() {
+        let p = PartitionMap::new(103, 4, Partition::Block);
+        let mut seen = vec![0u32; 103];
+        for r in 0..4 {
+            for v in p.owned(r) {
+                assert_eq!(p.owner(v), r, "owner() and owned() agree");
+                seen[v as usize] += 1;
+            }
+            assert_eq!(p.owned(r).len(), p.owned_count(r));
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn hash_partition_covers_all_vertices_once() {
+        let p = PartitionMap::new(97, 5, Partition::Hash);
+        let mut seen = vec![0u32; 97];
+        for r in 0..5 {
+            for v in p.owned(r) {
+                assert_eq!(p.owner(v), r);
+                seen[v as usize] += 1;
+            }
+            assert_eq!(p.owned(r).len(), p.owned_count(r));
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn prop_partitions_exact_cover() {
+        forall_checks(0xC0FE, 40, |g| {
+            let n = g.usize_in(1, 500);
+            let ranks = g.usize_in(1, 16);
+            let kind = if g.bool() { Partition::Block } else { Partition::Hash };
+            let p = PartitionMap::new(n, ranks, kind);
+            let mut count = 0usize;
+            for r in 0..ranks {
+                for v in p.owned(r) {
+                    assert_eq!(p.owner(v), r);
+                    count += 1;
+                }
+            }
+            assert_eq!(count, n);
+        });
+    }
+}

@@ -1,0 +1,332 @@
+//! Update streams and batching (the DSL's `updates<g>` +
+//! `Batch(updateList:batchSize)` + `currentBatch()` machinery).
+//!
+//! The experimental protocol of §6 is implemented by
+//! [`UpdateStream::generate_percent`]: given a graph and an update
+//! percentage `p`, produce `p% · |E|` updates split between deletions of
+//! existing edges and insertions of fresh edges, applied batch-wise.
+
+use super::diffcsr::DynGraph;
+use super::{NodeId, Weight};
+use crate::util::Rng;
+
+/// Kind of a single structural update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateKind {
+    Add,
+    Delete,
+}
+
+/// One edge update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Update {
+    pub kind: UpdateKind,
+    pub src: NodeId,
+    pub dst: NodeId,
+    /// Weight for additions (ignored for deletions).
+    pub weight: Weight,
+}
+
+/// Mix of update kinds in a generated stream (§3.3.1: fully dynamic,
+/// incremental-only, or decremental-only processing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateMix {
+    /// half deletions, half insertions (the §6 protocol)
+    Full,
+    /// insertions only
+    IncrementalOnly,
+    /// deletions only
+    DecrementalOnly,
+}
+
+/// A sequence of updates processed in batches of `batch_size`
+/// (`Batch(allUpdates:batchSize)` in the DSL).
+#[derive(Debug, Clone)]
+pub struct UpdateStream {
+    pub updates: Vec<Update>,
+    pub batch_size: usize,
+}
+
+/// A view of one batch, pre-split into the deletion and addition subsets
+/// (`currentBatch(0)` / `currentBatch(1)` in the DSL's TC/PR drivers).
+#[derive(Debug, Clone)]
+pub struct Batch<'a> {
+    pub updates: &'a [Update],
+}
+
+impl<'a> Batch<'a> {
+    /// The deletions of this batch as `(src, dst)`.
+    pub fn deletions(&self) -> Vec<(NodeId, NodeId)> {
+        self.updates
+            .iter()
+            .filter(|u| u.kind == UpdateKind::Delete)
+            .map(|u| (u.src, u.dst))
+            .collect()
+    }
+
+    /// The additions of this batch as `(src, dst, weight)`.
+    pub fn additions(&self) -> Vec<(NodeId, NodeId, Weight)> {
+        self.updates
+            .iter()
+            .filter(|u| u.kind == UpdateKind::Add)
+            .map(|u| (u.src, u.dst, u.weight))
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.updates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.updates.is_empty()
+    }
+}
+
+impl UpdateStream {
+    pub fn new(updates: Vec<Update>, batch_size: usize) -> Self {
+        UpdateStream { updates, batch_size: batch_size.max(1) }
+    }
+
+    /// Number of batches.
+    pub fn num_batches(&self) -> usize {
+        self.updates.len().div_ceil(self.batch_size)
+    }
+
+    /// Iterate batches in order.
+    pub fn batches(&self) -> impl Iterator<Item = Batch<'_>> {
+        self.updates.chunks(self.batch_size).map(|c| Batch { updates: c })
+    }
+
+    pub fn len(&self) -> usize {
+        self.updates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.updates.is_empty()
+    }
+
+    /// §6 protocol: generate `percent`% of `|E|` updates against `g`.
+    ///
+    /// Half are deletions sampled from the *current live* edge set (without
+    /// replacement), half are insertions of edges not currently present
+    /// (endpoints uniform; weights in `[1, max_w]`). Deterministic in
+    /// `seed`.
+    pub fn generate_percent(
+        g: &DynGraph,
+        percent: f64,
+        batch_size: usize,
+        max_w: Weight,
+        seed: u64,
+    ) -> UpdateStream {
+        Self::generate_percent_mix(g, percent, batch_size, max_w, seed, UpdateMix::Full)
+    }
+
+    /// §3.3.1: partially-dynamic workloads — incremental-only or
+    /// decremental-only streams for applications that process a single
+    /// update kind.
+    pub fn generate_percent_mix(
+        g: &DynGraph,
+        percent: f64,
+        batch_size: usize,
+        max_w: Weight,
+        seed: u64,
+        mix: UpdateMix,
+    ) -> UpdateStream {
+        let m = g.num_edges();
+        let total = ((m as f64) * percent / 100.0).round() as usize;
+        Self::generate_count_mix(g, total, batch_size, max_w, seed, mix)
+    }
+
+    /// Generate an exact number of updates (used by tests and sweeps).
+    pub fn generate_count(
+        g: &DynGraph,
+        total: usize,
+        batch_size: usize,
+        max_w: Weight,
+        seed: u64,
+    ) -> UpdateStream {
+        Self::generate_count_mix(g, total, batch_size, max_w, seed, UpdateMix::Full)
+    }
+
+    /// Exact count with an update-kind mix.
+    pub fn generate_count_mix(
+        g: &DynGraph,
+        total: usize,
+        batch_size: usize,
+        max_w: Weight,
+        seed: u64,
+        mix: UpdateMix,
+    ) -> UpdateStream {
+        let mut rng = Rng::new(seed);
+        let n = g.num_nodes();
+        let n_del = match mix {
+            UpdateMix::Full => total / 2,
+            UpdateMix::IncrementalOnly => 0,
+            UpdateMix::DecrementalOnly => total,
+        };
+        let n_add = total - n_del;
+
+        // Deletions: sample distinct live edges.
+        let live = g.edges_sorted();
+        let n_del = n_del.min(live.len());
+        let idx = rng.sample_distinct(live.len().max(1), if live.is_empty() { 0 } else { n_del });
+        let mut updates: Vec<Update> = idx
+            .into_iter()
+            .map(|i| {
+                let (u, v, w) = live[i];
+                Update { kind: UpdateKind::Delete, src: u, dst: v, weight: w }
+            })
+            .collect();
+
+        // Additions: fresh, non-self, non-duplicate edges.
+        let mut present: std::collections::HashSet<(NodeId, NodeId)> =
+            live.iter().map(|&(u, v, _)| (u, v)).collect();
+        // Deleted edges become insertable again only after their batch; to
+        // keep the stream simple we never re-add a deleted edge.
+        let mut added = 0usize;
+        let mut attempts = 0usize;
+        while added < n_add && attempts < n_add * 64 + 1024 {
+            attempts += 1;
+            let u = rng.below_usize(n) as NodeId;
+            let v = rng.below_usize(n) as NodeId;
+            if u == v || present.contains(&(u, v)) {
+                continue;
+            }
+            present.insert((u, v));
+            updates.push(Update {
+                kind: UpdateKind::Add,
+                src: u,
+                dst: v,
+                weight: 1 + rng.below(max_w.max(1) as u64) as Weight,
+            });
+            added += 1;
+        }
+        // Interleave adds/deletes deterministically so every batch contains
+        // both kinds (the paper's batches are mixed).
+        rng.shuffle(&mut updates);
+        UpdateStream::new(updates, batch_size)
+    }
+
+    /// Apply the whole stream *statically*: mutate `g` up-front with no
+    /// per-batch processing (the paper's static-algorithm protocol, where
+    /// properties are then recomputed from scratch).
+    pub fn apply_all_static(&self, g: &mut DynGraph) {
+        for batch in self.batches() {
+            g.apply_deletions(&batch.deletions());
+            g.apply_additions(&batch.additions());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::propcheck::forall_checks;
+
+    fn small_graph(seed: u64) -> DynGraph {
+        generators::uniform_random(200, 800, 10, seed)
+    }
+
+    #[test]
+    fn generate_percent_counts() {
+        let g = small_graph(1);
+        let m = g.num_edges();
+        let s = UpdateStream::generate_percent(&g, 10.0, 64, 10, 7);
+        let want = ((m as f64) * 0.10).round() as usize;
+        assert_eq!(s.len(), want);
+        let dels = s.updates.iter().filter(|u| u.kind == UpdateKind::Delete).count();
+        assert_eq!(dels, want / 2);
+    }
+
+    #[test]
+    fn batching_covers_stream_in_order() {
+        let g = small_graph(2);
+        let s = UpdateStream::generate_percent(&g, 5.0, 7, 10, 3);
+        let n: usize = s.batches().map(|b| b.len()).sum();
+        assert_eq!(n, s.len());
+        assert_eq!(s.num_batches(), s.len().div_ceil(7));
+        let flat: Vec<Update> = s.batches().flat_map(|b| b.updates.to_vec()).collect();
+        assert_eq!(flat, s.updates);
+    }
+
+    #[test]
+    fn deletions_exist_additions_fresh() {
+        let g = small_graph(3);
+        let s = UpdateStream::generate_percent(&g, 8.0, 32, 10, 11);
+        for u in &s.updates {
+            match u.kind {
+                UpdateKind::Delete => assert!(g.has_edge(u.src, u.dst), "delete of absent edge"),
+                UpdateKind::Add => {
+                    assert!(!g.has_edge(u.src, u.dst), "add of existing edge");
+                    assert!(u.src != u.dst);
+                    assert!(u.weight >= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn apply_all_static_matches_batchwise() {
+        let g0 = small_graph(4);
+        let s = UpdateStream::generate_percent(&g0, 12.0, 16, 10, 13);
+        let mut a = g0.clone();
+        s.apply_all_static(&mut a);
+        let mut b = g0.clone();
+        for batch in s.batches() {
+            b.apply_deletions(&batch.deletions());
+            b.apply_additions(&batch.additions());
+        }
+        assert_eq!(a.edges_sorted(), b.edges_sorted());
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let g = small_graph(5);
+        let a = UpdateStream::generate_percent(&g, 6.0, 8, 10, 99);
+        let b = UpdateStream::generate_percent(&g, 6.0, 8, 10, 99);
+        assert_eq!(a.updates, b.updates);
+    }
+
+    #[test]
+    fn mixes_generate_only_requested_kinds() {
+        let g = small_graph(9);
+        let inc =
+            UpdateStream::generate_percent_mix(&g, 10.0, 8, 9, 4, UpdateMix::IncrementalOnly);
+        assert!(!inc.is_empty());
+        assert!(inc.updates.iter().all(|u| u.kind == UpdateKind::Add));
+        let dec =
+            UpdateStream::generate_percent_mix(&g, 10.0, 8, 9, 4, UpdateMix::DecrementalOnly);
+        assert!(!dec.is_empty());
+        assert!(dec.updates.iter().all(|u| u.kind == UpdateKind::Delete));
+        // both modes still apply cleanly
+        let mut ga = g.clone();
+        inc.apply_all_static(&mut ga);
+        assert_eq!(ga.num_edges(), g.num_edges() + inc.len());
+        let mut gd = g.clone();
+        dec.apply_all_static(&mut gd);
+        assert_eq!(gd.num_edges(), g.num_edges() - dec.len());
+    }
+
+    #[test]
+    fn prop_stream_is_applicable_without_conflicts() {
+        forall_checks(0x5EED, 25, |gen| {
+            let n = gen.usize_in(10, 80);
+            let e = gen.usize_in(n, n * 4);
+            let g0 = generators::uniform_random(n, e, 10, gen.rng().next_u64());
+            let pct = gen.f64_unit() * 20.0;
+            let s = UpdateStream::generate_percent(&g0, pct, gen.usize_in(1, 32), 10, 5);
+            let mut g = g0.clone();
+            let mut applied_del = 0;
+            let mut applied_add = 0;
+            for batch in s.batches() {
+                applied_del += g.apply_deletions(&batch.deletions());
+                applied_add += g.apply_additions(&batch.additions());
+            }
+            let dels = s.updates.iter().filter(|u| u.kind == UpdateKind::Delete).count();
+            assert_eq!(applied_del, dels, "every generated deletion applies");
+            assert_eq!(applied_add, s.len() - dels, "every generated addition applies");
+            assert_eq!(g.num_edges(), g0.num_edges() - applied_del + applied_add);
+        });
+    }
+}

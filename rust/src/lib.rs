@@ -1,0 +1,35 @@
+//! # starplat-dyn — StarPlat Dynamic reproduction
+//!
+//! A reproduction of *"Generating Dynamic Graph Algorithms for Multiple
+//! Backends for a Graph DSL"* (Behera et al., IIT Madras, 2025) as a
+//! three-layer rust + JAX/Pallas stack:
+//!
+//! * **DSL front-end** ([`dsl`]): lexer/parser/semantic analysis for the
+//!   StarPlat Dynamic language (`Batch`, `OnAdd`, `OnDelete`,
+//!   `Incremental`, `Decremental`, `forall`, `fixedPoint`, `Min`/`Max`).
+//! * **Plan IR** ([`ir`]): backend-neutral executable representation plus
+//!   C++-text code emitters mirroring the paper's OpenMP/MPI/CUDA output.
+//! * **Graph substrate** ([`graph`]): CSR, the paper's diff-CSR dynamic
+//!   representation, update streams, Table-1-shaped generators.
+//! * **Backends** ([`backend`]): `serial` oracle interpreter, `cpu`
+//!   (OpenMP analogue), `dist` (MPI analogue with simulated RMA windows),
+//!   and `xla` (CUDA analogue: dense kernels AOT-compiled from JAX/Pallas,
+//!   executed via PJRT).
+//! * **Algorithms** ([`algorithms`]): hand-written static + incremental +
+//!   decremental SSSP / PageRank / Triangle Counting oracles and the
+//!   baseline-framework strategy engines (Galois/Ligra/Green-Marl/…).
+//! * **Coordinator** ([`coordinator`]): the dynamic batch pipeline
+//!   (preprocess → updateCSR → propagate) and experiment drivers.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+
+pub mod algorithms;
+pub mod backend;
+pub mod bench;
+pub mod coordinator;
+pub mod dsl;
+pub mod graph;
+
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,180 @@
+//! `starplat` — the StarPlat Dynamic CLI.
+//!
+//! Subcommands:
+//!   compile --target omp|mpi|cuda <file.sp> [-o out.cc]
+//!       parse + analyze a DSL program and emit backend C++.
+//!   run --algo sssp|pr|tc --backend serial|cpu|dist|xla
+//!       [--graph rmat|uniform|road] [--nodes N] [--percent P]
+//!       [--batch B] [--seed S]
+//!       run one dynamic-vs-static experiment cell and print timings.
+//!   interp <file.sp> --fn <DynName> [--nodes N] [--percent P] …
+//!       execute a DSL program through the reference interpreter.
+//!   inspect
+//!       list the AOT artifacts the xla backend will use.
+
+use anyhow::{bail, Context, Result};
+use starplat_dyn::backend::BackendKind;
+use starplat_dyn::coordinator::{run_cell, Algo};
+use starplat_dyn::dsl::{self, emit::Target};
+use starplat_dyn::graph::generators;
+use starplat_dyn::runtime::ArtifactManifest;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Minimal flag parser: `--key value` pairs plus positionals.
+struct Args {
+    flags: std::collections::HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(args: &[String]) -> Args {
+        let mut flags = std::collections::HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                if i + 1 < args.len() {
+                    flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), String::new());
+                    i += 1;
+                }
+            } else {
+                positional.push(args[i].clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+fn make_graph(args: &Args) -> starplat_dyn::graph::DynGraph {
+    let n: usize = args.get("nodes", "2000").parse().unwrap_or(2000);
+    let seed: u64 = args.get("seed", "42").parse().unwrap_or(42);
+    match args.get("graph", "uniform").as_str() {
+        "rmat" => {
+            let scale = (usize::BITS - n.next_power_of_two().leading_zeros() - 1).max(4);
+            generators::rmat(scale, n * 8, 0.57, 0.19, 0.19, seed)
+        }
+        "road" => {
+            let side = (n as f64).sqrt().ceil() as usize;
+            generators::road_grid(side.max(3), side.max(3), 9, seed)
+        }
+        _ => generators::uniform_random(n, n * 8, 9, seed),
+    }
+}
+
+fn real_main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first() else {
+        println!("usage: starplat <compile|run|interp|inspect> [options]");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd.as_str() {
+        "compile" => {
+            let file = args
+                .positional
+                .first()
+                .context("usage: starplat compile --target omp file.sp")?;
+            let target: Target = args
+                .get("target", "omp")
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))?;
+            let src = std::fs::read_to_string(file)?;
+            let program = dsl::parse_program(&src)?;
+            let analysis = dsl::analyze(&program)?;
+            let code = dsl::emit::emit(&program, &analysis, target);
+            match args.flags.get("o") {
+                Some(path) => {
+                    std::fs::write(path, &code)?;
+                    println!("wrote {} bytes to {path}", code.len());
+                }
+                None => print!("{code}"),
+            }
+        }
+        "run" => {
+            let algo: Algo =
+                args.get("algo", "sssp").parse().map_err(|e: String| anyhow::anyhow!(e))?;
+            let backend: BackendKind = args
+                .get("backend", "cpu")
+                .parse()
+                .map_err(|e: String| anyhow::anyhow!(e))?;
+            let percent: f64 = args.get("percent", "5").parse()?;
+            let batch: usize = args.get("batch", "64").parse()?;
+            let seed: u64 = args.get("seed", "42").parse()?;
+            let g = make_graph(&args);
+            println!(
+                "graph: {} nodes / {} edges; {percent}% updates, batch {batch}",
+                g.num_nodes(),
+                g.num_edges()
+            );
+            let cell = run_cell(algo, backend, &g, percent, batch, seed)?;
+            println!(
+                "static  : {:.6}s (+{:.6}s modeled comm)",
+                cell.static_secs, cell.static_comm_secs
+            );
+            println!(
+                "dynamic : {:.6}s (+{:.6}s modeled comm)",
+                cell.dynamic_secs, cell.dynamic_comm_secs
+            );
+            println!("speedup : {:.2}x", cell.speedup());
+        }
+        "interp" => {
+            let file = args
+                .positional
+                .first()
+                .context("usage: starplat interp file.sp --fn DynSSSP")?;
+            let src = std::fs::read_to_string(file)?;
+            let program = dsl::parse_program(&src)?;
+            let fn_name = args.get("fn", "DynSSSP");
+            let percent: f64 = args.get("percent", "5").parse()?;
+            let batch: usize = args.get("batch", "64").parse()?;
+            let g = make_graph(&args);
+            let stream =
+                starplat_dyn::graph::UpdateStream::generate_percent(&g, percent, batch, 9, 7);
+            use starplat_dyn::dsl::interp::{Interp, Value};
+            let mut interp = Interp::new(&program, g);
+            let scalars: Vec<(&str, Value)> = vec![
+                ("batchSize", Value::Int(batch as i64)),
+                ("src", Value::Int(0)),
+                ("beta", Value::Float(1e-3)),
+                ("delta", Value::Float(0.85)),
+                ("maxIter", Value::Int(100)),
+            ];
+            let (ret, props) = interp.run_dynamic(&fn_name, stream, &scalars)?;
+            println!("return: {ret:?}");
+            for (k, v) in &props {
+                println!("prop {k}: {} entries", v.len());
+            }
+        }
+        "inspect" => {
+            let m = ArtifactManifest::load(&ArtifactManifest::default_dir())?;
+            println!("artifacts in {}:", m.dir.display());
+            let mut entries: Vec<_> = m.entries().collect();
+            entries.sort_by_key(|e| (e.name.clone(), e.n_pad));
+            for e in entries {
+                println!(
+                    "  {:<14} n_pad={:<6} rounds/call={} {}",
+                    e.name,
+                    e.n_pad,
+                    e.rounds_per_call,
+                    e.path.display()
+                );
+            }
+        }
+        other => bail!("unknown subcommand {other:?} (compile|run|interp|inspect)"),
+    }
+    Ok(())
+}

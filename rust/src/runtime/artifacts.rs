@@ -1,0 +1,127 @@
+//! Artifact manifest: which AOT-compiled HLO module serves which
+//! (function, capacity-bucket) pair, and bucket selection/padding.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Capacity buckets the python side lowers (`aot.py BUCKETS`). The xla
+/// backend pads any graph into the smallest bucket that fits.
+pub const BUCKETS: &[usize] = &[256, 1024, 2048];
+/// TC is cubic in the bucket size; capped one bucket lower.
+pub const TC_BUCKETS: &[usize] = &[256, 1024];
+
+/// One artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub n_pad: usize,
+    pub rounds_per_call: usize,
+    pub path: PathBuf,
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    entries: HashMap<(String, usize), ArtifactEntry>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.txt` (written by `make artifacts`).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("read {} — run `make artifacts` first", manifest.display()))?;
+        let mut entries = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let t = line.trim();
+            if t.is_empty() || t.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = t.split_whitespace().collect();
+            if parts.len() != 4 {
+                bail!("manifest line {}: expected 4 fields, got {t:?}", lineno + 1);
+            }
+            let name = parts[0].to_string();
+            let n_pad: usize = parts[1].parse().context("n_pad")?;
+            let rounds: usize = parts[2].parse().context("rounds")?;
+            let path = dir.join(parts[3]);
+            if !path.exists() {
+                bail!("manifest references missing artifact {}", path.display());
+            }
+            entries.insert(
+                (name.clone(), n_pad),
+                ArtifactEntry { name, n_pad, rounds_per_call: rounds, path },
+            );
+        }
+        if entries.is_empty() {
+            bail!("empty manifest {}", manifest.display());
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// Default artifact directory: `$STARPLAT_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("STARPLAT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest bucket holding `n` vertices for `name`, with its entry.
+    pub fn pick(&self, name: &str, n: usize) -> Result<&ArtifactEntry> {
+        let buckets: Vec<usize> = {
+            let mut b: Vec<usize> = self
+                .entries
+                .keys()
+                .filter(|(k, _)| k == name)
+                .map(|&(_, n)| n)
+                .collect();
+            b.sort_unstable();
+            b
+        };
+        for b in &buckets {
+            if *b >= n {
+                return Ok(&self.entries[&(name.to_string(), *b)]);
+            }
+        }
+        bail!("no {name} bucket fits n={n} (available: {buckets:?})")
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &ArtifactEntry> {
+        self.entries.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        // tests run from the crate root; `make artifacts` must have run
+        ArtifactManifest::default_dir()
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = ArtifactManifest::load(&manifest_dir()).expect("run `make artifacts`");
+        assert!(m.entries().count() >= 8);
+    }
+
+    #[test]
+    fn picks_smallest_fitting_bucket() {
+        let m = ArtifactManifest::load(&manifest_dir()).unwrap();
+        assert_eq!(m.pick("sssp_rounds", 100).unwrap().n_pad, 256);
+        assert_eq!(m.pick("sssp_rounds", 256).unwrap().n_pad, 256);
+        assert_eq!(m.pick("sssp_rounds", 257).unwrap().n_pad, 1024);
+        assert_eq!(m.pick("tc_dense", 1024).unwrap().n_pad, 1024);
+        assert!(m.pick("tc_dense", 2000).is_err(), "TC capped at 1024");
+        assert!(m.pick("sssp_rounds", 1_000_000).is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = ArtifactManifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the PJRT CPU client from the rust hot path.
+//! Python never runs at request time.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::{ArtifactManifest, BUCKETS, TC_BUCKETS};
+pub use pjrt::{PjrtRuntime, RoundsExe};

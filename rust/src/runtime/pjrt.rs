@@ -1,0 +1,230 @@
+//! PJRT execution: load HLO-text artifacts, compile once, execute many.
+//!
+//! Mirrors /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`. The graph
+//! matrix is uploaded once per (graph, bucket) and kept device-resident
+//! (`execute_b` over `PjRtBuffer`s) — the §5.3 host↔device transfer
+//! optimization: only the property vector and the convergence scalar
+//! cross the boundary each fixed-point iteration.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+/// xla_extension 0.5.1 cannot tolerate a second `TfrtCpuClient` in the
+/// same process (`Check failed: pointer_size > 0` on the next execute),
+/// so the crate keeps exactly ONE client for the process lifetime and
+/// serializes all PJRT entry points behind a mutex. The underlying C++
+/// client is thread-safe; the rust wrapper just isn't marked `Sync`.
+struct SyncClient(xla::PjRtClient);
+unsafe impl Send for SyncClient {}
+unsafe impl Sync for SyncClient {}
+
+static GLOBAL_CLIENT: OnceLock<std::result::Result<SyncClient, String>> = OnceLock::new();
+static PJRT_LOCK: Mutex<()> = Mutex::new(());
+
+fn pjrt_lock() -> MutexGuard<'static, ()> {
+    PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn global_client() -> Result<&'static xla::PjRtClient> {
+    let entry = GLOBAL_CLIENT.get_or_init(|| {
+        xla::PjRtClient::cpu().map(SyncClient).map_err(|e| format!("{e:?}"))
+    });
+    match entry {
+        Ok(c) => Ok(&c.0),
+        Err(e) => Err(anyhow!("PJRT cpu client: {e}")),
+    }
+}
+
+/// Shared PJRT CPU client + compiled executables.
+pub struct PjrtRuntime {
+    client: &'static xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtRuntime { client: global_client()? })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact into a reusable executable.
+    pub fn load(&self, path: &Path) -> Result<RoundsExe> {
+        let _g = pjrt_lock();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+        Ok(RoundsExe { exe, client: self.client })
+    }
+
+    /// Upload an f32 tensor to the device (once per graph — §5.3).
+    pub fn upload(&self, data: &[f32], dims: &[i64]) -> Result<xla::PjRtBuffer> {
+        let _g = pjrt_lock();
+        upload_with(self.client, data, dims)
+    }
+}
+
+fn upload_with(client: &xla::PjRtClient, data: &[f32], dims: &[i64]) -> Result<xla::PjRtBuffer> {
+    // buffer_from_host_buffer copies with kImmutableOnlyDuringCall
+    // semantics — safe to free `data` as soon as the call returns.
+    // (buffer_from_host_literal is ASYNC in xla_extension 0.5.1 and reads
+    // the literal after it may have been freed — the source of
+    // intermittent `pointer_size`/size-check aborts.)
+    let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+    client
+        .buffer_from_host_buffer::<f32>(data, &udims, None)
+        .map_err(|e| anyhow!("upload {dims:?}: {e:?}"))
+}
+
+/// A compiled fixed-point-rounds executable (sssp_rounds / pr_rounds /
+/// tc_dense). Inputs are device buffers; outputs come back as literals.
+pub struct RoundsExe {
+    exe: xla::PjRtLoadedExecutable,
+    client: &'static xla::PjRtClient,
+}
+
+impl RoundsExe {
+    /// Execute with device-resident buffers; returns one literal per
+    /// module output. Artifacts are lowered with `return_tuple=False`,
+    /// so each output is a separate *array* buffer (tuple-shaped buffers
+    /// are unreliable in xla_extension 0.5.1 — see aot.py).
+    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let _g = pjrt_lock();
+        let outs = self
+            .exe
+            .execute_b::<&xla::PjRtBuffer>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let mut lits = Vec::new();
+        for (i, buf) in outs[0].iter().enumerate() {
+            let lit =
+                buf.to_literal_sync().map_err(|e| anyhow!("fetch output {i}: {e:?}"))?;
+            // single-output modules may still come back tuple-wrapped
+            if lit.shape().map(|s| matches!(s, xla::Shape::Tuple(_))).unwrap_or(false) {
+                lits.extend(lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?);
+            } else {
+                lits.push(lit);
+            }
+        }
+        Ok(lits)
+    }
+
+    /// Raw execution: the unflattened PJRT output buffers (debug/tests).
+    pub fn run_raw(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        let _g = pjrt_lock();
+        self.exe.execute_b::<&xla::PjRtBuffer>(args).map_err(|e| anyhow!("execute: {e:?}"))
+    }
+
+    /// Upload helper sharing this executable's client.
+    pub fn upload(&self, data: &[f32], dims: &[i64]) -> Result<xla::PjRtBuffer> {
+        let _g = pjrt_lock();
+        upload_with(self.client, data, dims)
+    }
+}
+
+/// Extract an f32 vector from a literal.
+pub fn literal_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::ArtifactManifest;
+
+    #[test]
+    fn loads_and_runs_sssp_rounds_artifact() {
+        let m = ArtifactManifest::load(&ArtifactManifest::default_dir())
+            .expect("run `make artifacts`");
+        let rt = PjrtRuntime::cpu().unwrap();
+        let entry = m.pick("sssp_rounds", 100).unwrap();
+        let exe = rt.load(&entry.path).unwrap();
+        let n = entry.n_pad;
+
+        // path graph 0->1->2->3, INF elsewhere
+        const INF_F: f32 = 1e9;
+        let mut adj = vec![INF_F; n * n];
+        for i in 0..3 {
+            adj[i * n + i + 1] = 1.0;
+        }
+        let mut dist = vec![INF_F; n];
+        dist[0] = 0.0;
+
+        let adj_buf = rt.upload(&adj, &[n as i64, n as i64]).unwrap();
+        let dist_buf = rt.upload(&dist, &[n as i64]).unwrap();
+        let outs = exe.run(&[&dist_buf, &adj_buf]).unwrap();
+        assert_eq!(outs.len(), 2, "(<new_dist>, changed)");
+        let new_dist = literal_f32s(&outs[0]).unwrap();
+        let changed = literal_f32s(&outs[1]).unwrap()[0];
+        assert_eq!(&new_dist[..4], &[0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(changed, 3.0, "three vertices moved");
+    }
+
+    /// The Pallas-kernel artifact and the jnp artifact must compute the
+    /// SAME numbers — this is the L1-validation bridge for the §Perf
+    /// decision to time with the jnp flavor on CPU-PJRT (see model.py).
+    #[test]
+    fn pallas_and_jnp_artifacts_agree() {
+        let m = ArtifactManifest::load(&ArtifactManifest::default_dir()).unwrap();
+        let rt = PjrtRuntime::cpu().unwrap();
+        let jnp = rt.load(&m.pick("sssp_rounds", 100).unwrap().path).unwrap();
+        let pal = rt.load(&m.pick("sssp_rounds_pallas", 100).unwrap().path).unwrap();
+        let n = m.pick("sssp_rounds", 100).unwrap().n_pad;
+
+        const INF_F: f32 = 1e9;
+        let mut adj = vec![INF_F; n * n];
+        // random-ish small graph, deterministic
+        let mut x = 12345u64;
+        for _ in 0..600 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let u = (x >> 33) as usize % n;
+            let v = (x >> 13) as usize % n;
+            if u != v {
+                adj[u * n + v] = 1.0 + (x % 9) as f32;
+            }
+        }
+        let mut dist = vec![INF_F; n];
+        dist[0] = 0.0;
+        let adj_buf = rt.upload(&adj, &[n as i64, n as i64]).unwrap();
+        let dist_buf = rt.upload(&dist, &[n as i64]).unwrap();
+        let a = jnp.run(&[&dist_buf, &adj_buf]).unwrap();
+        let dist_buf2 = rt.upload(&dist, &[n as i64]).unwrap();
+        let b = pal.run(&[&dist_buf2, &adj_buf]).unwrap();
+        assert_eq!(
+            literal_f32s(&a[0]).unwrap(),
+            literal_f32s(&b[0]).unwrap(),
+            "pallas vs jnp flavors diverged"
+        );
+        assert_eq!(literal_f32s(&a[1]).unwrap(), literal_f32s(&b[1]).unwrap());
+    }
+
+    #[test]
+    fn pr_rounds_artifact_runs() {
+        let m = ArtifactManifest::load(&ArtifactManifest::default_dir()).unwrap();
+        let rt = PjrtRuntime::cpu().unwrap();
+        let entry = m.pick("pr_rounds", 200).unwrap();
+        let exe = rt.load(&entry.path).unwrap();
+        let n = entry.n_pad;
+
+        // 2-cycle between vertices 0 and 1
+        let mut a_norm = vec![0f32; n * n];
+        a_norm[1] = 1.0; // 0 -> 1
+        a_norm[n] = 1.0; // 1 -> 0
+        let rank = vec![1.0 / n as f32; n];
+
+        let a_buf = rt.upload(&a_norm, &[n as i64, n as i64]).unwrap();
+        let r_buf = rt.upload(&rank, &[n as i64]).unwrap();
+        let d_buf = rt.upload(&[0.85], &[]).unwrap();
+        let nr_buf = rt.upload(&[1.0 / n as f32], &[]).unwrap();
+        let outs = exe.run(&[&r_buf, &a_buf, &d_buf, &nr_buf]).unwrap();
+        assert_eq!(outs.len(), 2);
+        let new_rank = literal_f32s(&outs[0]).unwrap();
+        assert!(new_rank.iter().all(|r| r.is_finite()));
+        assert!(new_rank[0] > new_rank[5], "cycle vertices outrank isolated ones");
+    }
+}

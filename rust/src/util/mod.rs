@@ -1,0 +1,19 @@
+//! Small self-contained utilities used across the crate.
+//!
+//! The offline crates.io snapshot available to this build lacks `rand`,
+//! `rayon`, `criterion`, and `proptest`, so this module provides minimal,
+//! well-tested replacements: a splitmix64/xoshiro RNG, a scoped thread pool,
+//! a timing helper, streaming statistics, and a tiny property-testing
+//! harness (`propcheck`).
+
+pub mod propcheck;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+pub use propcheck::{forall_checks, Gen};
+pub use rng::Rng;
+pub use stats::Summary;
+pub use threadpool::ThreadPool;
+pub use timer::Timer;

@@ -1,0 +1,140 @@
+//! A minimal property-based testing harness (the offline crates.io snapshot
+//! has no `proptest`/`quickcheck`).
+//!
+//! Usage:
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath link flags)
+//! use starplat_dyn::util::propcheck::{forall_checks, Gen};
+//! forall_checks(0xBEEF, 100, |g: &mut Gen| {
+//!     let n = g.usize_in(1, 50);
+//!     let v = g.vec_u32(n, 1000);
+//!     let mut s = v.clone();
+//!     s.sort_unstable();
+//!     assert!(s.windows(2).all(|w| w[0] <= w[1]));
+//! });
+//! ```
+//!
+//! On failure the panic message includes the case index and seed so the
+//! exact case can be replayed.
+
+use super::rng::Rng;
+
+/// Random input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0-based) for diagnostics.
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// usize in `[lo, hi]` inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.below_usize(hi - lo + 1)
+    }
+
+    /// i64 in `[lo, hi]` inclusive.
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vec of `n` u32s each below `bound`.
+    pub fn vec_u32(&mut self, n: usize, bound: u32) -> Vec<u32> {
+        (0..n).map(|_| self.rng.below(bound as u64) as u32).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below_usize(xs.len())]
+    }
+}
+
+/// Run `prop` against `cases` random inputs derived from `seed`.
+///
+/// Each case gets an independent sub-generator, so adding draws to one case
+/// doesn't perturb later cases.
+pub fn forall_checks<F>(seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen),
+{
+    let mut master = Rng::new(seed);
+    for case in 0..cases {
+        let sub = master.fork();
+        let mut g = Gen { rng: sub, case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        let _ = &mut g; // keep the generator alive across the unwind check
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!("property failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially_true_property() {
+        forall_checks(1, 50, |g| {
+            let x = g.usize_in(0, 100);
+            assert!(x <= 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn reports_failing_case() {
+        forall_checks(2, 50, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x < 10, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn cases_are_independent_of_draw_count() {
+        // Record the first draw of case 5 with two different case-0 bodies.
+        let mut first_a = None;
+        let mut first_b = None;
+        forall_checks(3, 6, |g| {
+            if g.case == 0 {
+                let _ = g.usize_in(0, 9);
+            }
+            if g.case == 5 && first_a.is_none() {
+                first_a = Some(g.usize_in(0, 1_000_000));
+            }
+        });
+        forall_checks(3, 6, |g| {
+            if g.case == 0 {
+                // draw a different number of values
+                let _ = g.usize_in(0, 9);
+                let _ = g.usize_in(0, 9);
+                let _ = g.usize_in(0, 9);
+            }
+            if g.case == 5 && first_b.is_none() {
+                first_b = Some(g.usize_in(0, 1_000_000));
+            }
+        });
+        assert_eq!(first_a, first_b);
+    }
+}

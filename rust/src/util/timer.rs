@@ -1,0 +1,92 @@
+//! Wall-clock timing helpers used by the coordinator and the bench harness.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/lap timer.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+    last: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl Timer {
+    /// Start (or restart) the clock.
+    pub fn start() -> Self {
+        let now = Instant::now();
+        Timer { start: now, last: now }
+    }
+
+    /// Seconds since construction.
+    pub fn total_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Seconds since the previous `lap()` (or construction), and reset the lap.
+    pub fn lap_secs(&mut self) -> f64 {
+        let now = Instant::now();
+        let d = now.duration_since(self.last).as_secs_f64();
+        self.last = now;
+        d
+    }
+}
+
+/// Time a closure, returning `(result, seconds)`.
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` repeatedly until `min_time` has elapsed or `max_iters` runs were
+/// done (whichever first, but always at least once), returning the *median*
+/// per-run seconds. This is the measurement core of the local bench harness
+/// (the offline crates.io snapshot has no criterion).
+pub fn measure(min_time: Duration, max_iters: usize, mut f: impl FnMut()) -> f64 {
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    loop {
+        let ti = Instant::now();
+        f();
+        samples.push(ti.elapsed().as_secs_f64());
+        if samples.len() >= max_iters || t0.elapsed() >= min_time {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_returns_value_and_positive_time() {
+        let (v, s) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn measure_respects_max_iters() {
+        let mut count = 0;
+        let med = measure(Duration::from_secs(10), 3, || count += 1);
+        assert_eq!(count, 3);
+        assert!(med >= 0.0);
+    }
+
+    #[test]
+    fn lap_accumulates() {
+        let mut t = Timer::start();
+        let a = t.lap_secs();
+        let b = t.lap_secs();
+        assert!(a >= 0.0 && b >= 0.0);
+        assert!(t.total_secs() >= a);
+    }
+}

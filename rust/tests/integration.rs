@@ -1,0 +1,222 @@
+//! Cross-module integration tests: the full equivalence matrix
+//! (DSL interpreter ≡ serial oracle ≡ cpu ≡ dist ≡ xla), protocol-level
+//! invariants, and failure injection on the DSL front-end.
+
+use starplat_dyn::algorithms::{pagerank, sssp, triangle, PrState};
+use starplat_dyn::backend::cpu::CpuEngine;
+use starplat_dyn::backend::dist::DistEngine;
+use starplat_dyn::backend::xla::XlaEngine;
+use starplat_dyn::coordinator::{run_cell, Algo};
+use starplat_dyn::dsl::interp::{Interp, Value};
+use starplat_dyn::dsl::{analyze, parse_program};
+use starplat_dyn::graph::{generators, Partition, UpdateStream};
+use starplat_dyn::util::propcheck::forall_checks;
+use starplat_dyn::util::threadpool::Sched;
+
+/// Every execution path must produce the same SSSP distances after the
+/// same dynamic update stream.
+#[test]
+fn equivalence_matrix_dynamic_sssp() {
+    let g0 = generators::rmat(8, 1400, 0.57, 0.19, 0.19, 404);
+    let stream = UpdateStream::generate_percent(&g0, 8.0, 64, 9, 405);
+
+    // ground truth
+    let mut gt = g0.clone();
+    stream.apply_all_static(&mut gt);
+    let want = sssp::dijkstra_oracle(&gt, 0);
+
+    // serial oracle
+    let mut g = g0.clone();
+    let mut st = sssp::static_sssp(&g, 0);
+    for b in stream.batches() {
+        sssp::dynamic_batch(&mut g, &mut st, &b);
+    }
+    assert_eq!(st.dist, want, "serial");
+
+    // cpu engine (several configs)
+    for threads in [1usize, 4] {
+        let e = CpuEngine::new(threads, Sched::Dynamic { chunk: 64 });
+        let mut g = g0.clone();
+        let mut st = e.sssp_static(&g, 0);
+        for b in stream.batches() {
+            e.sssp_dynamic_batch(&mut g, &mut st, &b);
+        }
+        assert_eq!(st.dist, want, "cpu x{threads}");
+    }
+
+    // dist engine
+    for ranks in [2usize, 8] {
+        let e = DistEngine::new(ranks, Partition::Block);
+        let mut g = g0.clone();
+        let mut st = e.sssp_static(&g, 0);
+        for b in stream.batches() {
+            e.sssp_dynamic_batch(&mut g, &mut st, &b);
+        }
+        assert_eq!(st.dist, want, "dist x{ranks}");
+    }
+
+    // xla engine (PJRT) — requires `make artifacts`
+    let e = XlaEngine::new().expect("artifacts");
+    let mut g = g0.clone();
+    let mut st = e.sssp_static(&g, 0).unwrap();
+    for b in stream.batches() {
+        e.sssp_dynamic_batch(&mut g, &mut st, &b).unwrap();
+    }
+    assert_eq!(st.dist, want, "xla");
+
+    // DSL interpreter executing the shipped program
+    let program =
+        parse_program(&std::fs::read_to_string("dsl/sssp_dynamic.sp").unwrap()).unwrap();
+    analyze(&program).unwrap();
+    let mut interp = Interp::new(&program, g0.clone());
+    let (_, props) = interp
+        .run_dynamic(
+            "DynSSSP",
+            stream.clone(),
+            &[("batchSize", Value::Int(64)), ("src", Value::Int(0))],
+        )
+        .unwrap();
+    let dist: Vec<i64> = props["dist"]
+        .iter()
+        .map(|v| match v {
+            Value::Int(i) => *i,
+            other => panic!("{other:?}"),
+        })
+        .collect();
+    assert_eq!(dist, want, "DSL interpreter");
+}
+
+/// The coordinator's measured cells must be self-consistent: same seeds
+/// → same workloads, and all backends accept the same protocol.
+#[test]
+fn coordinator_runs_full_backend_matrix() {
+    let g = generators::uniform_random(300, 1800, 9, 406);
+    use starplat_dyn::backend::BackendKind::*;
+    for backend in [Serial, Cpu, Dist, Xla] {
+        for algo in [Algo::Sssp, Algo::Pr, Algo::Tc] {
+            let cell = run_cell(algo, backend, &g, 4.0, usize::MAX / 2, 407)
+                .unwrap_or_else(|e| panic!("{algo:?}/{backend:?}: {e}"));
+            assert!(cell.static_secs > 0.0, "{algo:?}/{backend:?} static never ran");
+            assert!(cell.dynamic_secs >= 0.0);
+        }
+    }
+}
+
+/// Dynamic PR on every backend must stay L1-close to a cold recompute.
+#[test]
+fn pr_dynamic_closeness_across_backends() {
+    let g0 = generators::rmat(7, 700, 0.5, 0.2, 0.2, 408);
+    let n = g0.num_nodes();
+    let stream = UpdateStream::generate_percent(&g0, 4.0, usize::MAX / 2, 9, 409);
+    let mut gt = g0.clone();
+    stream.apply_all_static(&mut gt);
+    let mut truth = PrState::new(n, 1e-10, 0.85, 300);
+    pagerank::static_pagerank(&gt, &mut truth);
+
+    // serial dynamic
+    let mut g = g0.clone();
+    let mut st = PrState::new(n, 1e-9, 0.85, 100);
+    pagerank::static_pagerank(&g, &mut st);
+    for b in stream.batches() {
+        pagerank::dynamic_batch(&mut g, &mut st, &b);
+    }
+    let l1: f64 = st.rank.iter().zip(&truth.rank).map(|(a, b)| (a - b).abs()).sum();
+    assert!(l1 < 0.05, "serial dynamic PR drift {l1}");
+
+    // xla dynamic (warm start on updated matrix converges to the truth)
+    let e = XlaEngine::new().unwrap();
+    let mut g = g0.clone();
+    let mut st = PrState::new(n, 1e-6, 0.85, 200);
+    e.pr_static(&g, &mut st).unwrap();
+    for b in stream.batches() {
+        e.pr_dynamic_batch(&mut g, &mut st, &b).unwrap();
+    }
+    let l1: f64 = st.rank.iter().zip(&truth.rank).map(|(a, b)| (a - b).abs()).sum();
+    assert!(l1 < 0.01, "xla dynamic PR drift {l1}");
+}
+
+/// Failure injection: malformed DSL programs must fail cleanly (parse or
+/// sema), never panic.
+#[test]
+fn dsl_failure_injection() {
+    let cases: &[(&str, &str)] = &[
+        ("unterminated block", "Static f(Graph g) { int x = 1;"),
+        ("batch in static", "Static f(Graph g, updates<g> u) { Batch(u:4) { } }"),
+        ("unknown call", "Static f(Graph g) { ghost(g); }"),
+        ("bad type", "Static f(Widget w) { }"),
+        ("assign to literal", "Static f(Graph g) { 5 = 6; }"),
+        ("bad fixedpoint", "Static f(Graph g) { fixedPoint while (x : !m) { } }"),
+        ("stray char", "Static f(Graph g) { int x = $; }"),
+        ("bad min arity", "Static f(Graph g) { <a, b> = <Min(1, 2), 3, 4>; }"),
+    ];
+    for (what, src) in cases {
+        let failed = match parse_program(src) {
+            Err(_) => true,
+            Ok(p) => analyze(&p).is_err(),
+        };
+        assert!(failed, "{what}: should have been rejected:\n{src}");
+    }
+}
+
+/// Interpreter failure injection: semantically broken programs error out
+/// with context instead of corrupting state.
+#[test]
+fn interp_runtime_failure_injection() {
+    let g = generators::uniform_random(10, 30, 5, 410);
+    // infinite fixedPoint must hit the sweep guard
+    let src = r#"
+    Dynamic f(Graph g, updates<g> u, int batchSize) {
+      propNode<bool> modified;
+      g.attachNodeProperty(modified = True);
+      bool fin = False;
+      fixedPoint until (fin : !modified) {
+        int x = 0;
+      }
+    }"#;
+    let p = parse_program(src).unwrap();
+    let mut i = Interp::new(&p, g.clone());
+    let err = i
+        .run_dynamic("f", UpdateStream::new(vec![], 1), &[("batchSize", Value::Int(1))])
+        .unwrap_err();
+    assert!(err.to_string().contains("sweeps"), "guard fired: {err}");
+}
+
+/// Protocol invariant: TC delta counting is exact under randomized
+/// symmetric churn across all engines.
+#[test]
+fn prop_tc_exact_across_engines() {
+    forall_checks(0x7C1, 10, |gen| {
+        let n = gen.usize_in(10, 50);
+        let seed = gen.rng().next_u64();
+        let g0 = triangle::symmetrize(&generators::uniform_random(n, n * 3, 5, seed));
+        let (dels, adds) = triangle::symmetric_updates(&g0, 10.0, 6, seed ^ 3);
+
+        let mut g1 = g0.clone();
+        let mut st1 = triangle::static_tc(&g1);
+        let e = CpuEngine::new(2, Sched::Static);
+        let mut g2 = g0.clone();
+        let mut st2 = e.tc_static(&g2);
+        for (d, a) in dels.iter().zip(&adds) {
+            triangle::dynamic_batch(&mut g1, &mut st1, d, a);
+            e.tc_dynamic_batch(&mut g2, &mut st2, d, a);
+        }
+        let truth = triangle::static_tc(&g1).triangles;
+        assert_eq!(st1.triangles, truth);
+        assert_eq!(st2.triangles, truth);
+        assert_eq!(g1.edges_sorted(), g2.edges_sorted());
+    });
+}
+
+/// Update streams must respect the requested percent and composition.
+#[test]
+fn prop_update_stream_protocol() {
+    forall_checks(0x0E0, 20, |gen| {
+        let n = gen.usize_in(20, 100);
+        let g = generators::uniform_random(n, n * 4, 9, gen.rng().next_u64());
+        let pct = gen.f64_unit() * 15.0 + 0.5;
+        let s = UpdateStream::generate_percent(&g, pct, usize::MAX / 2, 9, 3);
+        let want = ((g.num_edges() as f64) * pct / 100.0).round() as usize;
+        assert_eq!(s.len(), want);
+        assert_eq!(s.num_batches(), if want == 0 { 0 } else { 1 }, "single-batch protocol");
+    });
+}
