@@ -1,13 +1,81 @@
 //! Microbenchmarks for the §Perf profiling pass: substrate operation
 //! costs that bound every end-to-end number.
 //!
+//! Includes the flat-vs-legacy diff-CSR comparison: the seed's diff
+//! blocks were `HashMap<NodeId, Vec<…>>` probed on every neighbor
+//! iteration, and `has_edge` was an O(deg) scan. This bench rebuilds that
+//! legacy layout from the current graph and times both, so the speedup of
+//! the flat layout (per-block CSR + overflow bitmap + binary-search
+//! membership) is tracked from this PR onward in `BENCH_microbench.json`.
+//!
 //! Usage: `cargo bench --bench microbench`
+//! Output: human-readable table + `BENCH_microbench.json` in the CWD.
 
 use starplat_dyn::backend::cpu::atomic_min;
-use starplat_dyn::graph::{generators, UpdateStream};
+use starplat_dyn::graph::{generators, Csr, DynGraph, NodeId, UpdateStream, Weight, TOMBSTONE};
 use starplat_dyn::util::threadpool::{Sched, ThreadPool};
 use starplat_dyn::util::timer::time_it;
+use starplat_dyn::util::Rng;
+use std::collections::HashMap;
 use std::sync::atomic::AtomicI64;
+
+/// The seed's diff-block layout, reconstructed for comparison: a base CSR
+/// (probed linearly, tombstones interleaved) plus map-of-vecs blocks
+/// probed on every neighbor iteration and membership test.
+struct LegacyDiffGraph {
+    base: Csr,
+    blocks: Vec<HashMap<NodeId, Vec<(NodeId, Weight)>>>,
+}
+
+impl LegacyDiffGraph {
+    fn from(g: &DynGraph) -> Self {
+        let n = g.num_nodes();
+        let base = g.fwd_base().clone();
+        let blocks = g
+            .fwd_diffs()
+            .iter()
+            .map(|d| {
+                let mut m: HashMap<NodeId, Vec<(NodeId, Weight)>> = HashMap::new();
+                for u in 0..n as NodeId {
+                    for (v, w) in d.csr.neighbors(u) {
+                        m.entry(u).or_default().push((v, w));
+                    }
+                }
+                m
+            })
+            .collect();
+        LegacyDiffGraph { base, blocks }
+    }
+
+    /// Legacy neighbor iteration: per-slot tombstone filter on the base +
+    /// one hash probe per (vertex, block).
+    fn fold_neighbors(&self, u: NodeId, acc: &mut u64) {
+        for s in self.base.slot_range(u) {
+            let c = self.base.coords[s];
+            if c != TOMBSTONE {
+                *acc = acc.wrapping_add(c as u64 + self.base.weights[s] as u64);
+            }
+        }
+        for b in &self.blocks {
+            if let Some(list) = b.get(&u) {
+                for &(v, w) in list {
+                    *acc = acc.wrapping_add(v as u64 + w as u64);
+                }
+            }
+        }
+    }
+
+    /// Legacy membership: O(deg) linear scan of the base slots, then the
+    /// hash-probed chain.
+    fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
+        if self.base.slot_range(u).any(|s| self.base.coords[s] == v) {
+            return true;
+        }
+        self.blocks
+            .iter()
+            .any(|b| b.get(&u).is_some_and(|l| l.iter().any(|&(x, _)| x == v)))
+    }
+}
 
 fn main() {
     let g = generators::rmat(12, 80_000, 0.57, 0.19, 0.19, 3);
@@ -32,30 +100,87 @@ fn main() {
         8.0 * m as f64 / t / 1e6
     );
 
-    // traversal through a dirty diff chain
+    // ------------------------------------------------------- diff chain
+    // Build a 3-block diff chain (20% churn applied in 3 batches, never
+    // merged) and compare the flat layout against the legacy layout.
     let mut gd = g.clone();
     gd.merge_period = 0;
-    let stream = UpdateStream::generate_percent(&gd, 20.0, 256, 9, 4);
-    for b in stream.batches() {
+    let stream = UpdateStream::generate_percent(&gd, 20.0, 1, 9, 4);
+    let total = stream.len();
+    let per_batch = total.div_ceil(3).max(1);
+    let chunked = UpdateStream::new(stream.updates.clone(), per_batch);
+    for b in chunked.batches() {
         gd.apply_deletions(&b.deletions());
         gd.apply_additions(&b.additions());
     }
-    let (_, t_dirty) = time_it(|| {
+    let chain = gd.diff_chain_len();
+    let md = gd.num_edges();
+    let legacy = LegacyDiffGraph::from(&gd);
+
+    let reps = 8;
+    let (chk_flat, t_flat) = time_it(|| {
         let mut acc = 0u64;
-        for _ in 0..8 {
+        for _ in 0..reps {
             for v in 0..n as u32 {
-                for (nbr, _) in gd.out_neighbors(v) {
-                    acc = acc.wrapping_add(nbr as u64);
+                for (nbr, w) in gd.out_neighbors(v) {
+                    acc = acc.wrapping_add(nbr as u64 + w as u64);
                 }
             }
         }
         acc
     });
+    let (chk_legacy, t_legacy) = time_it(|| {
+        let mut acc = 0u64;
+        for _ in 0..reps {
+            for v in 0..n as u32 {
+                legacy.fold_neighbors(v, &mut acc);
+            }
+        }
+        acc
+    });
+    assert_eq!(chk_flat, chk_legacy, "flat and legacy layouts must agree");
+    let iter_flat = reps as f64 * md as f64 / t_flat / 1e6;
+    let iter_legacy = reps as f64 * md as f64 / t_legacy / 1e6;
     println!(
-        "  …after 20% churn  : {:>10.1} Medges/s   (chain len {})",
-        8.0 * gd.num_edges() as f64 / t_dirty / 1e6,
-        gd.diff_chain_len()
+        "diff-chain iter     : {iter_flat:>10.1} Medges/s   (chain len {chain})"
     );
+    println!(
+        "  …legacy hashmap   : {iter_legacy:>10.1} Medges/s   ({:.2}x speedup)",
+        t_legacy / t_flat
+    );
+
+    // has_edge probe throughput over the same dirty chain
+    let probes: Vec<(NodeId, NodeId)> = {
+        let mut rng = Rng::new(7);
+        (0..200_000)
+            .map(|_| (rng.below_usize(n) as NodeId, rng.below_usize(n) as NodeId))
+            .collect()
+    };
+    let (hits_flat, t_probe_flat) = time_it(|| {
+        let mut hits = 0u64;
+        for &(u, v) in &probes {
+            hits += gd.has_edge(u, v) as u64;
+        }
+        hits
+    });
+    let (hits_legacy, t_probe_legacy) = time_it(|| {
+        let mut hits = 0u64;
+        for &(u, v) in &probes {
+            hits += legacy.has_edge(u, v) as u64;
+        }
+        hits
+    });
+    assert_eq!(hits_flat, hits_legacy, "membership answers must agree");
+    let probe_flat = probes.len() as f64 / t_probe_flat / 1e6;
+    let probe_legacy = probes.len() as f64 / t_probe_legacy / 1e6;
+    println!(
+        "has_edge probes     : {probe_flat:>10.2} Mops/s     (binary search)"
+    );
+    println!(
+        "  …legacy scan      : {probe_legacy:>10.2} Mops/s     ({:.2}x speedup)",
+        t_probe_legacy / t_probe_flat
+    );
+
     let mut gm = gd.clone();
     gm.merge();
     let (_, t_merged) = time_it(|| {
@@ -74,14 +199,26 @@ fn main() {
         8.0 * gm.num_edges() as f64 / t_merged / 1e6
     );
 
+    // parallel vs serial merge compaction (clones happen outside the
+    // timed region so only the merge itself is measured)
+    let mut gs = gd.clone();
+    let (_, t_merge_serial) = time_it(|| gs.merge());
+    let mut gp = gd.clone();
+    gp.set_merge_pool(ThreadPool::host());
+    let (_, t_merge_par) = time_it(|| gp.merge());
+    println!(
+        "merge compaction    : {:>10.4} s serial, {:.4} s pooled",
+        t_merge_serial, t_merge_par
+    );
+
     // atomic CAS-min throughput (the Min construct)
     let cells: Vec<AtomicI64> = (0..1024).map(|_| AtomicI64::new(i64::MAX / 4)).collect();
-    let (_, t) = time_it(|| {
+    let (_, t_min) = time_it(|| {
         for i in 0..4_000_000u64 {
             atomic_min(&cells[(i % 1024) as usize], (4_000_000 - i) as i64);
         }
     });
-    println!("atomic_min          : {:>10.1} Mops/s", 4.0 / t);
+    println!("atomic_min          : {:>10.1} Mops/s", 4.0 / t_min);
 
     // thread pool dispatch overhead
     for threads in [1usize, 2, 4] {
@@ -100,7 +237,7 @@ fn main() {
     // update application throughput
     let stream = UpdateStream::generate_percent(&g, 10.0, 1024, 9, 5);
     let mut gu = g.clone();
-    let (_, t) = time_it(|| {
+    let (_, t_upd) = time_it(|| {
         for b in stream.batches() {
             gu.apply_deletions(&b.deletions());
             gu.apply_additions(&b.additions());
@@ -108,7 +245,7 @@ fn main() {
     });
     println!(
         "diff-CSR updates    : {:>10.1} Kupd/s",
-        stream.len() as f64 / t / 1e3
+        stream.len() as f64 / t_upd / 1e3
     );
 
     // PJRT dispatch latency (xla backend round-trip floor)
@@ -126,4 +263,20 @@ fn main() {
         }
         Err(e) => println!("PJRT: skipped ({e})"),
     }
+
+    // machine-readable perf trajectory (tracked from this PR onward)
+    let json = format!(
+        "{{\n  \"graph\": {{\"nodes\": {n}, \"edges\": {md}, \"diff_chain_len\": {chain}}},\n  \
+         \"neighbor_iter_medges_per_s\": {{\"flat\": {iter_flat:.3}, \"legacy_hashmap\": {iter_legacy:.3}, \"speedup\": {:.3}}},\n  \
+         \"has_edge_mops_per_s\": {{\"flat\": {probe_flat:.3}, \"legacy_scan\": {probe_legacy:.3}, \"speedup\": {:.3}}},\n  \
+         \"merge_secs\": {{\"serial\": {t_merge_serial:.6}, \"pooled\": {t_merge_par:.6}}},\n  \
+         \"atomic_min_mops_per_s\": {:.3},\n  \
+         \"update_apply_kupd_per_s\": {:.3}\n}}\n",
+        t_legacy / t_flat,
+        t_probe_legacy / t_probe_flat,
+        4.0 / t_min,
+        stream.len() as f64 / t_upd / 1e3,
+    );
+    std::fs::write("BENCH_microbench.json", &json).expect("write BENCH_microbench.json");
+    println!("\nwrote BENCH_microbench.json");
 }

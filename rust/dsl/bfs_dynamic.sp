@@ -1,0 +1,95 @@
+// Dynamic BFS — the paper's §1 motivating example, expressed as the
+// unit-weight instance of the SSSP pipeline: levels only ever decrease
+// on insertion, and a deleted tree edge invalidates its subtree before a
+// pull-style re-relaxation.
+
+Static staticBFS(Graph g, propNode<int> level, propNode<int> parent, propNode<bool> modified, int src) {
+  propNode<bool> modified_nxt;
+  g.attachNodeProperty(level = INF, parent = -1, modified = False, modified_nxt = False);
+  src.level = 0;
+  src.modified = True;
+  fixedPoint until (finished : !modified) {
+    forall (v in g.nodes().filter(modified == True)) {
+      forall (nbr in g.neighbors(v)) {
+        <nbr.level, nbr.parent, nbr.modified_nxt> = <Min(nbr.level, v.level + 1), v, True>;
+      }
+    }
+    modified = modified_nxt;
+    g.attachNodeProperty(modified_nxt = False);
+  }
+}
+
+Incremental(Graph g, propNode<int> level, propNode<int> parent, propNode<bool> modified) {
+  propNode<bool> modified_nxt;
+  g.attachNodeProperty(modified_nxt = False);
+  fixedPoint until (finished : !modified) {
+    forall (v in g.nodes().filter(modified == True)) {
+      forall (nbr in g.neighbors(v)) {
+        <nbr.level, nbr.parent, nbr.modified_nxt> = <Min(nbr.level, v.level + 1), v, True>;
+      }
+    }
+    modified = modified_nxt;
+    g.attachNodeProperty(modified_nxt = False);
+  }
+}
+
+Decremental(Graph g, propNode<int> level, propNode<int> parent, propNode<bool> modified) {
+  bool changed = True;
+  while (changed) {
+    changed = False;
+    forall (v in g.nodes().filter(modified == False)) {
+      if (v.parent > -1) {
+        if (v.parent.modified == True) {
+          v.level = INF;
+          v.modified = True;
+          changed = True;
+        }
+      }
+    }
+  }
+  forall (v in g.nodes()) {
+    if (v.level < INF) {
+      v.modified = True;
+    } else {
+      v.modified = False;
+      v.parent = -1;
+    }
+  }
+  propNode<bool> modified_nxt;
+  g.attachNodeProperty(modified_nxt = False);
+  fixedPoint until (finished : !modified) {
+    forall (v in g.nodes().filter(modified == True)) {
+      forall (nbr in g.neighbors(v)) {
+        <nbr.level, nbr.parent, nbr.modified_nxt> = <Min(nbr.level, v.level + 1), v, True>;
+      }
+    }
+    modified = modified_nxt;
+    g.attachNodeProperty(modified_nxt = False);
+  }
+}
+
+Dynamic DynBFS(Graph g, updates<g> updateBatch, propNode<int> level, propNode<int> parent, propNode<bool> modified, int batchSize, int src) {
+  staticBFS(g, level, parent, modified, src);
+  Batch(updateBatch : batchSize) {
+    OnDelete (u in updateBatch.currentBatch(0)) {
+      int del_src = u.source;
+      int del_dst = u.destination;
+      if (del_dst.parent == del_src) {
+        del_dst.level = INF;
+        del_dst.parent = -1;
+        del_dst.modified = True;
+      }
+    }
+    g.updateCSRDel(updateBatch);
+    Decremental(g, level, parent, modified);
+    OnAdd (u in updateBatch.currentBatch(1)) {
+      int add_src = u.source;
+      int add_dst = u.destination;
+      if (add_src.level < INF) {
+        <add_dst.level, add_dst.parent, add_dst.modified> = <Min(add_dst.level, add_src.level + 1), add_src, True>;
+      }
+    }
+    g.updateCSRAdd(updateBatch);
+    Incremental(g, level, parent, modified);
+  }
+}

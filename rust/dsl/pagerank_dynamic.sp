@@ -1,0 +1,128 @@
+// Appendix Fig. 20: Dynamic PageRank in StarPlat Dynamic.
+//
+// staticPR     — double-buffered pull sweeps until the summed rank
+//                movement drops below beta (or maxIter);
+// Incremental / Decremental — identical restricted sweeps over the
+//                flagged subset (the flag closure is computed by the
+//                driver with propagateNodeFlags);
+// DynPR        — the Batch driver: flag targets → propagateNodeFlags →
+//                updateCSR → restricted recompute, deletions then adds.
+
+Static staticPR(Graph g, propNode<float> pageRank, propNode<float> pageRank_nxt, float beta, float delta, int maxIter) {
+  float num_nodes = g.num_nodes();
+  g.attachNodeProperty(pageRank = 1.0 / num_nodes);
+  int iterCount = 0;
+  float diff = 0.0;
+  do {
+    diff = 0.0;
+    forall (v in g.nodes()) {
+      float sum = 0.0;
+      for (w in g.nodes_to(v)) {
+        if (g.count_outNbrs(w) > 0) {
+          sum = sum + w.pageRank / g.count_outNbrs(w);
+        }
+      }
+      float val = (1.0 - delta) / num_nodes + delta * sum;
+      float d = val - v.pageRank;
+      if (d < 0.0) {
+        d = 0.0 - d;
+      }
+      diff = diff + d;
+      v.pageRank_nxt = val;
+    }
+    pageRank = pageRank_nxt;
+    iterCount = iterCount + 1;
+  } while (diff > beta && iterCount < maxIter);
+}
+
+Incremental(Graph g, propNode<float> pageRank, propNode<float> pageRank_nxt, propNode<bool> modified, float beta, float delta, int maxIter) {
+  int active = 0;
+  forall (v in g.nodes().filter(modified == True)) {
+    active = active + 1;
+  }
+  if (active > 0) {
+    float num_nodes = g.num_nodes();
+    int iterCount = 0;
+    float diff = 0.0;
+    do {
+      diff = 0.0;
+      forall (v in g.nodes().filter(modified == True)) {
+        float sum = 0.0;
+        for (w in g.nodes_to(v)) {
+          if (g.count_outNbrs(w) > 0) {
+            sum = sum + w.pageRank / g.count_outNbrs(w);
+          }
+        }
+        float val = (1.0 - delta) / num_nodes + delta * sum;
+        float d = val - v.pageRank;
+        if (d < 0.0) {
+          d = 0.0 - d;
+        }
+        diff = diff + d;
+        v.pageRank_nxt = val;
+      }
+      forall (v in g.nodes().filter(modified == True)) {
+        v.pageRank = v.pageRank_nxt;
+      }
+      iterCount = iterCount + 1;
+    } while (diff > beta && iterCount < maxIter);
+  }
+}
+
+Decremental(Graph g, propNode<float> pageRank, propNode<float> pageRank_nxt, propNode<bool> modified, float beta, float delta, int maxIter) {
+  int active = 0;
+  forall (v in g.nodes().filter(modified == True)) {
+    active = active + 1;
+  }
+  if (active > 0) {
+    float num_nodes = g.num_nodes();
+    int iterCount = 0;
+    float diff = 0.0;
+    do {
+      diff = 0.0;
+      forall (v in g.nodes().filter(modified == True)) {
+        float sum = 0.0;
+        for (w in g.nodes_to(v)) {
+          if (g.count_outNbrs(w) > 0) {
+            sum = sum + w.pageRank / g.count_outNbrs(w);
+          }
+        }
+        float val = (1.0 - delta) / num_nodes + delta * sum;
+        float d = val - v.pageRank;
+        if (d < 0.0) {
+          d = 0.0 - d;
+        }
+        diff = diff + d;
+        v.pageRank_nxt = val;
+      }
+      forall (v in g.nodes().filter(modified == True)) {
+        v.pageRank = v.pageRank_nxt;
+      }
+      iterCount = iterCount + 1;
+    } while (diff > beta && iterCount < maxIter);
+  }
+}
+
+Dynamic DynPR(Graph g, updates<g> updateBatch, propNode<float> pageRank, float beta, float delta, int maxIter, int batchSize) {
+  propNode<float> pageRank_nxt;
+  propNode<bool> modified;
+  staticPR(g, pageRank, pageRank_nxt, beta, delta, maxIter);
+  Batch(updateBatch : batchSize) {
+    g.attachNodeProperty(modified = False);
+    OnDelete (u in updateBatch.currentBatch(0)) {
+      int del_dst = u.destination;
+      del_dst.modified = True;
+    }
+    g.propagateNodeFlags(modified);
+    g.updateCSRDel(updateBatch);
+    Decremental(g, pageRank, pageRank_nxt, modified, beta, delta, maxIter);
+    g.attachNodeProperty(modified = False);
+    OnAdd (u in updateBatch.currentBatch(1)) {
+      int add_dst = u.destination;
+      add_dst.modified = True;
+    }
+    g.propagateNodeFlags(modified);
+    g.updateCSRAdd(updateBatch);
+    Incremental(g, pageRank, pageRank_nxt, modified, beta, delta, maxIter);
+  }
+}

@@ -1,0 +1,104 @@
+// Appendix Fig. 21: Dynamic SSSP in StarPlat Dynamic.
+//
+// staticSSSP   — Bellman-Ford fixed point over modified frontiers;
+// Incremental  — push relaxation seeded by the OnAdd preprocessing;
+// Decremental  — SP-tree invalidation cascade + re-relaxation;
+// DynSSSP      — the Batch driver (OnDelete → updateCSRDel → Decremental →
+//                OnAdd → updateCSRAdd → Incremental).
+
+Static staticSSSP(Graph g, propNode<int> dist, propNode<int> parent, propNode<bool> modified, int src) {
+  propNode<bool> modified_nxt;
+  g.attachNodeProperty(dist = INF, parent = -1, modified = False, modified_nxt = False);
+  src.dist = 0;
+  src.modified = True;
+  fixedPoint until (finished : !modified) {
+    forall (v in g.nodes().filter(modified == True)) {
+      forall (nbr in g.neighbors(v)) {
+        edge e = g.get_edge(v, nbr);
+        <nbr.dist, nbr.parent, nbr.modified_nxt> = <Min(nbr.dist, v.dist + e.weight), v, True>;
+      }
+    }
+    modified = modified_nxt;
+    g.attachNodeProperty(modified_nxt = False);
+  }
+}
+
+Incremental(Graph g, propNode<int> dist, propNode<int> parent, propNode<bool> modified) {
+  propNode<bool> modified_nxt;
+  g.attachNodeProperty(modified_nxt = False);
+  fixedPoint until (finished : !modified) {
+    forall (v in g.nodes().filter(modified == True)) {
+      forall (nbr in g.neighbors(v)) {
+        edge e = g.get_edge(v, nbr);
+        <nbr.dist, nbr.parent, nbr.modified_nxt> = <Min(nbr.dist, v.dist + e.weight), v, True>;
+      }
+    }
+    modified = modified_nxt;
+    g.attachNodeProperty(modified_nxt = False);
+  }
+}
+
+Decremental(Graph g, propNode<int> dist, propNode<int> parent, propNode<bool> modified) {
+  // phase 1: cascade invalidation down the former SP tree
+  bool changed = True;
+  while (changed) {
+    changed = False;
+    forall (v in g.nodes().filter(modified == False)) {
+      if (v.parent > -1) {
+        if (v.parent.modified == True) {
+          v.dist = INF;
+          v.modified = True;
+          changed = True;
+        }
+      }
+    }
+  }
+  // phase 2: re-seed from every still-valid vertex and relax to a fixed
+  // point — invalidated vertices re-derive their distances from intact ones
+  forall (v in g.nodes()) {
+    if (v.dist < INF) {
+      v.modified = True;
+    } else {
+      v.modified = False;
+      v.parent = -1;
+    }
+  }
+  propNode<bool> modified_nxt;
+  g.attachNodeProperty(modified_nxt = False);
+  fixedPoint until (finished : !modified) {
+    forall (v in g.nodes().filter(modified == True)) {
+      forall (nbr in g.neighbors(v)) {
+        edge e = g.get_edge(v, nbr);
+        <nbr.dist, nbr.parent, nbr.modified_nxt> = <Min(nbr.dist, v.dist + e.weight), v, True>;
+      }
+    }
+    modified = modified_nxt;
+    g.attachNodeProperty(modified_nxt = False);
+  }
+}
+
+Dynamic DynSSSP(Graph g, updates<g> updateBatch, propNode<int> dist, propNode<int> parent, propNode<bool> modified, int batchSize, int src) {
+  staticSSSP(g, dist, parent, modified, src);
+  Batch(updateBatch : batchSize) {
+    OnDelete (u in updateBatch.currentBatch(0)) {
+      int del_src = u.source;
+      int del_dst = u.destination;
+      if (del_dst.parent == del_src) {
+        del_dst.dist = INF;
+        del_dst.parent = -1;
+        del_dst.modified = True;
+      }
+    }
+    g.updateCSRDel(updateBatch);
+    Decremental(g, dist, parent, modified);
+    OnAdd (u in updateBatch.currentBatch(1)) {
+      int add_src = u.source;
+      int add_dst = u.destination;
+      if (add_src.dist < INF) {
+        <add_dst.dist, add_dst.parent, add_dst.modified> = <Min(add_dst.dist, add_src.dist + u.weight), add_src, True>;
+      }
+    }
+    g.updateCSRAdd(updateBatch);
+    Incremental(g, dist, parent, modified);
+  }
+}

@@ -1,0 +1,102 @@
+// Appendix Fig. 19: Dynamic Triangle Counting in StarPlat Dynamic.
+//
+// staticTC     — node-iterator count (u < v < w once per triangle);
+// Incremental  — delta count over the batch's added arcs (run after
+//                updateCSRAdd);
+// Decremental  — delta count over the batch's deleted arcs (run before
+//                updateCSRDel, while the graph is intact);
+// DynTC        — the Batch driver with the 1/2, 1/4, 1/6 multiplicity
+//                corrections folded into the handlers' returns.
+
+Static staticTC(Graph g) {
+  long triangle_count = 0;
+  forall (v in g.nodes()) {
+    forall (u in g.neighbors(v).filter(u < v)) {
+      forall (w in g.neighbors(v).filter(w > v)) {
+        if (g.is_an_edge(u, w)) {
+          triangle_count += 1;
+        }
+      }
+    }
+  }
+  return triangle_count;
+}
+
+Incremental(Graph g, updates<g> addBatch) {
+  long count1 = 0;
+  long count2 = 0;
+  long count3 = 0;
+  for (u in addBatch) {
+    int v1 = u.source;
+    int v2 = u.destination;
+    if (v1 != v2) {
+      forall (v3 in g.neighbors(v1).filter(v3 != v1 && v3 != v2)) {
+        if (g.is_an_edge(v2, v3) || g.is_an_edge(v3, v2)) {
+          int k = 1;
+          if (addBatch.contains(v1, v3)) {
+            k = k + 1;
+          }
+          if (addBatch.contains(v2, v3)) {
+            k = k + 1;
+          }
+          if (k == 1) {
+            count1 += 1;
+          }
+          if (k == 2) {
+            count2 += 1;
+          }
+          if (k > 2) {
+            count3 += 1;
+          }
+        }
+      }
+    }
+  }
+  return count1 / 2 + count2 / 4 + count3 / 6;
+}
+
+Decremental(Graph g, updates<g> delBatch) {
+  long count1 = 0;
+  long count2 = 0;
+  long count3 = 0;
+  for (u in delBatch) {
+    int v1 = u.source;
+    int v2 = u.destination;
+    if (v1 != v2) {
+      forall (v3 in g.neighbors(v1).filter(v3 != v1 && v3 != v2)) {
+        if (g.is_an_edge(v2, v3) || g.is_an_edge(v3, v2)) {
+          int k = 1;
+          if (delBatch.contains(v1, v3)) {
+            k = k + 1;
+          }
+          if (delBatch.contains(v2, v3)) {
+            k = k + 1;
+          }
+          if (k == 1) {
+            count1 += 1;
+          }
+          if (k == 2) {
+            count2 += 1;
+          }
+          if (k > 2) {
+            count3 += 1;
+          }
+        }
+      }
+    }
+  }
+  return count1 / 2 + count2 / 4 + count3 / 6;
+}
+
+Dynamic DynTC(Graph g, updates<g> updateBatch, int batchSize) {
+  long triangle_count = staticTC(g);
+  Batch(updateBatch : batchSize) {
+    updates<g> delBatch = updateBatch.currentBatch(0);
+    updates<g> addBatch = updateBatch.currentBatch(1);
+    triangle_count = triangle_count - Decremental(g, delBatch);
+    g.updateCSRDel(updateBatch);
+    g.updateCSRAdd(updateBatch);
+    triangle_count = triangle_count + Incremental(g, addBatch);
+  }
+  return triangle_count;
+}

@@ -9,23 +9,126 @@
 //!   generated CUDA/OpenMP codes tolerate the dist/parent write race;
 //!   we repair instead so results are bit-reproducible);
 //! * `fixedPoint until (!modified)` → double-buffered atomic flag arrays.
+//!
+//! §Perf iteration 4 (this revision): **allocation-free fixed points.**
+//! Every fixed-point loop previously allocated fresh size-`n` atomic
+//! vectors and collected frontiers through a global `Mutex` each round.
+//! The engine now owns an [`EngineScratch`] — persistent atomic distance
+//! and flag buffers, double-buffered frontiers, per-worker local frontier
+//! buffers merged by prefix-sum concatenation, and a reusable PR rank
+//! buffer — so `relax_fixed_point`, `sssp_static_dense`, `pr_static`,
+//! `recompute_flagged`, and the decremental pull phase allocate nothing
+//! per iteration (asserted by `relax_scratch_reuse_no_realloc`). Dynamic
+//! batches also hand the engine pool to the graph so diff-CSR merge
+//! compaction is parallelized.
 
 use crate::algorithms::{pagerank, sssp, PrState, SsspState, TcState, INF};
 use crate::graph::updates::Batch;
 use crate::graph::{DynGraph, NodeId, Weight};
+use crate::util::sync_slice::SyncSlice;
 use crate::util::threadpool::{Sched, ThreadPool};
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
+use std::sync::Mutex;
 
-/// OpenMP-analogue engine.
-#[derive(Debug, Clone)]
+/// OpenMP-analogue engine with persistent, reusable work buffers.
+#[derive(Debug)]
 pub struct CpuEngine {
     pub pool: ThreadPool,
     pub sched: Sched,
+    scratch: Mutex<EngineScratch>,
 }
 
 impl Default for CpuEngine {
     fn default() -> Self {
-        CpuEngine { pool: ThreadPool::host(), sched: Sched::default() }
+        CpuEngine::new_pool(ThreadPool::host(), Sched::default())
+    }
+}
+
+impl Clone for CpuEngine {
+    fn clone(&self) -> Self {
+        // scratch is a cache — a clone starts with a fresh (empty) one
+        CpuEngine::new_pool(self.pool.clone(), self.sched)
+    }
+}
+
+/// Persistent per-engine buffers for the fixed-point hot loops. Buffers
+/// grow monotonically in capacity and are reused across calls; the
+/// `alloc_events` counter records every (re)allocation so tests can assert
+/// steady-state runs allocate nothing.
+#[derive(Debug, Default)]
+struct EngineScratch {
+    /// Atomic distance array (the `Min` construct's target).
+    dist: Vec<AtomicI64>,
+    /// Atomic parent array for the deterministic repair pass.
+    parent: Vec<AtomicI64>,
+    /// Dense fixed point: current-round modified flags.
+    cur_flags: Vec<AtomicBool>,
+    /// Next-round modified/dedup flags (shared with the sparse frontier).
+    nxt_flags: Vec<AtomicBool>,
+    /// Compacted frontier (current round).
+    frontier: Vec<NodeId>,
+    /// Frontier under construction (merged from `locals`).
+    next_frontier: Vec<NodeId>,
+    /// Per-worker local frontier buffers (no global collection Mutex).
+    locals: Vec<Vec<NodeId>>,
+    /// PR double buffer.
+    next_rank: Vec<f64>,
+    /// Decremental pull-phase Jacobi buffer.
+    next_dist: Vec<i64>,
+    /// SP-tree child index (head pointer per vertex).
+    child_head: Vec<i64>,
+    /// SP-tree child index (next-sibling list).
+    child_next: Vec<i64>,
+    /// Per-worker convergence-delta accumulators.
+    diff_locals: Vec<f64>,
+    /// Count of buffer (re)allocations — the scratch-reuse assertion.
+    alloc_events: u64,
+}
+
+fn fit<T>(v: &mut Vec<T>, n: usize, mk: impl FnMut() -> T, events: &mut u64) {
+    if v.capacity() < n {
+        *events += 1;
+    }
+    v.resize_with(n, mk);
+}
+
+impl EngineScratch {
+    fn ensure(&mut self, n: usize, workers: usize) {
+        let mut events = 0u64;
+        fit(&mut self.dist, n, || AtomicI64::new(0), &mut events);
+        fit(&mut self.parent, n, || AtomicI64::new(-1), &mut events);
+        fit(&mut self.cur_flags, n, || AtomicBool::new(false), &mut events);
+        fit(&mut self.nxt_flags, n, || AtomicBool::new(false), &mut events);
+        fit(&mut self.next_rank, n, || 0.0, &mut events);
+        fit(&mut self.next_dist, n, || 0, &mut events);
+        fit(&mut self.child_head, n, || -1, &mut events);
+        fit(&mut self.child_next, n, || -1, &mut events);
+        fit(&mut self.diff_locals, workers, || 0.0, &mut events);
+        if self.locals.len() != workers {
+            if self.locals.len() < workers {
+                events += 1;
+            }
+            self.locals.resize_with(workers, Vec::new);
+        }
+        // Pre-reserve every frontier buffer to its n-bounded maximum (the
+        // dedup flags cap total pushes per round at n). This makes round
+        // capacity growth impossible, so steady-state runs are exactly
+        // allocation-free regardless of how the dynamic schedule spreads
+        // work across workers.
+        for buf in self.locals.iter_mut().chain([&mut self.frontier, &mut self.next_frontier])
+        {
+            if buf.capacity() < n {
+                events += 1;
+                buf.reserve(n.saturating_sub(buf.len()));
+            }
+        }
+        self.alloc_events += events;
+    }
+
+    fn frontier_capacity(&self) -> usize {
+        self.frontier.capacity()
+            + self.next_frontier.capacity()
+            + self.locals.iter().map(|l| l.capacity()).sum::<usize>()
     }
 }
 
@@ -43,42 +146,47 @@ pub fn atomic_min(cell: &AtomicI64, val: i64) -> bool {
     false
 }
 
-fn to_atomic(v: &[i64]) -> Vec<AtomicI64> {
-    v.iter().map(|&x| AtomicI64::new(x)).collect()
-}
-
-fn from_atomic(v: Vec<AtomicI64>) -> Vec<i64> {
-    v.into_iter().map(|a| a.into_inner()).collect()
-}
-
 impl CpuEngine {
     pub fn new(threads: usize, sched: Sched) -> Self {
-        CpuEngine { pool: ThreadPool::new(threads), sched }
+        Self::new_pool(ThreadPool::new(threads), sched)
+    }
+
+    fn new_pool(pool: ThreadPool, sched: Sched) -> Self {
+        CpuEngine { pool, sched, scratch: Mutex::new(EngineScratch::default()) }
+    }
+
+    /// Total scratch-buffer (re)allocations so far. Steady-state repeat
+    /// runs must not move this counter — see
+    /// `relax_scratch_reuse_no_realloc`.
+    pub fn scratch_alloc_events(&self) -> u64 {
+        self.scratch.lock().unwrap().alloc_events
     }
 
     /// Deterministic parent repair: `parent[v] = argmin_u (dist[u] + w(u,v))`
     /// over in-neighbors achieving `dist[v]` (smallest such `u` wins).
-    fn repair_parents(&self, g: &DynGraph, st: &mut SsspState) {
-        let dist = &st.dist;
+    fn repair_parents(&self, g: &DynGraph, st: &mut SsspState, sc: &mut EngineScratch) {
         let n = g.num_nodes();
-        let parent: Vec<AtomicI64> = (0..n).map(|_| AtomicI64::new(-1)).collect();
+        sc.ensure(n, self.pool.threads());
+        let dist = &st.dist;
+        let source = st.source;
+        let parent = &sc.parent;
         self.pool.parallel_for(n, self.sched, |v| {
-            let dv = dist[v];
-            if v as NodeId == st.source || dv >= INF {
-                return;
-            }
             let mut best = -1i64;
-            for (u, w) in g.in_neighbors(v as NodeId) {
-                if dist[u as usize] < INF && dist[u as usize] + w as i64 == dv {
-                    let cand = u as i64;
-                    if best == -1 || cand < best {
-                        best = cand;
+            if v as NodeId != source && dist[v] < INF {
+                for (u, w) in g.in_neighbors(v as NodeId) {
+                    if dist[u as usize] < INF && dist[u as usize] + w as i64 == dist[v] {
+                        let cand = u as i64;
+                        if best == -1 || cand < best {
+                            best = cand;
+                        }
                     }
                 }
             }
             parent[v].store(best, Ordering::Relaxed);
         });
-        st.parent = from_atomic(parent);
+        for v in 0..n {
+            st.parent[v] = sc.parent[v].load(Ordering::Relaxed);
+        }
         st.parent[st.source as usize] = -1;
     }
 
@@ -87,42 +195,79 @@ impl CpuEngine {
     /// with `modified`/`modified_nxt` double buffering.
     ///
     /// §Perf iteration 2: rounds iterate a *compacted frontier* instead of
-    /// scanning all `n` vertices per round (the Green-Marl-style dense
-    /// push the paper criticizes in §6.2 — and what this engine did
-    /// before; see EXPERIMENTS.md §Perf). The `modified_nxt` flags are
-    /// kept for dedup, exactly as in the generated code.
-    fn relax_fixed_point(&self, g: &DynGraph, dist: &mut Vec<i64>, seed: &[bool]) {
+    /// scanning all `n` vertices per round. §Perf iteration 4: every
+    /// buffer lives in [`EngineScratch`] — the atomic distances, the dedup
+    /// flags, the double-buffered frontier, and the per-worker local
+    /// buffers (merged by prefix-sum concatenation, replacing the old
+    /// global `Mutex`) — so rounds allocate nothing once warm.
+    fn relax_fixed_point(
+        &self,
+        g: &DynGraph,
+        dist: &mut [i64],
+        seed: &[bool],
+        sc: &mut EngineScratch,
+    ) {
         let n = g.num_nodes();
-        let adist = to_atomic(dist);
-        let mut frontier: Vec<NodeId> = (0..n)
-            .filter(|&v| seed[v])
-            .map(|v| v as NodeId)
-            .collect();
-        while !frontier.is_empty() {
-            let nxt_flags: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
-            let collected = std::sync::Mutex::new(Vec::with_capacity(frontier.len()));
-            let fr = &frontier;
-            self.pool.parallel_for(fr.len(), self.sched, |i| {
-                let v = fr[i];
-                let dv = adist[v as usize].load(Ordering::Relaxed);
-                if dv >= INF {
-                    return;
-                }
-                let mut local: Vec<NodeId> = Vec::new();
-                for (nbr, w) in g.out_neighbors(v) {
-                    if atomic_min(&adist[nbr as usize], dv + w as i64)
-                        && !nxt_flags[nbr as usize].swap(true, Ordering::Relaxed)
-                    {
-                        local.push(nbr);
-                    }
-                }
-                if !local.is_empty() {
-                    collected.lock().unwrap().extend(local);
-                }
-            });
-            frontier = collected.into_inner().unwrap();
+        sc.ensure(n, self.pool.threads());
+        let cap_before = sc.frontier_capacity();
+        let EngineScratch {
+            dist: adist, nxt_flags, frontier, next_frontier, locals, alloc_events, ..
+        } = sc;
+        frontier.clear();
+        for v in 0..n {
+            adist[v].store(dist[v], Ordering::Relaxed);
+            nxt_flags[v].store(false, Ordering::Relaxed);
+            if seed[v] {
+                frontier.push(v as NodeId);
+            }
         }
-        *dist = from_atomic(adist);
+        let adist = &adist[..];
+        let nxt_flags = &nxt_flags[..];
+        while !frontier.is_empty() {
+            for l in locals.iter_mut() {
+                l.clear();
+            }
+            {
+                let fr: &[NodeId] = frontier;
+                self.pool.parallel_for_with(fr.len(), self.sched, locals, |local, i| {
+                    let v = fr[i];
+                    let dv = adist[v as usize].load(Ordering::Relaxed);
+                    if dv >= INF {
+                        return;
+                    }
+                    for (nbr, w) in g.out_neighbors(v) {
+                        if atomic_min(&adist[nbr as usize], dv + w as i64)
+                            && !nxt_flags[nbr as usize].swap(true, Ordering::Relaxed)
+                        {
+                            local.push(nbr);
+                        }
+                    }
+                });
+            }
+            // Merge the per-worker buffers at their prefix-sum offsets —
+            // contiguous copies, no global Mutex, no fresh allocation
+            // (capacity is bounded by n thanks to the dedup flags).
+            next_frontier.clear();
+            let total: usize = locals.iter().map(|l| l.len()).sum();
+            next_frontier.reserve(total);
+            for l in locals.iter() {
+                next_frontier.extend_from_slice(l);
+            }
+            // Reset only the flags touched this round: O(frontier), not O(n).
+            for &v in next_frontier.iter() {
+                nxt_flags[v as usize].store(false, Ordering::Relaxed);
+            }
+            std::mem::swap(frontier, next_frontier);
+        }
+        for (v, d) in dist.iter_mut().enumerate().take(n) {
+            *d = adist[v].load(Ordering::Relaxed);
+        }
+        let cap_after = frontier.capacity()
+            + next_frontier.capacity()
+            + locals.iter().map(|l| l.capacity()).sum::<usize>();
+        if cap_after > cap_before {
+            *alloc_events += 1;
+        }
     }
 
     // ------------------------------------------------------------ SSSP
@@ -132,39 +277,62 @@ impl CpuEngine {
     /// [Green-Marl and StarPlat] follow a dense push configuration").
     /// This is the faithful "StarPlat Static" comparator for Tables 2–4;
     /// [`Self::sssp_static`] is the frontier-compacted §Perf-optimized
-    /// variant.
+    /// variant. The flag arrays are double-buffered scratch vectors
+    /// swapped each round — the dense shape is preserved, the per-round
+    /// allocations are gone.
     pub fn sssp_static_dense(&self, g: &DynGraph, source: NodeId) -> SsspState {
         let n = g.num_nodes();
         let mut st = SsspState::new(n, source);
-        let adist = to_atomic(&st.dist);
-        adist[source as usize].store(0, Ordering::Relaxed);
-        let mut modified: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
-        modified[source as usize].store(true, Ordering::Relaxed);
-        loop {
-            let any = AtomicBool::new(false);
-            let nxt: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
-            self.pool.parallel_for(n, self.sched, |v| {
-                if !modified[v].load(Ordering::Relaxed) {
-                    return;
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        sc.ensure(n, self.pool.threads());
+        {
+            let EngineScratch { dist: adist, cur_flags, nxt_flags, .. } = sc;
+            for v in 0..n {
+                adist[v].store(st.dist[v], Ordering::Relaxed);
+                cur_flags[v].store(false, Ordering::Relaxed);
+                nxt_flags[v].store(false, Ordering::Relaxed);
+            }
+            cur_flags[source as usize].store(true, Ordering::Relaxed);
+            let adist = &adist[..];
+            loop {
+                let any = AtomicBool::new(false);
+                {
+                    let cur = &cur_flags[..];
+                    let nxt = &nxt_flags[..];
+                    self.pool.parallel_for(n, self.sched, |v| {
+                        if !cur[v].load(Ordering::Relaxed) {
+                            return;
+                        }
+                        let dv = adist[v].load(Ordering::Relaxed);
+                        if dv >= INF {
+                            return;
+                        }
+                        for (nbr, w) in g.out_neighbors(v as NodeId) {
+                            if atomic_min(&adist[nbr as usize], dv + w as i64) {
+                                nxt[nbr as usize].store(true, Ordering::Relaxed);
+                                any.store(true, Ordering::Relaxed);
+                            }
+                        }
+                    });
                 }
-                let dv = adist[v].load(Ordering::Relaxed);
-                if dv >= INF {
-                    return;
+                std::mem::swap(cur_flags, nxt_flags);
+                {
+                    // the swapped-out buffer becomes next round's nxt: clear it
+                    let nxt = &nxt_flags[..];
+                    self.pool.parallel_for(n, self.sched, |v| {
+                        nxt[v].store(false, Ordering::Relaxed);
+                    });
                 }
-                for (nbr, w) in g.out_neighbors(v as NodeId) {
-                    if atomic_min(&adist[nbr as usize], dv + w as i64) {
-                        nxt[nbr as usize].store(true, Ordering::Relaxed);
-                        any.store(true, Ordering::Relaxed);
-                    }
+                if !any.load(Ordering::Relaxed) {
+                    break;
                 }
-            });
-            modified = nxt;
-            if !any.load(Ordering::Relaxed) {
-                break;
+            }
+            for v in 0..n {
+                st.dist[v] = adist[v].load(Ordering::Relaxed);
             }
         }
-        st.dist = from_atomic(adist);
-        self.repair_parents(g, &mut st);
+        self.repair_parents(g, &mut st, sc);
         st
     }
 
@@ -174,15 +342,22 @@ impl CpuEngine {
         let mut st = SsspState::new(n, source);
         let mut seed = vec![false; n];
         seed[source as usize] = true;
-        self.relax_fixed_point(g, &mut st.dist, &seed);
-        self.repair_parents(g, &mut st);
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        self.relax_fixed_point(g, &mut st.dist, &seed, sc);
+        self.repair_parents(g, &mut st, sc);
         st
     }
 
     /// One dynamic batch: OnDelete → updateCSRDel → Decremental →
     /// OnAdd → updateCSRAdd → Incremental (all phases parallel).
     pub fn sssp_dynamic_batch(&self, g: &mut DynGraph, st: &mut SsspState, batch: &Batch<'_>) {
+        // Diff-CSR merge compaction runs on the engine pool.
+        g.set_merge_pool(self.pool.clone());
         let n = g.num_nodes();
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        sc.ensure(n, self.pool.threads());
 
         // OnDelete preprocessing (serial: batch-sized, not graph-sized).
         let dels = batch.deletions();
@@ -191,12 +366,14 @@ impl CpuEngine {
 
         // Decremental phase 1 — §Perf iteration 3: instead of re-scanning
         // all n vertices per cascade round, build the SP-tree child index
-        // once (one O(n) pass per batch) and BFS the invalidated subtrees.
+        // once (one O(n) pass per batch, into scratch) and BFS the
+        // invalidated subtrees.
         let mut affected: Vec<NodeId> =
             (0..n).filter(|&v| modified[v]).map(|v| v as NodeId).collect();
         if !affected.is_empty() {
-            let mut child_head = vec![-1i64; n];
-            let mut child_next = vec![-1i64; n];
+            let EngineScratch { child_head, child_next, .. } = sc;
+            child_head[..n].fill(-1);
+            child_next[..n].fill(-1);
             for v in 0..n {
                 let p = st.parent[v];
                 if p > -1 {
@@ -222,29 +399,35 @@ impl CpuEngine {
         }
 
         // Decremental phase 2: pull recomputation restricted to the
-        // affected list (owner-writes, race-free).
+        // affected list (owner-writes, race-free). Jacobi reads come from
+        // st.dist, writes go to the scratch buffer — no per-round clones.
         while !affected.is_empty() {
             let changed = AtomicBool::new(false);
-            let dist_snapshot = st.dist.clone();
-            let new_dist: Vec<AtomicI64> = to_atomic(&st.dist);
-            let aff = &affected;
-            self.pool.parallel_for(aff.len(), self.sched, |i| {
-                let v = aff[i] as usize;
-                let mut best = dist_snapshot[v];
-                for (u, w) in g.in_neighbors(v as NodeId) {
-                    let du = dist_snapshot[u as usize];
-                    if du < INF && du + (w as i64) < best {
-                        best = du + w as i64;
+            {
+                let cur: &[i64] = &st.dist;
+                let next = SyncSlice::new(&mut sc.next_dist[..n]);
+                let aff = &affected;
+                self.pool.parallel_for(aff.len(), self.sched, |i| {
+                    let v = aff[i] as usize;
+                    let mut best = cur[v];
+                    for (u, w) in g.in_neighbors(v as NodeId) {
+                        let du = cur[u as usize];
+                        if du < INF && du + (w as i64) < best {
+                            best = du + w as i64;
+                        }
                     }
-                }
-                if best < dist_snapshot[v] {
-                    new_dist[v].store(best, Ordering::Relaxed);
-                    changed.store(true, Ordering::Relaxed);
-                }
-            });
-            st.dist = from_atomic(new_dist);
+                    // SAFETY: affected vertices are unique → disjoint writes.
+                    unsafe { next.set(v, best) };
+                    if best < cur[v] {
+                        changed.store(true, Ordering::Relaxed);
+                    }
+                });
+            }
             if !changed.load(Ordering::Relaxed) {
                 break;
+            }
+            for &v in &affected {
+                st.dist[v as usize] = sc.next_dist[v as usize];
             }
         }
 
@@ -252,25 +435,36 @@ impl CpuEngine {
         let adds = batch.additions();
         let seed = sssp::on_add(st, &adds);
         g.apply_additions(&adds);
-        self.relax_fixed_point(g, &mut st.dist, &seed);
-        self.repair_parents(g, st);
+        self.relax_fixed_point(g, &mut st.dist, &seed, sc);
+        self.repair_parents(g, st, sc);
     }
 
     // ------------------------------------------------------------ PR
 
-    /// Static PageRank: parallel double-buffered pull sweeps.
+    /// Static PageRank: parallel double-buffered pull sweeps. The next-rank
+    /// buffer is engine scratch swapped with `st.rank` each sweep, and the
+    /// convergence delta is accumulated per-worker — nothing is allocated
+    /// per iteration.
     pub fn pr_static(&self, g: &DynGraph, st: &mut PrState) -> usize {
         let n = g.num_nodes();
         let nf = n as f64;
-        st.rank = vec![1.0 / nf; n];
+        st.rank.clear();
+        st.rank.resize(n, 1.0 / nf);
+        let workers = self.pool.threads();
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        sc.ensure(n, workers);
+        let EngineScratch { next_rank, diff_locals, .. } = sc;
         let mut iters = 0;
         loop {
-            let rank = &st.rank;
-            let delta = st.delta;
-            let (next, diff) = self.pool.parallel_reduce(
-                n,
-                (vec![0.0f64; n], 0.0f64),
-                |(mut next, mut diff), v| {
+            for d in diff_locals.iter_mut() {
+                *d = 0.0;
+            }
+            {
+                let rank: &[f64] = &st.rank;
+                let delta = st.delta;
+                let next = SyncSlice::new(&mut next_rank[..]);
+                self.pool.parallel_for_with(n, self.sched, diff_locals, |dacc, v| {
                     let mut sum = 0.0;
                     for (nbr, _) in g.in_neighbors(v as NodeId) {
                         let d = g.out_degree(nbr);
@@ -279,22 +473,13 @@ impl CpuEngine {
                         }
                     }
                     let val = (1.0 - delta) / nf + delta * sum;
-                    diff += (val - rank[v]).abs();
-                    next[v] = val;
-                    (next, diff)
-                },
-                |(mut a, da), (b, db)| {
-                    // merge: each worker fills a disjoint contiguous range,
-                    // so non-zero-diff entries never collide.
-                    for v in 0..n {
-                        if b[v] != 0.0 {
-                            a[v] = b[v];
-                        }
-                    }
-                    (a, da + db)
-                },
-            );
-            st.rank = next;
+                    *dacc += (val - rank[v]).abs();
+                    // SAFETY: each v visited exactly once (pool contract).
+                    unsafe { next.set(v, val) };
+                });
+            }
+            let diff: f64 = diff_locals.iter().sum();
+            std::mem::swap(&mut st.rank, next_rank);
             iters += 1;
             if diff <= st.beta || iters >= st.max_iter {
                 return iters;
@@ -311,6 +496,7 @@ impl CpuEngine {
     ) -> pagerank::PrBatchStats {
         // The flag closure and restricted sweeps are bounded by the flagged
         // subgraph; reuse the reference pipeline but with parallel sweeps.
+        g.set_merge_pool(self.pool.clone());
         let n = g.num_nodes();
         let mut stats = pagerank::PrBatchStats::default();
 
@@ -339,20 +525,27 @@ impl CpuEngine {
     fn recompute_flagged(&self, g: &DynGraph, st: &mut PrState, flags: &[bool]) -> usize {
         let n = g.num_nodes();
         let nf = n as f64;
-        let active: Vec<NodeId> =
-            (0..n as NodeId).filter(|&v| flags[v as usize]).collect();
+        let active: Vec<NodeId> = (0..n as NodeId).filter(|&v| flags[v as usize]).collect();
         if active.is_empty() {
             return 0;
         }
+        let workers = self.pool.threads();
+        let mut guard = self.scratch.lock().unwrap();
+        let sc = &mut *guard;
+        sc.ensure(n, workers);
+        let EngineScratch { next_rank, diff_locals, .. } = sc;
         let mut iters = 0;
         loop {
-            let rank = &st.rank;
-            let delta = st.delta;
-            let vals: Vec<(usize, f64, f64)> = self.pool.parallel_reduce(
-                active.len(),
-                Vec::new(),
-                |mut acc, i| {
-                    let v = active[i];
+            for d in diff_locals.iter_mut() {
+                *d = 0.0;
+            }
+            {
+                let rank: &[f64] = &st.rank;
+                let delta = st.delta;
+                let next = SyncSlice::new(&mut next_rank[..]);
+                let act = &active;
+                self.pool.parallel_for_with(act.len(), self.sched, diff_locals, |dacc, i| {
+                    let v = act[i];
                     let mut sum = 0.0;
                     for (nbr, _) in g.in_neighbors(v) {
                         let d = g.out_degree(nbr);
@@ -361,18 +554,14 @@ impl CpuEngine {
                         }
                     }
                     let val = (1.0 - delta) / nf + delta * sum;
-                    acc.push((v as usize, val, (val - rank[v as usize]).abs()));
-                    acc
-                },
-                |mut a, b| {
-                    a.extend(b);
-                    a
-                },
-            );
-            let mut diff = 0.0;
-            for &(v, val, d) in &vals {
-                st.rank[v] = val;
-                diff += d;
+                    *dacc += (val - rank[v as usize]).abs();
+                    // SAFETY: active vertices are unique → disjoint writes.
+                    unsafe { next.set(v as usize, val) };
+                });
+            }
+            let diff: f64 = diff_locals.iter().sum();
+            for &v in &active {
+                st.rank[v as usize] = next_rank[v as usize];
             }
             iters += 1;
             if diff <= st.beta || iters >= st.max_iter {
@@ -383,7 +572,10 @@ impl CpuEngine {
 
     // ------------------------------------------------------------ TC
 
-    /// Static TC: parallel node-iterator with reduction.
+    /// Static TC: parallel node-iterator with reduction. The per-wedge
+    /// membership probe `g.has_edge(u, w)` is now a binary search on the
+    /// sorted adjacency (O(log deg)), and the neighbor list is re-walked
+    /// instead of collected — no per-vertex allocation.
     pub fn tc_static(&self, g: &DynGraph) -> TcState {
         let n = g.num_nodes();
         let count = self.pool.parallel_reduce(
@@ -391,10 +583,15 @@ impl CpuEngine {
             0i64,
             |acc, v| {
                 let v = v as NodeId;
-                let nbrs: Vec<NodeId> = g.out_neighbors(v).map(|(x, _)| x).collect();
                 let mut local = 0i64;
-                for &u in nbrs.iter().filter(|&&u| u < v) {
-                    for &w in nbrs.iter().filter(|&&w| w > v) {
+                for (u, _) in g.out_neighbors(v) {
+                    if u >= v {
+                        continue;
+                    }
+                    for (w, _) in g.out_neighbors(v) {
+                        if w <= v {
+                            continue;
+                        }
                         if g.has_edge(u, w) {
                             local += 1;
                         }
@@ -415,11 +612,12 @@ impl CpuEngine {
         dels: &[(NodeId, NodeId)],
         adds: &[(NodeId, NodeId, Weight)],
     ) {
-        st.triangles -= self.delta_count(g, &dels.to_vec(), dels);
+        g.set_merge_pool(self.pool.clone());
+        st.triangles -= self.delta_count(g, dels, dels);
         g.apply_deletions(dels);
         g.apply_additions(adds);
         let arcs: Vec<(NodeId, NodeId)> = adds.iter().map(|&(u, v, _)| (u, v)).collect();
-        st.triangles += self.delta_count(g, &arcs, &arcs.clone());
+        st.triangles += self.delta_count(g, &arcs, &arcs);
     }
 
     fn delta_count(
@@ -501,6 +699,16 @@ mod tests {
     }
 
     #[test]
+    fn dense_sssp_matches_oracle() {
+        let g = generators::rmat(7, 700, 0.57, 0.19, 0.19, 5);
+        let want = sssp::dijkstra_oracle(&g, 0);
+        for e in engines() {
+            let st = e.sssp_static_dense(&g, 0);
+            assert_eq!(st.dist, want);
+        }
+    }
+
+    #[test]
     fn parallel_sssp_parents_consistent() {
         let g = generators::uniform_random(200, 1000, 9, 5);
         let e = CpuEngine::new(4, Sched::Dynamic { chunk: 8 });
@@ -512,6 +720,33 @@ mod tests {
                 let w = g.edge_weight(p as NodeId, v as NodeId).unwrap();
                 assert_eq!(st.dist[v], st.dist[p as usize] + w as i64);
             }
+        }
+    }
+
+    /// The scratch-reuse contract behind "zero per-iteration heap
+    /// allocation": after one warm run, repeat runs of the relax fixed
+    /// point (and the dense/PR sweeps) must not grow or reallocate any
+    /// engine buffer.
+    #[test]
+    fn relax_scratch_reuse_no_realloc() {
+        let g = generators::rmat(9, 4000, 0.57, 0.19, 0.19, 21);
+        for threads in [1usize, 4] {
+            let e = CpuEngine::new(threads, Sched::Dynamic { chunk: 64 });
+            e.sssp_static(&g, 0); // warm-up: buffers grow here
+            e.sssp_static_dense(&g, 0);
+            let mut st = crate::coordinator::pr_params(g.num_nodes());
+            e.pr_static(&g, &mut st);
+            let warm = e.scratch_alloc_events();
+            assert!(warm > 0, "warm-up must have allocated scratch");
+            e.sssp_static(&g, 0);
+            e.sssp_static(&g, 0);
+            e.sssp_static_dense(&g, 0);
+            e.pr_static(&g, &mut st);
+            assert_eq!(
+                e.scratch_alloc_events(),
+                warm,
+                "steady-state runs reallocated scratch ({threads} threads)"
+            );
         }
     }
 

@@ -17,7 +17,7 @@ use crate::backend::xla::XlaEngine;
 use crate::backend::BackendKind;
 use crate::graph::{DynGraph, NodeId, UpdateStream};
 use crate::util::timer::time_it;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Algorithm selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

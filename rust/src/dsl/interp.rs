@@ -11,7 +11,7 @@ use super::ast::*;
 use crate::algorithms::sssp::INF;
 use crate::graph::updates::{Batch as GBatch, UpdateKind, UpdateStream};
 use crate::graph::{DynGraph, NodeId};
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;

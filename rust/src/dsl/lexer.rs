@@ -1,6 +1,6 @@
 //! Tokenizer for the StarPlat Dynamic DSL.
 
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 
 /// A lexical token with its source line (for diagnostics).
 #[derive(Debug, Clone, PartialEq)]

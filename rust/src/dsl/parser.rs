@@ -7,7 +7,7 @@
 
 use super::ast::*;
 use super::lexer::{lex, Tok, Token};
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::{anyhow, bail, Result};
 
 pub fn parse_program(src: &str) -> Result<Program> {
     let toks = lex(src)?;

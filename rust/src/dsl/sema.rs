@@ -12,7 +12,7 @@
 //!   no synchronization (the common fast path).
 
 use super::ast::*;
-use anyhow::{bail, Result};
+use crate::util::error::{bail, Result};
 use std::collections::{BTreeMap, BTreeSet};
 
 /// What kind of synchronization a write site needs.

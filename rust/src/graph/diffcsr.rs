@@ -9,44 +9,56 @@
 //!  * live out-degrees (the paper's `count_outNbrs`, which must not count
 //!    tombstones).
 //!
+//! # Flat diff-block layout
+//!
+//! Each sealed [`DiffBlock`] is a compact CSR over the full vertex set
+//! (per-block `offsets`/`coords`/`weights` arrays, ranges sorted by
+//! destination), built once at [`seal_batch`](DiffCsr) time from the
+//! batch's staged overflow inserts. Compared to the map-of-vecs layout this
+//! replaces, neighbor iteration over a block is two array reads and a
+//! contiguous scan instead of a hash probe per vertex per block, and
+//! membership tests are binary searches.
+//!
+//! Inserts staged during the *current* batch live in a small `pending`
+//! edge list (visible to all read paths) until the batch is sealed.
+//!
+//! A per-vertex **overflow bitmap** records which sources have any edge
+//! outside the base CSR; `out_neighbors`/`in_neighbors`/`has_edge` consult
+//! it first and skip the entire diff chain for untouched vertices — the
+//! common case under point updates, and the reason diff-chain traversal
+//! throughput stays within noise of the merged CSR (see
+//! `benches/microbench.rs`, tracked in `BENCH_microbench.json`).
+//!
 //! After a configurable number of batches the diff chain is merged back
-//! into a fresh compact CSR (`merge`), exactly as §3.5 describes.
+//! into a fresh compact CSR (`merge`), exactly as §3.5 describes. The
+//! merge's per-vertex gather/sort/compact is embarrassingly parallel and
+//! runs on the engine thread pool when one is attached
+//! ([`DynGraph::set_merge_pool`]).
 
 use super::csr::{Csr, TOMBSTONE};
 use super::{NodeId, Weight};
-use std::collections::HashMap;
+use crate::util::sync_slice::SyncSlice;
+use crate::util::threadpool::{Sched, ThreadPool};
 
-/// One auxiliary diff block: a small CSR over the same vertex set holding
-/// edges added in one batch that did not fit a vacant base slot.
-#[derive(Debug, Clone, Default)]
+/// One sealed auxiliary diff block: a compact CSR over the same vertex set
+/// holding the edges of one batch that did not fit a vacant base slot.
+#[derive(Debug, Clone)]
 pub struct DiffBlock {
-    /// Per-vertex adjacency (kept as a map-of-vecs; blocks are small —
-    /// bounded by the batch's insert count).
-    pub adj: HashMap<NodeId, Vec<(NodeId, Weight)>>,
-    /// Number of live entries (deletions may tombstone diff entries too).
+    /// Flat per-block storage; ranges sorted, tombstones at range tails.
+    pub csr: Csr,
+    /// Number of live (non-tombstoned) entries.
     pub live: usize,
 }
 
 impl DiffBlock {
-    fn insert(&mut self, u: NodeId, v: NodeId, w: Weight) {
-        self.adj.entry(u).or_default().push((v, w));
-        self.live += 1;
-    }
-
     /// Tombstone `u -> v` inside this block. Returns true if found.
     fn delete(&mut self, u: NodeId, v: NodeId) -> bool {
-        if let Some(list) = self.adj.get_mut(&u) {
-            if let Some(slot) = list.iter_mut().find(|e| e.0 == v) {
-                slot.0 = TOMBSTONE;
-                self.live -= 1;
-                return true;
-            }
+        if self.csr.delete_edge(u, v) {
+            self.live -= 1;
+            true
+        } else {
+            false
         }
-        false
-    }
-
-    fn neighbors(&self, u: NodeId) -> impl Iterator<Item = (NodeId, Weight)> + '_ {
-        self.adj.get(&u).into_iter().flatten().copied().filter(|e| e.0 != TOMBSTONE)
     }
 }
 
@@ -55,23 +67,73 @@ impl DiffBlock {
 pub struct DiffCsr {
     pub base: Csr,
     pub diffs: Vec<DiffBlock>,
+    /// Overflow inserts of the currently-open batch (sealed into a
+    /// [`DiffBlock`] by `seal_batch`).
+    pending: Vec<(NodeId, NodeId, Weight)>,
+    /// Bit `v` set ⇒ vertex `v` may have edges in `diffs`/`pending`.
+    /// Conservative (never cleared by deletes), reset on merge.
+    overflow: Vec<u64>,
 }
 
 impl DiffCsr {
     fn new(base: Csr) -> Self {
-        DiffCsr { base, diffs: Vec::new() }
+        let n = base.num_nodes();
+        DiffCsr { base, diffs: Vec::new(), pending: Vec::new(), overflow: vec![0; n.div_ceil(64)] }
     }
 
+    #[inline]
+    fn has_overflow(&self, v: NodeId) -> bool {
+        (self.overflow[(v >> 6) as usize] >> (v & 63)) & 1 != 0
+    }
+
+    #[inline]
+    fn set_overflow(&mut self, v: NodeId) {
+        self.overflow[(v >> 6) as usize] |= 1u64 << (v & 63);
+    }
+
+    /// Live neighbors of `u`. Untouched vertices (overflow bit clear) pay
+    /// only for the base-CSR scan — the diff chain is skipped entirely.
+    #[inline]
     fn neighbors(&self, u: NodeId) -> impl Iterator<Item = (NodeId, Weight)> + '_ {
-        self.base.neighbors(u).chain(self.diffs.iter().flat_map(move |d| d.neighbors(u)))
+        let overflow = self.has_overflow(u);
+        let diffs: &[DiffBlock] = if overflow { &self.diffs } else { &[] };
+        let pending: &[(NodeId, NodeId, Weight)] = if overflow { &self.pending } else { &[] };
+        self.base
+            .neighbors(u)
+            .chain(diffs.iter().flat_map(move |d| d.csr.neighbors(u)))
+            .chain(pending.iter().filter(move |e| e.0 == u).map(|e| (e.1, e.2)))
     }
 
+    /// Membership + weight lookup: O(log deg) binary searches over the
+    /// base range and each block range (newest first), pending last-in
+    /// wins semantics preserved by checking it before sealed blocks.
     fn find(&self, u: NodeId, v: NodeId) -> Option<Weight> {
-        self.neighbors(u).find(|&(n, _)| n == v).map(|(_, w)| w)
+        if let Some(s) = self.base.find_edge(u, v) {
+            return Some(self.base.weights[s]);
+        }
+        if !self.has_overflow(u) {
+            return None;
+        }
+        if let Some(e) = self.pending.iter().find(|e| e.0 == u && e.1 == v) {
+            return Some(e.2);
+        }
+        for d in self.diffs.iter().rev() {
+            if let Some(s) = d.csr.find_edge(u, v) {
+                return Some(d.csr.weights[s]);
+            }
+        }
+        None
     }
 
     fn delete(&mut self, u: NodeId, v: NodeId) -> bool {
         if self.base.delete_edge(u, v) {
+            return true;
+        }
+        if !self.has_overflow(u) {
+            return false;
+        }
+        if let Some(i) = self.pending.iter().position(|e| e.0 == u && e.1 == v) {
+            self.pending.swap_remove(i);
             return true;
         }
         for d in self.diffs.iter_mut().rev() {
@@ -82,23 +144,33 @@ impl DiffCsr {
         false
     }
 
-    /// Insert preferring a vacant base slot, else the current diff block
-    /// (creating one if needed) — the §3.5 placement policy.
+    /// Insert preferring a vacant base slot, else stage into the pending
+    /// overflow list — the §3.5 placement policy.
     fn insert(&mut self, u: NodeId, v: NodeId, w: Weight) {
         if self.base.try_insert_in_place(u, v, w) {
             return;
         }
-        if self.diffs.is_empty() {
-            self.diffs.push(DiffBlock::default());
-        }
-        self.diffs.last_mut().unwrap().insert(u, v, w);
+        self.pending.push((u, v, w));
+        self.set_overflow(u);
     }
 
-    /// Start a new diff block for the next batch's overflow inserts.
+    /// Seal the current batch's overflow inserts into a flat diff block
+    /// (per-block offset/coords/weights arrays, ranges sorted).
+    ///
+    /// Cost note: building the block via [`Csr::from_edges`] is O(n) in
+    /// the vertex count (full offsets array per block), traded for O(1)
+    /// range lookup on every subsequent read. For graphs where n greatly
+    /// exceeds batch size a touched-vertex mini-CSR would seal cheaper;
+    /// tracked in ROADMAP.md (merge-policy tuning).
     fn seal_batch(&mut self) {
-        if self.diffs.last().map(|d| !d.adj.is_empty()).unwrap_or(false) {
-            self.diffs.push(DiffBlock::default());
+        if self.pending.is_empty() {
+            return;
         }
+        let n = self.base.num_nodes();
+        let csr = Csr::from_edges(n, &self.pending);
+        let live = self.pending.len();
+        self.pending.clear();
+        self.diffs.push(DiffBlock { csr, live });
     }
 
     fn live_edges(&self) -> Vec<(NodeId, NodeId, Weight)> {
@@ -112,12 +184,86 @@ impl DiffCsr {
         out
     }
 
-    /// Compact everything into a fresh tombstone-free CSR.
-    fn merge(&mut self) {
+    /// Compact everything into a fresh tombstone-free CSR. With a pool the
+    /// per-vertex count/gather/sort phases run work-shared across its
+    /// workers (prefix-sum offsets in between); serial otherwise.
+    fn merge_with(&mut self, pool: Option<&ThreadPool>) {
+        self.seal_batch();
         let n = self.base.num_nodes();
-        let edges = self.live_edges();
-        self.base = Csr::from_edges(n, &edges);
+        match pool {
+            Some(pool) if pool.threads() > 1 && n > 0 => {
+                // Phase 1: live degree per vertex (disjoint writes).
+                let mut counts = vec![0u32; n + 1];
+                {
+                    let cs = SyncSlice::new(&mut counts[1..]);
+                    let base = &self.base;
+                    let diffs = &self.diffs;
+                    pool.parallel_for(n, Sched::Dynamic { chunk: 2048 }, |v| {
+                        let u = v as NodeId;
+                        let mut c = base.live_degree(u);
+                        for d in diffs {
+                            c += d.csr.live_degree(u);
+                        }
+                        // SAFETY: index v written by exactly one worker.
+                        unsafe { cs.set(v, c as u32) };
+                    });
+                }
+                // Phase 2: serial prefix sum → offsets.
+                for i in 0..n {
+                    counts[i + 1] += counts[i];
+                }
+                let total = counts[n] as usize;
+                let offsets = counts;
+                // Phase 3: gather + per-range sort into the new arrays,
+                // one disjoint range per vertex, per-worker reusable
+                // gather buffers (no steady-state allocation).
+                let mut coords = vec![TOMBSTONE; total];
+                let mut weights: Vec<Weight> = vec![0; total];
+                {
+                    let csl = SyncSlice::new(&mut coords);
+                    let wsl = SyncSlice::new(&mut weights);
+                    let base = &self.base;
+                    let diffs = &self.diffs;
+                    let offs = &offsets;
+                    let mut gather: Vec<Vec<(NodeId, Weight)>> =
+                        (0..pool.threads()).map(|_| Vec::new()).collect();
+                    pool.parallel_for_with(
+                        n,
+                        Sched::Dynamic { chunk: 2048 },
+                        &mut gather,
+                        |buf, v| {
+                            let u = v as NodeId;
+                            let start = offs[v] as usize;
+                            let len = (offs[v + 1] - offs[v]) as usize;
+                            if len == 0 {
+                                return;
+                            }
+                            buf.clear();
+                            buf.extend(base.neighbors(u));
+                            for d in diffs {
+                                buf.extend(d.csr.neighbors(u));
+                            }
+                            buf.sort_unstable_by_key(|p| p.0);
+                            // SAFETY: [start, start+len) ranges are disjoint
+                            // across vertices (prefix-sum offsets).
+                            let cdst = unsafe { csl.slice_mut(start, len) };
+                            let wdst = unsafe { wsl.slice_mut(start, len) };
+                            for (i, &(c, w)) in buf.iter().enumerate() {
+                                cdst[i] = c;
+                                wdst[i] = w;
+                            }
+                        },
+                    );
+                }
+                self.base = Csr { offsets, coords, weights };
+            }
+            _ => {
+                let edges = self.live_edges();
+                self.base = Csr::from_edges(n, &edges);
+            }
+        }
         self.diffs.clear();
+        self.overflow.iter_mut().for_each(|w| *w = 0);
     }
 }
 
@@ -133,11 +279,16 @@ pub struct DynGraph {
     /// Merge the diff chain into the base CSR after this many batches
     /// (§3.5: "after a configurable number of batches"). 0 disables.
     pub merge_period: usize,
+    /// Pool used to parallelize `merge` compaction (engines attach theirs
+    /// via [`set_merge_pool`](Self::set_merge_pool)); `None` ⇒ serial.
+    merge_pool: Option<ThreadPool>,
 }
 
 impl DynGraph {
     /// Wrap a static CSR (computes the transpose and degree caches).
     pub fn from_csr(base: Csr) -> Self {
+        let mut base = base;
+        base.sort_adjacencies(); // establish the sorted invariant
         let bwd = base.transpose();
         let n = base.num_nodes();
         let mut out_degree = vec![0u32; n];
@@ -153,12 +304,18 @@ impl DynGraph {
             in_degree,
             batches_since_merge: 0,
             merge_period: 8,
+            merge_pool: None,
         }
     }
 
     /// Build from an edge list.
     pub fn from_edges(n: usize, edges: &[(NodeId, NodeId, Weight)]) -> Self {
         Self::from_csr(Csr::from_edges(n, edges))
+    }
+
+    /// Attach a thread pool for parallel merge compaction.
+    pub fn set_merge_pool(&mut self, pool: ThreadPool) {
+        self.merge_pool = Some(pool);
     }
 
     #[inline]
@@ -194,7 +351,9 @@ impl DynGraph {
         self.bwd.neighbors(v)
     }
 
-    /// `g.is_an_edge(u, v)`.
+    /// `g.is_an_edge(u, v)` — binary search in the base range and each
+    /// diff block; O(log deg) instead of the O(deg) scan this replaced.
+    #[inline]
     pub fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
         self.fwd.find(u, v).is_some()
     }
@@ -248,16 +407,20 @@ impl DynGraph {
         applied
     }
 
-    /// Compact both directions into fresh tombstone-free CSRs.
+    /// Compact both directions into fresh tombstone-free CSRs (parallel
+    /// when a merge pool is attached).
     pub fn merge(&mut self) {
-        self.fwd.merge();
-        self.bwd.merge();
+        let pool = self.merge_pool.clone();
+        self.fwd.merge_with(pool.as_ref());
+        self.bwd.merge_with(pool.as_ref());
         self.batches_since_merge = 0;
     }
 
     /// Number of live diff blocks (forward side), for ablation metrics.
+    /// The currently-open (unsealed) batch counts as one block.
     pub fn diff_chain_len(&self) -> usize {
-        self.fwd.diffs.iter().filter(|d| !d.adj.is_empty()).count()
+        self.fwd.diffs.iter().filter(|d| d.live > 0).count()
+            + usize::from(!self.fwd.pending.is_empty())
     }
 
     /// All live edges (sorted) — used by tests/oracles.
@@ -347,6 +510,39 @@ mod tests {
     }
 
     #[test]
+    fn parallel_merge_matches_serial() {
+        let mk = || {
+            let mut g = crate::graph::generators::uniform_random(300, 1500, 9, 99);
+            g.merge_period = 0;
+            let stream =
+                crate::graph::UpdateStream::generate_percent(&g, 25.0, 64, 9, 100);
+            for b in stream.batches() {
+                g.apply_deletions(&b.deletions());
+                g.apply_additions(&b.additions());
+            }
+            g
+        };
+        let mut serial = mk();
+        let mut parallel = mk();
+        assert!(serial.diff_chain_len() > 0, "chain must be dirty before merge");
+        serial.merge();
+        parallel.set_merge_pool(ThreadPool::new(4));
+        parallel.merge();
+        assert_eq!(serial.edges_sorted(), parallel.edges_sorted());
+        assert_eq!(parallel.diff_chain_len(), 0);
+        assert_eq!(
+            parallel.fwd_base().count_live(),
+            parallel.fwd_base().num_slots(),
+            "parallel merge is tombstone-free"
+        );
+        // per-range sorted invariant holds on the parallel-built CSR
+        for v in 0..parallel.num_nodes() as NodeId {
+            let nb: Vec<NodeId> = parallel.fwd_base().neighbors(v).map(|(c, _)| c).collect();
+            assert!(nb.windows(2).all(|w| w[0] < w[1] || w[0] == w[1]), "sorted {v}");
+        }
+    }
+
+    #[test]
     fn add_existing_edge_is_rejected() {
         let mut g = paper_example();
         assert!(!g.add_edge(0, 1, 3));
@@ -361,6 +557,20 @@ mod tests {
         assert_eq!(g.edge_weight(0, 1), Some(42));
         assert_eq!(g.out_degree(0), 1);
         assert_eq!(g.in_degree(1), 1);
+    }
+
+    #[test]
+    fn pending_edges_visible_and_deletable_before_seal() {
+        let mut g = paper_example();
+        // E (4) has a full base range: this insert stages in `pending`
+        assert!(g.add_edge(4, 2, 7));
+        assert_eq!(g.edge_weight(4, 2), Some(7), "pending edge readable");
+        let outs: Vec<_> = g.out_neighbors(4).map(|(v, _)| v).collect();
+        assert!(outs.contains(&2) && outs.contains(&5));
+        // delete it again before any seal — must come out of pending
+        assert!(g.delete_edge(4, 2));
+        assert!(!g.has_edge(4, 2));
+        assert_eq!(g.diff_chain_len(), 0, "pending drained");
     }
 
     #[test]
@@ -425,6 +635,83 @@ mod tests {
                 let id = model.keys().filter(|&&(_, b)| b == v).count() as u32;
                 assert_eq!(g.out_degree(v), od);
                 assert_eq!(g.in_degree(v), id);
+            }
+        });
+    }
+
+    /// Flat-layout property test (batch API): drive random insert/delete
+    /// streams through `apply_deletions`/`apply_additions` — exercising
+    /// staging, `seal_batch`, the overflow bitmap, and `merge()`
+    /// boundaries — and assert `edges_sorted()`, both degree caches, and
+    /// `has_edge` over the full vertex square agree with a naive edge-list
+    /// oracle *after every batch*, not just at the end.
+    #[test]
+    fn prop_flat_diffcsr_matches_edge_list_oracle() {
+        forall_checks(0xF1A7, 40, |gen| {
+            let n = gen.usize_in(2, 14);
+            let mut oracle: BTreeMap<(NodeId, NodeId), Weight> = BTreeMap::new();
+            let mut init = Vec::new();
+            for _ in 0..gen.usize_in(0, 30) {
+                let u = gen.usize_in(0, n - 1) as NodeId;
+                let v = gen.usize_in(0, n - 1) as NodeId;
+                let w = gen.i64_in(1, 9) as Weight;
+                if !oracle.contains_key(&(u, v)) {
+                    oracle.insert((u, v), w);
+                    init.push((u, v, w));
+                }
+            }
+            let mut g = DynGraph::from_edges(n, &init);
+            g.merge_period = gen.usize_in(0, 4);
+            if gen.bool() {
+                g.set_merge_pool(ThreadPool::new(gen.usize_in(2, 4)));
+            }
+            let batches = gen.usize_in(1, 8);
+            for _ in 0..batches {
+                // one batch: some deletions of live edges, some additions
+                let mut dels = Vec::new();
+                for _ in 0..gen.usize_in(0, 4) {
+                    if oracle.is_empty() {
+                        break;
+                    }
+                    let keys: Vec<_> = oracle.keys().copied().collect();
+                    let &(u, v) = gen.choose(&keys);
+                    if oracle.remove(&(u, v)).is_some() {
+                        dels.push((u, v));
+                    }
+                }
+                let mut adds = Vec::new();
+                for _ in 0..gen.usize_in(0, 6) {
+                    let u = gen.usize_in(0, n - 1) as NodeId;
+                    let v = gen.usize_in(0, n - 1) as NodeId;
+                    let w = gen.i64_in(1, 9) as Weight;
+                    if !oracle.contains_key(&(u, v)) {
+                        oracle.insert((u, v), w);
+                        adds.push((u, v, w));
+                    }
+                }
+                assert_eq!(g.apply_deletions(&dels), dels.len());
+                assert_eq!(g.apply_additions(&adds), adds.len());
+                if gen.chance(0.2) {
+                    g.merge();
+                }
+
+                // full agreement with the oracle mid-stream
+                let want: Vec<_> = oracle.iter().map(|(&(u, v), &w)| (u, v, w)).collect();
+                assert_eq!(g.edges_sorted(), want, "edge list diverged mid-stream");
+                for u in 0..n as NodeId {
+                    let od = oracle.keys().filter(|&&(a, _)| a == u).count() as u32;
+                    let id = oracle.keys().filter(|&&(_, b)| b == u).count() as u32;
+                    assert_eq!(g.out_degree(u), od, "out_degree({u})");
+                    assert_eq!(g.in_degree(u), id, "in_degree({u})");
+                    for v in 0..n as NodeId {
+                        assert_eq!(
+                            g.has_edge(u, v),
+                            oracle.contains_key(&(u, v)),
+                            "has_edge({u},{v})"
+                        );
+                        assert_eq!(g.edge_weight(u, v), oracle.get(&(u, v)).copied());
+                    }
+                }
             }
         });
     }

@@ -8,7 +8,7 @@
 use super::diffcsr::DynGraph;
 use super::updates::{Update, UpdateKind, UpdateStream};
 use super::{NodeId, Weight};
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 

@@ -7,8 +7,9 @@
 //! * **DSL front-end** ([`dsl`]): lexer/parser/semantic analysis for the
 //!   StarPlat Dynamic language (`Batch`, `OnAdd`, `OnDelete`,
 //!   `Incremental`, `Decremental`, `forall`, `fixedPoint`, `Min`/`Max`).
-//! * **Plan IR** ([`ir`]): backend-neutral executable representation plus
-//!   C++-text code emitters mirroring the paper's OpenMP/MPI/CUDA output.
+//! * **Code emission** ([`dsl::emit`]): the analyzed AST doubles as the
+//!   backend-neutral plan; C++-text code emitters mirror the paper's
+//!   OpenMP/MPI/CUDA output.
 //! * **Graph substrate** ([`graph`]): CSR, the paper's diff-CSR dynamic
 //!   representation, update streams, Table-1-shaped generators.
 //! * **Backends** ([`backend`]): `serial` oracle interpreter, `cpu`

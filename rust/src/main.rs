@@ -12,12 +12,12 @@
 //!   inspect
 //!       list the AOT artifacts the xla backend will use.
 
-use anyhow::{bail, Context, Result};
 use starplat_dyn::backend::BackendKind;
 use starplat_dyn::coordinator::{run_cell, Algo};
 use starplat_dyn::dsl::{self, emit::Target};
 use starplat_dyn::graph::generators;
 use starplat_dyn::runtime::ArtifactManifest;
+use starplat_dyn::util::error::{anyhow, bail, Context, Result};
 
 fn main() {
     if let Err(e) = real_main() {
@@ -91,7 +91,7 @@ fn real_main() -> Result<()> {
             let target: Target = args
                 .get("target", "omp")
                 .parse()
-                .map_err(|e: String| anyhow::anyhow!(e))?;
+                .map_err(|e: String| anyhow!(e))?;
             let src = std::fs::read_to_string(file)?;
             let program = dsl::parse_program(&src)?;
             let analysis = dsl::analyze(&program)?;
@@ -106,11 +106,11 @@ fn real_main() -> Result<()> {
         }
         "run" => {
             let algo: Algo =
-                args.get("algo", "sssp").parse().map_err(|e: String| anyhow::anyhow!(e))?;
+                args.get("algo", "sssp").parse().map_err(|e: String| anyhow!(e))?;
             let backend: BackendKind = args
                 .get("backend", "cpu")
                 .parse()
-                .map_err(|e: String| anyhow::anyhow!(e))?;
+                .map_err(|e: String| anyhow!(e))?;
             let percent: f64 = args.get("percent", "5").parse()?;
             let batch: usize = args.get("batch", "64").parse()?;
             let seed: u64 = args.get("seed", "42").parse()?;

@@ -1,7 +1,7 @@
 //! Artifact manifest: which AOT-compiled HLO module serves which
 //! (function, capacity-bucket) pair, and bucket selection/padding.
 
-use anyhow::{bail, Context, Result};
+use crate::util::error::{bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -97,26 +97,57 @@ impl ArtifactManifest {
 mod tests {
     use super::*;
 
-    fn manifest_dir() -> PathBuf {
-        // tests run from the crate root; `make artifacts` must have run
-        ArtifactManifest::default_dir()
+    /// Synthesize a bucket layout matching `aot.py`'s (BUCKETS / TC_BUCKETS)
+    /// in a temp dir, so manifest parsing and bucket selection are tested
+    /// without requiring the `make artifacts` AOT step to have run.
+    fn fixture_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("starplat_artifacts_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let entries: &[(&str, usize)] = &[
+            ("sssp_rounds", 256),
+            ("sssp_rounds", 1024),
+            ("sssp_rounds", 2048),
+            ("pr_rounds", 256),
+            ("pr_rounds", 1024),
+            ("pr_rounds", 2048),
+            ("tc_dense", 256),
+            ("tc_dense", 1024),
+        ];
+        let mut manifest = String::from("# synthesized by artifacts.rs tests\n");
+        for &(name, n) in entries {
+            let file = format!("{name}_{n}.hlo.txt");
+            std::fs::write(dir.join(&file), "HloModule placeholder\n").unwrap();
+            manifest.push_str(&format!("{name} {n} 16 {file}\n"));
+        }
+        std::fs::write(dir.join("manifest.txt"), manifest).unwrap();
+        dir
     }
 
     #[test]
-    fn loads_real_manifest() {
-        let m = ArtifactManifest::load(&manifest_dir()).expect("run `make artifacts`");
+    fn loads_synthesized_manifest() {
+        let m = ArtifactManifest::load(&fixture_dir("load")).unwrap();
         assert!(m.entries().count() >= 8);
     }
 
     #[test]
     fn picks_smallest_fitting_bucket() {
-        let m = ArtifactManifest::load(&manifest_dir()).unwrap();
+        let m = ArtifactManifest::load(&fixture_dir("pick")).unwrap();
         assert_eq!(m.pick("sssp_rounds", 100).unwrap().n_pad, 256);
         assert_eq!(m.pick("sssp_rounds", 256).unwrap().n_pad, 256);
         assert_eq!(m.pick("sssp_rounds", 257).unwrap().n_pad, 1024);
         assert_eq!(m.pick("tc_dense", 1024).unwrap().n_pad, 1024);
         assert!(m.pick("tc_dense", 2000).is_err(), "TC capped at 1024");
         assert!(m.pick("sssp_rounds", 1_000_000).is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_missing_artifact_file() {
+        let dir = fixture_dir("missing");
+        std::fs::write(dir.join("manifest.txt"), "sssp_rounds 256 16 ghost.hlo.txt\n")
+            .unwrap();
+        let err = ArtifactManifest::load(&dir).unwrap_err();
+        assert!(err.to_string().contains("missing artifact"));
     }
 
     #[test]

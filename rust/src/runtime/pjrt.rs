@@ -6,133 +6,215 @@
 //! (`execute_b` over `PjRtBuffer`s) — the §5.3 host↔device transfer
 //! optimization: only the property vector and the convergence scalar
 //! cross the boundary each fixed-point iteration.
+//!
+//! Compiled in two flavors:
+//! * with the `pjrt` cargo feature: the real runtime backed by the
+//!   `xla` (xla_extension) bindings — the feature additionally requires
+//!   that dependency to be present;
+//! * without it (the default, dependency-free build): a stub with the
+//!   same API whose constructor reports PJRT as unavailable, so every
+//!   consumer (`XlaEngine`, benches, tests) degrades gracefully.
 
-use anyhow::{anyhow, Context, Result};
-use std::path::Path;
-use std::sync::{Mutex, MutexGuard, OnceLock};
+#[cfg(feature = "pjrt")]
+mod real {
+    use crate::util::error::{anyhow, Context, Result};
+    use std::path::Path;
+    use std::sync::{Mutex, MutexGuard, OnceLock};
 
-/// xla_extension 0.5.1 cannot tolerate a second `TfrtCpuClient` in the
-/// same process (`Check failed: pointer_size > 0` on the next execute),
-/// so the crate keeps exactly ONE client for the process lifetime and
-/// serializes all PJRT entry points behind a mutex. The underlying C++
-/// client is thread-safe; the rust wrapper just isn't marked `Sync`.
-struct SyncClient(xla::PjRtClient);
-unsafe impl Send for SyncClient {}
-unsafe impl Sync for SyncClient {}
+    /// xla_extension 0.5.1 cannot tolerate a second `TfrtCpuClient` in the
+    /// same process (`Check failed: pointer_size > 0` on the next execute),
+    /// so the crate keeps exactly ONE client for the process lifetime and
+    /// serializes all PJRT entry points behind a mutex. The underlying C++
+    /// client is thread-safe; the rust wrapper just isn't marked `Sync`.
+    struct SyncClient(xla::PjRtClient);
+    unsafe impl Send for SyncClient {}
+    unsafe impl Sync for SyncClient {}
 
-static GLOBAL_CLIENT: OnceLock<std::result::Result<SyncClient, String>> = OnceLock::new();
-static PJRT_LOCK: Mutex<()> = Mutex::new(());
+    static GLOBAL_CLIENT: OnceLock<std::result::Result<SyncClient, String>> = OnceLock::new();
+    static PJRT_LOCK: Mutex<()> = Mutex::new(());
 
-fn pjrt_lock() -> MutexGuard<'static, ()> {
-    PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
-}
-
-fn global_client() -> Result<&'static xla::PjRtClient> {
-    let entry = GLOBAL_CLIENT.get_or_init(|| {
-        xla::PjRtClient::cpu().map(SyncClient).map_err(|e| format!("{e:?}"))
-    });
-    match entry {
-        Ok(c) => Ok(&c.0),
-        Err(e) => Err(anyhow!("PJRT cpu client: {e}")),
-    }
-}
-
-/// Shared PJRT CPU client + compiled executables.
-pub struct PjrtRuntime {
-    client: &'static xla::PjRtClient,
-}
-
-impl PjrtRuntime {
-    pub fn cpu() -> Result<Self> {
-        Ok(PjrtRuntime { client: global_client()? })
+    fn pjrt_lock() -> MutexGuard<'static, ()> {
+        PJRT_LOCK.lock().unwrap_or_else(|p| p.into_inner())
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load + compile an HLO-text artifact into a reusable executable.
-    pub fn load(&self, path: &Path) -> Result<RoundsExe> {
-        let _g = pjrt_lock();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
-        Ok(RoundsExe { exe, client: self.client })
-    }
-
-    /// Upload an f32 tensor to the device (once per graph — §5.3).
-    pub fn upload(&self, data: &[f32], dims: &[i64]) -> Result<xla::PjRtBuffer> {
-        let _g = pjrt_lock();
-        upload_with(self.client, data, dims)
-    }
-}
-
-fn upload_with(client: &xla::PjRtClient, data: &[f32], dims: &[i64]) -> Result<xla::PjRtBuffer> {
-    // buffer_from_host_buffer copies with kImmutableOnlyDuringCall
-    // semantics — safe to free `data` as soon as the call returns.
-    // (buffer_from_host_literal is ASYNC in xla_extension 0.5.1 and reads
-    // the literal after it may have been freed — the source of
-    // intermittent `pointer_size`/size-check aborts.)
-    let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
-    client
-        .buffer_from_host_buffer::<f32>(data, &udims, None)
-        .map_err(|e| anyhow!("upload {dims:?}: {e:?}"))
-}
-
-/// A compiled fixed-point-rounds executable (sssp_rounds / pr_rounds /
-/// tc_dense). Inputs are device buffers; outputs come back as literals.
-pub struct RoundsExe {
-    exe: xla::PjRtLoadedExecutable,
-    client: &'static xla::PjRtClient,
-}
-
-impl RoundsExe {
-    /// Execute with device-resident buffers; returns one literal per
-    /// module output. Artifacts are lowered with `return_tuple=False`,
-    /// so each output is a separate *array* buffer (tuple-shaped buffers
-    /// are unreliable in xla_extension 0.5.1 — see aot.py).
-    pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
-        let _g = pjrt_lock();
-        let outs = self
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(args)
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let mut lits = Vec::new();
-        for (i, buf) in outs[0].iter().enumerate() {
-            let lit =
-                buf.to_literal_sync().map_err(|e| anyhow!("fetch output {i}: {e:?}"))?;
-            // single-output modules may still come back tuple-wrapped
-            if lit.shape().map(|s| matches!(s, xla::Shape::Tuple(_))).unwrap_or(false) {
-                lits.extend(lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?);
-            } else {
-                lits.push(lit);
-            }
+    fn global_client() -> Result<&'static xla::PjRtClient> {
+        let entry = GLOBAL_CLIENT.get_or_init(|| {
+            xla::PjRtClient::cpu().map(SyncClient).map_err(|e| format!("{e:?}"))
+        });
+        match entry {
+            Ok(c) => Ok(&c.0),
+            Err(e) => Err(anyhow!("PJRT cpu client: {e}")),
         }
-        Ok(lits)
     }
 
-    /// Raw execution: the unflattened PJRT output buffers (debug/tests).
-    pub fn run_raw(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
-        let _g = pjrt_lock();
-        self.exe.execute_b::<&xla::PjRtBuffer>(args).map_err(|e| anyhow!("execute: {e:?}"))
+    /// Shared PJRT CPU client + compiled executables.
+    pub struct PjrtRuntime {
+        client: &'static xla::PjRtClient,
     }
 
-    /// Upload helper sharing this executable's client.
-    pub fn upload(&self, data: &[f32], dims: &[i64]) -> Result<xla::PjRtBuffer> {
-        let _g = pjrt_lock();
-        upload_with(self.client, data, dims)
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self> {
+            Ok(PjrtRuntime { client: global_client()? })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load + compile an HLO-text artifact into a reusable executable.
+        pub fn load(&self, path: &Path) -> Result<RoundsExe> {
+            let _g = pjrt_lock();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| anyhow!("parse HLO text {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile: {e:?}"))?;
+            Ok(RoundsExe { exe, client: self.client })
+        }
+
+        /// Upload an f32 tensor to the device (once per graph — §5.3).
+        pub fn upload(&self, data: &[f32], dims: &[i64]) -> Result<xla::PjRtBuffer> {
+            let _g = pjrt_lock();
+            upload_with(self.client, data, dims)
+        }
+    }
+
+    fn upload_with(
+        client: &xla::PjRtClient,
+        data: &[f32],
+        dims: &[i64],
+    ) -> Result<xla::PjRtBuffer> {
+        // buffer_from_host_buffer copies with kImmutableOnlyDuringCall
+        // semantics — safe to free `data` as soon as the call returns.
+        // (buffer_from_host_literal is ASYNC in xla_extension 0.5.1 and reads
+        // the literal after it may have been freed — the source of
+        // intermittent `pointer_size`/size-check aborts.)
+        let udims: Vec<usize> = dims.iter().map(|&d| d as usize).collect();
+        client
+            .buffer_from_host_buffer::<f32>(data, &udims, None)
+            .map_err(|e| anyhow!("upload {dims:?}: {e:?}"))
+    }
+
+    /// A compiled fixed-point-rounds executable (sssp_rounds / pr_rounds /
+    /// tc_dense). Inputs are device buffers; outputs come back as literals.
+    pub struct RoundsExe {
+        exe: xla::PjRtLoadedExecutable,
+        client: &'static xla::PjRtClient,
+    }
+
+    impl RoundsExe {
+        /// Execute with device-resident buffers; returns one literal per
+        /// module output. Artifacts are lowered with `return_tuple=False`,
+        /// so each output is a separate *array* buffer (tuple-shaped buffers
+        /// are unreliable in xla_extension 0.5.1 — see aot.py).
+        pub fn run(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+            let _g = pjrt_lock();
+            let outs = self
+                .exe
+                .execute_b::<&xla::PjRtBuffer>(args)
+                .map_err(|e| anyhow!("execute: {e:?}"))?;
+            let mut lits = Vec::new();
+            for (i, buf) in outs[0].iter().enumerate() {
+                let lit =
+                    buf.to_literal_sync().map_err(|e| anyhow!("fetch output {i}: {e:?}"))?;
+                // single-output modules may still come back tuple-wrapped
+                if lit.shape().map(|s| matches!(s, xla::Shape::Tuple(_))).unwrap_or(false) {
+                    lits.extend(lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?);
+                } else {
+                    lits.push(lit);
+                }
+            }
+            Ok(lits)
+        }
+
+        /// Raw execution: the unflattened PJRT output buffers (debug/tests).
+        pub fn run_raw(&self, args: &[&xla::PjRtBuffer]) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+            let _g = pjrt_lock();
+            self.exe.execute_b::<&xla::PjRtBuffer>(args).map_err(|e| anyhow!("execute: {e:?}"))
+        }
+
+        /// Upload helper sharing this executable's client.
+        pub fn upload(&self, data: &[f32], dims: &[i64]) -> Result<xla::PjRtBuffer> {
+            let _g = pjrt_lock();
+            upload_with(self.client, data, dims)
+        }
+    }
+
+    /// Extract an f32 vector from a literal.
+    pub fn literal_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e:?}"))
     }
 }
 
-/// Extract an f32 vector from a literal.
-pub fn literal_f32s(lit: &xla::Literal) -> Result<Vec<f32>> {
-    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e:?}"))
+#[cfg(feature = "pjrt")]
+pub use real::*;
+
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use crate::util::error::{anyhow, Error, Result};
+    use std::path::Path;
+
+    fn unavailable() -> Error {
+        anyhow!(
+            "PJRT support not compiled in (rebuild with `--features pjrt` \
+             and the xla_extension bindings to enable the xla backend)"
+        )
+    }
+
+    /// Stand-in for `xla::Literal` in the stub build.
+    pub struct Literal;
+    /// Stand-in for `xla::PjRtBuffer` in the stub build.
+    pub struct PjRtBuffer;
+
+    /// Stub runtime: construction always fails, so downstream engines
+    /// (`XlaEngine`) report unavailability instead of panicking.
+    pub struct PjrtRuntime;
+
+    impl PjrtRuntime {
+        pub fn cpu() -> Result<Self> {
+            Err(unavailable())
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-unavailable".to_string()
+        }
+
+        pub fn load(&self, _path: &Path) -> Result<RoundsExe> {
+            Err(unavailable())
+        }
+
+        pub fn upload(&self, _data: &[f32], _dims: &[i64]) -> Result<PjRtBuffer> {
+            Err(unavailable())
+        }
+    }
+
+    /// Stub executable: unreachable in practice (no runtime can be built).
+    pub struct RoundsExe;
+
+    impl RoundsExe {
+        pub fn run(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+            Err(unavailable())
+        }
+
+        pub fn run_raw(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+            Err(unavailable())
+        }
+
+        pub fn upload(&self, _data: &[f32], _dims: &[i64]) -> Result<PjRtBuffer> {
+            Err(unavailable())
+        }
+    }
+
+    pub fn literal_f32s(_lit: &Literal) -> Result<Vec<f32>> {
+        Err(unavailable())
+    }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+pub use stub::*;
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use crate::runtime::ArtifactManifest;
@@ -226,5 +308,23 @@ mod tests {
         let new_rank = literal_f32s(&outs[0]).unwrap();
         assert!(new_rank.iter().all(|r| r.is_finite()));
         assert!(new_rank[0] > new_rank[5], "cycle vertices outrank isolated ones");
+    }
+
+    #[test]
+    fn stub_platform_name_reserved() {
+        // the stub build reports "pjrt-unavailable"; the real build must not
+        let rt = PjrtRuntime::cpu().unwrap();
+        assert_ne!(rt.platform(), "pjrt-unavailable");
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_reports_unavailable() {
+        let err = PjrtRuntime::cpu().err().expect("stub must refuse to build");
+        assert!(err.to_string().contains("pjrt"), "actionable message: {err}");
     }
 }

@@ -1,0 +1,142 @@
+//! Minimal error handling standing in for `anyhow` (the offline crates.io
+//! snapshot has none of the usual error crates).
+//!
+//! Provides the subset of the `anyhow` surface this crate uses:
+//! [`Error`], [`Result`], the [`anyhow!`](crate::anyhow) and
+//! [`bail!`](crate::bail) macros, and a [`Context`] extension trait for
+//! `Result`/`Option`.
+
+use std::fmt;
+
+/// A string-backed error value. Like `anyhow::Error` it deliberately does
+/// **not** implement `std::error::Error`, which leaves room for the blanket
+/// `From<E: std::error::Error>` conversion that makes `?` work on io/parse
+/// errors.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::new(e.to_string())
+    }
+}
+
+/// `anyhow::Result` analogue.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to an error (`anyhow::Context` analogue).
+pub trait Context<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{msg}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::new(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::new(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::new(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::new(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::util::error::Error::new(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::new(format!("{}", $err))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`](crate::anyhow).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+// Re-export the crate-root macros under this module's path so call sites can
+// `use crate::util::error::{anyhow, bail}` exactly like with the real crate.
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_square(s: &str) -> Result<i64> {
+        let v: i64 = s.parse()?; // From<ParseIntError> via the blanket impl
+        if v < 0 {
+            bail!("negative input {v}");
+        }
+        Ok(v * v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert_eq!(parse_square("4").unwrap(), 16);
+        assert!(parse_square("zzz").is_err());
+        let e = parse_square("-3").unwrap_err();
+        assert!(e.to_string().contains("negative input -3"));
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let b = anyhow!("x={} y={}", 1, 2);
+        assert_eq!(b.to_string(), "x=1 y=2");
+        let msg = String::from("wrapped");
+        let c = anyhow!(msg);
+        assert_eq!(c.to_string(), "wrapped");
+        let d = anyhow!("inline {0}", 7);
+        assert_eq!(d.to_string(), "inline 7");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("while formatting").unwrap_err();
+        assert!(e.to_string().starts_with("while formatting: "));
+        let o: Option<i32> = None;
+        let e = o.with_context(|| format!("missing {}", "thing")).unwrap_err();
+        assert_eq!(e.to_string(), "missing thing");
+        let some: Option<i32> = Some(5);
+        assert_eq!(some.context("unused").unwrap(), 5);
+    }
+}

@@ -6,14 +6,18 @@
 //! a timing helper, streaming statistics, and a tiny property-testing
 //! harness (`propcheck`).
 
+pub mod error;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;
+pub mod sync_slice;
 pub mod threadpool;
 pub mod timer;
 
+pub use error::{Context, Error, Result};
 pub use propcheck::{forall_checks, Gen};
 pub use rng::Rng;
 pub use stats::Summary;
+pub use sync_slice::SyncSlice;
 pub use threadpool::ThreadPool;
 pub use timer::Timer;

@@ -111,6 +111,73 @@ impl ThreadPool {
         }
     }
 
+    /// Parallel `for` with **per-worker mutable state**: worker `t` gets
+    /// exclusive `&mut` access to `states[t]` for the whole loop. This is
+    /// the primitive behind allocation-free hot loops (per-thread frontier
+    /// buffers merged by prefix sum instead of a global `Mutex`) and the
+    /// parallel diff-CSR merge's reusable gather buffers.
+    ///
+    /// `states` must provide at least one element; at most
+    /// `min(threads, states.len())` workers run.
+    pub fn parallel_for_with<S, F>(&self, n: usize, sched: Sched, states: &mut [S], body: F)
+    where
+        S: Send,
+        F: Fn(&mut S, usize) + Sync,
+    {
+        assert!(!states.is_empty(), "parallel_for_with needs at least one state");
+        if n == 0 {
+            return;
+        }
+        let workers = self.threads.min(states.len());
+        if workers == 1 {
+            let st = &mut states[0];
+            for i in 0..n {
+                body(st, i);
+            }
+            return;
+        }
+        match sched {
+            Sched::Dynamic { chunk } => {
+                let chunk = chunk.max(1);
+                let next = AtomicUsize::new(0);
+                std::thread::scope(|s| {
+                    for st in states.iter_mut().take(workers) {
+                        let body = &body;
+                        let next = &next;
+                        s.spawn(move || loop {
+                            let start = next.fetch_add(chunk, Ordering::Relaxed);
+                            if start >= n {
+                                break;
+                            }
+                            let end = (start + chunk).min(n);
+                            for i in start..end {
+                                body(st, i);
+                            }
+                        });
+                    }
+                });
+            }
+            Sched::Static => {
+                let per = n.div_ceil(workers);
+                std::thread::scope(|s| {
+                    for (t, st) in states.iter_mut().take(workers).enumerate() {
+                        let start = t * per;
+                        let end = ((t + 1) * per).min(n);
+                        if start >= end {
+                            continue;
+                        }
+                        let body = &body;
+                        s.spawn(move || {
+                            for i in start..end {
+                                body(st, i);
+                            }
+                        });
+                    }
+                });
+            }
+        }
+    }
+
     /// Parallel map-reduce: each worker folds its indices with `fold`,
     /// partials are combined with `combine`.
     pub fn parallel_reduce<T, F, C>(&self, n: usize, init: T, fold: F, combine: C) -> T
@@ -191,6 +258,27 @@ mod tests {
     #[test]
     fn parallel_for_empty_is_noop() {
         ThreadPool::new(2).parallel_for(0, Sched::Static, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_for_with_partitions_state_and_covers_indices() {
+        for sched in [Sched::Dynamic { chunk: 32 }, Sched::Static] {
+            let pool = ThreadPool::new(4);
+            let n = 5000usize;
+            let mut locals: Vec<Vec<usize>> = vec![Vec::new(); pool.threads()];
+            pool.parallel_for_with(n, sched, &mut locals, |buf, i| buf.push(i));
+            let mut all: Vec<usize> = locals.into_iter().flatten().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..n).collect::<Vec<_>>(), "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_for_with_single_state_runs_serial() {
+        let pool = ThreadPool::new(4);
+        let mut acc = [0u64];
+        pool.parallel_for_with(100, Sched::Static, &mut acc, |a, i| *a += i as u64);
+        assert_eq!(acc[0], 4950);
     }
 
     #[test]
