@@ -24,8 +24,8 @@ fn diffcsr_vs_rebuild() {
         g.merge_period = 0; // never merge: worst case for the chain
         let (_, t_diff) = time_it(|| {
             for b in stream.batches() {
-                g.apply_deletions(&b.deletions());
-                g.apply_additions(&b.additions());
+                g.apply_deletions_iter(b.deletions());
+                g.apply_additions_iter(b.additions());
             }
         });
         // rebuild path: reconstruct the CSR from scratch per batch
@@ -34,7 +34,7 @@ fn diffcsr_vs_rebuild() {
         let (_, t_rebuild) = time_it(|| {
             for b in stream.batches() {
                 let dels: std::collections::HashSet<_> =
-                    b.deletions().into_iter().collect();
+                    b.deletions().collect();
                 edges.retain(|&(u, v, _)| !dels.contains(&(u, v)));
                 edges.extend(b.additions());
                 let _ = Csr::from_edges(n, &edges);
@@ -55,8 +55,8 @@ fn merge_period() {
         g.merge_period = period;
         let (_, t_upd) = time_it(|| {
             for b in stream.batches() {
-                g.apply_deletions(&b.deletions());
-                g.apply_additions(&b.additions());
+                g.apply_deletions_iter(b.deletions());
+                g.apply_additions_iter(b.additions());
             }
         });
         let chain = g.diff_chain_len();

@@ -110,8 +110,8 @@ fn main() {
     let per_batch = total.div_ceil(3).max(1);
     let chunked = UpdateStream::new(stream.updates.clone(), per_batch);
     for b in chunked.batches() {
-        gd.apply_deletions(&b.deletions());
-        gd.apply_additions(&b.additions());
+        gd.apply_deletions_iter(b.deletions());
+        gd.apply_additions_iter(b.additions());
     }
     let chain = gd.diff_chain_len();
     let md = gd.num_edges();
@@ -239,8 +239,8 @@ fn main() {
     let mut gu = g.clone();
     let (_, t_upd) = time_it(|| {
         for b in stream.batches() {
-            gu.apply_deletions(&b.deletions());
-            gu.apply_additions(&b.additions());
+            gu.apply_deletions_iter(b.deletions());
+            gu.apply_additions_iter(b.additions());
         }
     });
     println!(

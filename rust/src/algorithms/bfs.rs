@@ -130,10 +130,10 @@ pub fn decremental(g: &DynGraph, st: &mut BfsState, dels: &[(NodeId, NodeId)]) {
 /// Full dynamic batch: OnDelete → updateCSRDel → Decremental → OnAdd →
 /// updateCSRAdd → Incremental.
 pub fn dynamic_batch(g: &mut DynGraph, st: &mut BfsState, batch: &Batch<'_>) {
-    let dels = batch.deletions();
+    let dels: Vec<_> = batch.deletions().collect();
     g.apply_deletions(&dels);
     decremental(g, st, &dels);
-    let adds = batch.additions();
+    let adds: Vec<_> = batch.additions().collect();
     g.apply_additions(&adds);
     incremental(g, st, &adds);
 }

@@ -131,7 +131,7 @@ pub fn dynamic_batch(g: &mut DynGraph, st: &mut PrState, batch: &Batch<'_>) -> P
     let n = g.num_nodes();
     let mut stats = PrBatchStats::default();
 
-    let dels = batch.deletions();
+    let dels: Vec<_> = batch.deletions().collect();
     let mut modified = vec![false; n];
     for &(_, v) in &dels {
         modified[v as usize] = true;
@@ -141,7 +141,7 @@ pub fn dynamic_batch(g: &mut DynGraph, st: &mut PrState, batch: &Batch<'_>) -> P
     stats.flagged_del = modified.iter().filter(|&&m| m).count();
     stats.iters_del = recompute_flagged(g, st, &modified);
 
-    let adds = batch.additions();
+    let adds: Vec<_> = batch.additions().collect();
     let mut modified_add = vec![false; n];
     for &(_, v, _) in &adds {
         modified_add[v as usize] = true;

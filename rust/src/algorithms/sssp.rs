@@ -172,12 +172,12 @@ pub fn incremental(g: &DynGraph, st: &mut SsspState, modified: &mut Vec<bool>) {
 /// (Fig. 3 `DynSSSP` body): OnDelete → updateCSRDel → Decremental →
 /// OnAdd → updateCSRAdd → Incremental.
 pub fn dynamic_batch(g: &mut DynGraph, st: &mut SsspState, batch: &Batch<'_>) {
-    let dels = batch.deletions();
+    let dels: Vec<_> = batch.deletions().collect();
     let mut mod_del = on_delete(st, &dels);
     g.apply_deletions(&dels);
     decremental(g, st, &mut mod_del);
 
-    let adds = batch.additions();
+    let adds: Vec<_> = batch.additions().collect();
     let mut mod_add = on_add(st, &adds);
     g.apply_additions(&adds);
     incremental(g, st, &mut mod_add);

@@ -352,6 +352,22 @@ impl CpuEngine {
     /// One dynamic batch: OnDelete → updateCSRDel → Decremental →
     /// OnAdd → updateCSRAdd → Incremental (all phases parallel).
     pub fn sssp_dynamic_batch(&self, g: &mut DynGraph, st: &mut SsspState, batch: &Batch<'_>) {
+        let mut dels = Vec::new();
+        let mut adds = Vec::new();
+        batch.split_into(&mut dels, &mut adds);
+        self.sssp_dynamic_batch_parts(g, st, &dels, &adds);
+    }
+
+    /// Slice-level dynamic batch entry: the streaming service decomposes
+    /// batches into reusable deletion/addition buffers once and calls this
+    /// directly, so the per-service-batch path allocates nothing.
+    pub fn sssp_dynamic_batch_parts(
+        &self,
+        g: &mut DynGraph,
+        st: &mut SsspState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) {
         // Diff-CSR merge compaction runs on the engine pool.
         g.set_merge_pool(self.pool.clone());
         let n = g.num_nodes();
@@ -360,9 +376,8 @@ impl CpuEngine {
         sc.ensure(n, self.pool.threads());
 
         // OnDelete preprocessing (serial: batch-sized, not graph-sized).
-        let dels = batch.deletions();
-        let mut modified = sssp::on_delete(st, &dels);
-        g.apply_deletions(&dels);
+        let mut modified = sssp::on_delete(st, dels);
+        g.apply_deletions(dels);
 
         // Decremental phase 1 — §Perf iteration 3: instead of re-scanning
         // all n vertices per cascade round, build the SP-tree child index
@@ -432,9 +447,8 @@ impl CpuEngine {
         }
 
         // OnAdd preprocessing + incremental push fixed point.
-        let adds = batch.additions();
-        let seed = sssp::on_add(st, &adds);
-        g.apply_additions(&adds);
+        let seed = sssp::on_add(st, adds);
+        g.apply_additions(adds);
         self.relax_fixed_point(g, &mut st.dist, &seed, sc);
         self.repair_parents(g, st, sc);
     }
@@ -494,29 +508,42 @@ impl CpuEngine {
         st: &mut PrState,
         batch: &Batch<'_>,
     ) -> pagerank::PrBatchStats {
+        let mut dels = Vec::new();
+        let mut adds = Vec::new();
+        batch.split_into(&mut dels, &mut adds);
+        self.pr_dynamic_batch_parts(g, st, &dels, &adds)
+    }
+
+    /// Slice-level dynamic PR batch (streaming hot-loop entry; see
+    /// [`sssp_dynamic_batch_parts`](Self::sssp_dynamic_batch_parts)).
+    pub fn pr_dynamic_batch_parts(
+        &self,
+        g: &mut DynGraph,
+        st: &mut PrState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> pagerank::PrBatchStats {
         // The flag closure and restricted sweeps are bounded by the flagged
         // subgraph; reuse the reference pipeline but with parallel sweeps.
         g.set_merge_pool(self.pool.clone());
         let n = g.num_nodes();
         let mut stats = pagerank::PrBatchStats::default();
 
-        let dels = batch.deletions();
         let mut modified = vec![false; n];
-        for &(_, v) in &dels {
+        for &(_, v) in dels {
             modified[v as usize] = true;
         }
         stats.bfs_levels_del = pagerank::propagate_node_flags(g, &mut modified);
-        g.apply_deletions(&dels);
+        g.apply_deletions(dels);
         stats.flagged_del = modified.iter().filter(|&&m| m).count();
         stats.iters_del = self.recompute_flagged(g, st, &modified);
 
-        let adds = batch.additions();
         let mut modified_add = vec![false; n];
-        for &(_, v, _) in &adds {
+        for &(_, v, _) in adds {
             modified_add[v as usize] = true;
         }
         stats.bfs_levels_add = pagerank::propagate_node_flags(g, &mut modified_add);
-        g.apply_additions(&adds);
+        g.apply_additions(adds);
         stats.flagged_add = modified_add.iter().filter(|&&m| m).count();
         stats.iters_add = self.recompute_flagged(g, st, &modified_add);
         stats

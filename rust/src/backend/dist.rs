@@ -188,7 +188,7 @@ impl DistEngine {
 
         // OnDelete: the rank owning dest checks/updates its own state; the
         // parent check reads dest's parent locally (dest-owned state).
-        let dels = batch.deletions();
+        let dels: Vec<_> = batch.deletions().collect();
         let mut modified = sssp::on_delete(st, &dels);
         g.apply_deletions(&dels);
 
@@ -259,7 +259,7 @@ impl DistEngine {
         }
 
         // OnAdd + incremental push (same superstep structure as static).
-        let adds = batch.additions();
+        let adds: Vec<_> = batch.additions().collect();
         let mut seed = sssp::on_add(st, &adds);
         g.apply_additions(&adds);
         loop {
@@ -349,7 +349,7 @@ impl DistEngine {
         let pm = self.pmap(n);
         let mut stats = pagerank::PrBatchStats::default();
 
-        let dels = batch.deletions();
+        let dels: Vec<_> = batch.deletions().collect();
         let mut modified = vec![false; n];
         for &(_, v) in &dels {
             modified[v as usize] = true;
@@ -359,7 +359,7 @@ impl DistEngine {
         stats.flagged_del = modified.iter().filter(|&&m| m).count();
         stats.iters_del = self.recompute_flagged(g, &pm, st, &modified);
 
-        let adds = batch.additions();
+        let adds: Vec<_> = batch.additions().collect();
         let mut modified_add = vec![false; n];
         for &(_, v, _) in &adds {
             modified_add[v as usize] = true;

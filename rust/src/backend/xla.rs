@@ -177,7 +177,7 @@ impl XlaEngine {
         let n = g.num_nodes();
         // OnDelete + cascade invalidation (host, proportional to affected
         // subtree — the paper's activeOnDelete preprocess).
-        let dels = batch.deletions();
+        let dels: Vec<_> = batch.deletions().collect();
         let mut modified = sssp::on_delete(st, &dels);
         g.apply_deletions(&dels);
         loop {
@@ -198,7 +198,7 @@ impl XlaEngine {
                 break;
             }
         }
-        let adds = batch.additions();
+        let adds: Vec<_> = batch.additions().collect();
         g.apply_additions(&adds);
 
         // Warm start: current (partially invalidated) distances.
@@ -259,8 +259,8 @@ impl XlaEngine {
         st: &mut PrState,
         batch: &Batch<'_>,
     ) -> Result<usize> {
-        g.apply_deletions(&batch.deletions());
-        g.apply_additions(&batch.additions());
+        g.apply_deletions_iter(batch.deletions());
+        g.apply_additions_iter(batch.additions());
         let init: Vec<f32> = st.rank.iter().map(|&r| r as f32).collect();
         self.pr_fixed_point(g, st, &init)
     }

@@ -15,7 +15,8 @@ use crate::backend::cpu::CpuEngine;
 use crate::backend::dist::DistEngine;
 use crate::backend::xla::XlaEngine;
 use crate::backend::BackendKind;
-use crate::graph::{DynGraph, NodeId, UpdateStream};
+use crate::graph::{DynGraph, NodeId, Update, UpdateKind, UpdateStream};
+use crate::stream::{GraphService, ServiceConfig, ServiceStats};
 use crate::util::timer::time_it;
 use crate::util::error::Result;
 
@@ -339,6 +340,135 @@ fn tc_cell(
     Ok(cell)
 }
 
+// ------------------------------------------------------------ streaming
+
+/// One measured *streaming* cell: N producers pushing a generated update
+/// workload through a [`GraphService`] while optional reader threads
+/// hammer the published snapshot.
+#[derive(Debug, Clone)]
+pub struct StreamCell {
+    /// Updates submitted by the producers.
+    pub updates: u64,
+    /// Wall-clock seconds from first submit to full drain.
+    pub wall_secs: f64,
+    pub updates_per_sec: f64,
+    /// Snapshot queries served during the run (reader threads).
+    pub snapshot_reads: u64,
+    pub stats: ServiceStats,
+}
+
+/// Build the workload a streaming cell submits: directed updates for
+/// SSSP/PR, undirected (canonical-arc) updates for TC.
+pub fn stream_workload(algo: Algo, g0: &DynGraph, percent: f64, seed: u64) -> Vec<Update> {
+    match algo {
+        Algo::Sssp | Algo::Pr => {
+            UpdateStream::generate_percent(g0, percent, 1, 9, seed).updates
+        }
+        Algo::Tc => {
+            // symmetric protocol: one update per undirected edge; the
+            // service's symmetric mode expands each into both arcs. This is
+            // the only place that decodes symmetric_updates' paired-arc
+            // layout ("both arcs adjacent per undirected update") back into
+            // undirected updates — the asserts pin that invariant.
+            let total = g0.num_edges(); // upper bound → a single batch
+            let (dels, adds) = triangle::symmetric_updates(g0, percent, total.max(1), seed);
+            let mut out = Vec::new();
+            for d in dels.iter().flatten().collect::<Vec<_>>().chunks(2) {
+                let &(u, v) = d[0];
+                debug_assert!(
+                    d.len() == 2 && *d[1] == (v, u),
+                    "symmetric_updates arc pairing broken (dels)"
+                );
+                out.push(Update { kind: UpdateKind::Delete, src: u, dst: v, weight: 0 });
+            }
+            for a in adds.iter().flatten().collect::<Vec<_>>().chunks(2) {
+                let &(u, v, w) = a[0];
+                debug_assert!(
+                    a.len() == 2 && *a[1] == (v, u, w),
+                    "symmetric_updates arc pairing broken (adds)"
+                );
+                out.push(Update { kind: UpdateKind::Add, src: u, dst: v, weight: w });
+            }
+            out
+        }
+    }
+}
+
+/// Run one streaming cell: start a [`GraphService`] on `g0` (TC cells
+/// symmetrize first), fan the workload out over `producers` threads,
+/// optionally spin `readers` snapshot-query threads, drain, and return
+/// throughput + latency statistics. Returns the service report alongside
+/// so callers can check end-state equivalence.
+pub fn run_stream_cell(
+    algo: Algo,
+    g0: &DynGraph,
+    percent: f64,
+    producers: usize,
+    readers: usize,
+    cfg: ServiceConfig,
+    seed: u64,
+) -> (StreamCell, crate::stream::ServiceReport) {
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    let base = if algo == Algo::Tc { triangle::symmetrize(g0) } else { g0.clone() };
+    let workload = stream_workload(algo, &base, percent, seed);
+    let producers = producers.max(1);
+    let svc = Arc::new(GraphService::start(base, cfg));
+    let stop_readers = Arc::new(AtomicBool::new(false));
+    let reads = Arc::new(AtomicU64::new(0));
+
+    let reader_handles: Vec<_> = (0..readers)
+        .map(|_| {
+            let svc = Arc::clone(&svc);
+            let stop = Arc::clone(&stop_readers);
+            let reads = Arc::clone(&reads);
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    svc.with_snapshot(|t| {
+                        debug_assert!(t.num_nodes > 0);
+                    });
+                    reads.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for p in 0..producers {
+            let svc = Arc::clone(&svc);
+            let slice: Vec<Update> =
+                workload.iter().skip(p).step_by(producers).copied().collect();
+            s.spawn(move || {
+                for u in slice {
+                    svc.submit(u);
+                }
+            });
+        }
+    });
+    svc.drain();
+    let wall = t0.elapsed().as_secs_f64();
+
+    stop_readers.store(true, Ordering::Relaxed);
+    for h in reader_handles {
+        h.join().expect("reader thread panicked");
+    }
+    let Ok(svc) = Arc::try_unwrap(svc) else {
+        unreachable!("all service handles joined before unwrap")
+    };
+    let report = svc.shutdown();
+    let updates = workload.len() as u64;
+    let cell = StreamCell {
+        updates,
+        wall_secs: wall,
+        updates_per_sec: if wall > 0.0 { updates as f64 / wall } else { 0.0 },
+        snapshot_reads: reads.load(Ordering::Relaxed),
+        stats: report.stats.clone(),
+    };
+    (cell, report)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -381,5 +511,20 @@ mod tests {
     fn algo_parses() {
         assert_eq!("pagerank".parse::<Algo>().unwrap(), Algo::Pr);
         assert!("bfs".parse::<Algo>().is_err());
+    }
+
+    #[test]
+    fn stream_cell_runs_with_producers_and_readers() {
+        let g = generators::uniform_random(150, 700, 9, 5);
+        let mut cfg = ServiceConfig::new(Algo::Sssp);
+        cfg.threads = 2;
+        cfg.batch_capacity = 64;
+        cfg.batch_deadline = std::time::Duration::from_millis(2);
+        let (cell, report) = run_stream_cell(Algo::Sssp, &g, 10.0, 4, 2, cfg, 9);
+        assert_eq!(cell.updates, cell.stats.completed);
+        assert_eq!(cell.stats.submitted, cell.stats.completed);
+        assert!(cell.snapshot_reads > 0, "readers were served during the run");
+        assert!(cell.updates_per_sec > 0.0);
+        assert!(report.sssp().is_some());
     }
 }

@@ -688,13 +688,13 @@ impl<'p> Interp<'p> {
             "attachEdgeProperty" => Ok(Value::Unit), // edge flags handled via contains()
             "updateCSRDel" => {
                 let b = self.current_gbatch()?;
-                let dels = b.deletions();
+                let dels: Vec<_> = b.deletions().collect();
                 self.graph.apply_deletions(&dels);
                 Ok(Value::Unit)
             }
             "updateCSRAdd" => {
                 let b = self.current_gbatch()?;
-                let adds = b.additions();
+                let adds: Vec<_> = b.additions().collect();
                 self.graph.apply_additions(&adds);
                 Ok(Value::Unit)
             }

@@ -173,6 +173,20 @@ impl DiffCsr {
         self.diffs.push(DiffBlock { csr, live });
     }
 
+    /// Number of vertices with their overflow bit set — the cheap "how hot
+    /// is the diff chain" signal (conservative upper bound on the vertices
+    /// whose reads pay for chain traversal). Maintained for free by
+    /// `set_overflow`; reset on merge.
+    fn overflow_count(&self) -> usize {
+        self.overflow.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Live edges currently held outside the base CSR (sealed blocks plus
+    /// the open pending list).
+    fn diff_live(&self) -> usize {
+        self.diffs.iter().map(|d| d.live).sum::<usize>() + self.pending.len()
+    }
+
     fn live_edges(&self) -> Vec<(NodeId, NodeId, Weight)> {
         let n = self.base.num_nodes();
         let mut out = Vec::new();
@@ -276,8 +290,15 @@ pub struct DynGraph {
     out_degree: Vec<u32>,
     in_degree: Vec<u32>,
     batches_since_merge: usize,
+    /// Count of sealed update batches applied since construction — the
+    /// graph's *epoch*. The streaming layer pairs this with published
+    /// property snapshots so readers can tell which graph version a
+    /// property view belongs to.
+    epoch: u64,
     /// Merge the diff chain into the base CSR after this many batches
-    /// (§3.5: "after a configurable number of batches"). 0 disables.
+    /// (§3.5: "after a configurable number of batches"). 0 disables the
+    /// built-in periodic policy (the streaming batcher drives merges
+    /// explicitly via the overflow-bitmap signal instead).
     pub merge_period: usize,
     /// Pool used to parallelize `merge` compaction (engines attach theirs
     /// via [`set_merge_pool`](Self::set_merge_pool)); `None` ⇒ serial.
@@ -303,6 +324,7 @@ impl DynGraph {
             out_degree,
             in_degree,
             batches_since_merge: 0,
+            epoch: 0,
             merge_period: 8,
             merge_pool: None,
         }
@@ -391,20 +413,71 @@ impl DynGraph {
 
     /// `g.updateCSRDel(batch)` — apply all deletions of a batch.
     pub fn apply_deletions(&mut self, dels: &[(NodeId, NodeId)]) -> usize {
-        dels.iter().filter(|&&(u, v)| self.delete_edge(u, v)).count()
+        self.apply_deletions_iter(dels.iter().copied())
+    }
+
+    /// Iterator-driven variant of [`apply_deletions`](Self::apply_deletions)
+    /// — lets `Batch::deletions()` feed the graph without materializing a
+    /// deletion vector.
+    pub fn apply_deletions_iter<I>(&mut self, dels: I) -> usize
+    where
+        I: IntoIterator<Item = (NodeId, NodeId)>,
+    {
+        let mut applied = 0;
+        for (u, v) in dels {
+            if self.delete_edge(u, v) {
+                applied += 1;
+            }
+        }
+        applied
     }
 
     /// `g.updateCSRAdd(batch)` — apply all insertions of a batch, then seal
-    /// the diff block and maybe merge per the merge policy.
+    /// the diff block, advance the graph epoch, and maybe merge per the
+    /// built-in periodic merge policy.
     pub fn apply_additions(&mut self, adds: &[(NodeId, NodeId, Weight)]) -> usize {
-        let applied = adds.iter().filter(|&&(u, v, w)| self.add_edge(u, v, w)).count();
+        self.apply_additions_iter(adds.iter().copied())
+    }
+
+    /// Iterator-driven variant of [`apply_additions`](Self::apply_additions).
+    pub fn apply_additions_iter<I>(&mut self, adds: I) -> usize
+    where
+        I: IntoIterator<Item = (NodeId, NodeId, Weight)>,
+    {
+        let mut applied = 0;
+        for (u, v, w) in adds {
+            if self.add_edge(u, v, w) {
+                applied += 1;
+            }
+        }
         self.fwd.seal_batch();
         self.bwd.seal_batch();
+        self.epoch += 1;
         self.batches_since_merge += 1;
         if self.merge_period > 0 && self.batches_since_merge >= self.merge_period {
             self.merge();
         }
         applied
+    }
+
+    /// Graph epoch: number of sealed update batches applied so far.
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Vertices whose overflow bit is set (forward side): the conservative
+    /// count of sources whose reads traverse the diff chain. This is the
+    /// "chain is cold/hot" statistic the streaming batcher's adaptive merge
+    /// policy keys on — O(n/64) to compute, maintained for free by inserts.
+    pub fn overflow_touched(&self) -> usize {
+        self.fwd.overflow_count()
+    }
+
+    /// Live edges currently held outside the base CSRs (both directions'
+    /// sealed diff blocks plus open pending lists).
+    pub fn diff_live_edges(&self) -> usize {
+        self.fwd.diff_live() + self.bwd.diff_live()
     }
 
     /// Compact both directions into fresh tombstone-free CSRs (parallel
@@ -517,8 +590,8 @@ mod tests {
             let stream =
                 crate::graph::UpdateStream::generate_percent(&g, 25.0, 64, 9, 100);
             for b in stream.batches() {
-                g.apply_deletions(&b.deletions());
-                g.apply_additions(&b.additions());
+                g.apply_deletions_iter(b.deletions());
+                g.apply_additions_iter(b.additions());
             }
             g
         };
@@ -590,6 +663,35 @@ mod tests {
         assert_eq!(g.diff_chain_len(), 1);
         g.apply_additions(&[(4, 0, 1)]);
         assert_eq!(g.diff_chain_len(), 0, "merged after 2 batches");
+    }
+
+    #[test]
+    fn epoch_counts_sealed_batches() {
+        let mut g = paper_example();
+        assert_eq!(g.epoch(), 0);
+        g.apply_deletions(&[(1, 3)]);
+        assert_eq!(g.epoch(), 0, "deletions alone do not seal a batch");
+        g.apply_additions(&[(4, 2, 1)]);
+        assert_eq!(g.epoch(), 1);
+        g.apply_additions(&[]);
+        assert_eq!(g.epoch(), 2, "empty addition set still seals the batch");
+        g.merge();
+        assert_eq!(g.epoch(), 2, "merge is epoch-neutral");
+    }
+
+    #[test]
+    fn overflow_signal_tracks_chain_heat() {
+        let mut g = paper_example();
+        g.merge_period = 0;
+        assert_eq!(g.overflow_touched(), 0);
+        assert_eq!(g.diff_live_edges(), 0);
+        // E (4) has a full base range: insert overflows into the chain
+        g.apply_additions(&[(4, 2, 1)]);
+        assert!(g.overflow_touched() >= 1, "source of an overflow insert is flagged");
+        assert!(g.diff_live_edges() >= 1);
+        g.merge();
+        assert_eq!(g.overflow_touched(), 0, "merge resets the bitmap");
+        assert_eq!(g.diff_live_edges(), 0);
     }
 
     /// Reference model: adjacency map. diff-CSR must stay equivalent under

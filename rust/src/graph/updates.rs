@@ -55,22 +55,42 @@ pub struct Batch<'a> {
 }
 
 impl<'a> Batch<'a> {
-    /// The deletions of this batch as `(src, dst)`.
-    pub fn deletions(&self) -> Vec<(NodeId, NodeId)> {
+    /// The deletions of this batch as `(src, dst)`. Allocation-free: the
+    /// iterator walks the underlying update slice directly (callers that
+    /// need a slice collect; hot loops use [`split_into`](Self::split_into)
+    /// with reusable buffers instead).
+    pub fn deletions(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
         self.updates
             .iter()
             .filter(|u| u.kind == UpdateKind::Delete)
             .map(|u| (u.src, u.dst))
-            .collect()
     }
 
-    /// The additions of this batch as `(src, dst, weight)`.
-    pub fn additions(&self) -> Vec<(NodeId, NodeId, Weight)> {
+    /// The additions of this batch as `(src, dst, weight)`; allocation-free
+    /// like [`deletions`](Self::deletions).
+    pub fn additions(&self) -> impl Iterator<Item = (NodeId, NodeId, Weight)> + '_ {
         self.updates
             .iter()
             .filter(|u| u.kind == UpdateKind::Add)
             .map(|u| (u.src, u.dst, u.weight))
-            .collect()
+    }
+
+    /// Split the batch into caller-provided deletion/addition buffers
+    /// (cleared first). The streaming hot loop reuses two buffers across
+    /// batches so batch decomposition allocates nothing in steady state.
+    pub fn split_into(
+        &self,
+        dels: &mut Vec<(NodeId, NodeId)>,
+        adds: &mut Vec<(NodeId, NodeId, Weight)>,
+    ) {
+        dels.clear();
+        adds.clear();
+        for u in self.updates {
+            match u.kind {
+                UpdateKind::Delete => dels.push((u.src, u.dst)),
+                UpdateKind::Add => adds.push((u.src, u.dst, u.weight)),
+            }
+        }
     }
 
     pub fn len(&self) -> usize {
@@ -212,8 +232,8 @@ impl UpdateStream {
     /// properties are then recomputed from scratch).
     pub fn apply_all_static(&self, g: &mut DynGraph) {
         for batch in self.batches() {
-            g.apply_deletions(&batch.deletions());
-            g.apply_additions(&batch.additions());
+            g.apply_deletions_iter(batch.deletions());
+            g.apply_additions_iter(batch.additions());
         }
     }
 }
@@ -274,10 +294,31 @@ mod tests {
         s.apply_all_static(&mut a);
         let mut b = g0.clone();
         for batch in s.batches() {
-            b.apply_deletions(&batch.deletions());
-            b.apply_additions(&batch.additions());
+            b.apply_deletions_iter(batch.deletions());
+            b.apply_additions_iter(batch.additions());
         }
         assert_eq!(a.edges_sorted(), b.edges_sorted());
+    }
+
+    #[test]
+    fn split_into_matches_iterators_and_reuses_buffers() {
+        let g = small_graph(7);
+        let s = UpdateStream::generate_percent(&g, 10.0, 16, 10, 21);
+        let mut dels = Vec::new();
+        let mut adds = Vec::new();
+        for batch in s.batches() {
+            batch.split_into(&mut dels, &mut adds);
+            assert_eq!(dels, batch.deletions().collect::<Vec<_>>());
+            assert_eq!(adds, batch.additions().collect::<Vec<_>>());
+            assert_eq!(dels.len() + adds.len(), batch.len());
+        }
+        // buffers survive the loop with capacity retained — the streaming
+        // hot loop relies on this to stay allocation-free per batch
+        let cap = (dels.capacity(), adds.capacity());
+        for batch in s.batches() {
+            batch.split_into(&mut dels, &mut adds);
+        }
+        assert!(dels.capacity() >= cap.0 && adds.capacity() >= cap.1);
     }
 
     #[test]
@@ -320,8 +361,8 @@ mod tests {
             let mut applied_del = 0;
             let mut applied_add = 0;
             for batch in s.batches() {
-                applied_del += g.apply_deletions(&batch.deletions());
-                applied_add += g.apply_additions(&batch.additions());
+                applied_del += g.apply_deletions_iter(batch.deletions());
+                applied_add += g.apply_additions_iter(batch.additions());
             }
             let dels = s.updates.iter().filter(|u| u.kind == UpdateKind::Delete).count();
             assert_eq!(applied_del, dels, "every generated deletion applies");

@@ -21,6 +21,12 @@
 //!   baseline-framework strategy engines (Galois/Ligra/Green-Marl/…).
 //! * **Coordinator** ([`coordinator`]): the dynamic batch pipeline
 //!   (preprocess → updateCSR → propagate) and experiment drivers.
+//! * **Streaming service** ([`stream`]): the continuously-running layer
+//!   the paper leaves out — sharded bounded ingest with same-edge
+//!   coalescing, adaptive size-or-deadline batch formation with a
+//!   signal-driven diff-CSR merge policy, epoch double-buffered property
+//!   snapshots, and the [`stream::GraphService`] facade serving
+//!   consistent reads while batches propagate.
 //!
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -31,6 +37,7 @@ pub mod bench;
 pub mod coordinator;
 pub mod dsl;
 pub mod graph;
+pub mod stream;
 
 pub mod runtime;
 pub mod util;

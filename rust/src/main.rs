@@ -7,16 +7,23 @@
 //!       [--graph rmat|uniform|road] [--nodes N] [--percent P]
 //!       [--batch B] [--seed S]
 //!       run one dynamic-vs-static experiment cell and print timings.
+//!   serve --algo sssp|pr|tc [--producers N] [--readers M]
+//!       [--batch B] [--deadline-ms D] [--shards S] [--threads T]
+//!       [--policy periodic:<k>|adaptive[:<f>]|never]
+//!       [--graph …] [--nodes N] [--percent P] [--seed S]
+//!       run the streaming GraphService under a synthetic multi-producer
+//!       load and print throughput + batch-latency statistics.
 //!   interp <file.sp> --fn <DynName> [--nodes N] [--percent P] …
 //!       execute a DSL program through the reference interpreter.
 //!   inspect
 //!       list the AOT artifacts the xla backend will use.
 
 use starplat_dyn::backend::BackendKind;
-use starplat_dyn::coordinator::{run_cell, Algo};
+use starplat_dyn::coordinator::{run_cell, run_stream_cell, Algo};
 use starplat_dyn::dsl::{self, emit::Target};
 use starplat_dyn::graph::generators;
 use starplat_dyn::runtime::ArtifactManifest;
+use starplat_dyn::stream::{MergePolicy, ServiceConfig};
 use starplat_dyn::util::error::{anyhow, bail, Context, Result};
 
 fn main() {
@@ -78,7 +85,7 @@ fn make_graph(args: &Args) -> starplat_dyn::graph::DynGraph {
 fn real_main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
-        println!("usage: starplat <compile|run|interp|inspect> [options]");
+        println!("usage: starplat <compile|run|serve|interp|inspect> [options]");
         return Ok(());
     };
     let args = Args::parse(&argv[1..]);
@@ -131,6 +138,62 @@ fn real_main() -> Result<()> {
             );
             println!("speedup : {:.2}x", cell.speedup());
         }
+        "serve" => {
+            let algo: Algo =
+                args.get("algo", "sssp").parse().map_err(|e: String| anyhow!(e))?;
+            let percent: f64 = args.get("percent", "10").parse()?;
+            let producers: usize = args.get("producers", "4").parse()?;
+            let readers: usize = args.get("readers", "2").parse()?;
+            let seed: u64 = args.get("seed", "42").parse()?;
+            let mut cfg = ServiceConfig::new(algo);
+            cfg.batch_capacity = args.get("batch", "512").parse()?;
+            cfg.batch_deadline = std::time::Duration::from_millis(
+                args.get("deadline-ms", "10").parse()?,
+            );
+            cfg.shards = args.get("shards", "4").parse()?;
+            if let Some(t) = args.flags.get("threads") {
+                cfg.threads = t.parse()?;
+            }
+            cfg.merge_policy = args
+                .get("policy", "adaptive")
+                .parse::<MergePolicy>()
+                .map_err(|e: String| anyhow!(e))?;
+            let g = make_graph(&args);
+            println!(
+                "serving {algo:?} on {} nodes / {} edges; {percent}% updates, \
+                 {producers} producers, {readers} readers, batch {} / {:?} deadline, \
+                 policy {}",
+                g.num_nodes(),
+                g.num_edges(),
+                cfg.batch_capacity,
+                cfg.batch_deadline,
+                cfg.merge_policy.describe()
+            );
+            let (cell, _report) =
+                run_stream_cell(algo, &g, percent, producers, readers, cfg, seed);
+            println!("updates        : {}", cell.updates);
+            println!("wall           : {:.4}s", cell.wall_secs);
+            println!("throughput     : {:.0} upd/s", cell.updates_per_sec);
+            println!(
+                "batch latency  : p50 {:.3}ms  p99 {:.3}ms  mean {:.3}ms",
+                cell.stats.batch_latency_p50 * 1e3,
+                cell.stats.batch_latency_p99 * 1e3,
+                cell.stats.batch_latency_mean * 1e3
+            );
+            println!(
+                "batches        : {} (size {}, deadline {}, drain {})",
+                cell.stats.batches,
+                cell.stats.closed_by_size,
+                cell.stats.closed_by_deadline,
+                cell.stats.closed_by_drain
+            );
+            println!(
+                "merges         : {} ({}, overflow {:.4})",
+                cell.stats.merges, cell.stats.policy, cell.stats.overflow_fraction
+            );
+            println!("coalesced      : {}", cell.stats.coalesced);
+            println!("snapshot reads : {} (epoch {})", cell.snapshot_reads, cell.stats.epoch);
+        }
         "interp" => {
             let file = args
                 .positional
@@ -174,7 +237,7 @@ fn real_main() -> Result<()> {
                 );
             }
         }
-        other => bail!("unknown subcommand {other:?} (compile|run|interp|inspect)"),
+        other => bail!("unknown subcommand {other:?} (compile|run|serve|interp|inspect)"),
     }
     Ok(())
 }

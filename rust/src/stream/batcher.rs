@@ -1,0 +1,495 @@
+//! Adaptive batch formation for the streaming service.
+//!
+//! The batcher pulls from the sharded [`Ingest`] queues and closes a batch
+//! when either bound trips:
+//! * **size** — `capacity` updates are buffered (throughput bound), or
+//! * **latency** — the *oldest* buffered update has waited `deadline`
+//!   (tail-latency bound; the deadline clock is enqueue time, so the bound
+//!   covers queueing, not just batching).
+//!
+//! At close the batcher cancels every insert that precedes a delete of the
+//! same edge inside the batch (the tail of the ingest coalescing window:
+//! the pair straddled a drain, so the queues couldn't cancel it); the
+//! delete itself flows through, exactly as in the ingest coalescer.
+//! Without this, the engine's deletions-before-additions application order
+//! would resurrect an edge the producer had already retracted.
+//!
+//! The batcher also owns the **merge policy** decision (ROADMAP "merge
+//! policy tuning"): instead of `DynGraph`'s fixed every-k-batches period,
+//! [`MergePolicy::Adaptive`] triggers `DynGraph::merge` from the
+//! overflow-bitmap heat signal — merge only once enough sources pay the
+//! diff-chain traversal tax, stay lazy while the chain is cold.
+
+use super::ingest::{Ingest, Stamped};
+use crate::graph::updates::{Update, UpdateKind};
+use crate::graph::{DynGraph, NodeId, Weight};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// When should the service compact the diff-CSR chain?
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MergePolicy {
+    /// Merge every `batches` applied batches (the paper's §3.5 fixed
+    /// period, service-side).
+    Periodic { batches: usize },
+    /// Merge when the overflow bitmap says the chain is hot: at least
+    /// `hot_fraction` of vertices carry overflow edges (every read on them
+    /// walks the chain), or the chain reaches `max_chain` blocks
+    /// (memory/latency backstop). While the signal says cold, merges are
+    /// skipped entirely — point-update workloads keep their chain.
+    Adaptive { hot_fraction: f64, max_chain: usize },
+    /// Never merge (ablation / tests).
+    Never,
+}
+
+impl Default for MergePolicy {
+    fn default() -> Self {
+        MergePolicy::Adaptive { hot_fraction: 0.05, max_chain: 32 }
+    }
+}
+
+impl MergePolicy {
+    /// Decide right after a batch was applied. `batches_since` counts
+    /// applied batches since the last merge.
+    pub fn should_merge(&self, g: &DynGraph, batches_since: usize) -> bool {
+        self.should_merge_signal(
+            g.diff_chain_len(),
+            Self::overflow_fraction(g),
+            batches_since,
+        )
+    }
+
+    /// Signal-level variant: callers that already computed the chain
+    /// length and overflow fraction (the engine loop reports both in its
+    /// stats) pass them in so the bitmap is scanned once per batch.
+    pub fn should_merge_signal(
+        &self,
+        chain_len: usize,
+        overflow_fraction: f64,
+        batches_since: usize,
+    ) -> bool {
+        match *self {
+            MergePolicy::Periodic { batches } => batches > 0 && batches_since >= batches,
+            MergePolicy::Never => false,
+            MergePolicy::Adaptive { hot_fraction, max_chain } => {
+                chain_len > 0
+                    && (chain_len >= max_chain.max(1) || overflow_fraction >= hot_fraction)
+            }
+        }
+    }
+
+    /// Current overflow heat in `[0, 1]` (exposed via service stats).
+    pub fn overflow_fraction(g: &DynGraph) -> f64 {
+        g.overflow_touched() as f64 / g.num_nodes().max(1) as f64
+    }
+
+    pub fn describe(&self) -> String {
+        match *self {
+            MergePolicy::Periodic { batches } => format!("periodic:{batches}"),
+            MergePolicy::Adaptive { hot_fraction, max_chain } => {
+                format!("adaptive:hot={hot_fraction},max_chain={max_chain}")
+            }
+            MergePolicy::Never => "never".to_string(),
+        }
+    }
+}
+
+impl std::str::FromStr for MergePolicy {
+    type Err = String;
+
+    /// `periodic:<k>` | `adaptive[:<hot_fraction>]` | `never`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "periodic" => {
+                let k = arg
+                    .unwrap_or("8")
+                    .parse::<usize>()
+                    .map_err(|e| format!("bad periodic merge count: {e}"))?;
+                Ok(MergePolicy::Periodic { batches: k })
+            }
+            "adaptive" => {
+                let f = arg
+                    .unwrap_or("0.05")
+                    .parse::<f64>()
+                    .map_err(|e| format!("bad adaptive hot fraction: {e}"))?;
+                Ok(MergePolicy::Adaptive { hot_fraction: f, max_chain: 32 })
+            }
+            "never" => Ok(MergePolicy::Never),
+            other => Err(format!("unknown merge policy {other:?} (periodic:<k>|adaptive[:<f>]|never)")),
+        }
+    }
+}
+
+/// Why a batch was closed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CloseReason {
+    /// Hit the size capacity.
+    Size,
+    /// Oldest buffered update hit the latency deadline.
+    Deadline,
+    /// Final flush during shutdown.
+    Drain,
+}
+
+/// Metadata of one closed batch.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchMeta {
+    /// Updates drained into the batch, including pairs cancelled at close
+    /// (completion accounting uses this).
+    pub raw_len: usize,
+    /// Updates that survive close-time coalescing.
+    pub live_len: usize,
+    /// Inserts cancelled at close (their deletes flow through the batch).
+    pub coalesced: usize,
+    /// Enqueue time of the oldest update in the batch.
+    pub oldest: Option<Instant>,
+    pub reason: CloseReason,
+}
+
+/// Pulls from [`Ingest`], forms batches, hands them to the engine loop as
+/// reusable deletion/addition buffers. All buffers are retained across
+/// batches: the steady-state loop is allocation-free.
+pub struct Batcher {
+    capacity: usize,
+    deadline: Duration,
+    symmetric: bool,
+    buf: Vec<Stamped>,
+    cancel: Vec<bool>,
+    oldest: Option<Instant>,
+    cursor: usize,
+    gen_seen: u64,
+    /// Edge key → indices of all not-yet-cancelled adds in `buf` (a delete
+    /// cancels the whole set — see the ingest coalescer for the duplicate-
+    /// insert rationale).
+    scratch_adds: HashMap<(NodeId, NodeId), Vec<usize>>,
+}
+
+impl Batcher {
+    pub fn new(capacity: usize, deadline: Duration, symmetric: bool) -> Self {
+        Batcher {
+            capacity: capacity.max(1),
+            deadline,
+            symmetric,
+            buf: Vec::new(),
+            cancel: Vec::new(),
+            oldest: None,
+            cursor: 0,
+            gen_seen: 0,
+            scratch_adds: HashMap::new(),
+        }
+    }
+
+    /// Pull whatever is currently available, round-robin across shards,
+    /// capped at remaining capacity.
+    fn pull(&mut self, ingest: &Ingest) -> usize {
+        let shards = ingest.num_shards();
+        let mut pulled = 0;
+        for k in 0..shards {
+            let room = self.capacity - self.buf.len();
+            if room == 0 {
+                break;
+            }
+            let i = (self.cursor + k) % shards;
+            pulled += ingest.drain_shard(i, &mut self.buf, room);
+        }
+        self.cursor = (self.cursor + 1) % shards.max(1);
+        if pulled > 0 {
+            // entries arrive in enqueue order per shard; track the global min
+            for s in &self.buf[self.buf.len() - pulled..] {
+                let older = match self.oldest {
+                    None => true,
+                    Some(o) => s.at < o,
+                };
+                if older {
+                    self.oldest = Some(s.at);
+                }
+            }
+        }
+        pulled
+    }
+
+    /// Block until a batch closes (size, deadline, or shutdown flush).
+    /// Returns `None` when the service is stopping and everything has been
+    /// flushed. After `Some(meta)`, call [`take_into`](Self::take_into) to
+    /// consume the batch.
+    pub fn next_batch(&mut self, ingest: &Ingest, stop: &AtomicBool) -> Option<BatchMeta> {
+        loop {
+            self.pull(ingest);
+            if self.buf.len() >= self.capacity {
+                return Some(self.close(CloseReason::Size));
+            }
+            let now = Instant::now();
+            if let Some(oldest) = self.oldest {
+                if now.duration_since(oldest) >= self.deadline {
+                    return Some(self.close(CloseReason::Deadline));
+                }
+            }
+            if stop.load(Ordering::Acquire) {
+                if ingest.queued() > 0 {
+                    continue; // keep pulling the final backlog without waiting
+                }
+                if self.buf.is_empty() {
+                    return None;
+                }
+                return Some(self.close(CloseReason::Drain));
+            }
+            let timeout = match self.oldest {
+                Some(o) => self.deadline.saturating_sub(now.duration_since(o)),
+                None => self.deadline, // idle tick
+            };
+            ingest.wait_for_data(&mut self.gen_seen, timeout.max(Duration::from_micros(100)));
+        }
+    }
+
+    /// Close the open batch: cancel same-edge insert→delete pairs that
+    /// landed in this batch, compute metadata.
+    fn close(&mut self, reason: CloseReason) -> BatchMeta {
+        let raw_len = self.buf.len();
+        self.cancel.clear();
+        self.cancel.resize(raw_len, false);
+        self.scratch_adds.clear();
+        let mut coalesced = 0;
+        for i in 0..raw_len {
+            let u = self.buf[i].upd;
+            let key = if self.symmetric {
+                (u.src.min(u.dst), u.src.max(u.dst))
+            } else {
+                (u.src, u.dst)
+            };
+            match u.kind {
+                UpdateKind::Add => {
+                    self.scratch_adds.entry(key).or_default().push(i);
+                }
+                UpdateKind::Delete => {
+                    // Cancel the batch's earlier inserts of this edge; the
+                    // delete itself stays (the edge may have been applied
+                    // by an earlier batch or pre-exist in the graph, and a
+                    // delete of an absent edge is a no-op at apply time).
+                    if let Some(js) = self.scratch_adds.remove(&key) {
+                        for j in &js {
+                            self.cancel[*j] = true;
+                        }
+                        coalesced += js.len();
+                    }
+                }
+            }
+        }
+        BatchMeta {
+            raw_len,
+            live_len: raw_len - coalesced,
+            coalesced,
+            oldest: self.oldest,
+            reason,
+        }
+    }
+
+    /// Decompose the closed batch into the caller's reusable buffers
+    /// (cleared first) and reset the batcher for the next batch. In
+    /// symmetric mode every update expands into both arcs.
+    pub fn take_into(
+        &mut self,
+        dels: &mut Vec<(NodeId, NodeId)>,
+        adds: &mut Vec<(NodeId, NodeId, Weight)>,
+    ) {
+        dels.clear();
+        adds.clear();
+        for (i, s) in self.buf.iter().enumerate() {
+            if self.cancel.get(i).copied().unwrap_or(false) {
+                continue;
+            }
+            let Update { kind, src, dst, weight } = s.upd;
+            match kind {
+                UpdateKind::Delete => {
+                    dels.push((src, dst));
+                    if self.symmetric {
+                        dels.push((dst, src));
+                    }
+                }
+                UpdateKind::Add => {
+                    adds.push((src, dst, weight));
+                    if self.symmetric {
+                        adds.push((dst, src, weight));
+                    }
+                }
+            }
+        }
+        self.buf.clear();
+        self.cancel.clear();
+        self.oldest = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn add(u: NodeId, v: NodeId) -> Update {
+        Update { kind: UpdateKind::Add, src: u, dst: v, weight: 1 }
+    }
+
+    fn del(u: NodeId, v: NodeId) -> Update {
+        Update { kind: UpdateKind::Delete, src: u, dst: v, weight: 0 }
+    }
+
+    #[test]
+    fn closes_on_size() {
+        let ing = Ingest::new(2, 64, false);
+        let stop = AtomicBool::new(false);
+        let mut b = Batcher::new(3, Duration::from_secs(60), false);
+        for i in 0..5 {
+            ing.submit(add(i, i + 10));
+        }
+        let meta = b.next_batch(&ing, &stop).unwrap();
+        assert_eq!(meta.reason, CloseReason::Size);
+        assert_eq!(meta.raw_len, 3);
+        let (mut dels, mut adds) = (Vec::new(), Vec::new());
+        b.take_into(&mut dels, &mut adds);
+        assert_eq!(adds.len(), 3);
+        assert!(dels.is_empty());
+        // remaining two still queued
+        assert_eq!(ing.queued(), 2);
+    }
+
+    #[test]
+    fn closes_on_deadline() {
+        let ing = Ingest::new(1, 64, false);
+        let stop = AtomicBool::new(false);
+        let mut b = Batcher::new(1000, Duration::from_millis(30), false);
+        ing.submit(add(1, 2));
+        let t0 = Instant::now();
+        let meta = b.next_batch(&ing, &stop).unwrap();
+        assert_eq!(meta.reason, CloseReason::Deadline);
+        assert_eq!(meta.raw_len, 1);
+        assert!(t0.elapsed() >= Duration::from_millis(25), "waited out the deadline");
+    }
+
+    #[test]
+    fn drain_flush_on_stop() {
+        let ing = Ingest::new(2, 64, false);
+        let stop = AtomicBool::new(true);
+        let mut b = Batcher::new(1000, Duration::from_secs(60), false);
+        ing.submit(add(1, 2));
+        ing.submit(del(9, 9));
+        let meta = b.next_batch(&ing, &stop).unwrap();
+        assert_eq!(meta.reason, CloseReason::Drain);
+        assert_eq!(meta.raw_len, 2);
+        assert!(b.next_batch(&ing, &stop).is_none(), "flushed service yields None");
+    }
+
+    #[test]
+    fn close_time_coalescing_cancels_in_batch_inserts() {
+        let ing = Ingest::new(1, 64, false);
+        let stop = AtomicBool::new(true);
+        let mut b = Batcher::new(100, Duration::from_secs(60), false);
+        // drain the add out of the shard before submitting the delete, so
+        // ingest-level coalescing cannot catch the pair
+        ing.submit(add(4, 5));
+        b.pull(&ing);
+        ing.submit(del(4, 5));
+        ing.submit(add(6, 7));
+        let meta = b.next_batch(&ing, &stop).unwrap();
+        assert_eq!(meta.raw_len, 3);
+        assert_eq!(meta.coalesced, 1, "only the insert cancels");
+        assert_eq!(meta.live_len, 2);
+        let (mut dels, mut adds) = (Vec::new(), Vec::new());
+        b.take_into(&mut dels, &mut adds);
+        assert_eq!(dels, vec![(4, 5)], "the delete flows through");
+        assert_eq!(adds, vec![(6, 7, 1)]);
+    }
+
+    #[test]
+    fn close_time_coalescing_cancels_duplicate_adds_too() {
+        let ing = Ingest::new(1, 64, false);
+        let stop = AtomicBool::new(true);
+        let mut b = Batcher::new(100, Duration::from_secs(60), false);
+        ing.submit(add(4, 5));
+        b.pull(&ing); // defeat the ingest-level coalescer
+        ing.submit(add(4, 5));
+        b.pull(&ing);
+        ing.submit(del(4, 5));
+        let meta = b.next_batch(&ing, &stop).unwrap();
+        assert_eq!(meta.raw_len, 3);
+        assert_eq!(meta.coalesced, 2, "both inserts cancel, the delete stays");
+        let (mut dels, mut adds) = (Vec::new(), Vec::new());
+        b.take_into(&mut dels, &mut adds);
+        assert_eq!(dels, vec![(4, 5)]);
+        assert!(adds.is_empty());
+    }
+
+    #[test]
+    fn delete_then_add_same_edge_in_batch_is_preserved() {
+        // replace semantics: D before A must survive close-time coalescing
+        let ing = Ingest::new(1, 64, false);
+        let stop = AtomicBool::new(true);
+        let mut b = Batcher::new(100, Duration::from_secs(60), false);
+        ing.submit(del(4, 5));
+        b.pull(&ing); // split across pulls like a real drain
+        ing.submit(add(4, 5));
+        let meta = b.next_batch(&ing, &stop).unwrap();
+        assert_eq!(meta.coalesced, 0);
+        let (mut dels, mut adds) = (Vec::new(), Vec::new());
+        b.take_into(&mut dels, &mut adds);
+        assert_eq!(dels, vec![(4, 5)]);
+        assert_eq!(adds, vec![(4, 5, 1)]);
+    }
+
+    #[test]
+    fn symmetric_take_expands_arcs() {
+        let ing = Ingest::new(1, 64, true);
+        let stop = AtomicBool::new(true);
+        let mut b = Batcher::new(100, Duration::from_secs(60), true);
+        ing.submit(add(2, 7));
+        ing.submit(del(8, 3));
+        b.next_batch(&ing, &stop).unwrap();
+        let (mut dels, mut adds) = (Vec::new(), Vec::new());
+        b.take_into(&mut dels, &mut adds);
+        assert_eq!(adds, vec![(2, 7, 1), (7, 2, 1)]);
+        assert_eq!(dels, vec![(8, 3), (3, 8)]);
+    }
+
+    #[test]
+    fn adaptive_policy_fires_on_hot_chain_only() {
+        // paper_example-ish graph with full base ranges: overflow quickly
+        let mut g = generators::uniform_random(64, 256, 5, 3);
+        g.merge_period = 0;
+        let cold = MergePolicy::Adaptive { hot_fraction: 0.5, max_chain: 1000 };
+        let hot = MergePolicy::Adaptive { hot_fraction: 0.0, max_chain: 1000 };
+        assert!(!cold.should_merge(&g, 100), "clean chain never merges");
+        assert!(!hot.should_merge(&g, 100), "hot_fraction 0 still needs a chain");
+        // force overflow inserts: fresh out-edges from every vertex
+        let adds: Vec<_> = (0..64u32).map(|u| (u, (u + 32) % 64, 1)).collect();
+        g.apply_additions(&adds);
+        if g.diff_chain_len() > 0 {
+            assert!(hot.should_merge(&g, 1));
+            assert_eq!(
+                cold.should_merge(&g, 1),
+                MergePolicy::overflow_fraction(&g) >= 0.5
+            );
+        }
+        assert!(!MergePolicy::Never.should_merge(&g, 1000));
+        assert!(MergePolicy::Periodic { batches: 2 }.should_merge(&g, 2));
+        assert!(!MergePolicy::Periodic { batches: 2 }.should_merge(&g, 1));
+    }
+
+    #[test]
+    fn merge_policy_parses() {
+        assert_eq!("never".parse::<MergePolicy>().unwrap(), MergePolicy::Never);
+        assert_eq!(
+            "periodic:4".parse::<MergePolicy>().unwrap(),
+            MergePolicy::Periodic { batches: 4 }
+        );
+        match "adaptive:0.1".parse::<MergePolicy>().unwrap() {
+            MergePolicy::Adaptive { hot_fraction, .. } => {
+                assert!((hot_fraction - 0.1).abs() < 1e-12)
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!("bogus".parse::<MergePolicy>().is_err());
+    }
+}

@@ -1,0 +1,481 @@
+//! Sharded, bounded MPSC ingest queues for the streaming service.
+//!
+//! N producer threads submit [`Update`]s concurrently; updates are
+//! distributed over `shards` independently-locked queues by a hash of the
+//! edge key, so producers touching different edges rarely contend. Each
+//! shard is **bounded**: a full shard blocks the submitting producer until
+//! the batcher drains it (backpressure), so an overloaded service degrades
+//! to producer-side queueing instead of unbounded memory growth. Outside
+//! the shard lock the submit fast path is lock-free (atomic counters and
+//! an eventcount-style batcher wakeup), so throughput scales with shards
+//! instead of serializing on a global mutex.
+//!
+//! # Same-edge coalescing
+//!
+//! A delete cancels **every still-queued insert of the same edge** before
+//! the engine sees them, and then flows through itself. For the common
+//! `add(e); …; remove(e)` producer pattern on a fresh edge both the insert
+//! and (effectively) the delete become no-ops; crucially the delete is
+//! *kept*, because the same edge may exist outside the coalescing window —
+//! pre-existing in the graph, or applied by an earlier batch — and must
+//! still be removed. A delete of an edge that ends up absent is a no-op at
+//! apply time, so keeping it is always sound. Because shard choice is a
+//! pure function of the edge key, an insert and its delete always land in
+//! the same shard, and FIFO order within a producer is preserved per
+//! shard. The batcher applies the same rule once more inside a formed
+//! batch (the tail of the window that straddles a drain).
+//!
+//! In *symmetric* mode (triangle counting: one submitted update stands for
+//! an undirected edge) the edge key is canonicalized to `(min, max)` so
+//! either arc order coalesces.
+
+use crate::graph::{NodeId, Update, UpdateKind};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One queued update plus its enqueue timestamp (the batch-latency clock
+/// starts here) and its shard-local sequence number.
+#[derive(Debug, Clone, Copy)]
+pub struct Stamped {
+    pub upd: Update,
+    pub at: Instant,
+    seq: u64,
+    cancelled: bool,
+}
+
+/// Submission/completion accounting snapshot (see
+/// [`wait_quiescent`](Ingest::wait_quiescent)).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Counters {
+    /// Updates accepted by `submit`.
+    pub submitted: u64,
+    /// Updates fully accounted for: applied by the engine, or inserts
+    /// cancelled by coalescing.
+    pub completed: u64,
+    /// Inserts cancelled by ingest-level coalescing.
+    pub coalesced: u64,
+}
+
+#[derive(Debug, Default)]
+struct ShardQueue {
+    buf: VecDeque<Stamped>,
+    /// Sequence number of `buf`'s front element (sequences are contiguous).
+    head_seq: u64,
+    next_seq: u64,
+    /// Non-cancelled entries in `buf` (what capacity bounds).
+    live: usize,
+    /// Edge key → sequences of *all* still-queued inserts (usually one;
+    /// duplicates happen with idempotent-add producers).
+    adds: HashMap<(NodeId, NodeId), Vec<u64>>,
+}
+
+struct Shard {
+    q: Mutex<ShardQueue>,
+    not_full: Condvar,
+}
+
+/// The sharded ingest front of a [`GraphService`](crate::stream::GraphService).
+pub struct Ingest {
+    shards: Vec<Shard>,
+    capacity: usize,
+    symmetric: bool,
+    stopped: AtomicBool,
+    /// Eventcount generation, bumped (SeqCst) on every successful submit.
+    avail_gen: AtomicU64,
+    /// Set (SeqCst) by the batcher just before it sleeps; producers take
+    /// the wakeup mutex only when this is set, so the submit fast path
+    /// never touches a global lock while the batcher is busy.
+    batcher_waiting: AtomicBool,
+    avail_m: Mutex<()>,
+    avail_cv: Condvar,
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    coalesced: AtomicU64,
+    quiescent_m: Mutex<()>,
+    quiescent_cv: Condvar,
+}
+
+impl Ingest {
+    /// `shards` queues of `capacity` live updates each. `symmetric`
+    /// canonicalizes edge keys to `(min, max)` (undirected submissions).
+    pub fn new(shards: usize, capacity: usize, symmetric: bool) -> Self {
+        let shards = shards.max(1);
+        Ingest {
+            shards: (0..shards)
+                .map(|_| Shard { q: Mutex::new(ShardQueue::default()), not_full: Condvar::new() })
+                .collect(),
+            capacity: capacity.max(1),
+            symmetric,
+            stopped: AtomicBool::new(false),
+            avail_gen: AtomicU64::new(0),
+            batcher_waiting: AtomicBool::new(false),
+            avail_m: Mutex::new(()),
+            avail_cv: Condvar::new(),
+            submitted: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            quiescent_m: Mutex::new(()),
+            quiescent_cv: Condvar::new(),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    fn key(&self, u: NodeId, v: NodeId) -> (NodeId, NodeId) {
+        if self.symmetric {
+            (u.min(v), u.max(v))
+        } else {
+            (u, v)
+        }
+    }
+
+    #[inline]
+    fn shard_of(&self, key: (NodeId, NodeId)) -> usize {
+        // FNV-1a over the two endpoints: cheap, deterministic, and good
+        // enough to spread edge keys across a handful of shards.
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in key.0.to_le_bytes().iter().chain(key.1.to_le_bytes().iter()) {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        (h % self.shards.len() as u64) as usize
+    }
+
+    /// Submit one update, blocking while the target shard is full. Returns
+    /// `false` (update dropped) once the service is shutting down.
+    pub fn submit(&self, upd: Update) -> bool {
+        let key = self.key(upd.src, upd.dst);
+        let shard = &self.shards[self.shard_of(key)];
+        // inserts cancelled by this submission (delete-triggered)
+        let mut cancelled = 0u64;
+        {
+            let mut q = shard.q.lock().unwrap();
+            while q.live >= self.capacity && !self.stopped.load(Ordering::Acquire) {
+                q = shard.not_full.wait(q).unwrap();
+            }
+            if self.stopped.load(Ordering::Acquire) {
+                return false;
+            }
+            if upd.kind == UpdateKind::Delete {
+                if let Some(seqs) = q.adds.remove(&key) {
+                    // Cancel every queued insert of this edge; the delete
+                    // itself still flows (the edge may exist outside the
+                    // coalescing window, and deleting an absent edge is a
+                    // no-op anyway).
+                    for seq in &seqs {
+                        let idx = (seq - q.head_seq) as usize;
+                        let slot = q.buf.get_mut(idx).expect("coalesce index in range");
+                        debug_assert_eq!(slot.seq, *seq);
+                        debug_assert_eq!(slot.upd.kind, UpdateKind::Add);
+                        slot.cancelled = true;
+                    }
+                    q.live -= seqs.len();
+                    cancelled = seqs.len() as u64;
+                    shard.not_full.notify_all();
+                }
+            }
+            let seq = q.next_seq;
+            q.next_seq += 1;
+            if upd.kind == UpdateKind::Add {
+                q.adds.entry(key).or_default().push(seq);
+            }
+            q.buf.push_back(Stamped { upd, at: Instant::now(), seq, cancelled: false });
+            q.live += 1;
+        }
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        if cancelled > 0 {
+            self.completed.fetch_add(cancelled, Ordering::SeqCst);
+            self.coalesced.fetch_add(cancelled, Ordering::SeqCst);
+            let _g = self.quiescent_m.lock().unwrap();
+            self.quiescent_cv.notify_all();
+        }
+        // Eventcount publish: bump the generation, then wake the batcher
+        // only if it declared itself asleep. SeqCst on both sides makes
+        // the flag protocol sound (either we see `batcher_waiting` and
+        // notify under the mutex, or the batcher's post-flag generation
+        // re-check sees our bump).
+        self.avail_gen.fetch_add(1, Ordering::SeqCst);
+        if self.batcher_waiting.load(Ordering::SeqCst) {
+            let _g = self.avail_m.lock().unwrap();
+            self.avail_cv.notify_all();
+        }
+        true
+    }
+
+    /// Drain up to `max` live updates from shard `i` into `out`. Returns
+    /// the number drained.
+    pub(crate) fn drain_shard(&self, i: usize, out: &mut Vec<Stamped>, max: usize) -> usize {
+        if max == 0 {
+            return 0;
+        }
+        let shard = &self.shards[i];
+        let mut q = shard.q.lock().unwrap();
+        let mut n = 0;
+        while n < max {
+            let Some(front) = q.buf.pop_front() else { break };
+            q.head_seq += 1;
+            if front.cancelled {
+                continue;
+            }
+            if front.upd.kind == UpdateKind::Add {
+                let key = self.key(front.upd.src, front.upd.dst);
+                let mut now_empty = false;
+                if let Some(seqs) = q.adds.get_mut(&key) {
+                    // FIFO drain ⇒ this add's seq is the oldest tracked one
+                    if let Some(pos) = seqs.iter().position(|&s| s == front.seq) {
+                        seqs.remove(pos);
+                    }
+                    now_empty = seqs.is_empty();
+                }
+                if now_empty {
+                    q.adds.remove(&key);
+                }
+            }
+            out.push(front);
+            q.live -= 1;
+            n += 1;
+        }
+        if n > 0 {
+            shard.not_full.notify_all();
+        }
+        n
+    }
+
+    /// Total live updates currently queued across all shards.
+    pub fn queued(&self) -> usize {
+        self.shards.iter().map(|s| s.q.lock().unwrap().live).sum()
+    }
+
+    /// Block until new data may be available (generation advanced past
+    /// `last_seen`) or `timeout` elapses. Updates `last_seen`.
+    pub(crate) fn wait_for_data(&self, last_seen: &mut u64, timeout: Duration) {
+        let cur = self.avail_gen.load(Ordering::SeqCst);
+        if cur != *last_seen {
+            *last_seen = cur;
+            return;
+        }
+        let g = self.avail_m.lock().unwrap();
+        self.batcher_waiting.store(true, Ordering::SeqCst);
+        // re-check after raising the flag: a producer that bumped the
+        // generation before seeing the flag is caught here
+        let cur = self.avail_gen.load(Ordering::SeqCst);
+        if cur != *last_seen {
+            self.batcher_waiting.store(false, Ordering::SeqCst);
+            *last_seen = cur;
+            return;
+        }
+        let (_g, _) = self.avail_cv.wait_timeout(g, timeout).unwrap();
+        self.batcher_waiting.store(false, Ordering::SeqCst);
+        *last_seen = self.avail_gen.load(Ordering::SeqCst);
+    }
+
+    /// Engine-side completion accounting: `n` drained updates were fully
+    /// processed (applied or cancelled at batch close).
+    pub(crate) fn complete(&self, n: u64) {
+        self.completed.fetch_add(n, Ordering::SeqCst);
+        let _g = self.quiescent_m.lock().unwrap();
+        self.quiescent_cv.notify_all();
+    }
+
+    pub fn counters(&self) -> Counters {
+        Counters {
+            submitted: self.submitted.load(Ordering::SeqCst),
+            completed: self.completed.load(Ordering::SeqCst),
+            coalesced: self.coalesced.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Block until every submitted update has been completed (applied or
+    /// coalesced). Callers must have stopped producing first. The short
+    /// wait timeout is only a backstop against a lost notify; the engine's
+    /// per-batch notify wakes this promptly.
+    pub fn wait_quiescent(&self) {
+        let mut g = self.quiescent_m.lock().unwrap();
+        loop {
+            let c = self.counters();
+            if c.completed >= c.submitted {
+                return;
+            }
+            let (g2, _) =
+                self.quiescent_cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
+            g = g2;
+        }
+    }
+
+    /// Flip the stop flag and wake every blocked producer and the batcher.
+    pub fn stop(&self) {
+        self.stopped.store(true, Ordering::Release);
+        for s in &self.shards {
+            let _q = s.q.lock().unwrap();
+            s.not_full.notify_all();
+        }
+        self.avail_gen.fetch_add(1, Ordering::SeqCst);
+        let _g = self.avail_m.lock().unwrap();
+        self.avail_cv.notify_all();
+    }
+
+    pub fn is_stopped(&self) -> bool {
+        self.stopped.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn add(u: NodeId, v: NodeId) -> Update {
+        Update { kind: UpdateKind::Add, src: u, dst: v, weight: 1 }
+    }
+
+    fn del(u: NodeId, v: NodeId) -> Update {
+        Update { kind: UpdateKind::Delete, src: u, dst: v, weight: 0 }
+    }
+
+    fn drain_all(ing: &Ingest) -> Vec<Update> {
+        let mut out = Vec::new();
+        for i in 0..ing.num_shards() {
+            ing.drain_shard(i, &mut out, usize::MAX);
+        }
+        out.into_iter().map(|s| s.upd).collect()
+    }
+
+    #[test]
+    fn fifo_within_shard_and_counts() {
+        let ing = Ingest::new(1, 64, false);
+        assert!(ing.submit(add(0, 1)));
+        assert!(ing.submit(add(2, 3)));
+        assert!(ing.submit(del(4, 5)));
+        assert_eq!(ing.queued(), 3);
+        let got = drain_all(&ing);
+        assert_eq!(got, vec![add(0, 1), add(2, 3), del(4, 5)]);
+        assert_eq!(ing.queued(), 0);
+        let c = ing.counters();
+        assert_eq!(c.submitted, 3);
+        assert_eq!(c.coalesced, 0);
+    }
+
+    #[test]
+    fn insert_then_delete_coalesces_the_insert() {
+        let ing = Ingest::new(4, 64, false);
+        ing.submit(add(7, 9));
+        ing.submit(add(1, 2));
+        ing.submit(del(7, 9)); // cancels the queued (7,9) insert, itself kept
+        assert_eq!(ing.queued(), 2);
+        let got = drain_all(&ing);
+        assert_eq!(got.len(), 2);
+        assert!(got.contains(&add(1, 2)));
+        assert!(
+            got.contains(&del(7, 9)),
+            "the delete must flow through (edge may exist outside the window)"
+        );
+        let c = ing.counters();
+        assert_eq!(c.submitted, 3);
+        assert_eq!(c.coalesced, 1);
+        assert_eq!(c.completed, 1, "cancelled insert is pre-completed");
+    }
+
+    #[test]
+    fn delete_cancels_all_queued_duplicate_inserts() {
+        // idempotent-add producer: Add, Add, Delete must net to absence;
+        // both queued inserts cancel, the delete flows through.
+        let ing = Ingest::new(1, 64, false);
+        ing.submit(add(7, 9));
+        ing.submit(add(7, 9));
+        ing.submit(del(7, 9));
+        assert_eq!(ing.queued(), 1);
+        assert_eq!(drain_all(&ing), vec![del(7, 9)]);
+        let c = ing.counters();
+        assert_eq!(c.coalesced, 2);
+        assert_eq!(c.completed, 2);
+    }
+
+    #[test]
+    fn delete_before_insert_does_not_coalesce() {
+        // delete-then-(re)insert is a *replace*, not a no-op
+        let ing = Ingest::new(2, 64, false);
+        ing.submit(del(3, 4));
+        ing.submit(add(3, 4));
+        assert_eq!(ing.queued(), 2);
+        assert_eq!(ing.counters().coalesced, 0);
+        let got = drain_all(&ing);
+        assert_eq!(got, vec![del(3, 4), add(3, 4)]);
+    }
+
+    #[test]
+    fn symmetric_mode_coalesces_either_arc_order() {
+        let ing = Ingest::new(4, 64, true);
+        ing.submit(add(5, 2));
+        ing.submit(del(2, 5)); // mirrored arc, same undirected key
+        assert_eq!(ing.queued(), 1, "insert cancelled, delete kept");
+        assert_eq!(drain_all(&ing), vec![del(2, 5)]);
+        assert_eq!(ing.counters().coalesced, 1);
+    }
+
+    #[test]
+    fn coalescing_after_partial_drain_indexes_correctly() {
+        let ing = Ingest::new(1, 64, false);
+        ing.submit(add(0, 1));
+        ing.submit(add(0, 2));
+        let mut out = Vec::new();
+        ing.drain_shard(0, &mut out, 1); // pops (0,1); head_seq advances
+        ing.submit(del(0, 2)); // must cancel at shifted index
+        assert_eq!(ing.queued(), 1);
+        assert_eq!(drain_all(&ing), vec![del(0, 2)]);
+        assert_eq!(ing.counters().coalesced, 1);
+    }
+
+    #[test]
+    fn backpressure_blocks_until_drained() {
+        use std::sync::Arc;
+        let ing = Arc::new(Ingest::new(1, 2, false));
+        ing.submit(add(0, 1));
+        ing.submit(add(0, 2));
+        let ing2 = Arc::clone(&ing);
+        let t = std::thread::spawn(move || ing2.submit(add(0, 3)));
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!t.is_finished(), "third submit must block on the full shard");
+        let mut out = Vec::new();
+        ing.drain_shard(0, &mut out, 1);
+        assert!(t.join().unwrap(), "blocked submit completes after drain");
+        assert_eq!(ing.queued(), 2);
+    }
+
+    #[test]
+    fn stop_unblocks_and_rejects() {
+        use std::sync::Arc;
+        let ing = Arc::new(Ingest::new(1, 1, false));
+        ing.submit(add(0, 1));
+        let ing2 = Arc::clone(&ing);
+        let t = std::thread::spawn(move || ing2.submit(add(0, 2)));
+        std::thread::sleep(Duration::from_millis(20));
+        ing.stop();
+        assert!(!t.join().unwrap(), "blocked submit is rejected on stop");
+        assert!(!ing.submit(add(0, 3)), "post-stop submits are rejected");
+    }
+
+    #[test]
+    fn batcher_wakeup_is_not_lost_under_racing_submits() {
+        use std::sync::Arc;
+        let ing = Arc::new(Ingest::new(2, 1024, false));
+        let ing2 = Arc::clone(&ing);
+        let waiter = std::thread::spawn(move || {
+            let mut last_seen = 0u64;
+            let t0 = Instant::now();
+            // generous timeout: a lost wakeup would burn the full 10s
+            ing2.wait_for_data(&mut last_seen, Duration::from_secs(10));
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        ing.submit(add(1, 2));
+        let waited = waiter.join().unwrap();
+        assert!(
+            waited < Duration::from_secs(5),
+            "submit must wake the batcher promptly (waited {waited:?})"
+        );
+    }
+}

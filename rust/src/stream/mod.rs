@@ -1,0 +1,32 @@
+//! Streaming ingest + epoch-snapshot serving layer.
+//!
+//! The paper's protocol is offline: a pre-generated ΔG is sliced into
+//! fixed batches and pushed through preprocess → updateCSR → propagate,
+//! and nobody reads results until the run ends. This module turns that
+//! batch pipeline into a continuously-running **service**:
+//!
+//! * [`ingest`] — sharded, bounded MPSC queues accepting updates from N
+//!   concurrent producers, with backpressure and same-edge
+//!   insert→delete coalescing;
+//! * [`batcher`] — adaptive batch formation (close on size *or* latency
+//!   deadline) plus the signal-driven diff-CSR merge policy;
+//! * [`snapshot`] — epoch double-buffered property publication, so
+//!   readers always see a mutually-consistent (graph-epoch, property)
+//!   pair while the next batch propagates;
+//! * [`service`] — the [`GraphService`] facade wiring
+//!   ingest → batcher → `CpuEngine` propagate → snapshot publish, with
+//!   throughput and p50/p99 batch-latency statistics.
+//!
+//! See `benches/stream_throughput.rs` for the producers × deadline grid
+//! (`BENCH_stream.json`) and `tests/stream_equivalence.rs` for the
+//! streaming-vs-offline equivalence suite.
+
+pub mod batcher;
+pub mod ingest;
+pub mod service;
+pub mod snapshot;
+
+pub use batcher::{BatchMeta, Batcher, CloseReason, MergePolicy};
+pub use ingest::{Counters, Ingest};
+pub use service::{AlgoState, GraphService, ServiceConfig, ServiceReport, ServiceStats};
+pub use snapshot::{PropTable, SnapshotCell};

@@ -1,0 +1,541 @@
+//! [`GraphService`]: the continuously-running streaming facade over the
+//! batch pipeline.
+//!
+//! Wiring: N producers → [`Ingest`] (sharded, bounded, coalescing) →
+//! [`Batcher`] (size-or-deadline batch formation + merge policy) → one
+//! engine thread driving [`CpuEngine`] dynamic batches → [`SnapshotCell`]
+//! (epoch double-buffered property publication) ← M readers.
+//!
+//! The engine thread owns the [`DynGraph`] and the algorithm state
+//! outright — no lock is ever taken on the graph, so reader queries
+//! (served from the published snapshot) proceed at full speed while a
+//! batch propagates. Producers feel backpressure only through the bounded
+//! ingest shards.
+
+use super::batcher::{Batcher, CloseReason, MergePolicy};
+use super::ingest::Ingest;
+use super::snapshot::{PropTable, SnapshotCell};
+use crate::algorithms::{PrState, SsspState, TcState};
+use crate::backend::cpu::CpuEngine;
+use crate::coordinator::Algo;
+use crate::graph::{DynGraph, NodeId, Update, UpdateKind, Weight};
+use crate::util::stats::percentile_sorted;
+use crate::util::threadpool::Sched;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Streaming service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub algo: Algo,
+    /// SSSP source vertex.
+    pub source: NodeId,
+    /// Engine thread-pool width.
+    pub threads: usize,
+    pub sched: Sched,
+    /// Ingest shard count.
+    pub shards: usize,
+    /// Live updates each shard holds before producers block.
+    pub shard_capacity: usize,
+    /// Batch closes at this many updates…
+    pub batch_capacity: usize,
+    /// …or when its oldest update has waited this long.
+    pub batch_deadline: Duration,
+    pub merge_policy: MergePolicy,
+    /// Treat each submitted update as an undirected edge (both arcs
+    /// applied per batch) — the TC protocol. Defaults to true for TC.
+    pub symmetric: bool,
+    /// PR convergence parameters.
+    pub pr_beta: f64,
+    pub pr_delta: f64,
+    pub pr_max_iter: usize,
+}
+
+impl ServiceConfig {
+    pub fn new(algo: Algo) -> Self {
+        ServiceConfig {
+            algo,
+            source: 0,
+            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            sched: Sched::default(),
+            shards: 4,
+            shard_capacity: 4096,
+            batch_capacity: 512,
+            batch_deadline: Duration::from_millis(10),
+            merge_policy: MergePolicy::default(),
+            symmetric: algo == Algo::Tc,
+            pr_beta: 1e-3,
+            pr_delta: 0.85,
+            pr_max_iter: 100,
+        }
+    }
+}
+
+/// The algorithm state the engine thread evolves batch by batch.
+#[derive(Debug, Clone)]
+pub enum AlgoState {
+    Sssp(SsspState),
+    Pr(PrState),
+    Tc(TcState),
+}
+
+/// Point-in-time service statistics.
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Updates cancelled by coalescing (ingest window + batch close).
+    pub coalesced: u64,
+    pub batches: u64,
+    pub closed_by_size: u64,
+    pub closed_by_deadline: u64,
+    pub closed_by_drain: u64,
+    pub merges: u64,
+    /// Human-readable merge policy (for dashboards / bench JSON).
+    pub policy: String,
+    /// Overflow-bitmap heat at the last batch boundary.
+    pub overflow_fraction: f64,
+    /// Published snapshot epoch.
+    pub epoch: u64,
+    /// Batch latency (enqueue of oldest update → snapshot publish), secs.
+    pub batch_latency_p50: f64,
+    pub batch_latency_p99: f64,
+    pub batch_latency_mean: f64,
+    /// Wall-clock seconds since service start.
+    pub wall_secs: f64,
+}
+
+impl ServiceStats {
+    /// Applied updates per wall-clock second.
+    pub fn updates_per_sec(&self) -> f64 {
+        if self.wall_secs > 0.0 {
+            self.completed as f64 / self.wall_secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Everything the engine thread hands back at shutdown.
+#[derive(Debug)]
+pub struct ServiceReport {
+    pub graph: DynGraph,
+    pub state: AlgoState,
+    pub stats: ServiceStats,
+}
+
+impl ServiceReport {
+    pub fn sssp(&self) -> Option<&SsspState> {
+        match &self.state {
+            AlgoState::Sssp(st) => Some(st),
+            _ => None,
+        }
+    }
+
+    pub fn pr(&self) -> Option<&PrState> {
+        match &self.state {
+            AlgoState::Pr(st) => Some(st),
+            _ => None,
+        }
+    }
+
+    pub fn tc(&self) -> Option<&TcState> {
+        match &self.state {
+            AlgoState::Tc(st) => Some(st),
+            _ => None,
+        }
+    }
+}
+
+/// Cap on retained latency samples (old samples are overwritten
+/// pseudo-randomly past this, keeping percentiles representative).
+const MAX_LATENCY_SAMPLES: usize = 65_536;
+
+#[derive(Debug, Default)]
+struct StatsInner {
+    batches: u64,
+    closed_by_size: u64,
+    closed_by_deadline: u64,
+    closed_by_drain: u64,
+    merges: u64,
+    batch_coalesced: u64,
+    overflow_fraction: f64,
+    latencies: Vec<f64>,
+    lcg: u64,
+}
+
+impl StatsInner {
+    fn push_latency(&mut self, secs: f64) {
+        if self.latencies.len() < MAX_LATENCY_SAMPLES {
+            self.latencies.push(secs);
+        } else {
+            // deterministic LCG replacement
+            self.lcg = self.lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let i = (self.lcg >> 33) as usize % self.latencies.len();
+            self.latencies[i] = secs;
+        }
+    }
+}
+
+struct Shared {
+    stop: AtomicBool,
+    stats: Mutex<StatsInner>,
+    started: Instant,
+}
+
+/// Handle to a running streaming service. Clone-free: share via `Arc`.
+pub struct GraphService {
+    ingest: Arc<Ingest>,
+    snapshots: Arc<SnapshotCell>,
+    shared: Arc<Shared>,
+    cfg: ServiceConfig,
+    worker: Mutex<Option<JoinHandle<(DynGraph, AlgoState)>>>,
+}
+
+impl GraphService {
+    /// Seed the service: run the initial static solve on `g`, publish it
+    /// as epoch 1, then start the engine thread.
+    pub fn start(mut g: DynGraph, cfg: ServiceConfig) -> Self {
+        // The service owns the merge schedule (policy-driven, from the
+        // batcher's seat) — disable the graph's built-in period.
+        g.merge_period = 0;
+        let engine = CpuEngine::new(cfg.threads, cfg.sched);
+        g.set_merge_pool(engine.pool.clone());
+        let state = match cfg.algo {
+            Algo::Sssp => AlgoState::Sssp(engine.sssp_static(&g, cfg.source)),
+            Algo::Pr => {
+                let mut st =
+                    PrState::new(g.num_nodes(), cfg.pr_beta, cfg.pr_delta, cfg.pr_max_iter);
+                engine.pr_static(&g, &mut st);
+                AlgoState::Pr(st)
+            }
+            Algo::Tc => AlgoState::Tc(engine.tc_static(&g)),
+        };
+        let snapshots = Arc::new(SnapshotCell::new());
+        publish_state(&snapshots, &g, &state);
+        let ingest = Arc::new(Ingest::new(cfg.shards, cfg.shard_capacity, cfg.symmetric));
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            stats: Mutex::new(StatsInner::default()),
+            started: Instant::now(),
+        });
+
+        let worker = {
+            let ingest = Arc::clone(&ingest);
+            let snapshots = Arc::clone(&snapshots);
+            let shared = Arc::clone(&shared);
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                engine_loop(g, state, engine, ingest, snapshots, shared, cfg)
+            })
+        };
+
+        GraphService { ingest, snapshots, shared, cfg, worker: Mutex::new(Some(worker)) }
+    }
+
+    /// Submit one update (blocking under backpressure). Returns `false`
+    /// once the service is shutting down.
+    pub fn submit(&self, upd: Update) -> bool {
+        self.ingest.submit(upd)
+    }
+
+    /// Convenience: submit an edge insertion.
+    pub fn insert(&self, src: NodeId, dst: NodeId, weight: Weight) -> bool {
+        self.submit(Update { kind: UpdateKind::Add, src, dst, weight })
+    }
+
+    /// Convenience: submit an edge deletion.
+    pub fn remove(&self, src: NodeId, dst: NodeId) -> bool {
+        self.submit(Update { kind: UpdateKind::Delete, src, dst, weight: 0 })
+    }
+
+    /// Block until every submitted update has been applied (or coalesced)
+    /// and its snapshot published. Producers must pause first.
+    pub fn drain(&self) {
+        self.ingest.wait_quiescent();
+    }
+
+    /// Latest published snapshot epoch.
+    pub fn epoch(&self) -> u64 {
+        self.snapshots.epoch()
+    }
+
+    /// Run `f` against the current published snapshot (never blocks on the
+    /// engine; see [`SnapshotCell`]).
+    pub fn with_snapshot<R>(&self, f: impl FnOnce(&PropTable) -> R) -> R {
+        self.snapshots.read(f)
+    }
+
+    /// SSSP distance of `v` in the published snapshot.
+    pub fn dist(&self, v: NodeId) -> Option<i64> {
+        self.with_snapshot(|t| t.dist.get(v as usize).copied())
+    }
+
+    /// PageRank of `v` in the published snapshot.
+    pub fn rank(&self, v: NodeId) -> Option<f64> {
+        self.with_snapshot(|t| t.rank.get(v as usize).copied())
+    }
+
+    /// Triangle count in the published snapshot (TC services).
+    pub fn triangles(&self) -> Option<i64> {
+        if self.cfg.algo == Algo::Tc {
+            Some(self.with_snapshot(|t| t.triangles))
+        } else {
+            None
+        }
+    }
+
+    /// Current service statistics. The engine takes the same stats lock
+    /// after every batch, so the latency samples are cloned out and sorted
+    /// *outside* the critical section (one sort serves every percentile).
+    pub fn stats(&self) -> ServiceStats {
+        let c = self.ingest.counters();
+        let mut out = ServiceStats {
+            submitted: c.submitted,
+            completed: c.completed,
+            coalesced: c.coalesced,
+            policy: self.cfg.merge_policy.describe(),
+            epoch: self.snapshots.epoch(),
+            wall_secs: self.shared.started.elapsed().as_secs_f64(),
+            ..ServiceStats::default()
+        };
+        let mut lat = {
+            let inner = self.shared.stats.lock().unwrap();
+            out.coalesced += inner.batch_coalesced;
+            out.batches = inner.batches;
+            out.closed_by_size = inner.closed_by_size;
+            out.closed_by_deadline = inner.closed_by_deadline;
+            out.closed_by_drain = inner.closed_by_drain;
+            out.merges = inner.merges;
+            out.overflow_fraction = inner.overflow_fraction;
+            inner.latencies.clone()
+        };
+        if !lat.is_empty() {
+            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            out.batch_latency_p50 = percentile_sorted(&lat, 0.50);
+            out.batch_latency_p99 = percentile_sorted(&lat, 0.99);
+            out.batch_latency_mean = lat.iter().sum::<f64>() / lat.len() as f64;
+        }
+        out
+    }
+
+    /// Stop the service: reject new submissions, flush the backlog through
+    /// the engine, join, and hand back graph + state + final stats.
+    pub fn shutdown(self) -> ServiceReport {
+        self.shared.stop.store(true, Ordering::Release);
+        self.ingest.stop();
+        let handle = self.worker.lock().unwrap().take().expect("shutdown called once");
+        let (graph, state) = handle.join().expect("engine thread panicked");
+        let stats = self.stats();
+        ServiceReport { graph, state, stats }
+    }
+}
+
+fn publish_state(cell: &SnapshotCell, g: &DynGraph, state: &AlgoState) {
+    cell.publish(|t| {
+        t.graph_epoch = g.epoch();
+        t.num_nodes = g.num_nodes();
+        t.num_edges = g.num_edges();
+        match state {
+            AlgoState::Sssp(st) => {
+                t.dist.clear();
+                t.dist.extend_from_slice(&st.dist);
+                t.parent.clear();
+                t.parent.extend_from_slice(&st.parent);
+            }
+            AlgoState::Pr(st) => {
+                t.rank.clear();
+                t.rank.extend_from_slice(&st.rank);
+            }
+            AlgoState::Tc(st) => {
+                t.triangles = st.triangles;
+            }
+        }
+    });
+}
+
+#[allow(clippy::too_many_arguments)]
+fn engine_loop(
+    mut g: DynGraph,
+    mut state: AlgoState,
+    engine: CpuEngine,
+    ingest: Arc<Ingest>,
+    snapshots: Arc<SnapshotCell>,
+    shared: Arc<Shared>,
+    cfg: ServiceConfig,
+) -> (DynGraph, AlgoState) {
+    let mut batcher = Batcher::new(cfg.batch_capacity, cfg.batch_deadline, cfg.symmetric);
+    let mut dels: Vec<(NodeId, NodeId)> = Vec::new();
+    let mut adds: Vec<(NodeId, NodeId, Weight)> = Vec::new();
+    let mut batches_since_merge = 0usize;
+
+    while let Some(meta) = batcher.next_batch(&ingest, &shared.stop) {
+        batcher.take_into(&mut dels, &mut adds);
+
+        match &mut state {
+            AlgoState::Sssp(st) => engine.sssp_dynamic_batch_parts(&mut g, st, &dels, &adds),
+            AlgoState::Pr(st) => {
+                engine.pr_dynamic_batch_parts(&mut g, st, &dels, &adds);
+            }
+            AlgoState::Tc(st) => {
+                // TC's decremental delta counting assumes deleted arcs are
+                // live (Fig. 19 runs it *before* updateCSRDel); coalescing
+                // keeps deletes whose insert was cancelled, so deletes of
+                // absent arcs are legal here — drop them before counting.
+                dels.retain(|&(u, v)| g.has_edge(u, v));
+                engine.tc_dynamic_batch(&mut g, st, &dels, &adds);
+            }
+        }
+
+        batches_since_merge += 1;
+        // one bitmap scan per batch: the same signal drives the merge
+        // decision and the stats (recorded pre-merge, so dashboards see
+        // the heat that *triggered* a merge rather than the post-merge 0)
+        let overflow_fraction = MergePolicy::overflow_fraction(&g);
+        let merged = cfg.merge_policy.should_merge_signal(
+            g.diff_chain_len(),
+            overflow_fraction,
+            batches_since_merge,
+        );
+        if merged {
+            g.merge();
+            batches_since_merge = 0;
+        }
+
+        publish_state(&snapshots, &g, &state);
+
+        let latency = meta.oldest.map(|o| o.elapsed().as_secs_f64()).unwrap_or(0.0);
+        {
+            let mut s = shared.stats.lock().unwrap();
+            s.batches += 1;
+            match meta.reason {
+                CloseReason::Size => s.closed_by_size += 1,
+                CloseReason::Deadline => s.closed_by_deadline += 1,
+                CloseReason::Drain => s.closed_by_drain += 1,
+            }
+            if merged {
+                s.merges += 1;
+            }
+            s.batch_coalesced += meta.coalesced as u64;
+            s.overflow_fraction = overflow_fraction;
+            s.push_latency(latency);
+        }
+        // Completion accounting last: `drain()` returning guarantees the
+        // matching snapshot is already published.
+        ingest.complete(meta.raw_len as u64);
+    }
+    (g, state)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{sssp, triangle};
+    use crate::graph::{generators, UpdateStream};
+
+    fn cfg(algo: Algo) -> ServiceConfig {
+        let mut c = ServiceConfig::new(algo);
+        c.threads = 2;
+        c.shards = 2;
+        c.batch_capacity = 64;
+        c.batch_deadline = Duration::from_millis(2);
+        c
+    }
+
+    #[test]
+    fn sssp_service_drains_and_matches_oracle() {
+        let g0 = generators::uniform_random(200, 1000, 9, 11);
+        let stream = UpdateStream::generate_percent(&g0, 10.0, 64, 9, 13);
+        let svc = GraphService::start(g0.clone(), cfg(Algo::Sssp));
+        assert_eq!(svc.epoch(), 1, "initial static solve published");
+        for u in &stream.updates {
+            assert!(svc.submit(*u));
+        }
+        svc.drain();
+        let stats = svc.stats();
+        assert_eq!(stats.submitted, stream.len() as u64);
+        assert_eq!(stats.completed, stats.submitted);
+        let report = svc.shutdown();
+        let mut want = g0.clone();
+        stream.apply_all_static(&mut want);
+        assert_eq!(report.graph.edges_sorted(), want.edges_sorted());
+        assert_eq!(report.sssp().unwrap().dist, sssp::dijkstra_oracle(&want, 0));
+    }
+
+    #[test]
+    fn snapshot_queries_never_block_and_stay_consistent() {
+        let g0 = generators::uniform_random(150, 700, 9, 21);
+        let n = g0.num_nodes();
+        let stream = UpdateStream::generate_percent(&g0, 15.0, 64, 9, 23);
+        let svc = Arc::new(GraphService::start(g0, cfg(Algo::Sssp)));
+        let stop = Arc::new(AtomicBool::new(false));
+        let reader = {
+            let svc = Arc::clone(&svc);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    svc.with_snapshot(|t| {
+                        assert_eq!(t.dist.len(), n, "snapshot arrays always complete");
+                        assert_eq!(t.parent.len(), n);
+                        assert!(t.epoch >= 1);
+                    });
+                    reads += 1;
+                }
+                reads
+            })
+        };
+        for u in &stream.updates {
+            svc.submit(*u);
+        }
+        svc.drain();
+        stop.store(true, Ordering::Relaxed);
+        assert!(reader.join().unwrap() > 0);
+        let Ok(svc) = Arc::try_unwrap(svc) else { panic!("sole owner after reader joined") };
+        let report = svc.shutdown();
+        assert!(report.stats.batches > 0);
+    }
+
+    #[test]
+    fn tc_service_counts_exactly() {
+        let g0 = triangle::symmetrize(&generators::uniform_random(60, 360, 5, 31));
+        // one undirected update per submission; symmetric mode expands arcs
+        let workload = crate::coordinator::stream_workload(Algo::Tc, &g0, 15.0, 33);
+        let mut c = cfg(Algo::Tc);
+        assert!(c.symmetric);
+        c.batch_capacity = 8;
+        let svc = GraphService::start(g0, c);
+        for u in workload {
+            assert!(svc.submit(u));
+        }
+        svc.drain();
+        let report = svc.shutdown();
+        assert_eq!(
+            report.tc().unwrap().triangles,
+            triangle::static_tc(&report.graph).triangles,
+            "streamed delta counting must equal a full recount"
+        );
+    }
+
+    #[test]
+    fn adaptive_policy_reports_merges_in_stats() {
+        let g0 = generators::uniform_random(300, 1500, 9, 41);
+        let stream = UpdateStream::generate_percent(&g0, 20.0, 64, 9, 43);
+        let mut c = cfg(Algo::Sssp);
+        c.merge_policy = MergePolicy::Adaptive { hot_fraction: 0.01, max_chain: 4 };
+        c.batch_capacity = 32;
+        let svc = GraphService::start(g0, c);
+        for u in &stream.updates {
+            svc.submit(*u);
+        }
+        svc.drain();
+        let stats = svc.stats();
+        assert!(stats.policy.starts_with("adaptive"));
+        assert!(stats.merges > 0, "20% churn must trip the adaptive signal");
+        let report = svc.shutdown();
+        assert!(report.stats.batches > 0);
+        assert!(report.stats.batch_latency_p99 >= report.stats.batch_latency_p50);
+    }
+}

@@ -67,6 +67,13 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     assert!(!xs.is_empty());
     let mut v = xs.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile of an **already-sorted** slice (linear interpolation) —
+/// callers extracting several percentiles sort once and index repeatedly.
+pub fn percentile_sorted(v: &[f64], q: f64) -> f64 {
+    assert!(!v.is_empty());
     let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -105,5 +112,15 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 1.0), 5.0);
         assert_eq!(percentile(&xs, 0.5), 3.0);
+    }
+
+    #[test]
+    fn percentile_sorted_matches_unsorted_entry() {
+        let xs = [9.0, 2.0, 7.0, 4.0];
+        let mut sorted = xs.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(percentile(&xs, q), percentile_sorted(&sorted, q));
+        }
     }
 }

@@ -1,0 +1,287 @@
+//! Streaming ⇔ offline equivalence suite: the `GraphService` end-state
+//! after draining a multi-producer update stream must equal the
+//! coordinator's offline batch-mode result, and same-edge coalescing must
+//! be observationally a no-op.
+
+use starplat_dyn::algorithms::{sssp, triangle, PrState};
+use starplat_dyn::backend::cpu::CpuEngine;
+use starplat_dyn::coordinator::{run_stream_cell, stream_workload, Algo};
+use starplat_dyn::graph::{generators, DynGraph, NodeId, Update, UpdateKind, UpdateStream};
+use starplat_dyn::stream::{GraphService, MergePolicy, ServiceConfig};
+use starplat_dyn::util::propcheck::forall_checks;
+use starplat_dyn::util::threadpool::Sched;
+use std::time::Duration;
+
+/// Deterministic single-lane config: one producer + one shard + one engine
+/// thread makes the service batching bit-identical to offline
+/// `stream.batches()` chunking, so results can be compared exactly. The
+/// exact tests trim their workload to a multiple of `batch`, so every
+/// batch closes by *size* and the (long) deadline never shapes batching —
+/// a scheduler stall can't shift batch boundaries and flake the bitwise
+/// asserts.
+fn exact_cfg(algo: Algo, batch: usize) -> ServiceConfig {
+    let mut cfg = ServiceConfig::new(algo);
+    cfg.threads = 1;
+    cfg.sched = Sched::Dynamic { chunk: 64 };
+    cfg.shards = 1;
+    cfg.batch_capacity = batch;
+    cfg.batch_deadline = Duration::from_secs(60);
+    cfg.merge_policy = MergePolicy::Never;
+    cfg
+}
+
+/// Trim an update list to a whole number of `batch`-sized chunks.
+fn trim_to_batches(mut updates: Vec<Update>, batch: usize) -> Vec<Update> {
+    updates.truncate(updates.len() - updates.len() % batch);
+    assert!(!updates.is_empty(), "workload must keep at least one full batch");
+    updates
+}
+
+fn concurrent_cfg(algo: Algo) -> ServiceConfig {
+    let mut cfg = ServiceConfig::new(algo);
+    cfg.threads = 2;
+    cfg.shards = 4;
+    cfg.batch_capacity = 64;
+    cfg.batch_deadline = Duration::from_millis(2);
+    cfg
+}
+
+/// Apply a stream-workload update list to a graph (the offline ground
+/// truth for multi-producer runs; order-independent for generated
+/// conflict-free workloads).
+fn apply_workload(g: &mut DynGraph, workload: &[Update], symmetric: bool) {
+    for u in workload {
+        match u.kind {
+            UpdateKind::Delete => {
+                g.delete_edge(u.src, u.dst);
+                if symmetric {
+                    g.delete_edge(u.dst, u.src);
+                }
+            }
+            UpdateKind::Add => {
+                g.add_edge(u.src, u.dst, u.weight);
+                if symmetric {
+                    g.add_edge(u.dst, u.src, u.weight);
+                }
+            }
+        }
+    }
+}
+
+/// Single-producer SSSP: the streamed end-state is *bitwise* equal to the
+/// coordinator's offline batch-mode pipeline over the same batches.
+#[test]
+fn sssp_stream_equals_offline_batch_mode_exactly() {
+    let g0 = generators::uniform_random(300, 1500, 9, 71);
+    let batch = 64;
+    let raw = UpdateStream::generate_percent(&g0, 12.0, batch, 9, 73);
+    let stream = UpdateStream::new(trim_to_batches(raw.updates, batch), batch);
+
+    // offline batch mode (same engine shape: 1 thread, no merges)
+    let engine = CpuEngine::new(1, Sched::Dynamic { chunk: 64 });
+    let mut g = g0.clone();
+    g.merge_period = 0;
+    let mut offline = engine.sssp_static(&g, 0);
+    for b in stream.batches() {
+        engine.sssp_dynamic_batch(&mut g, &mut offline, &b);
+    }
+
+    // streaming
+    let svc = GraphService::start(g0.clone(), exact_cfg(Algo::Sssp, batch));
+    for u in &stream.updates {
+        assert!(svc.submit(*u));
+    }
+    svc.drain();
+    let report = svc.shutdown();
+
+    assert_eq!(report.graph.edges_sorted(), g.edges_sorted());
+    let st = report.sssp().expect("sssp service");
+    assert_eq!(st.dist, offline.dist, "distances must match offline batch mode");
+    assert_eq!(st.parent, offline.parent, "SP-tree parents must match");
+    // …and both equal the independent oracle on the final graph
+    assert_eq!(st.dist, sssp::dijkstra_oracle(&g, 0));
+}
+
+/// Single-producer PR: identical batching + single-thread engine ⇒ the
+/// streamed ranks are bitwise equal to offline batch mode.
+#[test]
+fn pr_stream_equals_offline_batch_mode_exactly() {
+    let g0 = generators::rmat(8, 1200, 0.57, 0.19, 0.19, 77);
+    let n = g0.num_nodes();
+    let batch = 64;
+    let raw = UpdateStream::generate_percent(&g0, 8.0, batch, 9, 79);
+    let stream = UpdateStream::new(trim_to_batches(raw.updates, batch), batch);
+
+    let engine = CpuEngine::new(1, Sched::Dynamic { chunk: 64 });
+    let mut g = g0.clone();
+    g.merge_period = 0;
+    let mut offline = PrState::new(n, 1e-3, 0.85, 100);
+    engine.pr_static(&g, &mut offline);
+    for b in stream.batches() {
+        engine.pr_dynamic_batch(&mut g, &mut offline, &b);
+    }
+
+    let svc = GraphService::start(g0.clone(), exact_cfg(Algo::Pr, batch));
+    for u in &stream.updates {
+        assert!(svc.submit(*u));
+    }
+    svc.drain();
+    let report = svc.shutdown();
+
+    assert_eq!(report.graph.edges_sorted(), g.edges_sorted());
+    let st = report.pr().expect("pr service");
+    assert_eq!(st.rank, offline.rank, "ranks must match offline batch mode bitwise");
+}
+
+/// Multi-producer SSSP: end-state equals the offline batch-mode result
+/// (both equal the Dijkstra oracle on the fully-updated graph).
+#[test]
+fn sssp_multi_producer_stream_matches_offline() {
+    let g0 = generators::uniform_random(400, 2000, 9, 81);
+    let workload = stream_workload(Algo::Sssp, &g0, 10.0, 83);
+    let (_, report) =
+        run_stream_cell(Algo::Sssp, &g0, 10.0, 4, 1, concurrent_cfg(Algo::Sssp), 83);
+
+    let mut want = g0.clone();
+    apply_workload(&mut want, &workload, false);
+    assert_eq!(report.graph.edges_sorted(), want.edges_sorted());
+
+    // offline batch mode over the same updates (producer interleaving is
+    // immaterial: dynamic SSSP is exact for any batching/order)
+    let engine = CpuEngine::new(2, Sched::Dynamic { chunk: 64 });
+    let stream = UpdateStream::new(workload, 64);
+    let mut g = g0.clone();
+    let mut offline = engine.sssp_static(&g, 0);
+    for b in stream.batches() {
+        engine.sssp_dynamic_batch(&mut g, &mut offline, &b);
+    }
+    let st = report.sssp().expect("sssp service");
+    assert_eq!(st.dist, offline.dist);
+    assert_eq!(st.dist, sssp::dijkstra_oracle(&want, 0));
+}
+
+/// Multi-producer PR: streamed ranks and offline batch-mode ranks both
+/// track the static recompute of the final graph.
+#[test]
+fn pr_multi_producer_stream_tracks_offline() {
+    let g0 = generators::rmat(7, 600, 0.57, 0.19, 0.19, 91);
+    let n = g0.num_nodes();
+    let mut cfg = concurrent_cfg(Algo::Pr);
+    cfg.pr_beta = 1e-9;
+    cfg.pr_max_iter = 200;
+    let workload = stream_workload(Algo::Pr, &g0, 8.0, 93);
+    let (_, report) = run_stream_cell(Algo::Pr, &g0, 8.0, 4, 1, cfg, 93);
+
+    let mut want = g0.clone();
+    apply_workload(&mut want, &workload, false);
+    assert_eq!(report.graph.edges_sorted(), want.edges_sorted());
+
+    let mut truth = PrState::new(n, 1e-9, 0.85, 200);
+    let engine = CpuEngine::new(2, Sched::Dynamic { chunk: 64 });
+    engine.pr_static(&want, &mut truth);
+
+    let st = report.pr().expect("pr service");
+    let l1: f64 = st.rank.iter().zip(&truth.rank).map(|(a, b)| (a - b).abs()).sum();
+    assert!(l1 < 0.05, "streamed PR diverged from static recompute: L1={l1}");
+
+    // offline batch mode over the same updates, same tolerance
+    let stream = UpdateStream::new(workload, 64);
+    let mut g = g0.clone();
+    let mut offline = PrState::new(n, 1e-9, 0.85, 200);
+    engine.pr_static(&g, &mut offline);
+    for b in stream.batches() {
+        engine.pr_dynamic_batch(&mut g, &mut offline, &b);
+    }
+    let l1_off: f64 =
+        offline.rank.iter().zip(&truth.rank).map(|(a, b)| (a - b).abs()).sum();
+    assert!(l1_off < 0.05, "offline PR diverged: L1={l1_off}");
+}
+
+/// Multi-producer TC: delta counting over streamed undirected updates is
+/// exact — the end count equals a full static recount.
+#[test]
+fn tc_multi_producer_stream_counts_exactly() {
+    let g0 = generators::uniform_random(80, 480, 5, 101);
+    let (_, report) =
+        run_stream_cell(Algo::Tc, &g0, 15.0, 4, 1, concurrent_cfg(Algo::Tc), 103);
+    let st = report.tc().expect("tc service");
+    assert_eq!(
+        st.triangles,
+        triangle::static_tc(&report.graph).triangles,
+        "streamed TC must equal a static recount of the final graph"
+    );
+    // and the final graph stayed symmetric (arcs applied in pairs)
+    for (u, v, _) in report.graph.edges_sorted() {
+        assert!(report.graph.has_edge(v, u), "asymmetric arc {u}->{v} after stream");
+    }
+}
+
+/// Propcheck: an insert followed by a delete of the same (fresh) edge
+/// submitted within one producer's stream is observationally a no-op —
+/// the drained service state is identical to a run without the pair.
+#[test]
+fn prop_coalesced_insert_delete_pairs_are_noops() {
+    forall_checks(0xC0A1, 6, |gen| {
+        let n = gen.usize_in(40, 120);
+        let e = gen.usize_in(n, n * 4);
+        let seed = gen.rng().next_u64();
+        let g0 = generators::uniform_random(n, e, 9, seed);
+        let pct = 2.0 + gen.f64_unit() * 10.0;
+        let base = UpdateStream::generate_percent(&g0, pct, 1, 9, seed ^ 0x11).updates;
+
+        // edges never present in the run: not in g0, not added by `base`
+        let mut forbidden: std::collections::HashSet<(NodeId, NodeId)> =
+            g0.edges_sorted().iter().map(|&(u, v, _)| (u, v)).collect();
+        for u in &base {
+            forbidden.insert((u.src, u.dst));
+        }
+        let mut pairs = Vec::new();
+        while pairs.len() < 8 {
+            let u = gen.usize_in(0, n - 1) as NodeId;
+            let v = gen.usize_in(0, n - 1) as NodeId;
+            if u != v && forbidden.insert((u, v)) {
+                pairs.push((u, v));
+            }
+        }
+
+        // weave each add strictly before its delete into one producer lane
+        let mut updates = base.clone();
+        for &(u, v) in &pairs {
+            let i = gen.usize_in(0, updates.len());
+            updates.insert(i, Update { kind: UpdateKind::Add, src: u, dst: v, weight: 3 });
+            let j = gen.usize_in(i + 1, updates.len());
+            updates.insert(j, Update { kind: UpdateKind::Delete, src: u, dst: v, weight: 0 });
+        }
+
+        let run = |upds: &[Update]| {
+            let mut cfg = concurrent_cfg(Algo::Sssp);
+            cfg.batch_capacity = gen_batch(upds.len());
+            let svc = GraphService::start(g0.clone(), cfg);
+            for u in upds {
+                assert!(svc.submit(*u));
+            }
+            svc.drain();
+            svc.shutdown()
+        };
+        let with_pairs = run(&updates);
+        let without_pairs = run(&base);
+
+        assert_eq!(
+            with_pairs.graph.edges_sorted(),
+            without_pairs.graph.edges_sorted(),
+            "coalesced pairs must leave no trace in the graph"
+        );
+        for &(u, v) in &pairs {
+            assert!(!with_pairs.graph.has_edge(u, v), "pair edge {u}->{v} survived");
+        }
+        assert_eq!(
+            with_pairs.sssp().unwrap().dist,
+            sssp::dijkstra_oracle(&without_pairs.graph, 0),
+            "properties must match the pair-free run"
+        );
+    });
+}
+
+fn gen_batch(len: usize) -> usize {
+    (len / 7).clamp(8, 256)
+}
