@@ -8,10 +8,18 @@
 //! the flat layout (per-block CSR + overflow bitmap + binary-search
 //! membership) is tracked from this PR onward in `BENCH_microbench.json`.
 //!
-//! Usage: `cargo bench --bench microbench`
+//! Also includes (§Perf iteration 5) the **push/pull crossover sweep** —
+//! direction-forced SSSP fixed points over a frontier-density × graph-skew
+//! grid (hub vs fringe source, power-law vs uniform graph) — and the
+//! dynamic vs static vs `Sched::Partitioned` schedule comparison, both
+//! tracked in `BENCH_microbench.json`.
+//!
+//! Usage: `cargo bench --bench microbench [-- --smoke]`
 //! Output: human-readable table + `BENCH_microbench.json` in the CWD.
+//! `--smoke` shrinks the graph and rep counts to CI size.
 
-use starplat_dyn::backend::cpu::atomic_min;
+use starplat_dyn::backend::cpu::{atomic_min, CpuEngine, Direction};
+use starplat_dyn::coordinator::pr_params;
 use starplat_dyn::graph::{generators, Csr, DynGraph, NodeId, UpdateStream, Weight, TOMBSTONE};
 use starplat_dyn::util::threadpool::{Sched, ThreadPool};
 use starplat_dyn::util::timer::time_it;
@@ -78,15 +86,18 @@ impl LegacyDiffGraph {
 }
 
 fn main() {
-    let g = generators::rmat(12, 80_000, 0.57, 0.19, 0.19, 3);
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let (scale, edges, reps, probes_n) =
+        if smoke { (9u32, 6_000usize, 2usize, 20_000usize) } else { (12, 80_000, 8, 200_000) };
+    let g = generators::rmat(scale, edges, 0.57, 0.19, 0.19, 3);
     let n = g.num_nodes();
     let m = g.num_edges();
-    println!("substrate microbenchmarks on rmat n={n} m={m}");
+    println!("substrate microbenchmarks on rmat n={n} m={m}{}", if smoke { " (smoke)" } else { "" });
 
     // CSR traversal throughput (the SSSP/PR inner loop)
     let (sum, t) = time_it(|| {
         let mut acc = 0u64;
-        for _ in 0..8 {
+        for _ in 0..reps {
             for v in 0..n as u32 {
                 for (nbr, w) in g.out_neighbors(v) {
                     acc = acc.wrapping_add(nbr as u64 + w as u64);
@@ -97,7 +108,7 @@ fn main() {
     });
     println!(
         "edge traversal      : {:>10.1} Medges/s   (checksum {sum})",
-        8.0 * m as f64 / t / 1e6
+        reps as f64 * m as f64 / t / 1e6
     );
 
     // ------------------------------------------------------- diff chain
@@ -117,7 +128,6 @@ fn main() {
     let md = gd.num_edges();
     let legacy = LegacyDiffGraph::from(&gd);
 
-    let reps = 8;
     let (chk_flat, t_flat) = time_it(|| {
         let mut acc = 0u64;
         for _ in 0..reps {
@@ -152,7 +162,7 @@ fn main() {
     // has_edge probe throughput over the same dirty chain
     let probes: Vec<(NodeId, NodeId)> = {
         let mut rng = Rng::new(7);
-        (0..200_000)
+        (0..probes_n)
             .map(|_| (rng.below_usize(n) as NodeId, rng.below_usize(n) as NodeId))
             .collect()
     };
@@ -185,7 +195,7 @@ fn main() {
     gm.merge();
     let (_, t_merged) = time_it(|| {
         let mut acc = 0u64;
-        for _ in 0..8 {
+        for _ in 0..reps {
             for v in 0..n as u32 {
                 for (nbr, _) in gm.out_neighbors(v) {
                     acc = acc.wrapping_add(nbr as u64);
@@ -196,7 +206,7 @@ fn main() {
     });
     println!(
         "  …after merge      : {:>10.1} Medges/s",
-        8.0 * gm.num_edges() as f64 / t_merged / 1e6
+        reps as f64 * gm.num_edges() as f64 / t_merged / 1e6
     );
 
     // parallel vs serial merge compaction (clones happen outside the
@@ -212,13 +222,15 @@ fn main() {
     );
 
     // atomic CAS-min throughput (the Min construct)
+    let min_iters: u64 = if smoke { 400_000 } else { 4_000_000 };
     let cells: Vec<AtomicI64> = (0..1024).map(|_| AtomicI64::new(i64::MAX / 4)).collect();
     let (_, t_min) = time_it(|| {
-        for i in 0..4_000_000u64 {
-            atomic_min(&cells[(i % 1024) as usize], (4_000_000 - i) as i64);
+        for i in 0..min_iters {
+            atomic_min(&cells[(i % 1024) as usize], (min_iters - i) as i64);
         }
     });
-    println!("atomic_min          : {:>10.1} Mops/s", 4.0 / t_min);
+    let min_mops = min_iters as f64 / t_min / 1e6;
+    println!("atomic_min          : {min_mops:>10.1} Mops/s");
 
     // thread pool dispatch overhead
     for threads in [1usize, 2, 4] {
@@ -264,19 +276,117 @@ fn main() {
         Err(e) => println!("PJRT: skipped ({e})"),
     }
 
+    // --------------------------------------- push/pull crossover sweep
+    // frontier density (hub vs fringe source) × graph skew (power-law vs
+    // uniform): a full SSSP fixed point with the direction forced to
+    // push-only / pull-only / adaptive. The adaptive engine's round
+    // telemetry shows when (and whether) the switch fired. All three
+    // modes must produce identical distances — asserted here so the bench
+    // doubles as a cheap regression check.
+    println!("\ndirection crossover (sssp fixed point, {} threads):", bench_threads());
+    let sweep_graphs: Vec<(&str, DynGraph)> = vec![
+        ("rmat_powerlaw", generators::rmat(scale, edges, 0.57, 0.19, 0.19, 21)),
+        ("uniform", generators::uniform_random(1usize << scale, edges, 9, 22)),
+    ];
+    let mut crossover_entries: Vec<String> = Vec::new();
+    for (gname, gg) in &sweep_graphs {
+        let nn = gg.num_nodes() as NodeId;
+        let hub = (0..nn).max_by_key(|&v| gg.out_degree(v)).expect("nonempty graph");
+        let fringe = (0..nn)
+            .filter(|&v| gg.out_degree(v) > 0)
+            .min_by_key(|&v| gg.out_degree(v))
+            .expect("some live vertex");
+        for (sname, src) in [("hub", hub), ("fringe", fringe)] {
+            let mut secs = Vec::new();
+            let mut pull_rounds = 0u64;
+            let mut push_rounds = 0u64;
+            let mut peak = 0.0f64;
+            let mut dist0: Option<Vec<i64>> = None;
+            for dir in [Direction::Push, Direction::Pull, Direction::default()] {
+                let e = CpuEngine::new(bench_threads(), Sched::default()).with_direction(dir);
+                e.sssp_static(gg, src); // warm the scratch buffers
+                let (st, t) = time_it(|| e.sssp_static(gg, src));
+                if let Some(d) = dist0.as_deref() {
+                    assert_eq!(d, st.dist.as_slice(), "{gname}/{sname} {dir:?} diverged");
+                } else {
+                    dist0 = Some(st.dist);
+                }
+                if matches!(dir, Direction::Adaptive { .. }) {
+                    let ds = e.direction_stats();
+                    // two runs (warm + timed) — halve to per-run rounds
+                    pull_rounds = ds.pull_rounds / 2;
+                    push_rounds = ds.push_rounds / 2;
+                    peak = ds.peak_mass_frac;
+                }
+                secs.push(t);
+            }
+            let (push_s, pull_s, adaptive_s) = (secs[0], secs[1], secs[2]);
+            println!(
+                "  {gname:>14}/{sname:<6}: push {push_s:>9.5}s  pull {pull_s:>9.5}s  \
+                 adaptive {adaptive_s:>9.5}s  ({push_rounds}p/{pull_rounds}l rounds, \
+                 peak mass {peak:.3})"
+            );
+            crossover_entries.push(format!(
+                "    \"{gname}/{sname}\": {{\"push_secs\": {push_s:.6}, \
+                 \"pull_secs\": {pull_s:.6}, \"adaptive_secs\": {adaptive_s:.6}, \
+                 \"adaptive_push_rounds\": {push_rounds}, \
+                 \"adaptive_pull_rounds\": {pull_rounds}, \
+                 \"adaptive_peak_mass_frac\": {peak:.4}, \
+                 \"adaptive_speedup_vs_push\": {:.3}}}",
+                push_s / adaptive_s.max(1e-12)
+            ));
+        }
+    }
+
+    // ------------------------------- partitioned vs dynamic scheduling
+    // The same fixed points under chunk-stealing dynamic scheduling vs
+    // contiguous static shards vs the partition-affine schedule (worker t
+    // owns the same PartitionMap shard every round, incl. through merge
+    // compaction). static is included deliberately: for a plain index
+    // loop partitioned computes the same ranges, so any partitioned-vs-
+    // static delta is noise and the honest comparison is against dynamic.
+    println!("\nschedule comparison ({} threads):", bench_threads());
+    let mut sched_entries: Vec<String> = Vec::new();
+    for (sname, sched) in [
+        ("dynamic", Sched::default()),
+        ("static", Sched::Static),
+        ("partitioned", Sched::Partitioned),
+    ] {
+        let e = CpuEngine::new(bench_threads(), sched);
+        let mut st = pr_params(n);
+        e.pr_static(&g, &mut st); // warm
+        let (_, t_pr) = time_it(|| e.pr_static(&g, &mut st));
+        let hub = (0..n as NodeId).max_by_key(|&v| g.out_degree(v)).unwrap();
+        e.sssp_static(&g, hub); // warm
+        let (_, t_sssp) = time_it(|| e.sssp_static(&g, hub));
+        println!("  {sname:>12}: pr {t_pr:>9.5}s  sssp {t_sssp:>9.5}s");
+        sched_entries.push(format!(
+            "    \"{sname}\": {{\"pr_secs\": {t_pr:.6}, \"sssp_secs\": {t_sssp:.6}}}"
+        ));
+    }
+
     // machine-readable perf trajectory (tracked from this PR onward)
     let json = format!(
         "{{\n  \"graph\": {{\"nodes\": {n}, \"edges\": {md}, \"diff_chain_len\": {chain}}},\n  \
          \"neighbor_iter_medges_per_s\": {{\"flat\": {iter_flat:.3}, \"legacy_hashmap\": {iter_legacy:.3}, \"speedup\": {:.3}}},\n  \
          \"has_edge_mops_per_s\": {{\"flat\": {probe_flat:.3}, \"legacy_scan\": {probe_legacy:.3}, \"speedup\": {:.3}}},\n  \
          \"merge_secs\": {{\"serial\": {t_merge_serial:.6}, \"pooled\": {t_merge_par:.6}}},\n  \
-         \"atomic_min_mops_per_s\": {:.3},\n  \
-         \"update_apply_kupd_per_s\": {:.3}\n}}\n",
+         \"atomic_min_mops_per_s\": {min_mops:.3},\n  \
+         \"update_apply_kupd_per_s\": {:.3},\n  \
+         \"direction_crossover\": {{\n{}\n  }},\n  \
+         \"sched_comparison\": {{\n{}\n  }}\n}}\n",
         t_legacy / t_flat,
         t_probe_legacy / t_probe_flat,
-        4.0 / t_min,
         stream.len() as f64 / t_upd / 1e3,
+        crossover_entries.join(",\n"),
+        sched_entries.join(",\n"),
     );
     std::fs::write("BENCH_microbench.json", &json).expect("write BENCH_microbench.json");
     println!("\nwrote BENCH_microbench.json");
+}
+
+/// Worker count for the engine-level comparisons: enough to exercise the
+/// scheduling structure even on small CI machines.
+fn bench_threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).clamp(2, 8)
 }

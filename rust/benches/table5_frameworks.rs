@@ -95,6 +95,7 @@ fn table6(suite: &[NamedGraph]) {
     for (name, sched) in [
         ("dynamic(512)", Sched::Dynamic { chunk: 512 }),
         ("static", Sched::Static),
+        ("partitioned", Sched::Partitioned),
     ] {
         let row: Vec<f64> = suite
             .iter()

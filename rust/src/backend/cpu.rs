@@ -21,6 +21,24 @@
 //! per iteration (asserted by `relax_scratch_reuse_no_realloc`). Dynamic
 //! batches also hand the engine pool to the graph so diff-CSR merge
 //! compaction is parallelized.
+//!
+//! §Perf iteration 5 (this revision): **direction-optimizing traversal +
+//! partition-affine scheduling.** The paper's generated code is a dense
+//! push configuration (§6.2); Ligra/Beamer-style direction switching is
+//! the classic CPU win once the frontier covers a large fraction of the
+//! edges. [`Direction`] selects per round between the existing sparse
+//! push and a dense pull sweep over the transpose (`in_neighbors`, i.e.
+//! `bwd_base()` + `bwd_diffs()`): a round pulls when the frontier's
+//! out-edge mass reaches `alpha`·|E| and reverts to push below
+//! `beta`·|E| (hysteresis). Pull rounds are owner-writes — only vertex
+//! `v`'s worker stores `dist[v]` — so they need no CAS, reuse the
+//! `cur_flags` bitmap for O(1) frontier membership, and stay
+//! allocation-free on the same [`EngineScratch`] buffers. The
+//! decremental SSSP pull phase and the dynamic-PR restricted sweeps gain
+//! the matching dense form (scan all vertices, skip unflagged) when the
+//! affected set is wide. [`Sched::Partitioned`] makes every dense sweep
+//! and the diff-CSR merge partition-affine: worker `t` owns the same
+//! contiguous CSR shard each round (see `util::threadpool`).
 
 use crate::algorithms::{pagerank, sssp, PrState, SsspState, TcState, INF};
 use crate::graph::updates::Batch;
@@ -30,11 +48,114 @@ use crate::util::threadpool::{Sched, ThreadPool};
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
 use std::sync::Mutex;
 
+/// Per-round traversal direction policy for the frontier fixed points
+/// (Beamer's direction-optimizing BFS, Ligra's sparse/dense switch).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Direction {
+    /// Always sparse push — the frontier-compacted form of the paper's
+    /// generated dense-push configuration.
+    Push,
+    /// Always dense pull over the transpose (`in_neighbors`).
+    Pull,
+    /// Density switch with hysteresis: pull once the frontier's out-edge
+    /// mass reaches `alpha`·|E|, revert to push below `beta`·|E|.
+    Adaptive { alpha: f64, beta: f64 },
+}
+
+impl Default for Direction {
+    fn default() -> Self {
+        // Beamer's |E|/14-ish crossover, with a lower return threshold so
+        // the shrinking tail of a fixed point goes back to sparse push.
+        Direction::Adaptive { alpha: 0.07, beta: 0.02 }
+    }
+}
+
+impl Direction {
+    /// Should a flag-restricted sweep run densely — scan every vertex and
+    /// skip the unflagged — instead of gathering through the compacted
+    /// index list? Shared by the decremental-SSSP pull phase and the
+    /// dynamic-PR restricted sweeps so their crossover policy stays one
+    /// definition.
+    fn dense_sweep(&self, active: usize, n: usize) -> bool {
+        match *self {
+            Direction::Pull => true,
+            Direction::Push => false,
+            Direction::Adaptive { .. } => active * 4 >= n,
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match *self {
+            Direction::Push => "push".to_string(),
+            Direction::Pull => "pull".to_string(),
+            Direction::Adaptive { alpha, beta } => format!("adaptive:{alpha},{beta}"),
+        }
+    }
+}
+
+impl std::str::FromStr for Direction {
+    type Err = String;
+
+    /// `push` | `pull` | `adaptive[:<alpha>[,<beta>]]`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "push" => Ok(Direction::Push),
+            "pull" => Ok(Direction::Pull),
+            "adaptive" => {
+                let Direction::Adaptive { alpha: da, beta: db } = Direction::default() else {
+                    unreachable!()
+                };
+                let (alpha, beta) = match arg {
+                    None => (da, db),
+                    Some(a) => match a.split_once(',') {
+                        None => {
+                            (a.parse::<f64>().map_err(|e| format!("bad alpha: {e}"))?, db)
+                        }
+                        Some((x, y)) => (
+                            x.parse::<f64>().map_err(|e| format!("bad alpha: {e}"))?,
+                            y.parse::<f64>().map_err(|e| format!("bad beta: {e}"))?,
+                        ),
+                    },
+                };
+                if !(0.0..=1.0).contains(&alpha) || !(0.0..=1.0).contains(&beta) {
+                    return Err(format!("direction thresholds out of [0,1]: {alpha},{beta}"));
+                }
+                if beta > alpha {
+                    // hysteresis requires β ≤ α; β > α would flip-flop
+                    // between push and pull on every round
+                    return Err(format!(
+                        "adaptive direction needs beta <= alpha, got alpha={alpha} beta={beta}"
+                    ));
+                }
+                Ok(Direction::Adaptive { alpha, beta })
+            }
+            other => Err(format!("unknown direction {other:?} (push|pull|adaptive[:<a>[,<b>]])")),
+        }
+    }
+}
+
+/// Cumulative per-engine direction telemetry (rounds executed in each
+/// mode since engine creation, and the densest frontier seen as a
+/// fraction of |E|). Benches and tests read this to confirm the switch
+/// actually fires.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DirectionStats {
+    pub push_rounds: u64,
+    pub pull_rounds: u64,
+    pub peak_mass_frac: f64,
+}
+
 /// OpenMP-analogue engine with persistent, reusable work buffers.
 #[derive(Debug)]
 pub struct CpuEngine {
     pub pool: ThreadPool,
     pub sched: Sched,
+    /// Traversal direction policy for the frontier fixed points.
+    pub direction: Direction,
     scratch: Mutex<EngineScratch>,
 }
 
@@ -47,7 +168,7 @@ impl Default for CpuEngine {
 impl Clone for CpuEngine {
     fn clone(&self) -> Self {
         // scratch is a cache — a clone starts with a fresh (empty) one
-        CpuEngine::new_pool(self.pool.clone(), self.sched)
+        CpuEngine::new_pool(self.pool.clone(), self.sched).with_direction(self.direction)
     }
 }
 
@@ -83,6 +204,8 @@ struct EngineScratch {
     diff_locals: Vec<f64>,
     /// Count of buffer (re)allocations — the scratch-reuse assertion.
     alloc_events: u64,
+    /// Cumulative push/pull round counters (see [`DirectionStats`]).
+    dir_stats: DirectionStats,
 }
 
 fn fit<T>(v: &mut Vec<T>, n: usize, mk: impl FnMut() -> T, events: &mut u64) {
@@ -152,7 +275,19 @@ impl CpuEngine {
     }
 
     fn new_pool(pool: ThreadPool, sched: Sched) -> Self {
-        CpuEngine { pool, sched, scratch: Mutex::new(EngineScratch::default()) }
+        CpuEngine {
+            pool,
+            sched,
+            direction: Direction::default(),
+            scratch: Mutex::new(EngineScratch::default()),
+        }
+    }
+
+    /// Builder-style direction override (the default is
+    /// [`Direction::Adaptive`] with Beamer-ish thresholds).
+    pub fn with_direction(mut self, direction: Direction) -> Self {
+        self.direction = direction;
+        self
     }
 
     /// Total scratch-buffer (re)allocations so far. Steady-state repeat
@@ -160,6 +295,11 @@ impl CpuEngine {
     /// `relax_scratch_reuse_no_realloc`.
     pub fn scratch_alloc_events(&self) -> u64 {
         self.scratch.lock().unwrap().alloc_events
+    }
+
+    /// Cumulative push/pull round counters since engine creation.
+    pub fn direction_stats(&self) -> DirectionStats {
+        self.scratch.lock().unwrap().dir_stats
     }
 
     /// Deterministic parent repair: `parent[v] = argmin_u (dist[u] + w(u,v))`
@@ -190,7 +330,7 @@ impl CpuEngine {
         st.parent[st.source as usize] = -1;
     }
 
-    /// Parallel push-relaxation fixed point from the given seed frontier.
+    /// Parallel relaxation fixed point from the given seed frontier.
     /// Mirrors the generated `fixedPoint until (finished: !modified)` loop
     /// with `modified`/`modified_nxt` double buffering.
     ///
@@ -200,6 +340,14 @@ impl CpuEngine {
     /// flags, the double-buffered frontier, and the per-worker local
     /// buffers (merged by prefix-sum concatenation, replacing the old
     /// global `Mutex`) — so rounds allocate nothing once warm.
+    /// §Perf iteration 5: each round picks **push or pull** per
+    /// [`Direction`]. Push rounds are the CAS-min relaxation over the
+    /// frontier's out-edges. Pull rounds sweep all vertices over their
+    /// in-edges (owner-writes, no CAS): the frontier is marked in the
+    /// `cur_flags` bitmap, every worker scans its shard of vertices —
+    /// contiguous under [`Sched::Partitioned`] — and a vertex that lowers
+    /// itself joins its worker's local frontier buffer, so pull rounds
+    /// produce the same compacted, dedup'd next frontier push rounds do.
     fn relax_fixed_point(
         &self,
         g: &DynGraph,
@@ -210,24 +358,85 @@ impl CpuEngine {
         let n = g.num_nodes();
         sc.ensure(n, self.pool.threads());
         let cap_before = sc.frontier_capacity();
+        let total_edges = g.num_edges().max(1) as f64;
         let EngineScratch {
-            dist: adist, nxt_flags, frontier, next_frontier, locals, alloc_events, ..
+            dist: adist,
+            cur_flags,
+            nxt_flags,
+            frontier,
+            next_frontier,
+            locals,
+            alloc_events,
+            dir_stats,
+            ..
         } = sc;
         frontier.clear();
         for v in 0..n {
             adist[v].store(dist[v], Ordering::Relaxed);
+            // cur_flags doubles as the pull-round frontier bitmap; clear
+            // both flag arrays here (other fixed points share them).
+            cur_flags[v].store(false, Ordering::Relaxed);
             nxt_flags[v].store(false, Ordering::Relaxed);
             if seed[v] {
                 frontier.push(v as NodeId);
             }
         }
         let adist = &adist[..];
+        let cur_flags = &cur_flags[..];
         let nxt_flags = &nxt_flags[..];
+        // Frontier out-edge mass drives the direction switch; maintained
+        // with one O(|frontier|) degree pass per round.
+        let mut mass: u64 = frontier.iter().map(|&v| g.out_degree(v) as u64).sum();
+        let mut pulling = matches!(self.direction, Direction::Pull);
         while !frontier.is_empty() {
+            let mass_frac = mass as f64 / total_edges;
+            if mass_frac > dir_stats.peak_mass_frac {
+                dir_stats.peak_mass_frac = mass_frac;
+            }
+            match self.direction {
+                Direction::Push => pulling = false,
+                Direction::Pull => pulling = true,
+                Direction::Adaptive { alpha, beta } => {
+                    // hysteresis: α to enter pull, β (< α) to leave it
+                    if !pulling && mass_frac >= alpha {
+                        pulling = true;
+                    } else if pulling && mass_frac < beta {
+                        pulling = false;
+                    }
+                }
+            }
             for l in locals.iter_mut() {
                 l.clear();
             }
-            {
+            if pulling {
+                dir_stats.pull_rounds += 1;
+                for &v in frontier.iter() {
+                    cur_flags[v as usize].store(true, Ordering::Relaxed);
+                }
+                self.pool.parallel_for_with(n, self.sched, locals, |local, v| {
+                    let old = adist[v].load(Ordering::Relaxed);
+                    let mut best = old;
+                    for (u, w) in g.in_neighbors(v as NodeId) {
+                        if cur_flags[u as usize].load(Ordering::Relaxed) {
+                            let du = adist[u as usize].load(Ordering::Relaxed);
+                            if du < INF && du + (w as i64) < best {
+                                best = du + w as i64;
+                            }
+                        }
+                    }
+                    if best < old {
+                        // owner-writes: only v's worker stores dist[v], so a
+                        // plain store suffices; each v is visited once, so
+                        // the local push needs no dedup flag either.
+                        adist[v].store(best, Ordering::Relaxed);
+                        local.push(v as NodeId);
+                    }
+                });
+                for &v in frontier.iter() {
+                    cur_flags[v as usize].store(false, Ordering::Relaxed);
+                }
+            } else {
+                dir_stats.push_rounds += 1;
                 let fr: &[NodeId] = frontier;
                 self.pool.parallel_for_with(fr.len(), self.sched, locals, |local, i| {
                     let v = fr[i];
@@ -246,17 +455,21 @@ impl CpuEngine {
             }
             // Merge the per-worker buffers at their prefix-sum offsets —
             // contiguous copies, no global Mutex, no fresh allocation
-            // (capacity is bounded by n thanks to the dedup flags).
+            // (capacity is bounded by n thanks to the dedup flags / the
+            // visit-once contract of the pull sweep).
             next_frontier.clear();
             let total: usize = locals.iter().map(|l| l.len()).sum();
             next_frontier.reserve(total);
             for l in locals.iter() {
                 next_frontier.extend_from_slice(l);
             }
-            // Reset only the flags touched this round: O(frontier), not O(n).
-            for &v in next_frontier.iter() {
-                nxt_flags[v as usize].store(false, Ordering::Relaxed);
+            if !pulling {
+                // Reset only the flags touched this round: O(frontier).
+                for &v in next_frontier.iter() {
+                    nxt_flags[v as usize].store(false, Ordering::Relaxed);
+                }
             }
+            mass = next_frontier.iter().map(|&v| g.out_degree(v) as u64).sum();
             std::mem::swap(frontier, next_frontier);
         }
         for (v, d) in dist.iter_mut().enumerate().take(n) {
@@ -368,8 +581,10 @@ impl CpuEngine {
         dels: &[(NodeId, NodeId)],
         adds: &[(NodeId, NodeId, Weight)],
     ) {
-        // Diff-CSR merge compaction runs on the engine pool.
+        // Diff-CSR merge compaction runs on the engine pool, under the
+        // engine schedule (partition-affine when Sched::Partitioned).
         g.set_merge_pool(self.pool.clone());
+        g.set_merge_sched(self.sched);
         let n = g.num_nodes();
         let mut guard = self.scratch.lock().unwrap();
         let sc = &mut *guard;
@@ -414,16 +629,19 @@ impl CpuEngine {
         }
 
         // Decremental phase 2: pull recomputation restricted to the
-        // affected list (owner-writes, race-free). Jacobi reads come from
+        // affected set (owner-writes, race-free). Jacobi reads come from
         // st.dist, writes go to the scratch buffer — no per-round clones.
+        // §Perf iteration 5: when the invalidation is *wide*, gathering
+        // through the affected index list loses to a dense flag-checked
+        // sweep over the whole vertex range (contiguous shards under
+        // Sched::Partitioned); the direction policy picks the form.
+        let dense_pull = self.direction.dense_sweep(affected.len(), n);
         while !affected.is_empty() {
             let changed = AtomicBool::new(false);
             {
                 let cur: &[i64] = &st.dist;
                 let next = SyncSlice::new(&mut sc.next_dist[..n]);
-                let aff = &affected;
-                self.pool.parallel_for(aff.len(), self.sched, |i| {
-                    let v = aff[i] as usize;
+                let relax = |v: usize| {
                     let mut best = cur[v];
                     for (u, w) in g.in_neighbors(v as NodeId) {
                         let du = cur[u as usize];
@@ -436,7 +654,20 @@ impl CpuEngine {
                     if best < cur[v] {
                         changed.store(true, Ordering::Relaxed);
                     }
-                });
+                };
+                if dense_pull {
+                    let flags: &[bool] = &modified;
+                    self.pool.parallel_for(n, self.sched, |v| {
+                        if flags[v] {
+                            relax(v);
+                        }
+                    });
+                } else {
+                    let aff = &affected;
+                    self.pool.parallel_for(aff.len(), self.sched, |i| {
+                        relax(aff[i] as usize);
+                    });
+                }
             }
             if !changed.load(Ordering::Relaxed) {
                 break;
@@ -526,6 +757,7 @@ impl CpuEngine {
         // The flag closure and restricted sweeps are bounded by the flagged
         // subgraph; reuse the reference pipeline but with parallel sweeps.
         g.set_merge_pool(self.pool.clone());
+        g.set_merge_sched(self.sched);
         let n = g.num_nodes();
         let mut stats = pagerank::PrBatchStats::default();
 
@@ -556,6 +788,12 @@ impl CpuEngine {
         if active.is_empty() {
             return 0;
         }
+        // §Perf iteration 5: wide flag closures sweep the whole vertex
+        // range densely (flag check per vertex, contiguous shards under
+        // Sched::Partitioned) instead of gathering through the index list.
+        // Both forms run the identical per-vertex pull; only the worker
+        // partition of the convergence-delta accumulation differs.
+        let dense = self.direction.dense_sweep(active.len(), n);
         let workers = self.pool.threads();
         let mut guard = self.scratch.lock().unwrap();
         let sc = &mut *guard;
@@ -570,9 +808,7 @@ impl CpuEngine {
                 let rank: &[f64] = &st.rank;
                 let delta = st.delta;
                 let next = SyncSlice::new(&mut next_rank[..]);
-                let act = &active;
-                self.pool.parallel_for_with(act.len(), self.sched, diff_locals, |dacc, i| {
-                    let v = act[i];
+                let sweep = |dacc: &mut f64, v: NodeId| {
                     let mut sum = 0.0;
                     for (nbr, _) in g.in_neighbors(v) {
                         let d = g.out_degree(nbr);
@@ -584,7 +820,22 @@ impl CpuEngine {
                     *dacc += (val - rank[v as usize]).abs();
                     // SAFETY: active vertices are unique → disjoint writes.
                     unsafe { next.set(v as usize, val) };
-                });
+                };
+                if dense {
+                    self.pool.parallel_for_with(n, self.sched, diff_locals, |dacc, v| {
+                        if flags[v] {
+                            sweep(dacc, v as NodeId);
+                        }
+                    });
+                } else {
+                    let act = &active;
+                    self.pool.parallel_for_with(
+                        act.len(),
+                        self.sched,
+                        diff_locals,
+                        |dacc, i| sweep(dacc, act[i]),
+                    );
+                }
             }
             let diff: f64 = diff_locals.iter().sum();
             for &v in &active {
@@ -640,6 +891,7 @@ impl CpuEngine {
         adds: &[(NodeId, NodeId, Weight)],
     ) {
         g.set_merge_pool(self.pool.clone());
+        g.set_merge_sched(self.sched);
         st.triangles -= self.delta_count(g, dels, dels);
         g.apply_deletions(dels);
         g.apply_additions(adds);
@@ -704,6 +956,9 @@ mod tests {
             CpuEngine::new(1, Sched::Static),
             CpuEngine::new(4, Sched::Dynamic { chunk: 16 }),
             CpuEngine::new(4, Sched::Static),
+            CpuEngine::new(4, Sched::Partitioned),
+            CpuEngine::new(4, Sched::Partitioned).with_direction(Direction::Pull),
+            CpuEngine::new(2, Sched::Dynamic { chunk: 16 }).with_direction(Direction::Push),
         ]
     }
 
@@ -775,6 +1030,117 @@ mod tests {
                 "steady-state runs reallocated scratch ({threads} threads)"
             );
         }
+    }
+
+    #[test]
+    fn direction_parses() {
+        assert_eq!("push".parse::<Direction>().unwrap(), Direction::Push);
+        assert_eq!("pull".parse::<Direction>().unwrap(), Direction::Pull);
+        assert_eq!("adaptive".parse::<Direction>().unwrap(), Direction::default());
+        match "adaptive:0.25,0.1".parse::<Direction>().unwrap() {
+            Direction::Adaptive { alpha, beta } => {
+                assert!((alpha - 0.25).abs() < 1e-12 && (beta - 0.1).abs() < 1e-12)
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!("sideways".parse::<Direction>().is_err());
+        assert!("adaptive:2.0".parse::<Direction>().is_err());
+        assert!(
+            "adaptive:0.02,0.5".parse::<Direction>().is_err(),
+            "beta > alpha must be rejected (would flip-flop)"
+        );
+        assert_eq!(Direction::Pull.describe(), "pull");
+    }
+
+    /// The adaptive switch must actually fire on a dense-frontier run: a
+    /// skewed power-law graph relaxed from its highest-out-degree source
+    /// floods most of |E| within a few rounds.
+    #[test]
+    fn adaptive_pulls_on_dense_frontiers_and_matches_oracle() {
+        let g = generators::rmat(9, 6000, 0.57, 0.19, 0.19, 77);
+        let src = (0..g.num_nodes() as NodeId)
+            .max_by_key(|&v| g.out_degree(v))
+            .unwrap();
+        let e = CpuEngine::new(4, Sched::Partitioned)
+            .with_direction(Direction::Adaptive { alpha: 0.02, beta: 0.005 });
+        let st = e.sssp_static(&g, src);
+        assert_eq!(st.dist, sssp::dijkstra_oracle(&g, src));
+        let ds = e.direction_stats();
+        assert!(ds.pull_rounds > 0, "dense rounds must have pulled: {ds:?}");
+        assert!(ds.peak_mass_frac >= 0.02, "frontier never got dense: {ds:?}");
+        // and a push-only engine pushes every round
+        let ep = CpuEngine::new(4, Sched::Partitioned).with_direction(Direction::Push);
+        ep.sssp_static(&g, src);
+        assert_eq!(ep.direction_stats().pull_rounds, 0);
+    }
+
+    /// Direction satellite: for random dynamic batches, SSSP distances are
+    /// bitwise identical with the switch forced to push-only, pull-only,
+    /// and adaptive, and all agree with the Dijkstra oracle and the
+    /// Ligra-baseline direction optimizer.
+    #[test]
+    fn prop_direction_modes_bitwise_identical_dynamic_sssp() {
+        forall_checks(0xD1E0, 8, |gen| {
+            let n = gen.usize_in(20, 80);
+            let seed = gen.rng().next_u64();
+            let g0 = generators::uniform_random(n, n * 4, 9, seed);
+            let stream = UpdateStream::generate_percent(&g0, 12.0, 8, 9, seed ^ 3);
+            let src = gen.usize_in(0, n - 1) as NodeId;
+            let modes = [
+                Direction::Push,
+                Direction::Pull,
+                Direction::Adaptive { alpha: 0.05, beta: 0.01 },
+            ];
+            let mut dists: Vec<Vec<i64>> = Vec::new();
+            for dir in modes {
+                let e = CpuEngine::new(4, Sched::Dynamic { chunk: 4 }).with_direction(dir);
+                let mut g = g0.clone();
+                let mut st = e.sssp_static(&g, src);
+                for b in stream.batches() {
+                    e.sssp_dynamic_batch(&mut g, &mut st, &b);
+                }
+                dists.push(st.dist);
+            }
+            assert_eq!(dists[0], dists[1], "push vs pull diverged");
+            assert_eq!(dists[0], dists[2], "push vs adaptive diverged");
+            let mut g2 = g0.clone();
+            stream.apply_all_static(&mut g2);
+            assert_eq!(dists[0], sssp::dijkstra_oracle(&g2, src), "oracle");
+            assert_eq!(
+                dists[0],
+                crate::algorithms::baselines::ligra::sssp_direction_opt(&g2, src, 0.1),
+                "ligra baseline parity"
+            );
+        });
+    }
+
+    /// Dynamic PR must stay oracle-equal (same fixed point within the
+    /// convergence tolerance) whichever direction policy drives the
+    /// restricted sweeps.
+    #[test]
+    fn prop_direction_modes_oracle_equal_dynamic_pr() {
+        forall_checks(0xD1E1, 6, |gen| {
+            let n = gen.usize_in(20, 60);
+            let seed = gen.rng().next_u64();
+            let g0 = generators::uniform_random(n, n * 4, 9, seed);
+            let stream = UpdateStream::generate_percent(&g0, 10.0, 8, 9, seed ^ 7);
+            let mut ranks: Vec<Vec<f64>> = Vec::new();
+            for dir in [Direction::Push, Direction::Pull, Direction::default()] {
+                let e = CpuEngine::new(4, Sched::Partitioned).with_direction(dir);
+                let mut g = g0.clone();
+                let mut st = PrState::new(n, 1e-10, 0.85, 300);
+                e.pr_static(&g, &mut st);
+                for b in stream.batches() {
+                    e.pr_dynamic_batch(&mut g, &mut st, &b);
+                }
+                ranks.push(st.rank);
+            }
+            for (i, r) in ranks.iter().enumerate().skip(1) {
+                let l1: f64 =
+                    r.iter().zip(&ranks[0]).map(|(a, b)| (a - b).abs()).sum();
+                assert!(l1 < 1e-7, "mode {i} diverged from push-only: l1={l1}");
+            }
+        });
     }
 
     #[test]

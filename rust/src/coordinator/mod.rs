@@ -11,12 +11,13 @@
 //! the dynamic time (the paper measures update processing).
 
 use crate::algorithms::{pagerank, sssp, triangle, PrState, TcState};
-use crate::backend::cpu::CpuEngine;
+use crate::backend::cpu::{CpuEngine, Direction};
 use crate::backend::dist::DistEngine;
 use crate::backend::xla::XlaEngine;
 use crate::backend::BackendKind;
 use crate::graph::{DynGraph, NodeId, Update, UpdateKind, UpdateStream};
 use crate::stream::{GraphService, ServiceConfig, ServiceStats};
+use crate::util::threadpool::Sched;
 use crate::util::timer::time_it;
 use crate::util::error::Result;
 
@@ -70,6 +71,26 @@ pub fn pr_params(n: usize) -> PrState {
     PrState::new(n, 1e-3, 0.85, 100)
 }
 
+/// CPU-engine tuning knobs threaded from the CLI into the cells: thread
+/// count (None ⇒ host width), loop schedule (incl. `partitioned`), and
+/// the push/pull direction policy.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EngineOpts {
+    pub threads: Option<usize>,
+    pub sched: Sched,
+    pub direction: Direction,
+}
+
+impl EngineOpts {
+    /// Build the configured engine.
+    pub fn engine(&self) -> CpuEngine {
+        let threads = self.threads.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        });
+        CpuEngine::new(threads, self.sched).with_direction(self.direction)
+    }
+}
+
 /// Run one (algo, backend) experiment cell. `percent` follows the §6
 /// protocol (half deletions, half insertions). TC uses symmetric updates.
 pub fn run_cell(
@@ -80,10 +101,24 @@ pub fn run_cell(
     batch_size: usize,
     seed: u64,
 ) -> Result<Cell> {
+    run_cell_with(algo, backend, g0, percent, batch_size, seed, EngineOpts::default())
+}
+
+/// [`run_cell`] with explicit cpu-engine knobs (the `run` subcommand's
+/// `--sched`/`--direction` flags land here; non-cpu backends ignore them).
+pub fn run_cell_with(
+    algo: Algo,
+    backend: BackendKind,
+    g0: &DynGraph,
+    percent: f64,
+    batch_size: usize,
+    seed: u64,
+    opts: EngineOpts,
+) -> Result<Cell> {
     match algo {
-        Algo::Sssp => sssp_cell(backend, g0, percent, batch_size, seed),
-        Algo::Pr => pr_cell(backend, g0, percent, batch_size, seed),
-        Algo::Tc => tc_cell(backend, g0, percent, batch_size, seed),
+        Algo::Sssp => sssp_cell(backend, g0, percent, batch_size, seed, opts),
+        Algo::Pr => pr_cell(backend, g0, percent, batch_size, seed, opts),
+        Algo::Tc => tc_cell(backend, g0, percent, batch_size, seed, opts),
     }
 }
 
@@ -93,6 +128,7 @@ fn sssp_cell(
     percent: f64,
     batch_size: usize,
     seed: u64,
+    opts: EngineOpts,
 ) -> Result<Cell> {
     let stream = UpdateStream::generate_percent(g0, percent, batch_size, 9, seed);
     let src: NodeId = 0;
@@ -109,7 +145,7 @@ fn sssp_cell(
             let run_static: Box<dyn Fn(&DynGraph) -> Vec<i64>> = match backend {
                 BackendKind::Serial => Box::new(move |g| sssp::static_sssp(g, src).dist),
                 _ => {
-                    let e = CpuEngine::default();
+                    let e = opts.engine();
                     Box::new(move |g| e.sssp_static_dense(g, src).dist)
                 }
             };
@@ -117,7 +153,7 @@ fn sssp_cell(
             cell.static_secs = t_static;
 
             let mut gd = g0.clone();
-            let e = CpuEngine::default();
+            let e = opts.engine();
             let mut st = if backend == BackendKind::Serial {
                 sssp::static_sssp(&gd, src)
             } else {
@@ -177,6 +213,7 @@ fn pr_cell(
     percent: f64,
     batch_size: usize,
     seed: u64,
+    opts: EngineOpts,
 ) -> Result<Cell> {
     let stream = UpdateStream::generate_percent(g0, percent, batch_size, 9, seed);
     let n = g0.num_nodes();
@@ -202,7 +239,7 @@ fn pr_cell(
             cell.dynamic_secs = t;
         }
         BackendKind::Cpu => {
-            let e = CpuEngine::default();
+            let e = opts.engine();
             let (_, t) = time_it(|| {
                 let mut st = pr_params(n);
                 e.pr_static(&gs, &mut st)
@@ -268,6 +305,7 @@ fn tc_cell(
     percent: f64,
     batch_size: usize,
     seed: u64,
+    opts: EngineOpts,
 ) -> Result<Cell> {
     // TC protocol: symmetric graph + symmetric updates (§A Fig. 19).
     let gsym = triangle::symmetrize(g0);
@@ -294,7 +332,7 @@ fn tc_cell(
             cell.dynamic_secs = t;
         }
         BackendKind::Cpu => {
-            let e = CpuEngine::default();
+            let e = opts.engine();
             let (_, t) = time_it(|| e.tc_static(&gs));
             cell.static_secs = t;
             let mut gd = gsym.clone();
@@ -505,6 +543,18 @@ mod tests {
         let c = run_cell(Algo::Sssp, BackendKind::Dist, &g, 2.0, 32, 13).unwrap();
         assert!(c.static_comm_secs >= 0.0);
         assert!(c.dynamic_total() >= c.dynamic_secs);
+    }
+
+    #[test]
+    fn cpu_cell_runs_with_partitioned_pull_opts() {
+        let g = generators::uniform_random(200, 1000, 9, 15);
+        let opts = EngineOpts {
+            threads: Some(2),
+            sched: Sched::Partitioned,
+            direction: Direction::Pull,
+        };
+        let c = run_cell_with(Algo::Sssp, BackendKind::Cpu, &g, 3.0, 32, 16, opts).unwrap();
+        assert!(c.static_secs > 0.0 && c.dynamic_secs > 0.0);
     }
 
     #[test]

@@ -200,8 +200,10 @@ impl DiffCsr {
 
     /// Compact everything into a fresh tombstone-free CSR. With a pool the
     /// per-vertex count/gather/sort phases run work-shared across its
-    /// workers (prefix-sum offsets in between); serial otherwise.
-    fn merge_with(&mut self, pool: Option<&ThreadPool>) {
+    /// workers (prefix-sum offsets in between) under the caller's schedule
+    /// — [`Sched::Partitioned`] keeps each worker on the same contiguous
+    /// vertex shard the engine's dense sweeps assign it; serial otherwise.
+    fn merge_with(&mut self, pool: Option<&ThreadPool>, sched: Sched) {
         self.seal_batch();
         let n = self.base.num_nodes();
         match pool {
@@ -212,7 +214,7 @@ impl DiffCsr {
                     let cs = SyncSlice::new(&mut counts[1..]);
                     let base = &self.base;
                     let diffs = &self.diffs;
-                    pool.parallel_for(n, Sched::Dynamic { chunk: 2048 }, |v| {
+                    pool.parallel_for(n, sched, |v| {
                         let u = v as NodeId;
                         let mut c = base.live_degree(u);
                         for d in diffs {
@@ -243,7 +245,7 @@ impl DiffCsr {
                         (0..pool.threads()).map(|_| Vec::new()).collect();
                     pool.parallel_for_with(
                         n,
-                        Sched::Dynamic { chunk: 2048 },
+                        sched,
                         &mut gather,
                         |buf, v| {
                             let u = v as NodeId;
@@ -303,6 +305,11 @@ pub struct DynGraph {
     /// Pool used to parallelize `merge` compaction (engines attach theirs
     /// via [`set_merge_pool`](Self::set_merge_pool)); `None` ⇒ serial.
     merge_pool: Option<ThreadPool>,
+    /// Schedule for the merge's per-vertex phases. Engines running
+    /// partition-affine ([`Sched::Partitioned`]) hand theirs over via
+    /// [`set_merge_sched`](Self::set_merge_sched) so each worker compacts
+    /// the CSR shard it owns in the fixed-point sweeps.
+    merge_sched: Sched,
 }
 
 impl DynGraph {
@@ -327,6 +334,7 @@ impl DynGraph {
             epoch: 0,
             merge_period: 8,
             merge_pool: None,
+            merge_sched: Sched::Dynamic { chunk: 2048 },
         }
     }
 
@@ -338,6 +346,13 @@ impl DynGraph {
     /// Attach a thread pool for parallel merge compaction.
     pub fn set_merge_pool(&mut self, pool: ThreadPool) {
         self.merge_pool = Some(pool);
+    }
+
+    /// Set the schedule the parallel merge phases run under (engines pass
+    /// their own so [`Sched::Partitioned`] shard ownership carries over
+    /// from the fixed-point sweeps into compaction).
+    pub fn set_merge_sched(&mut self, sched: Sched) {
+        self.merge_sched = sched;
     }
 
     #[inline]
@@ -484,8 +499,8 @@ impl DynGraph {
     /// when a merge pool is attached).
     pub fn merge(&mut self) {
         let pool = self.merge_pool.clone();
-        self.fwd.merge_with(pool.as_ref());
-        self.bwd.merge_with(pool.as_ref());
+        self.fwd.merge_with(pool.as_ref(), self.merge_sched);
+        self.bwd.merge_with(pool.as_ref(), self.merge_sched);
         self.batches_since_merge = 0;
     }
 
@@ -601,6 +616,13 @@ mod tests {
         serial.merge();
         parallel.set_merge_pool(ThreadPool::new(4));
         parallel.merge();
+        // partition-affine merge must compact identically too
+        let mut affine = mk();
+        affine.set_merge_pool(ThreadPool::new(4));
+        affine.set_merge_sched(Sched::Partitioned);
+        affine.merge();
+        assert_eq!(serial.edges_sorted(), affine.edges_sorted());
+        assert_eq!(affine.fwd_base().count_live(), affine.fwd_base().num_slots());
         assert_eq!(serial.edges_sorted(), parallel.edges_sorted());
         assert_eq!(parallel.diff_chain_len(), 0);
         assert_eq!(

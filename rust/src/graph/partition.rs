@@ -55,6 +55,22 @@ impl PartitionMap {
         }
     }
 
+    /// The contiguous index range owned by `rank`. Only meaningful for
+    /// [`Partition::Block`] (hash shards are not contiguous); the
+    /// thread pool's partition-affine schedule
+    /// ([`Sched::Partitioned`](crate::util::threadpool::Sched)) uses this
+    /// as the allocation-free form of [`owned`](Self::owned).
+    #[inline]
+    pub fn owned_range(&self, rank: usize) -> std::ops::Range<usize> {
+        debug_assert!(
+            self.kind == Partition::Block,
+            "owned_range is only defined for block partitions"
+        );
+        let lo = (rank * self.per_block).min(self.n);
+        let hi = ((rank + 1) * self.per_block).min(self.n);
+        lo..hi
+    }
+
     /// Number of vertices owned by `rank`.
     pub fn owned_count(&self, rank: usize) -> usize {
         match self.kind {
@@ -105,6 +121,18 @@ mod tests {
             assert_eq!(p.owned(r).len(), p.owned_count(r));
         }
         assert!(seen.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn owned_range_matches_owned_for_block() {
+        for (n, ranks) in [(103usize, 4usize), (7, 7), (5, 8), (1, 1), (64, 2)] {
+            let p = PartitionMap::new(n, ranks, Partition::Block);
+            for r in 0..ranks {
+                let want: Vec<usize> = p.owned(r).iter().map(|&v| v as usize).collect();
+                let got: Vec<usize> = p.owned_range(r).collect();
+                assert_eq!(got, want, "n={n} ranks={ranks} rank={r}");
+            }
+        }
     }
 
     #[test]

@@ -5,11 +5,15 @@
 //!       parse + analyze a DSL program and emit backend C++.
 //!   run --algo sssp|pr|tc --backend serial|cpu|dist|xla
 //!       [--graph rmat|uniform|road] [--nodes N] [--percent P]
-//!       [--batch B] [--seed S]
+//!       [--batch B] [--seed S] [--threads T]
+//!       [--sched dynamic[:<chunk>]|static|partitioned]
+//!       [--direction push|pull|adaptive[:<a>[,<b>]]]
 //!       run one dynamic-vs-static experiment cell and print timings.
 //!   serve --algo sssp|pr|tc [--producers N] [--readers M]
 //!       [--batch B] [--deadline-ms D] [--shards S] [--threads T]
-//!       [--policy periodic:<k>|adaptive[:<f>]|never]
+//!       [--policy periodic:<k>|adaptive[:<f>[,<d>]]|never]
+//!       [--sched dynamic[:<chunk>]|static|partitioned]
+//!       [--direction push|pull|adaptive[:<a>[,<b>]]]
 //!       [--graph …] [--nodes N] [--percent P] [--seed S]
 //!       run the streaming GraphService under a synthetic multi-producer
 //!       load and print throughput + batch-latency statistics.
@@ -18,13 +22,15 @@
 //!   inspect
 //!       list the AOT artifacts the xla backend will use.
 
+use starplat_dyn::backend::cpu::Direction;
 use starplat_dyn::backend::BackendKind;
-use starplat_dyn::coordinator::{run_cell, run_stream_cell, Algo};
+use starplat_dyn::coordinator::{run_cell_with, run_stream_cell, Algo, EngineOpts};
 use starplat_dyn::dsl::{self, emit::Target};
 use starplat_dyn::graph::generators;
 use starplat_dyn::runtime::ArtifactManifest;
 use starplat_dyn::stream::{MergePolicy, ServiceConfig};
 use starplat_dyn::util::error::{anyhow, bail, Context, Result};
+use starplat_dyn::util::threadpool::Sched;
 
 fn main() {
     if let Err(e) = real_main() {
@@ -121,13 +127,31 @@ fn real_main() -> Result<()> {
             let percent: f64 = args.get("percent", "5").parse()?;
             let batch: usize = args.get("batch", "64").parse()?;
             let seed: u64 = args.get("seed", "42").parse()?;
+            let threads = match args.flags.get("threads") {
+                Some(t) => Some(t.parse()?),
+                None => None,
+            };
+            let opts = EngineOpts {
+                threads,
+                sched: args
+                    .get("sched", "dynamic")
+                    .parse::<Sched>()
+                    .map_err(|e: String| anyhow!(e))?,
+                direction: args
+                    .get("direction", "adaptive")
+                    .parse::<Direction>()
+                    .map_err(|e: String| anyhow!(e))?,
+            };
             let g = make_graph(&args);
             println!(
-                "graph: {} nodes / {} edges; {percent}% updates, batch {batch}",
+                "graph: {} nodes / {} edges; {percent}% updates, batch {batch}, \
+                 sched {}, direction {}",
                 g.num_nodes(),
-                g.num_edges()
+                g.num_edges(),
+                opts.sched.describe(),
+                opts.direction.describe()
             );
-            let cell = run_cell(algo, backend, &g, percent, batch, seed)?;
+            let cell = run_cell_with(algo, backend, &g, percent, batch, seed, opts)?;
             println!(
                 "static  : {:.6}s (+{:.6}s modeled comm)",
                 cell.static_secs, cell.static_comm_secs
@@ -158,16 +182,26 @@ fn real_main() -> Result<()> {
                 .get("policy", "adaptive")
                 .parse::<MergePolicy>()
                 .map_err(|e: String| anyhow!(e))?;
+            cfg.sched = args
+                .get("sched", "dynamic")
+                .parse::<Sched>()
+                .map_err(|e: String| anyhow!(e))?;
+            cfg.direction = args
+                .get("direction", "adaptive")
+                .parse::<Direction>()
+                .map_err(|e: String| anyhow!(e))?;
             let g = make_graph(&args);
             println!(
                 "serving {algo:?} on {} nodes / {} edges; {percent}% updates, \
                  {producers} producers, {readers} readers, batch {} / {:?} deadline, \
-                 policy {}",
+                 policy {}, sched {}, direction {}",
                 g.num_nodes(),
                 g.num_edges(),
                 cfg.batch_capacity,
                 cfg.batch_deadline,
-                cfg.merge_policy.describe()
+                cfg.merge_policy.describe(),
+                cfg.sched.describe(),
+                cfg.direction.describe()
             );
             let (cell, _report) =
                 run_stream_cell(algo, &g, percent, producers, readers, cfg, seed);
@@ -188,8 +222,11 @@ fn real_main() -> Result<()> {
                 cell.stats.closed_by_drain
             );
             println!(
-                "merges         : {} ({}, overflow {:.4})",
-                cell.stats.merges, cell.stats.policy, cell.stats.overflow_fraction
+                "merges         : {} ({}, overflow {:.4}, depth ewma {:.3})",
+                cell.stats.merges,
+                cell.stats.policy,
+                cell.stats.overflow_fraction,
+                cell.stats.chain_depth_ewma
             );
             println!("coalesced      : {}", cell.stats.coalesced);
             println!("snapshot reads : {} (epoch {})", cell.snapshot_reads, cell.stats.epoch);

@@ -19,6 +19,16 @@
 //! [`MergePolicy::Adaptive`] triggers `DynGraph::merge` from the
 //! overflow-bitmap heat signal — merge only once enough sources pay the
 //! diff-chain traversal tax, stay lazy while the chain is cold.
+//!
+//! The adaptive policy keys on two signals. The instantaneous
+//! *touched-vertex fraction* (how many sources have any overflow edge)
+//! catches broad, shallow churn. The **traversal-cost EWMA** tracked by
+//! [`MergeGovernor`] catches the opposite shape — narrow-but-deep chains:
+//! the expected extra diff-block probes *per neighbor read* is
+//! `overflow_fraction × chain_len` (a flagged source walks every block),
+//! and the governor exponentially averages that per-read chain *depth*
+//! across batches so a sustained deep chain merges even when few vertices
+//! are touched, while a one-batch spike does not.
 
 use super::ingest::{Ingest, Stamped};
 use crate::graph::updates::{Update, UpdateKind};
@@ -33,25 +43,33 @@ pub enum MergePolicy {
     /// Merge every `batches` applied batches (the paper's §3.5 fixed
     /// period, service-side).
     Periodic { batches: usize },
-    /// Merge when the overflow bitmap says the chain is hot: at least
+    /// Merge when the chain is hot by either signal: at least
     /// `hot_fraction` of vertices carry overflow edges (every read on them
-    /// walks the chain), or the chain reaches `max_chain` blocks
-    /// (memory/latency backstop). While the signal says cold, merges are
-    /// skipped entirely — point-update workloads keep their chain.
-    Adaptive { hot_fraction: f64, max_chain: usize },
+    /// walks the chain), the [`MergeGovernor`]'s per-read chain-depth EWMA
+    /// reaches `depth_hot` expected extra block probes, or the chain
+    /// reaches `max_chain` blocks (memory/latency backstop). While both
+    /// signals say cold, merges are skipped entirely — point-update
+    /// workloads keep their chain.
+    Adaptive { hot_fraction: f64, max_chain: usize, depth_hot: f64 },
     /// Never merge (ablation / tests).
     Never,
 }
 
+/// Default depth threshold: merge once reads pay (in expectation, EWMA'd)
+/// one extra diff-block probe per neighbor access.
+pub const DEFAULT_DEPTH_HOT: f64 = 1.0;
+
 impl Default for MergePolicy {
     fn default() -> Self {
-        MergePolicy::Adaptive { hot_fraction: 0.05, max_chain: 32 }
+        MergePolicy::Adaptive { hot_fraction: 0.05, max_chain: 32, depth_hot: DEFAULT_DEPTH_HOT }
     }
 }
 
 impl MergePolicy {
     /// Decide right after a batch was applied. `batches_since` counts
-    /// applied batches since the last merge.
+    /// applied batches since the last merge. Stateless form — the depth
+    /// EWMA is unavailable here, so only the instantaneous signals fire;
+    /// continuous callers should go through [`MergeGovernor`].
     pub fn should_merge(&self, g: &DynGraph, batches_since: usize) -> bool {
         self.should_merge_signal(
             g.diff_chain_len(),
@@ -69,12 +87,26 @@ impl MergePolicy {
         overflow_fraction: f64,
         batches_since: usize,
     ) -> bool {
+        self.should_merge_depth(chain_len, overflow_fraction, batches_since, 0.0)
+    }
+
+    /// Full-signal variant, including the per-read chain-depth EWMA a
+    /// [`MergeGovernor`] maintains.
+    pub fn should_merge_depth(
+        &self,
+        chain_len: usize,
+        overflow_fraction: f64,
+        batches_since: usize,
+        ewma_depth: f64,
+    ) -> bool {
         match *self {
             MergePolicy::Periodic { batches } => batches > 0 && batches_since >= batches,
             MergePolicy::Never => false,
-            MergePolicy::Adaptive { hot_fraction, max_chain } => {
+            MergePolicy::Adaptive { hot_fraction, max_chain, depth_hot } => {
                 chain_len > 0
-                    && (chain_len >= max_chain.max(1) || overflow_fraction >= hot_fraction)
+                    && (chain_len >= max_chain.max(1)
+                        || overflow_fraction >= hot_fraction
+                        || ewma_depth >= depth_hot)
             }
         }
     }
@@ -84,11 +116,18 @@ impl MergePolicy {
         g.overflow_touched() as f64 / g.num_nodes().max(1) as f64
     }
 
+    /// Expected extra diff-block probes per neighbor read, right now: a
+    /// source with its overflow bit set walks every sealed block, so the
+    /// per-read chain *depth* is `overflow_fraction × chain_len`.
+    pub fn read_depth(g: &DynGraph) -> f64 {
+        Self::overflow_fraction(g) * g.diff_chain_len() as f64
+    }
+
     pub fn describe(&self) -> String {
         match *self {
             MergePolicy::Periodic { batches } => format!("periodic:{batches}"),
-            MergePolicy::Adaptive { hot_fraction, max_chain } => {
-                format!("adaptive:hot={hot_fraction},max_chain={max_chain}")
+            MergePolicy::Adaptive { hot_fraction, max_chain, depth_hot } => {
+                format!("adaptive:hot={hot_fraction},depth={depth_hot},max_chain={max_chain}")
             }
             MergePolicy::Never => "never".to_string(),
         }
@@ -98,7 +137,7 @@ impl MergePolicy {
 impl std::str::FromStr for MergePolicy {
     type Err = String;
 
-    /// `periodic:<k>` | `adaptive[:<hot_fraction>]` | `never`.
+    /// `periodic:<k>` | `adaptive[:<hot_fraction>[,<depth_hot>]]` | `never`.
     fn from_str(s: &str) -> Result<Self, Self::Err> {
         let (head, arg) = match s.split_once(':') {
             Some((h, a)) => (h, Some(a)),
@@ -113,15 +152,85 @@ impl std::str::FromStr for MergePolicy {
                 Ok(MergePolicy::Periodic { batches: k })
             }
             "adaptive" => {
-                let f = arg
-                    .unwrap_or("0.05")
+                let (hot, depth) = match arg {
+                    None => ("0.05", None),
+                    Some(a) => match a.split_once(',') {
+                        None => (a, None),
+                        Some((h, d)) => (h, Some(d)),
+                    },
+                };
+                let f = hot
                     .parse::<f64>()
                     .map_err(|e| format!("bad adaptive hot fraction: {e}"))?;
-                Ok(MergePolicy::Adaptive { hot_fraction: f, max_chain: 32 })
+                let d = depth
+                    .map(|d| d.parse::<f64>().map_err(|e| format!("bad depth threshold: {e}")))
+                    .transpose()?
+                    .unwrap_or(DEFAULT_DEPTH_HOT);
+                Ok(MergePolicy::Adaptive { hot_fraction: f, max_chain: 32, depth_hot: d })
             }
             "never" => Ok(MergePolicy::Never),
-            other => Err(format!("unknown merge policy {other:?} (periodic:<k>|adaptive[:<f>]|never)")),
+            other => Err(format!(
+                "unknown merge policy {other:?} (periodic:<k>|adaptive[:<f>[,<d>]]|never)"
+            )),
         }
+    }
+}
+
+/// Exponential-smoothing weight for the per-read depth signal: ~4 batches
+/// of memory, enough to ride out a single spiky batch.
+const DEPTH_EWMA_LAMBDA: f64 = 0.25;
+
+/// What the governor saw (and decided) at one batch boundary.
+#[derive(Debug, Clone, Copy)]
+pub struct MergeSignal {
+    pub merge: bool,
+    pub overflow_fraction: f64,
+    /// Smoothed per-read chain depth at decision time.
+    pub ewma_depth: f64,
+}
+
+/// Stateful merge decision-maker: owns the batches-since counter and the
+/// traversal-cost (per-read chain depth) EWMA that the stateless
+/// [`MergePolicy`] methods cannot track. One per engine loop.
+#[derive(Debug, Clone)]
+pub struct MergeGovernor {
+    pub policy: MergePolicy,
+    ewma_depth: f64,
+    batches_since: usize,
+}
+
+impl MergeGovernor {
+    pub fn new(policy: MergePolicy) -> Self {
+        MergeGovernor { policy, ewma_depth: 0.0, batches_since: 0 }
+    }
+
+    /// Observe the post-batch graph, fold the instantaneous per-read depth
+    /// into the EWMA, and decide. On a merge decision the internal state
+    /// resets (the chain is about to vanish); the caller performs the
+    /// actual [`DynGraph::merge`].
+    pub fn after_batch(&mut self, g: &DynGraph) -> MergeSignal {
+        self.batches_since += 1;
+        let overflow_fraction = MergePolicy::overflow_fraction(g);
+        let depth_now = overflow_fraction * g.diff_chain_len() as f64;
+        self.ewma_depth =
+            DEPTH_EWMA_LAMBDA * depth_now + (1.0 - DEPTH_EWMA_LAMBDA) * self.ewma_depth;
+        let merge = self.policy.should_merge_depth(
+            g.diff_chain_len(),
+            overflow_fraction,
+            self.batches_since,
+            self.ewma_depth,
+        );
+        let signal = MergeSignal { merge, overflow_fraction, ewma_depth: self.ewma_depth };
+        if merge {
+            self.batches_since = 0;
+            self.ewma_depth = 0.0;
+        }
+        signal
+    }
+
+    /// Smoothed per-read chain depth (exposed via service stats).
+    pub fn ewma_depth(&self) -> f64 {
+        self.ewma_depth
     }
 }
 
@@ -458,8 +567,10 @@ mod tests {
         // paper_example-ish graph with full base ranges: overflow quickly
         let mut g = generators::uniform_random(64, 256, 5, 3);
         g.merge_period = 0;
-        let cold = MergePolicy::Adaptive { hot_fraction: 0.5, max_chain: 1000 };
-        let hot = MergePolicy::Adaptive { hot_fraction: 0.0, max_chain: 1000 };
+        let cold =
+            MergePolicy::Adaptive { hot_fraction: 0.5, max_chain: 1000, depth_hot: f64::MAX };
+        let hot =
+            MergePolicy::Adaptive { hot_fraction: 0.0, max_chain: 1000, depth_hot: f64::MAX };
         assert!(!cold.should_merge(&g, 100), "clean chain never merges");
         assert!(!hot.should_merge(&g, 100), "hot_fraction 0 still needs a chain");
         // force overflow inserts: fresh out-edges from every vertex
@@ -485,11 +596,93 @@ mod tests {
             MergePolicy::Periodic { batches: 4 }
         );
         match "adaptive:0.1".parse::<MergePolicy>().unwrap() {
-            MergePolicy::Adaptive { hot_fraction, .. } => {
-                assert!((hot_fraction - 0.1).abs() < 1e-12)
+            MergePolicy::Adaptive { hot_fraction, depth_hot, .. } => {
+                assert!((hot_fraction - 0.1).abs() < 1e-12);
+                assert!((depth_hot - DEFAULT_DEPTH_HOT).abs() < 1e-12);
+            }
+            other => panic!("{other:?}"),
+        }
+        match "adaptive:0.1,2.5".parse::<MergePolicy>().unwrap() {
+            MergePolicy::Adaptive { hot_fraction, depth_hot, .. } => {
+                assert!((hot_fraction - 0.1).abs() < 1e-12);
+                assert!((depth_hot - 2.5).abs() < 1e-12);
             }
             other => panic!("{other:?}"),
         }
         assert!("bogus".parse::<MergePolicy>().is_err());
+        assert!("adaptive:0.1,x".parse::<MergePolicy>().is_err());
+    }
+
+    /// A deep-but-narrow chain must trip the depth EWMA even though the
+    /// touched-vertex fraction stays below `hot_fraction`: one overflowing
+    /// source accumulating sealed blocks batch after batch.
+    #[test]
+    fn governor_depth_ewma_fires_on_deep_narrow_chain() {
+        let mut g = generators::uniform_random(256, 1024, 5, 9);
+        g.merge_period = 0;
+        // hot_fraction impossible to reach with one touched vertex
+        // (1/256 ≈ 0.004); depth threshold reachable once the chain of
+        // that vertex is deep enough for sustained rounds.
+        let policy = MergePolicy::Adaptive {
+            hot_fraction: 0.5,
+            max_chain: usize::MAX,
+            depth_hot: 0.05,
+        };
+        let mut gov = MergeGovernor::new(policy);
+        // pick one source with a full base range so every insert overflows
+        let src = (0..256u32)
+            .find(|&u| {
+                let b = g.fwd_base();
+                b.live_degree(u) > 0 && b.live_degree(u) == b.slot_range(u).len()
+            })
+            .expect("some full range exists");
+        let mut fired = false;
+        for i in 0..400u32 {
+            let dst = (src + 1 + i) % 256;
+            g.apply_additions(&[(src, dst, 1)]);
+            let sig = gov.after_batch(&g);
+            assert!(
+                MergePolicy::overflow_fraction(&g) < 0.5,
+                "the narrow workload must stay below hot_fraction"
+            );
+            if sig.merge {
+                fired = true;
+                g.merge();
+                assert_eq!(gov.ewma_depth(), 0.0, "state resets on merge");
+                break;
+            }
+        }
+        assert!(fired, "depth EWMA never fired on a deep narrow chain");
+    }
+
+    /// A single spiky batch must *not* fire the smoothed depth signal.
+    #[test]
+    fn governor_depth_ewma_rides_out_single_spike() {
+        let mut g = generators::uniform_random(64, 256, 5, 3);
+        g.merge_period = 0;
+        let policy = MergePolicy::Adaptive {
+            hot_fraction: 2.0, // unreachable
+            max_chain: usize::MAX,
+            depth_hot: 1.0,
+        };
+        let mut gov = MergeGovernor::new(policy);
+        // one hot batch: fresh out-edges from every vertex
+        let adds: Vec<_> = (0..64u32).map(|u| (u, (u + 32) % 64, 1)).collect();
+        g.apply_additions(&adds);
+        let instantaneous = MergePolicy::read_depth(&g);
+        let sig = gov.after_batch(&g);
+        assert!(sig.ewma_depth < instantaneous, "EWMA smooths the spike");
+        assert!(!sig.merge, "one spike must not trigger a merge");
+        // …but the same heat sustained for several batches does.
+        let mut fired = false;
+        for i in 0..40u32 {
+            let adds: Vec<_> = (0..64u32).map(|u| (u, (u + 2 + i) % 64, 1)).collect();
+            g.apply_additions(&adds);
+            if gov.after_batch(&g).merge {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "sustained depth must eventually merge");
     }
 }

@@ -26,7 +26,7 @@ pub mod ingest;
 pub mod service;
 pub mod snapshot;
 
-pub use batcher::{BatchMeta, Batcher, CloseReason, MergePolicy};
+pub use batcher::{BatchMeta, Batcher, CloseReason, MergeGovernor, MergePolicy, MergeSignal};
 pub use ingest::{Counters, Ingest};
 pub use service::{AlgoState, GraphService, ServiceConfig, ServiceReport, ServiceStats};
 pub use snapshot::{PropTable, SnapshotCell};

@@ -12,11 +12,11 @@
 //! batch propagates. Producers feel backpressure only through the bounded
 //! ingest shards.
 
-use super::batcher::{Batcher, CloseReason, MergePolicy};
+use super::batcher::{Batcher, CloseReason, MergeGovernor, MergePolicy};
 use super::ingest::Ingest;
 use super::snapshot::{PropTable, SnapshotCell};
 use crate::algorithms::{PrState, SsspState, TcState};
-use crate::backend::cpu::CpuEngine;
+use crate::backend::cpu::{CpuEngine, Direction};
 use crate::coordinator::Algo;
 use crate::graph::{DynGraph, NodeId, Update, UpdateKind, Weight};
 use crate::util::stats::percentile_sorted;
@@ -35,6 +35,8 @@ pub struct ServiceConfig {
     /// Engine thread-pool width.
     pub threads: usize,
     pub sched: Sched,
+    /// Traversal direction policy for the engine's frontier fixed points.
+    pub direction: Direction,
     /// Ingest shard count.
     pub shards: usize,
     /// Live updates each shard holds before producers block.
@@ -60,6 +62,7 @@ impl ServiceConfig {
             source: 0,
             threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             sched: Sched::default(),
+            direction: Direction::default(),
             shards: 4,
             shard_capacity: 4096,
             batch_capacity: 512,
@@ -97,6 +100,9 @@ pub struct ServiceStats {
     pub policy: String,
     /// Overflow-bitmap heat at the last batch boundary.
     pub overflow_fraction: f64,
+    /// Smoothed per-read diff-chain depth (the merge governor's
+    /// traversal-cost EWMA) at the last batch boundary.
+    pub chain_depth_ewma: f64,
     /// Published snapshot epoch.
     pub epoch: u64,
     /// Batch latency (enqueue of oldest update → snapshot publish), secs.
@@ -162,6 +168,7 @@ struct StatsInner {
     merges: u64,
     batch_coalesced: u64,
     overflow_fraction: f64,
+    chain_depth_ewma: f64,
     latencies: Vec<f64>,
     lcg: u64,
 }
@@ -201,8 +208,9 @@ impl GraphService {
         // The service owns the merge schedule (policy-driven, from the
         // batcher's seat) — disable the graph's built-in period.
         g.merge_period = 0;
-        let engine = CpuEngine::new(cfg.threads, cfg.sched);
+        let engine = CpuEngine::new(cfg.threads, cfg.sched).with_direction(cfg.direction);
         g.set_merge_pool(engine.pool.clone());
+        g.set_merge_sched(engine.sched);
         let state = match cfg.algo {
             Algo::Sssp => AlgoState::Sssp(engine.sssp_static(&g, cfg.source)),
             Algo::Pr => {
@@ -310,6 +318,7 @@ impl GraphService {
             out.closed_by_drain = inner.closed_by_drain;
             out.merges = inner.merges;
             out.overflow_fraction = inner.overflow_fraction;
+            out.chain_depth_ewma = inner.chain_depth_ewma;
             inner.latencies.clone()
         };
         if !lat.is_empty() {
@@ -369,7 +378,7 @@ fn engine_loop(
     let mut batcher = Batcher::new(cfg.batch_capacity, cfg.batch_deadline, cfg.symmetric);
     let mut dels: Vec<(NodeId, NodeId)> = Vec::new();
     let mut adds: Vec<(NodeId, NodeId, Weight)> = Vec::new();
-    let mut batches_since_merge = 0usize;
+    let mut governor = MergeGovernor::new(cfg.merge_policy);
 
     while let Some(meta) = batcher.next_batch(&ingest, &shared.stop) {
         batcher.take_into(&mut dels, &mut adds);
@@ -389,19 +398,13 @@ fn engine_loop(
             }
         }
 
-        batches_since_merge += 1;
-        // one bitmap scan per batch: the same signal drives the merge
-        // decision and the stats (recorded pre-merge, so dashboards see
-        // the heat that *triggered* a merge rather than the post-merge 0)
-        let overflow_fraction = MergePolicy::overflow_fraction(&g);
-        let merged = cfg.merge_policy.should_merge_signal(
-            g.diff_chain_len(),
-            overflow_fraction,
-            batches_since_merge,
-        );
-        if merged {
+        // one bitmap scan per batch: the governor folds the instantaneous
+        // per-read chain depth into its EWMA and decides; the stats record
+        // the pre-merge signals, so dashboards see the heat that
+        // *triggered* a merge rather than the post-merge 0
+        let signal = governor.after_batch(&g);
+        if signal.merge {
             g.merge();
-            batches_since_merge = 0;
         }
 
         publish_state(&snapshots, &g, &state);
@@ -415,11 +418,12 @@ fn engine_loop(
                 CloseReason::Deadline => s.closed_by_deadline += 1,
                 CloseReason::Drain => s.closed_by_drain += 1,
             }
-            if merged {
+            if signal.merge {
                 s.merges += 1;
             }
             s.batch_coalesced += meta.coalesced as u64;
-            s.overflow_fraction = overflow_fraction;
+            s.overflow_fraction = signal.overflow_fraction;
+            s.chain_depth_ewma = signal.ewma_depth;
             s.push_latency(latency);
         }
         // Completion accounting last: `drain()` returning guarantees the
@@ -461,6 +465,27 @@ mod tests {
         let mut want = g0.clone();
         stream.apply_all_static(&mut want);
         assert_eq!(report.graph.edges_sorted(), want.edges_sorted());
+        assert_eq!(report.sssp().unwrap().dist, sssp::dijkstra_oracle(&want, 0));
+    }
+
+    /// The streaming layer benefits from the new knobs too: a service
+    /// pinned to dense pull + partition-affine scheduling must stay
+    /// equivalent to the offline oracle.
+    #[test]
+    fn pull_partitioned_service_drains_and_matches_oracle() {
+        let g0 = generators::uniform_random(150, 800, 9, 51);
+        let stream = UpdateStream::generate_percent(&g0, 12.0, 64, 9, 53);
+        let mut c = cfg(Algo::Sssp);
+        c.sched = Sched::Partitioned;
+        c.direction = Direction::Pull;
+        let svc = GraphService::start(g0.clone(), c);
+        for u in &stream.updates {
+            assert!(svc.submit(*u));
+        }
+        svc.drain();
+        let report = svc.shutdown();
+        let mut want = g0.clone();
+        stream.apply_all_static(&mut want);
         assert_eq!(report.sssp().unwrap().dist, sssp::dijkstra_oracle(&want, 0));
     }
 
@@ -524,7 +549,8 @@ mod tests {
         let g0 = generators::uniform_random(300, 1500, 9, 41);
         let stream = UpdateStream::generate_percent(&g0, 20.0, 64, 9, 43);
         let mut c = cfg(Algo::Sssp);
-        c.merge_policy = MergePolicy::Adaptive { hot_fraction: 0.01, max_chain: 4 };
+        c.merge_policy =
+            MergePolicy::Adaptive { hot_fraction: 0.01, max_chain: 4, depth_hot: 1.0 };
         c.batch_capacity = 32;
         let svc = GraphService::start(g0, c);
         for u in &stream.updates {

@@ -1,28 +1,92 @@
 //! A scoped work-sharing thread pool: the "OpenMP runtime" of the `cpu`
 //! backend.
 //!
-//! Supports the two scheduling policies the paper evaluates (Table 6):
+//! Supports the two scheduling policies the paper evaluates (Table 6) —
 //! *dynamic* (atomic chunk-stealing, OpenMP `schedule(dynamic)`) and
-//! *static* (pre-computed contiguous ranges, `schedule(static)`).
+//! *static* (pre-computed contiguous ranges, `schedule(static)`) — plus
+//! the NUMA-motivated **partition-affine** schedule:
+//!
+//! [`Sched::Partitioned`] derives each worker's range from a
+//! [`PartitionMap`](crate::graph::partition::PartitionMap) block partition
+//! of the loop domain. For loops over the vertex set (the dense pull
+//! sweeps, the diff-CSR merge compaction) this means worker `t` owns the
+//! *same contiguous CSR shard on every round of every fixed point* — the
+//! dist/rank/flag cachelines and the adjacency ranges a worker touches
+//! stay with that worker, which is what a first-touch NUMA allocation
+//! rewards.
+//!
+//! Scope note, to keep claims honest: for a plain `0..n` loop,
+//! `Partitioned` today produces the *identical ranges* `Static` does
+//! (both are the ceil-division block split), so their per-loop timings
+//! should agree to noise; the meaningful perf comparison is either one
+//! vs `Dynamic`. What `Partitioned` adds is the *contract*, not a new
+//! split: the shards come from the same [`PartitionMap`] the graph layer
+//! uses for vertex ownership, and the engine hands its schedule to
+//! [`DynGraph::set_merge_sched`](crate::graph::DynGraph) so diff-block
+//! merge compaction walks the same shards as the sweeps. Planned
+//! follow-ups (degree-balanced shard boundaries, first-touch scratch
+//! init — see ROADMAP) change `Partitioned` without touching `Static`.
 //!
 //! Built on `std::thread::scope`, so closures may borrow from the caller's
 //! stack — no `Arc` plumbing required in the hot loops.
 
+use crate::graph::partition::{Partition, PartitionMap};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Loop-scheduling policy for `parallel_for`, mirroring OpenMP's
-/// `schedule(dynamic)` / `schedule(static)` clauses.
+/// `schedule(dynamic)` / `schedule(static)` clauses plus the
+/// partition-affine static schedule (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Sched {
     /// Chunked self-scheduling from a shared atomic counter.
     Dynamic { chunk: usize },
     /// Contiguous equal ranges fixed up-front per thread.
     Static,
+    /// Partition-affine: worker `t` owns the `t`-th contiguous block of a
+    /// [`PartitionMap`](crate::graph::partition::PartitionMap) over the
+    /// loop domain — the same shard every round, every loop.
+    Partitioned,
 }
 
 impl Default for Sched {
     fn default() -> Self {
         Sched::Dynamic { chunk: 512 }
+    }
+}
+
+impl Sched {
+    pub fn describe(&self) -> String {
+        match *self {
+            Sched::Dynamic { chunk } => format!("dynamic:{chunk}"),
+            Sched::Static => "static".to_string(),
+            Sched::Partitioned => "partitioned".to_string(),
+        }
+    }
+}
+
+impl std::str::FromStr for Sched {
+    type Err = String;
+
+    /// `dynamic[:<chunk>]` | `static` | `partitioned`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        match head {
+            "dynamic" => {
+                let chunk = arg
+                    .unwrap_or("512")
+                    .parse::<usize>()
+                    .map_err(|e| format!("bad dynamic chunk: {e}"))?;
+                Ok(Sched::Dynamic { chunk: chunk.max(1) })
+            }
+            "static" => Ok(Sched::Static),
+            "partitioned" => Ok(Sched::Partitioned),
+            other => {
+                Err(format!("unknown schedule {other:?} (dynamic[:<chunk>]|static|partitioned)"))
+            }
+        }
     }
 }
 
@@ -51,6 +115,22 @@ impl ThreadPool {
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The contiguous range worker `t` of `workers` owns under a static
+    /// split of `0..n`. `Partitioned` routes through [`PartitionMap`] so
+    /// loop sharding and graph-level vertex ownership are the same map;
+    /// `Static` computes the equivalent ceil-division split directly.
+    fn static_range(sched: Sched, n: usize, workers: usize, t: usize) -> std::ops::Range<usize> {
+        match sched {
+            Sched::Partitioned => {
+                PartitionMap::new(n, workers, Partition::Block).owned_range(t)
+            }
+            _ => {
+                let per = n.div_ceil(workers);
+                (t * per).min(n)..((t + 1) * per).min(n)
+            }
+        }
     }
 
     /// Parallel `for i in 0..n { body(i) }` with the given schedule.
@@ -90,18 +170,16 @@ impl ThreadPool {
                     }
                 });
             }
-            Sched::Static => {
-                let per = n.div_ceil(self.threads);
+            Sched::Static | Sched::Partitioned => {
                 std::thread::scope(|s| {
                     for t in 0..self.threads {
-                        let start = t * per;
-                        let end = ((t + 1) * per).min(n);
-                        if start >= end {
+                        let r = Self::static_range(sched, n, self.threads, t);
+                        if r.is_empty() {
                             continue;
                         }
                         let body = &body;
                         s.spawn(move || {
-                            for i in start..end {
+                            for i in r {
                                 body(i);
                             }
                         });
@@ -157,18 +235,16 @@ impl ThreadPool {
                     }
                 });
             }
-            Sched::Static => {
-                let per = n.div_ceil(workers);
+            Sched::Static | Sched::Partitioned => {
                 std::thread::scope(|s| {
                     for (t, st) in states.iter_mut().take(workers).enumerate() {
-                        let start = t * per;
-                        let end = ((t + 1) * per).min(n);
-                        if start >= end {
+                        let r = Self::static_range(sched, n, workers, t);
+                        if r.is_empty() {
                             continue;
                         }
                         let body = &body;
                         s.spawn(move || {
-                            for i in start..end {
+                            for i in r {
                                 body(st, i);
                             }
                         });
@@ -258,11 +334,60 @@ mod tests {
     #[test]
     fn parallel_for_empty_is_noop() {
         ThreadPool::new(2).parallel_for(0, Sched::Static, |_| panic!("must not run"));
+        ThreadPool::new(2).parallel_for(0, Sched::Partitioned, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_for_visits_each_index_once_partitioned() {
+        let pool = ThreadPool::new(4);
+        let n = 1003; // deliberately not divisible
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        pool.parallel_for(n, Sched::Partitioned, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    /// The partition-affine contract: worker `t` sees exactly the indices
+    /// of block shard `t`, contiguous and stable across repeated loops.
+    #[test]
+    fn partitioned_workers_own_stable_contiguous_shards() {
+        let pool = ThreadPool::new(3);
+        let n = 1000usize;
+        let pm = crate::graph::partition::PartitionMap::new(
+            n,
+            3,
+            crate::graph::partition::Partition::Block,
+        );
+        for _round in 0..3 {
+            let mut locals: Vec<Vec<usize>> = vec![Vec::new(); pool.threads()];
+            pool.parallel_for_with(n, Sched::Partitioned, &mut locals, |buf, i| buf.push(i));
+            for (t, shard) in locals.iter().enumerate() {
+                assert!(
+                    shard.windows(2).all(|w| w[1] == w[0] + 1),
+                    "worker {t} shard not contiguous"
+                );
+                for &i in shard {
+                    assert_eq!(pm.owner(i as u32), t, "index {i} not owned by worker {t}");
+                }
+                assert_eq!(shard.len(), pm.owned_count(t));
+            }
+        }
+    }
+
+    #[test]
+    fn sched_parses() {
+        assert_eq!("static".parse::<Sched>().unwrap(), Sched::Static);
+        assert_eq!("partitioned".parse::<Sched>().unwrap(), Sched::Partitioned);
+        assert_eq!("dynamic".parse::<Sched>().unwrap(), Sched::Dynamic { chunk: 512 });
+        assert_eq!("dynamic:64".parse::<Sched>().unwrap(), Sched::Dynamic { chunk: 64 });
+        assert!("guided".parse::<Sched>().is_err());
+        assert_eq!("partitioned".parse::<Sched>().unwrap().describe(), "partitioned");
     }
 
     #[test]
     fn parallel_for_with_partitions_state_and_covers_indices() {
-        for sched in [Sched::Dynamic { chunk: 32 }, Sched::Static] {
+        for sched in [Sched::Dynamic { chunk: 32 }, Sched::Static, Sched::Partitioned] {
             let pool = ThreadPool::new(4);
             let n = 5000usize;
             let mut locals: Vec<Vec<usize>> = vec![Vec::new(); pool.threads()];

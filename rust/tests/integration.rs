@@ -3,7 +3,7 @@
 //! invariants, and failure injection on the DSL front-end.
 
 use starplat_dyn::algorithms::{pagerank, sssp, triangle, PrState};
-use starplat_dyn::backend::cpu::CpuEngine;
+use starplat_dyn::backend::cpu::{CpuEngine, Direction};
 use starplat_dyn::backend::dist::DistEngine;
 use starplat_dyn::backend::xla::XlaEngine;
 use starplat_dyn::coordinator::{run_cell, Algo};
@@ -42,6 +42,22 @@ fn equivalence_matrix_dynamic_sssp() {
             e.sssp_dynamic_batch(&mut g, &mut st, &b);
         }
         assert_eq!(st.dist, want, "cpu x{threads}");
+    }
+
+    // direction-forced + partition-affine cpu engines join the matrix:
+    // push-only, pull-only, and adaptive must all be bitwise identical
+    for (dir, sched) in [
+        (Direction::Push, Sched::Partitioned),
+        (Direction::Pull, Sched::Partitioned),
+        (Direction::Adaptive { alpha: 0.05, beta: 0.01 }, Sched::Static),
+    ] {
+        let e = CpuEngine::new(4, sched).with_direction(dir);
+        let mut g = g0.clone();
+        let mut st = e.sssp_static(&g, 0);
+        for b in stream.batches() {
+            e.sssp_dynamic_batch(&mut g, &mut st, &b);
+        }
+        assert_eq!(st.dist, want, "cpu {dir:?}/{sched:?}");
     }
 
     // dist engine
