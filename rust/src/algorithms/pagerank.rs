@@ -64,15 +64,29 @@ pub fn static_pagerank(g: &DynGraph, st: &mut PrState) -> usize {
 /// anomaly in Fig. 15 is precisely this level count scaling with
 /// diameter).
 pub fn propagate_node_flags(g: &DynGraph, flags: &mut [bool]) -> usize {
-    let mut frontier: Vec<NodeId> = (0..g.num_nodes() as NodeId)
-        .filter(|&v| flags[v as usize])
-        .collect();
+    propagate_flags_with(g.num_nodes(), flags, |v| g.out_neighbors(v).map(|(nbr, _)| nbr))
+}
+
+/// The BFS flag-closure body, generic over the out-neighbor accessor so
+/// the single-graph and sharded-graph flavors share one implementation
+/// (and stay semantically identical by construction — the sharded PR
+/// equivalence tests depend on that).
+pub fn propagate_flags_with<I>(
+    n: usize,
+    flags: &mut [bool],
+    mut out_neighbors: impl FnMut(NodeId) -> I,
+) -> usize
+where
+    I: Iterator<Item = NodeId>,
+{
+    let mut frontier: Vec<NodeId> =
+        (0..n as NodeId).filter(|&v| flags[v as usize]).collect();
     let mut levels = 0;
     while !frontier.is_empty() {
         levels += 1;
         let mut next = Vec::new();
         for &v in &frontier {
-            for (nbr, _) in g.out_neighbors(v) {
+            for nbr in out_neighbors(v) {
                 if !flags[nbr as usize] {
                     flags[nbr as usize] = true;
                     next.push(nbr);

@@ -65,8 +65,17 @@ pub fn static_sssp(g: &DynGraph, source: NodeId) -> SsspState {
 /// `OnDelete` preprocessing (Fig. 21): a deleted edge `u -> v` whose `v`
 /// had `parent == u` invalidates `v`. Returns the modified flags.
 pub fn on_delete(st: &mut SsspState, dels: &[(NodeId, NodeId)]) -> Vec<bool> {
+    on_delete_iter(st, dels.iter().copied())
+}
+
+/// Iterator-driven variant of [`on_delete`] — the sharded streaming
+/// engine feeds per-shard deletion buffers without flattening them.
+pub fn on_delete_iter<I>(st: &mut SsspState, dels: I) -> Vec<bool>
+where
+    I: IntoIterator<Item = (NodeId, NodeId)>,
+{
     let mut modified = vec![false; st.dist.len()];
-    for &(u, v) in dels {
+    for (u, v) in dels {
         if st.parent[v as usize] == u as i64 {
             st.dist[v as usize] = INF;
             st.parent[v as usize] = -1;
@@ -128,8 +137,16 @@ pub fn decremental(g: &DynGraph, st: &mut SsspState, modified: &mut [bool]) {
 /// `OnAdd` preprocessing (Fig. 3): an added edge that can shorten the
 /// destination's distance activates both endpoints.
 pub fn on_add(st: &SsspState, adds: &[(NodeId, NodeId, i32)]) -> Vec<bool> {
+    on_add_iter(st, adds.iter().copied())
+}
+
+/// Iterator-driven variant of [`on_add`] (see [`on_delete_iter`]).
+pub fn on_add_iter<I>(st: &SsspState, adds: I) -> Vec<bool>
+where
+    I: IntoIterator<Item = (NodeId, NodeId, i32)>,
+{
     let mut modified = vec![false; st.dist.len()];
-    for &(u, v, w) in adds {
+    for (u, v, w) in adds {
         if st.dist[u as usize] < INF && st.dist[u as usize] + (w as i64) < st.dist[v as usize] {
             modified[u as usize] = true;
             modified[v as usize] = true;

@@ -16,7 +16,7 @@ use crate::backend::dist::DistEngine;
 use crate::backend::xla::XlaEngine;
 use crate::backend::BackendKind;
 use crate::graph::{DynGraph, NodeId, Update, UpdateKind, UpdateStream};
-use crate::stream::{GraphService, ServiceConfig, ServiceStats};
+use crate::stream::{GraphService, RelayStats, ServiceConfig, ServiceStats, ShardedService};
 use crate::util::threadpool::Sched;
 use crate::util::timer::time_it;
 use crate::util::error::Result;
@@ -392,7 +392,63 @@ pub struct StreamCell {
     pub updates_per_sec: f64,
     /// Snapshot queries served during the run (reader threads).
     pub snapshot_reads: u64,
+    /// Engine shards the cell ran with (1 ⇒ single-engine service).
+    pub shards: usize,
+    /// Halo-exchange telemetry (sharded cells only).
+    pub relay: Option<RelayStats>,
     pub stats: ServiceStats,
+}
+
+/// Either streaming facade behind one dispatch surface, so stream cells
+/// (and the benches built on them) drive single-engine and sharded runs
+/// through identical code.
+enum AnyService {
+    Single(GraphService),
+    Sharded(ShardedService),
+}
+
+impl AnyService {
+    fn start(g: DynGraph, cfg: ServiceConfig) -> Self {
+        if cfg.engine_shards > 1 {
+            AnyService::Sharded(ShardedService::start(g, cfg))
+        } else {
+            AnyService::Single(GraphService::start(g, cfg))
+        }
+    }
+
+    fn submit(&self, u: Update) -> bool {
+        match self {
+            AnyService::Single(s) => s.submit(u),
+            AnyService::Sharded(s) => s.submit(u),
+        }
+    }
+
+    fn with_snapshot<R>(&self, f: impl FnOnce(&crate::stream::PropTable) -> R) -> R {
+        match self {
+            AnyService::Single(s) => s.with_snapshot(f),
+            AnyService::Sharded(s) => s.with_snapshot(f),
+        }
+    }
+
+    fn drain(&self) {
+        match self {
+            AnyService::Single(s) => s.drain(),
+            AnyService::Sharded(s) => s.drain(),
+        }
+    }
+
+    /// Shut down, collapsing the sharded report into the single-engine
+    /// shape; the relay telemetry rides alongside.
+    fn shutdown(self) -> (crate::stream::ServiceReport, Option<RelayStats>) {
+        match self {
+            AnyService::Single(s) => (s.shutdown(), None),
+            AnyService::Sharded(s) => {
+                let r = s.shutdown();
+                let relay = r.relay;
+                (r.into_service_report(), Some(relay))
+            }
+        }
+    }
 }
 
 /// Build the workload a streaming cell submits: directed updates for
@@ -432,11 +488,12 @@ pub fn stream_workload(algo: Algo, g0: &DynGraph, percent: f64, seed: u64) -> Ve
     }
 }
 
-/// Run one streaming cell: start a [`GraphService`] on `g0` (TC cells
-/// symmetrize first), fan the workload out over `producers` threads,
-/// optionally spin `readers` snapshot-query threads, drain, and return
-/// throughput + latency statistics. Returns the service report alongside
-/// so callers can check end-state equivalence.
+/// Run one streaming cell: start a streaming service on `g0` (TC cells
+/// symmetrize first; `cfg.engine_shards > 1` selects the sharded
+/// service), fan the workload out over `producers` threads, optionally
+/// spin `readers` snapshot-query threads, drain, and return throughput +
+/// latency statistics. Returns the service report alongside so callers
+/// can check end-state equivalence.
 pub fn run_stream_cell(
     algo: Algo,
     g0: &DynGraph,
@@ -452,7 +509,8 @@ pub fn run_stream_cell(
     let base = if algo == Algo::Tc { triangle::symmetrize(g0) } else { g0.clone() };
     let workload = stream_workload(algo, &base, percent, seed);
     let producers = producers.max(1);
-    let svc = Arc::new(GraphService::start(base, cfg));
+    let shards = cfg.engine_shards.max(1);
+    let svc = Arc::new(AnyService::start(base, cfg));
     let stop_readers = Arc::new(AtomicBool::new(false));
     let reads = Arc::new(AtomicU64::new(0));
 
@@ -495,13 +553,15 @@ pub fn run_stream_cell(
     let Ok(svc) = Arc::try_unwrap(svc) else {
         unreachable!("all service handles joined before unwrap")
     };
-    let report = svc.shutdown();
+    let (report, relay) = svc.shutdown();
     let updates = workload.len() as u64;
     let cell = StreamCell {
         updates,
         wall_secs: wall,
         updates_per_sec: if wall > 0.0 { updates as f64 / wall } else { 0.0 },
         snapshot_reads: reads.load(Ordering::Relaxed),
+        shards,
+        relay,
         stats: report.stats.clone(),
     };
     (cell, report)
@@ -573,8 +633,26 @@ mod tests {
         let (cell, report) = run_stream_cell(Algo::Sssp, &g, 10.0, 4, 2, cfg, 9);
         assert_eq!(cell.updates, cell.stats.completed);
         assert_eq!(cell.stats.submitted, cell.stats.completed);
+        assert_eq!(cell.shards, 1);
+        assert!(cell.relay.is_none(), "single-engine cells carry no relay telemetry");
         assert!(cell.snapshot_reads > 0, "readers were served during the run");
         assert!(cell.updates_per_sec > 0.0);
         assert!(report.sssp().is_some());
+    }
+
+    #[test]
+    fn sharded_stream_cell_runs_and_reports_relay() {
+        let g = generators::uniform_random(150, 700, 9, 5);
+        let mut cfg = ServiceConfig::new(Algo::Sssp);
+        cfg.batch_capacity = 64;
+        cfg.batch_deadline = std::time::Duration::from_millis(2);
+        cfg.engine_shards = 2;
+        let (cell, report) = run_stream_cell(Algo::Sssp, &g, 10.0, 4, 2, cfg, 9);
+        assert_eq!(cell.updates, cell.stats.completed);
+        assert_eq!(cell.shards, 2);
+        let relay = cell.relay.expect("sharded cell reports relay telemetry");
+        assert!(relay.rounds > 0, "push phases ran");
+        assert!(cell.snapshot_reads > 0);
+        assert!(report.sssp().is_some(), "report collapses to the single-engine shape");
     }
 }

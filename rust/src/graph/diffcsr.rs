@@ -154,6 +154,10 @@ impl DiffCsr {
         self.set_overflow(u);
     }
 
+    /// Batches big enough to repay the parallel seal's thread spawns; below
+    /// this the serial [`Csr::from_edges`] build wins outright.
+    const SEAL_PARALLEL_MIN: usize = 4096;
+
     /// Seal the current batch's overflow inserts into a flat diff block
     /// (per-block offset/coords/weights arrays, ranges sorted).
     ///
@@ -162,15 +166,71 @@ impl DiffCsr {
     /// range lookup on every subsequent read. For graphs where n greatly
     /// exceeds batch size a touched-vertex mini-CSR would seal cheaper;
     /// tracked in ROADMAP.md (merge-policy tuning).
-    fn seal_batch(&mut self) {
+    ///
+    /// Shard-local seal (ROADMAP follow-up to the partition-affine
+    /// schedule): with a pool and a large enough batch, each worker builds
+    /// the contiguous slice of the new block's `coords`/`weights` that its
+    /// partition shard owns — under [`Sched::Partitioned`] the same
+    /// contiguous vertex shard it owns in the fixed-point sweeps and the
+    /// merge compaction. The result is bitwise identical to the serial
+    /// path: `pending` is pre-sorted by `(src, dst)` (destinations are
+    /// unique per source — `add_edge` rejects duplicates), so each range is
+    /// already in the sorted order [`Csr::from_edges`] establishes, and the
+    /// parallel phase is a pure disjoint copy. The offsets count/prefix-sum
+    /// stays serial (batch-sized + O(n)); only the payload copy shards.
+    fn seal_batch_with(&mut self, pool: Option<&ThreadPool>, sched: Sched) {
         if self.pending.is_empty() {
             return;
         }
         let n = self.base.num_nodes();
-        let csr = Csr::from_edges(n, &self.pending);
-        let live = self.pending.len();
-        self.pending.clear();
-        self.diffs.push(DiffBlock { csr, live });
+        let total = self.pending.len();
+        match pool {
+            Some(pool)
+                if pool.threads() > 1 && n > 0 && total >= Self::SEAL_PARALLEL_MIN =>
+            {
+                self.pending.sort_unstable();
+                let mut offsets = vec![0u32; n + 1];
+                for &(u, _, _) in &self.pending {
+                    offsets[u as usize + 1] += 1;
+                }
+                for i in 0..n {
+                    offsets[i + 1] += offsets[i];
+                }
+                let mut coords = vec![TOMBSTONE; total];
+                let mut weights: Vec<Weight> = vec![0; total];
+                {
+                    let csl = SyncSlice::new(&mut coords);
+                    let wsl = SyncSlice::new(&mut weights);
+                    let pending = &self.pending;
+                    let offs = &offsets;
+                    pool.parallel_for(n, sched, |v| {
+                        let start = offs[v] as usize;
+                        let len = (offs[v + 1] - offs[v]) as usize;
+                        if len == 0 {
+                            return;
+                        }
+                        // SAFETY: [start, start+len) ranges are disjoint
+                        // across vertices (prefix-sum offsets).
+                        let cdst = unsafe { csl.slice_mut(start, len) };
+                        let wdst = unsafe { wsl.slice_mut(start, len) };
+                        for (i, &(_, d, w)) in
+                            pending[start..start + len].iter().enumerate()
+                        {
+                            cdst[i] = d;
+                            wdst[i] = w;
+                        }
+                    });
+                }
+                self.pending.clear();
+                self.diffs
+                    .push(DiffBlock { csr: Csr { offsets, coords, weights }, live: total });
+            }
+            _ => {
+                let csr = Csr::from_edges(n, &self.pending);
+                self.pending.clear();
+                self.diffs.push(DiffBlock { csr, live: total });
+            }
+        }
     }
 
     /// Number of vertices with their overflow bit set — the cheap "how hot
@@ -204,7 +264,7 @@ impl DiffCsr {
     /// — [`Sched::Partitioned`] keeps each worker on the same contiguous
     /// vertex shard the engine's dense sweeps assign it; serial otherwise.
     fn merge_with(&mut self, pool: Option<&ThreadPool>, sched: Sched) {
-        self.seal_batch();
+        self.seal_batch_with(pool, sched);
         let n = self.base.num_nodes();
         match pool {
             Some(pool) if pool.threads() > 1 && n > 0 => {
@@ -465,8 +525,11 @@ impl DynGraph {
                 applied += 1;
             }
         }
-        self.fwd.seal_batch();
-        self.bwd.seal_batch();
+        // Seal under the merge pool/schedule: shard-local for big batches,
+        // serial (and identical) otherwise.
+        let pool = self.merge_pool.clone();
+        self.fwd.seal_batch_with(pool.as_ref(), self.merge_sched);
+        self.bwd.seal_batch_with(pool.as_ref(), self.merge_sched);
         self.epoch += 1;
         self.batches_since_merge += 1;
         if self.merge_period > 0 && self.batches_since_merge >= self.merge_period {
@@ -635,6 +698,60 @@ mod tests {
             let nb: Vec<NodeId> = parallel.fwd_base().neighbors(v).map(|(c, _)| c).collect();
             assert!(nb.windows(2).all(|w| w[0] < w[1] || w[0] == w[1]), "sorted {v}");
         }
+    }
+
+    /// Shard-local seal satellite: a batch big enough to take the parallel
+    /// seal path must produce diff blocks *bitwise identical* to the serial
+    /// `Csr::from_edges` path, in both directions.
+    #[test]
+    fn parallel_seal_matches_serial_bitwise() {
+        // from_edges gives exactly-sized (vacancy-free) base ranges, so
+        // every fresh insert overflows into the pending list
+        let g0 = crate::graph::generators::uniform_random(300, 600, 9, 77);
+        let existing: std::collections::HashSet<(NodeId, NodeId)> =
+            g0.edges_sorted().iter().map(|&(u, v, _)| (u, v)).collect();
+        let mut adds: Vec<(NodeId, NodeId, Weight)> = Vec::new();
+        'outer: for u in 0..300u32 {
+            for k in 1..300u32 {
+                let v = (u + k) % 300;
+                if !existing.contains(&(u, v)) {
+                    adds.push((u, v, 1 + ((u * 7 + v) % 9) as Weight));
+                    if adds.len() > DiffCsr::SEAL_PARALLEL_MIN {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        assert!(adds.len() > DiffCsr::SEAL_PARALLEL_MIN, "batch must hit the parallel gate");
+
+        let mut serial = g0.clone();
+        serial.merge_period = 0;
+        serial.apply_additions(&adds);
+
+        let mut sharded = g0.clone();
+        sharded.merge_period = 0;
+        sharded.set_merge_pool(ThreadPool::new(4));
+        sharded.set_merge_sched(Sched::Partitioned);
+        sharded.apply_additions(&adds);
+
+        assert_eq!(serial.fwd_diffs().len(), 1, "one sealed block");
+        assert_eq!(sharded.fwd_diffs().len(), 1);
+        for (s, p) in serial.fwd_diffs().iter().zip(sharded.fwd_diffs()) {
+            assert_eq!(s.csr, p.csr, "forward sealed block diverged");
+            assert_eq!(s.live, p.live);
+        }
+        for (s, p) in serial.bwd_diffs().iter().zip(sharded.bwd_diffs()) {
+            assert_eq!(s.csr, p.csr, "backward sealed block diverged");
+            assert_eq!(s.live, p.live);
+        }
+        assert_eq!(serial.edges_sorted(), sharded.edges_sorted());
+        // the dynamic-sched parallel seal must agree too (disjoint per-
+        // vertex ranges make the copy schedule-independent)
+        let mut dynsched = g0.clone();
+        dynsched.merge_period = 0;
+        dynsched.set_merge_pool(ThreadPool::new(3));
+        dynsched.apply_additions(&adds);
+        assert_eq!(serial.fwd_diffs()[0].csr, dynsched.fwd_diffs()[0].csr);
     }
 
     #[test]

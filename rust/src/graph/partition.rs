@@ -15,6 +15,12 @@ pub enum Partition {
     Block,
     /// `v % ranks` round-robin (better balance for sorted-degree graphs).
     Hash,
+    /// Contiguous blocks whose boundaries equalize *edge mass* (out-degree
+    /// prefix sums) instead of vertex counts — the ROADMAP's
+    /// degree-balanced follow-up to [`Partition::Block`]. Build via
+    /// [`PartitionMap::edge_balanced`]; [`PartitionMap::new`] has no
+    /// degree information and falls back to vertex-balanced blocks.
+    EdgeBalanced,
 }
 
 /// A concrete partitioning of `n` vertices over `ranks` ranks.
@@ -24,12 +30,53 @@ pub struct PartitionMap {
     pub ranks: usize,
     pub kind: Partition,
     per_block: usize,
+    /// Block boundaries for [`Partition::EdgeBalanced`]: rank `r` owns
+    /// `bounds[r]..bounds[r+1]` (length `ranks + 1`, monotone, covers
+    /// `0..n`). Empty for the closed-form kinds.
+    bounds: Vec<usize>,
 }
 
 impl PartitionMap {
     pub fn new(n: usize, ranks: usize, kind: Partition) -> Self {
         assert!(ranks >= 1);
-        PartitionMap { n, ranks, kind, per_block: n.div_ceil(ranks.max(1)) }
+        // Without degree information, EdgeBalanced degenerates to the
+        // vertex-balanced block split (same contiguous-ownership contract).
+        let kind = if kind == Partition::EdgeBalanced { Partition::Block } else { kind };
+        PartitionMap { n, ranks, kind, per_block: n.div_ceil(ranks.max(1)), bounds: Vec::new() }
+    }
+
+    /// Contiguous blocks with edge-mass-balanced boundaries: boundary `r`
+    /// is placed at the first vertex whose out-degree prefix sum reaches
+    /// `r/ranks` of the total edge mass (each vertex also counts `1` so
+    /// zero-degree tails still spread across ranks). Ownership stays
+    /// contiguous — the same contract [`Partition::Block`] gives the
+    /// partition-affine schedule — but a skewed graph no longer parks all
+    /// its hubs on rank 0's shard.
+    pub fn edge_balanced(n: usize, ranks: usize, out_degree: &[u32]) -> Self {
+        assert!(ranks >= 1);
+        assert_eq!(out_degree.len(), n, "one degree per vertex");
+        let total: u64 = out_degree.iter().map(|&d| d as u64 + 1).sum();
+        let mut bounds = Vec::with_capacity(ranks + 1);
+        bounds.push(0);
+        let mut acc: u64 = 0;
+        let mut v = 0usize;
+        for r in 1..ranks {
+            let target = total * r as u64 / ranks as u64;
+            while v < n && acc < target {
+                acc += out_degree[v] as u64 + 1;
+                v += 1;
+            }
+            bounds.push(v);
+        }
+        bounds.push(n);
+        debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
+        PartitionMap {
+            n,
+            ranks,
+            kind: Partition::EdgeBalanced,
+            per_block: n.div_ceil(ranks),
+            bounds,
+        }
     }
 
     /// Which rank owns vertex `v`.
@@ -38,16 +85,18 @@ impl PartitionMap {
         match self.kind {
             Partition::Block => (v as usize / self.per_block.max(1)).min(self.ranks - 1),
             Partition::Hash => v as usize % self.ranks,
+            Partition::EdgeBalanced => {
+                // first boundary strictly above v, minus one
+                self.bounds.partition_point(|&b| b <= v as usize) - 1
+            }
         }
     }
 
     /// The vertices owned by `rank`, in ascending order.
     pub fn owned(&self, rank: usize) -> Vec<NodeId> {
         match self.kind {
-            Partition::Block => {
-                let lo = rank * self.per_block;
-                let hi = ((rank + 1) * self.per_block).min(self.n);
-                (lo..hi).map(|v| v as NodeId).collect()
+            Partition::Block | Partition::EdgeBalanced => {
+                self.owned_range(rank).map(|v| v as NodeId).collect()
             }
             Partition::Hash => {
                 (rank..self.n).step_by(self.ranks).map(|v| v as NodeId).collect()
@@ -56,16 +105,20 @@ impl PartitionMap {
     }
 
     /// The contiguous index range owned by `rank`. Only meaningful for
-    /// [`Partition::Block`] (hash shards are not contiguous); the
+    /// the contiguous kinds ([`Partition::Block`] /
+    /// [`Partition::EdgeBalanced`]; hash shards are not contiguous); the
     /// thread pool's partition-affine schedule
     /// ([`Sched::Partitioned`](crate::util::threadpool::Sched)) uses this
     /// as the allocation-free form of [`owned`](Self::owned).
     #[inline]
     pub fn owned_range(&self, rank: usize) -> std::ops::Range<usize> {
         debug_assert!(
-            self.kind == Partition::Block,
-            "owned_range is only defined for block partitions"
+            self.kind != Partition::Hash,
+            "owned_range is only defined for contiguous partitions"
         );
+        if self.kind == Partition::EdgeBalanced {
+            return self.bounds[rank]..self.bounds[rank + 1];
+        }
         let lo = (rank * self.per_block).min(self.n);
         let hi = ((rank + 1) * self.per_block).min(self.n);
         lo..hi
@@ -74,11 +127,7 @@ impl PartitionMap {
     /// Number of vertices owned by `rank`.
     pub fn owned_count(&self, rank: usize) -> usize {
         match self.kind {
-            Partition::Block => {
-                let lo = rank * self.per_block;
-                let hi = ((rank + 1) * self.per_block).min(self.n);
-                hi.saturating_sub(lo)
-            }
+            Partition::Block | Partition::EdgeBalanced => self.owned_range(rank).len(),
             Partition::Hash => {
                 if rank < self.n {
                     (self.n - rank).div_ceil(self.ranks)
@@ -133,6 +182,95 @@ mod tests {
                 assert_eq!(got, want, "n={n} ranks={ranks} rank={r}");
             }
         }
+    }
+
+    #[test]
+    fn edge_balanced_covers_all_vertices_once_and_balances_mass() {
+        // heavily skewed degrees: first 8 vertices carry almost all edges
+        let mut deg = vec![1u32; 96];
+        let mut hubs = vec![100u32; 8];
+        hubs.append(&mut deg);
+        let p = PartitionMap::edge_balanced(104, 4, &hubs);
+        let mut seen = vec![0u32; 104];
+        for r in 0..4 {
+            let range = p.owned_range(r);
+            for v in range.clone() {
+                assert_eq!(p.owner(v as NodeId), r, "owner/owned_range agree");
+                seen[v] += 1;
+            }
+            assert_eq!(p.owned(r).len(), p.owned_count(r));
+            assert_eq!(p.owned(r).len(), range.len());
+        }
+        assert!(seen.iter().all(|&c| c == 1), "exact cover");
+        // the mass-balanced split must not park every hub on rank 0: the
+        // vertex-balanced split would give rank 0 vertices 0..26 (all 8
+        // hubs); edge balancing must cut far earlier.
+        assert!(
+            p.owned_range(0).len() < 8,
+            "rank 0 owns {} vertices — hubs not spread",
+            p.owned_range(0).len()
+        );
+        // per-rank edge mass within 2 hub-weights of the ideal quarter
+        let total: u64 = hubs.iter().map(|&d| d as u64 + 1).sum();
+        for r in 0..4 {
+            let mass: u64 = p.owned_range(r).map(|v| hubs[v] as u64 + 1).sum();
+            assert!(
+                mass <= total / 4 + 202,
+                "rank {r} mass {mass} vs ideal {}",
+                total / 4
+            );
+        }
+    }
+
+    #[test]
+    fn edge_balanced_degenerates_gracefully() {
+        // all-zero degrees: falls back to (roughly) vertex-balanced blocks
+        let p = PartitionMap::edge_balanced(10, 3, &[0; 10]);
+        let mut count = 0;
+        for r in 0..3 {
+            count += p.owned_count(r);
+        }
+        assert_eq!(count, 10);
+        // one rank: owns everything
+        let p1 = PartitionMap::edge_balanced(7, 1, &[5; 7]);
+        assert_eq!(p1.owned_range(0), 0..7);
+        // more ranks than vertices: trailing ranks own empty ranges
+        let p8 = PartitionMap::edge_balanced(3, 8, &[1; 3]);
+        let mut seen = vec![0u32; 3];
+        for r in 0..8 {
+            for v in p8.owned(r) {
+                assert_eq!(p8.owner(v), r);
+                seen[v as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1));
+        // new() with EdgeBalanced but no degrees falls back to Block
+        let pb = PartitionMap::new(100, 4, Partition::EdgeBalanced);
+        assert_eq!(pb.kind, Partition::Block);
+    }
+
+    #[test]
+    fn prop_edge_balanced_exact_cover() {
+        forall_checks(0xEB01, 30, |g| {
+            let n = g.usize_in(1, 400);
+            let ranks = g.usize_in(1, 16);
+            let deg: Vec<u32> =
+                (0..n).map(|_| g.usize_in(0, 50) as u32).collect();
+            let p = PartitionMap::edge_balanced(n, ranks, &deg);
+            let mut count = 0usize;
+            let mut prev_end = 0usize;
+            for r in 0..ranks {
+                let range = p.owned_range(r);
+                assert_eq!(range.start, prev_end, "ranges contiguous in rank order");
+                prev_end = range.end;
+                for v in range {
+                    assert_eq!(p.owner(v as NodeId), r);
+                    count += 1;
+                }
+            }
+            assert_eq!(prev_end, n);
+            assert_eq!(count, n);
+        });
     }
 
     #[test]

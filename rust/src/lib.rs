@@ -25,8 +25,11 @@
 //!   the paper leaves out — sharded bounded ingest with same-edge
 //!   coalescing, adaptive size-or-deadline batch formation with a
 //!   signal-driven diff-CSR merge policy, epoch double-buffered property
-//!   snapshots, and the [`stream::GraphService`] facade serving
-//!   consistent reads while batches propagate.
+//!   snapshots, the [`stream::GraphService`] facade serving consistent
+//!   reads while batches propagate, and the [`stream::ShardedService`]
+//!   scale-out flavor — N engine shards owning edge-mass-balanced vertex
+//!   blocks, a cross-shard relax-message relay (in-process halo
+//!   exchange), and epoch-stitched snapshots.
 //!
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.

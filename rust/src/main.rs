@@ -10,13 +10,17 @@
 //!       [--direction push|pull|adaptive[:<a>[,<b>]]]
 //!       run one dynamic-vs-static experiment cell and print timings.
 //!   serve --algo sssp|pr|tc [--producers N] [--readers M]
-//!       [--batch B] [--deadline-ms D] [--shards S] [--threads T]
+//!       [--batch B] [--deadline-ms D] [--shards S] [--ingest-shards Q]
+//!       [--threads T]
 //!       [--policy periodic:<k>|adaptive[:<f>[,<d>]]|never]
 //!       [--sched dynamic[:<chunk>]|static|partitioned]
 //!       [--direction push|pull|adaptive[:<a>[,<b>]]]
 //!       [--graph …] [--nodes N] [--percent P] [--seed S]
-//!       run the streaming GraphService under a synthetic multi-producer
-//!       load and print throughput + batch-latency statistics.
+//!       run the streaming service under a synthetic multi-producer load
+//!       and print throughput + batch-latency statistics. `--shards S`
+//!       with S > 1 shards the graph across S engine threads
+//!       (epoch-stitched snapshots + cross-shard relay);
+//!       `--ingest-shards` sizes the producer-side queue sharding.
 //!   interp <file.sp> --fn <DynName> [--nodes N] [--percent P] …
 //!       execute a DSL program through the reference interpreter.
 //!   inspect
@@ -174,7 +178,8 @@ fn real_main() -> Result<()> {
             cfg.batch_deadline = std::time::Duration::from_millis(
                 args.get("deadline-ms", "10").parse()?,
             );
-            cfg.shards = args.get("shards", "4").parse()?;
+            cfg.engine_shards = args.get("shards", "1").parse()?;
+            cfg.shards = args.get("ingest-shards", "4").parse()?;
             if let Some(t) = args.flags.get("threads") {
                 cfg.threads = t.parse()?;
             }
@@ -191,20 +196,41 @@ fn real_main() -> Result<()> {
                 .parse::<Direction>()
                 .map_err(|e: String| anyhow!(e))?;
             let g = make_graph(&args);
-            println!(
-                "serving {algo:?} on {} nodes / {} edges; {percent}% updates, \
-                 {producers} producers, {readers} readers, batch {} / {:?} deadline, \
-                 policy {}, sched {}, direction {}",
-                g.num_nodes(),
-                g.num_edges(),
-                cfg.batch_capacity,
-                cfg.batch_deadline,
-                cfg.merge_policy.describe(),
-                cfg.sched.describe(),
-                cfg.direction.describe()
-            );
+            if cfg.engine_shards > 1 {
+                println!(
+                    "serving {algo:?} on {} nodes / {} edges; {percent}% updates, \
+                     {producers} producers, {readers} readers, {} engine shards \
+                     (BSP relay; --threads/--sched/--direction apply to the \
+                     single-engine service only), batch {} / {:?} deadline, policy {}",
+                    g.num_nodes(),
+                    g.num_edges(),
+                    cfg.engine_shards,
+                    cfg.batch_capacity,
+                    cfg.batch_deadline,
+                    cfg.merge_policy.describe(),
+                );
+            } else {
+                println!(
+                    "serving {algo:?} on {} nodes / {} edges; {percent}% updates, \
+                     {producers} producers, {readers} readers, batch {} / {:?} deadline, \
+                     policy {}, sched {}, direction {}",
+                    g.num_nodes(),
+                    g.num_edges(),
+                    cfg.batch_capacity,
+                    cfg.batch_deadline,
+                    cfg.merge_policy.describe(),
+                    cfg.sched.describe(),
+                    cfg.direction.describe()
+                );
+            }
             let (cell, _report) =
                 run_stream_cell(algo, &g, percent, producers, readers, cfg, seed);
+            if let Some(relay) = cell.relay {
+                println!(
+                    "relay          : {} rounds, {} local msgs, {} cross-shard msgs",
+                    relay.rounds, relay.local_msgs, relay.cross_msgs
+                );
+            }
             println!("updates        : {}", cell.updates);
             println!("wall           : {:.4}s", cell.wall_secs);
             println!("throughput     : {:.0} upd/s", cell.updates_per_sec);

@@ -209,13 +209,21 @@ impl MergeGovernor {
     /// resets (the chain is about to vanish); the caller performs the
     /// actual [`DynGraph::merge`].
     pub fn after_batch(&mut self, g: &DynGraph) -> MergeSignal {
+        self.observe(g.diff_chain_len(), MergePolicy::overflow_fraction(g))
+    }
+
+    /// Signal-level variant of [`after_batch`](Self::after_batch): the
+    /// sharded service aggregates its signals across shards (deepest
+    /// per-shard chain, global overflow fraction — shard bitmaps flag
+    /// disjoint owned sources) and feeds them here, so both service
+    /// flavors share one EWMA/decision path.
+    pub fn observe(&mut self, chain_len: usize, overflow_fraction: f64) -> MergeSignal {
         self.batches_since += 1;
-        let overflow_fraction = MergePolicy::overflow_fraction(g);
-        let depth_now = overflow_fraction * g.diff_chain_len() as f64;
+        let depth_now = overflow_fraction * chain_len as f64;
         self.ewma_depth =
             DEPTH_EWMA_LAMBDA * depth_now + (1.0 - DEPTH_EWMA_LAMBDA) * self.ewma_depth;
         let merge = self.policy.should_merge_depth(
-            g.diff_chain_len(),
+            chain_len,
             overflow_fraction,
             self.batches_since,
             self.ewma_depth,

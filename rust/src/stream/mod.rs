@@ -13,20 +13,33 @@
 //! * [`snapshot`] — epoch double-buffered property publication, so
 //!   readers always see a mutually-consistent (graph-epoch, property)
 //!   pair while the next batch propagates;
-//! * [`service`] — the [`GraphService`] facade wiring
-//!   ingest → batcher → `CpuEngine` propagate → snapshot publish, with
-//!   throughput and p50/p99 batch-latency statistics.
+//! * [`shard`] — the scale-out substrate: [`ShardedGraph`] splits the
+//!   graph over N owner-computes engine shards (edge-mass-balanced
+//!   vertex blocks via `graph::partition::PartitionMap`), and
+//!   [`ShardedEngine`] propagates batches across them in BSP rounds with
+//!   a cross-shard relax-message relay (the in-process halo exchange);
+//! * [`service`] — two facades: [`GraphService`] wiring
+//!   ingest → batcher → `CpuEngine` propagate → snapshot publish, and
+//!   [`ShardedService`] replacing the single engine with the shard fleet
+//!   and publishing **epoch-stitched** snapshots (per-shard epoch stamps,
+//!   all-or-nothing) so readers never observe a half-propagated batch.
 //!
-//! See `benches/stream_throughput.rs` for the producers × deadline grid
-//! (`BENCH_stream.json`) and `tests/stream_equivalence.rs` for the
-//! streaming-vs-offline equivalence suite.
+//! See `benches/stream_throughput.rs` for the shards × producers ×
+//! deadline grid (`BENCH_stream.json`) and `tests/stream_equivalence.rs`
+//! for the cross-shard equivalence matrix (sharded ≡ single-engine ≡
+//! offline, shards ∈ {1, 2, 4}).
 
 pub mod batcher;
 pub mod ingest;
 pub mod service;
+pub mod shard;
 pub mod snapshot;
 
 pub use batcher::{BatchMeta, Batcher, CloseReason, MergeGovernor, MergePolicy, MergeSignal};
 pub use ingest::{Counters, Ingest};
-pub use service::{AlgoState, GraphService, ServiceConfig, ServiceReport, ServiceStats};
+pub use service::{
+    AlgoState, GraphService, ServiceConfig, ServiceReport, ServiceStats, ShardedReport,
+    ShardedService,
+};
+pub use shard::{RelayStats, ShardedEngine, ShardedGraph};
 pub use snapshot::{PropTable, SnapshotCell};

@@ -14,6 +14,7 @@
 
 use super::batcher::{Batcher, CloseReason, MergeGovernor, MergePolicy};
 use super::ingest::Ingest;
+use super::shard::{RelayStats, ShardedEngine, ShardedGraph};
 use super::snapshot::{PropTable, SnapshotCell};
 use crate::algorithms::{PrState, SsspState, TcState};
 use crate::backend::cpu::{CpuEngine, Direction};
@@ -32,15 +33,27 @@ pub struct ServiceConfig {
     pub algo: Algo,
     /// SSSP source vertex.
     pub source: NodeId,
-    /// Engine thread-pool width.
+    /// Engine thread-pool width. Single-engine service only —
+    /// [`ShardedService`] runs one BSP thread per engine shard instead
+    /// (its parallelism knob is `engine_shards`).
     pub threads: usize,
+    /// Loop schedule (single-engine service only; the sharded engine's
+    /// work split *is* its partition).
     pub sched: Sched,
-    /// Traversal direction policy for the engine's frontier fixed points.
+    /// Traversal direction policy for the engine's frontier fixed points
+    /// (single-engine service only; the sharded engine's pulls are fixed
+    /// owner-writes sweeps).
     pub direction: Direction,
-    /// Ingest shard count.
+    /// Ingest shard count (producer-side queue sharding; orthogonal to
+    /// the engine sharding below).
     pub shards: usize,
     /// Live updates each shard holds before producers block.
     pub shard_capacity: usize,
+    /// Engine shard count for [`ShardedService`]: the graph is split over
+    /// this many engine shards (vertex-block ownership, edge-mass-balanced
+    /// boundaries) that propagate each batch concurrently. `1` keeps the
+    /// single-engine pipeline; [`GraphService`] ignores this knob.
+    pub engine_shards: usize,
     /// Batch closes at this many updates…
     pub batch_capacity: usize,
     /// …or when its oldest update has waited this long.
@@ -65,6 +78,7 @@ impl ServiceConfig {
             direction: Direction::default(),
             shards: 4,
             shard_capacity: 4096,
+            engine_shards: 1,
             batch_capacity: 512,
             batch_deadline: Duration::from_millis(10),
             merge_policy: MergePolicy::default(),
@@ -299,35 +313,7 @@ impl GraphService {
     /// after every batch, so the latency samples are cloned out and sorted
     /// *outside* the critical section (one sort serves every percentile).
     pub fn stats(&self) -> ServiceStats {
-        let c = self.ingest.counters();
-        let mut out = ServiceStats {
-            submitted: c.submitted,
-            completed: c.completed,
-            coalesced: c.coalesced,
-            policy: self.cfg.merge_policy.describe(),
-            epoch: self.snapshots.epoch(),
-            wall_secs: self.shared.started.elapsed().as_secs_f64(),
-            ..ServiceStats::default()
-        };
-        let mut lat = {
-            let inner = self.shared.stats.lock().unwrap();
-            out.coalesced += inner.batch_coalesced;
-            out.batches = inner.batches;
-            out.closed_by_size = inner.closed_by_size;
-            out.closed_by_deadline = inner.closed_by_deadline;
-            out.closed_by_drain = inner.closed_by_drain;
-            out.merges = inner.merges;
-            out.overflow_fraction = inner.overflow_fraction;
-            out.chain_depth_ewma = inner.chain_depth_ewma;
-            inner.latencies.clone()
-        };
-        if !lat.is_empty() {
-            lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            out.batch_latency_p50 = percentile_sorted(&lat, 0.50);
-            out.batch_latency_p99 = percentile_sorted(&lat, 0.99);
-            out.batch_latency_mean = lat.iter().sum::<f64>() / lat.len() as f64;
-        }
-        out
+        collect_stats(&self.ingest, &self.snapshots, &self.shared, &self.cfg.merge_policy)
     }
 
     /// Stop the service: reject new submissions, flush the backlog through
@@ -342,26 +328,87 @@ impl GraphService {
     }
 }
 
+/// The stats-collection body both service flavors share (the latency
+/// sort runs outside the stats lock; see [`GraphService::stats`]).
+fn collect_stats(
+    ingest: &Ingest,
+    snapshots: &SnapshotCell,
+    shared: &Shared,
+    policy: &MergePolicy,
+) -> ServiceStats {
+    let c = ingest.counters();
+    let mut out = ServiceStats {
+        submitted: c.submitted,
+        completed: c.completed,
+        coalesced: c.coalesced,
+        policy: policy.describe(),
+        epoch: snapshots.epoch(),
+        wall_secs: shared.started.elapsed().as_secs_f64(),
+        ..ServiceStats::default()
+    };
+    let mut lat = {
+        let inner = shared.stats.lock().unwrap();
+        out.coalesced += inner.batch_coalesced;
+        out.batches = inner.batches;
+        out.closed_by_size = inner.closed_by_size;
+        out.closed_by_deadline = inner.closed_by_deadline;
+        out.closed_by_drain = inner.closed_by_drain;
+        out.merges = inner.merges;
+        out.overflow_fraction = inner.overflow_fraction;
+        out.chain_depth_ewma = inner.chain_depth_ewma;
+        inner.latencies.clone()
+    };
+    if !lat.is_empty() {
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        out.batch_latency_p50 = percentile_sorted(&lat, 0.50);
+        out.batch_latency_p99 = percentile_sorted(&lat, 0.99);
+        out.batch_latency_mean = lat.iter().sum::<f64>() / lat.len() as f64;
+    }
+    out
+}
+
+/// Copy the algorithm state's property arrays into a snapshot table
+/// (buffers reused across publishes).
+fn fill_props(t: &mut PropTable, state: &AlgoState) {
+    match state {
+        AlgoState::Sssp(st) => {
+            t.dist.clear();
+            t.dist.extend_from_slice(&st.dist);
+            t.parent.clear();
+            t.parent.extend_from_slice(&st.parent);
+        }
+        AlgoState::Pr(st) => {
+            t.rank.clear();
+            t.rank.extend_from_slice(&st.rank);
+        }
+        AlgoState::Tc(st) => {
+            t.triangles = st.triangles;
+        }
+    }
+}
+
 fn publish_state(cell: &SnapshotCell, g: &DynGraph, state: &AlgoState) {
     cell.publish(|t| {
         t.graph_epoch = g.epoch();
+        t.shard_epochs.clear(); // single engine: no shard stamps
         t.num_nodes = g.num_nodes();
         t.num_edges = g.num_edges();
-        match state {
-            AlgoState::Sssp(st) => {
-                t.dist.clear();
-                t.dist.extend_from_slice(&st.dist);
-                t.parent.clear();
-                t.parent.extend_from_slice(&st.parent);
-            }
-            AlgoState::Pr(st) => {
-                t.rank.clear();
-                t.rank.extend_from_slice(&st.rank);
-            }
-            AlgoState::Tc(st) => {
-                t.triangles = st.triangles;
-            }
-        }
+        fill_props(t, state);
+    });
+}
+
+/// Epoch-stitched publication for the sharded service: one all-or-nothing
+/// table carrying every shard's property block *and* every shard's graph
+/// epoch stamp. Readers either see the whole previous epoch or the whole
+/// next one — never shard A at epoch `e` next to shard B at `e + 1`.
+fn publish_sharded(cell: &SnapshotCell, g: &ShardedGraph, state: &AlgoState) {
+    cell.publish(|t| {
+        t.graph_epoch = g.epoch();
+        t.shard_epochs.clear();
+        t.shard_epochs.extend((0..g.num_shards()).map(|r| g.shard(r).epoch()));
+        t.num_nodes = g.num_nodes();
+        t.num_edges = g.num_edges();
+        fill_props(t, state);
     });
 }
 
@@ -431,6 +478,256 @@ fn engine_loop(
         ingest.complete(meta.raw_len as u64);
     }
     (g, state)
+}
+
+// ------------------------------------------------------------ sharded
+
+/// Everything the sharded engine thread hands back at shutdown.
+#[derive(Debug)]
+pub struct ShardedReport {
+    pub graph: ShardedGraph,
+    pub state: AlgoState,
+    pub stats: ServiceStats,
+    /// Cumulative halo-exchange traffic (push rounds, local vs
+    /// shard-crossing relax messages).
+    pub relay: RelayStats,
+}
+
+impl ShardedReport {
+    pub fn sssp(&self) -> Option<&SsspState> {
+        match &self.state {
+            AlgoState::Sssp(st) => Some(st),
+            _ => None,
+        }
+    }
+
+    pub fn pr(&self) -> Option<&PrState> {
+        match &self.state {
+            AlgoState::Pr(st) => Some(st),
+            _ => None,
+        }
+    }
+
+    pub fn tc(&self) -> Option<&TcState> {
+        match &self.state {
+            AlgoState::Tc(st) => Some(st),
+            _ => None,
+        }
+    }
+
+    /// Collapse into the single-engine report shape (the graph is rebuilt
+    /// from the shard edge sets; diff/tombstone layout is not preserved,
+    /// the edge set and every property are) so shared tooling — the
+    /// coordinator's stream cells, the benches — can consume either
+    /// service flavor.
+    pub fn into_service_report(self) -> ServiceReport {
+        ServiceReport { graph: self.graph.into_dyn_graph(), state: self.state, stats: self.stats }
+    }
+}
+
+/// The sharded streaming facade: the same ingest → batcher front as
+/// [`GraphService`], but each batch propagates across
+/// `cfg.engine_shards` engine shards concurrently
+/// ([`ShardedEngine`]; see `stream::shard` for the BSP/relay execution
+/// model), and every published snapshot is **epoch-stitched** — one
+/// all-or-nothing table carrying per-shard epoch stamps, so readers never
+/// observe two shards at different epochs.
+pub struct ShardedService {
+    ingest: Arc<Ingest>,
+    snapshots: Arc<SnapshotCell>,
+    shared: Arc<Shared>,
+    cfg: ServiceConfig,
+    worker: Mutex<Option<JoinHandle<(ShardedGraph, AlgoState, RelayStats)>>>,
+}
+
+impl ShardedService {
+    /// Partition `g` over `cfg.engine_shards` shards (edge-mass-balanced
+    /// vertex blocks), run the initial static solve across the shards,
+    /// publish it as epoch 1, then start the coordinator thread.
+    pub fn start(g: DynGraph, cfg: ServiceConfig) -> Self {
+        let graph = ShardedGraph::partition(&g, cfg.engine_shards.max(1));
+        drop(g);
+        let mut engine = ShardedEngine::new();
+        let state = match cfg.algo {
+            Algo::Sssp => AlgoState::Sssp(engine.sssp_static(&graph, cfg.source)),
+            Algo::Pr => {
+                let mut st = PrState::new(
+                    graph.num_nodes(),
+                    cfg.pr_beta,
+                    cfg.pr_delta,
+                    cfg.pr_max_iter,
+                );
+                engine.pr_static(&graph, &mut st);
+                AlgoState::Pr(st)
+            }
+            Algo::Tc => AlgoState::Tc(engine.tc_static(&graph)),
+        };
+        let snapshots = Arc::new(SnapshotCell::new());
+        publish_sharded(&snapshots, &graph, &state);
+        let ingest = Arc::new(Ingest::new(cfg.shards, cfg.shard_capacity, cfg.symmetric));
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            stats: Mutex::new(StatsInner::default()),
+            started: Instant::now(),
+        });
+
+        let worker = {
+            let ingest = Arc::clone(&ingest);
+            let snapshots = Arc::clone(&snapshots);
+            let shared = Arc::clone(&shared);
+            let cfg = cfg.clone();
+            std::thread::spawn(move || {
+                sharded_engine_loop(graph, state, engine, ingest, snapshots, shared, cfg)
+            })
+        };
+
+        ShardedService { ingest, snapshots, shared, cfg, worker: Mutex::new(Some(worker)) }
+    }
+
+    /// Submit one update (blocking under backpressure). Returns `false`
+    /// once the service is shutting down.
+    pub fn submit(&self, upd: Update) -> bool {
+        self.ingest.submit(upd)
+    }
+
+    /// Convenience: submit an edge insertion.
+    pub fn insert(&self, src: NodeId, dst: NodeId, weight: Weight) -> bool {
+        self.submit(Update { kind: UpdateKind::Add, src, dst, weight })
+    }
+
+    /// Convenience: submit an edge deletion.
+    pub fn remove(&self, src: NodeId, dst: NodeId) -> bool {
+        self.submit(Update { kind: UpdateKind::Delete, src, dst, weight: 0 })
+    }
+
+    /// Block until every submitted update has been applied (or coalesced)
+    /// and its stitched snapshot published. Producers must pause first.
+    pub fn drain(&self) {
+        self.ingest.wait_quiescent();
+    }
+
+    /// Latest published snapshot epoch.
+    pub fn epoch(&self) -> u64 {
+        self.snapshots.epoch()
+    }
+
+    /// Run `f` against the current published stitched snapshot (never
+    /// blocks on the engine shards; see [`SnapshotCell`]). The table's
+    /// `shard_epochs` carry one graph-epoch stamp per engine shard —
+    /// always mutually equal, that is the stitch invariant.
+    pub fn with_snapshot<R>(&self, f: impl FnOnce(&PropTable) -> R) -> R {
+        self.snapshots.read(f)
+    }
+
+    /// SSSP distance of `v` in the published snapshot.
+    pub fn dist(&self, v: NodeId) -> Option<i64> {
+        self.with_snapshot(|t| t.dist.get(v as usize).copied())
+    }
+
+    /// PageRank of `v` in the published snapshot.
+    pub fn rank(&self, v: NodeId) -> Option<f64> {
+        self.with_snapshot(|t| t.rank.get(v as usize).copied())
+    }
+
+    /// Triangle count in the published snapshot (TC services).
+    pub fn triangles(&self) -> Option<i64> {
+        if self.cfg.algo == Algo::Tc {
+            Some(self.with_snapshot(|t| t.triangles))
+        } else {
+            None
+        }
+    }
+
+    /// Current service statistics (same shape as the single-engine
+    /// service's — the benches compare the two directly).
+    pub fn stats(&self) -> ServiceStats {
+        collect_stats(&self.ingest, &self.snapshots, &self.shared, &self.cfg.merge_policy)
+    }
+
+    /// Stop the service: reject new submissions, flush the backlog through
+    /// the shards, join, and hand back shards + state + stats + relay
+    /// telemetry.
+    pub fn shutdown(self) -> ShardedReport {
+        self.shared.stop.store(true, Ordering::Release);
+        self.ingest.stop();
+        let handle = self.worker.lock().unwrap().take().expect("shutdown called once");
+        let (graph, state, relay) = handle.join().expect("sharded engine thread panicked");
+        let stats = self.stats();
+        ShardedReport { graph, state, stats, relay }
+    }
+}
+
+/// The sharded coordinator loop: form a global batch (identical batcher
+/// and coalescing semantics to the single-engine loop — an insert and its
+/// delete share an edge key, hence a source owner, so routing can never
+/// reorder a shard-crossing delete ahead of its insert), route it to the
+/// owning shards, run the BSP propagation, stitch, publish.
+#[allow(clippy::too_many_arguments)]
+fn sharded_engine_loop(
+    mut g: ShardedGraph,
+    mut state: AlgoState,
+    mut engine: ShardedEngine,
+    ingest: Arc<Ingest>,
+    snapshots: Arc<SnapshotCell>,
+    shared: Arc<Shared>,
+    cfg: ServiceConfig,
+) -> (ShardedGraph, AlgoState, RelayStats) {
+    let mut batcher = Batcher::new(cfg.batch_capacity, cfg.batch_deadline, cfg.symmetric);
+    let mut dels: Vec<(NodeId, NodeId)> = Vec::new();
+    let mut adds: Vec<(NodeId, NodeId, Weight)> = Vec::new();
+    let nshards = g.num_shards();
+    let mut dels_by: Vec<Vec<(NodeId, NodeId)>> = vec![Vec::new(); nshards];
+    let mut adds_by: Vec<Vec<(NodeId, NodeId, Weight)>> = vec![Vec::new(); nshards];
+    let mut governor = MergeGovernor::new(cfg.merge_policy);
+
+    while let Some(meta) = batcher.next_batch(&ingest, &shared.stop) {
+        batcher.take_into(&mut dels, &mut adds);
+
+        if cfg.algo == Algo::Tc {
+            // TC's decremental delta counting assumes deleted arcs are
+            // live (Fig. 19 runs it *before* updateCSRDel); coalescing
+            // keeps deletes whose insert was cancelled, so drop deletes
+            // of absent arcs before counting — the owner answers.
+            dels.retain(|&(u, v)| g.has_edge(u, v));
+        }
+        g.route(&dels, &adds, &mut dels_by, &mut adds_by);
+
+        match &mut state {
+            AlgoState::Sssp(st) => engine.sssp_dynamic_batch(&mut g, st, &dels_by, &adds_by),
+            AlgoState::Pr(st) => engine.pr_dynamic_batch(&mut g, st, &dels_by, &adds_by),
+            AlgoState::Tc(st) => engine.tc_dynamic_batch(&mut g, st, &dels_by, &adds_by),
+        }
+
+        // aggregate merge signal: deepest shard chain × global overflow
+        // heat, through the same governor EWMA the single-engine loop uses
+        let signal = governor.observe(g.diff_chain_len(), g.overflow_fraction());
+        if signal.merge {
+            g.merge_all();
+        }
+
+        publish_sharded(&snapshots, &g, &state);
+
+        let latency = meta.oldest.map(|o| o.elapsed().as_secs_f64()).unwrap_or(0.0);
+        {
+            let mut s = shared.stats.lock().unwrap();
+            s.batches += 1;
+            match meta.reason {
+                CloseReason::Size => s.closed_by_size += 1,
+                CloseReason::Deadline => s.closed_by_deadline += 1,
+                CloseReason::Drain => s.closed_by_drain += 1,
+            }
+            if signal.merge {
+                s.merges += 1;
+            }
+            s.batch_coalesced += meta.coalesced as u64;
+            s.overflow_fraction = signal.overflow_fraction;
+            s.chain_depth_ewma = signal.ewma_depth;
+            s.push_latency(latency);
+        }
+        ingest.complete(meta.raw_len as u64);
+    }
+    let relay = engine.relay_stats();
+    (g, state, relay)
 }
 
 #[cfg(test)]
@@ -542,6 +839,98 @@ mod tests {
             triangle::static_tc(&report.graph).triangles,
             "streamed delta counting must equal a full recount"
         );
+    }
+
+    #[test]
+    fn sharded_service_drains_and_matches_oracle_across_shards() {
+        let g0 = generators::uniform_random(200, 1000, 9, 61);
+        let stream = UpdateStream::generate_percent(&g0, 12.0, 64, 9, 63);
+        let mut want = g0.clone();
+        stream.apply_all_static(&mut want);
+        let oracle = sssp::dijkstra_oracle(&want, 0);
+        for shards in [1usize, 2, 4] {
+            let mut c = cfg(Algo::Sssp);
+            c.engine_shards = shards;
+            let svc = ShardedService::start(g0.clone(), c);
+            assert_eq!(svc.epoch(), 1, "initial static solve published");
+            for u in &stream.updates {
+                assert!(svc.submit(*u));
+            }
+            svc.drain();
+            let stats = svc.stats();
+            assert_eq!(stats.submitted, stream.len() as u64);
+            assert_eq!(stats.completed, stats.submitted);
+            let report = svc.shutdown();
+            assert_eq!(report.graph.edges_sorted(), want.edges_sorted(), "shards={shards}");
+            assert_eq!(report.sssp().unwrap().dist, oracle, "shards={shards}");
+            assert!(report.stats.batches > 0);
+            if shards > 1 {
+                assert!(report.relay.rounds > 0, "push phases must have run");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_tc_service_counts_exactly() {
+        let g0 = triangle::symmetrize(&generators::uniform_random(60, 360, 5, 67));
+        let workload = crate::coordinator::stream_workload(Algo::Tc, &g0, 15.0, 69);
+        let mut c = cfg(Algo::Tc);
+        assert!(c.symmetric);
+        c.engine_shards = 2;
+        c.batch_capacity = 8;
+        let svc = ShardedService::start(g0, c);
+        for u in workload {
+            assert!(svc.submit(u));
+        }
+        svc.drain();
+        let rep = svc.shutdown().into_service_report();
+        assert_eq!(
+            rep.tc().unwrap().triangles,
+            triangle::static_tc(&rep.graph).triangles,
+            "sharded streamed delta counting must equal a full recount"
+        );
+    }
+
+    /// A sharded reader must always see one stitched epoch: the published
+    /// table's per-shard stamps never diverge, even while shards are
+    /// mid-propagation on the next batch.
+    #[test]
+    fn sharded_snapshots_carry_uniform_stamps() {
+        let g0 = generators::uniform_random(150, 700, 9, 71);
+        let stream = UpdateStream::generate_percent(&g0, 15.0, 64, 9, 73);
+        let mut c = cfg(Algo::Sssp);
+        c.engine_shards = 3;
+        let svc = Arc::new(ShardedService::start(g0, c));
+        let stop = Arc::new(AtomicBool::new(false));
+        let reader = {
+            let svc = Arc::clone(&svc);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    svc.with_snapshot(|t| {
+                        assert_eq!(t.shard_epochs.len(), 3, "one stamp per shard");
+                        assert!(
+                            t.shard_epochs.iter().all(|&e| e == t.graph_epoch),
+                            "stitch invariant violated: {:?} vs {}",
+                            t.shard_epochs,
+                            t.graph_epoch
+                        );
+                    });
+                    reads += 1;
+                }
+                reads
+            })
+        };
+        for u in &stream.updates {
+            svc.submit(*u);
+        }
+        svc.drain();
+        stop.store(true, Ordering::Relaxed);
+        assert!(reader.join().unwrap() > 0);
+        let Ok(svc) = Arc::try_unwrap(svc) else { panic!("sole owner after reader joined") };
+        let report = svc.shutdown();
+        assert!(report.stats.batches > 0);
     }
 
     #[test]

@@ -1,0 +1,1074 @@
+//! Graph sharding across engine threads: the scale-out substrate of the
+//! sharded streaming service (ROADMAP "streaming layer scale-out").
+//!
+//! [`ShardedGraph`] splits one logical dynamic graph over N shards by
+//! **vertex ownership**: shard `r` owns the contiguous vertex block of an
+//! edge-mass-balanced [`PartitionMap`] (degree-weighted boundaries — the
+//! degree-balanced follow-up to the PR 3 partition contract) and stores
+//! exactly the edges whose *source* it owns, as a full-vertex-space
+//! [`DynGraph`] — the same owner-computes convention as the `dist`
+//! backend's MPI partitioning (§3.6: "a process stores only those edges
+//! for which the source node is owned by that process"). Because every
+//! shard keeps its own diff-CSR, batch application — including
+//! `seal_batch` — is **shard-local**: shards mutate their structures
+//! concurrently with no sharing at all.
+//!
+//! [`ShardedEngine`] runs the dynamic pipelines over the sharded graph in
+//! bulk-synchronous rounds, one OS thread per shard per round
+//! (`std::thread::scope`; the join is the superstep barrier — the same
+//! spawn-per-call model `util::threadpool` uses):
+//!
+//! * **push phases** (incremental SSSP) walk owned frontier out-edges and
+//!   emit `(dst, candidate)` relax messages bucketed by the destination's
+//!   owner — the in-process mirror of the `dist` backend's halo exchange.
+//!   Messages are exchanged *between* rounds; each shard then drains its
+//!   inbox with exclusive ownership of its distance block, so no phase
+//!   ever takes a lock or issues an atomic on the property arrays;
+//! * **pull phases** (decremental SSSP, PR sweeps, parent repair) are
+//!   owner-writes: shard `r` writes only its contiguous block
+//!   (`split_at_mut`-partitioned, safe Rust) while reading the previous
+//!   round's values and any shard's adjacency immutably. A vertex's
+//!   in-edges live with their *source* owners, so a pull over `v` chains
+//!   `in_neighbors(v)` across every shard's transpose;
+//! * **reductions** (TC wedge counts, PR convergence deltas) fold
+//!   per-shard partials in shard order, so results are deterministic for
+//!   a fixed shard count.
+//!
+//! Equivalence is pinned by `tests/stream_equivalence.rs`: SSSP and TC
+//! end-states are *bitwise* equal to the single-engine service and the
+//! offline batch pipeline across shards ∈ {1, 2, 4} (SSSP's fixed point
+//! is unique and the parent repair is a deterministic argmin; TC counts
+//! are order-independent integers), and PR is oracle-equal within the
+//! convergence tolerance (float sums reassociate across shard
+//! boundaries).
+
+use crate::algorithms::{pagerank, sssp, PrState, SsspState, TcState, INF};
+use crate::graph::partition::PartitionMap;
+use crate::graph::{DynGraph, NodeId, Weight};
+use std::collections::HashSet;
+
+/// Split `data` into per-rank mutable blocks following the partition's
+/// contiguous ownership ranges (rank order). The returned slices are
+/// disjoint, so shard threads may write their own block concurrently —
+/// owner-writes with no unsafe.
+pub(crate) fn split_blocks<'a, T>(pm: &PartitionMap, data: &'a mut [T]) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(pm.ranks);
+    let mut rest = data;
+    let mut consumed = 0usize;
+    for r in 0..pm.ranks {
+        let range = pm.owned_range(r);
+        debug_assert_eq!(range.start, consumed, "ranges contiguous in rank order");
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(range.end - consumed);
+        out.push(head);
+        rest = tail;
+        consumed = range.end;
+    }
+    debug_assert!(rest.is_empty());
+    out
+}
+
+/// One logical dynamic graph stored as N owner-computes shards.
+#[derive(Debug, Clone)]
+pub struct ShardedGraph {
+    pm: PartitionMap,
+    /// Shard `r` holds exactly the edges whose source `r` owns, over the
+    /// full vertex-id space (so per-shard diff-CSRs never translate ids).
+    shards: Vec<DynGraph>,
+    n: usize,
+}
+
+impl ShardedGraph {
+    /// Partition `g` into `shards` owner-computes shards with edge-mass
+    /// balanced block boundaries (out-degree prefix sums of the seed
+    /// graph).
+    pub fn partition(g: &DynGraph, shards: usize) -> Self {
+        let n = g.num_nodes();
+        let nshards = shards.max(1);
+        let degrees: Vec<u32> = (0..n as NodeId).map(|v| g.out_degree(v)).collect();
+        let pm = PartitionMap::edge_balanced(n, nshards, &degrees);
+        let mut buckets: Vec<Vec<(NodeId, NodeId, Weight)>> = vec![Vec::new(); nshards];
+        for (u, v, w) in g.edges_sorted() {
+            buckets[pm.owner(u)].push((u, v, w));
+        }
+        let shards = buckets
+            .into_iter()
+            .map(|edges| {
+                let mut sg = DynGraph::from_edges(n, &edges);
+                // the service owns the merge schedule; shard merges run
+                // inside their own thread (already parallel across shards)
+                sg.merge_period = 0;
+                sg
+            })
+            .collect();
+        ShardedGraph { pm, shards, n }
+    }
+
+    #[inline]
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    /// Live edge count across all shards.
+    pub fn num_edges(&self) -> usize {
+        self.shards.iter().map(|s| s.num_edges()).sum()
+    }
+
+    #[inline]
+    pub fn owner(&self, v: NodeId) -> usize {
+        self.pm.owner(v)
+    }
+
+    pub fn partition_map(&self) -> &PartitionMap {
+        &self.pm
+    }
+
+    /// Borrow one shard's graph (tests / stats).
+    pub fn shard(&self, r: usize) -> &DynGraph {
+        &self.shards[r]
+    }
+
+    /// Out-neighbors of `v` — complete, served by the owner's shard.
+    #[inline]
+    pub fn out_neighbors(&self, v: NodeId) -> impl Iterator<Item = (NodeId, Weight)> + '_ {
+        self.shards[self.owner(v)].out_neighbors(v)
+    }
+
+    /// In-neighbors of `v` — the union over every shard's transpose (a
+    /// vertex's in-edges live with their source owners).
+    #[inline]
+    pub fn in_neighbors(&self, v: NodeId) -> impl Iterator<Item = (NodeId, Weight)> + '_ {
+        self.shards.iter().flat_map(move |s| s.in_neighbors(v))
+    }
+
+    /// Live out-degree of `v` (owner-exact).
+    #[inline]
+    pub fn out_degree(&self, v: NodeId) -> u32 {
+        self.shards[self.owner(v)].out_degree(v)
+    }
+
+    /// `is_an_edge(u, v)` — one probe in the owner's shard.
+    #[inline]
+    pub fn has_edge(&self, u: NodeId, v: NodeId) -> bool {
+        self.shards[self.owner(u)].has_edge(u, v)
+    }
+
+    /// Graph epoch. Every shard applies (and seals) every batch — empty
+    /// addition sets included — so shard epochs advance in lockstep; this
+    /// is the invariant the epoch-stitched snapshot publishes.
+    pub fn epoch(&self) -> u64 {
+        let e = self.shards[0].epoch();
+        debug_assert!(
+            self.shards.iter().all(|s| s.epoch() == e),
+            "shard epochs diverged"
+        );
+        e
+    }
+
+    /// Per-shard graph epochs (the stamps the stitched snapshot carries).
+    pub fn shard_epochs(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.epoch()).collect()
+    }
+
+    /// Route flat deletion/addition buffers into per-shard buffers by the
+    /// *source* owner (the shard that stores the edge). The per-shard
+    /// buffers are caller-owned and reused across batches.
+    pub fn route(
+        &self,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+        dels_by: &mut [Vec<(NodeId, NodeId)>],
+        adds_by: &mut [Vec<(NodeId, NodeId, Weight)>],
+    ) {
+        debug_assert_eq!(dels_by.len(), self.num_shards());
+        debug_assert_eq!(adds_by.len(), self.num_shards());
+        for b in dels_by.iter_mut() {
+            b.clear();
+        }
+        for b in adds_by.iter_mut() {
+            b.clear();
+        }
+        for &(u, v) in dels {
+            dels_by[self.owner(u)].push((u, v));
+        }
+        for &(u, v, w) in adds {
+            adds_by[self.owner(u)].push((u, v, w));
+        }
+    }
+
+    /// `updateCSRDel`, owner-routed: every shard applies its own deletion
+    /// buffer concurrently (shard-local structures, no sharing).
+    pub fn apply_deletions_routed(&mut self, dels_by: &[Vec<(NodeId, NodeId)>]) {
+        std::thread::scope(|sc| {
+            for (sg, dels) in self.shards.iter_mut().zip(dels_by) {
+                sc.spawn(move || {
+                    sg.apply_deletions(dels);
+                });
+            }
+        });
+    }
+
+    /// `updateCSRAdd`, owner-routed. Every shard calls `apply_additions`
+    /// even with an empty buffer: the seal is shard-local and the epoch
+    /// bump keeps all shard epochs in lockstep (the stitch invariant).
+    pub fn apply_additions_routed(&mut self, adds_by: &[Vec<(NodeId, NodeId, Weight)>]) {
+        std::thread::scope(|sc| {
+            for (sg, adds) in self.shards.iter_mut().zip(adds_by) {
+                sc.spawn(move || {
+                    sg.apply_additions(adds);
+                });
+            }
+        });
+    }
+
+    /// Aggregate overflow heat: flagged sources / n. Shard bitmaps flag
+    /// only owned sources, so the per-shard counts are disjoint and sum
+    /// to the global count.
+    pub fn overflow_fraction(&self) -> f64 {
+        let touched: usize = self.shards.iter().map(|s| s.overflow_touched()).sum();
+        touched as f64 / self.n.max(1) as f64
+    }
+
+    /// Deepest per-shard diff chain — the read-cost signal a merge
+    /// decision keys on (a reader pays the chain of the owner it hits).
+    pub fn diff_chain_len(&self) -> usize {
+        self.shards.iter().map(|s| s.diff_chain_len()).max().unwrap_or(0)
+    }
+
+    /// Live edges outside the base CSRs, across all shards.
+    pub fn diff_live_edges(&self) -> usize {
+        self.shards.iter().map(|s| s.diff_live_edges()).sum()
+    }
+
+    /// Compact every shard's diff chain, shards in parallel (each merge is
+    /// serial *within* its shard thread — shard-local by construction).
+    pub fn merge_all(&mut self) {
+        std::thread::scope(|sc| {
+            for sg in self.shards.iter_mut() {
+                sc.spawn(move || {
+                    sg.merge();
+                });
+            }
+        });
+    }
+
+    /// All live edges, sorted (tests / oracles / report conversion).
+    pub fn edges_sorted(&self) -> Vec<(NodeId, NodeId, Weight)> {
+        let mut out = Vec::new();
+        for s in &self.shards {
+            out.extend(s.edges_sorted());
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Collapse the shards back into one `DynGraph` (report conversion —
+    /// the diff/tombstone structure is not preserved, the edge set is).
+    pub fn into_dyn_graph(self) -> DynGraph {
+        let n = self.n;
+        let edges = self.edges_sorted();
+        DynGraph::from_edges(n, &edges)
+    }
+}
+
+/// Relay traffic counters (cumulative per engine): messages that stayed on
+/// the emitting shard vs messages that crossed a shard boundary, and BSP
+/// rounds executed. Benches and tests read this to confirm the frontier
+/// actually spills across shards.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RelayStats {
+    pub rounds: u64,
+    pub local_msgs: u64,
+    pub cross_msgs: u64,
+}
+
+/// Persistent per-engine work buffers, grown once and reused across
+/// batches — the sharded mirror of the single engine's `EngineScratch`
+/// contract, so the steady-state batch loop doesn't re-allocate O(n)
+/// buffers per batch. Contents are garbage between uses; every consumer
+/// fully writes what it later reads.
+#[derive(Debug, Default)]
+struct ShardScratch {
+    /// SP-tree child index (head pointer per vertex).
+    child_head: Vec<i64>,
+    /// SP-tree child index (next-sibling list).
+    child_next: Vec<i64>,
+    /// Decremental pull-phase Jacobi buffer.
+    next_dist: Vec<i64>,
+    /// Restricted PR-sweep Jacobi buffer.
+    next_rank: Vec<f64>,
+}
+
+/// Bulk-synchronous multi-shard engine: one thread per shard per phase,
+/// message relay between push rounds, owner-writes pulls. See the module
+/// docs for the execution model and the determinism argument.
+#[derive(Debug, Default)]
+pub struct ShardedEngine {
+    stats: RelayStats,
+    scratch: ShardScratch,
+}
+
+impl ShardedEngine {
+    pub fn new() -> Self {
+        ShardedEngine::default()
+    }
+
+    /// Cumulative relay counters since engine creation.
+    pub fn relay_stats(&self) -> RelayStats {
+        self.stats
+    }
+
+    // ------------------------------------------------------------ SSSP
+
+    /// Static SSSP: relay push fixed point from the source, then the
+    /// deterministic owner-writes parent repair.
+    pub fn sssp_static(&mut self, g: &ShardedGraph, source: NodeId) -> SsspState {
+        let n = g.num_nodes();
+        let mut st = SsspState::new(n, source);
+        let mut seed = vec![false; n];
+        seed[source as usize] = true;
+        self.relax_relay(g, &mut st.dist, &seed);
+        self.repair_parents(g, &mut st);
+        st
+    }
+
+    /// One dynamic batch through the sharded pipeline: OnDelete →
+    /// updateCSRDel (shard-parallel) → decremental cascade + BSP pull →
+    /// OnAdd → updateCSRAdd (shard-parallel, shard-local seals) →
+    /// incremental relay push → parent repair. Deletion/addition buffers
+    /// arrive pre-routed by source owner (see [`ShardedGraph::route`]).
+    pub fn sssp_dynamic_batch(
+        &mut self,
+        g: &mut ShardedGraph,
+        st: &mut SsspState,
+        dels_by: &[Vec<(NodeId, NodeId)>],
+        adds_by: &[Vec<(NodeId, NodeId, Weight)>],
+    ) {
+        let n = g.num_nodes();
+
+        // OnDelete preprocessing (serial: batch-sized, not graph-sized).
+        let mut modified = sssp::on_delete_iter(st, dels_by.iter().flatten().copied());
+        g.apply_deletions_routed(dels_by);
+
+        // Decremental phase 1: cascade invalidation down the former SP
+        // tree via a child index (serial — the single-engine path is
+        // serial here too; the tree lives in global state, not the graph).
+        let mut affected: Vec<NodeId> =
+            (0..n).filter(|&v| modified[v]).map(|v| v as NodeId).collect();
+        if !affected.is_empty() {
+            let ShardScratch { child_head, child_next, .. } = &mut self.scratch;
+            child_head.resize(n, -1);
+            child_next.resize(n, -1);
+            child_head[..n].fill(-1);
+            child_next[..n].fill(-1);
+            for v in 0..n {
+                let p = st.parent[v];
+                if p > -1 {
+                    child_next[v] = child_head[p as usize];
+                    child_head[p as usize] = v as i64;
+                }
+            }
+            let mut queue = affected.clone();
+            while let Some(v) = queue.pop() {
+                let mut c = child_head[v as usize];
+                while c > -1 {
+                    let cv = c as usize;
+                    if !modified[cv] {
+                        modified[cv] = true;
+                        st.dist[cv] = INF;
+                        st.parent[cv] = -1;
+                        affected.push(cv as NodeId);
+                        queue.push(cv as NodeId);
+                    }
+                    c = child_next[cv];
+                }
+            }
+        }
+
+        // Decremental phase 2: BSP Jacobi pull over the affected set.
+        // Owner-writes into the next-distance blocks; reads of the stable
+        // previous round cross shards freely (shared-memory "window
+        // reads"). Identical arithmetic to the single-engine pull — mins
+        // only, no float sums — so per-round values are bitwise equal.
+        if !affected.is_empty() {
+            let pm = g.partition_map();
+            let mut affected_by: Vec<Vec<NodeId>> = vec![Vec::new(); g.num_shards()];
+            for &v in &affected {
+                affected_by[g.owner(v)].push(v);
+            }
+            // Jacobi buffer from scratch: only affected slots are written
+            // (every round) and read (the copy), so stale content is fine.
+            let next_dist = &mut self.scratch.next_dist;
+            next_dist.resize(n, 0);
+            loop {
+                let changed = {
+                    let dist_ro: &[i64] = &st.dist;
+                    let gr: &ShardedGraph = g;
+                    let blocks = split_blocks(pm, &mut next_dist[..n]);
+                    let mut any = false;
+                    std::thread::scope(|sc| {
+                        let mut handles = Vec::new();
+                        for (r, block) in blocks.into_iter().enumerate() {
+                            let aff = &affected_by[r];
+                            let lo = pm.owned_range(r).start;
+                            handles.push(sc.spawn(move || {
+                                let mut ch = false;
+                                for &v in aff {
+                                    let mut best = dist_ro[v as usize];
+                                    for (u, w) in gr.in_neighbors(v) {
+                                        let du = dist_ro[u as usize];
+                                        if du < INF && du + (w as i64) < best {
+                                            best = du + w as i64;
+                                        }
+                                    }
+                                    block[v as usize - lo] = best;
+                                    if best < dist_ro[v as usize] {
+                                        ch = true;
+                                    }
+                                }
+                                ch
+                            }));
+                        }
+                        for h in handles {
+                            any |= h.join().expect("shard pull thread panicked");
+                        }
+                    });
+                    any
+                };
+                if !changed {
+                    break;
+                }
+                for &v in &affected {
+                    st.dist[v as usize] = next_dist[v as usize];
+                }
+            }
+        }
+
+        // OnAdd + shard-local updateCSRAdd + incremental relay push.
+        let seed = sssp::on_add_iter(st, adds_by.iter().flatten().copied());
+        g.apply_additions_routed(adds_by);
+        self.relax_relay(g, &mut st.dist, &seed);
+        self.repair_parents(g, st);
+    }
+
+    /// BSP push relaxation with the cross-shard relay — the halo
+    /// exchange. Each round has two barrier-separated phases:
+    ///
+    /// * **scatter**: shard `r` walks its owned frontier's out-edges
+    ///   (read-only on `dist`) and emits `(dst, candidate)` messages into
+    ///   per-destination-owner outboxes;
+    /// * **gather**: shard `r` — now exclusive owner of its distance
+    ///   block — drains every sender's messages addressed to it, applies
+    ///   the min, and collects the vertices it lowered as its next
+    ///   frontier (sorted + dedup'd, so rounds are fully deterministic).
+    ///
+    /// `min` is commutative, so message order never matters; the fixed
+    /// point is the unique shortest-distance solution, which is why the
+    /// sharded end-state is bitwise equal to the single-engine one.
+    fn relax_relay(&mut self, g: &ShardedGraph, dist: &mut [i64], seed: &[bool]) {
+        let nshards = g.num_shards();
+        let pm = g.partition_map();
+        let mut frontiers: Vec<Vec<NodeId>> = (0..nshards)
+            .map(|r| pm.owned_range(r).filter(|&v| seed[v]).map(|v| v as NodeId).collect())
+            .collect();
+        while frontiers.iter().any(|f| !f.is_empty()) {
+            self.stats.rounds += 1;
+            // scatter
+            let dist_ro: &[i64] = dist;
+            let outboxes: Vec<Vec<Vec<(NodeId, i64)>>> = std::thread::scope(|sc| {
+                let mut handles = Vec::new();
+                for frontier in &frontiers {
+                    handles.push(sc.spawn(move || {
+                        let mut out: Vec<Vec<(NodeId, i64)>> = vec![Vec::new(); nshards];
+                        for &v in frontier {
+                            let dv = dist_ro[v as usize];
+                            if dv >= INF {
+                                continue;
+                            }
+                            for (nbr, w) in g.out_neighbors(v) {
+                                let alt = dv + w as i64;
+                                // read-only prune; the owner re-checks
+                                // against its authoritative block
+                                if alt < dist_ro[nbr as usize] {
+                                    out[g.owner(nbr)].push((nbr, alt));
+                                }
+                            }
+                        }
+                        out
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard scatter thread panicked"))
+                    .collect()
+            });
+            for (sender, boxes) in outboxes.iter().enumerate() {
+                for (dest, msgs) in boxes.iter().enumerate() {
+                    if dest == sender {
+                        self.stats.local_msgs += msgs.len() as u64;
+                    } else {
+                        self.stats.cross_msgs += msgs.len() as u64;
+                    }
+                }
+            }
+            // gather
+            let blocks = split_blocks(pm, dist);
+            frontiers = std::thread::scope(|sc| {
+                let mut handles = Vec::new();
+                for (r, block) in blocks.into_iter().enumerate() {
+                    let lo = pm.owned_range(r).start;
+                    let inbox: Vec<&[(NodeId, i64)]> =
+                        outboxes.iter().map(|ob| ob[r].as_slice()).collect();
+                    handles.push(sc.spawn(move || {
+                        let mut lowered = Vec::new();
+                        for msgs in inbox {
+                            for &(v, alt) in msgs {
+                                let slot = &mut block[v as usize - lo];
+                                if alt < *slot {
+                                    *slot = alt;
+                                    lowered.push(v);
+                                }
+                            }
+                        }
+                        lowered.sort_unstable();
+                        lowered.dedup();
+                        lowered
+                    }));
+                }
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("shard gather thread panicked"))
+                    .collect()
+            });
+        }
+    }
+
+    /// Deterministic parent repair, owner-writes: shard `r` recomputes
+    /// `parent[v] = argmin_u (dist[u] + w(u,v) == dist[v], smallest u)`
+    /// for its owned block, pulling in-edges from every shard. Bitwise
+    /// identical to the single-engine repair (min over a set).
+    fn repair_parents(&mut self, g: &ShardedGraph, st: &mut SsspState) {
+        let pm = g.partition_map();
+        let source = st.source;
+        let dist_ro: &[i64] = &st.dist;
+        let blocks = split_blocks(pm, &mut st.parent);
+        std::thread::scope(|sc| {
+            for (r, block) in blocks.into_iter().enumerate() {
+                let lo = pm.owned_range(r).start;
+                sc.spawn(move || {
+                    for (i, slot) in block.iter_mut().enumerate() {
+                        let v = (lo + i) as NodeId;
+                        let mut best = -1i64;
+                        if v != source && dist_ro[v as usize] < INF {
+                            for (u, w) in g.in_neighbors(v) {
+                                let du = dist_ro[u as usize];
+                                if du < INF && du + w as i64 == dist_ro[v as usize] {
+                                    let cand = u as i64;
+                                    if best == -1 || cand < best {
+                                        best = cand;
+                                    }
+                                }
+                            }
+                        }
+                        *slot = best;
+                    }
+                });
+            }
+        });
+    }
+
+    // ------------------------------------------------------------ PR
+
+    /// Static PageRank: BSP Jacobi — each round, shard `r` pulls its
+    /// owned block from the stable previous ranks and accumulates its
+    /// convergence delta; deltas fold in shard order (deterministic for a
+    /// fixed shard count; float reassociation keeps cross-shard-count
+    /// equality at tolerance, not bitwise).
+    pub fn pr_static(&mut self, g: &ShardedGraph, st: &mut PrState) -> usize {
+        let n = g.num_nodes();
+        let nf = n as f64;
+        st.rank.clear();
+        st.rank.resize(n, 1.0 / nf);
+        let mut next = vec![0.0f64; n];
+        let pm = g.partition_map();
+        let mut iters = 0;
+        loop {
+            let diffs: Vec<f64> = {
+                let rank_ro: &[f64] = &st.rank;
+                let delta = st.delta;
+                let blocks = split_blocks(pm, &mut next);
+                std::thread::scope(|sc| {
+                    let mut handles = Vec::new();
+                    for (r, block) in blocks.into_iter().enumerate() {
+                        let lo = pm.owned_range(r).start;
+                        handles.push(sc.spawn(move || {
+                            let mut dacc = 0.0;
+                            for (i, slot) in block.iter_mut().enumerate() {
+                                let v = (lo + i) as NodeId;
+                                let mut sum = 0.0;
+                                for (nbr, _) in g.in_neighbors(v) {
+                                    let d = g.out_degree(nbr);
+                                    if d > 0 {
+                                        sum += rank_ro[nbr as usize] / d as f64;
+                                    }
+                                }
+                                let val = (1.0 - delta) / nf + delta * sum;
+                                dacc += (val - rank_ro[v as usize]).abs();
+                                *slot = val;
+                            }
+                            dacc
+                        }));
+                    }
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("shard pr thread panicked"))
+                        .collect()
+                })
+            };
+            let diff: f64 = diffs.iter().sum();
+            std::mem::swap(&mut st.rank, &mut next);
+            iters += 1;
+            if diff <= st.beta || iters >= st.max_iter {
+                return iters;
+            }
+        }
+    }
+
+    /// One dynamic PR batch: flag → BFS closure → updateCSRDel →
+    /// restricted sweeps, then the same for additions (Fig. 20 order, the
+    /// closure computed on the pre-update graph exactly like the
+    /// single-engine path).
+    pub fn pr_dynamic_batch(
+        &mut self,
+        g: &mut ShardedGraph,
+        st: &mut PrState,
+        dels_by: &[Vec<(NodeId, NodeId)>],
+        adds_by: &[Vec<(NodeId, NodeId, Weight)>],
+    ) {
+        let n = g.num_nodes();
+
+        let mut modified = vec![false; n];
+        for &(_, v) in dels_by.iter().flatten() {
+            modified[v as usize] = true;
+        }
+        propagate_flags(g, &mut modified);
+        g.apply_deletions_routed(dels_by);
+        self.recompute_flagged(g, st, &modified);
+
+        let mut modified_add = vec![false; n];
+        for &(_, v, _) in adds_by.iter().flatten() {
+            modified_add[v as usize] = true;
+        }
+        propagate_flags(g, &mut modified_add);
+        g.apply_additions_routed(adds_by);
+        self.recompute_flagged(g, st, &modified_add);
+    }
+
+    /// Restricted Jacobi sweeps over the flagged set (the dynamic-PR
+    /// propagate body), owner-writes like [`Self::pr_static`].
+    fn recompute_flagged(&mut self, g: &ShardedGraph, st: &mut PrState, flags: &[bool]) -> usize {
+        let n = g.num_nodes();
+        let nf = n as f64;
+        let pm = g.partition_map();
+        let mut active_by: Vec<Vec<NodeId>> = vec![Vec::new(); g.num_shards()];
+        let mut active: Vec<NodeId> = Vec::new();
+        for v in 0..n as NodeId {
+            if flags[v as usize] {
+                active_by[g.owner(v)].push(v);
+                active.push(v);
+            }
+        }
+        if active.is_empty() {
+            return 0;
+        }
+        // Jacobi buffer from scratch: only active slots are written (every
+        // round) and read (the copy), so stale content is fine.
+        let next = &mut self.scratch.next_rank;
+        next.resize(n, 0.0);
+        let mut iters = 0;
+        loop {
+            let diffs: Vec<f64> = {
+                let rank_ro: &[f64] = &st.rank;
+                let delta = st.delta;
+                let blocks = split_blocks(pm, &mut next[..n]);
+                std::thread::scope(|sc| {
+                    let mut handles = Vec::new();
+                    for (r, block) in blocks.into_iter().enumerate() {
+                        let act = &active_by[r];
+                        let lo = pm.owned_range(r).start;
+                        handles.push(sc.spawn(move || {
+                            let mut dacc = 0.0;
+                            for &v in act {
+                                let mut sum = 0.0;
+                                for (nbr, _) in g.in_neighbors(v) {
+                                    let d = g.out_degree(nbr);
+                                    if d > 0 {
+                                        sum += rank_ro[nbr as usize] / d as f64;
+                                    }
+                                }
+                                let val = (1.0 - delta) / nf + delta * sum;
+                                dacc += (val - rank_ro[v as usize]).abs();
+                                block[v as usize - lo] = val;
+                            }
+                            dacc
+                        }));
+                    }
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("shard pr thread panicked"))
+                        .collect()
+                })
+            };
+            let diff: f64 = diffs.iter().sum();
+            for &v in &active {
+                st.rank[v as usize] = next[v as usize];
+            }
+            iters += 1;
+            if diff <= st.beta || iters >= st.max_iter {
+                return iters;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ TC
+
+    /// Static TC: each shard counts the wedges of its owned vertices
+    /// (membership probes cross shards through the owner), partials sum
+    /// in shard order — integer counts, bitwise equal to single-engine.
+    pub fn tc_static(&mut self, g: &ShardedGraph) -> TcState {
+        let pm = g.partition_map();
+        let counts: Vec<i64> = std::thread::scope(|sc| {
+            let mut handles = Vec::new();
+            for r in 0..g.num_shards() {
+                let range = pm.owned_range(r);
+                handles.push(sc.spawn(move || {
+                    let mut local = 0i64;
+                    for v in range {
+                        let v = v as NodeId;
+                        for (u, _) in g.out_neighbors(v) {
+                            if u >= v {
+                                continue;
+                            }
+                            for (w, _) in g.out_neighbors(v) {
+                                if w <= v {
+                                    continue;
+                                }
+                                if g.has_edge(u, w) {
+                                    local += 1;
+                                }
+                            }
+                        }
+                    }
+                    local
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard tc thread panicked"))
+                .collect()
+        });
+        TcState { triangles: counts.iter().sum() }
+    }
+
+    /// Dynamic TC batch (Fig. 19 order): delta-count deletions while the
+    /// graph still holds them, apply both update kinds, delta-count the
+    /// additions. Arc lists arrive pre-routed by `v1`'s owner, which is
+    /// exactly the shard that can enumerate `v1`'s adjacency locally.
+    pub fn tc_dynamic_batch(
+        &mut self,
+        g: &mut ShardedGraph,
+        st: &mut TcState,
+        dels_by: &[Vec<(NodeId, NodeId)>],
+        adds_by: &[Vec<(NodeId, NodeId, Weight)>],
+    ) {
+        let del_set: HashSet<(NodeId, NodeId)> =
+            dels_by.iter().flatten().copied().collect();
+        st.triangles -= self.delta_count(g, dels_by, &del_set);
+        g.apply_deletions_routed(dels_by);
+        g.apply_additions_routed(adds_by);
+        let add_arcs_by: Vec<Vec<(NodeId, NodeId)>> = adds_by
+            .iter()
+            .map(|adds| adds.iter().map(|&(u, v, _)| (u, v)).collect())
+            .collect();
+        let add_set: HashSet<(NodeId, NodeId)> =
+            add_arcs_by.iter().flatten().copied().collect();
+        st.triangles += self.delta_count(g, &add_arcs_by, &add_set);
+    }
+
+    /// Sharded delta counting: per-shard (c1, c2, c3) partials over the
+    /// shard's own arcs, folded globally *before* the 1/2, 1/4, 1/6
+    /// multiplicity division (the division only distributes over the
+    /// global sums).
+    fn delta_count(
+        &self,
+        g: &ShardedGraph,
+        arcs_by: &[Vec<(NodeId, NodeId)>],
+        modified: &HashSet<(NodeId, NodeId)>,
+    ) -> i64 {
+        let is_mod =
+            |a: NodeId, b: NodeId| modified.contains(&(a, b)) || modified.contains(&(b, a));
+        let partials: Vec<(i64, i64, i64)> = std::thread::scope(|sc| {
+            let mut handles = Vec::new();
+            for arcs in arcs_by {
+                let is_mod = &is_mod;
+                handles.push(sc.spawn(move || {
+                    let (mut c1, mut c2, mut c3) = (0i64, 0i64, 0i64);
+                    for &(v1, v2) in arcs {
+                        if v1 == v2 {
+                            continue;
+                        }
+                        for (v3, _) in g.out_neighbors(v1) {
+                            if v3 == v1 || v3 == v2 {
+                                continue;
+                            }
+                            if !g.has_edge(v2, v3) && !g.has_edge(v3, v2) {
+                                continue;
+                            }
+                            let mut k = 1;
+                            if is_mod(v1, v3) {
+                                k += 1;
+                            }
+                            if is_mod(v2, v3) {
+                                k += 1;
+                            }
+                            match k {
+                                1 => c1 += 1,
+                                2 => c2 += 1,
+                                _ => c3 += 1,
+                            }
+                        }
+                    }
+                    (c1, c2, c3)
+                }));
+            }
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard tc thread panicked"))
+                .collect()
+        });
+        let (c1, c2, c3) = partials
+            .iter()
+            .fold((0i64, 0i64, 0i64), |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2));
+        c1 / 2 + c2 / 4 + c3 / 6
+    }
+}
+
+/// BFS closure of the flagged set along out-edges over the sharded graph
+/// (`propagateNodeFlags`). Serial like the reference — the flag array is
+/// global state; adjacency reads go through the owners. One shared body
+/// with the single-graph flavor ([`pagerank::propagate_flags_with`]), so
+/// the two can never drift apart semantically.
+pub fn propagate_flags(g: &ShardedGraph, flags: &mut [bool]) -> usize {
+    pagerank::propagate_flags_with(g.num_nodes(), flags, |v| {
+        g.out_neighbors(v).map(|(nbr, _)| nbr)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{pagerank, triangle};
+    use crate::backend::cpu::CpuEngine;
+    use crate::graph::{generators, UpdateStream};
+    use crate::util::threadpool::Sched;
+
+    fn route_stream(
+        g: &ShardedGraph,
+        stream: &UpdateStream,
+    ) -> Vec<(Vec<Vec<(NodeId, NodeId)>>, Vec<Vec<(NodeId, NodeId, Weight)>>)> {
+        let s = g.num_shards();
+        let mut out = Vec::new();
+        for b in stream.batches() {
+            let dels: Vec<_> = b.deletions().collect();
+            let adds: Vec<_> = b.additions().collect();
+            let mut dels_by = vec![Vec::new(); s];
+            let mut adds_by = vec![Vec::new(); s];
+            g.route(&dels, &adds, &mut dels_by, &mut adds_by);
+            out.push((dels_by, adds_by));
+        }
+        out
+    }
+
+    #[test]
+    fn partition_covers_edges_and_owner_serves_adjacency() {
+        let g = generators::rmat(8, 1500, 0.57, 0.19, 0.19, 5);
+        for shards in [1usize, 2, 4] {
+            let sg = ShardedGraph::partition(&g, shards);
+            assert_eq!(sg.num_shards(), shards);
+            assert_eq!(sg.num_edges(), g.num_edges());
+            assert_eq!(sg.edges_sorted(), g.edges_sorted());
+            for v in 0..g.num_nodes() as NodeId {
+                assert_eq!(sg.out_degree(v), g.out_degree(v), "out_degree({v})");
+                let mut got: Vec<_> = sg.out_neighbors(v).collect();
+                let mut want: Vec<_> = g.out_neighbors(v).collect();
+                got.sort_unstable();
+                want.sort_unstable();
+                assert_eq!(got, want, "out_neighbors({v})");
+                let mut gin: Vec<_> = sg.in_neighbors(v).collect();
+                let mut win: Vec<_> = g.in_neighbors(v).collect();
+                gin.sort_unstable();
+                win.sort_unstable();
+                assert_eq!(gin, win, "in_neighbors({v})");
+            }
+        }
+    }
+
+    #[test]
+    fn route_sends_every_update_to_the_source_owner() {
+        let g0 = generators::uniform_random(120, 700, 9, 31);
+        let sg = ShardedGraph::partition(&g0, 4);
+        let stream = UpdateStream::generate_percent(&g0, 15.0, 32, 9, 33);
+        let dels: Vec<_> = stream.batches().next().unwrap().deletions().collect();
+        let adds: Vec<_> = stream.batches().next().unwrap().additions().collect();
+        let mut dels_by = vec![Vec::new(); 4];
+        let mut adds_by = vec![Vec::new(); 4];
+        sg.route(&dels, &adds, &mut dels_by, &mut adds_by);
+        assert_eq!(dels_by.iter().map(|b| b.len()).sum::<usize>(), dels.len());
+        assert_eq!(adds_by.iter().map(|b| b.len()).sum::<usize>(), adds.len());
+        for (r, b) in dels_by.iter().enumerate() {
+            for &(u, _) in b {
+                assert_eq!(sg.owner(u), r, "deletion routed off-owner");
+            }
+        }
+        for (r, b) in adds_by.iter().enumerate() {
+            for &(u, _, _) in b {
+                assert_eq!(sg.owner(u), r, "addition routed off-owner");
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_static_sssp_bitwise_matches_cpu_engine() {
+        let g = generators::rmat(8, 1200, 0.57, 0.19, 0.19, 3);
+        let cpu = CpuEngine::new(2, Sched::Dynamic { chunk: 64 });
+        let want = cpu.sssp_static(&g, 0);
+        for shards in [1usize, 2, 4] {
+            let sg = ShardedGraph::partition(&g, shards);
+            let mut e = ShardedEngine::new();
+            let st = e.sssp_static(&sg, 0);
+            assert_eq!(st.dist, want.dist, "shards={shards}");
+            assert_eq!(st.parent, want.parent, "shards={shards} parents");
+        }
+    }
+
+    #[test]
+    fn sharded_dynamic_sssp_bitwise_matches_single_engine() {
+        let g0 = generators::uniform_random(200, 1000, 9, 11);
+        let stream = UpdateStream::generate_percent(&g0, 12.0, 32, 9, 13);
+        // single-engine reference
+        let cpu = CpuEngine::new(2, Sched::Dynamic { chunk: 64 });
+        let mut gref = g0.clone();
+        let mut want = cpu.sssp_static(&gref, 0);
+        for b in stream.batches() {
+            cpu.sssp_dynamic_batch(&mut gref, &mut want, &b);
+        }
+        for shards in [1usize, 2, 4] {
+            let mut sg = ShardedGraph::partition(&g0, shards);
+            let mut e = ShardedEngine::new();
+            let mut st = e.sssp_static(&sg, 0);
+            for (dels_by, adds_by) in route_stream(&sg, &stream) {
+                e.sssp_dynamic_batch(&mut sg, &mut st, &dels_by, &adds_by);
+            }
+            assert_eq!(sg.edges_sorted(), gref.edges_sorted(), "shards={shards}");
+            assert_eq!(st.dist, want.dist, "shards={shards} dist");
+            assert_eq!(st.parent, want.parent, "shards={shards} parent");
+            assert_eq!(st.dist, sssp::dijkstra_oracle(&gref, 0), "oracle");
+            if shards > 1 {
+                assert!(
+                    e.relay_stats().cross_msgs > 0,
+                    "frontier never spilled across shards"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_pr_tracks_reference_fixed_point() {
+        let g0 = generators::rmat(7, 600, 0.57, 0.19, 0.19, 7);
+        let n = g0.num_nodes();
+        let stream = UpdateStream::generate_percent(&g0, 10.0, 16, 9, 9);
+        let mut gref = g0.clone();
+        let mut truth = PrState::new(n, 1e-10, 0.85, 300);
+        pagerank::static_pagerank(&gref, &mut truth);
+        for b in stream.batches() {
+            pagerank::dynamic_batch(&mut gref, &mut truth, &b);
+        }
+        for shards in [1usize, 2, 4] {
+            let mut sg = ShardedGraph::partition(&g0, shards);
+            let mut e = ShardedEngine::new();
+            let mut st = PrState::new(n, 1e-10, 0.85, 300);
+            e.pr_static(&sg, &mut st);
+            for (dels_by, adds_by) in route_stream(&sg, &stream) {
+                e.pr_dynamic_batch(&mut sg, &mut st, &dels_by, &adds_by);
+            }
+            let l1: f64 =
+                st.rank.iter().zip(&truth.rank).map(|(a, b)| (a - b).abs()).sum();
+            assert!(l1 < 1e-7, "shards={shards} diverged from reference: l1={l1}");
+        }
+    }
+
+    #[test]
+    fn sharded_tc_counts_bitwise() {
+        let g0 = triangle::symmetrize(&generators::uniform_random(60, 360, 5, 17));
+        let (dels, adds) = triangle::symmetric_updates(&g0, 12.0, 6, 19);
+        for shards in [1usize, 2, 4] {
+            let mut sg = ShardedGraph::partition(&g0, shards);
+            let mut e = ShardedEngine::new();
+            let mut st = e.tc_static(&sg);
+            assert_eq!(st.triangles, triangle::static_tc(&g0).triangles, "static");
+            for (d, a) in dels.iter().zip(&adds) {
+                let mut dels_by = vec![Vec::new(); shards];
+                let mut adds_by = vec![Vec::new(); shards];
+                sg.route(d, a, &mut dels_by, &mut adds_by);
+                e.tc_dynamic_batch(&mut sg, &mut st, &dels_by, &adds_by);
+            }
+            let end = sg.clone().into_dyn_graph();
+            assert_eq!(
+                st.triangles,
+                triangle::static_tc(&end).triangles,
+                "shards={shards}: delta counting must equal a full recount"
+            );
+        }
+    }
+
+    #[test]
+    fn shard_epochs_stay_in_lockstep() {
+        let g0 = generators::uniform_random(100, 500, 9, 23);
+        let stream = UpdateStream::generate_percent(&g0, 10.0, 16, 9, 25);
+        let mut sg = ShardedGraph::partition(&g0, 3);
+        let mut e = ShardedEngine::new();
+        let mut st = e.sssp_static(&sg, 0);
+        for (i, (dels_by, adds_by)) in route_stream(&sg, &stream).into_iter().enumerate() {
+            e.sssp_dynamic_batch(&mut sg, &mut st, &dels_by, &adds_by);
+            let epochs = sg.shard_epochs();
+            assert!(
+                epochs.iter().all(|&ep| ep == epochs[0]),
+                "epochs diverged after batch {i}: {epochs:?}"
+            );
+            assert_eq!(sg.epoch(), (i + 1) as u64, "one sealed epoch per batch");
+        }
+    }
+
+    #[test]
+    fn merge_all_preserves_graph_and_resets_signals() {
+        let g0 = generators::uniform_random(150, 900, 9, 41);
+        let stream = UpdateStream::generate_percent(&g0, 25.0, 64, 9, 43);
+        let mut sg = ShardedGraph::partition(&g0, 4);
+        let mut e = ShardedEngine::new();
+        let mut st = e.sssp_static(&sg, 0);
+        for (dels_by, adds_by) in route_stream(&sg, &stream) {
+            e.sssp_dynamic_batch(&mut sg, &mut st, &dels_by, &adds_by);
+        }
+        assert!(sg.diff_live_edges() > 0, "churn must dirty some chain");
+        let before = sg.edges_sorted();
+        sg.merge_all();
+        assert_eq!(sg.edges_sorted(), before);
+        assert_eq!(sg.diff_chain_len(), 0);
+        assert_eq!(sg.overflow_fraction(), 0.0);
+        assert_eq!(sg.diff_live_edges(), 0);
+    }
+}

@@ -36,6 +36,13 @@ pub struct PropTable {
     /// `DynGraph::epoch()` at publish time — which graph version these
     /// properties were computed against.
     pub graph_epoch: u64,
+    /// Per-shard graph epochs for sharded services (empty for the
+    /// single-engine service). The stitch invariant — every shard at the
+    /// same epoch in every published view — is what the sharded service's
+    /// all-or-nothing publication guarantees; the epoch-stitch test
+    /// hammers snapshots during propagation and asserts these stamps
+    /// never diverge.
+    pub shard_epochs: Vec<u64>,
     pub num_nodes: usize,
     pub num_edges: usize,
     /// SSSP distances (empty unless the service runs SSSP).

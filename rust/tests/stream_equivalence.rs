@@ -2,15 +2,29 @@
 //! after draining a multi-producer update stream must equal the
 //! coordinator's offline batch-mode result, and same-edge coalescing must
 //! be observationally a no-op.
+//!
+//! The sharded half is the **cross-shard equivalence matrix** pinning the
+//! `ShardedService`: for shards ∈ {1, 2, 4}, sharded ≡ single-engine ≡
+//! offline batch mode — *bitwise* for SSSP (unique fixed point +
+//! deterministic parent repair) and TC (order-free integer counts),
+//! oracle-equal for PR (float sums reassociate across shard boundaries) —
+//! plus the cross-shard coalescing routing property and the epoch-stitch
+//! reader test.
 
 use starplat_dyn::algorithms::{sssp, triangle, PrState};
 use starplat_dyn::backend::cpu::CpuEngine;
 use starplat_dyn::coordinator::{run_stream_cell, stream_workload, Algo};
 use starplat_dyn::graph::{generators, DynGraph, NodeId, Update, UpdateKind, UpdateStream};
-use starplat_dyn::stream::{GraphService, MergePolicy, ServiceConfig};
+use starplat_dyn::stream::{
+    GraphService, MergePolicy, ServiceConfig, ShardedGraph, ShardedService,
+};
 use starplat_dyn::util::propcheck::forall_checks;
 use starplat_dyn::util::threadpool::Sched;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
+
+const SHARD_MATRIX: [usize; 3] = [1, 2, 4];
 
 /// Deterministic single-lane config: one producer + one shard + one engine
 /// thread makes the service batching bit-identical to offline
@@ -284,4 +298,283 @@ fn prop_coalesced_insert_delete_pairs_are_noops() {
 
 fn gen_batch(len: usize) -> usize {
     (len / 7).clamp(8, 256)
+}
+
+// ------------------------------------------------------------ sharded
+
+/// Single-lane SSSP matrix: for shards ∈ {1, 2, 4}, the sharded service's
+/// end-state is *bitwise* equal to the single-engine service and to the
+/// offline batch pipeline over the same batches (and all equal the
+/// Dijkstra oracle).
+#[test]
+fn sssp_sharded_matrix_bitwise_vs_single_engine_and_offline() {
+    let g0 = generators::uniform_random(300, 1500, 9, 111);
+    let batch = 64;
+    let raw = UpdateStream::generate_percent(&g0, 12.0, batch, 9, 113);
+    let stream = UpdateStream::new(trim_to_batches(raw.updates, batch), batch);
+
+    // offline batch mode
+    let engine = CpuEngine::new(1, Sched::Dynamic { chunk: 64 });
+    let mut g = g0.clone();
+    g.merge_period = 0;
+    let mut offline = engine.sssp_static(&g, 0);
+    for b in stream.batches() {
+        engine.sssp_dynamic_batch(&mut g, &mut offline, &b);
+    }
+
+    // single-engine service
+    let svc = GraphService::start(g0.clone(), exact_cfg(Algo::Sssp, batch));
+    for u in &stream.updates {
+        assert!(svc.submit(*u));
+    }
+    svc.drain();
+    let single = svc.shutdown();
+    assert_eq!(single.sssp().unwrap().dist, offline.dist);
+
+    for shards in SHARD_MATRIX {
+        let mut cfg = exact_cfg(Algo::Sssp, batch);
+        cfg.engine_shards = shards;
+        let svc = ShardedService::start(g0.clone(), cfg);
+        for u in &stream.updates {
+            assert!(svc.submit(*u));
+        }
+        svc.drain();
+        let report = svc.shutdown();
+        assert_eq!(
+            report.graph.edges_sorted(),
+            g.edges_sorted(),
+            "shards={shards}: end graphs diverged"
+        );
+        let st = report.sssp().expect("sssp service");
+        assert_eq!(st.dist, offline.dist, "shards={shards}: dist vs offline");
+        assert_eq!(st.dist, single.sssp().unwrap().dist, "shards={shards}: dist vs single");
+        assert_eq!(st.parent, offline.parent, "shards={shards}: parents vs offline");
+        assert_eq!(
+            st.parent,
+            single.sssp().unwrap().parent,
+            "shards={shards}: parents vs single"
+        );
+        assert_eq!(st.dist, sssp::dijkstra_oracle(&g, 0), "shards={shards}: oracle");
+        if shards > 1 {
+            assert!(report.relay.rounds > 0, "shards={shards}: relay never ran");
+        }
+    }
+}
+
+/// Multi-producer SSSP matrix: random dynamic batches fanned over 4
+/// producers, shards ∈ {1, 2, 4} — every configuration lands bitwise on
+/// the Dijkstra oracle of the fully-updated graph (conflict-free
+/// workloads make the end graph batching-independent, and the SSSP fixed
+/// point is unique).
+#[test]
+fn sssp_sharded_matrix_multi_producer_matches_oracle() {
+    let g0 = generators::uniform_random(400, 2000, 9, 121);
+    let workload = stream_workload(Algo::Sssp, &g0, 10.0, 123);
+    let mut want = g0.clone();
+    apply_workload(&mut want, &workload, false);
+    let oracle = sssp::dijkstra_oracle(&want, 0);
+
+    for shards in SHARD_MATRIX {
+        let mut cfg = concurrent_cfg(Algo::Sssp);
+        cfg.engine_shards = shards;
+        let (cell, report) = run_stream_cell(Algo::Sssp, &g0, 10.0, 4, 1, cfg, 123);
+        assert_eq!(cell.shards, shards);
+        assert_eq!(cell.stats.completed, cell.stats.submitted, "shards={shards}");
+        assert_eq!(
+            report.graph.edges_sorted(),
+            want.edges_sorted(),
+            "shards={shards}: end graphs diverged"
+        );
+        assert_eq!(report.sssp().unwrap().dist, oracle, "shards={shards}");
+    }
+}
+
+/// TC matrix: multi-producer undirected updates, shards ∈ {1, 2, 4} —
+/// streamed delta counting is exact (equals a full static recount of the
+/// final graph) for every shard count, which also makes the counts
+/// bitwise equal across the matrix.
+#[test]
+fn tc_sharded_matrix_counts_exactly() {
+    let g0 = generators::uniform_random(80, 480, 5, 131);
+    let mut counts = Vec::new();
+    for shards in SHARD_MATRIX {
+        let mut cfg = concurrent_cfg(Algo::Tc);
+        cfg.engine_shards = shards;
+        let (_, report) = run_stream_cell(Algo::Tc, &g0, 15.0, 4, 1, cfg, 133);
+        let st = report.tc().expect("tc service");
+        assert_eq!(
+            st.triangles,
+            triangle::static_tc(&report.graph).triangles,
+            "shards={shards}: streamed TC must equal a static recount"
+        );
+        for (u, v, _) in report.graph.edges_sorted() {
+            assert!(report.graph.has_edge(v, u), "shards={shards}: asymmetric {u}->{v}");
+        }
+        counts.push(st.triangles);
+    }
+    assert!(
+        counts.windows(2).all(|w| w[0] == w[1]),
+        "counts diverged across the shard matrix: {counts:?}"
+    );
+}
+
+/// PR matrix: shards ∈ {1, 2, 4} — streamed ranks track the static
+/// recompute of the final graph at the usual dynamic-PR tolerance
+/// (bitwise is not expected: float sums reassociate across shards).
+#[test]
+fn pr_sharded_matrix_tracks_static_recompute() {
+    let g0 = generators::rmat(7, 600, 0.57, 0.19, 0.19, 141);
+    let n = g0.num_nodes();
+    let workload = stream_workload(Algo::Pr, &g0, 8.0, 143);
+    let mut want = g0.clone();
+    apply_workload(&mut want, &workload, false);
+    let mut truth = PrState::new(n, 1e-9, 0.85, 200);
+    let engine = CpuEngine::new(2, Sched::Dynamic { chunk: 64 });
+    engine.pr_static(&want, &mut truth);
+
+    for shards in SHARD_MATRIX {
+        let mut cfg = concurrent_cfg(Algo::Pr);
+        cfg.pr_beta = 1e-9;
+        cfg.pr_max_iter = 200;
+        cfg.engine_shards = shards;
+        let (_, report) = run_stream_cell(Algo::Pr, &g0, 8.0, 4, 1, cfg, 143);
+        assert_eq!(report.graph.edges_sorted(), want.edges_sorted(), "shards={shards}");
+        let st = report.pr().expect("pr service");
+        let l1: f64 = st.rank.iter().zip(&truth.rank).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 < 0.05, "shards={shards}: PR diverged, L1={l1}");
+    }
+}
+
+/// Ingest-routing property (satellite): insert→delete pairs of *shard-
+/// crossing* edges (source and destination owned by different engine
+/// shards) are observationally no-ops through the sharded service — the
+/// coalescer cancels the insert before routing, and because an edge's
+/// insert and delete share a source owner, routing can never reorder the
+/// delete ahead of its insert (a reorder would resurrect the edge, which
+/// the end-state asserts rule out).
+#[test]
+fn prop_cross_shard_coalesced_pairs_are_noops() {
+    forall_checks(0xC0A2, 5, |gen| {
+        let n = gen.usize_in(60, 140);
+        let e = gen.usize_in(n, n * 4);
+        let seed = gen.rng().next_u64();
+        let g0 = generators::uniform_random(n, e, 9, seed);
+        let shards = *gen.choose(&[2usize, 4]);
+        // the service rebuilds this partition from the same seed graph,
+        // so owners computed here match the service's routing
+        let pm_probe = ShardedGraph::partition(&g0, shards);
+        let pct = 2.0 + gen.f64_unit() * 8.0;
+        let base = UpdateStream::generate_percent(&g0, pct, 1, 9, seed ^ 0x21).updates;
+
+        let mut forbidden: std::collections::HashSet<(NodeId, NodeId)> =
+            g0.edges_sorted().iter().map(|&(u, v, _)| (u, v)).collect();
+        for u in &base {
+            forbidden.insert((u.src, u.dst));
+        }
+        // fresh edges whose endpoints live on *different* engine shards
+        let mut pairs = Vec::new();
+        let mut attempts = 0;
+        while pairs.len() < 6 && attempts < 10_000 {
+            attempts += 1;
+            let u = gen.usize_in(0, n - 1) as NodeId;
+            let v = gen.usize_in(0, n - 1) as NodeId;
+            if u != v
+                && pm_probe.owner(u) != pm_probe.owner(v)
+                && forbidden.insert((u, v))
+            {
+                pairs.push((u, v));
+            }
+        }
+        assert!(!pairs.is_empty(), "no cross-shard pair found");
+
+        // weave each add strictly before its delete
+        let mut updates = base.clone();
+        for &(u, v) in &pairs {
+            let i = gen.usize_in(0, updates.len());
+            updates.insert(i, Update { kind: UpdateKind::Add, src: u, dst: v, weight: 3 });
+            let j = gen.usize_in(i + 1, updates.len());
+            updates.insert(j, Update { kind: UpdateKind::Delete, src: u, dst: v, weight: 0 });
+        }
+
+        let run = |upds: &[Update]| {
+            let mut cfg = concurrent_cfg(Algo::Sssp);
+            cfg.engine_shards = shards;
+            cfg.batch_capacity = gen_batch(upds.len());
+            let svc = ShardedService::start(g0.clone(), cfg);
+            for u in upds {
+                assert!(svc.submit(*u));
+            }
+            svc.drain();
+            svc.shutdown()
+        };
+        let with_pairs = run(&updates);
+        let without_pairs = run(&base);
+
+        assert_eq!(
+            with_pairs.graph.edges_sorted(),
+            without_pairs.graph.edges_sorted(),
+            "coalesced cross-shard pairs must leave no trace"
+        );
+        for &(u, v) in &pairs {
+            assert!(
+                !with_pairs.graph.has_edge(u, v),
+                "cross-shard pair edge {u}->{v} survived (delete reordered or lost)"
+            );
+        }
+        assert_eq!(
+            with_pairs.sssp().unwrap().dist,
+            without_pairs.sssp().unwrap().dist,
+            "properties must match the pair-free run"
+        );
+    });
+}
+
+/// Epoch-stitch test (satellite): a reader thread hammering snapshots
+/// while the sharded engine propagates batches never observes two shards
+/// at different epochs — every published table's per-shard stamps are
+/// mutually equal and equal to the table's graph epoch.
+#[test]
+fn sharded_reader_never_observes_mixed_epochs() {
+    let g0 = generators::uniform_random(200, 1000, 9, 151);
+    let n = g0.num_nodes();
+    let stream = UpdateStream::generate_percent(&g0, 20.0, 64, 9, 153);
+    let mut cfg = concurrent_cfg(Algo::Sssp);
+    cfg.engine_shards = 4;
+    cfg.batch_capacity = 16; // many small batches → many publishes
+    let svc = Arc::new(ShardedService::start(g0, cfg));
+    let stop = Arc::new(AtomicBool::new(false));
+    let readers: Vec<_> = (0..2)
+        .map(|_| {
+            let svc = Arc::clone(&svc);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut reads = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    svc.with_snapshot(|t| {
+                        assert_eq!(t.shard_epochs.len(), 4, "one stamp per shard");
+                        assert!(
+                            t.shard_epochs.iter().all(|&e| e == t.graph_epoch),
+                            "mixed epochs in stitched view: {:?} vs graph epoch {}",
+                            t.shard_epochs,
+                            t.graph_epoch
+                        );
+                        assert_eq!(t.dist.len(), n, "property arrays always complete");
+                    });
+                    reads += 1;
+                }
+                reads
+            })
+        })
+        .collect();
+    for u in &stream.updates {
+        svc.submit(*u);
+    }
+    svc.drain();
+    stop.store(true, Ordering::Relaxed);
+    for r in readers {
+        assert!(r.join().unwrap() > 0, "readers made progress");
+    }
+    let Ok(svc) = Arc::try_unwrap(svc) else { panic!("sole owner after readers joined") };
+    let report = svc.shutdown();
+    assert!(report.stats.batches > 1, "stitch exercised across multiple publishes");
 }
