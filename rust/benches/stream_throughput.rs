@@ -1,16 +1,21 @@
-//! Streaming service throughput/latency sweep: a shards × producers ×
-//! batch-deadline grid over the SSSP streaming service (single-engine at
-//! `shards = 1`, the sharded `ShardedService` above), reporting sustained
-//! updates/sec and p50/p99 batch latency per cell plus the cross-shard
-//! relay traffic for sharded cells.
+//! Streaming service throughput/latency sweep: a backend × shards ×
+//! producers × batch-deadline grid over the SSSP streaming service
+//! (single-engine at `shards = 1` — any [`BackendKind`] via the
+//! `DynamicEngine` trait — and the cpu-backed sharded `ShardedService`
+//! above that), reporting sustained updates/sec and p50/p99 batch latency
+//! per cell plus the cross-shard relay traffic for sharded cells.
 //!
 //! Usage: `cargo bench --bench stream_throughput [-- --smoke]`
 //! Output: human-readable table + `BENCH_stream.json` in the CWD
 //! (tracked as part of the perf trajectory, next to
 //! `BENCH_microbench.json`). `--smoke` shrinks the graph and the grid for
-//! CI; the smoke grid keeps a `--shards 2` leg so the shards axis shows
-//! up in the CI artifact.
+//! CI; the smoke grid keeps a `--shards 2` leg and a `--backend dist` leg
+//! so both axes show up in the CI artifact. Non-cpu backends run only the
+//! single-engine (`shards = 1`) rows — the sharded service is its own
+//! cpu-backed BSP fleet. The xla backend is skipped (with a note) when
+//! PJRT or its artifacts are absent.
 
+use starplat_dyn::backend::BackendKind;
 use starplat_dyn::coordinator::{run_stream_cell, Algo};
 use starplat_dyn::graph::generators;
 use starplat_dyn::stream::{MergePolicy, ServiceConfig};
@@ -21,6 +26,8 @@ fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
     let (scale, edges, percent) = if smoke { (9, 4_000, 10.0) } else { (12, 80_000, 10.0) };
     let g = generators::rmat(scale, edges, 0.57, 0.19, 0.19, 3);
+    let backend_grid: &[BackendKind] =
+        &[BackendKind::Cpu, BackendKind::Serial, BackendKind::Dist, BackendKind::Xla];
     let shards_grid: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
     let producer_grid: &[usize] = if smoke { &[1, 4] } else { &[1, 4, 8] };
     let deadline_grid_ms: &[u64] = if smoke { &[2, 10] } else { &[1, 5, 25] };
@@ -32,64 +39,91 @@ fn main() {
         g.num_edges()
     );
     println!(
-        "{:<7} {:<10} {:>12} {:>12} {:>10} {:>10} {:>8} {:>7} {:>9} {:>10}",
-        "shards", "producers", "deadline", "upd/s", "p50 ms", "p99 ms", "batches", "merges",
-        "coalesced", "cross-msg"
+        "{:<8} {:<7} {:<10} {:>12} {:>12} {:>10} {:>10} {:>8} {:>7} {:>9} {:>10}",
+        "backend", "shards", "producers", "deadline", "upd/s", "p50 ms", "p99 ms", "batches",
+        "merges", "coalesced", "cross-msg"
     );
 
     let mut rows = String::new();
-    for &shards in shards_grid {
-        for &producers in producer_grid {
-            for &deadline_ms in deadline_grid_ms {
-                let mut cfg = ServiceConfig::new(Algo::Sssp);
-                cfg.batch_capacity = batch_capacity;
-                cfg.batch_deadline = Duration::from_millis(deadline_ms);
-                cfg.shards = producers.max(2); // ingest lanes
-                cfg.engine_shards = shards;
-                cfg.merge_policy = MergePolicy::default();
-                let (cell, _report) =
-                    run_stream_cell(Algo::Sssp, &g, percent, producers, 1, cfg, 7);
-                // sanity: the streamed end state must match the workload size
-                assert_eq!(cell.stats.submitted, cell.updates);
-                assert_eq!(cell.stats.completed, cell.stats.submitted);
-                assert_eq!(cell.shards, shards);
-                let cross = cell.relay.map(|r| r.cross_msgs).unwrap_or(0);
-                println!(
-                    "{shards:<7} {producers:<10} {deadline_ms:>10}ms {:>12.0} {:>10.3} {:>10.3} {:>8} {:>7} {:>9} {:>10}",
-                    cell.updates_per_sec,
-                    cell.stats.batch_latency_p50 * 1e3,
-                    cell.stats.batch_latency_p99 * 1e3,
-                    cell.stats.batches,
-                    cell.stats.merges,
-                    cell.stats.coalesced,
-                    cross
-                );
-                if !rows.is_empty() {
-                    rows.push_str(",\n");
+    for &backend in backend_grid {
+        for &shards in shards_grid {
+            if backend != BackendKind::Cpu && shards > 1 {
+                continue; // the sharded fleet is cpu-backed
+            }
+            // the non-cpu single-engine legs pin the backend axis; one
+            // producer/deadline row each keeps the grid from exploding
+            let producer_grid: &[usize] =
+                if backend == BackendKind::Cpu { producer_grid } else { &producer_grid[..1] };
+            let deadline_grid_ms: &[u64] = if backend == BackendKind::Cpu {
+                deadline_grid_ms
+            } else {
+                &deadline_grid_ms[..1]
+            };
+            for &producers in producer_grid {
+                for &deadline_ms in deadline_grid_ms {
+                    let mut cfg = ServiceConfig::new(Algo::Sssp);
+                    cfg.backend = backend;
+                    cfg.batch_capacity = batch_capacity;
+                    cfg.batch_deadline = Duration::from_millis(deadline_ms);
+                    cfg.shards = producers.max(2); // ingest lanes
+                    cfg.engine_shards = shards;
+                    cfg.merge_policy = MergePolicy::default();
+                    let (cell, _report) =
+                        match run_stream_cell(Algo::Sssp, &g, percent, producers, 1, cfg, 7) {
+                            Ok(r) => r,
+                            Err(e) => {
+                                // the xla leg needs PJRT + artifacts
+                                println!("{:<8} (skipped: {e})", backend.name());
+                                continue;
+                            }
+                        };
+                    // sanity: the streamed end state must match the workload size
+                    assert_eq!(cell.stats.submitted, cell.updates);
+                    assert_eq!(cell.stats.completed, cell.stats.submitted);
+                    assert_eq!(cell.shards, shards);
+                    let cross = cell.relay.map(|r| r.cross_msgs).unwrap_or(0);
+                    println!(
+                        "{:<8} {shards:<7} {producers:<10} {deadline_ms:>10}ms {:>12.0} {:>10.3} {:>10.3} {:>8} {:>7} {:>9} {:>10}",
+                        backend.name(),
+                        cell.updates_per_sec,
+                        cell.stats.batch_latency_p50 * 1e3,
+                        cell.stats.batch_latency_p99 * 1e3,
+                        cell.stats.batches,
+                        cell.stats.merges,
+                        cell.stats.coalesced,
+                        cross
+                    );
+                    if !rows.is_empty() {
+                        rows.push_str(",\n");
+                    }
+                    let _ = write!(
+                        rows,
+                        "    {{\"backend\": \"{}\", \"shards\": {shards}, \
+                         \"producers\": {producers}, \
+                         \"deadline_ms\": {deadline_ms}, \
+                         \"batch_capacity\": {batch_capacity}, \
+                         \"updates\": {}, \"updates_per_sec\": {:.1}, \
+                         \"batch_latency_p50_ms\": {:.4}, \"batch_latency_p99_ms\": {:.4}, \
+                         \"batches\": {}, \"closed_by_size\": {}, \"closed_by_deadline\": {}, \
+                         \"merges\": {}, \"policy\": \"{}\", \"snapshot_reads\": {}, \
+                         \"modeled_comm_secs\": {:.6}, \
+                         \"relay_rounds\": {}, \"relay_cross_msgs\": {}}}",
+                        backend.name(),
+                        cell.updates,
+                        cell.updates_per_sec,
+                        cell.stats.batch_latency_p50 * 1e3,
+                        cell.stats.batch_latency_p99 * 1e3,
+                        cell.stats.batches,
+                        cell.stats.closed_by_size,
+                        cell.stats.closed_by_deadline,
+                        cell.stats.merges,
+                        cell.stats.policy,
+                        cell.snapshot_reads,
+                        cell.stats.modeled_comm_secs,
+                        cell.relay.map(|r| r.rounds).unwrap_or(0),
+                        cross
+                    );
                 }
-                let _ = write!(
-                    rows,
-                    "    {{\"shards\": {shards}, \"producers\": {producers}, \
-                     \"deadline_ms\": {deadline_ms}, \
-                     \"batch_capacity\": {batch_capacity}, \
-                     \"updates\": {}, \"updates_per_sec\": {:.1}, \
-                     \"batch_latency_p50_ms\": {:.4}, \"batch_latency_p99_ms\": {:.4}, \
-                     \"batches\": {}, \"closed_by_size\": {}, \"closed_by_deadline\": {}, \
-                     \"merges\": {}, \"policy\": \"{}\", \"snapshot_reads\": {}, \
-                     \"relay_rounds\": {}, \"relay_cross_msgs\": {}}}",
-                    cell.updates,
-                    cell.updates_per_sec,
-                    cell.stats.batch_latency_p50 * 1e3,
-                    cell.stats.batch_latency_p99 * 1e3,
-                    cell.stats.batches,
-                    cell.stats.closed_by_size,
-                    cell.stats.closed_by_deadline,
-                    cell.stats.merges,
-                    cell.stats.policy,
-                    cell.snapshot_reads,
-                    cell.relay.map(|r| r.rounds).unwrap_or(0),
-                    cross
-                );
             }
         }
     }

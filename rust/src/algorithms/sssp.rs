@@ -200,6 +200,36 @@ pub fn dynamic_batch(g: &mut DynGraph, st: &mut SsspState, batch: &Batch<'_>) {
     incremental(g, st, &mut mod_add);
 }
 
+/// Deterministic SP-tree repair shared by the backends that keep their
+/// parents bitwise-comparable: `parent[v]` becomes the **smallest** `u`
+/// among in-neighbors achieving `dist[u] + w(u,v) == dist[v]` (`-1` for
+/// the source and unreachable vertices). The cpu engine runs a parallel
+/// owner-writes variant of the same argmin rule (its tests pin the two
+/// bitwise-equal); the dist and xla engines call this serial form, which
+/// is what makes cross-backend SSSP end-states comparable parent-for-
+/// parent in the equivalence matrices.
+pub fn repair_parents_argmin(g: &DynGraph, st: &mut SsspState) {
+    let n = g.num_nodes();
+    for v in 0..n as NodeId {
+        let vu = v as usize;
+        let mut best = -1i64;
+        if v != st.source && st.dist[vu] < INF {
+            for (u, w) in g.in_neighbors(v) {
+                if st.dist[u as usize] < INF
+                    && st.dist[u as usize] + w as i64 == st.dist[vu]
+                {
+                    let cand = u as i64;
+                    if best == -1 || cand < best {
+                        best = cand;
+                    }
+                }
+            }
+        }
+        st.parent[vu] = best;
+    }
+    st.parent[st.source as usize] = -1;
+}
+
 /// Dijkstra with a binary heap — an *independent* oracle used only by
 /// tests (the main implementations are all Bellman-Ford-shaped).
 pub fn dijkstra_oracle(g: &DynGraph, source: NodeId) -> Vec<i64> {

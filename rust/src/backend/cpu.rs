@@ -40,9 +40,11 @@
 //! and the diff-CSR merge partition-affine: worker `t` owns the same
 //! contiguous CSR shard each round (see `util::threadpool`).
 
+use super::{BackendKind, Capabilities, DynamicEngine};
 use crate::algorithms::{pagerank, sssp, PrState, SsspState, TcState, INF};
 use crate::graph::updates::Batch;
 use crate::graph::{DynGraph, NodeId, Weight};
+use crate::util::error::Result as EngineResult;
 use crate::util::sync_slice::SyncSlice;
 use crate::util::threadpool::{Sched, ThreadPool};
 use std::sync::atomic::{AtomicBool, AtomicI64, Ordering};
@@ -941,6 +943,88 @@ impl CpuEngine {
             |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2),
         );
         c1 / 2 + c2 / 4 + c3 / 6
+    }
+}
+
+/// The engine contract over the inherent methods. The cpu engine has
+/// native slice entry points (`supports_parts`), distinguishes the
+/// dense-push static comparator, and routes diff-CSR merges through its
+/// pool via [`DynamicEngine::prepare_graph`]. Infallible: always `Ok`.
+impl DynamicEngine for CpuEngine {
+    fn capabilities(&self) -> Capabilities {
+        BackendKind::Cpu.capabilities()
+    }
+
+    fn prepare_graph(&self, g: &mut DynGraph) {
+        g.set_merge_pool(self.pool.clone());
+        g.set_merge_sched(self.sched);
+    }
+
+    fn sssp_static(&self, g: &DynGraph, source: NodeId) -> EngineResult<SsspState> {
+        Ok(CpuEngine::sssp_static(self, g, source))
+    }
+
+    fn sssp_static_dense(&self, g: &DynGraph, source: NodeId) -> EngineResult<SsspState> {
+        Ok(CpuEngine::sssp_static_dense(self, g, source))
+    }
+
+    fn sssp_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut SsspState,
+        batch: &Batch<'_>,
+    ) -> EngineResult<()> {
+        CpuEngine::sssp_dynamic_batch(self, g, st, batch);
+        Ok(())
+    }
+
+    fn sssp_dynamic_batch_parts(
+        &self,
+        g: &mut DynGraph,
+        st: &mut SsspState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> EngineResult<()> {
+        CpuEngine::sssp_dynamic_batch_parts(self, g, st, dels, adds);
+        Ok(())
+    }
+
+    fn pr_static(&self, g: &DynGraph, st: &mut PrState) -> EngineResult<usize> {
+        Ok(CpuEngine::pr_static(self, g, st))
+    }
+
+    fn pr_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut PrState,
+        batch: &Batch<'_>,
+    ) -> EngineResult<pagerank::PrBatchStats> {
+        Ok(CpuEngine::pr_dynamic_batch(self, g, st, batch))
+    }
+
+    fn pr_dynamic_batch_parts(
+        &self,
+        g: &mut DynGraph,
+        st: &mut PrState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> EngineResult<pagerank::PrBatchStats> {
+        Ok(CpuEngine::pr_dynamic_batch_parts(self, g, st, dels, adds))
+    }
+
+    fn tc_static(&self, g: &DynGraph) -> EngineResult<TcState> {
+        Ok(CpuEngine::tc_static(self, g))
+    }
+
+    fn tc_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut TcState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> EngineResult<()> {
+        CpuEngine::tc_dynamic_batch(self, g, st, dels, adds);
+        Ok(())
     }
 }
 

@@ -16,10 +16,12 @@
 //! quantity is wall-clock compute + modeled comm time, which preserves
 //! every qualitative claim of Table 3 (see EXPERIMENTS.md).
 
+use super::{BackendKind, Capabilities, DynamicEngine};
 use crate::algorithms::{pagerank, sssp, PrState, SsspState, TcState, INF};
 use crate::graph::partition::{Partition, PartitionMap};
 use crate::graph::updates::Batch;
 use crate::graph::{DynGraph, NodeId, Weight};
+use crate::util::error::Result;
 use std::cell::Cell;
 
 /// One-sided communication counters (per run).
@@ -176,21 +178,59 @@ impl DistEngine {
                 break;
             }
         }
+        self.repair_parents(g, &mut st);
         st
+    }
+
+    /// Deterministic parent repair — the same argmin rule as the cpu
+    /// engine's (`parent[v] = smallest u achieving dist[u] + w(u,v) ==
+    /// dist[v]`), so SSSP end-states are **bitwise** comparable across
+    /// backends (the unique distance fixed point already is; this pins
+    /// the SP tree too).
+    ///
+    /// Like the cpu engine's repair, this is the *testbed's* determinism
+    /// device, not part of the paper's generated algorithm — so it is
+    /// deliberately **excluded from the comm model** (the same way the
+    /// seeding solve is excluded from dynamic time): charging one get per
+    /// cross-rank in-edge here would add an O(|E|)-per-batch term that
+    /// swamps the update-proportional communication the §6 cells compare.
+    ///
+    /// Its O(V + E) *compute* cost, however, stays inside the timed
+    /// dynamic section on purpose: the cpu engine runs its (parallel)
+    /// repair inside every timed batch too, so both backends pay the
+    /// same per-batch repair term and wall-clock comparisons across
+    /// backends — and each epoch's published parent snapshot — stay
+    /// apples-to-apples and deterministic alike.
+    fn repair_parents(&self, g: &DynGraph, st: &mut SsspState) {
+        sssp::repair_parents_argmin(g, st);
+    }
+
+    /// Dynamic SSSP batch (update-list form): splits the batch and runs
+    /// [`sssp_dynamic_batch_parts`](Self::sssp_dynamic_batch_parts).
+    pub fn sssp_dynamic_batch(&self, g: &mut DynGraph, st: &mut SsspState, batch: &Batch<'_>) {
+        let dels: Vec<_> = batch.deletions().collect();
+        let adds: Vec<_> = batch.additions().collect();
+        self.sssp_dynamic_batch_parts(g, st, &dels, &adds);
     }
 
     /// Dynamic SSSP batch with distributed decremental/incremental phases.
     /// Updates are applied owner-computes: a rank applies only the updates
-    /// whose source vertex it owns (§5.2).
-    pub fn sssp_dynamic_batch(&self, g: &mut DynGraph, st: &mut SsspState, batch: &Batch<'_>) {
+    /// whose source vertex it owns (§5.2). Slice-level entry point — the
+    /// streaming service calls this directly with its reusable buffers.
+    pub fn sssp_dynamic_batch_parts(
+        &self,
+        g: &mut DynGraph,
+        st: &mut SsspState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) {
         let n = g.num_nodes();
         let pm = self.pmap(n);
 
         // OnDelete: the rank owning dest checks/updates its own state; the
         // parent check reads dest's parent locally (dest-owned state).
-        let dels: Vec<_> = batch.deletions().collect();
-        let mut modified = sssp::on_delete(st, &dels);
-        g.apply_deletions(&dels);
+        let mut modified = sssp::on_delete(st, dels);
+        g.apply_deletions(dels);
 
         // Decremental phase 1: cascade. Reading parent's modified flag is
         // a remote get when the parent is owned elsewhere.
@@ -259,9 +299,8 @@ impl DistEngine {
         }
 
         // OnAdd + incremental push (same superstep structure as static).
-        let adds: Vec<_> = batch.additions().collect();
-        let mut seed = sssp::on_add(st, &adds);
-        g.apply_additions(&adds);
+        let mut seed = sssp::on_add(st, adds);
+        g.apply_additions(adds);
         loop {
             let mut any = false;
             let mut nxt = vec![false; n];
@@ -295,6 +334,7 @@ impl DistEngine {
                 break;
             }
         }
+        self.repair_parents(g, st);
     }
 
     // ------------------------------------------------------------ PR
@@ -336,36 +376,48 @@ impl DistEngine {
         }
     }
 
-    /// Dynamic PR batch: BFS flag closure crosses rank boundaries (each
-    /// frontier hop that leaves the owner is a remote op), then flagged
-    /// pull sweeps.
+    /// Dynamic PR batch (update-list form): splits the batch and runs
+    /// [`pr_dynamic_batch_parts`](Self::pr_dynamic_batch_parts).
     pub fn pr_dynamic_batch(
         &self,
         g: &mut DynGraph,
         st: &mut PrState,
         batch: &Batch<'_>,
     ) -> pagerank::PrBatchStats {
+        let dels: Vec<_> = batch.deletions().collect();
+        let adds: Vec<_> = batch.additions().collect();
+        self.pr_dynamic_batch_parts(g, st, &dels, &adds)
+    }
+
+    /// Dynamic PR batch: BFS flag closure crosses rank boundaries (each
+    /// frontier hop that leaves the owner is a remote op), then flagged
+    /// pull sweeps. Slice-level entry point.
+    pub fn pr_dynamic_batch_parts(
+        &self,
+        g: &mut DynGraph,
+        st: &mut PrState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> pagerank::PrBatchStats {
         let n = g.num_nodes();
         let pm = self.pmap(n);
         let mut stats = pagerank::PrBatchStats::default();
 
-        let dels: Vec<_> = batch.deletions().collect();
         let mut modified = vec![false; n];
-        for &(_, v) in &dels {
+        for &(_, v) in dels {
             modified[v as usize] = true;
         }
         stats.bfs_levels_del = self.propagate_flags(g, &pm, &mut modified);
-        g.apply_deletions(&dels);
+        g.apply_deletions(dels);
         stats.flagged_del = modified.iter().filter(|&&m| m).count();
         stats.iters_del = self.recompute_flagged(g, &pm, st, &modified);
 
-        let adds: Vec<_> = batch.additions().collect();
         let mut modified_add = vec![false; n];
-        for &(_, v, _) in &adds {
+        for &(_, v, _) in adds {
             modified_add[v as usize] = true;
         }
         stats.bfs_levels_add = self.propagate_flags(g, &pm, &mut modified_add);
-        g.apply_additions(&adds);
+        g.apply_additions(adds);
         stats.flagged_add = modified_add.iter().filter(|&&m| m).count();
         stats.iters_add = self.recompute_flagged(g, &pm, st, &modified_add);
         stats
@@ -533,6 +585,84 @@ impl DistEngine {
     }
 }
 
+/// The engine contract over the inherent methods. The dist engine is
+/// in-process and infallible (always `Ok`); its distinguishing trait
+/// surface is [`DynamicEngine::drain_comm_secs`], which converts the
+/// one-sided op counters accumulated since the last drain into modeled
+/// seconds under the engine's latency model.
+impl DynamicEngine for DistEngine {
+    fn capabilities(&self) -> Capabilities {
+        BackendKind::Dist.capabilities()
+    }
+
+    fn drain_comm_secs(&self) -> f64 {
+        self.take_stats().modeled_secs(&self.comm_model)
+    }
+
+    fn sssp_static(&self, g: &DynGraph, source: NodeId) -> Result<SsspState> {
+        Ok(DistEngine::sssp_static(self, g, source))
+    }
+
+    fn sssp_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut SsspState,
+        batch: &Batch<'_>,
+    ) -> Result<()> {
+        DistEngine::sssp_dynamic_batch(self, g, st, batch);
+        Ok(())
+    }
+
+    fn sssp_dynamic_batch_parts(
+        &self,
+        g: &mut DynGraph,
+        st: &mut SsspState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> Result<()> {
+        DistEngine::sssp_dynamic_batch_parts(self, g, st, dels, adds);
+        Ok(())
+    }
+
+    fn pr_static(&self, g: &DynGraph, st: &mut PrState) -> Result<usize> {
+        Ok(DistEngine::pr_static(self, g, st))
+    }
+
+    fn pr_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut PrState,
+        batch: &Batch<'_>,
+    ) -> Result<pagerank::PrBatchStats> {
+        Ok(DistEngine::pr_dynamic_batch(self, g, st, batch))
+    }
+
+    fn pr_dynamic_batch_parts(
+        &self,
+        g: &mut DynGraph,
+        st: &mut PrState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> Result<pagerank::PrBatchStats> {
+        Ok(DistEngine::pr_dynamic_batch_parts(self, g, st, dels, adds))
+    }
+
+    fn tc_static(&self, g: &DynGraph) -> Result<TcState> {
+        Ok(DistEngine::tc_static(self, g))
+    }
+
+    fn tc_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut TcState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> Result<()> {
+        DistEngine::tc_dynamic_batch(self, g, st, dels, adds);
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -579,6 +709,31 @@ mod tests {
             c8.accumulates,
             c2.accumulates
         );
+    }
+
+    /// The deterministic parent repair makes dist SSSP end-states
+    /// *bitwise* comparable to the cpu engine — same argmin SP-tree rule
+    /// over the same unique distance fixed point, static and dynamic.
+    #[test]
+    fn dist_parents_bitwise_match_cpu_engine() {
+        use crate::backend::cpu::CpuEngine;
+        use crate::util::threadpool::Sched;
+        let g0 = generators::uniform_random(120, 700, 9, 33);
+        let stream = UpdateStream::generate_percent(&g0, 10.0, 16, 9, 35);
+        let e = engine(4);
+        let cpu = CpuEngine::new(2, Sched::Dynamic { chunk: 32 });
+        let mut gd = g0.clone();
+        let mut sd = e.sssp_static(&gd, 0);
+        let mut gc = g0.clone();
+        let mut sc = cpu.sssp_static(&gc, 0);
+        assert_eq!(sd.dist, sc.dist, "static distances");
+        assert_eq!(sd.parent, sc.parent, "static SP-tree parents");
+        for b in stream.batches() {
+            e.sssp_dynamic_batch(&mut gd, &mut sd, &b);
+            cpu.sssp_dynamic_batch(&mut gc, &mut sc, &b);
+        }
+        assert_eq!(sd.dist, sc.dist, "dynamic distances");
+        assert_eq!(sd.parent, sc.parent, "dynamic SP-tree parents");
     }
 
     #[test]

@@ -8,11 +8,33 @@
 //!   one-sided RMA windows and communication accounting;
 //! * [`xla`] — the CUDA analogue: bulk-synchronous dense kernels authored
 //!   in JAX/Pallas, AOT-compiled to HLO and executed via PJRT.
+//!
+//! The paper's core claim is *one* dynamic-processing specification
+//! lowered to every backend; this module encodes that contract as a real
+//! API instead of a copy-pasted convention: every engine implements the
+//! object-safe [`DynamicEngine`] trait (static solve + dynamic batch +
+//! allocation-free slice entry points per algorithm), advertises a
+//! [`Capabilities`] descriptor, and is constructed through
+//! [`make_engine`] from a [`BackendKind`] + [`EngineOpts`] pair. The
+//! coordinator's experiment cells and the streaming service both dispatch
+//! through `Box<dyn DynamicEngine>`, so every consumer — offline cells,
+//! `serve`, benches — runs unchanged on any backend.
 
 pub mod cpu;
 pub mod dist;
 pub mod serial;
 pub mod xla;
+
+use crate::algorithms::{pagerank::PrBatchStats, PrState, SsspState, TcState};
+use crate::graph::updates::{Batch, Update, UpdateKind};
+use crate::graph::{DynGraph, NodeId, Partition, Weight};
+use crate::util::error::{bail, Result};
+use crate::util::threadpool::Sched;
+
+pub use cpu::{CpuEngine, Direction};
+pub use dist::DistEngine;
+pub use serial::SerialEngine;
+pub use xla::XlaEngine;
 
 /// Which backend executes a workload (CLI/bench selector).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -36,9 +58,285 @@ impl std::str::FromStr for BackendKind {
     }
 }
 
+impl BackendKind {
+    /// Static capability descriptor (identical to what the built engine's
+    /// [`DynamicEngine::capabilities`] reports) — lets callers reason
+    /// about a backend, and [`make_engine`] validate knobs, without
+    /// constructing an engine (xla construction needs PJRT + artifacts).
+    pub const fn capabilities(self) -> Capabilities {
+        match self {
+            BackendKind::Serial => Capabilities {
+                name: "serial",
+                supports_parts: false,
+                deterministic: true,
+                supports_threads: false,
+                supports_sched: false,
+                supports_direction: false,
+                supports_ranks: false,
+                reports_comm: false,
+            },
+            BackendKind::Cpu => Capabilities {
+                name: "cpu",
+                supports_parts: true,
+                deterministic: true,
+                supports_threads: true,
+                supports_sched: true,
+                supports_direction: true,
+                supports_ranks: false,
+                reports_comm: false,
+            },
+            BackendKind::Dist => Capabilities {
+                name: "dist",
+                supports_parts: true,
+                deterministic: true,
+                supports_threads: false,
+                supports_sched: false,
+                supports_direction: false,
+                supports_ranks: true,
+                reports_comm: true,
+            },
+            BackendKind::Xla => Capabilities {
+                name: "xla",
+                supports_parts: false,
+                deterministic: false,
+                supports_threads: false,
+                supports_sched: false,
+                supports_direction: false,
+                supports_ranks: false,
+                reports_comm: false,
+            },
+        }
+    }
+
+    pub const fn name(self) -> &'static str {
+        self.capabilities().name
+    }
+}
+
+/// What an engine supports / guarantees. `name` identifies the backend in
+/// errors, bench JSON, and service telemetry; `supports_parts` marks
+/// native (allocation-free) slice entry points (engines without it fall
+/// back to the trait's allocating shim); `deterministic` marks
+/// bitwise-reproducible integer results (SSSP distances + parents, TC
+/// counts) for a fixed configuration — xla's f32 device math is excluded.
+/// The `supports_*` knob flags drive [`make_engine`]'s rejection of
+/// options the backend would otherwise silently drop; `reports_comm`
+/// marks engines whose [`DynamicEngine::drain_comm_secs`] is non-trivial.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Capabilities {
+    pub name: &'static str,
+    pub supports_parts: bool,
+    pub deterministic: bool,
+    pub supports_threads: bool,
+    pub supports_sched: bool,
+    pub supports_direction: bool,
+    pub supports_ranks: bool,
+    pub reports_comm: bool,
+}
+
+/// Engine-construction knobs threaded from the CLI (and the streaming
+/// service config) into [`make_engine`]. Every field is optional: `None`
+/// means "backend default", `Some` means the user asked for it explicitly
+/// — and the factory *rejects* explicit knobs the chosen backend lacks
+/// (per [`Capabilities`]) instead of silently dropping them.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EngineOpts {
+    /// Thread-pool width (cpu; default: host parallelism).
+    pub threads: Option<usize>,
+    /// Loop schedule (cpu; default [`Sched::default`]).
+    pub sched: Option<Sched>,
+    /// Push/pull traversal policy (cpu; default [`Direction::default`]).
+    pub direction: Option<Direction>,
+    /// Simulated rank count (dist; default [`DEFAULT_DIST_RANKS`]).
+    pub ranks: Option<usize>,
+}
+
+/// Rank count the dist backend simulates when `--ranks` is not given
+/// (the paper's Table 3 column count).
+pub const DEFAULT_DIST_RANKS: usize = 8;
+
+/// The full engine contract every backend implements — the trait-shaped
+/// version of the paper's "one specification, N generated codes". All
+/// methods return `Result` because the xla backend can fail at any
+/// dispatch (PJRT unavailable, artifact missing); the in-process engines
+/// are infallible and always return `Ok`.
+///
+/// Object-safe by design: the coordinator and the streaming service hold
+/// `Box<dyn DynamicEngine>` and never name a concrete engine type.
+pub trait DynamicEngine {
+    /// What this engine supports / guarantees.
+    fn capabilities(&self) -> Capabilities;
+
+    /// Give the engine a chance to attach its execution resources to the
+    /// graph before a run (the cpu engine routes diff-CSR merge
+    /// compaction through its pool + schedule). Default: nothing.
+    fn prepare_graph(&self, _g: &mut DynGraph) {}
+
+    /// Drain modeled communication seconds accumulated since the last
+    /// call (dist backend; everyone else reports 0).
+    fn drain_comm_secs(&self) -> f64 {
+        0.0
+    }
+
+    // ------------------------------------------------------------ SSSP
+
+    /// Static SSSP solve (the dynamic pipeline's seed).
+    fn sssp_static(&self, g: &DynGraph, source: NodeId) -> Result<SsspState>;
+
+    /// Static SSSP in the paper-generated comparator shape (§6.2 dense
+    /// push) where the backend distinguishes one; defaults to
+    /// [`sssp_static`](Self::sssp_static).
+    fn sssp_static_dense(&self, g: &DynGraph, source: NodeId) -> Result<SsspState> {
+        self.sssp_static(g, source)
+    }
+
+    /// One dynamic batch: OnDelete → updateCSRDel → Decremental →
+    /// OnAdd → updateCSRAdd → Incremental.
+    fn sssp_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut SsspState,
+        batch: &Batch<'_>,
+    ) -> Result<()>;
+
+    /// Slice-level dynamic batch entry: the streaming service decomposes
+    /// batches into reusable deletion/addition buffers once and calls
+    /// this directly. Engines with `supports_parts` implement it
+    /// natively (allocation-free); the default shim rebuilds a batch.
+    fn sssp_dynamic_batch_parts(
+        &self,
+        g: &mut DynGraph,
+        st: &mut SsspState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> Result<()> {
+        let upd = parts_to_updates(dels, adds);
+        self.sssp_dynamic_batch(g, st, &Batch { updates: &upd })
+    }
+
+    // ------------------------------------------------------------ PR
+
+    /// Static PageRank into `st` (returns sweep count).
+    fn pr_static(&self, g: &DynGraph, st: &mut PrState) -> Result<usize>;
+
+    /// One dynamic PR batch (flag closure + restricted sweeps).
+    fn pr_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut PrState,
+        batch: &Batch<'_>,
+    ) -> Result<PrBatchStats>;
+
+    /// Slice-level dynamic PR batch (see
+    /// [`sssp_dynamic_batch_parts`](Self::sssp_dynamic_batch_parts)).
+    fn pr_dynamic_batch_parts(
+        &self,
+        g: &mut DynGraph,
+        st: &mut PrState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> Result<PrBatchStats> {
+        let upd = parts_to_updates(dels, adds);
+        self.pr_dynamic_batch(g, st, &Batch { updates: &upd })
+    }
+
+    // ------------------------------------------------------------ TC
+
+    /// Static triangle count (on an already-symmetrized graph).
+    fn tc_static(&self, g: &DynGraph) -> Result<TcState>;
+
+    /// One dynamic TC batch: delta counting in Fig. 19 order. Already
+    /// slice-shaped on every backend (the TC protocol hands arcs, not
+    /// update lists).
+    fn tc_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut TcState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> Result<()>;
+}
+
+/// Rebuild an update list from split deletion/addition slices (the
+/// fallback shim behind the `*_parts` default methods).
+fn parts_to_updates(
+    dels: &[(NodeId, NodeId)],
+    adds: &[(NodeId, NodeId, Weight)],
+) -> Vec<Update> {
+    let mut upd = Vec::with_capacity(dels.len() + adds.len());
+    upd.extend(dels.iter().map(|&(src, dst)| Update {
+        kind: UpdateKind::Delete,
+        src,
+        dst,
+        weight: 0,
+    }));
+    upd.extend(adds.iter().map(|&(src, dst, weight)| Update {
+        kind: UpdateKind::Add,
+        src,
+        dst,
+        weight,
+    }));
+    upd
+}
+
+/// Build the engine for `kind` under `opts`. Explicitly-set knobs the
+/// backend lacks are **errors** (not silently dropped): `--sched
+/// partitioned` on `--backend dist` fails here with a message naming the
+/// offending flag, matching the Capabilities table above.
+pub fn make_engine(kind: BackendKind, opts: &EngineOpts) -> Result<Box<dyn DynamicEngine>> {
+    let caps = kind.capabilities();
+    if opts.threads.is_some() && !caps.supports_threads {
+        bail!(
+            "backend `{}` does not support --threads (cpu engine knob); \
+             drop the flag or use --backend cpu",
+            caps.name
+        );
+    }
+    if opts.sched.is_some() && !caps.supports_sched {
+        bail!(
+            "backend `{}` does not support --sched (cpu engine knob); \
+             drop the flag or use --backend cpu",
+            caps.name
+        );
+    }
+    if opts.direction.is_some() && !caps.supports_direction {
+        bail!(
+            "backend `{}` does not support --direction (cpu engine knob); \
+             drop the flag or use --backend cpu",
+            caps.name
+        );
+    }
+    if opts.ranks.is_some() && !caps.supports_ranks {
+        bail!(
+            "backend `{}` does not support --ranks (dist engine knob); \
+             drop the flag or use --backend dist",
+            caps.name
+        );
+    }
+    Ok(match kind {
+        BackendKind::Serial => Box::new(SerialEngine),
+        BackendKind::Cpu => {
+            let threads = opts.threads.unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+            });
+            Box::new(
+                CpuEngine::new(threads, opts.sched.unwrap_or_default())
+                    .with_direction(opts.direction.unwrap_or_default()),
+            )
+        }
+        BackendKind::Dist => Box::new(DistEngine::new(
+            opts.ranks.unwrap_or(DEFAULT_DIST_RANKS),
+            Partition::Block,
+        )),
+        BackendKind::Xla => Box::new(XlaEngine::new()?),
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algorithms::sssp;
+    use crate::graph::generators;
 
     #[test]
     fn backend_kind_parses_aliases() {
@@ -46,5 +344,68 @@ mod tests {
         assert_eq!("cuda".parse::<BackendKind>().unwrap(), BackendKind::Xla);
         assert_eq!("mpi".parse::<BackendKind>().unwrap(), BackendKind::Dist);
         assert!("tpu9".parse::<BackendKind>().is_err());
+    }
+
+    #[test]
+    fn factory_builds_every_in_process_backend() {
+        let g = generators::uniform_random(60, 300, 9, 5);
+        let want = sssp::dijkstra_oracle(&g, 0);
+        for kind in [BackendKind::Serial, BackendKind::Cpu, BackendKind::Dist] {
+            let e = make_engine(kind, &EngineOpts::default()).unwrap();
+            assert_eq!(e.capabilities(), kind.capabilities(), "{kind:?}");
+            let st = e.sssp_static(&g, 0).unwrap();
+            assert_eq!(st.dist, want, "{kind:?} static solve through the trait");
+        }
+    }
+
+    #[test]
+    fn factory_rejects_cpu_knobs_on_other_backends() {
+        let sched = EngineOpts { sched: Some(Sched::Partitioned), ..Default::default() };
+        let err = make_engine(BackendKind::Dist, &sched).unwrap_err().to_string();
+        assert!(err.contains("--sched") && err.contains("dist"), "{err}");
+
+        let dir = EngineOpts { direction: Some(Direction::Pull), ..Default::default() };
+        let err = make_engine(BackendKind::Serial, &dir).unwrap_err().to_string();
+        assert!(err.contains("--direction") && err.contains("serial"), "{err}");
+
+        let threads = EngineOpts { threads: Some(4), ..Default::default() };
+        let err = make_engine(BackendKind::Dist, &threads).unwrap_err().to_string();
+        assert!(err.contains("--threads"), "{err}");
+    }
+
+    #[test]
+    fn factory_rejects_ranks_on_non_dist_backends() {
+        let opts = EngineOpts { ranks: Some(4), ..Default::default() };
+        let err = make_engine(BackendKind::Cpu, &opts).unwrap_err().to_string();
+        assert!(err.contains("--ranks") && err.contains("cpu"), "{err}");
+        assert!(make_engine(BackendKind::Dist, &opts).is_ok());
+    }
+
+    #[test]
+    fn parts_shim_matches_native_batch_path() {
+        // Serial has no native parts entry — the default shim must be
+        // observationally identical to the batch path.
+        let g0 = generators::uniform_random(80, 400, 9, 8);
+        let stream =
+            crate::graph::UpdateStream::generate_percent(&g0, 10.0, 16, 9, 15);
+        let e = make_engine(BackendKind::Serial, &EngineOpts::default()).unwrap();
+
+        let mut g_batch = g0.clone();
+        let mut st_batch = e.sssp_static(&g_batch, 0).unwrap();
+        for b in stream.batches() {
+            e.sssp_dynamic_batch(&mut g_batch, &mut st_batch, &b).unwrap();
+        }
+
+        let mut g_parts = g0.clone();
+        let mut st_parts = e.sssp_static(&g_parts, 0).unwrap();
+        let mut dels = Vec::new();
+        let mut adds = Vec::new();
+        for b in stream.batches() {
+            b.split_into(&mut dels, &mut adds);
+            e.sssp_dynamic_batch_parts(&mut g_parts, &mut st_parts, &dels, &adds).unwrap();
+        }
+        assert_eq!(st_parts.dist, st_batch.dist);
+        assert_eq!(st_parts.parent, st_batch.parent);
+        assert_eq!(g_parts.edges_sorted(), g_batch.edges_sorted());
     }
 }

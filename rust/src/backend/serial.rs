@@ -3,9 +3,11 @@
 //! backend is validated against, and the "1-thread" row in scaling
 //! ablations.
 
+use super::{BackendKind, Capabilities, DynamicEngine};
 use crate::algorithms::{pagerank, sssp, triangle, PrState, SsspState, TcState};
 use crate::graph::updates::Batch;
 use crate::graph::{DynGraph, NodeId, Weight};
+use crate::util::error::Result;
 
 /// The serial engine (stateless).
 #[derive(Debug, Clone, Copy, Default)]
@@ -45,6 +47,56 @@ impl SerialEngine {
         adds: &[(NodeId, NodeId, Weight)],
     ) {
         triangle::dynamic_batch(g, st, dels, adds);
+    }
+}
+
+/// The engine contract, delegated to the inherent reference methods; the
+/// serial engine is infallible, so every arm returns `Ok`.
+impl DynamicEngine for SerialEngine {
+    fn capabilities(&self) -> Capabilities {
+        BackendKind::Serial.capabilities()
+    }
+
+    fn sssp_static(&self, g: &DynGraph, source: NodeId) -> Result<SsspState> {
+        Ok(SerialEngine::sssp_static(self, g, source))
+    }
+
+    fn sssp_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut SsspState,
+        batch: &Batch<'_>,
+    ) -> Result<()> {
+        SerialEngine::sssp_dynamic_batch(self, g, st, batch);
+        Ok(())
+    }
+
+    fn pr_static(&self, g: &DynGraph, st: &mut PrState) -> Result<usize> {
+        Ok(SerialEngine::pr_static(self, g, st))
+    }
+
+    fn pr_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut PrState,
+        batch: &Batch<'_>,
+    ) -> Result<pagerank::PrBatchStats> {
+        Ok(SerialEngine::pr_dynamic_batch(self, g, st, batch))
+    }
+
+    fn tc_static(&self, g: &DynGraph) -> Result<TcState> {
+        Ok(SerialEngine::tc_static(self, g))
+    }
+
+    fn tc_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut TcState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> Result<()> {
+        SerialEngine::tc_dynamic_batch(self, g, st, dels, adds);
+        Ok(())
     }
 }
 

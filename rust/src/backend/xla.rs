@@ -16,7 +16,8 @@
 //!   irregular — the dense kernel only serves the static baseline
 //!   recount; see DESIGN.md §2).
 
-use crate::algorithms::{sssp, PrState, SsspState, TcState, INF};
+use super::{BackendKind, Capabilities, DynamicEngine};
+use crate::algorithms::{pagerank, sssp, PrState, SsspState, TcState, INF};
 use crate::graph::updates::Batch;
 use crate::graph::{DynGraph, NodeId, Weight};
 use crate::runtime::{ArtifactManifest, PjrtRuntime, RoundsExe};
@@ -151,18 +152,10 @@ impl XlaEngine {
     }
 
     fn repair_parents(&self, g: &DynGraph, st: &mut SsspState) {
-        for v in 0..g.num_nodes() {
-            st.parent[v] = -1;
-            if v as NodeId == st.source || st.dist[v] >= INF {
-                continue;
-            }
-            for (u, w) in g.in_neighbors(v as NodeId) {
-                if st.dist[u as usize] < INF && st.dist[u as usize] + w as i64 == st.dist[v] {
-                    st.parent[v] = u as i64;
-                    break;
-                }
-            }
-        }
+        // Shared deterministic argmin rule (host-side metadata for the
+        // dynamic preprocess) — one definition across dist/xla, so parent
+        // selection can't drift between backends.
+        sssp::repair_parents_argmin(g, st);
     }
 
     /// Dynamic batch: host-side OnDelete/OnAdd preprocess (batch-sized),
@@ -289,6 +282,59 @@ impl XlaEngine {
         adds: &[(NodeId, NodeId, Weight)],
     ) {
         crate::algorithms::triangle::dynamic_batch(g, st, dels, adds);
+    }
+}
+
+/// The engine contract over the inherent methods. The xla engine is the
+/// fallible one — PJRT dispatch can fail at any call, which is why the
+/// trait is `Result`-shaped everywhere. Its dynamic PR is one warm-start
+/// fixed point over the combined batch (no separate del/add phases), so
+/// the batch stats report the whole sweep count as the incremental leg.
+impl DynamicEngine for XlaEngine {
+    fn capabilities(&self) -> Capabilities {
+        BackendKind::Xla.capabilities()
+    }
+
+    fn sssp_static(&self, g: &DynGraph, source: NodeId) -> Result<SsspState> {
+        XlaEngine::sssp_static(self, g, source)
+    }
+
+    fn sssp_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut SsspState,
+        batch: &Batch<'_>,
+    ) -> Result<()> {
+        XlaEngine::sssp_dynamic_batch(self, g, st, batch)
+    }
+
+    fn pr_static(&self, g: &DynGraph, st: &mut PrState) -> Result<usize> {
+        XlaEngine::pr_static(self, g, st)
+    }
+
+    fn pr_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut PrState,
+        batch: &Batch<'_>,
+    ) -> Result<pagerank::PrBatchStats> {
+        let iters = XlaEngine::pr_dynamic_batch(self, g, st, batch)?;
+        Ok(pagerank::PrBatchStats { iters_add: iters, ..Default::default() })
+    }
+
+    fn tc_static(&self, g: &DynGraph) -> Result<TcState> {
+        XlaEngine::tc_static(self, g)
+    }
+
+    fn tc_dynamic_batch(
+        &self,
+        g: &mut DynGraph,
+        st: &mut TcState,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> Result<()> {
+        XlaEngine::tc_dynamic_batch(self, g, st, dels, adds);
+        Ok(())
     }
 }
 

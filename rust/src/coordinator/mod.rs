@@ -10,16 +10,17 @@
 //! The initial static solve that seeds the dynamic run is *not* part of
 //! the dynamic time (the paper measures update processing).
 
-use crate::algorithms::{pagerank, sssp, triangle, PrState, TcState};
-use crate::backend::cpu::{CpuEngine, Direction};
-use crate::backend::dist::DistEngine;
-use crate::backend::xla::XlaEngine;
-use crate::backend::BackendKind;
+use crate::algorithms::{triangle, PrState, TcState};
+use crate::backend::{make_engine, BackendKind, DynamicEngine};
 use crate::graph::{DynGraph, NodeId, Update, UpdateKind, UpdateStream};
 use crate::stream::{GraphService, RelayStats, ServiceConfig, ServiceStats, ShardedService};
-use crate::util::threadpool::Sched;
 use crate::util::timer::time_it;
 use crate::util::error::Result;
+
+// Engine construction moved behind the backend factory; re-exported here
+// because the CLI and older callers imported the knobs from the
+// coordinator.
+pub use crate::backend::{Capabilities, EngineOpts};
 
 /// Algorithm selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -71,26 +72,6 @@ pub fn pr_params(n: usize) -> PrState {
     PrState::new(n, 1e-3, 0.85, 100)
 }
 
-/// CPU-engine tuning knobs threaded from the CLI into the cells: thread
-/// count (None ⇒ host width), loop schedule (incl. `partitioned`), and
-/// the push/pull direction policy.
-#[derive(Debug, Clone, Copy, Default)]
-pub struct EngineOpts {
-    pub threads: Option<usize>,
-    pub sched: Sched,
-    pub direction: Direction,
-}
-
-impl EngineOpts {
-    /// Build the configured engine.
-    pub fn engine(&self) -> CpuEngine {
-        let threads = self.threads.unwrap_or_else(|| {
-            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
-        });
-        CpuEngine::new(threads, self.sched).with_direction(self.direction)
-    }
-}
-
 /// Run one (algo, backend) experiment cell. `percent` follows the §6
 /// protocol (half deletions, half insertions). TC uses symmetric updates.
 pub fn run_cell(
@@ -104,8 +85,9 @@ pub fn run_cell(
     run_cell_with(algo, backend, g0, percent, batch_size, seed, EngineOpts::default())
 }
 
-/// [`run_cell`] with explicit cpu-engine knobs (the `run` subcommand's
-/// `--sched`/`--direction` flags land here; non-cpu backends ignore them).
+/// [`run_cell`] with explicit engine knobs (the `run` subcommand's
+/// `--threads`/`--sched`/`--direction`/`--ranks` flags land here; the
+/// factory rejects knobs the chosen backend lacks).
 pub fn run_cell_with(
     algo: Algo,
     backend: BackendKind,
@@ -115,266 +97,149 @@ pub fn run_cell_with(
     seed: u64,
     opts: EngineOpts,
 ) -> Result<Cell> {
-    match algo {
-        Algo::Sssp => sssp_cell(backend, g0, percent, batch_size, seed, opts),
-        Algo::Pr => pr_cell(backend, g0, percent, batch_size, seed, opts),
-        Algo::Tc => tc_cell(backend, g0, percent, batch_size, seed, opts),
-    }
+    let engine = make_engine(backend, &opts)?;
+    run_cell_engine(algo, &*engine, g0, percent, batch_size, seed)
 }
 
-fn sssp_cell(
-    backend: BackendKind,
+/// The single generic cell runner behind [`run_cell`]: every backend goes
+/// through the same [`DynamicEngine`] plumbing — static protocol (apply
+/// all updates, recompute from scratch), then the dynamic pipeline batch
+/// by batch from the pre-computed property, with the engine's modeled
+/// communication drained around each timed section. This replaced three
+/// ~80-line per-algorithm `match backend` blocks.
+pub fn run_cell_engine(
+    algo: Algo,
+    e: &dyn DynamicEngine,
     g0: &DynGraph,
     percent: f64,
     batch_size: usize,
     seed: u64,
-    opts: EngineOpts,
+) -> Result<Cell> {
+    match algo {
+        Algo::Sssp => sssp_cell(e, g0, percent, batch_size, seed),
+        Algo::Pr => pr_cell(e, g0, percent, batch_size, seed),
+        Algo::Tc => tc_cell(e, g0, percent, batch_size, seed),
+    }
+}
+
+fn empty_cell() -> Cell {
+    Cell { static_secs: 0.0, dynamic_secs: 0.0, static_comm_secs: 0.0, dynamic_comm_secs: 0.0 }
+}
+
+fn sssp_cell(
+    e: &dyn DynamicEngine,
+    g0: &DynGraph,
+    percent: f64,
+    batch_size: usize,
+    seed: u64,
 ) -> Result<Cell> {
     let stream = UpdateStream::generate_percent(g0, percent, batch_size, 9, seed);
     let src: NodeId = 0;
-    let mut cell = Cell { static_secs: 0.0, dynamic_secs: 0.0, static_comm_secs: 0.0, dynamic_comm_secs: 0.0 };
+    let mut cell = empty_cell();
 
-    // static protocol: updates applied up-front, recompute from scratch
+    // static protocol: updates applied up-front, recompute from scratch.
+    // The comparator is the paper-generated dense-push shape where the
+    // backend distinguishes one (§6.2; cpu's sssp_static_dense).
     let mut gs = g0.clone();
     stream.apply_all_static(&mut gs);
+    e.prepare_graph(&mut gs);
+    let (r, t_static) = time_it(|| e.sssp_static_dense(&gs, src));
+    r?;
+    cell.static_secs = t_static;
+    cell.static_comm_secs = e.drain_comm_secs();
 
-    match backend {
-        BackendKind::Serial | BackendKind::Cpu => {
-            // "StarPlat Static" comparator = the dense-push shape the
-            // paper's codegen emits (§6.2); see backend::cpu.
-            let run_static: Box<dyn Fn(&DynGraph) -> Vec<i64>> = match backend {
-                BackendKind::Serial => Box::new(move |g| sssp::static_sssp(g, src).dist),
-                _ => {
-                    let e = opts.engine();
-                    Box::new(move |g| e.sssp_static_dense(g, src).dist)
-                }
-            };
-            let (_, t_static) = time_it(|| run_static(&gs));
-            cell.static_secs = t_static;
-
-            let mut gd = g0.clone();
-            let e = opts.engine();
-            let mut st = if backend == BackendKind::Serial {
-                sssp::static_sssp(&gd, src)
-            } else {
-                e.sssp_static(&gd, src)
-            };
-            let (_, t_dyn) = time_it(|| {
-                for b in stream.batches() {
-                    if backend == BackendKind::Serial {
-                        sssp::dynamic_batch(&mut gd, &mut st, &b);
-                    } else {
-                        e.sssp_dynamic_batch(&mut gd, &mut st, &b);
-                    }
-                }
-            });
-            cell.dynamic_secs = t_dyn;
+    let mut gd = g0.clone();
+    e.prepare_graph(&mut gd);
+    let mut st = e.sssp_static(&gd, src)?;
+    e.drain_comm_secs(); // seeding solve not counted
+    let (r, t_dyn) = time_it(|| -> Result<()> {
+        for b in stream.batches() {
+            e.sssp_dynamic_batch(&mut gd, &mut st, &b)?;
         }
-        BackendKind::Dist => {
-            let e = DistEngine::new(8, crate::graph::Partition::Block);
-            let (_, t_static) = time_it(|| e.sssp_static(&gs, src));
-            cell.static_secs = t_static;
-            cell.static_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
-
-            let mut gd = g0.clone();
-            let mut st = e.sssp_static(&gd, src);
-            e.take_stats(); // seeding solve not counted
-            let (_, t_dyn) = time_it(|| {
-                for b in stream.batches() {
-                    e.sssp_dynamic_batch(&mut gd, &mut st, &b);
-                }
-            });
-            cell.dynamic_secs = t_dyn;
-            cell.dynamic_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
-        }
-        BackendKind::Xla => {
-            let e = XlaEngine::new()?;
-            let (_, t_static) = time_it(|| e.sssp_static(&gs, src));
-            cell.static_secs = t_static;
-
-            let mut gd = g0.clone();
-            let mut st = e.sssp_static(&gd, src)?;
-            let (r, t_dyn) = time_it(|| -> Result<()> {
-                for b in stream.batches() {
-                    e.sssp_dynamic_batch(&mut gd, &mut st, &b)?;
-                }
-                Ok(())
-            });
-            r?;
-            cell.dynamic_secs = t_dyn;
-        }
-    }
+        Ok(())
+    });
+    r?;
+    cell.dynamic_secs = t_dyn;
+    cell.dynamic_comm_secs = e.drain_comm_secs();
     Ok(cell)
 }
 
 fn pr_cell(
-    backend: BackendKind,
+    e: &dyn DynamicEngine,
     g0: &DynGraph,
     percent: f64,
     batch_size: usize,
     seed: u64,
-    opts: EngineOpts,
 ) -> Result<Cell> {
     let stream = UpdateStream::generate_percent(g0, percent, batch_size, 9, seed);
     let n = g0.num_nodes();
-    let mut cell = Cell { static_secs: 0.0, dynamic_secs: 0.0, static_comm_secs: 0.0, dynamic_comm_secs: 0.0 };
+    let mut cell = empty_cell();
     let mut gs = g0.clone();
     stream.apply_all_static(&mut gs);
+    e.prepare_graph(&mut gs);
 
-    match backend {
-        BackendKind::Serial => {
-            let (_, t) = time_it(|| {
-                let mut st = pr_params(n);
-                pagerank::static_pagerank(&gs, &mut st)
-            });
-            cell.static_secs = t;
-            let mut gd = g0.clone();
-            let mut st = pr_params(n);
-            pagerank::static_pagerank(&gd, &mut st);
-            let (_, t) = time_it(|| {
-                for b in stream.batches() {
-                    pagerank::dynamic_batch(&mut gd, &mut st, &b);
-                }
-            });
-            cell.dynamic_secs = t;
+    let (r, t) = time_it(|| -> Result<usize> {
+        let mut st = pr_params(n);
+        e.pr_static(&gs, &mut st)
+    });
+    r?;
+    cell.static_secs = t;
+    cell.static_comm_secs = e.drain_comm_secs();
+
+    let mut gd = g0.clone();
+    e.prepare_graph(&mut gd);
+    let mut st = pr_params(n);
+    e.pr_static(&gd, &mut st)?;
+    e.drain_comm_secs(); // seeding solve not counted
+    let (r, t) = time_it(|| -> Result<()> {
+        for b in stream.batches() {
+            e.pr_dynamic_batch(&mut gd, &mut st, &b)?;
         }
-        BackendKind::Cpu => {
-            let e = opts.engine();
-            let (_, t) = time_it(|| {
-                let mut st = pr_params(n);
-                e.pr_static(&gs, &mut st)
-            });
-            cell.static_secs = t;
-            let mut gd = g0.clone();
-            let mut st = pr_params(n);
-            e.pr_static(&gd, &mut st);
-            let (_, t) = time_it(|| {
-                for b in stream.batches() {
-                    e.pr_dynamic_batch(&mut gd, &mut st, &b);
-                }
-            });
-            cell.dynamic_secs = t;
-        }
-        BackendKind::Dist => {
-            let e = DistEngine::new(8, crate::graph::Partition::Block);
-            let (_, t) = time_it(|| {
-                let mut st = pr_params(n);
-                e.pr_static(&gs, &mut st)
-            });
-            cell.static_secs = t;
-            cell.static_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
-            let mut gd = g0.clone();
-            let mut st = pr_params(n);
-            e.pr_static(&gd, &mut st);
-            e.take_stats();
-            let (_, t) = time_it(|| {
-                for b in stream.batches() {
-                    e.pr_dynamic_batch(&mut gd, &mut st, &b);
-                }
-            });
-            cell.dynamic_secs = t;
-            cell.dynamic_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
-        }
-        BackendKind::Xla => {
-            let e = XlaEngine::new()?;
-            let (r, t) = time_it(|| -> Result<usize> {
-                let mut st = pr_params(n);
-                e.pr_static(&gs, &mut st)
-            });
-            r?;
-            cell.static_secs = t;
-            let mut gd = g0.clone();
-            let mut st = pr_params(n);
-            e.pr_static(&gd, &mut st)?;
-            let (r, t) = time_it(|| -> Result<()> {
-                for b in stream.batches() {
-                    e.pr_dynamic_batch(&mut gd, &mut st, &b)?;
-                }
-                Ok(())
-            });
-            r?;
-            cell.dynamic_secs = t;
-        }
-    }
+        Ok(())
+    });
+    r?;
+    cell.dynamic_secs = t;
+    cell.dynamic_comm_secs = e.drain_comm_secs();
     Ok(cell)
 }
 
 fn tc_cell(
-    backend: BackendKind,
+    e: &dyn DynamicEngine,
     g0: &DynGraph,
     percent: f64,
     batch_size: usize,
     seed: u64,
-    opts: EngineOpts,
 ) -> Result<Cell> {
     // TC protocol: symmetric graph + symmetric updates (§A Fig. 19).
     let gsym = triangle::symmetrize(g0);
     let (dels, adds) = triangle::symmetric_updates(&gsym, percent, batch_size, seed);
-    let mut cell = Cell { static_secs: 0.0, dynamic_secs: 0.0, static_comm_secs: 0.0, dynamic_comm_secs: 0.0 };
+    let mut cell = empty_cell();
 
     let mut gs = gsym.clone();
     for (d, a) in dels.iter().zip(&adds) {
         gs.apply_deletions(d);
         gs.apply_additions(a);
     }
+    e.prepare_graph(&mut gs);
 
-    match backend {
-        BackendKind::Serial => {
-            let (_, t) = time_it(|| triangle::static_tc(&gs));
-            cell.static_secs = t;
-            let mut gd = gsym.clone();
-            let mut st = triangle::static_tc(&gd);
-            let (_, t) = time_it(|| {
-                for (d, a) in dels.iter().zip(&adds) {
-                    triangle::dynamic_batch(&mut gd, &mut st, d, a);
-                }
-            });
-            cell.dynamic_secs = t;
+    let (r, t) = time_it(|| e.tc_static(&gs));
+    r?;
+    cell.static_secs = t;
+    cell.static_comm_secs = e.drain_comm_secs();
+
+    let mut gd = gsym.clone();
+    e.prepare_graph(&mut gd);
+    let mut st = e.tc_static(&gd)?;
+    e.drain_comm_secs(); // seeding solve not counted
+    let (r, t) = time_it(|| -> Result<()> {
+        for (d, a) in dels.iter().zip(&adds) {
+            e.tc_dynamic_batch(&mut gd, &mut st, d, a)?;
         }
-        BackendKind::Cpu => {
-            let e = opts.engine();
-            let (_, t) = time_it(|| e.tc_static(&gs));
-            cell.static_secs = t;
-            let mut gd = gsym.clone();
-            let mut st = e.tc_static(&gd);
-            let (_, t) = time_it(|| {
-                for (d, a) in dels.iter().zip(&adds) {
-                    e.tc_dynamic_batch(&mut gd, &mut st, d, a);
-                }
-            });
-            cell.dynamic_secs = t;
-        }
-        BackendKind::Dist => {
-            let e = DistEngine::new(8, crate::graph::Partition::Block);
-            let (_, t) = time_it(|| e.tc_static(&gs));
-            cell.static_secs = t;
-            cell.static_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
-            let mut gd = gsym.clone();
-            let mut st = e.tc_static(&gd);
-            e.take_stats();
-            let (_, t) = time_it(|| {
-                for (d, a) in dels.iter().zip(&adds) {
-                    e.tc_dynamic_batch(&mut gd, &mut st, d, a);
-                }
-            });
-            cell.dynamic_secs = t;
-            cell.dynamic_comm_secs = e.take_stats().modeled_secs(&e.comm_model);
-        }
-        BackendKind::Xla => {
-            let e = XlaEngine::new()?;
-            let (r, t) = time_it(|| e.tc_static(&gs));
-            r?;
-            cell.static_secs = t;
-            let mut gd = gsym.clone();
-            let mut st = TcState { triangles: e.tc_static(&gd)?.triangles };
-            let (_, t) = time_it(|| {
-                for (d, a) in dels.iter().zip(&adds) {
-                    e.tc_dynamic_batch(&mut gd, &mut st, d, a);
-                }
-            });
-            cell.dynamic_secs = t;
-        }
-    }
+        Ok(())
+    });
+    r?;
+    cell.dynamic_secs = t;
+    cell.dynamic_comm_secs = e.drain_comm_secs();
     Ok(cell)
 }
 
@@ -408,11 +273,11 @@ enum AnyService {
 }
 
 impl AnyService {
-    fn start(g: DynGraph, cfg: ServiceConfig) -> Self {
+    fn start(g: DynGraph, cfg: ServiceConfig) -> Result<Self> {
         if cfg.engine_shards > 1 {
-            AnyService::Sharded(ShardedService::start(g, cfg))
+            Ok(AnyService::Sharded(ShardedService::try_start(g, cfg)?))
         } else {
-            AnyService::Single(GraphService::start(g, cfg))
+            Ok(AnyService::Single(GraphService::try_start(g, cfg)?))
         }
     }
 
@@ -493,7 +358,8 @@ pub fn stream_workload(algo: Algo, g0: &DynGraph, percent: f64, seed: u64) -> Ve
 /// service), fan the workload out over `producers` threads, optionally
 /// spin `readers` snapshot-query threads, drain, and return throughput +
 /// latency statistics. Returns the service report alongside so callers
-/// can check end-state equivalence.
+/// can check end-state equivalence. Fails when the configured backend
+/// cannot be built (bad knob combination, or xla without PJRT).
 pub fn run_stream_cell(
     algo: Algo,
     g0: &DynGraph,
@@ -502,7 +368,7 @@ pub fn run_stream_cell(
     readers: usize,
     cfg: ServiceConfig,
     seed: u64,
-) -> (StreamCell, crate::stream::ServiceReport) {
+) -> Result<(StreamCell, crate::stream::ServiceReport)> {
     use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
     use std::sync::Arc;
 
@@ -510,7 +376,7 @@ pub fn run_stream_cell(
     let workload = stream_workload(algo, &base, percent, seed);
     let producers = producers.max(1);
     let shards = cfg.engine_shards.max(1);
-    let svc = Arc::new(AnyService::start(base, cfg));
+    let svc = Arc::new(AnyService::start(base, cfg)?);
     let stop_readers = Arc::new(AtomicBool::new(false));
     let reads = Arc::new(AtomicU64::new(0));
 
@@ -564,7 +430,7 @@ pub fn run_stream_cell(
         relay,
         stats: report.stats.clone(),
     };
-    (cell, report)
+    Ok((cell, report))
 }
 
 #[cfg(test)]
@@ -610,11 +476,53 @@ mod tests {
         let g = generators::uniform_random(200, 1000, 9, 15);
         let opts = EngineOpts {
             threads: Some(2),
-            sched: Sched::Partitioned,
-            direction: Direction::Pull,
+            sched: Some(crate::util::threadpool::Sched::Partitioned),
+            direction: Some(crate::backend::Direction::Pull),
+            ..Default::default()
         };
         let c = run_cell_with(Algo::Sssp, BackendKind::Cpu, &g, 3.0, 32, 16, opts).unwrap();
         assert!(c.static_secs > 0.0 && c.dynamic_secs > 0.0);
+    }
+
+    /// Satellite: the hardcoded 8-rank dist cell is gone — `--ranks`
+    /// plumbs through EngineOpts, observable through the comm model. One
+    /// rank pays fences only; the default 8 ranks add remote gets and
+    /// accumulates on a connected random graph, so modeled comm strictly
+    /// grows (superstep counts are rank-independent — supersteps read a
+    /// per-round snapshot — so the fence baseline cancels out).
+    #[test]
+    fn dist_cell_ranks_plumb_through_opts() {
+        let g = generators::uniform_random(200, 1000, 9, 17);
+        let one = EngineOpts { ranks: Some(1), ..Default::default() };
+        let c1 = run_cell_with(Algo::Sssp, BackendKind::Dist, &g, 2.0, 32, 18, one).unwrap();
+        let c8 = run_cell(Algo::Sssp, BackendKind::Dist, &g, 2.0, 32, 18).unwrap();
+        assert!(
+            c8.static_comm_secs > c1.static_comm_secs,
+            "8 ranks must model more static comm than 1 ({} vs {})",
+            c8.static_comm_secs,
+            c1.static_comm_secs
+        );
+        assert!(
+            c8.dynamic_comm_secs > c1.dynamic_comm_secs,
+            "8 ranks must model more dynamic comm than 1 ({} vs {})",
+            c8.dynamic_comm_secs,
+            c1.dynamic_comm_secs
+        );
+    }
+
+    /// Satellite: cpu-only knobs are rejected with a clear error instead
+    /// of being silently dropped on backends that lack them.
+    #[test]
+    fn run_cell_rejects_mismatched_knobs() {
+        let g = generators::uniform_random(50, 200, 9, 19);
+        let opts = EngineOpts {
+            direction: Some(crate::backend::Direction::Pull),
+            ..Default::default()
+        };
+        let err = run_cell_with(Algo::Sssp, BackendKind::Dist, &g, 2.0, 32, 20, opts)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--direction") && err.contains("dist"), "{err}");
     }
 
     #[test]
@@ -627,10 +535,10 @@ mod tests {
     fn stream_cell_runs_with_producers_and_readers() {
         let g = generators::uniform_random(150, 700, 9, 5);
         let mut cfg = ServiceConfig::new(Algo::Sssp);
-        cfg.threads = 2;
+        cfg.engine.threads = Some(2);
         cfg.batch_capacity = 64;
         cfg.batch_deadline = std::time::Duration::from_millis(2);
-        let (cell, report) = run_stream_cell(Algo::Sssp, &g, 10.0, 4, 2, cfg, 9);
+        let (cell, report) = run_stream_cell(Algo::Sssp, &g, 10.0, 4, 2, cfg, 9).unwrap();
         assert_eq!(cell.updates, cell.stats.completed);
         assert_eq!(cell.stats.submitted, cell.stats.completed);
         assert_eq!(cell.shards, 1);
@@ -647,7 +555,7 @@ mod tests {
         cfg.batch_capacity = 64;
         cfg.batch_deadline = std::time::Duration::from_millis(2);
         cfg.engine_shards = 2;
-        let (cell, report) = run_stream_cell(Algo::Sssp, &g, 10.0, 4, 2, cfg, 9);
+        let (cell, report) = run_stream_cell(Algo::Sssp, &g, 10.0, 4, 2, cfg, 9).unwrap();
         assert_eq!(cell.updates, cell.stats.completed);
         assert_eq!(cell.shards, 2);
         let relay = cell.relay.expect("sharded cell reports relay telemetry");

@@ -12,10 +12,13 @@
 //!   OpenMP/MPI/CUDA output.
 //! * **Graph substrate** ([`graph`]): CSR, the paper's diff-CSR dynamic
 //!   representation, update streams, Table-1-shaped generators.
-//! * **Backends** ([`backend`]): `serial` oracle interpreter, `cpu`
-//!   (OpenMP analogue), `dist` (MPI analogue with simulated RMA windows),
-//!   and `xla` (CUDA analogue: dense kernels AOT-compiled from JAX/Pallas,
-//!   executed via PJRT).
+//! * **Backends** ([`backend`]): the object-safe
+//!   [`backend::DynamicEngine`] contract (static solve + dynamic batch +
+//!   slice entry points per algorithm, [`backend::Capabilities`]
+//!   descriptor) with its [`backend::make_engine`] factory, implemented
+//!   by `serial` (oracle interpreter), `cpu` (OpenMP analogue), `dist`
+//!   (MPI analogue with simulated RMA windows), and `xla` (CUDA analogue:
+//!   dense kernels AOT-compiled from JAX/Pallas, executed via PJRT).
 //! * **Algorithms** ([`algorithms`]): hand-written static + incremental +
 //!   decremental SSSP / PageRank / Triangle Counting oracles and the
 //!   baseline-framework strategy engines (Galois/Ligra/Green-Marl/…).

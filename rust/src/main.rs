@@ -8,27 +8,33 @@
 //!       [--batch B] [--seed S] [--threads T]
 //!       [--sched dynamic[:<chunk>]|static|partitioned]
 //!       [--direction push|pull|adaptive[:<a>[,<b>]]]
+//!       [--ranks R]
 //!       run one dynamic-vs-static experiment cell and print timings.
-//!   serve --algo sssp|pr|tc [--producers N] [--readers M]
+//!       `--threads/--sched/--direction` tune the cpu engine, `--ranks`
+//!       the dist engine; a knob the chosen backend lacks is an error.
+//!   serve --algo sssp|pr|tc [--backend serial|cpu|dist|xla]
+//!       [--producers N] [--readers M]
 //!       [--batch B] [--deadline-ms D] [--shards S] [--ingest-shards Q]
 //!       [--threads T]
 //!       [--policy periodic:<k>|adaptive[:<f>[,<d>]]|never]
 //!       [--sched dynamic[:<chunk>]|static|partitioned]
 //!       [--direction push|pull|adaptive[:<a>[,<b>]]]
+//!       [--ranks R]
 //!       [--graph …] [--nodes N] [--percent P] [--seed S]
 //!       run the streaming service under a synthetic multi-producer load
-//!       and print throughput + batch-latency statistics. `--shards S`
-//!       with S > 1 shards the graph across S engine threads
-//!       (epoch-stitched snapshots + cross-shard relay);
+//!       and print throughput + batch-latency statistics. `--backend`
+//!       selects the propagation engine (every backend serves the full
+//!       ingest → batch → snapshot pipeline); `--shards S` with S > 1
+//!       shards the graph across S engine threads (cpu-backed BSP fleet,
+//!       epoch-stitched snapshots + cross-shard relay);
 //!       `--ingest-shards` sizes the producer-side queue sharding.
 //!   interp <file.sp> --fn <DynName> [--nodes N] [--percent P] …
 //!       execute a DSL program through the reference interpreter.
 //!   inspect
 //!       list the AOT artifacts the xla backend will use.
 
-use starplat_dyn::backend::cpu::Direction;
-use starplat_dyn::backend::BackendKind;
-use starplat_dyn::coordinator::{run_cell_with, run_stream_cell, Algo, EngineOpts};
+use starplat_dyn::backend::{BackendKind, Direction, EngineOpts};
+use starplat_dyn::coordinator::{run_cell_with, run_stream_cell, Algo};
 use starplat_dyn::dsl::{self, emit::Target};
 use starplat_dyn::graph::generators;
 use starplat_dyn::runtime::ArtifactManifest;
@@ -73,6 +79,53 @@ impl Args {
 
     fn get(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+}
+
+/// Collect the engine knobs actually present on the command line (absent
+/// flags stay `None` so the backend factory can distinguish "default"
+/// from "explicitly requested" and reject mismatched knobs).
+fn engine_opts(args: &Args) -> Result<EngineOpts> {
+    Ok(EngineOpts {
+        threads: match args.flags.get("threads") {
+            Some(t) => Some(t.parse()?),
+            None => None,
+        },
+        sched: match args.flags.get("sched") {
+            Some(s) => Some(s.parse::<Sched>().map_err(|e: String| anyhow!(e))?),
+            None => None,
+        },
+        direction: match args.flags.get("direction") {
+            Some(d) => Some(d.parse::<Direction>().map_err(|e: String| anyhow!(e))?),
+            None => None,
+        },
+        ranks: match args.flags.get("ranks") {
+            Some(r) => Some(r.parse()?),
+            None => None,
+        },
+    })
+}
+
+/// Human-readable knob summary for the banner lines: every knob the user
+/// actually set (threads/sched/direction/ranks), or a "default" marker.
+fn describe_opts(opts: &EngineOpts) -> String {
+    let mut parts = Vec::new();
+    if let Some(t) = opts.threads {
+        parts.push(format!("threads {t}"));
+    }
+    if let Some(s) = opts.sched {
+        parts.push(format!("sched {}", s.describe()));
+    }
+    if let Some(d) = opts.direction {
+        parts.push(format!("direction {}", d.describe()));
+    }
+    if let Some(r) = opts.ranks {
+        parts.push(format!("ranks {r}"));
+    }
+    if parts.is_empty() {
+        "engine knobs default".to_string()
+    } else {
+        parts.join(", ")
     }
 }
 
@@ -131,29 +184,15 @@ fn real_main() -> Result<()> {
             let percent: f64 = args.get("percent", "5").parse()?;
             let batch: usize = args.get("batch", "64").parse()?;
             let seed: u64 = args.get("seed", "42").parse()?;
-            let threads = match args.flags.get("threads") {
-                Some(t) => Some(t.parse()?),
-                None => None,
-            };
-            let opts = EngineOpts {
-                threads,
-                sched: args
-                    .get("sched", "dynamic")
-                    .parse::<Sched>()
-                    .map_err(|e: String| anyhow!(e))?,
-                direction: args
-                    .get("direction", "adaptive")
-                    .parse::<Direction>()
-                    .map_err(|e: String| anyhow!(e))?,
-            };
+            let opts = engine_opts(&args)?;
             let g = make_graph(&args);
             println!(
                 "graph: {} nodes / {} edges; {percent}% updates, batch {batch}, \
-                 sched {}, direction {}",
+                 backend {}, {}",
                 g.num_nodes(),
                 g.num_edges(),
-                opts.sched.describe(),
-                opts.direction.describe()
+                backend.name(),
+                describe_opts(&opts)
             );
             let cell = run_cell_with(algo, backend, &g, percent, batch, seed, opts)?;
             println!(
@@ -174,34 +213,29 @@ fn real_main() -> Result<()> {
             let readers: usize = args.get("readers", "2").parse()?;
             let seed: u64 = args.get("seed", "42").parse()?;
             let mut cfg = ServiceConfig::new(algo);
+            cfg.backend = args
+                .get("backend", "cpu")
+                .parse()
+                .map_err(|e: String| anyhow!(e))?;
+            cfg.engine = engine_opts(&args)?;
             cfg.batch_capacity = args.get("batch", "512").parse()?;
             cfg.batch_deadline = std::time::Duration::from_millis(
                 args.get("deadline-ms", "10").parse()?,
             );
             cfg.engine_shards = args.get("shards", "1").parse()?;
             cfg.shards = args.get("ingest-shards", "4").parse()?;
-            if let Some(t) = args.flags.get("threads") {
-                cfg.threads = t.parse()?;
-            }
             cfg.merge_policy = args
                 .get("policy", "adaptive")
                 .parse::<MergePolicy>()
-                .map_err(|e: String| anyhow!(e))?;
-            cfg.sched = args
-                .get("sched", "dynamic")
-                .parse::<Sched>()
-                .map_err(|e: String| anyhow!(e))?;
-            cfg.direction = args
-                .get("direction", "adaptive")
-                .parse::<Direction>()
                 .map_err(|e: String| anyhow!(e))?;
             let g = make_graph(&args);
             if cfg.engine_shards > 1 {
                 println!(
                     "serving {algo:?} on {} nodes / {} edges; {percent}% updates, \
                      {producers} producers, {readers} readers, {} engine shards \
-                     (BSP relay; --threads/--sched/--direction apply to the \
-                     single-engine service only), batch {} / {:?} deadline, policy {}",
+                     (cpu BSP relay; --backend and the engine knobs apply to \
+                     the single-engine service only), batch {} / {:?} deadline, \
+                     policy {}",
                     g.num_nodes(),
                     g.num_edges(),
                     cfg.engine_shards,
@@ -212,19 +246,19 @@ fn real_main() -> Result<()> {
             } else {
                 println!(
                     "serving {algo:?} on {} nodes / {} edges; {percent}% updates, \
-                     {producers} producers, {readers} readers, batch {} / {:?} deadline, \
-                     policy {}, sched {}, direction {}",
+                     {producers} producers, {readers} readers, backend {}, \
+                     batch {} / {:?} deadline, policy {}, {}",
                     g.num_nodes(),
                     g.num_edges(),
+                    cfg.backend.name(),
                     cfg.batch_capacity,
                     cfg.batch_deadline,
                     cfg.merge_policy.describe(),
-                    cfg.sched.describe(),
-                    cfg.direction.describe()
+                    describe_opts(&cfg.engine)
                 );
             }
             let (cell, _report) =
-                run_stream_cell(algo, &g, percent, producers, readers, cfg, seed);
+                run_stream_cell(algo, &g, percent, producers, readers, cfg, seed)?;
             if let Some(relay) = cell.relay {
                 println!(
                     "relay          : {} rounds, {} local msgs, {} cross-shard msgs",
@@ -254,6 +288,12 @@ fn real_main() -> Result<()> {
                 cell.stats.overflow_fraction,
                 cell.stats.chain_depth_ewma
             );
+            if cell.stats.modeled_comm_secs > 0.0 {
+                println!(
+                    "modeled comm   : {:.6}s (add to wall for cross-backend comparison)",
+                    cell.stats.modeled_comm_secs
+                );
+            }
             println!("coalesced      : {}", cell.stats.coalesced);
             println!("snapshot reads : {} (epoch {})", cell.snapshot_reads, cell.stats.epoch);
         }

@@ -82,6 +82,10 @@ pub struct Ingest {
     capacity: usize,
     symmetric: bool,
     stopped: AtomicBool,
+    /// Set by [`poison`](Self::poison) when the engine died mid-stream:
+    /// no completion will ever arrive again, so `wait_quiescent` must
+    /// stop waiting for them.
+    poisoned: AtomicBool,
     /// Eventcount generation, bumped (SeqCst) on every successful submit.
     avail_gen: AtomicU64,
     /// Set (SeqCst) by the batcher just before it sleeps; producers take
@@ -109,6 +113,7 @@ impl Ingest {
             capacity: capacity.max(1),
             symmetric,
             stopped: AtomicBool::new(false),
+            poisoned: AtomicBool::new(false),
             avail_gen: AtomicU64::new(0),
             batcher_waiting: AtomicBool::new(false),
             avail_m: Mutex::new(()),
@@ -298,12 +303,35 @@ impl Ingest {
         let mut g = self.quiescent_m.lock().unwrap();
         loop {
             let c = self.counters();
-            if c.completed >= c.submitted {
+            if c.completed >= c.submitted || self.poisoned.load(Ordering::Acquire) {
                 return;
             }
             let (g2, _) =
                 self.quiescent_cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
             g = g2;
+        }
+    }
+
+    /// Poison the ingest after an engine failure: stop accepting new
+    /// submissions, then force the completion counter up to everything
+    /// already submitted so [`wait_quiescent`](Self::wait_quiescent)
+    /// callers unblock instead of hanging on a dead engine. The loop
+    /// sweeps the bounded set of racing in-flight submissions (each
+    /// producer can land at most one more before its next `submit`
+    /// observes the stop flag and returns `false`).
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::Release);
+        self.stop();
+        // Sweep the completion gap for accounting; the `poisoned` flag is
+        // what actually releases `wait_quiescent` (a racing in-flight
+        // submit could reopen the gap after the last sweep, and the
+        // 50 ms condvar backstop guarantees the flag is observed).
+        loop {
+            let c = self.counters();
+            if c.completed >= c.submitted {
+                return;
+            }
+            self.complete(c.submitted - c.completed);
         }
     }
 

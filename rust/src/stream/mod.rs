@@ -19,15 +19,20 @@
 //!   [`ShardedEngine`] propagates batches across them in BSP rounds with
 //!   a cross-shard relax-message relay (the in-process halo exchange);
 //! * [`service`] — two facades: [`GraphService`] wiring
-//!   ingest → batcher → `CpuEngine` propagate → snapshot publish, and
-//!   [`ShardedService`] replacing the single engine with the shard fleet
-//!   and publishing **epoch-stitched** snapshots (per-shard epoch stamps,
-//!   all-or-nothing) so readers never observe a half-propagated batch.
+//!   ingest → batcher → a `backend::DynamicEngine` trait object
+//!   (`serve --backend {serial,cpu,dist,xla}` — any backend propagates
+//!   batches through the same pipeline) → snapshot publish, and
+//!   [`ShardedService`] replacing the single engine with the cpu-backed
+//!   shard fleet and publishing **epoch-stitched** snapshots (per-shard
+//!   epoch stamps, all-or-nothing) so readers never observe a
+//!   half-propagated batch.
 //!
-//! See `benches/stream_throughput.rs` for the shards × producers ×
-//! deadline grid (`BENCH_stream.json`) and `tests/stream_equivalence.rs`
-//! for the cross-shard equivalence matrix (sharded ≡ single-engine ≡
-//! offline, shards ∈ {1, 2, 4}).
+//! See `benches/stream_throughput.rs` for the backend × shards ×
+//! producers × deadline grid (`BENCH_stream.json`) and
+//! `tests/stream_equivalence.rs` for the equivalence matrices: the
+//! cross-shard matrix (sharded ≡ single-engine ≡ offline, shards ∈
+//! {1, 2, 4}) and the cross-backend matrix (dist ≡ cpu bitwise for
+//! SSSP/TC, oracle-equal PR; xla legs skip without PJRT).
 
 pub mod batcher;
 pub mod ingest;

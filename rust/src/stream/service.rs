@@ -3,13 +3,18 @@
 //!
 //! Wiring: N producers → [`Ingest`] (sharded, bounded, coalescing) →
 //! [`Batcher`] (size-or-deadline batch formation + merge policy) → one
-//! engine thread driving [`CpuEngine`] dynamic batches → [`SnapshotCell`]
-//! (epoch double-buffered property publication) ← M readers.
+//! engine thread driving dynamic batches through a
+//! [`DynamicEngine`] trait object (any backend: `serial`, `cpu`, `dist`,
+//! `xla` — built by [`backend::make_engine`](crate::backend::make_engine)
+//! from `cfg.backend` + `cfg.engine`) → [`SnapshotCell`] (epoch
+//! double-buffered property publication) ← M readers.
 //!
-//! The engine thread owns the [`DynGraph`] and the algorithm state
-//! outright — no lock is ever taken on the graph, so reader queries
-//! (served from the published snapshot) proceed at full speed while a
-//! batch propagates. Producers feel backpressure only through the bounded
+//! The engine thread owns the [`DynGraph`], the algorithm state, *and the
+//! engine itself* outright — the engine is constructed inside the thread
+//! (which is also what lets non-`Send` engines like `XlaEngine` serve) —
+//! so no lock is ever taken on the graph and reader queries (served from
+//! the published snapshot) proceed at full speed while a batch
+//! propagates. Producers feel backpressure only through the bounded
 //! ingest shards.
 
 use super::batcher::{Batcher, CloseReason, MergeGovernor, MergePolicy};
@@ -17,13 +22,13 @@ use super::ingest::Ingest;
 use super::shard::{RelayStats, ShardedEngine, ShardedGraph};
 use super::snapshot::{PropTable, SnapshotCell};
 use crate::algorithms::{PrState, SsspState, TcState};
-use crate::backend::cpu::{CpuEngine, Direction};
+use crate::backend::{make_engine, BackendKind, DynamicEngine, EngineOpts};
 use crate::coordinator::Algo;
 use crate::graph::{DynGraph, NodeId, Update, UpdateKind, Weight};
+use crate::util::error::{anyhow, bail, Result};
 use crate::util::stats::percentile_sorted;
-use crate::util::threadpool::Sched;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -33,17 +38,14 @@ pub struct ServiceConfig {
     pub algo: Algo,
     /// SSSP source vertex.
     pub source: NodeId,
-    /// Engine thread-pool width. Single-engine service only —
-    /// [`ShardedService`] runs one BSP thread per engine shard instead
-    /// (its parallelism knob is `engine_shards`).
-    pub threads: usize,
-    /// Loop schedule (single-engine service only; the sharded engine's
-    /// work split *is* its partition).
-    pub sched: Sched,
-    /// Traversal direction policy for the engine's frontier fixed points
-    /// (single-engine service only; the sharded engine's pulls are fixed
-    /// owner-writes sweeps).
-    pub direction: Direction,
+    /// Which backend propagates batches (single-engine service;
+    /// [`ShardedService`] runs its own BSP shard fleet and accepts only
+    /// the default `cpu` here).
+    pub backend: BackendKind,
+    /// Engine construction knobs, validated by the factory against the
+    /// chosen backend (threads/sched/direction for `cpu`, ranks for
+    /// `dist`; explicitly-set knobs a backend lacks are startup errors).
+    pub engine: EngineOpts,
     /// Ingest shard count (producer-side queue sharding; orthogonal to
     /// the engine sharding below).
     pub shards: usize,
@@ -73,9 +75,8 @@ impl ServiceConfig {
         ServiceConfig {
             algo,
             source: 0,
-            threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
-            sched: Sched::default(),
-            direction: Direction::default(),
+            backend: BackendKind::Cpu,
+            engine: EngineOpts::default(),
             shards: 4,
             shard_capacity: 4096,
             engine_shards: 1,
@@ -117,6 +118,11 @@ pub struct ServiceStats {
     /// Smoothed per-read diff-chain depth (the merge governor's
     /// traversal-cost EWMA) at the last batch boundary.
     pub chain_depth_ewma: f64,
+    /// Modeled communication seconds drained from the engine across all
+    /// batches (dist backend; 0 elsewhere). Serving-latency comparisons
+    /// across backends must add this to the wall-clock numbers, exactly
+    /// like the offline cells add `Cell::{static,dynamic}_comm_secs`.
+    pub modeled_comm_secs: f64,
     /// Published snapshot epoch.
     pub epoch: u64,
     /// Batch latency (enqueue of oldest update → snapshot publish), secs.
@@ -181,6 +187,7 @@ struct StatsInner {
     closed_by_drain: u64,
     merges: u64,
     batch_coalesced: u64,
+    comm_secs: f64,
     overflow_fraction: f64,
     chain_depth_ewma: f64,
     latencies: Vec<f64>,
@@ -212,37 +219,49 @@ pub struct GraphService {
     snapshots: Arc<SnapshotCell>,
     shared: Arc<Shared>,
     cfg: ServiceConfig,
-    worker: Mutex<Option<JoinHandle<(DynGraph, AlgoState)>>>,
+    worker: Mutex<Option<JoinHandle<Option<(DynGraph, AlgoState)>>>>,
+}
+
+/// Run the configured backend's initial static solve (the seed state the
+/// engine thread evolves batch by batch).
+fn seed_state(engine: &dyn DynamicEngine, g: &DynGraph, cfg: &ServiceConfig) -> Result<AlgoState> {
+    Ok(match cfg.algo {
+        Algo::Sssp => AlgoState::Sssp(engine.sssp_static(g, cfg.source)?),
+        Algo::Pr => {
+            let mut st = PrState::new(g.num_nodes(), cfg.pr_beta, cfg.pr_delta, cfg.pr_max_iter);
+            engine.pr_static(g, &mut st)?;
+            AlgoState::Pr(st)
+        }
+        Algo::Tc => AlgoState::Tc(engine.tc_static(g)?),
+    })
 }
 
 impl GraphService {
-    /// Seed the service: run the initial static solve on `g`, publish it
-    /// as epoch 1, then start the engine thread.
-    pub fn start(mut g: DynGraph, cfg: ServiceConfig) -> Self {
+    /// [`try_start`](Self::try_start), panicking on startup failure —
+    /// the ergonomic entry for cpu-backed services, whose construction
+    /// cannot fail.
+    pub fn start(g: DynGraph, cfg: ServiceConfig) -> Self {
+        Self::try_start(g, cfg).expect("GraphService failed to start")
+    }
+
+    /// Seed the service: build the configured backend's engine *inside*
+    /// the engine thread (non-`Send` engines like xla's stay thread-local
+    /// for their whole life), run the initial static solve on `g`,
+    /// publish it as epoch 1, then enter the batch loop. Returns once the
+    /// first snapshot is published, or with the startup error (unknown
+    /// knob combination, xla without PJRT, failed static solve).
+    pub fn try_start(mut g: DynGraph, cfg: ServiceConfig) -> Result<Self> {
         // The service owns the merge schedule (policy-driven, from the
         // batcher's seat) — disable the graph's built-in period.
         g.merge_period = 0;
-        let engine = CpuEngine::new(cfg.threads, cfg.sched).with_direction(cfg.direction);
-        g.set_merge_pool(engine.pool.clone());
-        g.set_merge_sched(engine.sched);
-        let state = match cfg.algo {
-            Algo::Sssp => AlgoState::Sssp(engine.sssp_static(&g, cfg.source)),
-            Algo::Pr => {
-                let mut st =
-                    PrState::new(g.num_nodes(), cfg.pr_beta, cfg.pr_delta, cfg.pr_max_iter);
-                engine.pr_static(&g, &mut st);
-                AlgoState::Pr(st)
-            }
-            Algo::Tc => AlgoState::Tc(engine.tc_static(&g)),
-        };
         let snapshots = Arc::new(SnapshotCell::new());
-        publish_state(&snapshots, &g, &state);
         let ingest = Arc::new(Ingest::new(cfg.shards, cfg.shard_capacity, cfg.symmetric));
         let shared = Arc::new(Shared {
             stop: AtomicBool::new(false),
             stats: Mutex::new(StatsInner::default()),
             started: Instant::now(),
         });
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
         let worker = {
             let ingest = Arc::clone(&ingest);
@@ -250,11 +269,43 @@ impl GraphService {
             let shared = Arc::clone(&shared);
             let cfg = cfg.clone();
             std::thread::spawn(move || {
-                engine_loop(g, state, engine, ingest, snapshots, shared, cfg)
+                let engine = match make_engine(cfg.backend, &cfg.engine) {
+                    Ok(e) => e,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return None;
+                    }
+                };
+                engine.prepare_graph(&mut g);
+                let state = match seed_state(&*engine, &g, &cfg) {
+                    Ok(s) => s,
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return None;
+                    }
+                };
+                // Seeding solve comm is not counted, mirroring the offline
+                // cells' protocol (the dynamic measurement starts here).
+                engine.drain_comm_secs();
+                publish_state(&snapshots, &g, &state);
+                let _ = ready_tx.send(Ok(()));
+                Some(engine_loop(g, state, &*engine, ingest, snapshots, shared, cfg))
             })
         };
 
-        GraphService { ingest, snapshots, shared, cfg, worker: Mutex::new(Some(worker)) }
+        match ready_rx.recv() {
+            Ok(Ok(())) => {
+                Ok(GraphService { ingest, snapshots, shared, cfg, worker: Mutex::new(Some(worker)) })
+            }
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = worker.join();
+                Err(anyhow!("service engine thread died during startup"))
+            }
+        }
     }
 
     /// Submit one update (blocking under backpressure). Returns `false`
@@ -322,7 +373,10 @@ impl GraphService {
         self.shared.stop.store(true, Ordering::Release);
         self.ingest.stop();
         let handle = self.worker.lock().unwrap().take().expect("shutdown called once");
-        let (graph, state) = handle.join().expect("engine thread panicked");
+        let (graph, state) = handle
+            .join()
+            .expect("engine thread panicked")
+            .expect("service cannot shut down: it never started");
         let stats = self.stats();
         ServiceReport { graph, state, stats }
     }
@@ -354,6 +408,7 @@ fn collect_stats(
         out.closed_by_deadline = inner.closed_by_deadline;
         out.closed_by_drain = inner.closed_by_drain;
         out.merges = inner.merges;
+        out.modeled_comm_secs = inner.comm_secs;
         out.overflow_fraction = inner.overflow_fraction;
         out.chain_depth_ewma = inner.chain_depth_ewma;
         inner.latencies.clone()
@@ -412,11 +467,17 @@ fn publish_sharded(cell: &SnapshotCell, g: &ShardedGraph, state: &AlgoState) {
     });
 }
 
+/// The batch loop: any backend, through the engine contract. Engine
+/// errors mid-stream (only the xla backend can produce them) poison the
+/// ingest — blocked producers and `drain()` callers unblock, later
+/// submissions are rejected — then panic the engine thread, so the
+/// failure surfaces at `shutdown()`'s join while every snapshot
+/// published before it stays consistent.
 #[allow(clippy::too_many_arguments)]
 fn engine_loop(
     mut g: DynGraph,
     mut state: AlgoState,
-    engine: CpuEngine,
+    engine: &dyn DynamicEngine,
     ingest: Arc<Ingest>,
     snapshots: Arc<SnapshotCell>,
     shared: Arc<Shared>,
@@ -430,10 +491,10 @@ fn engine_loop(
     while let Some(meta) = batcher.next_batch(&ingest, &shared.stop) {
         batcher.take_into(&mut dels, &mut adds);
 
-        match &mut state {
+        let applied = match &mut state {
             AlgoState::Sssp(st) => engine.sssp_dynamic_batch_parts(&mut g, st, &dels, &adds),
             AlgoState::Pr(st) => {
-                engine.pr_dynamic_batch_parts(&mut g, st, &dels, &adds);
+                engine.pr_dynamic_batch_parts(&mut g, st, &dels, &adds).map(|_| ())
             }
             AlgoState::Tc(st) => {
                 // TC's decremental delta counting assumes deleted arcs are
@@ -441,8 +502,15 @@ fn engine_loop(
                 // keeps deletes whose insert was cancelled, so deletes of
                 // absent arcs are legal here — drop them before counting.
                 dels.retain(|&(u, v)| g.has_edge(u, v));
-                engine.tc_dynamic_batch(&mut g, st, &dels, &adds);
+                engine.tc_dynamic_batch(&mut g, st, &dels, &adds)
             }
+        };
+        if let Err(e) = applied {
+            // Poison first so producers stop blocking and `drain()` callers
+            // unblock (wait_quiescent would otherwise spin forever on a
+            // dead engine); the panic then surfaces at `shutdown()`'s join.
+            ingest.poison();
+            panic!("{} engine failed mid-stream: {e}", engine.capabilities().name);
         }
 
         // one bitmap scan per batch: the governor folds the instantaneous
@@ -457,9 +525,11 @@ fn engine_loop(
         publish_state(&snapshots, &g, &state);
 
         let latency = meta.oldest.map(|o| o.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let comm = engine.drain_comm_secs();
         {
             let mut s = shared.stats.lock().unwrap();
             s.batches += 1;
+            s.comm_secs += comm;
             match meta.reason {
                 CloseReason::Size => s.closed_by_size += 1,
                 CloseReason::Deadline => s.closed_by_deadline += 1,
@@ -541,10 +611,36 @@ pub struct ShardedService {
 }
 
 impl ShardedService {
+    /// [`try_start`](Self::try_start), panicking on startup failure.
+    pub fn start(g: DynGraph, cfg: ServiceConfig) -> Self {
+        Self::try_start(g, cfg).expect("ShardedService failed to start")
+    }
+
     /// Partition `g` over `cfg.engine_shards` shards (edge-mass-balanced
     /// vertex blocks), run the initial static solve across the shards,
     /// publish it as epoch 1, then start the coordinator thread.
-    pub fn start(g: DynGraph, cfg: ServiceConfig) -> Self {
+    ///
+    /// The shard fleet is its own BSP engine (one thread per shard with a
+    /// cross-shard relay), not a [`DynamicEngine`] instance — so only the
+    /// default `cpu` backend selector is accepted here; running the
+    /// sharded service over non-cpu engines is a ROADMAP follow-up.
+    pub fn try_start(g: DynGraph, cfg: ServiceConfig) -> Result<Self> {
+        if cfg.backend != BackendKind::Cpu {
+            bail!(
+                "the sharded service (--shards > 1) runs its own BSP shard \
+                 engine; --backend {} is only available on the single-engine \
+                 service (drop --shards or use --backend cpu)",
+                cfg.backend.name()
+            );
+        }
+        if cfg.engine != EngineOpts::default() {
+            bail!(
+                "the sharded service ignores engine knobs \
+                 (--threads/--sched/--direction/--ranks): its parallelism is \
+                 the shard count and its schedule is the partition; drop the \
+                 knobs or drop --shards"
+            );
+        }
         let graph = ShardedGraph::partition(&g, cfg.engine_shards.max(1));
         drop(g);
         let mut engine = ShardedEngine::new();
@@ -581,7 +677,7 @@ impl ShardedService {
             })
         };
 
-        ShardedService { ingest, snapshots, shared, cfg, worker: Mutex::new(Some(worker)) }
+        Ok(ShardedService { ingest, snapshots, shared, cfg, worker: Mutex::new(Some(worker)) })
     }
 
     /// Submit one update (blocking under backpressure). Returns `false`
@@ -734,14 +830,24 @@ fn sharded_engine_loop(
 mod tests {
     use super::*;
     use crate::algorithms::{sssp, triangle};
+    use crate::backend::Direction;
     use crate::graph::{generators, UpdateStream};
+    use crate::util::threadpool::Sched;
 
     fn cfg(algo: Algo) -> ServiceConfig {
         let mut c = ServiceConfig::new(algo);
-        c.threads = 2;
+        c.engine.threads = Some(2);
         c.shards = 2;
         c.batch_capacity = 64;
         c.batch_deadline = Duration::from_millis(2);
+        c
+    }
+
+    /// Engine knobs are single-engine-only; the sharded fleet's
+    /// parallelism is its shard count.
+    fn sharded_cfg(algo: Algo) -> ServiceConfig {
+        let mut c = cfg(algo);
+        c.engine = EngineOpts::default();
         c
     }
 
@@ -773,8 +879,8 @@ mod tests {
         let g0 = generators::uniform_random(150, 800, 9, 51);
         let stream = UpdateStream::generate_percent(&g0, 12.0, 64, 9, 53);
         let mut c = cfg(Algo::Sssp);
-        c.sched = Sched::Partitioned;
-        c.direction = Direction::Pull;
+        c.engine.sched = Some(Sched::Partitioned);
+        c.engine.direction = Some(Direction::Pull);
         let svc = GraphService::start(g0.clone(), c);
         for u in &stream.updates {
             assert!(svc.submit(*u));
@@ -849,7 +955,7 @@ mod tests {
         stream.apply_all_static(&mut want);
         let oracle = sssp::dijkstra_oracle(&want, 0);
         for shards in [1usize, 2, 4] {
-            let mut c = cfg(Algo::Sssp);
+            let mut c = sharded_cfg(Algo::Sssp);
             c.engine_shards = shards;
             let svc = ShardedService::start(g0.clone(), c);
             assert_eq!(svc.epoch(), 1, "initial static solve published");
@@ -874,7 +980,7 @@ mod tests {
     fn sharded_tc_service_counts_exactly() {
         let g0 = triangle::symmetrize(&generators::uniform_random(60, 360, 5, 67));
         let workload = crate::coordinator::stream_workload(Algo::Tc, &g0, 15.0, 69);
-        let mut c = cfg(Algo::Tc);
+        let mut c = sharded_cfg(Algo::Tc);
         assert!(c.symmetric);
         c.engine_shards = 2;
         c.batch_capacity = 8;
@@ -898,7 +1004,7 @@ mod tests {
     fn sharded_snapshots_carry_uniform_stamps() {
         let g0 = generators::uniform_random(150, 700, 9, 71);
         let stream = UpdateStream::generate_percent(&g0, 15.0, 64, 9, 73);
-        let mut c = cfg(Algo::Sssp);
+        let mut c = sharded_cfg(Algo::Sssp);
         c.engine_shards = 3;
         let svc = Arc::new(ShardedService::start(g0, c));
         let stop = Arc::new(AtomicBool::new(false));

@@ -41,6 +41,14 @@
 //! are order-independent integers), and PR is oracle-equal within the
 //! convergence tolerance (float sums reassociate across shard
 //! boundaries).
+//!
+//! The shard fleet is deliberately *not* a `backend::DynamicEngine`
+//! instance: its entry points take per-shard routed buffers, not whole
+//! batches, and its parallelism is the partition itself. The
+//! single-engine [`GraphService`](super::GraphService) is the
+//! trait-backed flavor (`serve --backend {serial,cpu,dist,xla}`);
+//! running *this* fleet over non-cpu engines — or heterogeneous shards —
+//! is the ROADMAP "streaming backends" follow-up.
 
 use crate::algorithms::{pagerank, sssp, PrState, SsspState, TcState, INF};
 use crate::graph::partition::PartitionMap;

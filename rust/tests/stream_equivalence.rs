@@ -10,9 +10,18 @@
 //! oracle-equal for PR (float sums reassociate across shard boundaries) —
 //! plus the cross-shard coalescing routing property and the epoch-stitch
 //! reader test.
+//!
+//! The backend half is the **cross-backend equivalence matrix** pinning
+//! `serve --backend {serial,cpu,dist,xla}` through the `DynamicEngine`
+//! trait: dist ≡ cpu *bitwise* for SSSP (distances AND parents — both
+//! repair the SP tree with the same deterministic argmin) and TC, serial
+//! bitwise on distances/counts, PR oracle-equal across all of them; the
+//! xla leg runs when PJRT + artifacts are present and skips cleanly
+//! otherwise.
 
 use starplat_dyn::algorithms::{sssp, triangle, PrState};
 use starplat_dyn::backend::cpu::CpuEngine;
+use starplat_dyn::backend::{BackendKind, Direction, EngineOpts};
 use starplat_dyn::coordinator::{run_stream_cell, stream_workload, Algo};
 use starplat_dyn::graph::{generators, DynGraph, NodeId, Update, UpdateKind, UpdateStream};
 use starplat_dyn::stream::{
@@ -35,12 +44,24 @@ const SHARD_MATRIX: [usize; 3] = [1, 2, 4];
 /// asserts.
 fn exact_cfg(algo: Algo, batch: usize) -> ServiceConfig {
     let mut cfg = ServiceConfig::new(algo);
-    cfg.threads = 1;
-    cfg.sched = Sched::Dynamic { chunk: 64 };
+    cfg.engine.threads = Some(1);
+    cfg.engine.sched = Some(Sched::Dynamic { chunk: 64 });
     cfg.shards = 1;
     cfg.batch_capacity = batch;
     cfg.batch_deadline = Duration::from_secs(60);
     cfg.merge_policy = MergePolicy::Never;
+    cfg
+}
+
+/// [`exact_cfg`] for a non-default backend: same single-lane batching,
+/// engine knobs only where the backend has them (the factory rejects
+/// cpu knobs on other backends — that rejection has its own test).
+fn exact_backend_cfg(algo: Algo, batch: usize, backend: BackendKind) -> ServiceConfig {
+    let mut cfg = exact_cfg(algo, batch);
+    cfg.backend = backend;
+    if backend != BackendKind::Cpu {
+        cfg.engine = EngineOpts::default();
+    }
     cfg
 }
 
@@ -53,10 +74,18 @@ fn trim_to_batches(mut updates: Vec<Update>, batch: usize) -> Vec<Update> {
 
 fn concurrent_cfg(algo: Algo) -> ServiceConfig {
     let mut cfg = ServiceConfig::new(algo);
-    cfg.threads = 2;
+    cfg.engine.threads = Some(2);
     cfg.shards = 4;
     cfg.batch_capacity = 64;
     cfg.batch_deadline = Duration::from_millis(2);
+    cfg
+}
+
+/// [`concurrent_cfg`] with the engine knobs cleared — the sharded service
+/// runs its own BSP fleet and rejects single-engine knobs.
+fn concurrent_sharded_cfg(algo: Algo) -> ServiceConfig {
+    let mut cfg = concurrent_cfg(algo);
+    cfg.engine = EngineOpts::default();
     cfg
 }
 
@@ -154,7 +183,7 @@ fn sssp_multi_producer_stream_matches_offline() {
     let g0 = generators::uniform_random(400, 2000, 9, 81);
     let workload = stream_workload(Algo::Sssp, &g0, 10.0, 83);
     let (_, report) =
-        run_stream_cell(Algo::Sssp, &g0, 10.0, 4, 1, concurrent_cfg(Algo::Sssp), 83);
+        run_stream_cell(Algo::Sssp, &g0, 10.0, 4, 1, concurrent_cfg(Algo::Sssp), 83).unwrap();
 
     let mut want = g0.clone();
     apply_workload(&mut want, &workload, false);
@@ -184,7 +213,7 @@ fn pr_multi_producer_stream_tracks_offline() {
     cfg.pr_beta = 1e-9;
     cfg.pr_max_iter = 200;
     let workload = stream_workload(Algo::Pr, &g0, 8.0, 93);
-    let (_, report) = run_stream_cell(Algo::Pr, &g0, 8.0, 4, 1, cfg, 93);
+    let (_, report) = run_stream_cell(Algo::Pr, &g0, 8.0, 4, 1, cfg, 93).unwrap();
 
     let mut want = g0.clone();
     apply_workload(&mut want, &workload, false);
@@ -217,7 +246,7 @@ fn pr_multi_producer_stream_tracks_offline() {
 fn tc_multi_producer_stream_counts_exactly() {
     let g0 = generators::uniform_random(80, 480, 5, 101);
     let (_, report) =
-        run_stream_cell(Algo::Tc, &g0, 15.0, 4, 1, concurrent_cfg(Algo::Tc), 103);
+        run_stream_cell(Algo::Tc, &g0, 15.0, 4, 1, concurrent_cfg(Algo::Tc), 103).unwrap();
     let st = report.tc().expect("tc service");
     assert_eq!(
         st.triangles,
@@ -333,6 +362,7 @@ fn sssp_sharded_matrix_bitwise_vs_single_engine_and_offline() {
 
     for shards in SHARD_MATRIX {
         let mut cfg = exact_cfg(Algo::Sssp, batch);
+        cfg.engine = EngineOpts::default();
         cfg.engine_shards = shards;
         let svc = ShardedService::start(g0.clone(), cfg);
         for u in &stream.updates {
@@ -375,9 +405,10 @@ fn sssp_sharded_matrix_multi_producer_matches_oracle() {
     let oracle = sssp::dijkstra_oracle(&want, 0);
 
     for shards in SHARD_MATRIX {
-        let mut cfg = concurrent_cfg(Algo::Sssp);
+        let mut cfg = concurrent_sharded_cfg(Algo::Sssp);
         cfg.engine_shards = shards;
-        let (cell, report) = run_stream_cell(Algo::Sssp, &g0, 10.0, 4, 1, cfg, 123);
+        let (cell, report) =
+            run_stream_cell(Algo::Sssp, &g0, 10.0, 4, 1, cfg, 123).unwrap();
         assert_eq!(cell.shards, shards);
         assert_eq!(cell.stats.completed, cell.stats.submitted, "shards={shards}");
         assert_eq!(
@@ -398,9 +429,9 @@ fn tc_sharded_matrix_counts_exactly() {
     let g0 = generators::uniform_random(80, 480, 5, 131);
     let mut counts = Vec::new();
     for shards in SHARD_MATRIX {
-        let mut cfg = concurrent_cfg(Algo::Tc);
+        let mut cfg = concurrent_sharded_cfg(Algo::Tc);
         cfg.engine_shards = shards;
-        let (_, report) = run_stream_cell(Algo::Tc, &g0, 15.0, 4, 1, cfg, 133);
+        let (_, report) = run_stream_cell(Algo::Tc, &g0, 15.0, 4, 1, cfg, 133).unwrap();
         let st = report.tc().expect("tc service");
         assert_eq!(
             st.triangles,
@@ -433,11 +464,11 @@ fn pr_sharded_matrix_tracks_static_recompute() {
     engine.pr_static(&want, &mut truth);
 
     for shards in SHARD_MATRIX {
-        let mut cfg = concurrent_cfg(Algo::Pr);
+        let mut cfg = concurrent_sharded_cfg(Algo::Pr);
         cfg.pr_beta = 1e-9;
         cfg.pr_max_iter = 200;
         cfg.engine_shards = shards;
-        let (_, report) = run_stream_cell(Algo::Pr, &g0, 8.0, 4, 1, cfg, 143);
+        let (_, report) = run_stream_cell(Algo::Pr, &g0, 8.0, 4, 1, cfg, 143).unwrap();
         assert_eq!(report.graph.edges_sorted(), want.edges_sorted(), "shards={shards}");
         let st = report.pr().expect("pr service");
         let l1: f64 = st.rank.iter().zip(&truth.rank).map(|(a, b)| (a - b).abs()).sum();
@@ -497,7 +528,7 @@ fn prop_cross_shard_coalesced_pairs_are_noops() {
         }
 
         let run = |upds: &[Update]| {
-            let mut cfg = concurrent_cfg(Algo::Sssp);
+            let mut cfg = concurrent_sharded_cfg(Algo::Sssp);
             cfg.engine_shards = shards;
             cfg.batch_capacity = gen_batch(upds.len());
             let svc = ShardedService::start(g0.clone(), cfg);
@@ -538,7 +569,7 @@ fn sharded_reader_never_observes_mixed_epochs() {
     let g0 = generators::uniform_random(200, 1000, 9, 151);
     let n = g0.num_nodes();
     let stream = UpdateStream::generate_percent(&g0, 20.0, 64, 9, 153);
-    let mut cfg = concurrent_cfg(Algo::Sssp);
+    let mut cfg = concurrent_sharded_cfg(Algo::Sssp);
     cfg.engine_shards = 4;
     cfg.batch_capacity = 16; // many small batches → many publishes
     let svc = Arc::new(ShardedService::start(g0, cfg));
@@ -577,4 +608,217 @@ fn sharded_reader_never_observes_mixed_epochs() {
     let Ok(svc) = Arc::try_unwrap(svc) else { panic!("sole owner after readers joined") };
     let report = svc.shutdown();
     assert!(report.stats.batches > 1, "stitch exercised across multiple publishes");
+}
+
+// ------------------------------------------------------------ backends
+
+/// The non-cpu in-process backends of the serve matrix (xla has its own
+/// skip-aware leg below).
+const BACKEND_MATRIX: [BackendKind; 2] = [BackendKind::Serial, BackendKind::Dist];
+
+/// Backend matrix (tentpole): `serve --backend {serial,dist}` runs the
+/// full ingest → batch → snapshot pipeline and lands **bitwise** on the
+/// cpu service's SSSP distances; the dist leg also matches the SP-tree
+/// parents bitwise (cpu and dist share the deterministic argmin parent
+/// repair — serial's parents are relaxation-order and only tree-valid).
+#[test]
+fn sssp_backend_matrix_bitwise_vs_cpu_service() {
+    let g0 = generators::uniform_random(250, 1200, 9, 161);
+    let batch = 64;
+    let raw = UpdateStream::generate_percent(&g0, 12.0, batch, 9, 163);
+    let stream = UpdateStream::new(trim_to_batches(raw.updates, batch), batch);
+
+    let run = |backend: BackendKind| {
+        let cfg = exact_backend_cfg(Algo::Sssp, batch, backend);
+        let svc = GraphService::try_start(g0.clone(), cfg)
+            .unwrap_or_else(|e| panic!("{backend:?} service failed to start: {e}"));
+        for u in &stream.updates {
+            assert!(svc.submit(*u));
+        }
+        svc.drain();
+        svc.shutdown()
+    };
+
+    let cpu = run(BackendKind::Cpu);
+    let cpu_st = cpu.sssp().expect("cpu sssp service");
+    assert_eq!(cpu_st.dist, sssp::dijkstra_oracle(&cpu.graph, 0), "cpu vs oracle");
+
+    for backend in BACKEND_MATRIX {
+        let rep = run(backend);
+        assert_eq!(
+            rep.graph.edges_sorted(),
+            cpu.graph.edges_sorted(),
+            "{backend:?}: end graphs diverged from cpu"
+        );
+        let st = rep.sssp().expect("sssp service");
+        assert_eq!(st.dist, cpu_st.dist, "{backend:?}: distances vs cpu");
+        if backend == BackendKind::Dist {
+            assert_eq!(st.parent, cpu_st.parent, "dist: SP-tree parents vs cpu");
+            // the serving stats must carry the modeled communication the
+            // offline cells report, or cross-backend latency comparisons
+            // would silently drop the dist backend's dominant cost
+            assert!(
+                rep.stats.modeled_comm_secs > 0.0,
+                "dist service must drain modeled comm into its stats"
+            );
+        } else {
+            assert_eq!(rep.stats.modeled_comm_secs, 0.0, "{backend:?}: no comm model");
+        }
+        // every backend's parents must still form a valid SP tree
+        for v in 0..rep.graph.num_nodes() {
+            let p = st.parent[v];
+            if p >= 0 {
+                let w = rep
+                    .graph
+                    .edge_weight(p as NodeId, v as NodeId)
+                    .unwrap_or_else(|| panic!("{backend:?}: parent edge {p}->{v} missing"));
+                assert_eq!(st.dist[v], st.dist[p as usize] + w as i64, "{backend:?}: v={v}");
+            }
+        }
+    }
+}
+
+/// TC backend matrix: streamed delta counting is exact on every backend,
+/// so the counts are bitwise equal to the cpu service's (and to a static
+/// recount of the final graph).
+#[test]
+fn tc_backend_matrix_counts_bitwise_vs_cpu_service() {
+    let g0 = triangle::symmetrize(&generators::uniform_random(60, 360, 5, 171));
+    let workload = stream_workload(Algo::Tc, &g0, 15.0, 173);
+
+    let run = |backend: BackendKind| {
+        let mut cfg = exact_backend_cfg(Algo::Tc, 8, backend);
+        assert!(cfg.symmetric);
+        cfg.batch_capacity = 8;
+        let svc = GraphService::try_start(g0.clone(), cfg)
+            .unwrap_or_else(|e| panic!("{backend:?} service failed to start: {e}"));
+        for u in &workload {
+            assert!(svc.submit(*u));
+        }
+        svc.drain();
+        svc.shutdown()
+    };
+
+    let cpu = run(BackendKind::Cpu);
+    let cpu_count = cpu.tc().expect("cpu tc service").triangles;
+    assert_eq!(cpu_count, triangle::static_tc(&cpu.graph).triangles, "cpu vs recount");
+
+    for backend in BACKEND_MATRIX {
+        let rep = run(backend);
+        assert_eq!(
+            rep.graph.edges_sorted(),
+            cpu.graph.edges_sorted(),
+            "{backend:?}: end graphs diverged from cpu"
+        );
+        assert_eq!(
+            rep.tc().expect("tc service").triangles,
+            cpu_count,
+            "{backend:?}: triangle count vs cpu"
+        );
+    }
+}
+
+/// PR backend matrix: every backend's streamed ranks track the static
+/// recompute of the final graph at the dynamic-PR tolerance (bitwise is
+/// not expected — each backend associates its float sums differently).
+#[test]
+fn pr_backend_matrix_oracle_equal() {
+    let g0 = generators::rmat(7, 600, 0.57, 0.19, 0.19, 181);
+    let n = g0.num_nodes();
+    // 8% of ~600 edges ≈ 48 updates — batch 16 keeps whole batches after
+    // trimming (batch 64 would trim the workload to nothing)
+    let batch = 16;
+    let raw = UpdateStream::generate_percent(&g0, 8.0, batch, 9, 183);
+    let stream = UpdateStream::new(trim_to_batches(raw.updates, batch), batch);
+
+    let mut want = g0.clone();
+    stream.apply_all_static(&mut want);
+    let mut truth = PrState::new(n, 1e-9, 0.85, 200);
+    let engine = CpuEngine::new(2, Sched::Dynamic { chunk: 64 });
+    engine.pr_static(&want, &mut truth);
+
+    for backend in [BackendKind::Cpu, BackendKind::Serial, BackendKind::Dist] {
+        let mut cfg = exact_backend_cfg(Algo::Pr, batch, backend);
+        cfg.pr_beta = 1e-9;
+        cfg.pr_max_iter = 200;
+        let svc = GraphService::try_start(g0.clone(), cfg)
+            .unwrap_or_else(|e| panic!("{backend:?} service failed to start: {e}"));
+        for u in &stream.updates {
+            assert!(svc.submit(*u));
+        }
+        svc.drain();
+        let rep = svc.shutdown();
+        assert_eq!(rep.graph.edges_sorted(), want.edges_sorted(), "{backend:?}");
+        let st = rep.pr().expect("pr service");
+        let l1: f64 = st.rank.iter().zip(&truth.rank).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 < 0.05, "{backend:?}: PR diverged from static recompute, L1={l1}");
+    }
+}
+
+/// The xla serve leg: runs end to end when PJRT + artifacts are present
+/// (`--features pjrt` + `make artifacts`), and skips cleanly — a
+/// structured startup error, no panic, no half-started service — when
+/// they are not (the default dependency-free build).
+#[test]
+fn xla_backend_service_runs_or_skips_cleanly() {
+    let g0 = generators::uniform_random(150, 700, 9, 191);
+    let batch = 64;
+    let raw = UpdateStream::generate_percent(&g0, 10.0, batch, 9, 193);
+    let stream = UpdateStream::new(trim_to_batches(raw.updates, batch), batch);
+    let cfg = exact_backend_cfg(Algo::Sssp, batch, BackendKind::Xla);
+    match GraphService::try_start(g0.clone(), cfg) {
+        Err(e) => {
+            eprintln!("skipping xla serve leg: {e}");
+        }
+        Ok(svc) => {
+            for u in &stream.updates {
+                assert!(svc.submit(*u));
+            }
+            svc.drain();
+            let rep = svc.shutdown();
+            let mut want = g0.clone();
+            stream.apply_all_static(&mut want);
+            assert_eq!(rep.graph.edges_sorted(), want.edges_sorted());
+            assert_eq!(
+                rep.sssp().expect("sssp service").dist,
+                sssp::dijkstra_oracle(&want, 0),
+                "xla-served distances vs oracle"
+            );
+        }
+    }
+}
+
+/// Knob plumbing (satellite): a cpu-only knob on a non-cpu serve backend
+/// is a *startup error* naming the flag — never silently dropped — and
+/// the sharded service rejects both non-cpu backends and engine knobs.
+#[test]
+fn backend_service_rejects_mismatched_knobs() {
+    let g0 = generators::uniform_random(50, 200, 9, 195);
+
+    let mut cfg = ServiceConfig::new(Algo::Sssp);
+    cfg.backend = BackendKind::Dist;
+    cfg.engine.direction = Some(Direction::Pull);
+    let err = GraphService::try_start(g0.clone(), cfg)
+        .err()
+        .expect("dist + --direction must fail")
+        .to_string();
+    assert!(err.contains("--direction") && err.contains("dist"), "{err}");
+
+    let mut cfg = ServiceConfig::new(Algo::Sssp);
+    cfg.backend = BackendKind::Dist;
+    cfg.engine_shards = 2;
+    let err = ShardedService::try_start(g0.clone(), cfg)
+        .err()
+        .expect("sharded + non-cpu backend must fail")
+        .to_string();
+    assert!(err.contains("sharded") && err.contains("dist"), "{err}");
+
+    let mut cfg = ServiceConfig::new(Algo::Sssp);
+    cfg.engine.threads = Some(2);
+    cfg.engine_shards = 2;
+    let err = ShardedService::try_start(g0, cfg)
+        .err()
+        .expect("sharded + engine knobs must fail")
+        .to_string();
+    assert!(err.contains("--threads"), "{err}");
 }
