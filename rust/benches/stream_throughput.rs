@@ -5,6 +5,14 @@
 //! above that), reporting sustained updates/sec and p50/p99 batch latency
 //! per cell plus the cross-shard relay traffic for sharded cells.
 //!
+//! A second **runtime sweep** pins the persistent shard fleet against the
+//! spawn-per-phase baseline: skew {uniform, zipfian hub-heavy} × shards
+//! ({8, 16} full, {2} smoke) × runtime {spawn, persistent}, with in-phase
+//! work stealing and churn-driven rebalancing enabled on the persistent
+//! legs. Every JSON row carries the runtime telemetry — barrier-wait
+//! seconds, steal counts, rebalances, migrated vertices — so the
+//! spawn-vs-persistent comparison is recorded, not just printed.
+//!
 //! Usage: `cargo bench --bench stream_throughput [-- --smoke]`
 //! Output: human-readable table + `BENCH_stream.json` in the CWD
 //! (tracked as part of the perf trajectory, next to
@@ -16,11 +24,64 @@
 //! PJRT or its artifacts are absent.
 
 use starplat_dyn::backend::BackendKind;
-use starplat_dyn::coordinator::{run_stream_cell, Algo};
-use starplat_dyn::graph::generators;
+use starplat_dyn::coordinator::{run_stream_cell, run_stream_cell_workload, Algo, StreamCell};
+use starplat_dyn::graph::{generators, UpdateStream};
 use starplat_dyn::stream::{MergePolicy, ServiceConfig};
 use std::fmt::Write as _;
 use std::time::Duration;
+
+/// Append one self-describing JSON cell. `skew`/`runtime` label the leg;
+/// the relay/rebalance telemetry is zero for single-engine rows.
+#[allow(clippy::too_many_arguments)]
+fn push_row(
+    rows: &mut String,
+    backend: &str,
+    shards: usize,
+    producers: usize,
+    deadline_ms: u64,
+    batch_capacity: usize,
+    skew: &str,
+    runtime: &str,
+    cell: &StreamCell,
+) {
+    if !rows.is_empty() {
+        rows.push_str(",\n");
+    }
+    let relay = cell.relay;
+    let _ = write!(
+        rows,
+        "    {{\"backend\": \"{backend}\", \"shards\": {shards}, \
+         \"producers\": {producers}, \
+         \"deadline_ms\": {deadline_ms}, \
+         \"batch_capacity\": {batch_capacity}, \
+         \"skew\": \"{skew}\", \"runtime\": \"{runtime}\", \
+         \"updates\": {}, \"updates_per_sec\": {:.1}, \
+         \"batch_latency_p50_ms\": {:.4}, \"batch_latency_p99_ms\": {:.4}, \
+         \"batches\": {}, \"closed_by_size\": {}, \"closed_by_deadline\": {}, \
+         \"merges\": {}, \"policy\": \"{}\", \"snapshot_reads\": {}, \
+         \"modeled_comm_secs\": {:.6}, \
+         \"relay_rounds\": {}, \"relay_cross_msgs\": {}, \
+         \"barrier_wait_secs\": {:.6}, \"steals\": {}, \
+         \"rebalances\": {}, \"migrated_vertices\": {}}}",
+        cell.updates,
+        cell.updates_per_sec,
+        cell.stats.batch_latency_p50 * 1e3,
+        cell.stats.batch_latency_p99 * 1e3,
+        cell.stats.batches,
+        cell.stats.closed_by_size,
+        cell.stats.closed_by_deadline,
+        cell.stats.merges,
+        cell.stats.policy,
+        cell.snapshot_reads,
+        cell.stats.modeled_comm_secs,
+        relay.map(|r| r.rounds).unwrap_or(0),
+        relay.map(|r| r.cross_msgs).unwrap_or(0),
+        relay.map(|r| r.barrier_wait_secs).unwrap_or(0.0),
+        relay.map(|r| r.steals).unwrap_or(0),
+        cell.stats.rebalances,
+        cell.stats.migrated_vertices,
+    );
+}
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -93,37 +154,84 @@ fn main() {
                         cell.stats.coalesced,
                         cross
                     );
-                    if !rows.is_empty() {
-                        rows.push_str(",\n");
-                    }
-                    let _ = write!(
-                        rows,
-                        "    {{\"backend\": \"{}\", \"shards\": {shards}, \
-                         \"producers\": {producers}, \
-                         \"deadline_ms\": {deadline_ms}, \
-                         \"batch_capacity\": {batch_capacity}, \
-                         \"updates\": {}, \"updates_per_sec\": {:.1}, \
-                         \"batch_latency_p50_ms\": {:.4}, \"batch_latency_p99_ms\": {:.4}, \
-                         \"batches\": {}, \"closed_by_size\": {}, \"closed_by_deadline\": {}, \
-                         \"merges\": {}, \"policy\": \"{}\", \"snapshot_reads\": {}, \
-                         \"modeled_comm_secs\": {:.6}, \
-                         \"relay_rounds\": {}, \"relay_cross_msgs\": {}}}",
+                    let runtime = if shards > 1 { "persistent" } else { "single" };
+                    push_row(
+                        &mut rows,
                         backend.name(),
-                        cell.updates,
-                        cell.updates_per_sec,
-                        cell.stats.batch_latency_p50 * 1e3,
-                        cell.stats.batch_latency_p99 * 1e3,
-                        cell.stats.batches,
-                        cell.stats.closed_by_size,
-                        cell.stats.closed_by_deadline,
-                        cell.stats.merges,
-                        cell.stats.policy,
-                        cell.snapshot_reads,
-                        cell.stats.modeled_comm_secs,
-                        cell.relay.map(|r| r.rounds).unwrap_or(0),
-                        cross
+                        shards,
+                        producers,
+                        deadline_ms,
+                        batch_capacity,
+                        "uniform",
+                        runtime,
+                        &cell,
                     );
                 }
+            }
+        }
+    }
+
+    // ------------------------------------------------ runtime sweep
+    // Spawn-per-phase vs the persistent fleet (with stealing and
+    // rebalancing hot) under uniform and zipfian hub-heavy churn. The
+    // workload is shared per skew so the two runtimes chew identical
+    // updates; the acceptance comparison is the shards=8 zipfian pair.
+    let rt_shards: &[usize] = if smoke { &[2] } else { &[8, 16] };
+    let (rt_updates, rt_batch) = if smoke { (4_000, 256) } else { (80_000, 1024) };
+    let hubs = if smoke { 16 } else { 64 };
+    let rt_deadline_ms = 5u64;
+    println!("\npersistent shard runtime vs spawn-per-phase ({rt_updates} updates)");
+    println!(
+        "{:<9} {:<7} {:<11} {:>12} {:>10} {:>10} {:>11} {:>8} {:>7} {:>7}",
+        "skew", "shards", "runtime", "upd/s", "p50 ms", "p99 ms", "barrier ms", "steals",
+        "rebal", "moved"
+    );
+    for skew in ["uniform", "zipfian"] {
+        let workload = match skew {
+            "uniform" => UpdateStream::generate_count(&g, rt_updates, rt_batch, 9, 11).updates,
+            _ => {
+                UpdateStream::generate_count_skewed(&g, rt_updates, rt_batch, 9, 13, hubs).updates
+            }
+        };
+        for &shards in rt_shards {
+            for runtime in ["spawn", "persistent"] {
+                let persistent = runtime == "persistent";
+                let mut cfg = ServiceConfig::new(Algo::Sssp);
+                cfg.batch_capacity = rt_batch;
+                cfg.batch_deadline = Duration::from_millis(rt_deadline_ms);
+                cfg.shards = 4; // ingest lanes
+                cfg.engine_shards = shards;
+                cfg.merge_policy = MergePolicy::default();
+                cfg.persistent = persistent;
+                cfg.steal = persistent;
+                cfg.rebalance = if persistent { Some(1.25) } else { None };
+                let (cell, _report) =
+                    run_stream_cell_workload(g.clone(), workload.clone(), 4, 1, cfg)
+                        .expect("runtime sweep cell");
+                assert_eq!(cell.stats.completed, cell.stats.submitted);
+                assert_eq!(cell.shards, shards);
+                let relay = cell.relay.expect("sharded cells report relay stats");
+                println!(
+                    "{skew:<9} {shards:<7} {runtime:<11} {:>12.0} {:>10.3} {:>10.3} {:>11.3} {:>8} {:>7} {:>7}",
+                    cell.updates_per_sec,
+                    cell.stats.batch_latency_p50 * 1e3,
+                    cell.stats.batch_latency_p99 * 1e3,
+                    relay.barrier_wait_secs * 1e3,
+                    relay.steals,
+                    cell.stats.rebalances,
+                    cell.stats.migrated_vertices
+                );
+                push_row(
+                    &mut rows,
+                    "cpu",
+                    shards,
+                    4,
+                    rt_deadline_ms,
+                    rt_batch,
+                    skew,
+                    runtime,
+                    &cell,
+                );
             }
         }
     }

@@ -369,11 +369,26 @@ pub fn run_stream_cell(
     cfg: ServiceConfig,
     seed: u64,
 ) -> Result<(StreamCell, crate::stream::ServiceReport)> {
+    let base = if algo == Algo::Tc { triangle::symmetrize(g0) } else { g0.clone() };
+    let workload = stream_workload(algo, &base, percent, seed);
+    run_stream_cell_workload(base, workload, producers, readers, cfg)
+}
+
+/// [`run_stream_cell`] with a caller-built workload: the bench sweeps use
+/// this to drive the same service pipeline under non-default update
+/// distributions (e.g. zipfian hub-heavy churn from
+/// [`UpdateStream::generate_count_skewed`]). `base` must already be in
+/// the shape the service expects (symmetrized for TC).
+pub fn run_stream_cell_workload(
+    base: DynGraph,
+    workload: Vec<Update>,
+    producers: usize,
+    readers: usize,
+    cfg: ServiceConfig,
+) -> Result<(StreamCell, crate::stream::ServiceReport)> {
     use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
     use std::sync::Arc;
 
-    let base = if algo == Algo::Tc { triangle::symmetrize(g0) } else { g0.clone() };
-    let workload = stream_workload(algo, &base, percent, seed);
     let producers = producers.max(1);
     let shards = cfg.engine_shards.max(1);
     let svc = Arc::new(AnyService::start(base, cfg)?);

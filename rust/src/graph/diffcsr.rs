@@ -574,6 +574,40 @@ impl DynGraph {
             + usize::from(!self.fwd.pending.is_empty())
     }
 
+    /// Remove and return vertex `v`'s live out-row `(dest, weight)`, sorted
+    /// by destination. Built for shard migration (churn-driven
+    /// rebalancing): the returned row is exactly what
+    /// [`ingest_row`](Self::ingest_row) needs to recreate `v`'s ownership
+    /// in another shard's `DynGraph`. Goes through
+    /// [`delete_edge`](Self::delete_edge), so the backward mirror and both
+    /// degree caches stay consistent. Epoch-neutral (only
+    /// [`apply_additions`](Self::apply_additions) seals batches).
+    pub fn extract_row(&mut self, v: NodeId) -> Vec<(NodeId, Weight)> {
+        let mut row: Vec<(NodeId, Weight)> = self.out_neighbors(v).collect();
+        row.sort_unstable();
+        for &(d, _) in &row {
+            let ok = self.delete_edge(v, d);
+            debug_assert!(ok, "extract_row: live neighbor {v}->{d} must delete");
+        }
+        row
+    }
+
+    /// Insert a migrated out-row for vertex `v` (the counterpart of
+    /// [`extract_row`](Self::extract_row)). Returns the number of edges
+    /// inserted (edges already present are skipped, matching
+    /// [`add_edge`](Self::add_edge) semantics). Inserts that find no vacant
+    /// base slot stage in the pending overflow list and are sealed by the
+    /// next batch's `apply_additions` — epoch-neutral here.
+    pub fn ingest_row(&mut self, v: NodeId, row: &[(NodeId, Weight)]) -> usize {
+        let mut inserted = 0;
+        for &(d, w) in row {
+            if self.add_edge(v, d, w) {
+                inserted += 1;
+            }
+        }
+        inserted
+    }
+
     /// All live edges (sorted) — used by tests/oracles.
     pub fn edges_sorted(&self) -> Vec<(NodeId, NodeId, Weight)> {
         let mut e = self.fwd.live_edges();
@@ -831,6 +865,58 @@ mod tests {
         g.merge();
         assert_eq!(g.overflow_touched(), 0, "merge resets the bitmap");
         assert_eq!(g.diff_live_edges(), 0);
+    }
+
+    /// Migration roundtrip: extracting a row from one replica and ingesting
+    /// it into another must move the edges exactly — edge set, both degree
+    /// caches, in-neighbor mirrors, and epochs all preserved.
+    #[test]
+    fn extract_ingest_row_migrates_between_graphs() {
+        let full = crate::graph::generators::uniform_random(60, 300, 9, 33);
+        let n = full.num_nodes();
+        // Split ownership: graph A holds rows of sources < 30, B the rest
+        // (both over the full vertex space, like shards).
+        let all = full.edges_sorted();
+        let ea: Vec<_> = all.iter().copied().filter(|&(u, _, _)| u < 30).collect();
+        let eb: Vec<_> = all.iter().copied().filter(|&(u, _, _)| u >= 30).collect();
+        let mut ga = DynGraph::from_edges(n, &ea);
+        let mut gb = DynGraph::from_edges(n, &eb);
+        ga.merge_period = 0;
+        gb.merge_period = 0;
+        let epoch_a = ga.epoch();
+        let epoch_b = gb.epoch();
+
+        // Migrate sources 10..20 from A to B.
+        let mut moved_edges = 0usize;
+        for v in 10..20u32 {
+            let row = ga.extract_row(v);
+            assert!(row.windows(2).all(|w| w[0].0 < w[1].0), "row sorted, no dups");
+            moved_edges += gb.ingest_row(v, &row);
+            assert_eq!(ga.out_degree(v), 0, "row fully drained from A");
+            assert_eq!(gb.out_degree(v) as usize, row.len(), "row fully landed in B");
+        }
+        assert_eq!(ga.epoch(), epoch_a, "extract is epoch-neutral");
+        assert_eq!(gb.epoch(), epoch_b, "ingest is epoch-neutral");
+
+        // The union must equal the original graph, with the moved rows in B.
+        let mut merged = ga.edges_sorted();
+        merged.extend(gb.edges_sorted());
+        merged.sort_unstable();
+        assert_eq!(merged, all, "no edge lost or duplicated by migration");
+        let in_b: usize = (10..20u32).map(|v| gb.out_degree(v) as usize).sum();
+        assert_eq!(in_b, moved_edges);
+        // In-neighbor mirrors follow the move: B now reports the migrated
+        // sources among its in-neighbors.
+        for &(u, v, w) in all.iter().filter(|&&(u, _, _)| (10..20).contains(&u)) {
+            assert!(gb.has_edge(u, v));
+            assert_eq!(gb.edge_weight(u, v), Some(w));
+            assert!(gb.in_neighbors(v).any(|(s, sw)| s == u && sw == w));
+            assert!(!ga.has_edge(u, v));
+        }
+        // Empty rows are fine in both directions.
+        let empty = ga.extract_row(10);
+        assert!(empty.is_empty());
+        assert_eq!(gb.ingest_row(10, &empty), 0);
     }
 
     /// Reference model: adjacency map. diff-CSR must stay equivalent under

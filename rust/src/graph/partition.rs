@@ -52,21 +52,36 @@ impl PartitionMap {
     /// contiguous — the same contract [`Partition::Block`] gives the
     /// partition-affine schedule — but a skewed graph no longer parks all
     /// its hubs on rank 0's shard.
+    ///
+    /// The split is a pure function of the degree vector: each boundary is
+    /// `prefix.partition_point(|&m| m < target)` over an explicit inclusive
+    /// prefix-sum array, i.e. the *smallest* vertex index whose cumulative
+    /// mass reaches the rank's target. The earlier incremental scan
+    /// resolved ties (runs of zero-mass plateau vertices around a target)
+    /// by whatever position the previous boundary's loop had stopped at,
+    /// so boundary placement depended on evaluation order; the closed form
+    /// makes online re-partitioning (churn-driven rebalancing) reproducible
+    /// byte-for-byte.
     pub fn edge_balanced(n: usize, ranks: usize, out_degree: &[u32]) -> Self {
         assert!(ranks >= 1);
         assert_eq!(out_degree.len(), n, "one degree per vertex");
-        let total: u64 = out_degree.iter().map(|&d| d as u64 + 1).sum();
+        // prefix[v] = total mass of vertices 0..v (exclusive; length n+1)
+        let mut prefix = Vec::with_capacity(n + 1);
+        let mut acc: u64 = 0;
+        prefix.push(0);
+        for &d in out_degree {
+            acc += d as u64 + 1;
+            prefix.push(acc);
+        }
+        let total = acc;
         let mut bounds = Vec::with_capacity(ranks + 1);
         bounds.push(0);
-        let mut acc: u64 = 0;
-        let mut v = 0usize;
         for r in 1..ranks {
             let target = total * r as u64 / ranks as u64;
-            while v < n && acc < target {
-                acc += out_degree[v] as u64 + 1;
-                v += 1;
-            }
-            bounds.push(v);
+            // Smallest v whose first-v-vertices mass reaches the target:
+            // everything strictly below the boundary belongs to earlier
+            // ranks. `target <= total = prefix[n]`, so the result is <= n.
+            bounds.push(prefix.partition_point(|&m| m < target));
         }
         bounds.push(n);
         debug_assert!(bounds.windows(2).all(|w| w[0] <= w[1]));
@@ -247,6 +262,40 @@ mod tests {
         // new() with EdgeBalanced but no degrees falls back to Block
         let pb = PartitionMap::new(100, 4, Partition::EdgeBalanced);
         assert_eq!(pb.kind, Partition::Block);
+    }
+
+    #[test]
+    fn edge_balanced_boundaries_are_deterministic_and_minimal() {
+        // Uniform plateau: every boundary must land exactly on the closed
+        // form `first v with mass(0..v) >= total*r/ranks`, independent of
+        // scan order. Pins the deterministic prefix-sum split.
+        let p = PartitionMap::edge_balanced(100, 4, &[0; 100]);
+        let bounds: Vec<usize> = (0..4).map(|r| p.owned_range(r).start).collect();
+        assert_eq!(bounds, vec![0, 25, 50, 75]);
+        assert_eq!(p.owned_range(3), 75..100);
+
+        // Skewed case: check minimality of every boundary against a
+        // from-scratch prefix scan (no dependence on earlier boundaries).
+        let deg: Vec<u32> = [40u32, 0, 0, 3, 3, 3, 0, 0, 12, 1, 0, 7].to_vec();
+        let n = deg.len();
+        let ranks = 5;
+        let p = PartitionMap::edge_balanced(n, ranks, &deg);
+        let total: u64 = deg.iter().map(|&d| d as u64 + 1).sum();
+        for r in 1..ranks {
+            let target = total * r as u64 / ranks as u64;
+            let b = p.owned_range(r).start;
+            let mass = |v: usize| -> u64 { deg[..v].iter().map(|&d| d as u64 + 1).sum() };
+            assert!(mass(b) >= target, "rank {r}: boundary {b} reaches target");
+            assert!(
+                b == 0 || mass(b - 1) < target,
+                "rank {r}: boundary {b} is the smallest qualifying vertex"
+            );
+        }
+        // Identical inputs give identical boundaries (pure function).
+        let q = PartitionMap::edge_balanced(n, ranks, &deg);
+        for r in 0..ranks {
+            assert_eq!(p.owned_range(r), q.owned_range(r));
+        }
     }
 
     #[test]

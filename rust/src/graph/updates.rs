@@ -227,6 +227,71 @@ impl UpdateStream {
         UpdateStream::new(updates, batch_size)
     }
 
+    /// Skewed (zipfian hub-heavy) churn: like
+    /// [`generate_count`](Self::generate_count), but addition *sources* are
+    /// drawn zipf-like (exponent 1) over the `hubs` lowest vertex ids —
+    /// rank `i` is chosen with probability ∝ `1/(i+1)` — so insert mass
+    /// piles onto a handful of contiguous hub rows. Deletions still sample
+    /// the live edge set uniformly. This is the adversarial workload for
+    /// the sharded runtime: seed-time `edge_balanced` boundaries go stale
+    /// as the hubs grow, exercising in-phase stealing and churn-driven
+    /// rebalancing. Deterministic in `seed`.
+    pub fn generate_count_skewed(
+        g: &DynGraph,
+        total: usize,
+        batch_size: usize,
+        max_w: Weight,
+        seed: u64,
+        hubs: usize,
+    ) -> UpdateStream {
+        let mut rng = Rng::new(seed);
+        let n = g.num_nodes();
+        let hubs = hubs.clamp(1, n.max(1));
+        let n_del = total / 2;
+        let n_add = total - n_del;
+
+        let live = g.edges_sorted();
+        let n_del = n_del.min(live.len());
+        let idx = rng.sample_distinct(live.len().max(1), if live.is_empty() { 0 } else { n_del });
+        let mut updates: Vec<Update> = idx
+            .into_iter()
+            .map(|i| {
+                let (u, v, w) = live[i];
+                Update { kind: UpdateKind::Delete, src: u, dst: v, weight: w }
+            })
+            .collect();
+
+        let mut present: std::collections::HashSet<(NodeId, NodeId)> =
+            live.iter().map(|&(u, v, _)| (u, v)).collect();
+        let mut added = 0usize;
+        let mut attempts = 0usize;
+        while added < n_add && attempts < n_add * 64 + 1024 {
+            attempts += 1;
+            // Zipf(1) over hub ranks by rejection: accept rank i with
+            // probability 1/(i+1).
+            let u = loop {
+                let i = rng.below_usize(hubs);
+                if rng.below(i as u64 + 1) == 0 {
+                    break i as NodeId;
+                }
+            };
+            let v = rng.below_usize(n) as NodeId;
+            if u == v || present.contains(&(u, v)) {
+                continue;
+            }
+            present.insert((u, v));
+            updates.push(Update {
+                kind: UpdateKind::Add,
+                src: u,
+                dst: v,
+                weight: 1 + rng.below(max_w.max(1) as u64) as Weight,
+            });
+            added += 1;
+        }
+        rng.shuffle(&mut updates);
+        UpdateStream::new(updates, batch_size)
+    }
+
     /// Apply the whole stream *statically*: mutate `g` up-front with no
     /// per-batch processing (the paper's static-algorithm protocol, where
     /// properties are then recomputed from scratch).
@@ -347,6 +412,34 @@ mod tests {
         let mut gd = g.clone();
         dec.apply_all_static(&mut gd);
         assert_eq!(gd.num_edges(), g.num_edges() - dec.len());
+    }
+
+    #[test]
+    fn skewed_stream_concentrates_additions_on_hubs() {
+        let g = small_graph(12);
+        let s = UpdateStream::generate_count_skewed(&g, 400, 32, 9, 17, 8);
+        let adds: Vec<&Update> =
+            s.updates.iter().filter(|u| u.kind == UpdateKind::Add).collect();
+        assert!(!adds.is_empty());
+        // every addition source is a hub, fresh, non-self
+        for u in &adds {
+            assert!(u.src < 8, "hub-heavy source");
+            assert!(u.src != u.dst);
+            assert!(!g.has_edge(u.src, u.dst));
+        }
+        // zipf skew: hub 0 strictly dominates the tail hub
+        let c0 = adds.iter().filter(|u| u.src == 0).count();
+        let c7 = adds.iter().filter(|u| u.src == 7).count();
+        assert!(c0 > c7, "zipf head {c0} must beat tail {c7}");
+        // deletions still target live edges; stream applies cleanly
+        let mut ga = g.clone();
+        for b in s.batches() {
+            ga.apply_deletions_iter(b.deletions());
+            ga.apply_additions_iter(b.additions());
+        }
+        // deterministic in seed
+        let t = UpdateStream::generate_count_skewed(&g, 400, 32, 9, 17, 8);
+        assert_eq!(s.updates, t.updates);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 //!   serve --algo sssp|pr|tc [--backend serial|cpu|dist|xla]
 //!       [--producers N] [--readers M]
 //!       [--batch B] [--deadline-ms D] [--shards S] [--ingest-shards Q]
+//!       [--runtime persistent|spawn] [--steal on|off] [--rebalance T|off]
 //!       [--threads T]
 //!       [--policy periodic:<k>|adaptive[:<f>[,<d>]]|never]
 //!       [--sched dynamic[:<chunk>]|static|partitioned]
@@ -26,8 +27,11 @@
 //!       selects the propagation engine (every backend serves the full
 //!       ingest → batch → snapshot pipeline); `--shards S` with S > 1
 //!       shards the graph across S engine threads (cpu-backed BSP fleet,
-//!       epoch-stitched snapshots + cross-shard relay);
-//!       `--ingest-shards` sizes the producer-side queue sharding.
+//!       epoch-stitched snapshots + cross-shard relay); `--runtime`,
+//!       `--steal`, and `--rebalance` tune the persistent shard runtime
+//!       (resident workers / in-phase work stealing / churn-driven row
+//!       migration); `--ingest-shards` sizes the producer-side queue
+//!       sharding.
 //!   interp <file.sp> --fn <DynName> [--nodes N] [--percent P] …
 //!       execute a DSL program through the reference interpreter.
 //!   inspect
@@ -228,17 +232,34 @@ fn real_main() -> Result<()> {
                 .get("policy", "adaptive")
                 .parse::<MergePolicy>()
                 .map_err(|e: String| anyhow!(e))?;
+            cfg.persistent = match args.get("runtime", "persistent").as_str() {
+                "persistent" => true,
+                "spawn" => false,
+                other => bail!("--runtime {other:?}: expected persistent|spawn"),
+            };
+            cfg.steal = match args.get("steal", "off").as_str() {
+                "on" => true,
+                "off" => false,
+                other => bail!("--steal {other:?}: expected on|off"),
+            };
+            cfg.rebalance = match args.get("rebalance", "off").as_str() {
+                "off" => None,
+                t => Some(t.parse::<f64>().context("--rebalance expects a threshold like 1.5, or off")?),
+            };
             let g = make_graph(&args);
             if cfg.engine_shards > 1 {
                 println!(
                     "serving {algo:?} on {} nodes / {} edges; {percent}% updates, \
                      {producers} producers, {readers} readers, {} engine shards \
-                     (cpu BSP relay; --backend and the engine knobs apply to \
-                     the single-engine service only), batch {} / {:?} deadline, \
-                     policy {}",
+                     ({} runtime, steal {}, rebalance {}; --backend and the \
+                     engine knobs apply to the single-engine service only), \
+                     batch {} / {:?} deadline, policy {}",
                     g.num_nodes(),
                     g.num_edges(),
                     cfg.engine_shards,
+                    if cfg.persistent { "persistent-fleet" } else { "spawn-per-phase" },
+                    if cfg.steal { "on" } else { "off" },
+                    cfg.rebalance.map_or("off".to_string(), |t| format!("{t}")),
                     cfg.batch_capacity,
                     cfg.batch_deadline,
                     cfg.merge_policy.describe(),
@@ -264,6 +285,20 @@ fn real_main() -> Result<()> {
                     "relay          : {} rounds, {} local msgs, {} cross-shard msgs",
                     relay.rounds, relay.local_msgs, relay.cross_msgs
                 );
+                println!(
+                    "shard runtime  : {} stolen chunks, {:.4}s barrier wait, \
+                     {} rebalances ({} vertices migrated)",
+                    relay.steals,
+                    relay.barrier_wait_secs,
+                    cell.stats.rebalances,
+                    cell.stats.migrated_vertices
+                );
+                for l in &cell.stats.shard_loads {
+                    println!(
+                        "  shard {:>3}    : {:>9} edges, steals {:>6} donated / {:>6} received, {} merges",
+                        l.shard, l.edge_mass, l.steals_donated, l.steals_received, l.merges
+                    );
+                }
             }
             println!("updates        : {}", cell.updates);
             println!("wall           : {:.4}s", cell.wall_secs);

@@ -213,10 +213,11 @@ impl MergeGovernor {
     }
 
     /// Signal-level variant of [`after_batch`](Self::after_batch): the
-    /// sharded service aggregates its signals across shards (deepest
-    /// per-shard chain, global overflow fraction — shard bitmaps flag
-    /// disjoint owned sources) and feeds them here, so both service
-    /// flavors share one EWMA/decision path.
+    /// sharded service runs one governor *per shard*, feeding each its own
+    /// shard's chain depth and owned-range overflow fraction, so a
+    /// deep-chained shard compacts alone instead of triggering a global
+    /// `merge_all` — while both service flavors share one EWMA/decision
+    /// path.
     pub fn observe(&mut self, chain_len: usize, overflow_fraction: f64) -> MergeSignal {
         self.batches_since += 1;
         let depth_now = overflow_fraction * chain_len as f64;

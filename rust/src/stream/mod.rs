@@ -17,7 +17,12 @@
 //!   graph over N owner-computes engine shards (edge-mass-balanced
 //!   vertex blocks via `graph::partition::PartitionMap`), and
 //!   [`ShardedEngine`] propagates batches across them in BSP rounds with
-//!   a cross-shard relax-message relay (the in-process halo exchange);
+//!   a cross-shard relax-message relay (the in-process halo exchange).
+//!   Phases run on the **persistent shard fleet**
+//!   (`util::barrier::ShardFleet`: resident pinned workers + a reusable
+//!   sense-reversing phase barrier) with optional in-phase work stealing
+//!   and churn-driven shard rebalancing (online `edge_balanced`
+//!   re-partitioning with diff-CSR row migration);
 //! * [`service`] — two facades: [`GraphService`] wiring
 //!   ingest → batcher → a `backend::DynamicEngine` trait object
 //!   (`serve --backend {serial,cpu,dist,xla}` — any backend propagates
@@ -31,8 +36,9 @@
 //! producers × deadline grid (`BENCH_stream.json`) and
 //! `tests/stream_equivalence.rs` for the equivalence matrices: the
 //! cross-shard matrix (sharded ≡ single-engine ≡ offline, shards ∈
-//! {1, 2, 4}) and the cross-backend matrix (dist ≡ cpu bitwise for
-//! SSSP/TC, oracle-equal PR; xla legs skip without PJRT).
+//! {1, 2, 4, 8}, including steal + live-rebalance legs) and the
+//! cross-backend matrix (dist ≡ cpu bitwise for SSSP/TC, oracle-equal
+//! PR; xla legs skip without PJRT).
 
 pub mod batcher;
 pub mod ingest;
@@ -43,8 +49,8 @@ pub mod snapshot;
 pub use batcher::{BatchMeta, Batcher, CloseReason, MergeGovernor, MergePolicy, MergeSignal};
 pub use ingest::{Counters, Ingest};
 pub use service::{
-    AlgoState, GraphService, ServiceConfig, ServiceReport, ServiceStats, ShardedReport,
-    ShardedService,
+    AlgoState, GraphService, ServiceConfig, ServiceReport, ServiceStats, ShardLoad,
+    ShardedReport, ShardedService,
 };
 pub use shard::{RelayStats, ShardedEngine, ShardedGraph};
 pub use snapshot::{PropTable, SnapshotCell};

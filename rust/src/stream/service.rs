@@ -61,6 +61,23 @@ pub struct ServiceConfig {
     /// …or when its oldest update has waited this long.
     pub batch_deadline: Duration,
     pub merge_policy: MergePolicy,
+    /// Run the sharded service on the persistent shard fleet (resident
+    /// pinned workers + reusable phase barrier) instead of spawning scoped
+    /// threads for every BSP phase. On by default; `false` keeps the
+    /// spawn-per-phase execution for A/B benchmarking. Ignored by
+    /// [`GraphService`] and at `engine_shards <= 1`.
+    pub persistent: bool,
+    /// In-phase work stealing for the push/relax scatter: idle shard
+    /// workers claim frontier chunks from the most loaded shard (messages
+    /// are still applied by their owners, so results are bitwise
+    /// unchanged). Sharded service only.
+    pub steal: bool,
+    /// Churn-driven rebalancing threshold: when the max-shard edge mass
+    /// exceeds this multiple of the ideal (total/shards), recompute the
+    /// `edge_balanced` boundaries online and migrate the moved vertices'
+    /// diff-CSR rows at the batch boundary. `None` disables. Sharded
+    /// service only; sensible values start around `1.5`.
+    pub rebalance: Option<f64>,
     /// Treat each submitted update as an undirected edge (both arcs
     /// applied per batch) — the TC protocol. Defaults to true for TC.
     pub symmetric: bool,
@@ -83,6 +100,9 @@ impl ServiceConfig {
             batch_capacity: 512,
             batch_deadline: Duration::from_millis(10),
             merge_policy: MergePolicy::default(),
+            persistent: true,
+            steal: false,
+            rebalance: None,
             symmetric: algo == Algo::Tc,
             pr_beta: 1e-3,
             pr_delta: 0.85,
@@ -97,6 +117,22 @@ pub enum AlgoState {
     Sssp(SsspState),
     Pr(PrState),
     Tc(TcState),
+}
+
+/// Per-shard load telemetry (sharded service): lets skew, stealing, and
+/// merge traffic be read off the serve printout / stats JSON without a
+/// profiler.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShardLoad {
+    pub shard: usize,
+    /// Live edges currently owned by this shard.
+    pub edge_mass: u64,
+    /// Relax-frontier chunks this shard's workers gave up to thieves.
+    pub steals_donated: u64,
+    /// Relax-frontier chunks this shard's worker claimed from victims.
+    pub steals_received: u64,
+    /// Shard-local merges performed by the per-shard governor.
+    pub merges: u64,
 }
 
 /// Point-in-time service statistics.
@@ -123,6 +159,14 @@ pub struct ServiceStats {
     /// across backends must add this to the wall-clock numbers, exactly
     /// like the offline cells add `Cell::{static,dynamic}_comm_secs`.
     pub modeled_comm_secs: f64,
+    /// Online rebalances performed (sharded service; see
+    /// [`ServiceConfig::rebalance`]).
+    pub rebalances: u64,
+    /// Vertices whose rows migrated between shards across all rebalances.
+    pub migrated_vertices: u64,
+    /// Per-shard load at the last batch boundary (sharded service; empty
+    /// for [`GraphService`]).
+    pub shard_loads: Vec<ShardLoad>,
     /// Published snapshot epoch.
     pub epoch: u64,
     /// Batch latency (enqueue of oldest update → snapshot publish), secs.
@@ -190,6 +234,9 @@ struct StatsInner {
     comm_secs: f64,
     overflow_fraction: f64,
     chain_depth_ewma: f64,
+    rebalances: u64,
+    migrated_vertices: u64,
+    shard_loads: Vec<ShardLoad>,
     latencies: Vec<f64>,
     lcg: u64,
 }
@@ -411,6 +458,9 @@ fn collect_stats(
         out.modeled_comm_secs = inner.comm_secs;
         out.overflow_fraction = inner.overflow_fraction;
         out.chain_depth_ewma = inner.chain_depth_ewma;
+        out.rebalances = inner.rebalances;
+        out.migrated_vertices = inner.migrated_vertices;
+        out.shard_loads = inner.shard_loads.clone();
         inner.latencies.clone()
     };
     if !lat.is_empty() {
@@ -644,6 +694,14 @@ impl ShardedService {
         let graph = ShardedGraph::partition(&g, cfg.engine_shards.max(1));
         drop(g);
         let mut engine = ShardedEngine::new();
+        // The persistent fleet is spawned once here and lives until
+        // shutdown; every BSP phase (including the static seed solve
+        // below) is a closure delivered to the resident workers instead of
+        // a fresh thread::scope.
+        if cfg.persistent && graph.num_shards() > 1 {
+            engine.attach_fleet(crate::util::ShardFleet::new(graph.num_shards()));
+        }
+        engine.set_steal(cfg.steal);
         let state = match cfg.algo {
             Algo::Sssp => AlgoState::Sssp(engine.sssp_static(&graph, cfg.source)),
             Algo::Pr => {
@@ -774,7 +832,11 @@ fn sharded_engine_loop(
     let nshards = g.num_shards();
     let mut dels_by: Vec<Vec<(NodeId, NodeId)>> = vec![Vec::new(); nshards];
     let mut adds_by: Vec<Vec<(NodeId, NodeId, Weight)>> = vec![Vec::new(); nshards];
-    let mut governor = MergeGovernor::new(cfg.merge_policy);
+    // One merge governor per shard: a deep-chained shard merges alone
+    // instead of one hot shard forcing a global merge_all.
+    let mut governors: Vec<MergeGovernor> =
+        (0..nshards).map(|_| MergeGovernor::new(cfg.merge_policy)).collect();
+    let mut merges_by: Vec<u64> = vec![0; nshards];
 
     while let Some(meta) = batcher.next_batch(&ingest, &shared.stop) {
         batcher.take_into(&mut dels, &mut adds);
@@ -794,11 +856,36 @@ fn sharded_engine_loop(
             AlgoState::Tc(st) => engine.tc_dynamic_batch(&mut g, st, &dels_by, &adds_by),
         }
 
-        // aggregate merge signal: deepest shard chain × global overflow
-        // heat, through the same governor EWMA the single-engine loop uses
-        let signal = governor.observe(g.diff_chain_len(), g.overflow_fraction());
-        if signal.merge {
-            g.merge_all();
+        // Per-shard merge governance: each governor watches its own
+        // shard's chain depth and overflow heat, and only the flagged
+        // shards compact (in one fleet phase). Aggregate stats keep the
+        // single-engine shape: global overflow fraction, max EWMA.
+        let mut merge_flags = vec![false; nshards];
+        let mut ewma_max = 0.0f64;
+        let mut any_merge = false;
+        for (r, gov) in governors.iter_mut().enumerate() {
+            let sig =
+                gov.observe(g.shard(r).diff_chain_len(), g.shard_overflow_fraction(r));
+            ewma_max = ewma_max.max(sig.ewma_depth);
+            if sig.merge {
+                merge_flags[r] = true;
+                merges_by[r] += 1;
+                any_merge = true;
+            }
+        }
+        let merged =
+            if any_merge { g.merge_shards_with(engine.fleet(), &merge_flags) } else { 0 };
+
+        // Churn-driven rebalancing, still inside the batch boundary: if
+        // skew crossed the threshold, recompute the edge-balanced
+        // boundaries online and migrate the moved vertices' rows. The
+        // stitched publish below makes the move invisible to readers.
+        let mut moved_vertices = 0usize;
+        if let Some(threshold) = cfg.rebalance {
+            if g.imbalance() >= threshold {
+                let (mv, _me) = g.rebalance();
+                moved_vertices = mv;
+            }
         }
 
         publish_sharded(&snapshots, &g, &state);
@@ -812,12 +899,27 @@ fn sharded_engine_loop(
                 CloseReason::Deadline => s.closed_by_deadline += 1,
                 CloseReason::Drain => s.closed_by_drain += 1,
             }
-            if signal.merge {
-                s.merges += 1;
+            s.merges += merged as u64;
+            if moved_vertices > 0 {
+                s.rebalances += 1;
+                s.migrated_vertices += moved_vertices as u64;
             }
             s.batch_coalesced += meta.coalesced as u64;
-            s.overflow_fraction = signal.overflow_fraction;
-            s.chain_depth_ewma = signal.ewma_depth;
+            s.overflow_fraction = g.overflow_fraction();
+            s.chain_depth_ewma = ewma_max;
+            // Per-shard load table for the serve printout / stats JSON.
+            let masses = g.shard_edge_masses();
+            let (donated, received) = engine.shard_steals();
+            s.shard_loads.clear();
+            for r in 0..nshards {
+                s.shard_loads.push(ShardLoad {
+                    shard: r,
+                    edge_mass: masses[r] as u64,
+                    steals_donated: donated.get(r).copied().unwrap_or(0),
+                    steals_received: received.get(r).copied().unwrap_or(0),
+                    merges: merges_by[r],
+                });
+            }
             s.push_latency(latency);
         }
         ingest.complete(meta.raw_len as u64);
@@ -995,6 +1097,42 @@ mod tests {
             triangle::static_tc(&rep.graph).triangles,
             "sharded streamed delta counting must equal a full recount"
         );
+    }
+
+    /// Full persistent-runtime path: fleet on, stealing on, rebalancing
+    /// armed, under hub-heavy skewed churn. Results must still match the
+    /// offline oracle, and the stats surface must report the per-shard
+    /// load table plus at least one live migration.
+    #[test]
+    fn sharded_service_steals_and_rebalances_under_skew() {
+        let g0 = generators::uniform_random(400, 1600, 9, 81);
+        let stream = UpdateStream::generate_count_skewed(&g0, 1200, 64, 9, 83, 12);
+        let mut want = g0.clone();
+        stream.apply_all_static(&mut want);
+        let oracle = sssp::dijkstra_oracle(&want, 0);
+        let mut c = sharded_cfg(Algo::Sssp);
+        c.engine_shards = 4;
+        c.steal = true;
+        c.rebalance = Some(1.10);
+        let svc = ShardedService::start(g0, c);
+        for u in &stream.updates {
+            assert!(svc.submit(*u));
+        }
+        svc.drain();
+        let stats = svc.stats();
+        assert_eq!(stats.shard_loads.len(), 4, "per-shard load table published");
+        let mass: u64 = stats.shard_loads.iter().map(|l| l.edge_mass).sum();
+        assert_eq!(mass as usize, want.num_edges());
+        assert!(
+            stats.rebalances >= 1 && stats.migrated_vertices > 0,
+            "hub-heavy churn must trip a live migration (rebalances={}, moved={})",
+            stats.rebalances,
+            stats.migrated_vertices
+        );
+        let report = svc.shutdown();
+        assert_eq!(report.graph.edges_sorted(), want.edges_sorted());
+        assert_eq!(report.sssp().unwrap().dist, oracle);
+        assert_eq!(report.sssp().unwrap().parent.len(), oracle.len());
     }
 
     /// A sharded reader must always see one stitched epoch: the published

@@ -14,9 +14,14 @@
 //! concurrently with no sharing at all.
 //!
 //! [`ShardedEngine`] runs the dynamic pipelines over the sharded graph in
-//! bulk-synchronous rounds, one OS thread per shard per round
-//! (`std::thread::scope`; the join is the superstep barrier — the same
-//! spawn-per-call model `util::threadpool` uses):
+//! bulk-synchronous rounds. Phases execute on a **persistent shard
+//! fleet** when one is attached ([`ShardedEngine::attach_fleet`]): one
+//! long-lived pinned worker per shard receives the phase closure over its
+//! channel and meets the coordinator at a reusable sense-reversing
+//! barrier ([`crate::util::barrier`]) — no thread spawn/join on the hot
+//! path. Without a fleet, phases fall back to the original
+//! spawn-per-phase `std::thread::scope` model (the bench baseline; also
+//! what plain `ShardedEngine::new()` tests exercise):
 //!
 //! * **push phases** (incremental SSSP) walk owned frontier out-edges and
 //!   emit `(dst, candidate)` relax messages bucketed by the destination's
@@ -36,7 +41,7 @@
 //!
 //! Equivalence is pinned by `tests/stream_equivalence.rs`: SSSP and TC
 //! end-states are *bitwise* equal to the single-engine service and the
-//! offline batch pipeline across shards ∈ {1, 2, 4} (SSSP's fixed point
+//! offline batch pipeline across shards ∈ {1, 2, 4, 8} (SSSP's fixed point
 //! is unique and the parent repair is a deterministic argmin; TC counts
 //! are order-independent integers), and PR is oracle-equal within the
 //! convergence tolerance (float sums reassociate across shard
@@ -53,26 +58,56 @@
 use crate::algorithms::{pagerank, sssp, PrState, SsspState, TcState, INF};
 use crate::graph::partition::PartitionMap;
 use crate::graph::{DynGraph, NodeId, Weight};
+use crate::util::{ShardFleet, SyncSlice};
 use std::collections::HashSet;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
-/// Split `data` into per-rank mutable blocks following the partition's
-/// contiguous ownership ranges (rank order). The returned slices are
-/// disjoint, so shard threads may write their own block concurrently —
-/// owner-writes with no unsafe.
-pub(crate) fn split_blocks<'a, T>(pm: &PartitionMap, data: &'a mut [T]) -> Vec<&'a mut [T]> {
-    let mut out = Vec::with_capacity(pm.ranks);
-    let mut rest = data;
-    let mut consumed = 0usize;
-    for r in 0..pm.ranks {
-        let range = pm.owned_range(r);
-        debug_assert_eq!(range.start, consumed, "ranges contiguous in rank order");
-        let (head, tail) = std::mem::take(&mut rest).split_at_mut(range.end - consumed);
-        out.push(head);
-        rest = tail;
-        consumed = range.end;
+/// Frontier-chunk granularity of the scatter phase — the unit of in-phase
+/// work stealing. Small enough that a hub shard's frontier splits into
+/// many stealable pieces, large enough that the claim (one `fetch_add`)
+/// amortizes.
+const STEAL_CHUNK: usize = 64;
+
+/// Run one phase: worker `r` executes `job(r)` for every shard, and the
+/// call returns only when all shards finished (the superstep barrier).
+///
+/// With a matching fleet the closures are delivered to the resident
+/// workers; otherwise (or for a single shard, which runs inline) this is
+/// the original spawn-per-phase scoped fallback.
+pub(crate) fn exec_shards(
+    fleet: Option<&ShardFleet>,
+    nshards: usize,
+    job: &(dyn Fn(usize) + Sync),
+) {
+    if nshards <= 1 {
+        job(0);
+        return;
     }
-    debug_assert!(rest.is_empty());
-    out
+    match fleet {
+        Some(f) if f.workers() == nshards => f.run(job),
+        _ => std::thread::scope(|sc| {
+            for r in 0..nshards {
+                sc.spawn(move || job(r));
+            }
+        }),
+    }
+}
+
+/// Borrow rank `r`'s owned block out of a shared slice — the owner-writes
+/// idiom for fleet phases, where one `Fn(usize)` closure is shared by all
+/// workers and per-worker `&mut` blocks cannot be moved in.
+///
+/// # Safety
+/// Caller must guarantee worker `r` is the only one touching `r`'s owned
+/// range during the current phase (the partition ranges are disjoint, so
+/// calling this with distinct `r` per worker satisfies it).
+unsafe fn owned_block<'s, T>(sl: &'s SyncSlice<'_, T>, pm: &PartitionMap, r: usize) -> &'s mut [T] {
+    let range = pm.owned_range(r);
+    if range.is_empty() {
+        &mut []
+    } else {
+        sl.slice_mut(range.start, range.end - range.start)
+    }
 }
 
 /// One logical dynamic graph stored as N owner-computes shards.
@@ -211,12 +246,23 @@ impl ShardedGraph {
     /// `updateCSRDel`, owner-routed: every shard applies its own deletion
     /// buffer concurrently (shard-local structures, no sharing).
     pub fn apply_deletions_routed(&mut self, dels_by: &[Vec<(NodeId, NodeId)>]) {
-        std::thread::scope(|sc| {
-            for (sg, dels) in self.shards.iter_mut().zip(dels_by) {
-                sc.spawn(move || {
-                    sg.apply_deletions(dels);
-                });
-            }
+        self.apply_deletions_routed_with(None, dels_by);
+    }
+
+    /// [`Self::apply_deletions_routed`] on an explicit execution substrate
+    /// (the engine passes its resident fleet here).
+    pub fn apply_deletions_routed_with(
+        &mut self,
+        fleet: Option<&ShardFleet>,
+        dels_by: &[Vec<(NodeId, NodeId)>],
+    ) {
+        debug_assert_eq!(dels_by.len(), self.shards.len());
+        let nshards = self.shards.len();
+        let sl = SyncSlice::new(&mut self.shards);
+        exec_shards(fleet, nshards, &|r| {
+            // SAFETY: worker r touches only shard r.
+            let sg = &mut unsafe { sl.slice_mut(r, 1) }[0];
+            sg.apply_deletions(&dels_by[r]);
         });
     }
 
@@ -224,12 +270,22 @@ impl ShardedGraph {
     /// even with an empty buffer: the seal is shard-local and the epoch
     /// bump keeps all shard epochs in lockstep (the stitch invariant).
     pub fn apply_additions_routed(&mut self, adds_by: &[Vec<(NodeId, NodeId, Weight)>]) {
-        std::thread::scope(|sc| {
-            for (sg, adds) in self.shards.iter_mut().zip(adds_by) {
-                sc.spawn(move || {
-                    sg.apply_additions(adds);
-                });
-            }
+        self.apply_additions_routed_with(None, adds_by);
+    }
+
+    /// [`Self::apply_additions_routed`] on an explicit execution substrate.
+    pub fn apply_additions_routed_with(
+        &mut self,
+        fleet: Option<&ShardFleet>,
+        adds_by: &[Vec<(NodeId, NodeId, Weight)>],
+    ) {
+        debug_assert_eq!(adds_by.len(), self.shards.len());
+        let nshards = self.shards.len();
+        let sl = SyncSlice::new(&mut self.shards);
+        exec_shards(fleet, nshards, &|r| {
+            // SAFETY: worker r touches only shard r.
+            let sg = &mut unsafe { sl.slice_mut(r, 1) }[0];
+            sg.apply_additions(&adds_by[r]);
         });
     }
 
@@ -255,13 +311,89 @@ impl ShardedGraph {
     /// Compact every shard's diff chain, shards in parallel (each merge is
     /// serial *within* its shard thread — shard-local by construction).
     pub fn merge_all(&mut self) {
-        std::thread::scope(|sc| {
-            for sg in self.shards.iter_mut() {
-                sc.spawn(move || {
-                    sg.merge();
-                });
+        let all = vec![true; self.shards.len()];
+        self.merge_shards_with(None, &all);
+    }
+
+    /// Compact only the flagged shards' diff chains — the per-shard
+    /// `MergeGovernor` path: a deep-chained shard merges alone instead of
+    /// dragging every shard through a global `merge_all`. Returns how many
+    /// shards merged.
+    pub fn merge_shards_with(&mut self, fleet: Option<&ShardFleet>, hot: &[bool]) -> usize {
+        debug_assert_eq!(hot.len(), self.shards.len());
+        let nshards = self.shards.len();
+        let sl = SyncSlice::new(&mut self.shards);
+        exec_shards(fleet, nshards, &|r| {
+            if hot[r] {
+                // SAFETY: worker r touches only shard r.
+                let sg = &mut unsafe { sl.slice_mut(r, 1) }[0];
+                sg.merge();
             }
         });
+        hot.iter().filter(|&&h| h).count()
+    }
+
+    /// One shard's overflow heat: flagged sources over its owned vertex
+    /// count — the local analogue of [`Self::overflow_fraction`], which a
+    /// per-shard merge governor keys on. (After a migration a shard may
+    /// still carry flags for vertices it no longer owns until its next
+    /// merge clears the bitmap; the signal is a heat heuristic, so the
+    /// transient overcount is harmless.)
+    pub fn shard_overflow_fraction(&self, r: usize) -> f64 {
+        let owned = self.pm.owned_range(r).len();
+        self.shards[r].overflow_touched() as f64 / owned.max(1) as f64
+    }
+
+    /// Per-shard live edge mass — the skew signal rebalancing and the
+    /// per-shard load stats key on.
+    pub fn shard_edge_masses(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.num_edges()).collect()
+    }
+
+    /// Max shard edge mass over the ideal (total / shards); `1.0` means
+    /// perfectly balanced. Single-shard and empty graphs report `1.0`.
+    pub fn imbalance(&self) -> f64 {
+        let masses = self.shard_edge_masses();
+        let total: usize = masses.iter().sum();
+        if total == 0 || masses.len() <= 1 {
+            return 1.0;
+        }
+        let ideal = total as f64 / masses.len() as f64;
+        masses.into_iter().max().unwrap_or(0) as f64 / ideal
+    }
+
+    /// Churn-driven rebalance: recompute `edge_balanced` boundaries from
+    /// the *current live* out-degrees and migrate only the moved vertices'
+    /// diff-CSR rows ([`DynGraph::extract_row`] / [`DynGraph::ingest_row`])
+    /// to their new owners. Row migration never seals, so shard epochs are
+    /// untouched and the stitch invariant holds — run it at a batch
+    /// boundary before the snapshot publish and readers cannot observe the
+    /// move. Returns `(moved_vertices, moved_edges)`.
+    pub fn rebalance(&mut self) -> (usize, usize) {
+        let n = self.n;
+        let nshards = self.shards.len();
+        if nshards <= 1 {
+            return (0, 0);
+        }
+        let degrees: Vec<u32> = (0..n as NodeId).map(|v| self.out_degree(v)).collect();
+        let new_pm = PartitionMap::edge_balanced(n, nshards, &degrees);
+        let mut moved_v = 0usize;
+        let mut moved_e = 0usize;
+        for v in 0..n as NodeId {
+            let old = self.pm.owner(v);
+            let new = new_pm.owner(v);
+            if old == new {
+                continue;
+            }
+            moved_v += 1;
+            let row = self.shards[old].extract_row(v);
+            if !row.is_empty() {
+                moved_e += row.len();
+                self.shards[new].ingest_row(v, &row);
+            }
+        }
+        self.pm = new_pm;
+        (moved_v, moved_e)
     }
 
     /// All live edges, sorted (tests / oracles / report conversion).
@@ -292,6 +424,15 @@ pub struct RelayStats {
     pub rounds: u64,
     pub local_msgs: u64,
     pub cross_msgs: u64,
+    /// Frontier chunks executed by a non-owner worker during scatter
+    /// (in-phase work stealing). The stolen buckets are still *applied*
+    /// by their destination owner in gather, so owner-writes — and the
+    /// bitwise fixed point — are unaffected.
+    pub steals: u64,
+    /// Cumulative worker idle time at the fleet's phase barrier, in
+    /// seconds (0 under the spawn-per-phase fallback, which has no
+    /// reusable barrier to measure).
+    pub barrier_wait_secs: f64,
 }
 
 /// Persistent per-engine work buffers, grown once and reused across
@@ -311,13 +452,25 @@ struct ShardScratch {
     next_rank: Vec<f64>,
 }
 
-/// Bulk-synchronous multi-shard engine: one thread per shard per phase,
-/// message relay between push rounds, owner-writes pulls. See the module
-/// docs for the execution model and the determinism argument.
+/// Bulk-synchronous multi-shard engine: resident fleet workers (or
+/// scoped threads as fallback) per phase, message relay between push
+/// rounds, owner-writes pulls. See the module docs for the execution
+/// model and the determinism argument.
 #[derive(Debug, Default)]
 pub struct ShardedEngine {
     stats: RelayStats,
     scratch: ShardScratch,
+    /// Resident workers; phases fall back to spawn-per-phase when absent
+    /// or when the worker count doesn't match the graph's shard count.
+    fleet: Option<ShardFleet>,
+    /// In-phase scatter work stealing (off by default: the stolen work
+    /// changes nothing semantically, but keeping the baseline exact makes
+    /// the bench comparison honest).
+    steal: bool,
+    /// Per-shard steal counters: chunks of shard `r`'s frontier run by
+    /// another worker / chunks worker `r` stole from others.
+    steals_donated: Vec<u64>,
+    steals_received: Vec<u64>,
 }
 
 impl ShardedEngine {
@@ -325,9 +478,41 @@ impl ShardedEngine {
         ShardedEngine::default()
     }
 
-    /// Cumulative relay counters since engine creation.
+    /// Adopt a persistent worker fleet: every subsequent phase is
+    /// delivered to these resident workers instead of spawning scoped
+    /// threads. The fleet lives until the engine is dropped.
+    pub fn attach_fleet(&mut self, fleet: ShardFleet) {
+        self.fleet = Some(fleet);
+    }
+
+    pub fn fleet(&self) -> Option<&ShardFleet> {
+        self.fleet.as_ref()
+    }
+
+    /// Enable/disable in-phase scatter stealing.
+    pub fn set_steal(&mut self, on: bool) {
+        self.steal = on;
+    }
+
+    pub fn steal_enabled(&self) -> bool {
+        self.steal
+    }
+
+    /// Per-shard steal counters as `(donated, received)` slices — the
+    /// per-shard load surface the service stats report. Empty until the
+    /// first relax phase sizes them.
+    pub fn shard_steals(&self) -> (&[u64], &[u64]) {
+        (&self.steals_donated, &self.steals_received)
+    }
+
+    /// Cumulative relay counters since engine creation (barrier idle time
+    /// is read live from the fleet).
     pub fn relay_stats(&self) -> RelayStats {
-        self.stats
+        let mut s = self.stats;
+        if let Some(f) = &self.fleet {
+            s.barrier_wait_secs = f.wait_nanos() as f64 / 1e9;
+        }
+        s
     }
 
     // ------------------------------------------------------------ SSSP
@@ -360,7 +545,7 @@ impl ShardedEngine {
 
         // OnDelete preprocessing (serial: batch-sized, not graph-sized).
         let mut modified = sssp::on_delete_iter(st, dels_by.iter().flatten().copied());
-        g.apply_deletions_routed(dels_by);
+        g.apply_deletions_routed_with(self.fleet.as_ref(), dels_by);
 
         // Decremental phase 1: cascade invalidation down the former SP
         // tree via a child index (serial — the single-engine path is
@@ -404,7 +589,8 @@ impl ShardedEngine {
         // only, no float sums — so per-round values are bitwise equal.
         if !affected.is_empty() {
             let pm = g.partition_map();
-            let mut affected_by: Vec<Vec<NodeId>> = vec![Vec::new(); g.num_shards()];
+            let nshards = g.num_shards();
+            let mut affected_by: Vec<Vec<NodeId>> = vec![Vec::new(); nshards];
             for &v in &affected {
                 affected_by[g.owner(v)].push(v);
             }
@@ -412,42 +598,36 @@ impl ShardedEngine {
             // (every round) and read (the copy), so stale content is fine.
             let next_dist = &mut self.scratch.next_dist;
             next_dist.resize(n, 0);
+            let fleet = self.fleet.as_ref();
             loop {
-                let changed = {
+                let mut changed_by = vec![false; nshards];
+                {
                     let dist_ro: &[i64] = &st.dist;
                     let gr: &ShardedGraph = g;
-                    let blocks = split_blocks(pm, &mut next_dist[..n]);
-                    let mut any = false;
-                    std::thread::scope(|sc| {
-                        let mut handles = Vec::new();
-                        for (r, block) in blocks.into_iter().enumerate() {
-                            let aff = &affected_by[r];
-                            let lo = pm.owned_range(r).start;
-                            handles.push(sc.spawn(move || {
-                                let mut ch = false;
-                                for &v in aff {
-                                    let mut best = dist_ro[v as usize];
-                                    for (u, w) in gr.in_neighbors(v) {
-                                        let du = dist_ro[u as usize];
-                                        if du < INF && du + (w as i64) < best {
-                                            best = du + w as i64;
-                                        }
-                                    }
-                                    block[v as usize - lo] = best;
-                                    if best < dist_ro[v as usize] {
-                                        ch = true;
-                                    }
+                    let nd = SyncSlice::new(&mut next_dist[..n]);
+                    let cb = SyncSlice::new(&mut changed_by);
+                    exec_shards(fleet, nshards, &|r| {
+                        // SAFETY: owner-exclusive block / per-shard slot.
+                        let block = unsafe { owned_block(&nd, pm, r) };
+                        let lo = pm.owned_range(r).start;
+                        let mut ch = false;
+                        for &v in &affected_by[r] {
+                            let mut best = dist_ro[v as usize];
+                            for (u, w) in gr.in_neighbors(v) {
+                                let du = dist_ro[u as usize];
+                                if du < INF && du + (w as i64) < best {
+                                    best = du + w as i64;
                                 }
-                                ch
-                            }));
+                            }
+                            block[v as usize - lo] = best;
+                            if best < dist_ro[v as usize] {
+                                ch = true;
+                            }
                         }
-                        for h in handles {
-                            any |= h.join().expect("shard pull thread panicked");
-                        }
+                        unsafe { cb.set(r, ch) };
                     });
-                    any
-                };
-                if !changed {
+                }
+                if !changed_by.iter().any(|&c| c) {
                     break;
                 }
                 for &v in &affected {
@@ -458,7 +638,7 @@ impl ShardedEngine {
 
         // OnAdd + shard-local updateCSRAdd + incremental relay push.
         let seed = sssp::on_add_iter(st, adds_by.iter().flatten().copied());
-        g.apply_additions_routed(adds_by);
+        g.apply_additions_routed_with(self.fleet.as_ref(), adds_by);
         self.relax_relay(g, &mut st.dist, &seed);
         self.repair_parents(g, st);
     }
@@ -480,19 +660,49 @@ impl ShardedEngine {
     fn relax_relay(&mut self, g: &ShardedGraph, dist: &mut [i64], seed: &[bool]) {
         let nshards = g.num_shards();
         let pm = g.partition_map();
+        let steal_on = self.steal && nshards > 1;
+        if self.steals_donated.len() < nshards {
+            self.steals_donated.resize(nshards, 0);
+            self.steals_received.resize(nshards, 0);
+        }
+        let fleet = self.fleet.as_ref();
         let mut frontiers: Vec<Vec<NodeId>> = (0..nshards)
             .map(|r| pm.owned_range(r).filter(|&v| seed[v]).map(|v| v as NodeId).collect())
             .collect();
         while frontiers.iter().any(|f| !f.is_empty()) {
             self.stats.rounds += 1;
-            // scatter
-            let dist_ro: &[i64] = dist;
-            let outboxes: Vec<Vec<Vec<(NodeId, i64)>>> = std::thread::scope(|sc| {
-                let mut handles = Vec::new();
-                for frontier in &frontiers {
-                    handles.push(sc.spawn(move || {
-                        let mut out: Vec<Vec<(NodeId, i64)>> = vec![Vec::new(); nshards];
-                        for &v in frontier {
+            // scatter: worker r drains its own frontier in STEAL_CHUNK
+            // units, then (with stealing on) claims chunks from the most
+            // loaded shard. A thief emits into its *own* outbox row, so
+            // the message multiset — and hence the min fixed point — is
+            // identical under any steal schedule; gather stays
+            // owner-exclusive.
+            let mut outboxes: Vec<Vec<Vec<(NodeId, i64)>>> =
+                (0..nshards).map(|_| vec![Vec::new(); nshards]).collect();
+            let local_msgs = AtomicU64::new(0);
+            let cross_msgs = AtomicU64::new(0);
+            let stolen = AtomicU64::new(0);
+            let donated: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(0)).collect();
+            let received: Vec<AtomicU64> = (0..nshards).map(|_| AtomicU64::new(0)).collect();
+            {
+                let dist_ro: &[i64] = dist;
+                let frontiers_ro: &[Vec<NodeId>] = &frontiers;
+                let cursors: Vec<AtomicUsize> =
+                    (0..nshards).map(|_| AtomicUsize::new(0)).collect();
+                let nchunks =
+                    |s: usize| frontiers_ro[s].len().div_ceil(STEAL_CHUNK);
+                let ob = SyncSlice::new(&mut outboxes);
+                exec_shards(fleet, nshards, &|r| {
+                    // SAFETY: each worker writes only its own outbox row.
+                    let my = &mut unsafe { ob.slice_mut(r, 1) }[0];
+                    let (mut loc, mut cro) = (0u64, 0u64);
+                    let mut process = |sender: usize,
+                                       chunk: usize,
+                                       my: &mut Vec<Vec<(NodeId, i64)>>| {
+                        let f = &frontiers_ro[sender];
+                        let lo = chunk * STEAL_CHUNK;
+                        let hi = (lo + STEAL_CHUNK).min(f.len());
+                        for &v in &f[lo..hi] {
                             let dv = dist_ro[v as usize];
                             if dv >= INF {
                                 continue;
@@ -502,56 +712,90 @@ impl ShardedEngine {
                                 // read-only prune; the owner re-checks
                                 // against its authoritative block
                                 if alt < dist_ro[nbr as usize] {
-                                    out[g.owner(nbr)].push((nbr, alt));
+                                    let dest = g.owner(nbr);
+                                    if dest == sender {
+                                        loc += 1;
+                                    } else {
+                                        cro += 1;
+                                    }
+                                    my[dest].push((nbr, alt));
                                 }
                             }
                         }
-                        out
-                    }));
-                }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("shard scatter thread panicked"))
-                    .collect()
-            });
-            for (sender, boxes) in outboxes.iter().enumerate() {
-                for (dest, msgs) in boxes.iter().enumerate() {
-                    if dest == sender {
-                        self.stats.local_msgs += msgs.len() as u64;
-                    } else {
-                        self.stats.cross_msgs += msgs.len() as u64;
+                    };
+                    loop {
+                        let c = cursors[r].fetch_add(1, Ordering::Relaxed);
+                        if c >= nchunks(r) {
+                            break;
+                        }
+                        process(r, c, &mut *my);
                     }
-                }
-            }
-            // gather
-            let blocks = split_blocks(pm, dist);
-            frontiers = std::thread::scope(|sc| {
-                let mut handles = Vec::new();
-                for (r, block) in blocks.into_iter().enumerate() {
-                    let lo = pm.owned_range(r).start;
-                    let inbox: Vec<&[(NodeId, i64)]> =
-                        outboxes.iter().map(|ob| ob[r].as_slice()).collect();
-                    handles.push(sc.spawn(move || {
-                        let mut lowered = Vec::new();
-                        for msgs in inbox {
-                            for &(v, alt) in msgs {
-                                let slot = &mut block[v as usize - lo];
-                                if alt < *slot {
-                                    *slot = alt;
-                                    lowered.push(v);
+                    if steal_on {
+                        loop {
+                            // victim = shard with the most unclaimed chunks
+                            let mut victim = None;
+                            let mut most = 0usize;
+                            for s in 0..nshards {
+                                if s == r {
+                                    continue;
+                                }
+                                let rem = nchunks(s)
+                                    .saturating_sub(cursors[s].load(Ordering::Relaxed));
+                                if rem > most {
+                                    most = rem;
+                                    victim = Some(s);
                                 }
                             }
+                            let Some(s) = victim else { break };
+                            let c = cursors[s].fetch_add(1, Ordering::Relaxed);
+                            if c >= nchunks(s) {
+                                continue;
+                            }
+                            process(s, c, &mut *my);
+                            stolen.fetch_add(1, Ordering::Relaxed);
+                            donated[s].fetch_add(1, Ordering::Relaxed);
+                            received[r].fetch_add(1, Ordering::Relaxed);
                         }
-                        lowered.sort_unstable();
-                        lowered.dedup();
-                        lowered
-                    }));
-                }
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("shard gather thread panicked"))
-                    .collect()
-            });
+                    }
+                    local_msgs.fetch_add(loc, Ordering::Relaxed);
+                    cross_msgs.fetch_add(cro, Ordering::Relaxed);
+                });
+            }
+            self.stats.local_msgs += local_msgs.load(Ordering::Relaxed);
+            self.stats.cross_msgs += cross_msgs.load(Ordering::Relaxed);
+            self.stats.steals += stolen.load(Ordering::Relaxed);
+            for s in 0..nshards {
+                self.steals_donated[s] += donated[s].load(Ordering::Relaxed);
+                self.steals_received[s] += received[s].load(Ordering::Relaxed);
+            }
+            // gather: owner-exclusive min-apply over every row's bucket
+            // addressed to it (thief rows included — stolen buckets are
+            // still applied by their owner).
+            let mut next_frontiers: Vec<Vec<NodeId>> = vec![Vec::new(); nshards];
+            {
+                let ds = SyncSlice::new(&mut *dist);
+                let nf = SyncSlice::new(&mut next_frontiers);
+                let ob_ro: &[Vec<Vec<(NodeId, i64)>>] = &outboxes;
+                exec_shards(fleet, nshards, &|r| {
+                    // SAFETY: owner-exclusive block / per-shard slot.
+                    let block = unsafe { owned_block(&ds, pm, r) };
+                    let lo = pm.owned_range(r).start;
+                    let mut lowered = Vec::new();
+                    for row in ob_ro {
+                        for &(v, alt) in &row[r] {
+                            let slot = &mut block[v as usize - lo];
+                            if alt < *slot {
+                                *slot = alt;
+                                lowered.push(v);
+                            }
+                        }
+                    }
+                    lowered.sort_unstable();
+                    lowered.dedup();
+                    unsafe { nf.set(r, lowered) };
+                });
+            }
+            frontiers = next_frontiers;
         }
     }
 
@@ -561,30 +805,30 @@ impl ShardedEngine {
     /// identical to the single-engine repair (min over a set).
     fn repair_parents(&mut self, g: &ShardedGraph, st: &mut SsspState) {
         let pm = g.partition_map();
+        let nshards = g.num_shards();
+        let fleet = self.fleet.as_ref();
         let source = st.source;
         let dist_ro: &[i64] = &st.dist;
-        let blocks = split_blocks(pm, &mut st.parent);
-        std::thread::scope(|sc| {
-            for (r, block) in blocks.into_iter().enumerate() {
-                let lo = pm.owned_range(r).start;
-                sc.spawn(move || {
-                    for (i, slot) in block.iter_mut().enumerate() {
-                        let v = (lo + i) as NodeId;
-                        let mut best = -1i64;
-                        if v != source && dist_ro[v as usize] < INF {
-                            for (u, w) in g.in_neighbors(v) {
-                                let du = dist_ro[u as usize];
-                                if du < INF && du + w as i64 == dist_ro[v as usize] {
-                                    let cand = u as i64;
-                                    if best == -1 || cand < best {
-                                        best = cand;
-                                    }
-                                }
+        let ps = SyncSlice::new(&mut st.parent);
+        exec_shards(fleet, nshards, &|r| {
+            // SAFETY: owner-exclusive block.
+            let block = unsafe { owned_block(&ps, pm, r) };
+            let lo = pm.owned_range(r).start;
+            for (i, slot) in block.iter_mut().enumerate() {
+                let v = (lo + i) as NodeId;
+                let mut best = -1i64;
+                if v != source && dist_ro[v as usize] < INF {
+                    for (u, w) in g.in_neighbors(v) {
+                        let du = dist_ro[u as usize];
+                        if du < INF && du + w as i64 == dist_ro[v as usize] {
+                            let cand = u as i64;
+                            if best == -1 || cand < best {
+                                best = cand;
                             }
                         }
-                        *slot = best;
                     }
-                });
+                }
+                *slot = best;
             }
         });
     }
@@ -603,40 +847,37 @@ impl ShardedEngine {
         st.rank.resize(n, 1.0 / nf);
         let mut next = vec![0.0f64; n];
         let pm = g.partition_map();
+        let nshards = g.num_shards();
+        let fleet = self.fleet.as_ref();
         let mut iters = 0;
         loop {
-            let diffs: Vec<f64> = {
+            let mut diffs = vec![0.0f64; nshards];
+            {
                 let rank_ro: &[f64] = &st.rank;
                 let delta = st.delta;
-                let blocks = split_blocks(pm, &mut next);
-                std::thread::scope(|sc| {
-                    let mut handles = Vec::new();
-                    for (r, block) in blocks.into_iter().enumerate() {
-                        let lo = pm.owned_range(r).start;
-                        handles.push(sc.spawn(move || {
-                            let mut dacc = 0.0;
-                            for (i, slot) in block.iter_mut().enumerate() {
-                                let v = (lo + i) as NodeId;
-                                let mut sum = 0.0;
-                                for (nbr, _) in g.in_neighbors(v) {
-                                    let d = g.out_degree(nbr);
-                                    if d > 0 {
-                                        sum += rank_ro[nbr as usize] / d as f64;
-                                    }
-                                }
-                                let val = (1.0 - delta) / nf + delta * sum;
-                                dacc += (val - rank_ro[v as usize]).abs();
-                                *slot = val;
+                let nx = SyncSlice::new(&mut next);
+                let df = SyncSlice::new(&mut diffs);
+                exec_shards(fleet, nshards, &|r| {
+                    // SAFETY: owner-exclusive block / per-shard slot.
+                    let block = unsafe { owned_block(&nx, pm, r) };
+                    let lo = pm.owned_range(r).start;
+                    let mut dacc = 0.0;
+                    for (i, slot) in block.iter_mut().enumerate() {
+                        let v = (lo + i) as NodeId;
+                        let mut sum = 0.0;
+                        for (nbr, _) in g.in_neighbors(v) {
+                            let d = g.out_degree(nbr);
+                            if d > 0 {
+                                sum += rank_ro[nbr as usize] / d as f64;
                             }
-                            dacc
-                        }));
+                        }
+                        let val = (1.0 - delta) / nf + delta * sum;
+                        dacc += (val - rank_ro[v as usize]).abs();
+                        *slot = val;
                     }
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("shard pr thread panicked"))
-                        .collect()
-                })
-            };
+                    unsafe { df.set(r, dacc) };
+                });
+            }
             let diff: f64 = diffs.iter().sum();
             std::mem::swap(&mut st.rank, &mut next);
             iters += 1;
@@ -664,7 +905,7 @@ impl ShardedEngine {
             modified[v as usize] = true;
         }
         propagate_flags(g, &mut modified);
-        g.apply_deletions_routed(dels_by);
+        g.apply_deletions_routed_with(self.fleet.as_ref(), dels_by);
         self.recompute_flagged(g, st, &modified);
 
         let mut modified_add = vec![false; n];
@@ -672,7 +913,7 @@ impl ShardedEngine {
             modified_add[v as usize] = true;
         }
         propagate_flags(g, &mut modified_add);
-        g.apply_additions_routed(adds_by);
+        g.apply_additions_routed_with(self.fleet.as_ref(), adds_by);
         self.recompute_flagged(g, st, &modified_add);
     }
 
@@ -697,40 +938,36 @@ impl ShardedEngine {
         // round) and read (the copy), so stale content is fine.
         let next = &mut self.scratch.next_rank;
         next.resize(n, 0.0);
+        let nshards = g.num_shards();
+        let fleet = self.fleet.as_ref();
         let mut iters = 0;
         loop {
-            let diffs: Vec<f64> = {
+            let mut diffs = vec![0.0f64; nshards];
+            {
                 let rank_ro: &[f64] = &st.rank;
                 let delta = st.delta;
-                let blocks = split_blocks(pm, &mut next[..n]);
-                std::thread::scope(|sc| {
-                    let mut handles = Vec::new();
-                    for (r, block) in blocks.into_iter().enumerate() {
-                        let act = &active_by[r];
-                        let lo = pm.owned_range(r).start;
-                        handles.push(sc.spawn(move || {
-                            let mut dacc = 0.0;
-                            for &v in act {
-                                let mut sum = 0.0;
-                                for (nbr, _) in g.in_neighbors(v) {
-                                    let d = g.out_degree(nbr);
-                                    if d > 0 {
-                                        sum += rank_ro[nbr as usize] / d as f64;
-                                    }
-                                }
-                                let val = (1.0 - delta) / nf + delta * sum;
-                                dacc += (val - rank_ro[v as usize]).abs();
-                                block[v as usize - lo] = val;
+                let nx = SyncSlice::new(&mut next[..n]);
+                let df = SyncSlice::new(&mut diffs);
+                exec_shards(fleet, nshards, &|r| {
+                    // SAFETY: owner-exclusive block / per-shard slot.
+                    let block = unsafe { owned_block(&nx, pm, r) };
+                    let lo = pm.owned_range(r).start;
+                    let mut dacc = 0.0;
+                    for &v in &active_by[r] {
+                        let mut sum = 0.0;
+                        for (nbr, _) in g.in_neighbors(v) {
+                            let d = g.out_degree(nbr);
+                            if d > 0 {
+                                sum += rank_ro[nbr as usize] / d as f64;
                             }
-                            dacc
-                        }));
+                        }
+                        let val = (1.0 - delta) / nf + delta * sum;
+                        dacc += (val - rank_ro[v as usize]).abs();
+                        block[v as usize - lo] = val;
                     }
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("shard pr thread panicked"))
-                        .collect()
-                })
-            };
+                    unsafe { df.set(r, dacc) };
+                });
+            }
             let diff: f64 = diffs.iter().sum();
             for &v in &active {
                 st.rank[v as usize] = next[v as usize];
@@ -749,36 +986,33 @@ impl ShardedEngine {
     /// in shard order — integer counts, bitwise equal to single-engine.
     pub fn tc_static(&mut self, g: &ShardedGraph) -> TcState {
         let pm = g.partition_map();
-        let counts: Vec<i64> = std::thread::scope(|sc| {
-            let mut handles = Vec::new();
-            for r in 0..g.num_shards() {
-                let range = pm.owned_range(r);
-                handles.push(sc.spawn(move || {
-                    let mut local = 0i64;
-                    for v in range {
-                        let v = v as NodeId;
-                        for (u, _) in g.out_neighbors(v) {
-                            if u >= v {
+        let nshards = g.num_shards();
+        let fleet = self.fleet.as_ref();
+        let mut counts = vec![0i64; nshards];
+        {
+            let cs = SyncSlice::new(&mut counts);
+            exec_shards(fleet, nshards, &|r| {
+                let mut local = 0i64;
+                for v in pm.owned_range(r) {
+                    let v = v as NodeId;
+                    for (u, _) in g.out_neighbors(v) {
+                        if u >= v {
+                            continue;
+                        }
+                        for (w, _) in g.out_neighbors(v) {
+                            if w <= v {
                                 continue;
                             }
-                            for (w, _) in g.out_neighbors(v) {
-                                if w <= v {
-                                    continue;
-                                }
-                                if g.has_edge(u, w) {
-                                    local += 1;
-                                }
+                            if g.has_edge(u, w) {
+                                local += 1;
                             }
                         }
                     }
-                    local
-                }));
-            }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("shard tc thread panicked"))
-                .collect()
-        });
+                }
+                // SAFETY: per-shard slot.
+                unsafe { cs.set(r, local) };
+            });
+        }
         TcState { triangles: counts.iter().sum() }
     }
 
@@ -796,8 +1030,8 @@ impl ShardedEngine {
         let del_set: HashSet<(NodeId, NodeId)> =
             dels_by.iter().flatten().copied().collect();
         st.triangles -= self.delta_count(g, dels_by, &del_set);
-        g.apply_deletions_routed(dels_by);
-        g.apply_additions_routed(adds_by);
+        g.apply_deletions_routed_with(self.fleet.as_ref(), dels_by);
+        g.apply_additions_routed_with(self.fleet.as_ref(), adds_by);
         let add_arcs_by: Vec<Vec<(NodeId, NodeId)>> = adds_by
             .iter()
             .map(|adds| adds.iter().map(|&(u, v, _)| (u, v)).collect())
@@ -819,45 +1053,43 @@ impl ShardedEngine {
     ) -> i64 {
         let is_mod =
             |a: NodeId, b: NodeId| modified.contains(&(a, b)) || modified.contains(&(b, a));
-        let partials: Vec<(i64, i64, i64)> = std::thread::scope(|sc| {
-            let mut handles = Vec::new();
-            for arcs in arcs_by {
-                let is_mod = &is_mod;
-                handles.push(sc.spawn(move || {
-                    let (mut c1, mut c2, mut c3) = (0i64, 0i64, 0i64);
-                    for &(v1, v2) in arcs {
-                        if v1 == v2 {
+        let nshards = arcs_by.len();
+        let fleet = self.fleet.as_ref();
+        let mut partials = vec![(0i64, 0i64, 0i64); nshards];
+        {
+            let ps = SyncSlice::new(&mut partials);
+            let is_mod = &is_mod;
+            exec_shards(fleet, nshards, &|r| {
+                let (mut c1, mut c2, mut c3) = (0i64, 0i64, 0i64);
+                for &(v1, v2) in &arcs_by[r] {
+                    if v1 == v2 {
+                        continue;
+                    }
+                    for (v3, _) in g.out_neighbors(v1) {
+                        if v3 == v1 || v3 == v2 {
                             continue;
                         }
-                        for (v3, _) in g.out_neighbors(v1) {
-                            if v3 == v1 || v3 == v2 {
-                                continue;
-                            }
-                            if !g.has_edge(v2, v3) && !g.has_edge(v3, v2) {
-                                continue;
-                            }
-                            let mut k = 1;
-                            if is_mod(v1, v3) {
-                                k += 1;
-                            }
-                            if is_mod(v2, v3) {
-                                k += 1;
-                            }
-                            match k {
-                                1 => c1 += 1,
-                                2 => c2 += 1,
-                                _ => c3 += 1,
-                            }
+                        if !g.has_edge(v2, v3) && !g.has_edge(v3, v2) {
+                            continue;
+                        }
+                        let mut k = 1;
+                        if is_mod(v1, v3) {
+                            k += 1;
+                        }
+                        if is_mod(v2, v3) {
+                            k += 1;
+                        }
+                        match k {
+                            1 => c1 += 1,
+                            2 => c2 += 1,
+                            _ => c3 += 1,
                         }
                     }
-                    (c1, c2, c3)
-                }));
-            }
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("shard tc thread panicked"))
-                .collect()
-        });
+                }
+                // SAFETY: per-shard slot.
+                unsafe { ps.set(r, (c1, c2, c3)) };
+            });
+        }
         let (c1, c2, c3) = partials
             .iter()
             .fold((0i64, 0i64, 0i64), |a, b| (a.0 + b.0, a.1 + b.1, a.2 + b.2));
@@ -1059,6 +1291,175 @@ mod tests {
             );
             assert_eq!(sg.epoch(), (i + 1) as u64, "one sealed epoch per batch");
         }
+    }
+
+    #[test]
+    fn fleet_phases_match_spawn_per_phase_bitwise() {
+        let g0 = generators::uniform_random(200, 1000, 9, 11);
+        let stream = UpdateStream::generate_percent(&g0, 12.0, 32, 9, 13);
+        for shards in [2usize, 4] {
+            // spawn-per-phase baseline
+            let mut sg_a = ShardedGraph::partition(&g0, shards);
+            let mut ea = ShardedEngine::new();
+            let mut sa = ea.sssp_static(&sg_a, 0);
+            // resident fleet with stealing on
+            let mut sg_b = ShardedGraph::partition(&g0, shards);
+            let mut eb = ShardedEngine::new();
+            eb.attach_fleet(crate::util::ShardFleet::new(shards));
+            eb.set_steal(true);
+            let mut sb = eb.sssp_static(&sg_b, 0);
+            assert_eq!(sb.dist, sa.dist, "static dist, shards={shards}");
+            assert_eq!(sb.parent, sa.parent, "static parent, shards={shards}");
+            for (dels_by, adds_by) in route_stream(&sg_a, &stream) {
+                ea.sssp_dynamic_batch(&mut sg_a, &mut sa, &dels_by, &adds_by);
+                eb.sssp_dynamic_batch(&mut sg_b, &mut sb, &dels_by, &adds_by);
+            }
+            assert_eq!(sb.dist, sa.dist, "dynamic dist, shards={shards}");
+            assert_eq!(sb.parent, sa.parent, "dynamic parent, shards={shards}");
+            assert_eq!(sg_b.edges_sorted(), sg_a.edges_sorted());
+            // PR: same shard count and fold order on both substrates, so
+            // the float results are bitwise equal too
+            let mut pa = PrState::new(g0.num_nodes(), 1e-10, 0.85, 200);
+            let mut pb = pa.clone();
+            ea.pr_static(&sg_a, &mut pa);
+            eb.pr_static(&sg_b, &mut pb);
+            assert_eq!(pb.rank, pa.rank, "pr bitwise, shards={shards}");
+        }
+    }
+
+    #[test]
+    fn stealing_keeps_relay_bitwise_and_counts_steals() {
+        // Hub fan-out: vertex 0 reaches 4096 vertices that all live in the
+        // upper shards' ranges, so the round-2 frontier splits into dozens
+        // of chunks on a few shards while the hub's own shard idles at
+        // scatter — a guaranteed steal opportunity.
+        let n = 5120usize;
+        let mut edges: Vec<(NodeId, NodeId, Weight)> = Vec::new();
+        for v in 1024..n as NodeId {
+            edges.push((0, v, 1));
+            edges.push((v, v % 1024, 2));
+        }
+        let g = DynGraph::from_edges(n, &edges);
+        let cpu = CpuEngine::new(2, Sched::Dynamic { chunk: 64 });
+        let want = cpu.sssp_static(&g, 0);
+        for shards in [2usize, 4] {
+            let sg = ShardedGraph::partition(&g, shards);
+            let mut e = ShardedEngine::new();
+            e.attach_fleet(crate::util::ShardFleet::new(shards));
+            e.set_steal(true);
+            let st = e.sssp_static(&sg, 0);
+            assert_eq!(st.dist, want.dist, "shards={shards}");
+            assert_eq!(st.parent, want.parent, "shards={shards} parents");
+            let stats = e.relay_stats();
+            assert!(stats.steals > 0, "idle shards must steal chunks (shards={shards})");
+            let (donated, received) = e.shard_steals();
+            assert_eq!(donated.iter().sum::<u64>(), stats.steals, "donated sums to total");
+            assert_eq!(received.iter().sum::<u64>(), stats.steals, "received sums to total");
+        }
+    }
+
+    #[test]
+    fn rebalance_migrates_rows_and_preserves_results() {
+        use crate::graph::{Update, UpdateKind};
+        let g0 = generators::uniform_random(300, 1200, 9, 51);
+        // hub storm: 500 fresh edges whose sources all sit in the first
+        // owner's range, skewing its edge mass
+        let mut present: std::collections::HashSet<(NodeId, NodeId)> =
+            g0.edges_sorted().iter().map(|&(u, v, _)| (u, v)).collect();
+        let mut updates = Vec::new();
+        let mut k = 0u32;
+        while updates.len() < 500 {
+            let u = (k * 13) % 20;
+            let v = 20 + (k * 37) % 280;
+            k += 1;
+            if u == v || present.contains(&(u, v)) {
+                continue;
+            }
+            present.insert((u, v));
+            updates.push(Update {
+                kind: UpdateKind::Add,
+                src: u,
+                dst: v,
+                weight: 1 + (k % 9) as Weight,
+            });
+        }
+        let stream = UpdateStream::new(updates, 100);
+        // single-engine reference
+        let cpu = CpuEngine::new(2, Sched::Dynamic { chunk: 64 });
+        let mut gref = g0.clone();
+        let mut want = cpu.sssp_static(&gref, 0);
+        for b in stream.batches() {
+            cpu.sssp_dynamic_batch(&mut gref, &mut want, &b);
+        }
+        // sharded with a live mid-stream rebalance
+        let mut sg = ShardedGraph::partition(&g0, 4);
+        let mut e = ShardedEngine::new();
+        let mut st = e.sssp_static(&sg, 0);
+        let mut rebalanced = false;
+        for (i, (dels_by, adds_by)) in route_stream(&sg, &stream).into_iter().enumerate() {
+            // NB: route once up-front is fine here — the pre-rebalance
+            // owner still *stores* those vertices' rows until migration,
+            // and this loop re-routes nothing after the move because the
+            // remaining batches were routed against the old map; to stay
+            // faithful to the service (which routes per batch against the
+            // live map) we re-route below.
+            let mut d2 = vec![Vec::new(); 4];
+            let mut a2 = vec![Vec::new(); 4];
+            let flat_d: Vec<_> = dels_by.iter().flatten().copied().collect();
+            let flat_a: Vec<_> = adds_by.iter().flatten().copied().collect();
+            sg.route(&flat_d, &flat_a, &mut d2, &mut a2);
+            e.sssp_dynamic_batch(&mut sg, &mut st, &d2, &a2);
+            if i == 2 {
+                let epoch_before = sg.epoch();
+                let edges_before = sg.edges_sorted();
+                let imb_before = sg.imbalance();
+                assert!(imb_before > 1.1, "hub storm must skew mass: {imb_before}");
+                let (moved_v, moved_e) = sg.rebalance();
+                rebalanced = true;
+                assert!(moved_v > 0, "boundaries must move");
+                assert!(moved_e > 0, "rows must migrate");
+                assert_eq!(sg.epoch(), epoch_before, "migration is epoch-neutral");
+                assert_eq!(sg.edges_sorted(), edges_before, "edge set preserved");
+                assert!(
+                    sg.imbalance() < imb_before,
+                    "rebalance must reduce skew: {} -> {}",
+                    imb_before,
+                    sg.imbalance()
+                );
+                for v in 0..g0.num_nodes() as NodeId {
+                    assert_eq!(sg.out_degree(v), gref_degree_at(&edges_before, v), "deg({v})");
+                }
+            }
+        }
+        assert!(rebalanced);
+        assert_eq!(sg.edges_sorted(), gref.edges_sorted());
+        assert_eq!(st.dist, want.dist, "dist bitwise across a live migration");
+        assert_eq!(st.parent, want.parent, "parent bitwise across a live migration");
+    }
+
+    fn gref_degree_at(edges: &[(NodeId, NodeId, Weight)], v: NodeId) -> u32 {
+        edges.iter().filter(|&&(u, _, _)| u == v).count() as u32
+    }
+
+    #[test]
+    fn merge_shards_with_merges_only_flagged() {
+        let g0 = generators::uniform_random(300, 1500, 9, 61);
+        let stream = UpdateStream::generate_percent(&g0, 25.0, 64, 9, 63);
+        let mut sg = ShardedGraph::partition(&g0, 3);
+        let mut e = ShardedEngine::new();
+        let mut st = e.sssp_static(&sg, 0);
+        for (dels_by, adds_by) in route_stream(&sg, &stream) {
+            e.sssp_dynamic_batch(&mut sg, &mut st, &dels_by, &adds_by);
+        }
+        let before: Vec<usize> = (0..3).map(|r| sg.shard(r).diff_chain_len()).collect();
+        assert!(before.iter().all(|&c| c > 0), "churn must dirty every shard: {before:?}");
+        let edges = sg.edges_sorted();
+        let merged = sg.merge_shards_with(None, &[false, true, false]);
+        assert_eq!(merged, 1);
+        assert_eq!(sg.shard(1).diff_chain_len(), 0, "flagged shard compacts");
+        assert_eq!(sg.shard(0).diff_chain_len(), before[0], "unflagged shard untouched");
+        assert_eq!(sg.shard(2).diff_chain_len(), before[2], "unflagged shard untouched");
+        assert_eq!(sg.edges_sorted(), edges, "edge set preserved");
     }
 
     #[test]

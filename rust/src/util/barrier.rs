@@ -1,0 +1,333 @@
+//! Reusable phase barrier and the persistent shard worker fleet.
+//!
+//! The sharded streaming engine (PR 4) ran every BSP phase under a fresh
+//! `std::thread::scope`, paying thread spawn/join a dozen-plus times per
+//! batch. This module provides the two primitives that replace it:
+//!
+//! * [`PhaseBarrier`] — a reusable sense-reversing barrier (the sense is
+//!   the parity of a monotonically increasing generation counter). Waiters
+//!   spin briefly to catch short phases without a syscall, then park on a
+//!   condvar. Tracked waits accumulate idle nanoseconds so barrier
+//!   imbalance is observable in bench output.
+//! * [`ShardFleet`] — long-lived pinned workers, one per shard, spawned
+//!   once and living until the fleet is dropped. Phase closures are
+//!   delivered over per-shard channels; the coordinator and every worker
+//!   then meet at the shared [`PhaseBarrier`], so a phase's borrows never
+//!   outlive [`ShardFleet::run`].
+//!
+//! Disjoint mutable access inside a phase uses the same idioms as the
+//! scoped version: [`SyncSlice`](crate::util::SyncSlice) for owner-range
+//! writes and per-shard result slots.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Spin iterations before a waiter parks on the condvar. Phases in the
+/// sharded engine are typically tens of microseconds, so a short spin
+/// catches the common case; long stragglers park instead of burning a
+/// core.
+const SPIN_ROUNDS: u32 = 4096;
+
+/// A reusable barrier for a fixed party count.
+///
+/// Classic sense-reversing design: each cohort is identified by the
+/// generation counter (its parity is the "sense"); the last arrival resets
+/// the arrival count and advances the generation, releasing everyone
+/// spinning or parked on the old value. The barrier is immediately
+/// reusable — parties may re-enter `wait` for the next phase while
+/// stragglers from the previous one are still waking up.
+#[derive(Debug)]
+pub struct PhaseBarrier {
+    parties: usize,
+    arrived: AtomicUsize,
+    generation: AtomicU64,
+    lock: Mutex<()>,
+    cvar: Condvar,
+    wait_nanos: AtomicU64,
+}
+
+impl PhaseBarrier {
+    pub fn new(parties: usize) -> Self {
+        PhaseBarrier {
+            parties: parties.max(1),
+            arrived: AtomicUsize::new(0),
+            generation: AtomicU64::new(0),
+            lock: Mutex::new(()),
+            cvar: Condvar::new(),
+            wait_nanos: AtomicU64::new(0),
+        }
+    }
+
+    pub fn parties(&self) -> usize {
+        self.parties
+    }
+
+    /// Wait for all parties. Does not record idle time.
+    pub fn wait(&self) {
+        self.wait_inner(false);
+    }
+
+    /// Wait for all parties, accumulating the time spent waiting into the
+    /// barrier's idle counter (see [`wait_nanos`](Self::wait_nanos)).
+    pub fn wait_tracked(&self) {
+        self.wait_inner(true);
+    }
+
+    /// Total nanoseconds spent in tracked waits across all parties — the
+    /// per-phase load-imbalance signal surfaced in `RelayStats`.
+    pub fn wait_nanos(&self) -> u64 {
+        self.wait_nanos.load(Ordering::Relaxed)
+    }
+
+    fn wait_inner(&self, record: bool) {
+        let start = if record { Some(Instant::now()) } else { None };
+        let gen = self.generation.load(Ordering::Acquire);
+        let prev = self.arrived.fetch_add(1, Ordering::AcqRel);
+        if prev + 1 == self.parties {
+            // Last arrival: reset for the next cohort *before* advancing
+            // the generation (released parties may re-enter immediately),
+            // then advance under the lock so a parked waiter cannot miss
+            // the notify between its generation check and `cvar.wait`.
+            self.arrived.store(0, Ordering::Release);
+            {
+                let _g = self.lock.lock().unwrap();
+                self.generation.fetch_add(1, Ordering::Release);
+            }
+            self.cvar.notify_all();
+        } else {
+            let mut spins = 0u32;
+            while self.generation.load(Ordering::Acquire) == gen {
+                spins += 1;
+                if spins < SPIN_ROUNDS {
+                    std::hint::spin_loop();
+                } else {
+                    let mut g = self.lock.lock().unwrap();
+                    while self.generation.load(Ordering::Acquire) == gen {
+                        g = self.cvar.wait(g).unwrap();
+                    }
+                    break;
+                }
+            }
+        }
+        if let Some(t0) = start {
+            self.wait_nanos
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+/// An erased phase closure. Raw pointers carry no lifetime; safety comes
+/// from the run protocol: the coordinator does not return from
+/// [`ShardFleet::run`] until every worker has passed the phase barrier,
+/// so the pointee outlives every dereference.
+struct JobMsg(*const (dyn Fn(usize) + Sync));
+
+// SAFETY: the pointee is `Sync` (shared by all workers) and the run
+// protocol bounds its lifetime; sending the pointer itself is just
+// sending an address.
+unsafe impl Send for JobMsg {}
+
+enum FleetMsg {
+    Run(JobMsg),
+    Stop,
+}
+
+/// Persistent shard workers: one pinned thread per shard, fed phase
+/// closures over per-shard channels, synchronized by a shared
+/// [`PhaseBarrier`].
+///
+/// Between phases workers block on their channel (parked in `recv`), so an
+/// idle fleet costs nothing. Dropping the fleet sends `Stop` to every
+/// worker and joins them.
+#[derive(Debug)]
+pub struct ShardFleet {
+    senders: Vec<Sender<FleetMsg>>,
+    barrier: Arc<PhaseBarrier>,
+    panicked: Arc<AtomicBool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl ShardFleet {
+    /// Spawn `workers` resident threads (named `shard-<r>`).
+    pub fn new(workers: usize) -> Self {
+        let workers = workers.max(1);
+        // Parties = workers + the coordinator: `run` returns only once
+        // every worker has finished the phase.
+        let barrier = Arc::new(PhaseBarrier::new(workers + 1));
+        let panicked = Arc::new(AtomicBool::new(false));
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for rank in 0..workers {
+            let (tx, rx) = channel::<FleetMsg>();
+            let b = Arc::clone(&barrier);
+            let p = Arc::clone(&panicked);
+            let h = std::thread::Builder::new()
+                .name(format!("shard-{rank}"))
+                .spawn(move || worker_loop(rank, rx, b, p))
+                .expect("spawn shard fleet worker");
+            senders.push(tx);
+            handles.push(h);
+        }
+        ShardFleet { senders, barrier, panicked, handles }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Execute one phase: every worker `r` runs `job(r)` concurrently;
+    /// returns once all workers have passed the barrier. Panics (after all
+    /// workers finish the phase) if any worker's closure panicked.
+    pub fn run(&self, job: &(dyn Fn(usize) + Sync)) {
+        let ptr = job as *const (dyn Fn(usize) + Sync);
+        for tx in &self.senders {
+            tx.send(FleetMsg::Run(JobMsg(ptr))).expect("shard fleet worker alive");
+        }
+        self.barrier.wait();
+        if self.panicked.load(Ordering::Acquire) {
+            panic!("shard fleet worker panicked during a phase");
+        }
+    }
+
+    /// Cumulative worker idle time at the phase barrier, in nanoseconds.
+    pub fn wait_nanos(&self) -> u64 {
+        self.barrier.wait_nanos()
+    }
+}
+
+fn worker_loop(
+    rank: usize,
+    rx: Receiver<FleetMsg>,
+    barrier: Arc<PhaseBarrier>,
+    panicked: Arc<AtomicBool>,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            FleetMsg::Run(JobMsg(ptr)) => {
+                // SAFETY: the coordinator keeps the closure alive until it
+                // passes the same barrier we hit below (see JobMsg).
+                let job = unsafe { &*ptr };
+                if catch_unwind(AssertUnwindSafe(|| job(rank))).is_err() {
+                    panicked.store(true, Ordering::Release);
+                }
+                barrier.wait_tracked();
+            }
+            FleetMsg::Stop => break,
+        }
+    }
+}
+
+impl Drop for ShardFleet {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(FleetMsg::Stop);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SyncSlice;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn barrier_is_reusable_across_generations() {
+        let parties = 4;
+        let barrier = Arc::new(PhaseBarrier::new(parties));
+        let rounds = 50usize;
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..parties)
+            .map(|_| {
+                let b = Arc::clone(&barrier);
+                let c = Arc::clone(&counter);
+                std::thread::spawn(move || {
+                    for round in 0..rounds {
+                        c.fetch_add(1, Ordering::SeqCst);
+                        b.wait();
+                        // after the barrier every party of this round has
+                        // incremented: the count is at least parties*(round+1)
+                        assert!(c.load(Ordering::SeqCst) >= parties * (round + 1));
+                        b.wait();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), parties * rounds);
+    }
+
+    #[test]
+    fn single_party_barrier_never_blocks() {
+        let b = PhaseBarrier::new(1);
+        for _ in 0..10 {
+            b.wait();
+        }
+    }
+
+    #[test]
+    fn fleet_runs_phases_with_borrowed_state() {
+        let fleet = ShardFleet::new(4);
+        let mut out = vec![0usize; 4];
+        for phase in 0..32 {
+            let s = SyncSlice::new(&mut out);
+            fleet.run(&|r| {
+                // SAFETY: each worker writes only its own slot.
+                unsafe { s.set(r, r * 10 + phase) };
+            });
+        }
+        assert_eq!(out, vec![31, 41, 51, 61]);
+    }
+
+    #[test]
+    fn fleet_workers_share_a_work_queue() {
+        let fleet = ShardFleet::new(3);
+        let n = 3000usize;
+        let mut buf = vec![0u32; n];
+        {
+            let s = SyncSlice::new(&mut buf);
+            let cursor = AtomicUsize::new(0);
+            fleet.run(&|_r| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: fetch_add hands each index to exactly one worker.
+                unsafe { s.set(i, (i as u32) ^ 7) };
+            });
+        }
+        assert!(buf.iter().enumerate().all(|(i, &v)| v == (i as u32) ^ 7));
+    }
+
+    #[test]
+    fn fleet_tracks_barrier_wait_under_imbalance() {
+        let fleet = ShardFleet::new(2);
+        fleet.run(&|r| {
+            if r == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+        });
+        // worker 1 finished instantly and waited ~5ms for worker 0
+        assert!(fleet.wait_nanos() > 0, "idle worker accumulates barrier wait");
+    }
+
+    #[test]
+    #[should_panic(expected = "shard fleet worker panicked")]
+    fn fleet_propagates_worker_panics() {
+        let fleet = ShardFleet::new(2);
+        fleet.run(&|r| {
+            if r == 1 {
+                panic!("boom");
+            }
+        });
+    }
+}

@@ -6,6 +6,7 @@
 //! a timing helper, streaming statistics, and a tiny property-testing
 //! harness (`propcheck`).
 
+pub mod barrier;
 pub mod error;
 pub mod propcheck;
 pub mod rng;
@@ -14,6 +15,7 @@ pub mod sync_slice;
 pub mod threadpool;
 pub mod timer;
 
+pub use barrier::{PhaseBarrier, ShardFleet};
 pub use error::{Context, Error, Result};
 pub use propcheck::{forall_checks, Gen};
 pub use rng::Rng;

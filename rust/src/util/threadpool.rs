@@ -29,6 +29,15 @@
 //!
 //! Built on `std::thread::scope`, so closures may borrow from the caller's
 //! stack — no `Arc` plumbing required in the hot loops.
+//!
+//! The pool spawns fresh scoped workers per `parallel_for` call, which is
+//! the right trade for the single-engine backend's coarse loops. The
+//! *sharded streaming* runtime has the opposite profile — a dozen-plus
+//! short BSP phases per batch — and runs instead on the resident
+//! [`ShardFleet`](crate::util::barrier::ShardFleet) (sibling module
+//! `util::barrier`): long-lived pinned shard workers fed phase closures
+//! over channels and synchronized by a reusable sense-reversing
+//! [`PhaseBarrier`](crate::util::barrier::PhaseBarrier).
 
 use crate::graph::partition::{Partition, PartitionMap};
 use std::sync::atomic::{AtomicUsize, Ordering};

@@ -4,12 +4,15 @@
 //! be observationally a no-op.
 //!
 //! The sharded half is the **cross-shard equivalence matrix** pinning the
-//! `ShardedService`: for shards ∈ {1, 2, 4}, sharded ≡ single-engine ≡
+//! `ShardedService`: for shards ∈ {1, 2, 4, 8}, sharded ≡ single-engine ≡
 //! offline batch mode — *bitwise* for SSSP (unique fixed point +
 //! deterministic parent repair) and TC (order-free integer counts),
 //! oracle-equal for PR (float sums reassociate across shard boundaries) —
 //! plus the cross-shard coalescing routing property and the epoch-stitch
-//! reader test.
+//! reader test. The skewed legs rerun the matrix under zipfian hub-heavy
+//! churn with the persistent fleet's in-phase stealing and churn-driven
+//! rebalancing forced on, asserting at least one live migration per
+//! multi-shard leg.
 //!
 //! The backend half is the **cross-backend equivalence matrix** pinning
 //! `serve --backend {serial,cpu,dist,xla}` through the `DynamicEngine`
@@ -22,7 +25,9 @@
 use starplat_dyn::algorithms::{sssp, triangle, PrState};
 use starplat_dyn::backend::cpu::CpuEngine;
 use starplat_dyn::backend::{BackendKind, Direction, EngineOpts};
-use starplat_dyn::coordinator::{run_stream_cell, stream_workload, Algo};
+use starplat_dyn::coordinator::{
+    run_stream_cell, run_stream_cell_workload, stream_workload, Algo,
+};
 use starplat_dyn::graph::{generators, DynGraph, NodeId, Update, UpdateKind, UpdateStream};
 use starplat_dyn::stream::{
     GraphService, MergePolicy, ServiceConfig, ShardedGraph, ShardedService,
@@ -33,7 +38,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-const SHARD_MATRIX: [usize; 3] = [1, 2, 4];
+const SHARD_MATRIX: [usize; 4] = [1, 2, 4, 8];
 
 /// Deterministic single-lane config: one producer + one shard + one engine
 /// thread makes the service batching bit-identical to offline
@@ -331,7 +336,7 @@ fn gen_batch(len: usize) -> usize {
 
 // ------------------------------------------------------------ sharded
 
-/// Single-lane SSSP matrix: for shards ∈ {1, 2, 4}, the sharded service's
+/// Single-lane SSSP matrix: for shards ∈ {1, 2, 4, 8}, the sharded service's
 /// end-state is *bitwise* equal to the single-engine service and to the
 /// offline batch pipeline over the same batches (and all equal the
 /// Dijkstra oracle).
@@ -392,7 +397,7 @@ fn sssp_sharded_matrix_bitwise_vs_single_engine_and_offline() {
 }
 
 /// Multi-producer SSSP matrix: random dynamic batches fanned over 4
-/// producers, shards ∈ {1, 2, 4} — every configuration lands bitwise on
+/// producers, shards ∈ {1, 2, 4, 8} — every configuration lands bitwise on
 /// the Dijkstra oracle of the fully-updated graph (conflict-free
 /// workloads make the end graph batching-independent, and the SSSP fixed
 /// point is unique).
@@ -420,7 +425,7 @@ fn sssp_sharded_matrix_multi_producer_matches_oracle() {
     }
 }
 
-/// TC matrix: multi-producer undirected updates, shards ∈ {1, 2, 4} —
+/// TC matrix: multi-producer undirected updates, shards ∈ {1, 2, 4, 8} —
 /// streamed delta counting is exact (equals a full static recount of the
 /// final graph) for every shard count, which also makes the counts
 /// bitwise equal across the matrix.
@@ -449,7 +454,7 @@ fn tc_sharded_matrix_counts_exactly() {
     );
 }
 
-/// PR matrix: shards ∈ {1, 2, 4} — streamed ranks track the static
+/// PR matrix: shards ∈ {1, 2, 4, 8} — streamed ranks track the static
 /// recompute of the final graph at the usual dynamic-PR tolerance
 /// (bitwise is not expected: float sums reassociate across shards).
 #[test]
@@ -473,6 +478,192 @@ fn pr_sharded_matrix_tracks_static_recompute() {
         let st = report.pr().expect("pr service");
         let l1: f64 = st.rank.iter().zip(&truth.rank).map(|(a, b)| (a - b).abs()).sum();
         assert!(l1 < 0.05, "shards={shards}: PR diverged, L1={l1}");
+    }
+}
+
+// ------------------------------------------------- skewed + steal/rebalance
+
+/// [`exact_cfg`] for the sharded service with the persistent-runtime
+/// knobs forced hot: the resident fleet (on by default), in-phase work
+/// stealing, and a rebalance threshold low enough that hub-heavy churn
+/// trips at least one live migration mid-stream.
+fn skew_cfg(algo: Algo, batch: usize, shards: usize) -> ServiceConfig {
+    let mut cfg = exact_cfg(algo, batch);
+    cfg.engine = EngineOpts::default();
+    cfg.engine_shards = shards;
+    cfg.steal = true;
+    cfg.rebalance = Some(1.10);
+    cfg
+}
+
+/// Zipfian hub-heavy churn trimmed to whole batches (size-closed
+/// batching keeps the bitwise comparisons schedule-independent). Insert
+/// sources concentrate on the 16 lowest vertex ids, so the seed-time
+/// `edge_balanced` boundaries go stale as shard 0 grows.
+fn skewed_stream(g0: &DynGraph, total: usize, batch: usize, seed: u64) -> UpdateStream {
+    let raw = UpdateStream::generate_count_skewed(g0, total, batch, 9, seed, 16);
+    UpdateStream::new(trim_to_batches(raw.updates, batch), batch)
+}
+
+/// Skewed SSSP matrix (persistent runtime): hub-heavy churn with
+/// stealing and rebalancing on. For every shard count the end-state is
+/// still *bitwise* equal to the single-engine service and offline batch
+/// mode — distances AND parents — because stolen relax buckets are
+/// applied by their owner and migration republishes under the epoch
+/// stitch. Every shards > 1 leg must observe at least one live
+/// rebalance: the hubs all live in shard 0's contiguous range, so its
+/// edge mass provably overshoots the 1.10 imbalance threshold.
+#[test]
+fn sssp_sharded_skewed_matrix_bitwise_with_steal_and_rebalance() {
+    let g0 = generators::rmat(9, 2400, 0.57, 0.19, 0.19, 211);
+    let batch = 64;
+    let stream = skewed_stream(&g0, 1600, batch, 213);
+
+    // offline batch mode
+    let engine = CpuEngine::new(1, Sched::Dynamic { chunk: 64 });
+    let mut g = g0.clone();
+    g.merge_period = 0;
+    let mut offline = engine.sssp_static(&g, 0);
+    for b in stream.batches() {
+        engine.sssp_dynamic_batch(&mut g, &mut offline, &b);
+    }
+
+    // single-engine service
+    let svc = GraphService::start(g0.clone(), exact_cfg(Algo::Sssp, batch));
+    for u in &stream.updates {
+        assert!(svc.submit(*u));
+    }
+    svc.drain();
+    let single = svc.shutdown();
+    assert_eq!(single.sssp().unwrap().dist, offline.dist);
+
+    for shards in SHARD_MATRIX {
+        let svc = ShardedService::start(g0.clone(), skew_cfg(Algo::Sssp, batch, shards));
+        for u in &stream.updates {
+            assert!(svc.submit(*u));
+        }
+        svc.drain();
+        let report = svc.shutdown();
+        assert_eq!(
+            report.graph.edges_sorted(),
+            g.edges_sorted(),
+            "shards={shards}: end graphs diverged"
+        );
+        let st = report.sssp().expect("sssp service");
+        assert_eq!(st.dist, offline.dist, "shards={shards}: dist vs offline");
+        assert_eq!(st.parent, offline.parent, "shards={shards}: parents vs offline");
+        assert_eq!(st.dist, single.sssp().unwrap().dist, "shards={shards}: dist vs single");
+        assert_eq!(st.dist, sssp::dijkstra_oracle(&g, 0), "shards={shards}: oracle");
+        if shards > 1 {
+            assert!(report.relay.rounds > 0, "shards={shards}: relay never ran");
+            assert!(
+                report.stats.rebalances >= 1,
+                "shards={shards}: hub churn never tripped a rebalance"
+            );
+            assert!(
+                report.stats.migrated_vertices > 0,
+                "shards={shards}: rebalance migrated no rows"
+            );
+            assert_eq!(
+                report.stats.shard_loads.len(),
+                shards,
+                "shards={shards}: per-shard load stats missing"
+            );
+        }
+    }
+}
+
+/// Skewed TC matrix: hub-heavy undirected churn with stealing and
+/// rebalancing on — delta counting stays exact (equals a static recount
+/// of the final graph) across at least one live migration per
+/// multi-shard leg, and the counts agree across the whole matrix.
+#[test]
+fn tc_sharded_skewed_matrix_counts_exactly_across_migration() {
+    let g0 = triangle::symmetrize(&generators::rmat(8, 900, 0.57, 0.19, 0.19, 221));
+    let batch = 32;
+    // one arc per undirected edge (the symmetric service expands each
+    // into both arcs) — a directed generator run against a symmetrized
+    // base can emit both arcs of one edge, so keep only the first
+    let raw = UpdateStream::generate_count_skewed(&g0, 800, batch, 9, 223, 16);
+    let mut seen = std::collections::HashSet::new();
+    let undirected: Vec<Update> = raw
+        .updates
+        .into_iter()
+        .filter(|u| seen.insert((u.src.min(u.dst), u.src.max(u.dst))))
+        .collect();
+    let updates = trim_to_batches(undirected, batch);
+
+    let mut counts = Vec::new();
+    for shards in SHARD_MATRIX {
+        let (cell, report) = run_stream_cell_workload(
+            g0.clone(),
+            updates.clone(),
+            2,
+            1,
+            skew_cfg(Algo::Tc, batch, shards),
+        )
+        .unwrap();
+        assert_eq!(cell.shards, shards);
+        let st = report.tc().expect("tc service");
+        assert_eq!(
+            st.triangles,
+            triangle::static_tc(&report.graph).triangles,
+            "shards={shards}: streamed TC must equal a static recount"
+        );
+        for (u, v, _) in report.graph.edges_sorted() {
+            assert!(report.graph.has_edge(v, u), "shards={shards}: asymmetric {u}->{v}");
+        }
+        if shards > 1 {
+            assert!(
+                cell.stats.rebalances >= 1,
+                "shards={shards}: hub churn never tripped a rebalance"
+            );
+        }
+        counts.push(st.triangles);
+    }
+    assert!(
+        counts.windows(2).all(|w| w[0] == w[1]),
+        "counts diverged across the skewed shard matrix: {counts:?}"
+    );
+}
+
+/// Skewed PR matrix: hub-heavy churn with stealing and rebalancing on —
+/// streamed ranks keep tracking the static recompute of the final graph
+/// (usual dynamic-PR tolerance) across at least one live migration per
+/// multi-shard leg.
+#[test]
+fn pr_sharded_skewed_matrix_tracks_recompute_across_migration() {
+    let g0 = generators::rmat(8, 1200, 0.57, 0.19, 0.19, 231);
+    let n = g0.num_nodes();
+    let batch = 64;
+    let stream = skewed_stream(&g0, 1000, batch, 233);
+    let mut want = g0.clone();
+    stream.apply_all_static(&mut want);
+    let mut truth = PrState::new(n, 1e-9, 0.85, 200);
+    let engine = CpuEngine::new(2, Sched::Dynamic { chunk: 64 });
+    engine.pr_static(&want, &mut truth);
+
+    for shards in SHARD_MATRIX {
+        let mut cfg = skew_cfg(Algo::Pr, batch, shards);
+        cfg.pr_beta = 1e-9;
+        cfg.pr_max_iter = 200;
+        let svc = ShardedService::start(g0.clone(), cfg);
+        for u in &stream.updates {
+            assert!(svc.submit(*u));
+        }
+        svc.drain();
+        let report = svc.shutdown();
+        assert_eq!(report.graph.edges_sorted(), want.edges_sorted(), "shards={shards}");
+        let st = report.pr().expect("pr service");
+        let l1: f64 = st.rank.iter().zip(&truth.rank).map(|(a, b)| (a - b).abs()).sum();
+        assert!(l1 < 0.05, "shards={shards}: PR diverged across migration, L1={l1}");
+        if shards > 1 {
+            assert!(
+                report.stats.rebalances >= 1,
+                "shards={shards}: hub churn never tripped a rebalance"
+            );
+            assert!(report.stats.migrated_vertices > 0, "shards={shards}: no rows moved");
+        }
     }
 }
 
