@@ -48,6 +48,7 @@ fn push_row(
         rows.push_str(",\n");
     }
     let relay = cell.relay;
+    let st = cell.stats.stages.per_batch_ms(cell.stats.batches);
     let _ = write!(
         rows,
         "    {{\"backend\": \"{backend}\", \"shards\": {shards}, \
@@ -57,6 +58,10 @@ fn push_row(
          \"skew\": \"{skew}\", \"runtime\": \"{runtime}\", \
          \"updates\": {}, \"updates_per_sec\": {:.1}, \
          \"batch_latency_p50_ms\": {:.4}, \"batch_latency_p99_ms\": {:.4}, \
+         \"batch_latency_p999_ms\": {:.4}, \
+         \"stage_ms_per_batch\": {{\"queue_wait\": {:.4}, \"form\": {:.4}, \
+         \"compute\": {:.4}, \"barrier\": {:.4}, \"relay\": {:.4}, \
+         \"merge\": {:.4}, \"publish\": {:.4}}}, \
          \"batches\": {}, \"closed_by_size\": {}, \"closed_by_deadline\": {}, \
          \"merges\": {}, \"policy\": \"{}\", \"snapshot_reads\": {}, \
          \"modeled_comm_secs\": {:.6}, \
@@ -67,6 +72,14 @@ fn push_row(
         cell.updates_per_sec,
         cell.stats.batch_latency_p50 * 1e3,
         cell.stats.batch_latency_p99 * 1e3,
+        cell.stats.batch_latency_p999 * 1e3,
+        st.queue_wait,
+        st.form,
+        st.compute,
+        st.barrier,
+        st.relay,
+        st.merge,
+        st.publish,
         cell.stats.batches,
         cell.stats.closed_by_size,
         cell.stats.closed_by_deadline,

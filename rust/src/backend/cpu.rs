@@ -960,6 +960,10 @@ impl DynamicEngine for CpuEngine {
         g.set_merge_sched(self.sched);
     }
 
+    fn direction_stats(&self) -> Option<DirectionStats> {
+        Some(CpuEngine::direction_stats(self))
+    }
+
     fn sssp_static(&self, g: &DynGraph, source: NodeId) -> EngineResult<SsspState> {
         Ok(CpuEngine::sssp_static(self, g, source))
     }

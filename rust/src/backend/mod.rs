@@ -178,6 +178,13 @@ pub trait DynamicEngine {
         0.0
     }
 
+    /// Push/pull direction telemetry accumulated since engine creation
+    /// (cpu's adaptive direction policy; `None` for engines that do not
+    /// track a traversal direction). Surfaced in `ServiceStats`.
+    fn direction_stats(&self) -> Option<cpu::DirectionStats> {
+        None
+    }
+
     // ------------------------------------------------------------ SSSP
 
     /// Static SSSP solve (the dynamic pipeline's seed).

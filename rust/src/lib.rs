@@ -33,6 +33,11 @@
 //!   scale-out flavor — N engine shards owning edge-mass-balanced vertex
 //!   blocks, a cross-shard relax-message relay (in-process halo
 //!   exchange), and epoch-stitched snapshots.
+//! * **Telemetry** ([`telemetry`]): the zero-dep observability layer —
+//!   lock-free per-thread span tracks exported as Chrome-trace/Perfetto
+//!   JSON (`serve --trace-out`), fixed-memory log2-bucketed latency
+//!   histograms (accurate p999), a named metrics registry, and the
+//!   `--stats-every` live JSON sampler.
 //!
 //! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for the
 //! paper-vs-measured record.
@@ -44,6 +49,7 @@ pub mod coordinator;
 pub mod dsl;
 pub mod graph;
 pub mod stream;
+pub mod telemetry;
 
 pub mod runtime;
 pub mod util;

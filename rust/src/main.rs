@@ -21,6 +21,7 @@
 //!       [--sched dynamic[:<chunk>]|static|partitioned]
 //!       [--direction push|pull|adaptive[:<a>[,<b>]]]
 //!       [--ranks R]
+//!       [--trace-out <path>] [--stats-every <secs>] [--hist on|off]
 //!       [--graph …] [--nodes N] [--percent P] [--seed S]
 //!       run the streaming service under a synthetic multi-producer load
 //!       and print throughput + batch-latency statistics. `--backend`
@@ -31,7 +32,11 @@
 //!       `--steal`, and `--rebalance` tune the persistent shard runtime
 //!       (resident workers / in-phase work stealing / churn-driven row
 //!       migration); `--ingest-shards` sizes the producer-side queue
-//!       sharding.
+//!       sharding. `--trace-out` records per-stage pipeline spans and
+//!       writes a Chrome-trace/Perfetto JSON on shutdown; `--stats-every`
+//!       emits a one-line JSON metrics snapshot at that interval;
+//!       `--hist off` swaps the batch-latency histogram for the sampling
+//!       reservoir.
 //!   interp <file.sp> --fn <DynName> [--nodes N] [--percent P] …
 //!       execute a DSL program through the reference interpreter.
 //!   inspect
@@ -246,6 +251,21 @@ fn real_main() -> Result<()> {
                 "off" => None,
                 t => Some(t.parse::<f64>().context("--rebalance expects a threshold like 1.5, or off")?),
             };
+            let trace_out = args.flags.get("trace-out").cloned();
+            let tracer = trace_out.as_ref().map(|_| starplat_dyn::telemetry::Tracer::new());
+            cfg.telemetry.tracer = tracer.clone();
+            if let Some(every) = args.flags.get("stats-every") {
+                let secs: f64 = every.parse().context("--stats-every expects seconds, e.g. 1 or 0.5")?;
+                if secs <= 0.0 {
+                    bail!("--stats-every must be positive");
+                }
+                cfg.telemetry.stats_every = Some(std::time::Duration::from_secs_f64(secs));
+            }
+            cfg.telemetry.histograms = match args.get("hist", "on").as_str() {
+                "on" => true,
+                "off" => false,
+                other => bail!("--hist {other:?}: expected on|off"),
+            };
             let g = make_graph(&args);
             if cfg.engine_shards > 1 {
                 println!(
@@ -304,11 +324,25 @@ fn real_main() -> Result<()> {
             println!("wall           : {:.4}s", cell.wall_secs);
             println!("throughput     : {:.0} upd/s", cell.updates_per_sec);
             println!(
-                "batch latency  : p50 {:.3}ms  p99 {:.3}ms  mean {:.3}ms",
+                "batch latency  : p50 {:.3}ms  p99 {:.3}ms  p999 {:.3}ms  mean {:.3}ms",
                 cell.stats.batch_latency_p50 * 1e3,
                 cell.stats.batch_latency_p99 * 1e3,
+                cell.stats.batch_latency_p999 * 1e3,
                 cell.stats.batch_latency_mean * 1e3
             );
+            let st = cell.stats.stages.per_batch_ms(cell.stats.batches);
+            println!(
+                "stage ms/batch : queue {:.3}  form {:.3}  compute {:.3}  \
+                 barrier {:.3}  relay {:.3}  merge {:.3}  publish {:.3}",
+                st.queue_wait, st.form, st.compute, st.barrier, st.relay, st.merge,
+                st.publish
+            );
+            if let Some(d) = cell.stats.direction {
+                println!(
+                    "direction      : {} push rounds, {} pull rounds, peak mass {:.4}",
+                    d.push_rounds, d.pull_rounds, d.peak_mass_frac
+                );
+            }
             println!(
                 "batches        : {} (size {}, deadline {}, drain {})",
                 cell.stats.batches,
@@ -331,6 +365,18 @@ fn real_main() -> Result<()> {
             }
             println!("coalesced      : {}", cell.stats.coalesced);
             println!("snapshot reads : {} (epoch {})", cell.snapshot_reads, cell.stats.epoch);
+            if let (Some(path), Some(tracer)) = (&trace_out, &tracer) {
+                // service shutdown joined every pipeline thread inside
+                // run_stream_cell, so the tracks have quiesced
+                starplat_dyn::telemetry::write_chrome_trace(
+                    std::path::Path::new(path),
+                    tracer,
+                )?;
+                println!(
+                    "trace          : wrote {path} ({} tracks; open in ui.perfetto.dev)",
+                    tracer.tracks().len()
+                );
+            }
         }
         "interp" => {
             let file = args

@@ -30,9 +30,10 @@
 //! either arc order coalesces.
 
 use crate::graph::{NodeId, Update, UpdateKind};
+use crate::telemetry::{Stage, Track};
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// One queued update plus its enqueue timestamp (the batch-latency clock
@@ -99,6 +100,8 @@ pub struct Ingest {
     coalesced: AtomicU64,
     quiescent_m: Mutex<()>,
     quiescent_cv: Condvar,
+    /// Optional span tracks, one per queue shard ([`set_tracks`](Self::set_tracks)).
+    tracks: Vec<Arc<Track>>,
 }
 
 impl Ingest {
@@ -123,7 +126,16 @@ impl Ingest {
             coalesced: AtomicU64::new(0),
             quiescent_m: Mutex::new(()),
             quiescent_cv: Condvar::new(),
+            tracks: Vec::new(),
         }
+    }
+
+    /// Attach span tracks, one per queue shard; `submit` then records an
+    /// [`Stage::Enqueue`] span per accepted update (covering any
+    /// backpressure wait). Recording happens under the shard lock, which
+    /// serializes the many producers into a single logical track writer.
+    pub fn set_tracks(&mut self, tracks: Vec<Arc<Track>>) {
+        self.tracks = tracks;
     }
 
     pub fn num_shards(&self) -> usize {
@@ -154,8 +166,10 @@ impl Ingest {
     /// Submit one update, blocking while the target shard is full. Returns
     /// `false` (update dropped) once the service is shutting down.
     pub fn submit(&self, upd: Update) -> bool {
+        let t0 = Instant::now();
         let key = self.key(upd.src, upd.dst);
-        let shard = &self.shards[self.shard_of(key)];
+        let si = self.shard_of(key);
+        let shard = &self.shards[si];
         // inserts cancelled by this submission (delete-triggered)
         let mut cancelled = 0u64;
         {
@@ -191,6 +205,11 @@ impl Ingest {
             }
             q.buf.push_back(Stamped { upd, at: Instant::now(), seq, cancelled: false });
             q.live += 1;
+            if let Some(t) = self.tracks.get(si) {
+                // still under the shard lock: writers to this track are
+                // serialized, satisfying the single-writer contract
+                t.record(Stage::Enqueue, t0);
+            }
         }
         self.submitted.fetch_add(1, Ordering::SeqCst);
         if cancelled > 0 {
@@ -484,6 +503,22 @@ mod tests {
         ing.stop();
         assert!(!t.join().unwrap(), "blocked submit is rejected on stop");
         assert!(!ing.submit(add(0, 3)), "post-stop submits are rejected");
+    }
+
+    #[test]
+    fn enqueue_spans_record_per_shard() {
+        let tracer = crate::telemetry::Tracer::new();
+        let mut ing = Ingest::new(2, 64, false);
+        ing.set_tracks((0..2).map(|i| tracer.track(&format!("ingest-{i}"), 16)).collect());
+        for i in 0..8 {
+            assert!(ing.submit(add(i, i + 1)));
+        }
+        // single-threaded submitter: the snapshot contract is satisfied
+        let total: usize = tracer.tracks().iter().map(|t| t.snapshot().events.len()).sum();
+        assert_eq!(total, 8, "one enqueue span per accepted update");
+        for t in tracer.tracks() {
+            assert!(t.snapshot().events.iter().all(|e| e.stage == Stage::Enqueue));
+        }
     }
 
     #[test]

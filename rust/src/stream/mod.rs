@@ -32,6 +32,16 @@
 //!   epoch stamps, all-or-nothing) so readers never observe a
 //!   half-propagated batch.
 //!
+//! Every pipeline stage is instrumented through [`crate::telemetry`]:
+//! `ServiceConfig::telemetry` carries an optional span [`Tracer`]
+//! (Chrome-trace export of enqueue/form/seal/compute/scatter/steal/
+//! gather/pull/barrier/merge/rebalance/publish spans), the fixed-memory
+//! batch-latency histogram switch, and the `--stats-every` sampler
+//! interval; [`ServiceStats::stages`] reports the cumulative per-stage
+//! latency decomposition ([`StageSecs`]).
+//!
+//! [`Tracer`]: crate::telemetry::Tracer
+//!
 //! See `benches/stream_throughput.rs` for the backend × shards ×
 //! producers × deadline grid (`BENCH_stream.json`) and
 //! `tests/stream_equivalence.rs` for the equivalence matrices: the
@@ -50,7 +60,7 @@ pub use batcher::{BatchMeta, Batcher, CloseReason, MergeGovernor, MergePolicy, M
 pub use ingest::{Counters, Ingest};
 pub use service::{
     AlgoState, GraphService, ServiceConfig, ServiceReport, ServiceStats, ShardLoad,
-    ShardedReport, ShardedService,
+    ShardedReport, ShardedService, StageSecs,
 };
 pub use shard::{RelayStats, ShardedEngine, ShardedGraph};
 pub use snapshot::{PropTable, SnapshotCell};

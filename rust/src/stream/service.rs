@@ -25,6 +25,10 @@ use crate::algorithms::{PrState, SsspState, TcState};
 use crate::backend::{make_engine, BackendKind, DynamicEngine, EngineOpts};
 use crate::coordinator::Algo;
 use crate::graph::{DynGraph, NodeId, Update, UpdateKind, Weight};
+use crate::telemetry::{
+    Counter, Gauge, LogHistogram, MetricsRegistry, Stage, TelemetryConfig, Track,
+    SHARD_TRACK_CAP, TRACK_CAP,
+};
 use crate::util::error::{anyhow, bail, Result};
 use crate::util::stats::percentile_sorted;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -81,6 +85,10 @@ pub struct ServiceConfig {
     /// Treat each submitted update as an undirected edge (both arcs
     /// applied per batch) — the TC protocol. Defaults to true for TC.
     pub symmetric: bool,
+    /// Observability: span tracing (`--trace-out`), histogram-backed
+    /// percentiles (on by default), and the `--stats-every` sampler.
+    /// Instrumentation is wall-clock-only — it never perturbs results.
+    pub telemetry: TelemetryConfig,
     /// PR convergence parameters.
     pub pr_beta: f64,
     pub pr_delta: f64,
@@ -104,6 +112,7 @@ impl ServiceConfig {
             steal: false,
             rebalance: None,
             symmetric: algo == Algo::Tc,
+            telemetry: TelemetryConfig::default(),
             pr_beta: 1e-3,
             pr_delta: 0.85,
             pr_max_iter: 100,
@@ -133,6 +142,50 @@ pub struct ShardLoad {
     pub steals_received: u64,
     /// Shard-local merges performed by the per-shard governor.
     pub merges: u64,
+}
+
+/// Cumulative per-stage batch-lifecycle seconds (the latency
+/// decomposition). Stages are wall-clock on the coordinating engine
+/// thread except `barrier`, which sums every shard worker's idle time
+/// at the phase barrier (it can exceed wall), and `relay` ⊆ `compute`
+/// (the gather half of the BSP rounds). See the README's latency-stage
+/// glossary.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageSecs {
+    /// Oldest update's enqueue → batch close.
+    pub queue_wait: f64,
+    /// Draining the sealed batch into update buffers (+ owner routing).
+    pub form: f64,
+    /// Engine propagation (all BSP rounds, for the sharded service).
+    pub compute: f64,
+    /// Summed shard-worker idle at the phase barrier.
+    pub barrier: f64,
+    /// Cross-shard relay: the gather/owner-apply half of push rounds.
+    pub relay: f64,
+    /// Diff-CSR merge compaction.
+    pub merge: f64,
+    /// Epoch snapshot publish.
+    pub publish: f64,
+}
+
+impl StageSecs {
+    /// Scale every stage to mean milliseconds per batch (the shape the
+    /// serve printout and the bench JSON report).
+    pub fn per_batch_ms(&self, batches: u64) -> StageSecs {
+        if batches == 0 {
+            return StageSecs::default();
+        }
+        let k = 1e3 / batches as f64;
+        StageSecs {
+            queue_wait: self.queue_wait * k,
+            form: self.form * k,
+            compute: self.compute * k,
+            barrier: self.barrier * k,
+            relay: self.relay * k,
+            merge: self.merge * k,
+            publish: self.publish * k,
+        }
+    }
 }
 
 /// Point-in-time service statistics.
@@ -170,9 +223,19 @@ pub struct ServiceStats {
     /// Published snapshot epoch.
     pub epoch: u64,
     /// Batch latency (enqueue of oldest update → snapshot publish), secs.
+    /// Histogram-backed by default (±1.6% quantization, accurate p999);
+    /// reservoir-backed when `TelemetryConfig::histograms` is off.
     pub batch_latency_p50: f64,
     pub batch_latency_p99: f64,
+    pub batch_latency_p999: f64,
     pub batch_latency_mean: f64,
+    /// Cumulative per-stage latency decomposition (secs; see
+    /// [`StageSecs`] for the glossary and `per_batch_ms` for the
+    /// per-batch shape).
+    pub stages: StageSecs,
+    /// Push/pull traversal telemetry from the engine, when the backend
+    /// reports it (the cpu engine's direction-optimizing fixed points).
+    pub direction: Option<crate::backend::cpu::DirectionStats>,
     /// Wall-clock seconds since service start.
     pub wall_secs: f64,
 }
@@ -219,9 +282,54 @@ impl ServiceReport {
     }
 }
 
-/// Cap on retained latency samples (old samples are overwritten
-/// pseudo-randomly past this, keeping percentiles representative).
+/// Cap on retained latency samples in the fallback reservoir.
 const MAX_LATENCY_SAMPLES: usize = 65_536;
+
+/// Uniform sampling reservoir (Vitter's Algorithm R): the first `cap`
+/// samples are kept outright; the `n`-th sample thereafter is accepted
+/// with probability `cap / n` into a uniformly random slot, so at any
+/// point every sample seen so far is retained with equal probability
+/// `cap / n`. (The previous scheme replaced a random slot on *every*
+/// overflow, which biases the reservoir toward recent samples — old
+/// ones survive each round only with probability `1 - 1/cap`, so their
+/// retention decays geometrically.) Deterministic LCG, no `rand` dep.
+#[derive(Debug)]
+struct Reservoir {
+    cap: usize,
+    seen: usize,
+    samples: Vec<f64>,
+    lcg: u64,
+}
+
+impl Reservoir {
+    fn new(cap: usize) -> Reservoir {
+        Reservoir { cap, seen: 0, samples: Vec::new(), lcg: 0x9e3779b97f4a7c15 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        self.lcg = self.lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        self.lcg >> 33
+    }
+
+    fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            // accept with probability cap/seen: j uniform in [0, seen)
+            let j = (self.next_u64() as usize) % self.seen;
+            if j < self.cap {
+                self.samples[j] = x;
+            }
+        }
+    }
+}
+
+impl Default for Reservoir {
+    fn default() -> Reservoir {
+        Reservoir::new(MAX_LATENCY_SAMPLES)
+    }
+}
 
 #[derive(Debug, Default)]
 struct StatsInner {
@@ -237,19 +345,72 @@ struct StatsInner {
     rebalances: u64,
     migrated_vertices: u64,
     shard_loads: Vec<ShardLoad>,
-    latencies: Vec<f64>,
-    lcg: u64,
+    direction: Option<crate::backend::cpu::DirectionStats>,
+    latencies: Reservoir,
 }
 
 impl StatsInner {
     fn push_latency(&mut self, secs: f64) {
-        if self.latencies.len() < MAX_LATENCY_SAMPLES {
-            self.latencies.push(secs);
-        } else {
-            // deterministic LCG replacement
-            self.lcg = self.lcg.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
-            let i = (self.lcg >> 33) as usize % self.latencies.len();
-            self.latencies[i] = secs;
+        self.latencies.push(secs);
+    }
+}
+
+/// Stage indices into [`ServiceTelemetry::stage`] (registration order =
+/// [`StageSecs`] field order).
+const ST_QUEUE_WAIT: usize = 0;
+const ST_FORM: usize = 1;
+const ST_COMPUTE: usize = 2;
+const ST_BARRIER: usize = 3;
+const ST_RELAY: usize = 4;
+const ST_MERGE: usize = 5;
+const ST_PUBLISH: usize = 6;
+const STAGE_NAMES: [&str; 7] =
+    ["queue_wait", "form", "compute", "barrier", "relay", "merge", "publish"];
+
+/// The lock-free half of the stats surface: metric handles cloned out
+/// of one [`MetricsRegistry`] at startup. The engine loop bumps these
+/// with relaxed atomics (never the registry lock), and the
+/// `--stats-every` sampler thread reads them without ever touching the
+/// engine's `Mutex<StatsInner>` — the hot path cannot block on it.
+struct ServiceTelemetry {
+    registry: Arc<MetricsRegistry>,
+    batches: Counter,
+    merges: Counter,
+    epoch: Gauge,
+    stage: Vec<Counter>,
+    latency: Arc<LogHistogram>,
+    /// Serve percentiles from `latency` (accurate p999); when off, the
+    /// Algorithm-R reservoir in `StatsInner` answers instead.
+    histograms: bool,
+}
+
+impl ServiceTelemetry {
+    fn new(histograms: bool) -> ServiceTelemetry {
+        let registry = MetricsRegistry::new();
+        let batches = registry.counter("batches");
+        let merges = registry.counter("merges");
+        let epoch = registry.gauge("epoch");
+        let stage =
+            STAGE_NAMES.iter().map(|n| registry.counter(&format!("stage_{n}_ns"))).collect();
+        let latency = registry.histogram("batch_latency");
+        ServiceTelemetry { registry, batches, merges, epoch, stage, latency, histograms }
+    }
+
+    #[inline]
+    fn add_stage(&self, idx: usize, d: Duration) {
+        self.stage[idx].add(d.as_nanos() as u64);
+    }
+
+    fn stage_secs(&self) -> StageSecs {
+        let s = |i: usize| self.stage[i].get() as f64 / 1e9;
+        StageSecs {
+            queue_wait: s(ST_QUEUE_WAIT),
+            form: s(ST_FORM),
+            compute: s(ST_COMPUTE),
+            barrier: s(ST_BARRIER),
+            relay: s(ST_RELAY),
+            merge: s(ST_MERGE),
+            publish: s(ST_PUBLISH),
         }
     }
 }
@@ -257,6 +418,7 @@ impl StatsInner {
 struct Shared {
     stop: AtomicBool,
     stats: Mutex<StatsInner>,
+    telem: ServiceTelemetry,
     started: Instant,
 }
 
@@ -267,6 +429,7 @@ pub struct GraphService {
     shared: Arc<Shared>,
     cfg: ServiceConfig,
     worker: Mutex<Option<JoinHandle<Option<(DynGraph, AlgoState)>>>>,
+    sampler: Mutex<Option<JoinHandle<()>>>,
 }
 
 /// Run the configured backend's initial static solve (the seed state the
@@ -302,10 +465,19 @@ impl GraphService {
         // batcher's seat) — disable the graph's built-in period.
         g.merge_period = 0;
         let snapshots = Arc::new(SnapshotCell::new());
-        let ingest = Arc::new(Ingest::new(cfg.shards, cfg.shard_capacity, cfg.symmetric));
+        let mut ingest_raw = Ingest::new(cfg.shards, cfg.shard_capacity, cfg.symmetric);
+        if let Some(tracer) = &cfg.telemetry.tracer {
+            ingest_raw.set_tracks(
+                (0..cfg.shards.max(1))
+                    .map(|i| tracer.track(&format!("ingest-{i}"), TRACK_CAP))
+                    .collect(),
+            );
+        }
+        let ingest = Arc::new(ingest_raw);
         let shared = Arc::new(Shared {
             stop: AtomicBool::new(false),
             stats: Mutex::new(StatsInner::default()),
+            telem: ServiceTelemetry::new(cfg.telemetry.histograms),
             started: Instant::now(),
         });
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
@@ -342,7 +514,18 @@ impl GraphService {
 
         match ready_rx.recv() {
             Ok(Ok(())) => {
-                Ok(GraphService { ingest, snapshots, shared, cfg, worker: Mutex::new(Some(worker)) })
+                let sampler = cfg
+                    .telemetry
+                    .stats_every
+                    .map(|every| spawn_sampler(every, Arc::clone(&ingest), Arc::clone(&shared)));
+                Ok(GraphService {
+                    ingest,
+                    snapshots,
+                    shared,
+                    cfg,
+                    worker: Mutex::new(Some(worker)),
+                    sampler: Mutex::new(sampler),
+                })
             }
             Ok(Err(e)) => {
                 let _ = worker.join();
@@ -424,6 +607,9 @@ impl GraphService {
             .join()
             .expect("engine thread panicked")
             .expect("service cannot shut down: it never started");
+        if let Some(s) = self.sampler.lock().unwrap().take() {
+            let _ = s.join();
+        }
         let stats = self.stats();
         ServiceReport { graph, state, stats }
     }
@@ -461,15 +647,66 @@ fn collect_stats(
         out.rebalances = inner.rebalances;
         out.migrated_vertices = inner.migrated_vertices;
         out.shard_loads = inner.shard_loads.clone();
-        inner.latencies.clone()
+        out.direction = inner.direction;
+        inner.latencies.samples.clone()
     };
-    if !lat.is_empty() {
+    out.stages = shared.telem.stage_secs();
+    let hist = &shared.telem.latency;
+    if shared.telem.histograms && hist.count() > 0 {
+        out.batch_latency_p50 = hist.percentile_secs(0.50);
+        out.batch_latency_p99 = hist.percentile_secs(0.99);
+        out.batch_latency_p999 = hist.percentile_secs(0.999);
+        out.batch_latency_mean = hist.mean_secs();
+    } else if !lat.is_empty() {
         lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
         out.batch_latency_p50 = percentile_sorted(&lat, 0.50);
         out.batch_latency_p99 = percentile_sorted(&lat, 0.99);
+        out.batch_latency_p999 = percentile_sorted(&lat, 0.999);
         out.batch_latency_mean = lat.iter().sum::<f64>() / lat.len() as f64;
     }
     out
+}
+
+/// One `--stats-every` line: uptime + ingest counters + the metrics
+/// registry snapshot, as a single JSON object on stdout. Reads only
+/// atomics (and the registry's name table) — never the engine's stats
+/// lock, so sampling cannot stall the batch loop.
+fn emit_stats_line(ingest: &Ingest, shared: &Shared) {
+    let c = ingest.counters();
+    println!(
+        "{{\"t_secs\":{:.3},\"submitted\":{},\"completed\":{},\"coalesced\":{},\
+         \"inflight\":{},\"metrics\":{}}}",
+        shared.started.elapsed().as_secs_f64(),
+        c.submitted,
+        c.completed,
+        c.coalesced,
+        c.submitted.saturating_sub(c.completed),
+        shared.telem.registry.snapshot_json(),
+    );
+}
+
+/// Spawn the periodic stats sampler. It emits one line per `every`
+/// interval and one final line when it observes shutdown (so even runs
+/// shorter than the interval produce a snapshot), then exits.
+fn spawn_sampler(every: Duration, ingest: Arc<Ingest>, shared: Arc<Shared>) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("stats-sampler".into())
+        .spawn(move || {
+            let tick = Duration::from_millis(20).min(every.max(Duration::from_millis(1)));
+            let mut next = Instant::now() + every;
+            loop {
+                if shared.stop.load(Ordering::Acquire) {
+                    emit_stats_line(&ingest, &shared);
+                    return;
+                }
+                if Instant::now() >= next {
+                    emit_stats_line(&ingest, &shared);
+                    next += every;
+                }
+                std::thread::sleep(tick);
+            }
+        })
+        .expect("spawn stats sampler")
 }
 
 /// Copy the algorithm state's property arrays into a snapshot table
@@ -537,9 +774,28 @@ fn engine_loop(
     let mut dels: Vec<(NodeId, NodeId)> = Vec::new();
     let mut adds: Vec<(NodeId, NodeId, Weight)> = Vec::new();
     let mut governor = MergeGovernor::new(cfg.merge_policy);
+    let telem = &shared.telem;
+    // Span tracks for this thread (the batcher "runs" on the engine
+    // thread, but batch formation vs propagation read better as two
+    // Perfetto tracks).
+    let trk_batcher = cfg.telemetry.tracer.as_ref().map(|t| t.track("batcher", TRACK_CAP));
+    let trk_engine = cfg.telemetry.tracer.as_ref().map(|t| t.track("engine", TRACK_CAP));
 
-    while let Some(meta) = batcher.next_batch(&ingest, &shared.stop) {
+    loop {
+        let idle_from = Instant::now();
+        let Some(meta) = batcher.next_batch(&ingest, &shared.stop) else { break };
+        let closed_at = Instant::now();
+        if let Some(t) = &trk_batcher {
+            t.record_between(Stage::Form, idle_from, closed_at);
+        }
+        let queue_wait =
+            meta.oldest.map(|o| closed_at.saturating_duration_since(o)).unwrap_or_default();
+
         batcher.take_into(&mut dels, &mut adds);
+        let formed_at = Instant::now();
+        if let Some(t) = &trk_engine {
+            t.record_between(Stage::Seal, closed_at, formed_at);
+        }
 
         let applied = match &mut state {
             AlgoState::Sssp(st) => engine.sssp_dynamic_batch_parts(&mut g, st, &dels, &adds),
@@ -562,19 +818,47 @@ fn engine_loop(
             ingest.poison();
             panic!("{} engine failed mid-stream: {e}", engine.capabilities().name);
         }
+        let computed_at = Instant::now();
+        if let Some(t) = &trk_engine {
+            t.record_between(Stage::Compute, formed_at, computed_at);
+        }
 
         // one bitmap scan per batch: the governor folds the instantaneous
         // per-read chain depth into its EWMA and decides; the stats record
         // the pre-merge signals, so dashboards see the heat that
         // *triggered* a merge rather than the post-merge 0
         let signal = governor.after_batch(&g);
+        let merge_from = Instant::now();
         if signal.merge {
             g.merge();
+            if let Some(t) = &trk_engine {
+                t.record(Stage::Merge, merge_from);
+            }
         }
+        let merged_at = Instant::now();
 
         publish_state(&snapshots, &g, &state);
+        let published_at = Instant::now();
+        if let Some(t) = &trk_engine {
+            t.record_between(Stage::Publish, merged_at, published_at);
+        }
 
-        let latency = meta.oldest.map(|o| o.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let latency = meta
+            .oldest
+            .map(|o| published_at.saturating_duration_since(o).as_secs_f64())
+            .unwrap_or(0.0);
+        telem.latency.record_secs(latency);
+        telem.batches.inc();
+        if signal.merge {
+            telem.merges.inc();
+        }
+        telem.epoch.set(snapshots.epoch() as f64);
+        telem.add_stage(ST_QUEUE_WAIT, queue_wait);
+        telem.add_stage(ST_FORM, formed_at.saturating_duration_since(closed_at));
+        telem.add_stage(ST_COMPUTE, computed_at.saturating_duration_since(formed_at));
+        telem.add_stage(ST_MERGE, merged_at.saturating_duration_since(merge_from));
+        telem.add_stage(ST_PUBLISH, published_at.saturating_duration_since(merged_at));
+
         let comm = engine.drain_comm_secs();
         {
             let mut s = shared.stats.lock().unwrap();
@@ -591,6 +875,7 @@ fn engine_loop(
             s.batch_coalesced += meta.coalesced as u64;
             s.overflow_fraction = signal.overflow_fraction;
             s.chain_depth_ewma = signal.ewma_depth;
+            s.direction = engine.direction_stats();
             s.push_latency(latency);
         }
         // Completion accounting last: `drain()` returning guarantees the
@@ -658,6 +943,7 @@ pub struct ShardedService {
     shared: Arc<Shared>,
     cfg: ServiceConfig,
     worker: Mutex<Option<JoinHandle<(ShardedGraph, AlgoState, RelayStats)>>>,
+    sampler: Mutex<Option<JoinHandle<()>>>,
 }
 
 impl ShardedService {
@@ -694,13 +980,27 @@ impl ShardedService {
         let graph = ShardedGraph::partition(&g, cfg.engine_shards.max(1));
         drop(g);
         let mut engine = ShardedEngine::new();
+        // One span track per shard worker: phase closures record
+        // scatter/steal/gather/pull spans from the worker thread that
+        // runs them, and (on the persistent fleet) the same worker
+        // records its barrier-wait spans — one thread, one track.
+        let shard_tracks: Vec<Arc<Track>> = match &cfg.telemetry.tracer {
+            Some(tracer) => (0..graph.num_shards())
+                .map(|r| tracer.track(&format!("shard-{r}"), SHARD_TRACK_CAP))
+                .collect(),
+            None => Vec::new(),
+        };
         // The persistent fleet is spawned once here and lives until
         // shutdown; every BSP phase (including the static seed solve
         // below) is a closure delivered to the resident workers instead of
         // a fresh thread::scope.
         if cfg.persistent && graph.num_shards() > 1 {
-            engine.attach_fleet(crate::util::ShardFleet::new(graph.num_shards()));
+            engine.attach_fleet(crate::util::ShardFleet::with_tracks(
+                graph.num_shards(),
+                shard_tracks.clone(),
+            ));
         }
+        engine.set_tracks(shard_tracks);
         engine.set_steal(cfg.steal);
         let state = match cfg.algo {
             Algo::Sssp => AlgoState::Sssp(engine.sssp_static(&graph, cfg.source)),
@@ -718,10 +1018,19 @@ impl ShardedService {
         };
         let snapshots = Arc::new(SnapshotCell::new());
         publish_sharded(&snapshots, &graph, &state);
-        let ingest = Arc::new(Ingest::new(cfg.shards, cfg.shard_capacity, cfg.symmetric));
+        let mut ingest_raw = Ingest::new(cfg.shards, cfg.shard_capacity, cfg.symmetric);
+        if let Some(tracer) = &cfg.telemetry.tracer {
+            ingest_raw.set_tracks(
+                (0..cfg.shards.max(1))
+                    .map(|i| tracer.track(&format!("ingest-{i}"), TRACK_CAP))
+                    .collect(),
+            );
+        }
+        let ingest = Arc::new(ingest_raw);
         let shared = Arc::new(Shared {
             stop: AtomicBool::new(false),
             stats: Mutex::new(StatsInner::default()),
+            telem: ServiceTelemetry::new(cfg.telemetry.histograms),
             started: Instant::now(),
         });
 
@@ -734,8 +1043,19 @@ impl ShardedService {
                 sharded_engine_loop(graph, state, engine, ingest, snapshots, shared, cfg)
             })
         };
+        let sampler = cfg
+            .telemetry
+            .stats_every
+            .map(|every| spawn_sampler(every, Arc::clone(&ingest), Arc::clone(&shared)));
 
-        Ok(ShardedService { ingest, snapshots, shared, cfg, worker: Mutex::new(Some(worker)) })
+        Ok(ShardedService {
+            ingest,
+            snapshots,
+            shared,
+            cfg,
+            worker: Mutex::new(Some(worker)),
+            sampler: Mutex::new(sampler),
+        })
     }
 
     /// Submit one update (blocking under backpressure). Returns `false`
@@ -806,6 +1126,9 @@ impl ShardedService {
         self.ingest.stop();
         let handle = self.worker.lock().unwrap().take().expect("shutdown called once");
         let (graph, state, relay) = handle.join().expect("sharded engine thread panicked");
+        if let Some(s) = self.sampler.lock().unwrap().take() {
+            let _ = s.join();
+        }
         let stats = self.stats();
         ShardedReport { graph, state, stats, relay }
     }
@@ -837,8 +1160,24 @@ fn sharded_engine_loop(
     let mut governors: Vec<MergeGovernor> =
         (0..nshards).map(|_| MergeGovernor::new(cfg.merge_policy)).collect();
     let mut merges_by: Vec<u64> = vec![0; nshards];
+    let telem = &shared.telem;
+    let trk_batcher = cfg.telemetry.tracer.as_ref().map(|t| t.track("batcher", TRACK_CAP));
+    let trk_engine = cfg.telemetry.tracer.as_ref().map(|t| t.track("engine", TRACK_CAP));
+    // The engine accumulates barrier-wait and relay (gather) time across
+    // its whole life; the loop turns them into per-batch stage deltas.
+    let mut barrier_seen = 0.0f64;
+    let mut relay_seen = 0.0f64;
 
-    while let Some(meta) = batcher.next_batch(&ingest, &shared.stop) {
+    loop {
+        let idle_from = Instant::now();
+        let Some(meta) = batcher.next_batch(&ingest, &shared.stop) else { break };
+        let closed_at = Instant::now();
+        if let Some(t) = &trk_batcher {
+            t.record_between(Stage::Form, idle_from, closed_at);
+        }
+        let queue_wait =
+            meta.oldest.map(|o| closed_at.saturating_duration_since(o)).unwrap_or_default();
+
         batcher.take_into(&mut dels, &mut adds);
 
         if cfg.algo == Algo::Tc {
@@ -849,11 +1188,19 @@ fn sharded_engine_loop(
             dels.retain(|&(u, v)| g.has_edge(u, v));
         }
         g.route(&dels, &adds, &mut dels_by, &mut adds_by);
+        let formed_at = Instant::now();
+        if let Some(t) = &trk_engine {
+            t.record_between(Stage::Seal, closed_at, formed_at);
+        }
 
         match &mut state {
             AlgoState::Sssp(st) => engine.sssp_dynamic_batch(&mut g, st, &dels_by, &adds_by),
             AlgoState::Pr(st) => engine.pr_dynamic_batch(&mut g, st, &dels_by, &adds_by),
             AlgoState::Tc(st) => engine.tc_dynamic_batch(&mut g, st, &dels_by, &adds_by),
+        }
+        let computed_at = Instant::now();
+        if let Some(t) = &trk_engine {
+            t.record_between(Stage::Compute, formed_at, computed_at);
         }
 
         // Per-shard merge governance: each governor watches its own
@@ -873,8 +1220,15 @@ fn sharded_engine_loop(
                 any_merge = true;
             }
         }
+        let merge_from = Instant::now();
         let merged =
             if any_merge { g.merge_shards_with(engine.fleet(), &merge_flags) } else { 0 };
+        let merged_at = Instant::now();
+        if any_merge {
+            if let Some(t) = &trk_engine {
+                t.record_between(Stage::Merge, merge_from, merged_at);
+            }
+        }
 
         // Churn-driven rebalancing, still inside the batch boundary: if
         // skew crossed the threshold, recompute the edge-balanced
@@ -883,14 +1237,42 @@ fn sharded_engine_loop(
         let mut moved_vertices = 0usize;
         if let Some(threshold) = cfg.rebalance {
             if g.imbalance() >= threshold {
+                let rebalance_from = Instant::now();
                 let (mv, _me) = g.rebalance();
                 moved_vertices = mv;
+                if let Some(t) = &trk_engine {
+                    t.record(Stage::Rebalance, rebalance_from);
+                }
             }
         }
 
+        let publish_from = Instant::now();
         publish_sharded(&snapshots, &g, &state);
+        let published_at = Instant::now();
+        if let Some(t) = &trk_engine {
+            t.record_between(Stage::Publish, publish_from, published_at);
+        }
 
-        let latency = meta.oldest.map(|o| o.elapsed().as_secs_f64()).unwrap_or(0.0);
+        let latency = meta
+            .oldest
+            .map(|o| published_at.saturating_duration_since(o).as_secs_f64())
+            .unwrap_or(0.0);
+        telem.latency.record_secs(latency);
+        telem.batches.inc();
+        telem.merges.add(merged as u64);
+        telem.epoch.set(snapshots.epoch() as f64);
+        telem.add_stage(ST_QUEUE_WAIT, queue_wait);
+        telem.add_stage(ST_FORM, formed_at.saturating_duration_since(closed_at));
+        telem.add_stage(ST_COMPUTE, computed_at.saturating_duration_since(formed_at));
+        telem.add_stage(ST_MERGE, merged_at.saturating_duration_since(merge_from));
+        telem.add_stage(ST_PUBLISH, published_at.saturating_duration_since(publish_from));
+        let barrier_total = engine.barrier_wait_secs();
+        let relay_total = engine.relay_secs();
+        telem.stage[ST_BARRIER]
+            .add(((barrier_total - barrier_seen).max(0.0) * 1e9) as u64);
+        telem.stage[ST_RELAY].add(((relay_total - relay_seen).max(0.0) * 1e9) as u64);
+        barrier_seen = barrier_total;
+        relay_seen = relay_total;
         {
             let mut s = shared.stats.lock().unwrap();
             s.batches += 1;
@@ -1196,5 +1578,79 @@ mod tests {
         let report = svc.shutdown();
         assert!(report.stats.batches > 0);
         assert!(report.stats.batch_latency_p99 >= report.stats.batch_latency_p50);
+    }
+
+    /// Algorithm R keeps every sample seen so far with equal probability
+    /// `cap / seen`. With cap 100 over 10k samples, the retained share
+    /// from the first half of the stream must sit near 50 — the old
+    /// always-replace scheme decays old samples geometrically and leaves
+    /// almost none there.
+    #[test]
+    fn reservoir_algorithm_r_is_unbiased() {
+        let mut r = Reservoir::new(100);
+        for i in 0..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.samples.len(), 100);
+        assert_eq!(r.seen, 10_000);
+        let first_half = r.samples.iter().filter(|&&x| x < 5_000.0).count();
+        assert!(
+            (25..=75).contains(&first_half),
+            "expected ~50 of 100 retained samples from the first half of the \
+             stream, got {first_half} (recency bias?)"
+        );
+        // and from the first tenth: expect ~10
+        let first_tenth = r.samples.iter().filter(|&&x| x < 1_000.0).count();
+        assert!((1..=30).contains(&first_tenth), "first tenth: {first_tenth}");
+    }
+
+    #[test]
+    fn reservoir_keeps_everything_under_cap() {
+        let mut r = Reservoir::new(8);
+        for i in 0..5 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.seen, 5);
+        assert_eq!(r.samples, vec![0.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+
+    /// End-to-end telemetry: a traced sharded run surfaces the stage
+    /// decomposition, histogram-backed p999, per-shard span tracks, and
+    /// a Perfetto-parsable export.
+    #[test]
+    fn telemetry_surfaces_stage_decomposition_and_spans() {
+        let g0 = generators::uniform_random(200, 1000, 9, 91);
+        let stream = UpdateStream::generate_percent(&g0, 10.0, 64, 9, 93);
+        let tracer = crate::telemetry::Tracer::new();
+        let mut c = sharded_cfg(Algo::Sssp);
+        c.engine_shards = 2;
+        c.telemetry.tracer = Some(Arc::clone(&tracer));
+        let svc = ShardedService::start(g0, c);
+        for u in &stream.updates {
+            assert!(svc.submit(*u));
+        }
+        svc.drain();
+        let report = svc.shutdown();
+        let st = &report.stats;
+        assert!(st.batches > 0);
+        assert!(st.stages.compute > 0.0, "compute stage must accumulate");
+        assert!(st.stages.publish > 0.0, "publish stage must accumulate");
+        assert!(st.batch_latency_p999 >= st.batch_latency_p99);
+        assert!(st.batch_latency_p99 >= st.batch_latency_p50);
+        assert!(st.batch_latency_p50 > 0.0);
+        let per_batch = st.stages.per_batch_ms(st.batches);
+        assert!(per_batch.compute > 0.0);
+
+        let tracks = tracer.tracks();
+        assert!(tracks.iter().any(|t| t.name() == "engine"));
+        assert!(tracks.iter().any(|t| t.name() == "batcher"));
+        assert!(tracks.iter().any(|t| t.name() == "shard-0"));
+        assert!(tracks.iter().any(|t| t.name() == "shard-1"));
+        assert!(tracks.iter().any(|t| t.name().starts_with("ingest-")));
+        let spans: usize = tracks.iter().map(|t| t.snapshot().events.len()).sum();
+        assert!(spans > 0, "a traced run must record spans");
+        let json = crate::telemetry::chrome_trace_json(&tracer);
+        crate::telemetry::validate_json(&json).expect("trace JSON parses");
+        assert!(json.contains("\"ph\":\"X\""));
     }
 }

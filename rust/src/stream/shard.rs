@@ -58,9 +58,12 @@
 use crate::algorithms::{pagerank, sssp, PrState, SsspState, TcState, INF};
 use crate::graph::partition::PartitionMap;
 use crate::graph::{DynGraph, NodeId, Weight};
+use crate::telemetry::{Stage, Track};
 use crate::util::{ShardFleet, SyncSlice};
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Frontier-chunk granularity of the scatter phase — the unit of in-phase
 /// work stealing. Small enough that a hub shard's frontier splits into
@@ -471,6 +474,12 @@ pub struct ShardedEngine {
     /// another worker / chunks worker `r` stole from others.
     steals_donated: Vec<u64>,
     steals_received: Vec<u64>,
+    /// Per-shard span tracks (`tracks[r]` belongs to shard `r`); empty
+    /// disables span recording. During any phase, worker `r` is the only
+    /// writer of `tracks[r]` (single-writer contract).
+    tracks: Vec<Arc<Track>>,
+    /// Cumulative wall time of gather (relay-apply) phases, in seconds.
+    relay_secs: f64,
 }
 
 impl ShardedEngine {
@@ -496,6 +505,29 @@ impl ShardedEngine {
 
     pub fn steal_enabled(&self) -> bool {
         self.steal
+    }
+
+    /// Attach per-shard span tracks (`tracks[r]` belongs to shard `r`).
+    /// Phase closures record scatter/steal/gather/pull spans from worker
+    /// `r` into its track; hand the same vec to
+    /// [`ShardFleet::with_tracks`] and the fleet's barrier-wait spans
+    /// land on the same timeline (same thread, so the single-writer
+    /// contract holds).
+    pub fn set_tracks(&mut self, tracks: Vec<Arc<Track>>) {
+        self.tracks = tracks;
+    }
+
+    /// Cumulative wall-clock seconds spent in gather (relay-apply)
+    /// phases — the "relay" slice of the service's batch decomposition.
+    pub fn relay_secs(&self) -> f64 {
+        self.relay_secs
+    }
+
+    /// Cumulative worker idle at the fleet phase barrier, in seconds
+    /// (0 under the spawn-per-phase fallback, which has no reusable
+    /// barrier to measure).
+    pub fn barrier_wait_secs(&self) -> f64 {
+        self.fleet.as_ref().map(|f| f.wait_nanos() as f64 / 1e9).unwrap_or(0.0)
     }
 
     /// Per-shard steal counters as `(donated, received)` slices — the
@@ -599,6 +631,7 @@ impl ShardedEngine {
             let next_dist = &mut self.scratch.next_dist;
             next_dist.resize(n, 0);
             let fleet = self.fleet.as_ref();
+            let tracks = &self.tracks;
             loop {
                 let mut changed_by = vec![false; nshards];
                 {
@@ -607,6 +640,7 @@ impl ShardedEngine {
                     let nd = SyncSlice::new(&mut next_dist[..n]);
                     let cb = SyncSlice::new(&mut changed_by);
                     exec_shards(fleet, nshards, &|r| {
+                        let phase_start = Instant::now();
                         // SAFETY: owner-exclusive block / per-shard slot.
                         let block = unsafe { owned_block(&nd, pm, r) };
                         let lo = pm.owned_range(r).start;
@@ -625,6 +659,9 @@ impl ShardedEngine {
                             }
                         }
                         unsafe { cb.set(r, ch) };
+                        if let Some(t) = tracks.get(r) {
+                            t.record(Stage::Pull, phase_start);
+                        }
                     });
                 }
                 if !changed_by.iter().any(|&c| c) {
@@ -666,6 +703,7 @@ impl ShardedEngine {
             self.steals_received.resize(nshards, 0);
         }
         let fleet = self.fleet.as_ref();
+        let tracks = &self.tracks;
         let mut frontiers: Vec<Vec<NodeId>> = (0..nshards)
             .map(|r| pm.owned_range(r).filter(|&v| seed[v]).map(|v| v as NodeId).collect())
             .collect();
@@ -693,6 +731,8 @@ impl ShardedEngine {
                     |s: usize| frontiers_ro[s].len().div_ceil(STEAL_CHUNK);
                 let ob = SyncSlice::new(&mut outboxes);
                 exec_shards(fleet, nshards, &|r| {
+                    let phase_start = Instant::now();
+                    let trk = tracks.get(r);
                     // SAFETY: each worker writes only its own outbox row.
                     let my = &mut unsafe { ob.slice_mut(r, 1) }[0];
                     let (mut loc, mut cro) = (0u64, 0u64);
@@ -751,7 +791,13 @@ impl ShardedEngine {
                             if c >= nchunks(s) {
                                 continue;
                             }
-                            process(s, c, &mut *my);
+                            if let Some(t) = trk {
+                                let steal_start = Instant::now();
+                                process(s, c, &mut *my);
+                                t.record(Stage::Steal, steal_start);
+                            } else {
+                                process(s, c, &mut *my);
+                            }
                             stolen.fetch_add(1, Ordering::Relaxed);
                             donated[s].fetch_add(1, Ordering::Relaxed);
                             received[r].fetch_add(1, Ordering::Relaxed);
@@ -759,6 +805,9 @@ impl ShardedEngine {
                     }
                     local_msgs.fetch_add(loc, Ordering::Relaxed);
                     cross_msgs.fetch_add(cro, Ordering::Relaxed);
+                    if let Some(t) = trk {
+                        t.record(Stage::Scatter, phase_start);
+                    }
                 });
             }
             self.stats.local_msgs += local_msgs.load(Ordering::Relaxed);
@@ -772,11 +821,13 @@ impl ShardedEngine {
             // addressed to it (thief rows included — stolen buckets are
             // still applied by their owner).
             let mut next_frontiers: Vec<Vec<NodeId>> = vec![Vec::new(); nshards];
+            let gather_start = Instant::now();
             {
                 let ds = SyncSlice::new(&mut *dist);
                 let nf = SyncSlice::new(&mut next_frontiers);
                 let ob_ro: &[Vec<Vec<(NodeId, i64)>>] = &outboxes;
                 exec_shards(fleet, nshards, &|r| {
+                    let phase_start = Instant::now();
                     // SAFETY: owner-exclusive block / per-shard slot.
                     let block = unsafe { owned_block(&ds, pm, r) };
                     let lo = pm.owned_range(r).start;
@@ -793,8 +844,12 @@ impl ShardedEngine {
                     lowered.sort_unstable();
                     lowered.dedup();
                     unsafe { nf.set(r, lowered) };
+                    if let Some(t) = tracks.get(r) {
+                        t.record(Stage::Gather, phase_start);
+                    }
                 });
             }
+            self.relay_secs += gather_start.elapsed().as_secs_f64();
             frontiers = next_frontiers;
         }
     }
@@ -807,10 +862,12 @@ impl ShardedEngine {
         let pm = g.partition_map();
         let nshards = g.num_shards();
         let fleet = self.fleet.as_ref();
+        let tracks = &self.tracks;
         let source = st.source;
         let dist_ro: &[i64] = &st.dist;
         let ps = SyncSlice::new(&mut st.parent);
         exec_shards(fleet, nshards, &|r| {
+            let phase_start = Instant::now();
             // SAFETY: owner-exclusive block.
             let block = unsafe { owned_block(&ps, pm, r) };
             let lo = pm.owned_range(r).start;
@@ -829,6 +886,9 @@ impl ShardedEngine {
                     }
                 }
                 *slot = best;
+            }
+            if let Some(t) = tracks.get(r) {
+                t.record(Stage::Pull, phase_start);
             }
         });
     }
@@ -849,6 +909,7 @@ impl ShardedEngine {
         let pm = g.partition_map();
         let nshards = g.num_shards();
         let fleet = self.fleet.as_ref();
+        let tracks = &self.tracks;
         let mut iters = 0;
         loop {
             let mut diffs = vec![0.0f64; nshards];
@@ -858,6 +919,7 @@ impl ShardedEngine {
                 let nx = SyncSlice::new(&mut next);
                 let df = SyncSlice::new(&mut diffs);
                 exec_shards(fleet, nshards, &|r| {
+                    let phase_start = Instant::now();
                     // SAFETY: owner-exclusive block / per-shard slot.
                     let block = unsafe { owned_block(&nx, pm, r) };
                     let lo = pm.owned_range(r).start;
@@ -876,6 +938,9 @@ impl ShardedEngine {
                         *slot = val;
                     }
                     unsafe { df.set(r, dacc) };
+                    if let Some(t) = tracks.get(r) {
+                        t.record(Stage::Pull, phase_start);
+                    }
                 });
             }
             let diff: f64 = diffs.iter().sum();
@@ -940,6 +1005,7 @@ impl ShardedEngine {
         next.resize(n, 0.0);
         let nshards = g.num_shards();
         let fleet = self.fleet.as_ref();
+        let tracks = &self.tracks;
         let mut iters = 0;
         loop {
             let mut diffs = vec![0.0f64; nshards];
@@ -949,6 +1015,7 @@ impl ShardedEngine {
                 let nx = SyncSlice::new(&mut next[..n]);
                 let df = SyncSlice::new(&mut diffs);
                 exec_shards(fleet, nshards, &|r| {
+                    let phase_start = Instant::now();
                     // SAFETY: owner-exclusive block / per-shard slot.
                     let block = unsafe { owned_block(&nx, pm, r) };
                     let lo = pm.owned_range(r).start;
@@ -966,6 +1033,9 @@ impl ShardedEngine {
                         block[v as usize - lo] = val;
                     }
                     unsafe { df.set(r, dacc) };
+                    if let Some(t) = tracks.get(r) {
+                        t.record(Stage::Pull, phase_start);
+                    }
                 });
             }
             let diff: f64 = diffs.iter().sum();
@@ -1055,11 +1125,13 @@ impl ShardedEngine {
             |a: NodeId, b: NodeId| modified.contains(&(a, b)) || modified.contains(&(b, a));
         let nshards = arcs_by.len();
         let fleet = self.fleet.as_ref();
+        let tracks = &self.tracks;
         let mut partials = vec![(0i64, 0i64, 0i64); nshards];
         {
             let ps = SyncSlice::new(&mut partials);
             let is_mod = &is_mod;
             exec_shards(fleet, nshards, &|r| {
+                let phase_start = Instant::now();
                 let (mut c1, mut c2, mut c3) = (0i64, 0i64, 0i64);
                 for &(v1, v2) in &arcs_by[r] {
                     if v1 == v2 {
@@ -1088,6 +1160,9 @@ impl ShardedEngine {
                 }
                 // SAFETY: per-shard slot.
                 unsafe { ps.set(r, (c1, c2, c3)) };
+                if let Some(t) = tracks.get(r) {
+                    t.record(Stage::Pull, phase_start);
+                }
             });
         }
         let (c1, c2, c3) = partials
@@ -1324,6 +1399,48 @@ mod tests {
             ea.pr_static(&sg_a, &mut pa);
             eb.pr_static(&sg_b, &mut pb);
             assert_eq!(pb.rank, pa.rank, "pr bitwise, shards={shards}");
+        }
+    }
+
+    #[test]
+    fn tracked_engine_is_bitwise_identical_and_records_phase_spans() {
+        let g0 = generators::uniform_random(200, 1000, 9, 11);
+        let stream = UpdateStream::generate_percent(&g0, 12.0, 32, 9, 13);
+        let shards = 2usize;
+        // untracked reference
+        let mut sg_a = ShardedGraph::partition(&g0, shards);
+        let mut ea = ShardedEngine::new();
+        let mut sa = ea.sssp_static(&sg_a, 0);
+        // tracked fleet engine: phase spans + barrier spans on one timeline
+        let tracer = crate::telemetry::Tracer::new();
+        let tracks: Vec<_> =
+            (0..shards).map(|r| tracer.track(&format!("shard-{r}"), 4096)).collect();
+        let mut sg_b = ShardedGraph::partition(&g0, shards);
+        let mut eb = ShardedEngine::new();
+        eb.attach_fleet(crate::util::ShardFleet::with_tracks(shards, tracks.clone()));
+        eb.set_tracks(tracks);
+        eb.set_steal(true);
+        let mut sb = eb.sssp_static(&sg_b, 0);
+        for (dels_by, adds_by) in route_stream(&sg_a, &stream) {
+            ea.sssp_dynamic_batch(&mut sg_a, &mut sa, &dels_by, &adds_by);
+            eb.sssp_dynamic_batch(&mut sg_b, &mut sb, &dels_by, &adds_by);
+        }
+        assert_eq!(sb.dist, sa.dist, "tracing must not perturb the fixed point");
+        assert_eq!(sb.parent, sa.parent, "tracing must not perturb parents");
+        assert!(eb.relay_secs() > 0.0, "gather wall time accumulates");
+        assert!(eb.barrier_wait_secs() > 0.0, "fleet barrier idle accumulates");
+        drop(eb); // joins the fleet: snapshots are safe
+        for t in tracer.tracks() {
+            let snap = t.snapshot();
+            assert!(snap.total > 0, "{} recorded no spans", t.name());
+            assert!(
+                snap.events.iter().any(|e| matches!(
+                    e.stage,
+                    Stage::Scatter | Stage::Gather | Stage::Pull | Stage::Barrier
+                )),
+                "{} has no phase spans",
+                t.name()
+            );
         }
     }
 

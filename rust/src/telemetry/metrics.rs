@@ -1,0 +1,187 @@
+//! Named metrics registry: counters, gauges, and latency histograms.
+//!
+//! The registry is the *naming* layer — the handles it returns are
+//! plain `Arc`'d atomics, cloned out once at startup so the hot path
+//! never touches the registry lock. `snapshot_json()` renders every
+//! registered metric as one JSON object in registration order, which is
+//! what the `--stats-every` sampler emits and what a future schedule
+//! autotuner would poll.
+
+use super::hist::LogHistogram;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic event counter.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value-wins gauge (an `f64` stored as bits).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Arc<LogHistogram>),
+}
+
+/// Registration-ordered name → metric table.
+pub struct MetricsRegistry {
+    inner: Mutex<Vec<(String, Metric)>>,
+}
+
+impl MetricsRegistry {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Arc<MetricsRegistry> {
+        Arc::new(MetricsRegistry { inner: Mutex::new(Vec::new()) })
+    }
+
+    /// Get-or-create; panics if `name` is already registered as a
+    /// different metric kind (a wiring bug, not a runtime condition).
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, m)) = inner.iter().find(|(n, _)| n == name) {
+            match m {
+                Metric::Counter(c) => return c.clone(),
+                _ => panic!("metric {name:?} already registered with a different kind"),
+            }
+        }
+        let c = Counter(Arc::new(AtomicU64::new(0)));
+        inner.push((name.to_string(), Metric::Counter(c.clone())));
+        c
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, m)) = inner.iter().find(|(n, _)| n == name) {
+            match m {
+                Metric::Gauge(g) => return g.clone(),
+                _ => panic!("metric {name:?} already registered with a different kind"),
+            }
+        }
+        let g = Gauge(Arc::new(AtomicU64::new(0f64.to_bits())));
+        inner.push((name.to_string(), Metric::Gauge(g.clone())));
+        g
+    }
+
+    pub fn histogram(&self, name: &str) -> Arc<LogHistogram> {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some((_, m)) = inner.iter().find(|(n, _)| n == name) {
+            match m {
+                Metric::Histogram(h) => return Arc::clone(h),
+                _ => panic!("metric {name:?} already registered with a different kind"),
+            }
+        }
+        let h = Arc::new(LogHistogram::new());
+        inner.push((name.to_string(), Metric::Histogram(Arc::clone(&h))));
+        h
+    }
+
+    /// One JSON object with every metric, registration order preserved.
+    /// Histograms render as nested objects with millisecond quantiles.
+    pub fn snapshot_json(&self) -> String {
+        let inner = self.inner.lock().unwrap();
+        let mut out = String::from("{");
+        for (i, (name, m)) in inner.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            match m {
+                Metric::Counter(c) => {
+                    let _ = write!(out, "\"{name}\":{}", c.get());
+                }
+                Metric::Gauge(g) => {
+                    let _ = write!(out, "\"{name}\":{:.6}", g.get());
+                }
+                Metric::Histogram(h) => {
+                    let _ = write!(
+                        out,
+                        "\"{name}\":{{\"count\":{},\"mean_ms\":{:.4},\"p50_ms\":{:.4},\
+                         \"p99_ms\":{:.4},\"p999_ms\":{:.4},\"max_ms\":{:.4}}}",
+                        h.count(),
+                        h.mean_secs() * 1e3,
+                        h.percentile_secs(0.50) * 1e3,
+                        h.percentile_secs(0.99) * 1e3,
+                        h.percentile_secs(0.999) * 1e3,
+                        h.max_secs() * 1e3,
+                    );
+                }
+            }
+        }
+        out.push('}');
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn get_or_create_returns_the_same_metric() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("batches");
+        let b = reg.counter("batches");
+        a.add(3);
+        b.inc();
+        assert_eq!(a.get(), 4);
+        let g = reg.gauge("epoch");
+        g.set(7.0);
+        assert_eq!(reg.gauge("epoch").get(), 7.0);
+        let h = reg.histogram("lat");
+        h.record(1000);
+        assert_eq!(reg.histogram("lat").count(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let reg = MetricsRegistry::new();
+        reg.counter("x");
+        reg.gauge("x");
+    }
+
+    #[test]
+    fn snapshot_json_is_valid_and_ordered() {
+        let reg = MetricsRegistry::new();
+        reg.counter("batches").add(12);
+        reg.gauge("epoch").set(3.5);
+        reg.histogram("batch_latency").record_secs(0.002);
+        let json = reg.snapshot_json();
+        super::super::trace::validate_json(&json).expect("valid json");
+        let b = json.find("\"batches\"").unwrap();
+        let e = json.find("\"epoch\"").unwrap();
+        let l = json.find("\"batch_latency\"").unwrap();
+        assert!(b < e && e < l, "registration order preserved: {json}");
+        assert!(json.contains("\"batches\":12"));
+        assert!(json.contains("\"count\":1"));
+    }
+}

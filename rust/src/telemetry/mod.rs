@@ -1,0 +1,66 @@
+//! Pipeline telemetry: span tracing, fixed-memory histograms, metrics.
+//!
+//! The streaming runtime spans ingest → batcher → engine (single or
+//! sharded BSP fleet) → epoch publish; this module is its unified,
+//! zero-dependency measurement substrate:
+//!
+//! * [`span`] — lock-free per-thread span recording into bounded ring
+//!   buffers ([`Tracer`] / [`Track`]), timestamped on one monotonic
+//!   anchor so every pipeline thread lands on a comparable timeline;
+//! * [`trace`] — Chrome-trace-event / Perfetto JSON export of those
+//!   tracks (`serve --trace-out <path>`), plus the dependency-free
+//!   [`validate_json`] checker the tests and CI lean on;
+//! * [`hist`] — [`LogHistogram`], a fixed-memory log2-bucketed
+//!   concurrent histogram (±1.6% midpoint error, ~15 KiB) that replaces
+//!   the sampled-`Vec` percentile path and makes p999 honest;
+//! * [`metrics`] — a registration-ordered named registry of counters,
+//!   gauges, and histograms; handles are cloned out at startup so the
+//!   hot path never takes the registry lock, and `snapshot_json()`
+//!   backs the `serve --stats-every <secs>` sampler line.
+//!
+//! Instrumentation is wall-clock-only — `Instant` reads and relaxed
+//! atomic bumps — so enabling it cannot perturb any fixed point: the
+//! equivalence matrix in `tests/stream_equivalence.rs` re-runs a
+//! sharded leg with tracing on and asserts bitwise-identical results.
+
+pub mod hist;
+pub mod metrics;
+pub mod span;
+pub mod trace;
+
+pub use hist::LogHistogram;
+pub use metrics::{Counter, Gauge, MetricsRegistry};
+pub use span::{SpanEvent, Stage, TrackSnapshot, Tracer, Track};
+pub use trace::{chrome_trace_json, validate_json, write_chrome_trace};
+
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Telemetry knobs carried by `stream::ServiceConfig`.
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Span tracing: when set, the service registers tracks for each
+    /// pipeline thread and records stage spans into it. `None` (the
+    /// default) skips every span call site.
+    pub tracer: Option<Arc<Tracer>>,
+    /// Use the fixed-memory [`LogHistogram`] for batch-latency
+    /// percentiles (accurate p999). When off, the service falls back to
+    /// the Algorithm-R sampling reservoir (the bench-harness fallback).
+    pub histograms: bool,
+    /// Emit a one-line JSON stats snapshot every interval from a
+    /// sampler thread that reads only atomics (plus one final line at
+    /// shutdown, so short runs still get a snapshot).
+    pub stats_every: Option<Duration>,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { tracer: None, histograms: true, stats_every: None }
+    }
+}
+
+/// Span-track capacity for the engine/batcher/ingest tracks.
+pub const TRACK_CAP: usize = 1 << 14;
+/// Span-track capacity for per-shard worker tracks (scatter + steal +
+/// gather + pull + barrier spans per round add up faster).
+pub const SHARD_TRACK_CAP: usize = 1 << 15;

@@ -1,0 +1,325 @@
+//! Lock-free per-thread span recording.
+//!
+//! A [`Tracer`] owns a set of [`Track`]s — one per pipeline thread
+//! (ingest lane, batcher, engine, each shard worker). A track is a
+//! bounded ring of [`SpanEvent`]s written by exactly one logical writer
+//! at a time with no locks on the hot path: recording a span is two
+//! `Instant` reads, one slot write, and one `Release` store. When the
+//! ring wraps, the oldest spans are overwritten (the count of dropped
+//! spans is retained so exports can say so).
+//!
+//! Timestamps are monotonic nanoseconds relative to the tracer's anchor
+//! `Instant`, so spans from different threads land on one comparable
+//! timeline without any clock-sync machinery.
+//!
+//! # Writer contract
+//!
+//! `Track::record*` calls MUST be serialized per track: either a single
+//! thread owns the track for its lifetime (the shard-worker and engine
+//! tracks), or successive writers are ordered by an external
+//! happens-before edge — a mutex (the ingest-lane tracks record under
+//! the shard queue lock) or thread join (the spawn-per-phase runtime
+//! joins every phase before the next one writes). `snapshot()` must
+//! only be called after synchronizing with the last writer (service
+//! shutdown joins every pipeline thread before the trace export reads
+//! anything). This is the same single-writer `UnsafeCell` idiom as
+//! `util::threadpool::SyncSlice`.
+
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// What a span measures. `name()` is the label shown in Perfetto.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Producer enqueue into an ingest lane (includes the coalesce scan).
+    Enqueue,
+    /// Batch formation: the batcher pulling/coalescing until close.
+    Form,
+    /// Batch seal: draining the closed batch into update buffers +
+    /// routing by owner shard.
+    Seal,
+    /// Whole-batch engine propagation (all BSP rounds).
+    Compute,
+    /// Per-shard relax scatter over the owned frontier (push rounds).
+    Scatter,
+    /// One stolen frontier chunk processed on the thief's thread.
+    Steal,
+    /// Per-shard gather: owner-applying relayed relax messages.
+    Gather,
+    /// Owner-writes dense sweep (pull phase, parent repair, PR sweep).
+    Pull,
+    /// Worker idle at the phase barrier.
+    Barrier,
+    /// Diff-CSR merge compaction.
+    Merge,
+    /// Shard re-partitioning + diff-CSR row migration.
+    Rebalance,
+    /// Epoch snapshot publish.
+    Publish,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Enqueue => "enqueue",
+            Stage::Form => "form",
+            Stage::Seal => "seal",
+            Stage::Compute => "compute",
+            Stage::Scatter => "scatter",
+            Stage::Steal => "steal",
+            Stage::Gather => "gather",
+            Stage::Pull => "pull",
+            Stage::Barrier => "barrier",
+            Stage::Merge => "merge",
+            Stage::Rebalance => "rebalance",
+            Stage::Publish => "publish",
+        }
+    }
+}
+
+/// One recorded span: a stage plus `[start, start + dur)` in
+/// nanoseconds relative to the tracer anchor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub stage: Stage,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+const ZERO_SPAN: SpanEvent = SpanEvent { stage: Stage::Enqueue, start_ns: 0, dur_ns: 0 };
+
+/// The result of reading a track after its writer quiesced: the
+/// retained spans oldest-first (recording order == chronological order,
+/// because the single writer records spans as they end).
+#[derive(Debug, Clone)]
+pub struct TrackSnapshot {
+    pub events: Vec<SpanEvent>,
+    /// Spans ever recorded, including overwritten ones.
+    pub total: usize,
+    /// Spans lost to ring wraparound (`total - events.len()`).
+    pub dropped: usize,
+}
+
+/// A bounded single-writer span ring bound to one pipeline thread.
+pub struct Track {
+    name: String,
+    /// Trace "thread id" (1-based registration index under pid 1).
+    tid: u64,
+    anchor: Instant,
+    cap: usize,
+    ring: UnsafeCell<Box<[SpanEvent]>>,
+    /// Total spans ever recorded; slot `total % cap` is written *before*
+    /// the `Release` store, so a reader's `Acquire` load sees complete
+    /// slots for everything it counts.
+    total: AtomicUsize,
+}
+
+// SAFETY: the ring is written through `&self`, but the writer contract
+// (module docs) serializes all `record*` calls per track and requires
+// `snapshot()` to synchronize with the last writer, so there are never
+// two unsynchronized accesses to the same slot.
+unsafe impl Sync for Track {}
+unsafe impl Send for Track {}
+
+impl Track {
+    fn new(name: &str, tid: u64, anchor: Instant, cap: usize) -> Self {
+        let cap = cap.max(1);
+        Track {
+            name: name.to_string(),
+            tid,
+            anchor,
+            cap,
+            ring: UnsafeCell::new(vec![ZERO_SPAN; cap].into_boxed_slice()),
+            total: AtomicUsize::new(0),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn tid(&self) -> u64 {
+        self.tid
+    }
+
+    /// Record a span that started at `start` and ends now.
+    #[inline]
+    pub fn record(&self, stage: Stage, start: Instant) {
+        self.record_between(stage, start, Instant::now());
+    }
+
+    /// Record a span with an explicit end (both clamped to the anchor).
+    #[inline]
+    pub fn record_between(&self, stage: Stage, start: Instant, end: Instant) {
+        let start_ns = start.saturating_duration_since(self.anchor).as_nanos() as u64;
+        let dur_ns = end.saturating_duration_since(start).as_nanos() as u64;
+        self.record_raw(stage, start_ns, dur_ns);
+    }
+
+    /// Record a span from pre-computed anchor-relative nanoseconds.
+    #[inline]
+    pub fn record_raw(&self, stage: Stage, start_ns: u64, dur_ns: u64) {
+        let total = self.total.load(Ordering::Relaxed);
+        let idx = total % self.cap;
+        // SAFETY: `record*` calls are serialized per track (writer
+        // contract), so this slot has no concurrent accessor.
+        unsafe {
+            (*self.ring.get())[idx] = SpanEvent { stage, start_ns, dur_ns };
+        }
+        self.total.store(total + 1, Ordering::Release);
+    }
+
+    /// Copy out the retained spans, oldest first. Call only after the
+    /// writer thread has been joined (or otherwise synchronized with).
+    pub fn snapshot(&self) -> TrackSnapshot {
+        let total = self.total.load(Ordering::Acquire);
+        // SAFETY: the caller synchronized with the last writer, so all
+        // `total` recorded slots are complete and no write is in flight.
+        let ring = unsafe { &*self.ring.get() };
+        let mut events = Vec::with_capacity(total.min(self.cap));
+        if total <= self.cap {
+            events.extend_from_slice(&ring[..total]);
+        } else {
+            let head = total % self.cap;
+            events.extend_from_slice(&ring[head..]);
+            events.extend_from_slice(&ring[..head]);
+        }
+        let dropped = total - events.len();
+        TrackSnapshot { events, total, dropped }
+    }
+}
+
+impl std::fmt::Debug for Track {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Track({:?}, tid {}, {} spans)",
+            self.name,
+            self.tid,
+            self.total.load(Ordering::Relaxed)
+        )
+    }
+}
+
+/// The span-track registry shared by every instrumented thread.
+///
+/// Cloning the `Arc<Tracer>` into `ServiceConfig::telemetry` is the
+/// only wiring a caller does; the service registers tracks for each of
+/// its threads, and `telemetry::chrome_trace_json` reads them all back
+/// after shutdown.
+pub struct Tracer {
+    anchor: Instant,
+    tracks: Mutex<Vec<Arc<Track>>>,
+}
+
+impl Tracer {
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Arc<Tracer> {
+        Arc::new(Tracer { anchor: Instant::now(), tracks: Mutex::new(Vec::new()) })
+    }
+
+    /// All spans are timestamped relative to this instant.
+    pub fn anchor(&self) -> Instant {
+        self.anchor
+    }
+
+    /// Register a new track holding at most `cap` spans. The returned
+    /// handle is handed to exactly one pipeline thread (or a
+    /// lock-serialized writer set — see the module docs).
+    pub fn track(&self, name: &str, cap: usize) -> Arc<Track> {
+        let mut tracks = self.tracks.lock().unwrap();
+        let tid = tracks.len() as u64 + 1;
+        let t = Arc::new(Track::new(name, tid, self.anchor, cap));
+        tracks.push(Arc::clone(&t));
+        t
+    }
+
+    /// Snapshot of the registered tracks (the tracks themselves are
+    /// read with `Track::snapshot` after the writers quiesced).
+    pub fn tracks(&self) -> Vec<Arc<Track>> {
+        self.tracks.lock().unwrap().clone()
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.tracks.lock().unwrap().len();
+        write!(f, "Tracer({n} tracks)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraparound_keeps_newest_in_order() {
+        let tracer = Tracer::new();
+        let t = tracer.track("wrap", 8);
+        for i in 0..20u64 {
+            t.record_raw(Stage::Compute, i * 10, i + 1); // dur encodes index + 1
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.total, 20);
+        assert_eq!(snap.dropped, 12);
+        assert_eq!(snap.events.len(), 8);
+        // the retained spans are exactly 12..20, oldest first
+        for (k, ev) in snap.events.iter().enumerate() {
+            let i = (12 + k) as u64;
+            assert_eq!(ev.dur_ns, i + 1);
+            assert_eq!(ev.start_ns, i * 10);
+        }
+        // chronological: start_ns non-decreasing
+        for w in snap.events.windows(2) {
+            assert!(w[0].start_ns <= w[1].start_ns);
+        }
+    }
+
+    #[test]
+    fn short_ring_without_wrap_returns_everything() {
+        let tracer = Tracer::new();
+        let t = tracer.track("short", 64);
+        let start = Instant::now();
+        t.record(Stage::Merge, start);
+        t.record_between(Stage::Publish, start, Instant::now());
+        let snap = t.snapshot();
+        assert_eq!(snap.total, 2);
+        assert_eq!(snap.dropped, 0);
+        assert_eq!(snap.events[0].stage, Stage::Merge);
+        assert_eq!(snap.events[1].stage, Stage::Publish);
+    }
+
+    #[test]
+    fn cross_thread_spans_attribute_to_their_own_track() {
+        let tracer = Tracer::new();
+        let a = tracer.track("worker-a", 256);
+        let b = tracer.track("worker-b", 256);
+        assert_ne!(a.tid(), b.tid());
+        let (ta, tb) = (Arc::clone(&a), Arc::clone(&b));
+        let ha = std::thread::spawn(move || {
+            for i in 0..100 {
+                ta.record_raw(Stage::Scatter, i, 1);
+            }
+        });
+        let hb = std::thread::spawn(move || {
+            for i in 0..50 {
+                tb.record_raw(Stage::Gather, i, 2);
+            }
+        });
+        ha.join().unwrap();
+        hb.join().unwrap(); // joins give snapshot() its happens-before edge
+        let sa = a.snapshot();
+        let sb = b.snapshot();
+        assert_eq!(sa.events.len(), 100);
+        assert_eq!(sb.events.len(), 50);
+        assert!(sa.events.iter().all(|e| e.stage == Stage::Scatter && e.dur_ns == 1));
+        assert!(sb.events.iter().all(|e| e.stage == Stage::Gather && e.dur_ns == 2));
+        for s in [&sa, &sb] {
+            for w in s.events.windows(2) {
+                assert!(w[0].start_ns <= w[1].start_ns);
+            }
+        }
+    }
+}

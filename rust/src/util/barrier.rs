@@ -19,6 +19,7 @@
 //! scoped version: [`SyncSlice`](crate::util::SyncSlice) for owner-range
 //! writes and per-shard result slots.
 
+use crate::telemetry::{Stage, Track};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -154,6 +155,14 @@ pub struct ShardFleet {
 impl ShardFleet {
     /// Spawn `workers` resident threads (named `shard-<r>`).
     pub fn new(workers: usize) -> Self {
+        Self::with_tracks(workers, Vec::new())
+    }
+
+    /// Spawn `workers` resident threads, giving worker `r` the span
+    /// track `tracks[r]` to record its barrier-wait spans into (an empty
+    /// vec disables tracking; the tracks line up with the per-shard
+    /// tracks the sharded engine records its phase spans into).
+    pub fn with_tracks(workers: usize, tracks: Vec<Arc<Track>>) -> Self {
         let workers = workers.max(1);
         // Parties = workers + the coordinator: `run` returns only once
         // every worker has finished the phase.
@@ -165,9 +174,10 @@ impl ShardFleet {
             let (tx, rx) = channel::<FleetMsg>();
             let b = Arc::clone(&barrier);
             let p = Arc::clone(&panicked);
+            let trk = tracks.get(rank).cloned();
             let h = std::thread::Builder::new()
                 .name(format!("shard-{rank}"))
-                .spawn(move || worker_loop(rank, rx, b, p))
+                .spawn(move || worker_loop(rank, rx, b, p, trk))
                 .expect("spawn shard fleet worker");
             senders.push(tx);
             handles.push(h);
@@ -204,6 +214,7 @@ fn worker_loop(
     rx: Receiver<FleetMsg>,
     barrier: Arc<PhaseBarrier>,
     panicked: Arc<AtomicBool>,
+    track: Option<Arc<Track>>,
 ) {
     while let Ok(msg) = rx.recv() {
         match msg {
@@ -214,7 +225,13 @@ fn worker_loop(
                 if catch_unwind(AssertUnwindSafe(|| job(rank))).is_err() {
                     panicked.store(true, Ordering::Release);
                 }
+                let at_barrier = Instant::now();
                 barrier.wait_tracked();
+                if let Some(t) = &track {
+                    // phase closures record into the same track from this
+                    // thread, so the single-writer contract holds
+                    t.record(Stage::Barrier, at_barrier);
+                }
             }
             FleetMsg::Stop => break,
         }
@@ -318,6 +335,22 @@ mod tests {
         });
         // worker 1 finished instantly and waited ~5ms for worker 0
         assert!(fleet.wait_nanos() > 0, "idle worker accumulates barrier wait");
+    }
+
+    #[test]
+    fn fleet_records_barrier_spans_per_worker() {
+        let tracer = crate::telemetry::Tracer::new();
+        let tracks: Vec<_> = (0..2).map(|r| tracer.track(&format!("shard-{r}"), 64)).collect();
+        let fleet = ShardFleet::with_tracks(2, tracks.clone());
+        for _ in 0..3 {
+            fleet.run(&|_r| {});
+        }
+        drop(fleet); // joins workers: safe to snapshot
+        for t in &tracks {
+            let snap = t.snapshot();
+            assert_eq!(snap.events.len(), 3, "one barrier span per phase");
+            assert!(snap.events.iter().all(|e| e.stage == crate::telemetry::Stage::Barrier));
+        }
     }
 
     #[test]

@@ -60,6 +60,27 @@ impl Summary {
         }
         s
     }
+
+    /// Fold another accumulator into this one (parallel Welford / Chan
+    /// et al. combine), so per-worker summaries merge without losing
+    /// variance: `a.merge(&b)` ≡ pushing every sample of `b` into `a`.
+    pub fn merge(&mut self, other: &Summary) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let (na, nb) = (self.n as f64, other.n as f64);
+        let d = other.mean - self.mean;
+        self.m2 += other.m2 + d * d * na * nb / n as f64;
+        self.mean += d * nb / n as f64;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self.n = n;
+    }
 }
 
 /// Percentile of a slice (linear interpolation). `q` in `[0, 1]`.
@@ -104,6 +125,55 @@ mod tests {
         let s = Summary::new();
         assert!(s.mean().is_nan());
         assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    fn merge_matches_from_slice_of_concatenation() {
+        let a = [1.5, -2.0, 7.25, 0.0, 3.0];
+        let b = [100.0, -42.5, 9.0];
+        let mut merged = Summary::from_slice(&a);
+        merged.merge(&Summary::from_slice(&b));
+        let cat: Vec<f64> = a.iter().chain(b.iter()).copied().collect();
+        let whole = Summary::from_slice(&cat);
+        assert_eq!(merged.count(), whole.count());
+        assert!((merged.mean() - whole.mean()).abs() < 1e-12);
+        assert!((merged.stddev() - whole.stddev()).abs() < 1e-10);
+        assert_eq!(merged.min(), whole.min());
+        assert_eq!(merged.max(), whole.max());
+    }
+
+    #[test]
+    fn merge_handles_empty_sides() {
+        let xs = [2.0, 4.0, 8.0];
+        let mut left_empty = Summary::new();
+        left_empty.merge(&Summary::from_slice(&xs));
+        assert_eq!(left_empty.count(), 3);
+        assert!((left_empty.mean() - Summary::from_slice(&xs).mean()).abs() < 1e-12);
+        assert_eq!(left_empty.min(), 2.0);
+
+        let mut right_empty = Summary::from_slice(&xs);
+        right_empty.merge(&Summary::new());
+        assert_eq!(right_empty.count(), 3);
+        assert_eq!(right_empty.max(), 8.0);
+
+        let mut both = Summary::new();
+        both.merge(&Summary::new());
+        assert_eq!(both.count(), 0);
+        assert!(both.mean().is_nan());
+    }
+
+    #[test]
+    fn many_way_merge_keeps_variance() {
+        // fold 8 per-worker chunks and compare against the flat pass
+        let xs: Vec<f64> = (0..1000).map(|i| ((i * 37 % 101) as f64) - 50.0).collect();
+        let mut folded = Summary::new();
+        for chunk in xs.chunks(125) {
+            folded.merge(&Summary::from_slice(chunk));
+        }
+        let whole = Summary::from_slice(&xs);
+        assert_eq!(folded.count(), whole.count());
+        assert!((folded.mean() - whole.mean()).abs() < 1e-10);
+        assert!((folded.stddev() - whole.stddev()).abs() < 1e-9);
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! rebalancing forced on, asserting at least one live migration per
 //! multi-shard leg.
 //!
+//! The telemetry leg re-runs a sharded steal-on configuration with the
+//! span tracer wired in and asserts the end state is bitwise identical
+//! to the untraced run — instrumentation is observation-only.
+//!
 //! The backend half is the **cross-backend equivalence matrix** pinning
 //! `serve --backend {serial,cpu,dist,xla}` through the `DynamicEngine`
 //! trait: dist ≡ cpu *bitwise* for SSSP (distances AND parents — both
@@ -799,6 +803,80 @@ fn sharded_reader_never_observes_mixed_epochs() {
     let Ok(svc) = Arc::try_unwrap(svc) else { panic!("sole owner after readers joined") };
     let report = svc.shutdown();
     assert!(report.stats.batches > 1, "stitch exercised across multiple publishes");
+}
+
+// ------------------------------------------------------------ telemetry
+
+/// Tracing is observation-only (tentpole invariant): the sharded service
+/// re-run with the span tracer wired in (and stealing hot, so the
+/// steal-span call sites execute too) lands *bitwise* on the untraced
+/// run's end-state — distances AND parents — while the tracer actually
+/// captures per-shard BSP phase spans and exports valid Chrome-trace
+/// JSON. Instrumentation is wall-clock-only, so it must never perturb a
+/// fixed point.
+#[test]
+fn sssp_traced_sharded_run_is_bitwise_identical_to_untraced() {
+    use starplat_dyn::telemetry::{chrome_trace_json, validate_json, Tracer};
+
+    let g0 = generators::uniform_random(300, 1500, 9, 241);
+    let batch = 64;
+    let raw = UpdateStream::generate_percent(&g0, 12.0, batch, 9, 243);
+    let stream = UpdateStream::new(trim_to_batches(raw.updates, batch), batch);
+
+    let run = |tracer: Option<Arc<Tracer>>| {
+        let mut cfg = exact_cfg(Algo::Sssp, batch);
+        cfg.engine = EngineOpts::default();
+        cfg.engine_shards = 4;
+        cfg.steal = true;
+        cfg.telemetry.tracer = tracer;
+        let svc = ShardedService::start(g0.clone(), cfg);
+        for u in &stream.updates {
+            assert!(svc.submit(*u));
+        }
+        svc.drain();
+        svc.shutdown()
+    };
+
+    let plain = run(None);
+    let tracer = Tracer::new();
+    let traced = run(Some(Arc::clone(&tracer)));
+
+    assert_eq!(
+        traced.graph.edges_sorted(),
+        plain.graph.edges_sorted(),
+        "tracing changed the end graph"
+    );
+    let (t, p) = (traced.sssp().unwrap(), plain.sssp().unwrap());
+    assert_eq!(t.dist, p.dist, "tracing perturbed the SSSP distances");
+    assert_eq!(t.parent, p.parent, "tracing perturbed the SP-tree parents");
+    assert_eq!(t.dist, sssp::dijkstra_oracle(&plain.graph, 0), "oracle");
+
+    // the tracer observed the whole pipeline: every shard track has
+    // spans, and the full batch lifecycle shows up across the tracks
+    let mut stages = std::collections::HashSet::new();
+    let mut shard_tracks = 0;
+    for trk in tracer.tracks() {
+        let snap = trk.snapshot();
+        if trk.name().starts_with("shard-") {
+            shard_tracks += 1;
+            assert!(!snap.events.is_empty(), "{}: no spans recorded", trk.name());
+        }
+        for ev in &snap.events {
+            stages.insert(ev.stage.name());
+        }
+    }
+    assert_eq!(shard_tracks, 4, "one span track per engine shard");
+    for want in ["enqueue", "form", "seal", "compute", "scatter", "gather", "barrier", "publish"]
+    {
+        assert!(stages.contains(want), "stage {want} never recorded (saw {stages:?})");
+    }
+
+    // ...and the export is loadable: structurally valid JSON with
+    // complete ("X") events and the per-shard thread names
+    let json = chrome_trace_json(&tracer);
+    validate_json(&json).expect("chrome trace export must be valid JSON");
+    assert!(json.contains("\"ph\":\"X\""), "no complete events in trace");
+    assert!(json.contains("shard-0") && json.contains("shard-3"), "shard tracks missing");
 }
 
 // ------------------------------------------------------------ backends
