@@ -13,6 +13,12 @@
 //! seconds, steal counts, rebalances, migrated vertices — so the
 //! spawn-vs-persistent comparison is recorded, not just printed.
 //!
+//! A third **durability sweep** prices the WAL: no WAL vs seal-fsync vs
+//! OS-buffered appends on the single-engine cpu cell, and for each
+//! durable leg a recovery-time row — cold-starting the service on the
+//! surviving WAL dir (checkpoint restore + tail replay + first publish).
+//! These land under a separate `durability` key in the JSON.
+//!
 //! Usage: `cargo bench --bench stream_throughput [-- --smoke]`
 //! Output: human-readable table + `BENCH_stream.json` in the CWD
 //! (tracked as part of the perf trajectory, next to
@@ -26,7 +32,7 @@
 use starplat_dyn::backend::BackendKind;
 use starplat_dyn::coordinator::{run_stream_cell, run_stream_cell_workload, Algo, StreamCell};
 use starplat_dyn::graph::{generators, UpdateStream};
-use starplat_dyn::stream::{MergePolicy, ServiceConfig};
+use starplat_dyn::stream::{GraphService, MergePolicy, ServiceConfig};
 use std::fmt::Write as _;
 use std::time::Duration;
 
@@ -249,9 +255,85 @@ fn main() {
         }
     }
 
+    // ------------------------------------------------ durability sweep
+    // The WAL cost axis on the single-engine cpu cell: no WAL vs
+    // appending at seal time with fsync-per-seal vs OS-buffered appends.
+    // Each durable leg then measures recovery: how long a fresh process
+    // takes to restore the latest checkpoint and replay the WAL tail.
+    let dur_updates = if smoke { 4_000 } else { 40_000 };
+    let dur_workload =
+        UpdateStream::generate_count(&g, dur_updates, batch_capacity, 9, 17).updates;
+    let mut dur_rows = String::new();
+    println!("\nWAL durability cost ({dur_updates} updates, checkpoint every 64 batches)");
+    println!(
+        "{:<13} {:>12} {:>10} {:>10} {:>8} {:>12} {:>12} {:>10}",
+        "wal", "upd/s", "p50 ms", "p99 ms", "batches", "wal dir KiB", "recovery ms", "replayed"
+    );
+    for mode in ["off", "seal-fsync", "os-buffered"] {
+        let dir = std::env::temp_dir()
+            .join(format!("starplat-bench-wal-{mode}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut cfg = ServiceConfig::new(Algo::Sssp);
+        cfg.batch_capacity = batch_capacity;
+        cfg.batch_deadline = Duration::from_millis(5);
+        cfg.shards = 4; // ingest lanes
+        cfg.merge_policy = MergePolicy::default();
+        if mode != "off" {
+            cfg.durability.wal_dir = Some(dir.clone());
+            cfg.durability.fsync = mode.parse().expect("fsync policy");
+            cfg.durability.checkpoint_every = 64;
+        }
+        let (cell, _report) =
+            run_stream_cell_workload(g.clone(), dur_workload.clone(), 4, 1, cfg.clone())
+                .expect("durability sweep cell");
+        assert_eq!(cell.stats.completed, cell.stats.submitted);
+        // recovery-time row: cold-start the service on the surviving
+        // WAL dir (latest checkpoint + tail replay + first publish)
+        let (mut dir_bytes, mut recovery_ms, mut replayed) = (0u64, 0.0f64, 0u64);
+        if mode != "off" {
+            dir_bytes = std::fs::read_dir(&dir)
+                .map(|rd| {
+                    rd.flatten().filter_map(|e| e.metadata().ok()).map(|m| m.len()).sum()
+                })
+                .unwrap_or(0);
+            let t0 = std::time::Instant::now();
+            let svc = GraphService::try_start(g.clone(), cfg).expect("recovery start");
+            recovery_ms = t0.elapsed().as_secs_f64() * 1e3;
+            replayed = svc.stats().recovered_batches;
+            let _ = svc.try_shutdown();
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        println!(
+            "{mode:<13} {:>12.0} {:>10.3} {:>10.3} {:>8} {:>12.1} {:>12.2} {:>10}",
+            cell.updates_per_sec,
+            cell.stats.batch_latency_p50 * 1e3,
+            cell.stats.batch_latency_p99 * 1e3,
+            cell.stats.batches,
+            dir_bytes as f64 / 1024.0,
+            recovery_ms,
+            replayed
+        );
+        if !dur_rows.is_empty() {
+            dur_rows.push_str(",\n");
+        }
+        let _ = write!(
+            dur_rows,
+            "    {{\"wal\": \"{mode}\", \"updates\": {}, \"updates_per_sec\": {:.1}, \
+             \"batch_latency_p50_ms\": {:.4}, \"batch_latency_p99_ms\": {:.4}, \
+             \"batches\": {}, \"wal_dir_bytes\": {dir_bytes}, \
+             \"recovery_ms\": {recovery_ms:.3}, \"recovered_batches\": {replayed}}}",
+            cell.updates,
+            cell.updates_per_sec,
+            cell.stats.batch_latency_p50 * 1e3,
+            cell.stats.batch_latency_p99 * 1e3,
+            cell.stats.batches,
+        );
+    }
+
     let json = format!(
         "{{\n  \"graph\": {{\"nodes\": {}, \"edges\": {}, \"update_percent\": {percent}}},\n  \
-         \"smoke\": {smoke},\n  \"cells\": [\n{rows}\n  ]\n}}\n",
+         \"smoke\": {smoke},\n  \"cells\": [\n{rows}\n  ],\n  \
+         \"durability\": [\n{dur_rows}\n  ]\n}}\n",
         g.num_nodes(),
         g.num_edges()
     );

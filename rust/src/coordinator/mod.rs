@@ -15,7 +15,7 @@ use crate::backend::{make_engine, BackendKind, DynamicEngine};
 use crate::graph::{DynGraph, NodeId, Update, UpdateKind, UpdateStream};
 use crate::stream::{GraphService, RelayStats, ServiceConfig, ServiceStats, ShardedService};
 use crate::util::timer::time_it;
-use crate::util::error::Result;
+use crate::util::error::{anyhow, Result};
 
 // Engine construction moved behind the backend factory; re-exported here
 // because the CLI and older callers imported the knobs from the
@@ -288,6 +288,17 @@ impl AnyService {
         }
     }
 
+    fn submit_deadline(
+        &self,
+        u: Update,
+        deadline: std::time::Duration,
+    ) -> Result<(), crate::stream::SubmitError> {
+        match self {
+            AnyService::Single(s) => s.submit_deadline(u, deadline),
+            AnyService::Sharded(s) => s.submit_deadline(u, deadline),
+        }
+    }
+
     fn with_snapshot<R>(&self, f: impl FnOnce(&crate::stream::PropTable) -> R) -> R {
         match self {
             AnyService::Single(s) => s.with_snapshot(f),
@@ -295,22 +306,46 @@ impl AnyService {
         }
     }
 
-    fn drain(&self) {
-        match self {
-            AnyService::Single(s) => s.drain(),
-            AnyService::Sharded(s) => s.drain(),
+    /// Drain with a stall watchdog: a wedged engine surfaces as a warning
+    /// every 30 s instead of hanging the harness silently (a *dead*
+    /// engine poisons the ingest, which ends the wait immediately —
+    /// see [`GraphService::drain_timeout`]).
+    fn drain_bounded(&self) {
+        let warn_every = std::time::Duration::from_secs(30);
+        loop {
+            let r = match self {
+                AnyService::Single(s) => s.drain_timeout(warn_every),
+                AnyService::Sharded(s) => s.drain_timeout(warn_every),
+            };
+            match r {
+                Ok(()) => return,
+                Err(t) => eprintln!("warning: {t}; still waiting"),
+            }
         }
     }
 
     /// Shut down, collapsing the sharded report into the single-engine
-    /// shape; the relay telemetry rides alongside.
-    fn shutdown(self) -> (crate::stream::ServiceReport, Option<RelayStats>) {
+    /// shape; the relay telemetry rides alongside. A service that
+    /// degraded mid-run (engine dead past recovery) comes back as an
+    /// error instead of a panic — it served reads to the end, but there
+    /// is no final graph/state to report.
+    fn shutdown(self) -> Result<(crate::stream::ServiceReport, Option<RelayStats>)> {
+        let degraded_err = |d: crate::stream::DegradedReport| {
+            anyhow!(
+                "service degraded after {} caught engine crash(es): reads were \
+                 served to the end (epoch {}, {} batches applied), but graph \
+                 and state died with the engine",
+                d.stats.restarts,
+                d.stats.epoch,
+                d.stats.batches
+            )
+        };
         match self {
-            AnyService::Single(s) => (s.shutdown(), None),
+            AnyService::Single(s) => Ok((s.try_shutdown().map_err(degraded_err)?, None)),
             AnyService::Sharded(s) => {
-                let r = s.shutdown();
+                let r = s.try_shutdown().map_err(degraded_err)?;
                 let relay = r.relay;
-                (r.into_service_report(), Some(relay))
+                Ok((r.into_service_report(), Some(relay)))
             }
         }
     }
@@ -391,6 +426,9 @@ pub fn run_stream_cell_workload(
 
     let producers = producers.max(1);
     let shards = cfg.engine_shards.max(1);
+    // `serve --shed-ms`: producers submit with a patience bound and shed
+    // on sustained backpressure instead of blocking indefinitely.
+    let shed_deadline = cfg.submit_deadline;
     let svc = Arc::new(AnyService::start(base, cfg)?);
     let stop_readers = Arc::new(AtomicBool::new(false));
     let reads = Arc::new(AtomicU64::new(0));
@@ -419,12 +457,21 @@ pub fn run_stream_cell_workload(
                 workload.iter().skip(p).step_by(producers).copied().collect();
             s.spawn(move || {
                 for u in slice {
-                    svc.submit(u);
+                    match shed_deadline {
+                        // shed/stop/poison all mean "move on": shedding is
+                        // the contract, the rest ends the producer's work
+                        Some(d) => {
+                            let _ = svc.submit_deadline(u, d);
+                        }
+                        None => {
+                            svc.submit(u);
+                        }
+                    }
                 }
             });
         }
     });
-    svc.drain();
+    svc.drain_bounded();
     let wall = t0.elapsed().as_secs_f64();
 
     stop_readers.store(true, Ordering::Relaxed);
@@ -434,7 +481,7 @@ pub fn run_stream_cell_workload(
     let Ok(svc) = Arc::try_unwrap(svc) else {
         unreachable!("all service handles joined before unwrap")
     };
-    let (report, relay) = svc.shutdown();
+    let (report, relay) = svc.shutdown()?;
     let updates = workload.len() as u64;
     let cell = StreamCell {
         updates,

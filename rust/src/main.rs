@@ -22,9 +22,21 @@
 //!       [--direction push|pull|adaptive[:<a>[,<b>]]]
 //!       [--ranks R]
 //!       [--trace-out <path>] [--stats-every <secs>] [--hist on|off]
+//!       [--wal <dir>] [--wal-fsync seal-fsync|os-buffered]
+//!       [--checkpoint-every N] [--max-restarts N]
+//!       [--shed-ms D] [--failpoints <spec>]
 //!       [--graph …] [--nodes N] [--percent P] [--seed S]
 //!       run the streaming service under a synthetic multi-producer load
-//!       and print throughput + batch-latency statistics. `--backend`
+//!       and print throughput + batch-latency statistics. `--wal` turns
+//!       on durability: sealed batches append to a write-ahead log and
+//!       the state checkpoints every `--checkpoint-every` batches, so a
+//!       crashed (or killed) serve restarted with the same `--wal` dir
+//!       recovers and resumes the epoch line; the supervisor also
+//!       restarts a panicking engine in-process up to `--max-restarts`
+//!       times before degrading to read-only. `--shed-ms` bounds producer
+//!       backpressure patience (overload shedding); `--failpoints` (or
+//!       env `FAILPOINTS`) arms chaos sites, e.g. `seal=panic~20`.
+//!       `--backend`
 //!       selects the propagation engine (every backend serves the full
 //!       ingest → batch → snapshot pipeline); `--shards S` with S > 1
 //!       shards the graph across S engine threads (cpu-backed BSP fleet,
@@ -155,6 +167,9 @@ fn make_graph(args: &Args) -> starplat_dyn::graph::DynGraph {
 }
 
 fn real_main() -> Result<()> {
+    // Chaos sites armed from the environment apply to every subcommand;
+    // `serve --failpoints` below overrides the env spec.
+    starplat_dyn::util::failpoint::configure_from_env()?;
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
         println!("usage: starplat <compile|run|serve|interp|inspect> [options]");
@@ -251,6 +266,24 @@ fn real_main() -> Result<()> {
                 "off" => None,
                 t => Some(t.parse::<f64>().context("--rebalance expects a threshold like 1.5, or off")?),
             };
+            if let Some(dir) = args.flags.get("wal") {
+                cfg.durability.wal_dir = Some(std::path::PathBuf::from(dir));
+            }
+            cfg.durability.fsync = args
+                .get("wal-fsync", "seal-fsync")
+                .parse()
+                .map_err(|e: String| anyhow!(e))?;
+            cfg.durability.checkpoint_every = args.get("checkpoint-every", "64").parse()?;
+            cfg.durability.max_restarts = args.get("max-restarts", "3").parse()?;
+            if let Some(ms) = args.flags.get("shed-ms") {
+                cfg.submit_deadline =
+                    Some(std::time::Duration::from_millis(ms.parse::<u64>().context(
+                        "--shed-ms expects a submit patience bound in milliseconds",
+                    )?));
+            }
+            if let Some(spec) = args.flags.get("failpoints") {
+                starplat_dyn::util::failpoint::configure(spec)?;
+            }
             let trace_out = args.flags.get("trace-out").cloned();
             let tracer = trace_out.as_ref().map(|_| starplat_dyn::telemetry::Tracer::new());
             cfg.telemetry.tracer = tracer.clone();
@@ -297,6 +330,22 @@ fn real_main() -> Result<()> {
                     cfg.merge_policy.describe(),
                     describe_opts(&cfg.engine)
                 );
+            }
+            if let Some(dir) = &cfg.durability.wal_dir {
+                println!(
+                    "durability     : wal {} ({}, checkpoint every {} batches, \
+                     max {} restarts)",
+                    dir.display(),
+                    cfg.durability.fsync.name(),
+                    cfg.durability.checkpoint_every,
+                    cfg.durability.max_restarts
+                );
+            }
+            if starplat_dyn::util::failpoint::armed() {
+                println!("failpoints     : armed");
+            }
+            if let Some(d) = cfg.submit_deadline {
+                println!("shed deadline  : {d:?} producer patience, then shed");
             }
             let (cell, _report) =
                 run_stream_cell(algo, &g, percent, producers, readers, cfg, seed)?;
@@ -364,6 +413,20 @@ fn real_main() -> Result<()> {
                 );
             }
             println!("coalesced      : {}", cell.stats.coalesced);
+            if cell.stats.shed > 0
+                || cell.stats.restarts > 0
+                || cell.stats.recovered_batches > 0
+                || cell.stats.degraded
+            {
+                println!(
+                    "fault tolerance: shed {}, restarts {}, recovered_batches {}, \
+                     degraded {}",
+                    cell.stats.shed,
+                    cell.stats.restarts,
+                    cell.stats.recovered_batches,
+                    cell.stats.degraded
+                );
+            }
             println!("snapshot reads : {} (epoch {})", cell.snapshot_reads, cell.stats.epoch);
             if let (Some(path), Some(tracer)) = (&trace_out, &tracer) {
                 // service shutdown joined every pipeline thread inside

@@ -1,0 +1,414 @@
+//! Periodic checkpoints of the streaming service's sealed state.
+//!
+//! A checkpoint is the durable complement of the WAL (`stream::wal`): it
+//! serializes the engine's graph (live edge set), the evolved algorithm
+//! state, and the batch sequence number it covers, so recovery is
+//! `load_latest()` + replay of the WAL records past `seq` instead of a
+//! full-log replay from genesis. The algorithm state **must** be part of
+//! the checkpoint: dynamic PageRank is path-dependent (restricted sweeps
+//! from the previous ranks), so recomputing a static solve on the
+//! recovered graph would diverge from the uninterrupted run — restoring
+//! the serialized arrays is what makes crash/recover bitwise-equal.
+//!
+//! On-disk layout (`<dir>/checkpoint-<seq>.ckpt`, little-endian):
+//!
+//! ```text
+//! file := "SPCK" 0x01 body u64 fnv1a64(body)
+//! body := u8 algo | u64 seq | u64 graph_epoch | u64 n | u64 m
+//!         | (u32 src, u32 dst, i32 w) * m
+//!         | state                    (per-algo arrays, see below)
+//! ```
+//!
+//! Writes are atomic: the file is assembled as `.tmp`, fsynced, then
+//! renamed over the final name (a crash mid-checkpoint leaves either the
+//! previous checkpoint or a stray `.tmp`, never a torn `.ckpt`).
+//! [`load_latest`] tries newest-first and skips damaged files, so a
+//! corrupt checkpoint degrades recovery to the previous one plus a longer
+//! WAL replay — never to a failure.
+
+use super::service::AlgoState;
+use crate::algorithms::{PrState, SsspState, TcState};
+use crate::graph::{DynGraph, NodeId, Weight};
+use crate::util::error::{bail, Context, Result};
+use crate::util::failpoint;
+use std::fs::File;
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 5] = b"SPCK\x01";
+
+#[inline]
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A recoverable point-in-time image of the engine's sealed state.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Last batch sequence number applied before this image was taken.
+    pub seq: u64,
+    /// `DynGraph::epoch()` at capture (informational; the restored graph
+    /// restarts its own epoch counter).
+    pub graph_epoch: u64,
+    pub num_nodes: usize,
+    /// The live edge set, sorted (`DynGraph::edges_sorted`).
+    pub edges: Vec<(NodeId, NodeId, Weight)>,
+    pub state: AlgoState,
+}
+
+impl Checkpoint {
+    /// Capture the engine's state after batch `seq` was applied.
+    pub fn capture(seq: u64, g: &DynGraph, state: &AlgoState) -> Checkpoint {
+        Self::capture_parts(seq, g.epoch(), g.num_nodes(), g.edges_sorted(), state)
+    }
+
+    /// [`capture`](Self::capture) from pre-extracted parts — the sharded
+    /// service images its `ShardedGraph` through this (same sorted edge
+    /// set, no intermediate `DynGraph`).
+    pub fn capture_parts(
+        seq: u64,
+        graph_epoch: u64,
+        num_nodes: usize,
+        edges: Vec<(NodeId, NodeId, Weight)>,
+        state: &AlgoState,
+    ) -> Checkpoint {
+        Checkpoint { seq, graph_epoch, num_nodes, edges, state: state.clone() }
+    }
+
+    /// Rebuild the graph image (a fresh diff-CSR over the checkpointed
+    /// edge set; tombstone/diff layout is not preserved — the edge set
+    /// and every property are, which is what result equivalence needs).
+    pub fn restore_graph(&self) -> DynGraph {
+        DynGraph::from_edges(self.num_nodes, &self.edges)
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(64 + self.edges.len() * 12);
+        let tag: u8 = match &self.state {
+            AlgoState::Sssp(_) => 0,
+            AlgoState::Pr(_) => 1,
+            AlgoState::Tc(_) => 2,
+        };
+        b.push(tag);
+        b.extend_from_slice(&self.seq.to_le_bytes());
+        b.extend_from_slice(&self.graph_epoch.to_le_bytes());
+        b.extend_from_slice(&(self.num_nodes as u64).to_le_bytes());
+        b.extend_from_slice(&(self.edges.len() as u64).to_le_bytes());
+        for &(u, v, w) in &self.edges {
+            b.extend_from_slice(&u.to_le_bytes());
+            b.extend_from_slice(&v.to_le_bytes());
+            b.extend_from_slice(&w.to_le_bytes());
+        }
+        match &self.state {
+            AlgoState::Sssp(st) => {
+                b.extend_from_slice(&st.source.to_le_bytes());
+                for &d in &st.dist {
+                    b.extend_from_slice(&d.to_le_bytes());
+                }
+                for &p in &st.parent {
+                    b.extend_from_slice(&p.to_le_bytes());
+                }
+            }
+            AlgoState::Pr(st) => {
+                b.extend_from_slice(&st.beta.to_le_bytes());
+                b.extend_from_slice(&st.delta.to_le_bytes());
+                b.extend_from_slice(&(st.max_iter as u64).to_le_bytes());
+                for &r in &st.rank {
+                    b.extend_from_slice(&r.to_le_bytes());
+                }
+            }
+            AlgoState::Tc(st) => {
+                b.extend_from_slice(&st.triangles.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    fn decode(body: &[u8]) -> Result<Checkpoint> {
+        let mut c = Cursor { buf: body, off: 0 };
+        let tag = c.u8()?;
+        let seq = c.u64()?;
+        let graph_epoch = c.u64()?;
+        let n = c.u64()? as usize;
+        let m = c.u64()? as usize;
+        // corruption guard before the big allocations
+        if body.len() < 33 + m.saturating_mul(12) {
+            bail!("checkpoint body shorter than its edge count claims");
+        }
+        let mut edges = Vec::with_capacity(m);
+        for _ in 0..m {
+            let u = c.u32()?;
+            let v = c.u32()?;
+            let w = c.i32()?;
+            edges.push((u, v, w));
+        }
+        let state = match tag {
+            0 => {
+                let source = c.u32()?;
+                if body.len() - c.off != n.saturating_mul(16) {
+                    bail!("checkpoint SSSP arrays do not match node count {n}");
+                }
+                let mut dist = Vec::with_capacity(n);
+                for _ in 0..n {
+                    dist.push(c.i64()?);
+                }
+                let mut parent = Vec::with_capacity(n);
+                for _ in 0..n {
+                    parent.push(c.i64()?);
+                }
+                AlgoState::Sssp(SsspState { dist, parent, source })
+            }
+            1 => {
+                let beta = c.f64()?;
+                let delta = c.f64()?;
+                let max_iter = c.u64()? as usize;
+                if body.len() - c.off != n.saturating_mul(8) {
+                    bail!("checkpoint PR rank array does not match node count {n}");
+                }
+                let mut rank = Vec::with_capacity(n);
+                for _ in 0..n {
+                    rank.push(c.f64()?);
+                }
+                AlgoState::Pr(PrState { rank, beta, delta, max_iter })
+            }
+            2 => AlgoState::Tc(TcState { triangles: c.i64()? }),
+            t => bail!("checkpoint has unknown algo tag {t}"),
+        };
+        if c.off != body.len() {
+            bail!("checkpoint has {} trailing bytes", body.len() - c.off);
+        }
+        Ok(Checkpoint { seq, graph_epoch, num_nodes: n, edges, state })
+    }
+
+    /// Write atomically into `dir` (created if absent): assemble as
+    /// `.tmp`, fsync, rename. Returns the final path.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        failpoint::hit("checkpoint")?;
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create checkpoint dir {dir:?}"))?;
+        let body = self.encode();
+        let final_path = dir.join(format!("checkpoint-{:020}.ckpt", self.seq));
+        let tmp_path = final_path.with_extension("ckpt.tmp");
+        {
+            let mut f = File::create(&tmp_path)
+                .with_context(|| format!("create {tmp_path:?}"))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&body)?;
+            f.write_all(&fnv1a64(&body).to_le_bytes())?;
+            f.sync_data().context("fsync checkpoint")?;
+        }
+        std::fs::rename(&tmp_path, &final_path)
+            .with_context(|| format!("publish checkpoint {final_path:?}"))?;
+        if let Ok(d) = File::open(dir) {
+            let _ = d.sync_all(); // persist the rename itself
+        }
+        Ok(final_path)
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    off: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.buf.len() - self.off < n {
+            bail!("checkpoint truncated at offset {}", self.off);
+        }
+        let s = &self.buf[self.off..self.off + n];
+        self.off += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn i32(&mut self) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+fn list_checkpoints(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    for entry in std::fs::read_dir(dir).with_context(|| format!("read {dir:?}"))? {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if let Some(seq) = name
+            .strip_prefix("checkpoint-")
+            .and_then(|r| r.strip_suffix(".ckpt"))
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            out.push((seq, path));
+        }
+    }
+    out.sort_unstable_by_key(|&(seq, _)| seq);
+    Ok(out)
+}
+
+/// Load one checkpoint file, validating magic + checksum.
+pub fn load(path: &Path) -> Result<Checkpoint> {
+    let mut bytes = Vec::new();
+    File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .with_context(|| format!("read checkpoint {path:?}"))?;
+    if bytes.len() < MAGIC.len() + 8 || &bytes[..MAGIC.len()] != MAGIC {
+        bail!("checkpoint {path:?}: bad magic or truncated header");
+    }
+    let body = &bytes[MAGIC.len()..bytes.len() - 8];
+    let sum = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+    if fnv1a64(body) != sum {
+        bail!("checkpoint {path:?}: checksum mismatch");
+    }
+    Checkpoint::decode(body)
+}
+
+/// Load the newest valid checkpoint in `dir`, skipping damaged files
+/// (newest-first). `Ok(None)` when the directory holds none.
+pub fn load_latest(dir: &Path) -> Result<Option<Checkpoint>> {
+    let mut cks = list_checkpoints(dir)?;
+    cks.reverse();
+    for (_, path) in cks {
+        match load(&path) {
+            Ok(ck) => return Ok(Some(ck)),
+            Err(_) => continue, // damaged: fall back to the previous one
+        }
+    }
+    Ok(None)
+}
+
+/// Retire all but the newest `keep` checkpoints. Returns how many files
+/// were removed.
+pub fn prune(dir: &Path, keep: usize) -> Result<usize> {
+    let cks = list_checkpoints(dir)?;
+    let mut removed = 0;
+    if cks.len() > keep {
+        for (_, path) in &cks[..cks.len() - keep] {
+            std::fs::remove_file(path)
+                .with_context(|| format!("prune checkpoint {path:?}"))?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("starplat-ckpt-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sssp_ck(seq: u64) -> (DynGraph, Checkpoint) {
+        let g = generators::uniform_random(50, 250, 9, seq);
+        let st = crate::algorithms::sssp::static_sssp(&g, 0);
+        let ck = Checkpoint::capture(seq, &g, &AlgoState::Sssp(st));
+        (g, ck)
+    }
+
+    #[test]
+    fn roundtrip_restores_graph_and_state() {
+        let dir = tmpdir("roundtrip");
+        let (g, ck) = sssp_ck(7);
+        let path = ck.write(&dir).unwrap();
+        let got = load(&path).unwrap();
+        assert_eq!(got.seq, 7);
+        assert_eq!(got.num_nodes, g.num_nodes());
+        assert_eq!(got.edges, g.edges_sorted());
+        assert_eq!(got.restore_graph().edges_sorted(), g.edges_sorted());
+        match (&got.state, &ck.state) {
+            (AlgoState::Sssp(a), AlgoState::Sssp(b)) => {
+                assert_eq!(a.dist, b.dist);
+                assert_eq!(a.parent, b.parent);
+                assert_eq!(a.source, b.source);
+            }
+            _ => panic!("algo tag changed in flight"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn pr_and_tc_states_roundtrip() {
+        let dir = tmpdir("algos");
+        let g = generators::uniform_random(40, 160, 9, 3);
+        let pr = PrState { rank: vec![0.25; 40], beta: 1e-3, delta: 0.85, max_iter: 50 };
+        let ck = Checkpoint::capture(1, &g, &AlgoState::Pr(pr.clone()));
+        ck.write(&dir).unwrap();
+        let got = load_latest(&dir).unwrap().unwrap();
+        match got.state {
+            AlgoState::Pr(st) => {
+                assert_eq!(st.rank, pr.rank);
+                assert_eq!(st.max_iter, 50);
+            }
+            _ => panic!("expected PR state"),
+        }
+        let tc = Checkpoint::capture(2, &g, &AlgoState::Tc(TcState { triangles: -7 }));
+        tc.write(&dir).unwrap();
+        let got = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(got.seq, 2, "latest wins");
+        match got.state {
+            AlgoState::Tc(st) => assert_eq!(st.triangles, -7),
+            _ => panic!("expected TC state"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_latest_falls_back_to_previous() {
+        let dir = tmpdir("fallback");
+        let (_, ck1) = sssp_ck(1);
+        let (_, ck2) = sssp_ck(2);
+        ck1.write(&dir).unwrap();
+        let p2 = ck2.write(&dir).unwrap();
+        // Damage the newest file.
+        let mut bytes = std::fs::read(&p2).unwrap();
+        let n = bytes.len();
+        bytes[n / 2] ^= 0xff;
+        std::fs::write(&p2, &bytes).unwrap();
+        let got = load_latest(&dir).unwrap().unwrap();
+        assert_eq!(got.seq, 1, "recovery degrades to the previous checkpoint");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn prune_keeps_newest() {
+        let dir = tmpdir("prune");
+        for seq in 1..=5 {
+            sssp_ck(seq).1.write(&dir).unwrap();
+        }
+        assert_eq!(prune(&dir, 2).unwrap(), 3);
+        let left = list_checkpoints(&dir).unwrap();
+        assert_eq!(left.iter().map(|&(s, _)| s).collect::<Vec<_>>(), vec![4, 5]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn empty_dir_loads_none() {
+        let dir = tmpdir("empty");
+        assert!(load_latest(&dir).unwrap().is_none());
+    }
+}

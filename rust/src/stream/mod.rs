@@ -32,6 +32,18 @@
 //!   epoch stamps, all-or-nothing) so readers never observe a
 //!   half-propagated batch.
 //!
+//! Fault tolerance rides on three additional pieces: [`wal`] — a
+//! segmented, checksummed write-ahead log of sealed batches (appended
+//! between seal and compute, torn tails truncated on replay);
+//! [`checkpoint`] — periodic atomic snapshots of (graph, algorithm
+//! state) that bound WAL replay length; and the supervisor inside
+//! [`service`], which catches engine-thread panics (including armed
+//! [`crate::util::failpoint`] sites), restarts from the latest
+//! checkpoint + WAL tail with bounded exponential backoff, and degrades
+//! the service to read-only (writes get [`ingest::SubmitError`], the
+//! last published epoch keeps serving) when restarts are exhausted or
+//! no WAL is configured.
+//!
 //! Every pipeline stage is instrumented through [`crate::telemetry`]:
 //! `ServiceConfig::telemetry` carries an optional span [`Tracer`]
 //! (Chrome-trace export of enqueue/form/seal/compute/scatter/steal/
@@ -51,16 +63,20 @@
 //! PR; xla legs skip without PJRT).
 
 pub mod batcher;
+pub mod checkpoint;
 pub mod ingest;
 pub mod service;
 pub mod shard;
 pub mod snapshot;
+pub mod wal;
 
 pub use batcher::{BatchMeta, Batcher, CloseReason, MergeGovernor, MergePolicy, MergeSignal};
-pub use ingest::{Counters, Ingest};
+pub use checkpoint::Checkpoint;
+pub use ingest::{Counters, DrainTimeout, Ingest, SubmitError};
 pub use service::{
-    AlgoState, GraphService, ServiceConfig, ServiceReport, ServiceStats, ShardLoad,
-    ShardedReport, ShardedService, StageSecs,
+    AlgoState, DegradedReport, DurabilityConfig, GraphService, ServiceConfig, ServiceReport,
+    ServiceStats, ShardLoad, ShardedReport, ShardedService, StageSecs,
 };
 pub use shard::{RelayStats, ShardedEngine, ShardedGraph};
 pub use snapshot::{PropTable, SnapshotCell};
+pub use wal::{FsyncPolicy, WalRecord, WalWriter};

@@ -18,9 +18,11 @@
 //! ingest shards.
 
 use super::batcher::{Batcher, CloseReason, MergeGovernor, MergePolicy};
-use super::ingest::Ingest;
+use super::checkpoint::{self, Checkpoint};
+use super::ingest::{DrainTimeout, Ingest, SubmitError};
 use super::shard::{RelayStats, ShardedEngine, ShardedGraph};
 use super::snapshot::{PropTable, SnapshotCell};
+use super::wal::{self, FsyncPolicy, WalWriter};
 use crate::algorithms::{PrState, SsspState, TcState};
 use crate::backend::{make_engine, BackendKind, DynamicEngine, EngineOpts};
 use crate::coordinator::Algo;
@@ -30,8 +32,11 @@ use crate::telemetry::{
     SHARD_TRACK_CAP, TRACK_CAP,
 };
 use crate::util::error::{anyhow, bail, Result};
+use crate::util::failpoint;
 use crate::util::stats::percentile_sorted;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -93,6 +98,15 @@ pub struct ServiceConfig {
     pub pr_beta: f64,
     pub pr_delta: f64,
     pub pr_max_iter: usize,
+    /// Durability & supervision: WAL + checkpoints + bounded engine
+    /// restarts (`serve --wal`). Defaults keep everything off — a service
+    /// without a WAL dir is exactly the old volatile pipeline.
+    pub durability: DurabilityConfig,
+    /// When set, the coordinator's load harness submits with this
+    /// patience bound and sheds on timeout (`serve --shed-ms`) instead of
+    /// blocking producers indefinitely. Library users call
+    /// [`GraphService::submit_deadline`] directly.
+    pub submit_deadline: Option<Duration>,
 }
 
 impl ServiceConfig {
@@ -116,6 +130,41 @@ impl ServiceConfig {
             pr_beta: 1e-3,
             pr_delta: 0.85,
             pr_max_iter: 100,
+            durability: DurabilityConfig::default(),
+            submit_deadline: None,
+        }
+    }
+}
+
+/// Durability + supervision knobs. With `wal_dir` unset nothing is ever
+/// written, and the supervisor degrades the service to read-only on the
+/// first engine panic instead of restarting (there is nothing durable to
+/// recover the lost graph/state from).
+#[derive(Debug, Clone)]
+pub struct DurabilityConfig {
+    /// WAL + checkpoint directory. `None` disables durability.
+    pub wal_dir: Option<PathBuf>,
+    /// When sealed-batch appends reach stable storage ([`FsyncPolicy`]).
+    pub fsync: FsyncPolicy,
+    /// Checkpoint every this many applied batches (0 = only the seed
+    /// checkpoint; the WAL then carries the whole history).
+    pub checkpoint_every: u64,
+    /// Engine panics tolerated (recover from checkpoint + WAL, restart)
+    /// before the service degrades to read-only.
+    pub max_restarts: u32,
+    /// Base supervisor backoff before a restart, doubled per consecutive
+    /// attempt.
+    pub restart_backoff: Duration,
+}
+
+impl Default for DurabilityConfig {
+    fn default() -> Self {
+        DurabilityConfig {
+            wal_dir: None,
+            fsync: FsyncPolicy::default(),
+            checkpoint_every: 64,
+            max_restarts: 3,
+            restart_backoff: Duration::from_millis(25),
         }
     }
 }
@@ -154,9 +203,11 @@ pub struct ShardLoad {
 pub struct StageSecs {
     /// Oldest update's enqueue → batch close.
     pub queue_wait: f64,
-    /// Draining the sealed batch into update buffers (+ owner routing).
+    /// Draining the sealed batch into update buffers (+ the WAL append,
+    /// when durability is on).
     pub form: f64,
-    /// Engine propagation (all BSP rounds, for the sharded service).
+    /// Engine propagation (owner routing + all BSP rounds, for the
+    /// sharded service).
     pub compute: f64,
     /// Summed shard-worker idle at the phase barrier.
     pub barrier: f64,
@@ -236,6 +287,21 @@ pub struct ServiceStats {
     /// Push/pull traversal telemetry from the engine, when the backend
     /// reports it (the cpu engine's direction-optimizing fixed points).
     pub direction: Option<crate::backend::cpu::DirectionStats>,
+    /// Submissions shed: deadline-bounded [`GraphService::submit_deadline`]
+    /// calls that timed out under backpressure, plus `enqueue` failpoint
+    /// rejections. Shed updates are never counted as submitted.
+    pub shed: u64,
+    /// Engine crashes caught by the supervisor. Each one either restarted
+    /// the engine from checkpoint + WAL or — on the last allowed attempt,
+    /// or without a WAL — degraded the service.
+    pub restarts: u64,
+    /// Batches replayed from the WAL across this service's recoveries
+    /// (startup recovery plus any supervised in-process restarts; 0 for a
+    /// fresh start).
+    pub recovered_batches: u64,
+    /// Engine dead past recovery: reads keep serving the last published
+    /// epoch, writes are rejected with [`SubmitError::Poisoned`].
+    pub degraded: bool,
     /// Wall-clock seconds since service start.
     pub wall_secs: f64,
 }
@@ -417,9 +483,45 @@ impl ServiceTelemetry {
 
 struct Shared {
     stop: AtomicBool,
+    /// Engine dead past recovery; reads keep serving, writes rejected.
+    degraded: AtomicBool,
+    /// Engine crashes caught by the supervisor.
+    restarts: AtomicU64,
+    /// WAL batches replayed across this service's recoveries.
+    recovered_batches: AtomicU64,
+    /// Raw update count of the batch currently inside the engine loop
+    /// (0 between batches). The supervisor completes it after a caught
+    /// panic so ingest accounting stays balanced across restarts —
+    /// otherwise `drain()` would wait forever on updates that died with
+    /// the loop (recovery re-applies the WAL'd ones).
+    inflight: AtomicU64,
     stats: Mutex<StatsInner>,
     telem: ServiceTelemetry,
     started: Instant,
+}
+
+impl Shared {
+    fn new(histograms: bool) -> Shared {
+        Shared {
+            stop: AtomicBool::new(false),
+            degraded: AtomicBool::new(false),
+            restarts: AtomicU64::new(0),
+            recovered_batches: AtomicU64::new(0),
+            inflight: AtomicU64::new(0),
+            stats: Mutex::new(StatsInner::default()),
+            telem: ServiceTelemetry::new(histograms),
+            started: Instant::now(),
+        }
+    }
+}
+
+/// What a degraded service (engine dead past recovery) still hands back
+/// at shutdown: the final stats. Graph and algorithm state died with the
+/// engine — with a WAL they are on disk, and a fresh service recovers
+/// them.
+#[derive(Debug)]
+pub struct DegradedReport {
+    pub stats: ServiceStats,
 }
 
 /// Handle to a running streaming service. Clone-free: share via `Arc`.
@@ -474,12 +576,7 @@ impl GraphService {
             );
         }
         let ingest = Arc::new(ingest_raw);
-        let shared = Arc::new(Shared {
-            stop: AtomicBool::new(false),
-            stats: Mutex::new(StatsInner::default()),
-            telem: ServiceTelemetry::new(cfg.telemetry.histograms),
-            started: Instant::now(),
-        });
+        let shared = Arc::new(Shared::new(cfg.telemetry.histograms));
         let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
         let worker = {
@@ -488,36 +585,20 @@ impl GraphService {
             let shared = Arc::clone(&shared);
             let cfg = cfg.clone();
             std::thread::spawn(move || {
-                let engine = match make_engine(cfg.backend, &cfg.engine) {
-                    Ok(e) => e,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return None;
-                    }
-                };
-                engine.prepare_graph(&mut g);
-                let state = match seed_state(&*engine, &g, &cfg) {
-                    Ok(s) => s,
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return None;
-                    }
-                };
-                // Seeding solve comm is not counted, mirroring the offline
-                // cells' protocol (the dynamic measurement starts here).
-                engine.drain_comm_secs();
-                publish_state(&snapshots, &g, &state);
-                let _ = ready_tx.send(Ok(()));
-                Some(engine_loop(g, state, &*engine, ingest, snapshots, shared, cfg))
+                supervise_single(g, ingest, snapshots, shared, cfg, ready_tx)
             })
         };
 
         match ready_rx.recv() {
             Ok(Ok(())) => {
-                let sampler = cfg
-                    .telemetry
-                    .stats_every
-                    .map(|every| spawn_sampler(every, Arc::clone(&ingest), Arc::clone(&shared)));
+                let sampler = cfg.telemetry.stats_every.map(|every| {
+                    spawn_sampler(
+                        every,
+                        Arc::clone(&ingest),
+                        Arc::clone(&snapshots),
+                        Arc::clone(&shared),
+                    )
+                });
                 Ok(GraphService {
                     ingest,
                     snapshots,
@@ -544,6 +625,13 @@ impl GraphService {
         self.ingest.submit(upd)
     }
 
+    /// Submit with a patience bound: block under backpressure at most
+    /// `deadline`, then shed with [`SubmitError::Shed`] (counted in
+    /// [`ServiceStats::shed`], never in `submitted`).
+    pub fn submit_deadline(&self, upd: Update, deadline: Duration) -> Result<(), SubmitError> {
+        self.ingest.submit_deadline(upd, deadline)
+    }
+
     /// Convenience: submit an edge insertion.
     pub fn insert(&self, src: NodeId, dst: NodeId, weight: Weight) -> bool {
         self.submit(Update { kind: UpdateKind::Add, src, dst, weight })
@@ -558,6 +646,19 @@ impl GraphService {
     /// and its snapshot published. Producers must pause first.
     pub fn drain(&self) {
         self.ingest.wait_quiescent();
+    }
+
+    /// [`drain`](Self::drain) with a bound: `Err(DrainTimeout)` if the
+    /// backlog has not flushed within `timeout` (a stalled engine would
+    /// otherwise spin the caller forever).
+    pub fn drain_timeout(&self, timeout: Duration) -> Result<(), DrainTimeout> {
+        self.ingest.wait_quiescent_timeout(timeout)
+    }
+
+    /// Engine dead past recovery: reads keep serving the last published
+    /// epoch, writes are rejected with [`SubmitError::Poisoned`].
+    pub fn degraded(&self) -> bool {
+        self.shared.degraded.load(Ordering::Acquire)
     }
 
     /// Latest published snapshot epoch.
@@ -599,19 +700,34 @@ impl GraphService {
 
     /// Stop the service: reject new submissions, flush the backlog through
     /// the engine, join, and hand back graph + state + final stats.
+    /// Panics if the engine degraded mid-stream;
+    /// [`try_shutdown`](Self::try_shutdown) reports that case as a value.
     pub fn shutdown(self) -> ServiceReport {
+        self.try_shutdown().unwrap_or_else(|d| {
+            panic!(
+                "engine degraded after {} caught crash(es); reads were served \
+                 to the end, but graph and state died with the engine",
+                d.stats.restarts
+            )
+        })
+    }
+
+    /// [`shutdown`](Self::shutdown) that surfaces engine death as a
+    /// value: a degraded service yields `Err(DegradedReport)` carrying
+    /// the final stats instead of panicking the caller.
+    pub fn try_shutdown(self) -> std::result::Result<ServiceReport, DegradedReport> {
         self.shared.stop.store(true, Ordering::Release);
         self.ingest.stop();
         let handle = self.worker.lock().unwrap().take().expect("shutdown called once");
-        let (graph, state) = handle
-            .join()
-            .expect("engine thread panicked")
-            .expect("service cannot shut down: it never started");
+        let out = handle.join().expect("engine supervisor panicked");
         if let Some(s) = self.sampler.lock().unwrap().take() {
             let _ = s.join();
         }
         let stats = self.stats();
-        ServiceReport { graph, state, stats }
+        match out {
+            Some((graph, state)) => Ok(ServiceReport { graph, state, stats }),
+            None => Err(DegradedReport { stats }),
+        }
     }
 }
 
@@ -628,6 +744,10 @@ fn collect_stats(
         submitted: c.submitted,
         completed: c.completed,
         coalesced: c.coalesced,
+        shed: c.shed,
+        restarts: shared.restarts.load(Ordering::SeqCst),
+        recovered_batches: shared.recovered_batches.load(Ordering::SeqCst),
+        degraded: shared.degraded.load(Ordering::Acquire),
         policy: policy.describe(),
         epoch: snapshots.epoch(),
         wall_secs: shared.started.elapsed().as_secs_f64(),
@@ -671,16 +791,22 @@ fn collect_stats(
 /// registry snapshot, as a single JSON object on stdout. Reads only
 /// atomics (and the registry's name table) — never the engine's stats
 /// lock, so sampling cannot stall the batch loop.
-fn emit_stats_line(ingest: &Ingest, shared: &Shared) {
+fn emit_stats_line(ingest: &Ingest, snapshots: &SnapshotCell, shared: &Shared) {
     let c = ingest.counters();
     println!(
         "{{\"t_secs\":{:.3},\"submitted\":{},\"completed\":{},\"coalesced\":{},\
-         \"inflight\":{},\"metrics\":{}}}",
+         \"inflight\":{},\"epoch\":{},\"shed\":{},\"restarts\":{},\
+         \"recovered_batches\":{},\"degraded\":{},\"metrics\":{}}}",
         shared.started.elapsed().as_secs_f64(),
         c.submitted,
         c.completed,
         c.coalesced,
         c.submitted.saturating_sub(c.completed),
+        snapshots.epoch(),
+        c.shed,
+        shared.restarts.load(Ordering::Relaxed),
+        shared.recovered_batches.load(Ordering::Relaxed),
+        shared.degraded.load(Ordering::Relaxed),
         shared.telem.registry.snapshot_json(),
     );
 }
@@ -688,7 +814,12 @@ fn emit_stats_line(ingest: &Ingest, shared: &Shared) {
 /// Spawn the periodic stats sampler. It emits one line per `every`
 /// interval and one final line when it observes shutdown (so even runs
 /// shorter than the interval produce a snapshot), then exits.
-fn spawn_sampler(every: Duration, ingest: Arc<Ingest>, shared: Arc<Shared>) -> JoinHandle<()> {
+fn spawn_sampler(
+    every: Duration,
+    ingest: Arc<Ingest>,
+    snapshots: Arc<SnapshotCell>,
+    shared: Arc<Shared>,
+) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name("stats-sampler".into())
         .spawn(move || {
@@ -696,11 +827,11 @@ fn spawn_sampler(every: Duration, ingest: Arc<Ingest>, shared: Arc<Shared>) -> J
             let mut next = Instant::now() + every;
             loop {
                 if shared.stop.load(Ordering::Acquire) {
-                    emit_stats_line(&ingest, &shared);
+                    emit_stats_line(&ingest, &snapshots, &shared);
                     return;
                 }
                 if Instant::now() >= next {
-                    emit_stats_line(&ingest, &shared);
+                    emit_stats_line(&ingest, &snapshots, &shared);
                     next += every;
                 }
                 std::thread::sleep(tick);
@@ -754,12 +885,267 @@ fn publish_sharded(cell: &SnapshotCell, g: &ShardedGraph, state: &AlgoState) {
     });
 }
 
+// ------------------------------------------------- durability + supervision
+
+/// Live durability handle threaded through an engine loop: the open WAL
+/// writer plus checkpoint-cadence bookkeeping.
+struct Durable {
+    wal: WalWriter,
+    dir: PathBuf,
+    /// Checkpoint every this many applied batches (0 = seed only).
+    every: u64,
+    /// Sequence number of the last batch handed to the WAL.
+    seq: u64,
+    since_checkpoint: u64,
+}
+
+impl Durable {
+    fn open(dir: &std::path::Path, cfg: &DurabilityConfig, seq: u64) -> Result<Durable> {
+        Ok(Durable {
+            wal: WalWriter::open(dir, cfg.fsync, seq + 1)?,
+            dir: dir.to_path_buf(),
+            every: cfg.checkpoint_every,
+            seq,
+            since_checkpoint: 0,
+        })
+    }
+
+    /// Write-ahead: called after seal, before compute. On return the
+    /// batch is durable (fsynced under `SealFsync`); a crash anywhere
+    /// later in the pipeline replays it.
+    fn append(&mut self, dels: &[(NodeId, NodeId)], adds: &[(NodeId, NodeId, Weight)]) {
+        self.seq += 1;
+        if let Err(e) = self.wal.append(self.seq, dels, adds) {
+            panic!("WAL append failed at seq {}: {e}", self.seq);
+        }
+    }
+
+    /// Checkpoint cadence: after `every` applied batches, image the state
+    /// via `capture`, keep the newest two checkpoints, and drop WAL
+    /// segments the new one supersedes. A failed write panics into the
+    /// supervisor — recovery then falls back to the previous checkpoint
+    /// plus a longer WAL replay, which is state-equivalent.
+    fn maybe_checkpoint(&mut self, capture: impl FnOnce(u64) -> Checkpoint) {
+        self.since_checkpoint += 1;
+        if self.every == 0 || self.since_checkpoint < self.every {
+            return;
+        }
+        let ck = capture(self.seq);
+        if let Err(e) = ck.write(&self.dir) {
+            panic!("checkpoint write failed at seq {}: {e}", self.seq);
+        }
+        self.since_checkpoint = 0;
+        let _ = checkpoint::prune(&self.dir, 2);
+        let _ = self.wal.prune_below(self.seq);
+    }
+}
+
+/// Failpoint sites living in non-`Result` stretches of the engine loops:
+/// `err` and `panic` actions both crash the hosting thread (the
+/// supervisor catches either), `delay` stalls in place.
+fn chaos(site: &str) {
+    if let Err(e) = failpoint::hit(site) {
+        panic!("{e}");
+    }
+}
+
+/// Enter read-only degraded mode: the last published epoch keeps serving
+/// queries while producers — including ones parked in backpressure — get
+/// [`SubmitError::Poisoned`] and `drain()` callers unblock. Both service
+/// flavors funnel engine death through here; the sharded service used to
+/// leave its ingest live and panic the caller at shutdown's join.
+fn degrade(ingest: &Ingest, shared: &Shared) {
+    shared.degraded.store(true, Ordering::Release);
+    ingest.poison();
+}
+
+/// Supervisor bookkeeping after a caught engine panic: reconcile the
+/// in-flight batch's completion accounting (its updates died with the
+/// loop; recovery re-applies the WAL'd ones, and without a WAL the loss
+/// is the documented volatile window), bump the crash counter, and decide
+/// whether another attempt is allowed. Returns `false` — after degrading
+/// the service — when restarts are exhausted, shutdown already began, or
+/// there is no WAL to recover from; otherwise sleeps the exponential
+/// backoff and returns `true`.
+fn note_crash_and_backoff(
+    ingest: &Ingest,
+    shared: &Shared,
+    cfg: &ServiceConfig,
+    attempt: &mut u32,
+) -> bool {
+    let inflight = shared.inflight.swap(0, Ordering::SeqCst);
+    if inflight > 0 {
+        ingest.complete(inflight);
+    }
+    shared.restarts.fetch_add(1, Ordering::SeqCst);
+    let recoverable = cfg.durability.wal_dir.is_some()
+        && *attempt < cfg.durability.max_restarts
+        && !shared.stop.load(Ordering::Acquire);
+    if !recoverable {
+        degrade(ingest, shared);
+        return false;
+    }
+    let backoff = cfg.durability.restart_backoff.saturating_mul(1u32 << (*attempt).min(16));
+    *attempt += 1;
+    std::thread::sleep(backoff);
+    true
+}
+
+/// One sealed batch through the single-engine pipeline — shared verbatim
+/// between the live loop and WAL replay, so recovery replays through the
+/// code path it is recovering. `dels` arrives as sealed (pre-filter, the
+/// shape the WAL records); TC's liveness filter runs here against the
+/// same graph state either way.
+fn apply_single_batch(
+    engine: &dyn DynamicEngine,
+    g: &mut DynGraph,
+    state: &mut AlgoState,
+    dels: &mut Vec<(NodeId, NodeId)>,
+    adds: &[(NodeId, NodeId, Weight)],
+) -> Result<()> {
+    failpoint::hit("compute")?;
+    match state {
+        AlgoState::Sssp(st) => engine.sssp_dynamic_batch_parts(g, st, dels, adds),
+        AlgoState::Pr(st) => engine.pr_dynamic_batch_parts(g, st, dels, adds).map(|_| ()),
+        AlgoState::Tc(st) => {
+            // TC's decremental delta counting assumes deleted arcs are
+            // live (Fig. 19 runs it *before* updateCSRDel); coalescing
+            // keeps deletes whose insert was cancelled, so deletes of
+            // absent arcs are legal here — drop them before counting.
+            dels.retain(|&(u, v)| g.has_edge(u, v));
+            engine.tc_dynamic_batch(g, st, dels, adds)
+        }
+    }
+}
+
+/// Build (or rebuild, after a supervised restart) the single-engine
+/// world: engine + graph + state + durability handle. `seed` carries the
+/// caller's graph on the first call; a WAL dir holding a checkpoint
+/// supersedes it — the image is restored and the WAL tail past its `seq`
+/// replays through [`apply_single_batch`]. A fresh durable start writes
+/// the seed checkpoint at seq 0 up front, so a crash before the first
+/// periodic checkpoint still recovers.
+fn init_single(
+    seed: &mut Option<DynGraph>,
+    cfg: &ServiceConfig,
+    shared: &Shared,
+) -> Result<(Box<dyn DynamicEngine>, DynGraph, AlgoState, Option<Durable>)> {
+    let engine = make_engine(cfg.backend, &cfg.engine)?;
+    if let Some(dir) = &cfg.durability.wal_dir {
+        if let Some(ck) = checkpoint::load_latest(dir)? {
+            let mut g = ck.restore_graph();
+            // The service owns the merge schedule (see try_start).
+            g.merge_period = 0;
+            engine.prepare_graph(&mut g);
+            let mut state = ck.state.clone();
+            let (records, _info) = wal::replay(dir, ck.seq)?;
+            let mut seq = ck.seq;
+            let mut replayed = 0u64;
+            for rec in records {
+                let mut dels = rec.dels;
+                apply_single_batch(&*engine, &mut g, &mut state, &mut dels, &rec.adds)?;
+                seq = rec.seq;
+                replayed += 1;
+                // Bound replay-time diff-chain depth; merges never change
+                // results, so cadence differences from the live run are
+                // invisible to the equivalence checks.
+                if replayed % 64 == 0 {
+                    g.merge();
+                }
+            }
+            engine.drain_comm_secs();
+            shared.recovered_batches.fetch_add(replayed, Ordering::SeqCst);
+            let durable = Durable::open(dir, &cfg.durability, seq)?;
+            return Ok((engine, g, state, Some(durable)));
+        }
+    }
+    let mut g = seed
+        .take()
+        .ok_or_else(|| anyhow!("engine restart requires a WAL checkpoint to recover from"))?;
+    engine.prepare_graph(&mut g);
+    let state = seed_state(&*engine, &g, cfg)?;
+    // Seeding solve comm is not counted, mirroring the offline cells'
+    // protocol (the dynamic measurement starts here).
+    engine.drain_comm_secs();
+    let durable = match &cfg.durability.wal_dir {
+        Some(dir) => {
+            Checkpoint::capture(0, &g, &state).write(dir)?;
+            Some(Durable::open(dir, &cfg.durability, 0)?)
+        }
+        None => None,
+    };
+    Ok((engine, g, state, durable))
+}
+
+/// The single-engine thread body: init (or recover), publish, run the
+/// batch loop under `catch_unwind`, and on a caught crash either restart
+/// from checkpoint + WAL or degrade to read-only. Returns `None` when the
+/// service degraded (or never started).
+fn supervise_single(
+    g: DynGraph,
+    ingest: Arc<Ingest>,
+    snapshots: Arc<SnapshotCell>,
+    shared: Arc<Shared>,
+    cfg: ServiceConfig,
+    ready_tx: mpsc::Sender<Result<()>>,
+) -> Option<(DynGraph, AlgoState)> {
+    let mut seed = Some(g);
+    let mut ready = Some(ready_tx);
+    let mut attempt = 0u32;
+    loop {
+        let (engine, g, state, mut durable) = match init_single(&mut seed, &cfg, &shared) {
+            Ok(parts) => parts,
+            Err(e) => {
+                match ready.take() {
+                    // Startup: report to try_start's caller.
+                    Some(tx) => {
+                        let _ = tx.send(Err(e));
+                    }
+                    // Mid-life rebuild failed (e.g. unreadable WAL dir):
+                    // nothing left to serve writes with.
+                    None => degrade(&ingest, &shared),
+                }
+                return None;
+            }
+        };
+        // Epoch continuity: a recovered fresh process resumes the epoch
+        // line at its recovered batch seq (≥ anything the dead process
+        // published); a no-op after the first publish.
+        if let Some(d) = &durable {
+            snapshots.resume_from(d.seq);
+        }
+        publish_state(&snapshots, &g, &state);
+        if let Some(tx) = ready.take() {
+            let _ = tx.send(Ok(()));
+        }
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            engine_loop(
+                g,
+                state,
+                &*engine,
+                Arc::clone(&ingest),
+                Arc::clone(&snapshots),
+                Arc::clone(&shared),
+                cfg.clone(),
+                &mut durable,
+            )
+        }));
+        match run {
+            Ok(done) => return Some(done),
+            Err(_) => {
+                if !note_crash_and_backoff(&ingest, &shared, &cfg, &mut attempt) {
+                    return None;
+                }
+            }
+        }
+    }
+}
+
 /// The batch loop: any backend, through the engine contract. Engine
-/// errors mid-stream (only the xla backend can produce them) poison the
-/// ingest — blocked producers and `drain()` callers unblock, later
-/// submissions are rejected — then panic the engine thread, so the
-/// failure surfaces at `shutdown()`'s join while every snapshot
-/// published before it stays consistent.
+/// errors mid-stream panic the loop; the supervisor above catches the
+/// unwind and either recovers from checkpoint + WAL or poisons the
+/// ingest and degrades the service to read-only — every snapshot
+/// published before the crash stays consistent either way.
 #[allow(clippy::too_many_arguments)]
 fn engine_loop(
     mut g: DynGraph,
@@ -769,6 +1155,7 @@ fn engine_loop(
     snapshots: Arc<SnapshotCell>,
     shared: Arc<Shared>,
     cfg: ServiceConfig,
+    durable: &mut Option<Durable>,
 ) -> (DynGraph, AlgoState) {
     let mut batcher = Batcher::new(cfg.batch_capacity, cfg.batch_deadline, cfg.symmetric);
     let mut dels: Vec<(NodeId, NodeId)> = Vec::new();
@@ -791,31 +1178,27 @@ fn engine_loop(
         let queue_wait =
             meta.oldest.map(|o| closed_at.saturating_duration_since(o)).unwrap_or_default();
 
+        // The batch is now inside the loop: if a crash lands anywhere
+        // before its completion accounting below, the supervisor settles
+        // the balance (see `Shared::inflight`).
+        shared.inflight.store(meta.raw_len as u64, Ordering::SeqCst);
         batcher.take_into(&mut dels, &mut adds);
+        chaos("seal");
+        // Write-ahead at the seal boundary: the sealed batch is the unit
+        // of durability. A crash between seal and append loses exactly
+        // this batch (accepted-but-volatile window); any crash after the
+        // append replays it.
+        if let Some(d) = durable.as_mut() {
+            d.append(&dels, &adds);
+        }
         let formed_at = Instant::now();
         if let Some(t) = &trk_engine {
             t.record_between(Stage::Seal, closed_at, formed_at);
         }
 
-        let applied = match &mut state {
-            AlgoState::Sssp(st) => engine.sssp_dynamic_batch_parts(&mut g, st, &dels, &adds),
-            AlgoState::Pr(st) => {
-                engine.pr_dynamic_batch_parts(&mut g, st, &dels, &adds).map(|_| ())
-            }
-            AlgoState::Tc(st) => {
-                // TC's decremental delta counting assumes deleted arcs are
-                // live (Fig. 19 runs it *before* updateCSRDel); coalescing
-                // keeps deletes whose insert was cancelled, so deletes of
-                // absent arcs are legal here — drop them before counting.
-                dels.retain(|&(u, v)| g.has_edge(u, v));
-                engine.tc_dynamic_batch(&mut g, st, &dels, &adds)
-            }
-        };
-        if let Err(e) = applied {
-            // Poison first so producers stop blocking and `drain()` callers
-            // unblock (wait_quiescent would otherwise spin forever on a
-            // dead engine); the panic then surfaces at `shutdown()`'s join.
-            ingest.poison();
+        if let Err(e) = apply_single_batch(engine, &mut g, &mut state, &mut dels, &adds) {
+            // Crash into the supervisor: it reconciles the accounting,
+            // then restarts from checkpoint + WAL or degrades.
             panic!("{} engine failed mid-stream: {e}", engine.capabilities().name);
         }
         let computed_at = Instant::now();
@@ -830,6 +1213,7 @@ fn engine_loop(
         let signal = governor.after_batch(&g);
         let merge_from = Instant::now();
         if signal.merge {
+            chaos("merge");
             g.merge();
             if let Some(t) = &trk_engine {
                 t.record(Stage::Merge, merge_from);
@@ -837,6 +1221,7 @@ fn engine_loop(
         }
         let merged_at = Instant::now();
 
+        chaos("publish");
         publish_state(&snapshots, &g, &state);
         let published_at = Instant::now();
         if let Some(t) = &trk_engine {
@@ -878,9 +1263,13 @@ fn engine_loop(
             s.direction = engine.direction_stats();
             s.push_latency(latency);
         }
+        if let Some(d) = durable.as_mut() {
+            d.maybe_checkpoint(|seq| Checkpoint::capture(seq, &g, &state));
+        }
         // Completion accounting last: `drain()` returning guarantees the
         // matching snapshot is already published.
         ingest.complete(meta.raw_len as u64);
+        shared.inflight.store(0, Ordering::SeqCst);
     }
     (g, state)
 }
@@ -942,7 +1331,7 @@ pub struct ShardedService {
     snapshots: Arc<SnapshotCell>,
     shared: Arc<Shared>,
     cfg: ServiceConfig,
-    worker: Mutex<Option<JoinHandle<(ShardedGraph, AlgoState, RelayStats)>>>,
+    worker: Mutex<Option<JoinHandle<Option<(ShardedGraph, AlgoState, RelayStats)>>>>,
     sampler: Mutex<Option<JoinHandle<()>>>,
 }
 
@@ -977,47 +1366,7 @@ impl ShardedService {
                  knobs or drop --shards"
             );
         }
-        let graph = ShardedGraph::partition(&g, cfg.engine_shards.max(1));
-        drop(g);
-        let mut engine = ShardedEngine::new();
-        // One span track per shard worker: phase closures record
-        // scatter/steal/gather/pull spans from the worker thread that
-        // runs them, and (on the persistent fleet) the same worker
-        // records its barrier-wait spans — one thread, one track.
-        let shard_tracks: Vec<Arc<Track>> = match &cfg.telemetry.tracer {
-            Some(tracer) => (0..graph.num_shards())
-                .map(|r| tracer.track(&format!("shard-{r}"), SHARD_TRACK_CAP))
-                .collect(),
-            None => Vec::new(),
-        };
-        // The persistent fleet is spawned once here and lives until
-        // shutdown; every BSP phase (including the static seed solve
-        // below) is a closure delivered to the resident workers instead of
-        // a fresh thread::scope.
-        if cfg.persistent && graph.num_shards() > 1 {
-            engine.attach_fleet(crate::util::ShardFleet::with_tracks(
-                graph.num_shards(),
-                shard_tracks.clone(),
-            ));
-        }
-        engine.set_tracks(shard_tracks);
-        engine.set_steal(cfg.steal);
-        let state = match cfg.algo {
-            Algo::Sssp => AlgoState::Sssp(engine.sssp_static(&graph, cfg.source)),
-            Algo::Pr => {
-                let mut st = PrState::new(
-                    graph.num_nodes(),
-                    cfg.pr_beta,
-                    cfg.pr_delta,
-                    cfg.pr_max_iter,
-                );
-                engine.pr_static(&graph, &mut st);
-                AlgoState::Pr(st)
-            }
-            Algo::Tc => AlgoState::Tc(engine.tc_static(&graph)),
-        };
         let snapshots = Arc::new(SnapshotCell::new());
-        publish_sharded(&snapshots, &graph, &state);
         let mut ingest_raw = Ingest::new(cfg.shards, cfg.shard_capacity, cfg.symmetric);
         if let Some(tracer) = &cfg.telemetry.tracer {
             ingest_raw.set_tracks(
@@ -1027,12 +1376,8 @@ impl ShardedService {
             );
         }
         let ingest = Arc::new(ingest_raw);
-        let shared = Arc::new(Shared {
-            stop: AtomicBool::new(false),
-            stats: Mutex::new(StatsInner::default()),
-            telem: ServiceTelemetry::new(cfg.telemetry.histograms),
-            started: Instant::now(),
-        });
+        let shared = Arc::new(Shared::new(cfg.telemetry.histograms));
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
 
         let worker = {
             let ingest = Arc::clone(&ingest);
@@ -1040,28 +1385,51 @@ impl ShardedService {
             let shared = Arc::clone(&shared);
             let cfg = cfg.clone();
             std::thread::spawn(move || {
-                sharded_engine_loop(graph, state, engine, ingest, snapshots, shared, cfg)
+                supervise_sharded(g, ingest, snapshots, shared, cfg, ready_tx)
             })
         };
-        let sampler = cfg
-            .telemetry
-            .stats_every
-            .map(|every| spawn_sampler(every, Arc::clone(&ingest), Arc::clone(&shared)));
 
-        Ok(ShardedService {
-            ingest,
-            snapshots,
-            shared,
-            cfg,
-            worker: Mutex::new(Some(worker)),
-            sampler: Mutex::new(sampler),
-        })
+        match ready_rx.recv() {
+            Ok(Ok(())) => {
+                let sampler = cfg.telemetry.stats_every.map(|every| {
+                    spawn_sampler(
+                        every,
+                        Arc::clone(&ingest),
+                        Arc::clone(&snapshots),
+                        Arc::clone(&shared),
+                    )
+                });
+                Ok(ShardedService {
+                    ingest,
+                    snapshots,
+                    shared,
+                    cfg,
+                    worker: Mutex::new(Some(worker)),
+                    sampler: Mutex::new(sampler),
+                })
+            }
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(e)
+            }
+            Err(_) => {
+                let _ = worker.join();
+                Err(anyhow!("sharded engine thread died during startup"))
+            }
+        }
     }
 
     /// Submit one update (blocking under backpressure). Returns `false`
     /// once the service is shutting down.
     pub fn submit(&self, upd: Update) -> bool {
         self.ingest.submit(upd)
+    }
+
+    /// Submit with a patience bound: block under backpressure at most
+    /// `deadline`, then shed with [`SubmitError::Shed`] (counted in
+    /// [`ServiceStats::shed`], never in `submitted`).
+    pub fn submit_deadline(&self, upd: Update, deadline: Duration) -> Result<(), SubmitError> {
+        self.ingest.submit_deadline(upd, deadline)
     }
 
     /// Convenience: submit an edge insertion.
@@ -1078,6 +1446,18 @@ impl ShardedService {
     /// and its stitched snapshot published. Producers must pause first.
     pub fn drain(&self) {
         self.ingest.wait_quiescent();
+    }
+
+    /// [`drain`](Self::drain) with a bound: `Err(DrainTimeout)` if the
+    /// backlog has not flushed within `timeout`.
+    pub fn drain_timeout(&self, timeout: Duration) -> Result<(), DrainTimeout> {
+        self.ingest.wait_quiescent_timeout(timeout)
+    }
+
+    /// Engine dead past recovery: reads keep serving the last published
+    /// epoch, writes are rejected with [`SubmitError::Poisoned`].
+    pub fn degraded(&self) -> bool {
+        self.shared.degraded.load(Ordering::Acquire)
     }
 
     /// Latest published snapshot epoch.
@@ -1120,17 +1500,216 @@ impl ShardedService {
 
     /// Stop the service: reject new submissions, flush the backlog through
     /// the shards, join, and hand back shards + state + stats + relay
-    /// telemetry.
+    /// telemetry. Panics if the fleet degraded mid-stream;
+    /// [`try_shutdown`](Self::try_shutdown) reports that case as a value.
     pub fn shutdown(self) -> ShardedReport {
+        self.try_shutdown().unwrap_or_else(|d| {
+            panic!(
+                "sharded engine degraded after {} caught crash(es); reads were \
+                 served to the end, but shards and state died with the fleet",
+                d.stats.restarts
+            )
+        })
+    }
+
+    /// [`shutdown`](Self::shutdown) that surfaces fleet death as a value:
+    /// a degraded service yields `Err(DegradedReport)` carrying the final
+    /// stats instead of panicking the caller.
+    pub fn try_shutdown(self) -> std::result::Result<ShardedReport, DegradedReport> {
         self.shared.stop.store(true, Ordering::Release);
         self.ingest.stop();
         let handle = self.worker.lock().unwrap().take().expect("shutdown called once");
-        let (graph, state, relay) = handle.join().expect("sharded engine thread panicked");
+        let out = handle.join().expect("sharded engine supervisor panicked");
         if let Some(s) = self.sampler.lock().unwrap().take() {
             let _ = s.join();
         }
         let stats = self.stats();
-        ShardedReport { graph, state, stats, relay }
+        match out {
+            Some((graph, state, relay)) => Ok(ShardedReport { graph, state, stats, relay }),
+            None => Err(DegradedReport { stats }),
+        }
+    }
+}
+
+/// One sealed batch through the sharded pipeline — shared between the
+/// live loop and WAL replay: TC liveness filter, owner routing, BSP
+/// propagation. `dels` arrives as sealed (pre-filter, the shape the WAL
+/// records).
+#[allow(clippy::too_many_arguments)]
+fn apply_sharded_batch(
+    engine: &mut ShardedEngine,
+    g: &mut ShardedGraph,
+    state: &mut AlgoState,
+    dels: &mut Vec<(NodeId, NodeId)>,
+    adds: &[(NodeId, NodeId, Weight)],
+    dels_by: &mut Vec<Vec<(NodeId, NodeId)>>,
+    adds_by: &mut Vec<Vec<(NodeId, NodeId, Weight)>>,
+) -> Result<()> {
+    failpoint::hit("compute")?;
+    if matches!(state, AlgoState::Tc(_)) {
+        // TC's decremental delta counting assumes deleted arcs are live
+        // (Fig. 19 runs it *before* updateCSRDel); coalescing keeps
+        // deletes whose insert was cancelled, so drop deletes of absent
+        // arcs before counting — the owner answers.
+        dels.retain(|&(u, v)| g.has_edge(u, v));
+    }
+    g.route(dels, adds, dels_by, adds_by);
+    match state {
+        AlgoState::Sssp(st) => engine.sssp_dynamic_batch(g, st, dels_by, adds_by),
+        AlgoState::Pr(st) => engine.pr_dynamic_batch(g, st, dels_by, adds_by),
+        AlgoState::Tc(st) => engine.tc_dynamic_batch(g, st, dels_by, adds_by),
+    }
+    Ok(())
+}
+
+/// Build (or rebuild, after a supervised restart) the sharded world:
+/// fleet engine + partitioned graph + state + durability handle. Same
+/// contract as [`init_single`]: a WAL dir holding a checkpoint supersedes
+/// the seed graph, and its WAL tail replays through
+/// [`apply_sharded_batch`] — the live pipeline's own apply path.
+fn init_sharded(
+    seed: &mut Option<DynGraph>,
+    cfg: &ServiceConfig,
+    shared: &Shared,
+) -> Result<(ShardedEngine, ShardedGraph, AlgoState, Option<Durable>)> {
+    let build_engine = |nshards: usize| {
+        let mut engine = ShardedEngine::new();
+        // One span track per shard worker: phase closures record
+        // scatter/steal/gather/pull spans from the worker thread that
+        // runs them, and (on the persistent fleet) the same worker
+        // records its barrier-wait spans — one thread, one track.
+        let shard_tracks: Vec<Arc<Track>> = match &cfg.telemetry.tracer {
+            Some(tracer) => (0..nshards)
+                .map(|r| tracer.track(&format!("shard-{r}"), SHARD_TRACK_CAP))
+                .collect(),
+            None => Vec::new(),
+        };
+        // The persistent fleet is spawned once per engine life and lives
+        // until shutdown (or a supervised restart rebuilds it); every BSP
+        // phase — including the static seed solve — is a closure
+        // delivered to the resident workers instead of a fresh
+        // thread::scope.
+        if cfg.persistent && nshards > 1 {
+            engine.attach_fleet(crate::util::ShardFleet::with_tracks(
+                nshards,
+                shard_tracks.clone(),
+            ));
+        }
+        engine.set_tracks(shard_tracks);
+        engine.set_steal(cfg.steal);
+        engine
+    };
+    if let Some(dir) = &cfg.durability.wal_dir {
+        if let Some(ck) = checkpoint::load_latest(dir)? {
+            let mut graph = ShardedGraph::partition(&ck.restore_graph(), cfg.engine_shards.max(1));
+            let nshards = graph.num_shards();
+            let mut engine = build_engine(nshards);
+            let mut state = ck.state.clone();
+            let (records, _info) = wal::replay(dir, ck.seq)?;
+            let mut dels_by: Vec<Vec<(NodeId, NodeId)>> = vec![Vec::new(); nshards];
+            let mut adds_by: Vec<Vec<(NodeId, NodeId, Weight)>> = vec![Vec::new(); nshards];
+            let mut seq = ck.seq;
+            let mut replayed = 0u64;
+            for rec in records {
+                let mut dels = rec.dels;
+                apply_sharded_batch(
+                    &mut engine,
+                    &mut graph,
+                    &mut state,
+                    &mut dels,
+                    &rec.adds,
+                    &mut dels_by,
+                    &mut adds_by,
+                )?;
+                seq = rec.seq;
+                replayed += 1;
+            }
+            shared.recovered_batches.fetch_add(replayed, Ordering::SeqCst);
+            let durable = Durable::open(dir, &cfg.durability, seq)?;
+            return Ok((engine, graph, state, Some(durable)));
+        }
+    }
+    let g = seed
+        .take()
+        .ok_or_else(|| anyhow!("engine restart requires a WAL checkpoint to recover from"))?;
+    let graph = ShardedGraph::partition(&g, cfg.engine_shards.max(1));
+    drop(g);
+    let mut engine = build_engine(graph.num_shards());
+    let state = match cfg.algo {
+        Algo::Sssp => AlgoState::Sssp(engine.sssp_static(&graph, cfg.source)),
+        Algo::Pr => {
+            let mut st =
+                PrState::new(graph.num_nodes(), cfg.pr_beta, cfg.pr_delta, cfg.pr_max_iter);
+            engine.pr_static(&graph, &mut st);
+            AlgoState::Pr(st)
+        }
+        Algo::Tc => AlgoState::Tc(engine.tc_static(&graph)),
+    };
+    let durable = match &cfg.durability.wal_dir {
+        Some(dir) => {
+            Checkpoint::capture_parts(0, graph.epoch(), graph.num_nodes(), graph.edges_sorted(), &state)
+                .write(dir)?;
+            Some(Durable::open(dir, &cfg.durability, 0)?)
+        }
+        None => None,
+    };
+    Ok((engine, graph, state, durable))
+}
+
+/// The sharded engine thread body: same supervision contract as
+/// [`supervise_single`] — init (or recover), publish, run the loop under
+/// `catch_unwind`, restart or degrade on a caught crash.
+fn supervise_sharded(
+    g: DynGraph,
+    ingest: Arc<Ingest>,
+    snapshots: Arc<SnapshotCell>,
+    shared: Arc<Shared>,
+    cfg: ServiceConfig,
+    ready_tx: mpsc::Sender<Result<()>>,
+) -> Option<(ShardedGraph, AlgoState, RelayStats)> {
+    let mut seed = Some(g);
+    let mut ready = Some(ready_tx);
+    let mut attempt = 0u32;
+    loop {
+        let (engine, graph, state, mut durable) = match init_sharded(&mut seed, &cfg, &shared) {
+            Ok(parts) => parts,
+            Err(e) => {
+                match ready.take() {
+                    Some(tx) => {
+                        let _ = tx.send(Err(e));
+                    }
+                    None => degrade(&ingest, &shared),
+                }
+                return None;
+            }
+        };
+        if let Some(d) = &durable {
+            snapshots.resume_from(d.seq);
+        }
+        publish_sharded(&snapshots, &graph, &state);
+        if let Some(tx) = ready.take() {
+            let _ = tx.send(Ok(()));
+        }
+        let run = catch_unwind(AssertUnwindSafe(|| {
+            sharded_engine_loop(
+                graph,
+                state,
+                engine,
+                Arc::clone(&ingest),
+                Arc::clone(&snapshots),
+                Arc::clone(&shared),
+                cfg.clone(),
+                &mut durable,
+            )
+        }));
+        match run {
+            Ok(done) => return Some(done),
+            Err(_) => {
+                if !note_crash_and_backoff(&ingest, &shared, &cfg, &mut attempt) {
+                    return None;
+                }
+            }
+        }
     }
 }
 
@@ -1148,6 +1727,7 @@ fn sharded_engine_loop(
     snapshots: Arc<SnapshotCell>,
     shared: Arc<Shared>,
     cfg: ServiceConfig,
+    durable: &mut Option<Durable>,
 ) -> (ShardedGraph, AlgoState, RelayStats) {
     let mut batcher = Batcher::new(cfg.batch_capacity, cfg.batch_deadline, cfg.symmetric);
     let mut dels: Vec<(NodeId, NodeId)> = Vec::new();
@@ -1178,25 +1758,30 @@ fn sharded_engine_loop(
         let queue_wait =
             meta.oldest.map(|o| closed_at.saturating_duration_since(o)).unwrap_or_default();
 
+        shared.inflight.store(meta.raw_len as u64, Ordering::SeqCst);
         batcher.take_into(&mut dels, &mut adds);
-
-        if cfg.algo == Algo::Tc {
-            // TC's decremental delta counting assumes deleted arcs are
-            // live (Fig. 19 runs it *before* updateCSRDel); coalescing
-            // keeps deletes whose insert was cancelled, so drop deletes
-            // of absent arcs before counting — the owner answers.
-            dels.retain(|&(u, v)| g.has_edge(u, v));
+        chaos("seal");
+        // Write-ahead at the seal boundary (the global pre-route batch is
+        // what the WAL records; routing and the TC liveness filter re-run
+        // identically during replay).
+        if let Some(d) = durable.as_mut() {
+            d.append(&dels, &adds);
         }
-        g.route(&dels, &adds, &mut dels_by, &mut adds_by);
         let formed_at = Instant::now();
         if let Some(t) = &trk_engine {
             t.record_between(Stage::Seal, closed_at, formed_at);
         }
 
-        match &mut state {
-            AlgoState::Sssp(st) => engine.sssp_dynamic_batch(&mut g, st, &dels_by, &adds_by),
-            AlgoState::Pr(st) => engine.pr_dynamic_batch(&mut g, st, &dels_by, &adds_by),
-            AlgoState::Tc(st) => engine.tc_dynamic_batch(&mut g, st, &dels_by, &adds_by),
+        if let Err(e) = apply_sharded_batch(
+            &mut engine,
+            &mut g,
+            &mut state,
+            &mut dels,
+            &adds,
+            &mut dels_by,
+            &mut adds_by,
+        ) {
+            panic!("sharded engine failed mid-stream: {e}");
         }
         let computed_at = Instant::now();
         if let Some(t) = &trk_engine {
@@ -1221,6 +1806,9 @@ fn sharded_engine_loop(
             }
         }
         let merge_from = Instant::now();
+        if any_merge {
+            chaos("merge");
+        }
         let merged =
             if any_merge { g.merge_shards_with(engine.fleet(), &merge_flags) } else { 0 };
         let merged_at = Instant::now();
@@ -1247,6 +1835,7 @@ fn sharded_engine_loop(
         }
 
         let publish_from = Instant::now();
+        chaos("publish");
         publish_sharded(&snapshots, &g, &state);
         let published_at = Instant::now();
         if let Some(t) = &trk_engine {
@@ -1304,7 +1893,13 @@ fn sharded_engine_loop(
             }
             s.push_latency(latency);
         }
+        if let Some(d) = durable.as_mut() {
+            d.maybe_checkpoint(|seq| {
+                Checkpoint::capture_parts(seq, g.epoch(), g.num_nodes(), g.edges_sorted(), &state)
+            });
+        }
         ingest.complete(meta.raw_len as u64);
+        shared.inflight.store(0, Ordering::SeqCst);
     }
     let relay = engine.relay_stats();
     (g, state, relay)

@@ -72,6 +72,18 @@ impl SnapshotCell {
         self.epoch.load(Ordering::Acquire)
     }
 
+    /// Recovery epoch continuity: seed the counter at `e` so the next
+    /// publish lands at `e + 1` — a recovered service resumes the epoch
+    /// line where the crashed process left it (its recovered batch
+    /// sequence number is a floor on the epochs the old process ever
+    /// published) instead of restarting at 1. Only effective on a cell
+    /// that has never published; after the first publish the slot parity
+    /// is tied to the epoch and jumping it would re-point readers at the
+    /// stale slot.
+    pub fn resume_from(&self, e: u64) {
+        let _ = self.epoch.compare_exchange(0, e, Ordering::AcqRel, Ordering::Acquire);
+    }
+
     /// Engine side: fill the unpublished slot via `fill`, then flip the
     /// epoch. The slot's buffers are reused across publishes (capacity is
     /// retained), so steady-state publication allocates nothing.

@@ -1,0 +1,488 @@
+//! Segmented write-ahead log for the streaming service.
+//!
+//! Durability rides the batch-seal boundary: when the batcher seals a
+//! coalesced batch, the engine loop appends one WAL record — the split
+//! deletion/addition slices plus a monotonically increasing batch
+//! sequence number — *before* computing on it. After a crash, recovery
+//! loads the latest checkpoint (`stream::checkpoint`) and replays every
+//! WAL record with a higher sequence number through the normal batch
+//! pipeline, so a crash at any batch boundary reconverges bitwise with an
+//! uninterrupted run. Updates accepted into the ingest queues but not yet
+//! sealed are the acknowledged-but-volatile window; the WAL's unit of
+//! durability is the sealed batch.
+//!
+//! On-disk layout (`<dir>/wal-<start_seq>.log`, zero-dep, little-endian):
+//!
+//! ```text
+//! segment := "SPWL" 0x01 record*
+//! record  := u32 payload_len | u64 fnv1a64(payload) | payload
+//! payload := u64 seq | u32 n_dels | u32 n_adds
+//!            | (u32 src, u32 dst)           * n_dels
+//!            | (u32 src, u32 dst, i32 w)    * n_adds
+//! ```
+//!
+//! A crash mid-append leaves a **torn tail**: a record whose length
+//! prefix, payload, or checksum is incomplete. The reader stops at the
+//! first invalid record and physically truncates the segment there —
+//! torn tails are expected damage, never fatal. Fsync policy is a knob
+//! ([`FsyncPolicy`]): `seal-fsync` fsyncs every appended record (a
+//! machine crash loses nothing sealed), `os-buffered` leaves flushing to
+//! the page cache (cheaper; a *process* crash still loses nothing
+//! because the kernel holds the written bytes).
+
+use crate::graph::{NodeId, Weight};
+use crate::util::error::{bail, Context, Result};
+use crate::util::failpoint;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+const SEGMENT_MAGIC: &[u8; 5] = b"SPWL\x01";
+/// Rotate to a fresh segment once the current one exceeds this.
+const DEFAULT_SEGMENT_BYTES: u64 = 8 << 20;
+/// Upper bound on a single record payload (corruption guard: a torn
+/// length prefix must not make the reader attempt a huge allocation).
+const MAX_PAYLOAD: u32 = 1 << 28;
+
+/// When the WAL flushes appended records to stable storage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FsyncPolicy {
+    /// `fsync` after every sealed-batch append (survives machine crash).
+    #[default]
+    SealFsync,
+    /// Write without fsync (survives process crash via the page cache).
+    OsBuffered,
+}
+
+impl std::str::FromStr for FsyncPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "seal-fsync" | "fsync" => Ok(FsyncPolicy::SealFsync),
+            "os-buffered" | "buffered" => Ok(FsyncPolicy::OsBuffered),
+            other => Err(format!("unknown fsync policy {other:?} (seal-fsync|os-buffered)")),
+        }
+    }
+}
+
+impl FsyncPolicy {
+    pub const fn name(self) -> &'static str {
+        match self {
+            FsyncPolicy::SealFsync => "seal-fsync",
+            FsyncPolicy::OsBuffered => "os-buffered",
+        }
+    }
+}
+
+/// One replayed sealed batch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WalRecord {
+    pub seq: u64,
+    pub dels: Vec<(NodeId, NodeId)>,
+    pub adds: Vec<(NodeId, NodeId, Weight)>,
+}
+
+#[inline]
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn segment_path(dir: &Path, start_seq: u64) -> PathBuf {
+    dir.join(format!("wal-{start_seq:020}.log"))
+}
+
+/// Sorted `(start_seq, path)` list of the segments in `dir`.
+fn list_segments(dir: &Path) -> Result<Vec<(u64, PathBuf)>> {
+    let mut segs = Vec::new();
+    let entries = std::fs::read_dir(dir).with_context(|| format!("read WAL dir {dir:?}"))?;
+    for entry in entries {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else { continue };
+        if let Some(seq) = name
+            .strip_prefix("wal-")
+            .and_then(|r| r.strip_suffix(".log"))
+            .and_then(|s| s.parse::<u64>().ok())
+        {
+            segs.push((seq, path));
+        }
+    }
+    segs.sort_unstable_by_key(|&(seq, _)| seq);
+    Ok(segs)
+}
+
+/// Appender half: owns the current tail segment, rotates on size.
+pub struct WalWriter {
+    dir: PathBuf,
+    policy: FsyncPolicy,
+    segment_bytes: u64,
+    file: File,
+    seg_bytes_written: u64,
+    scratch: Vec<u8>,
+}
+
+impl WalWriter {
+    /// Open the WAL in `dir` (created if absent) for appending batches
+    /// starting at `next_seq`. Always begins a fresh segment — recovery
+    /// has already truncated any torn tail, and old segments stay on disk
+    /// until [`prune_below`](Self::prune_below) retires them.
+    pub fn open(dir: &Path, policy: FsyncPolicy, next_seq: u64) -> Result<WalWriter> {
+        std::fs::create_dir_all(dir).with_context(|| format!("create WAL dir {dir:?}"))?;
+        let path = segment_path(dir, next_seq);
+        let mut file = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("open WAL segment {path:?}"))?;
+        file.write_all(SEGMENT_MAGIC)?;
+        if policy == FsyncPolicy::SealFsync {
+            file.sync_data()?;
+        }
+        Ok(WalWriter {
+            dir: dir.to_path_buf(),
+            policy,
+            segment_bytes: DEFAULT_SEGMENT_BYTES,
+            file,
+            seg_bytes_written: SEGMENT_MAGIC.len() as u64,
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Override the rotation threshold (tests use tiny segments).
+    pub fn set_segment_bytes(&mut self, bytes: u64) {
+        self.segment_bytes = bytes.max(64);
+    }
+
+    /// Append one sealed batch. With `FsyncPolicy::SealFsync` the record
+    /// is on stable storage when this returns.
+    pub fn append(
+        &mut self,
+        seq: u64,
+        dels: &[(NodeId, NodeId)],
+        adds: &[(NodeId, NodeId, Weight)],
+    ) -> Result<()> {
+        failpoint::hit("wal_append")?;
+        let buf = &mut self.scratch;
+        buf.clear();
+        buf.extend_from_slice(&seq.to_le_bytes());
+        buf.extend_from_slice(&(dels.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&(adds.len() as u32).to_le_bytes());
+        for &(u, v) in dels {
+            buf.extend_from_slice(&u.to_le_bytes());
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        for &(u, v, w) in adds {
+            buf.extend_from_slice(&u.to_le_bytes());
+            buf.extend_from_slice(&v.to_le_bytes());
+            buf.extend_from_slice(&w.to_le_bytes());
+        }
+        let mut rec = Vec::with_capacity(12 + buf.len());
+        rec.extend_from_slice(&(buf.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&fnv1a64(buf).to_le_bytes());
+        rec.extend_from_slice(buf);
+        self.file.write_all(&rec).context("append WAL record")?;
+        if self.policy == FsyncPolicy::SealFsync {
+            self.file.sync_data().context("fsync WAL segment")?;
+        }
+        self.seg_bytes_written += rec.len() as u64;
+        if self.seg_bytes_written >= self.segment_bytes {
+            self.rotate(seq + 1)?;
+        }
+        Ok(())
+    }
+
+    fn rotate(&mut self, next_seq: u64) -> Result<()> {
+        self.file.sync_data().ok();
+        let path = segment_path(&self.dir, next_seq);
+        let mut file = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&path)
+            .with_context(|| format!("rotate WAL segment {path:?}"))?;
+        file.write_all(SEGMENT_MAGIC)?;
+        if self.policy == FsyncPolicy::SealFsync {
+            file.sync_data()?;
+        }
+        self.file = file;
+        self.seg_bytes_written = SEGMENT_MAGIC.len() as u64;
+        Ok(())
+    }
+
+    /// Delete segments made fully redundant by a checkpoint at `seq`
+    /// (every record in them has sequence ≤ `seq`). A segment is provably
+    /// covered when its *successor* segment starts at or below `seq + 1`.
+    /// Returns the number of segments removed.
+    pub fn prune_below(&self, seq: u64) -> Result<usize> {
+        let segs = list_segments(&self.dir)?;
+        let mut removed = 0;
+        for pair in segs.windows(2) {
+            let (_, ref path) = pair[0];
+            let (next_start, _) = pair[1];
+            if next_start <= seq + 1 {
+                std::fs::remove_file(path)
+                    .with_context(|| format!("prune WAL segment {path:?}"))?;
+                removed += 1;
+            }
+        }
+        Ok(removed)
+    }
+}
+
+/// Everything recovery learned from the log.
+#[derive(Debug, Default)]
+pub struct ReplayInfo {
+    /// Segments scanned.
+    pub segments: usize,
+    /// Bytes physically truncated off a torn tail (0 on a clean log).
+    pub truncated_bytes: u64,
+    /// Trailing segments discarded past a torn record.
+    pub dropped_segments: usize,
+}
+
+/// Replay every record with `seq > from_seq`, in order. Stops at the
+/// first torn/corrupt record, truncates that segment to its last valid
+/// byte, and removes any later segments (nothing past a tear can be
+/// applied without a sequence gap). Missing directory = empty log.
+pub fn replay(dir: &Path, from_seq: u64) -> Result<(Vec<WalRecord>, ReplayInfo)> {
+    let mut info = ReplayInfo::default();
+    if !dir.exists() {
+        return Ok((Vec::new(), info));
+    }
+    let segs = list_segments(dir)?;
+    let mut records = Vec::new();
+    let mut last_seq = from_seq;
+    let mut torn = false;
+    for (_, path) in &segs {
+        if torn {
+            std::fs::remove_file(path)
+                .with_context(|| format!("drop post-tear WAL segment {path:?}"))?;
+            info.dropped_segments += 1;
+            continue;
+        }
+        info.segments += 1;
+        let mut bytes = Vec::new();
+        File::open(path)
+            .and_then(|mut f| f.read_to_end(&mut bytes))
+            .with_context(|| format!("read WAL segment {path:?}"))?;
+        let valid_end = scan_segment(&bytes, &mut last_seq, &mut records);
+        if valid_end < bytes.len() {
+            // Torn or corrupt tail: truncate the file to the last valid
+            // record boundary and stop replaying.
+            info.truncated_bytes += (bytes.len() - valid_end) as u64;
+            let f = OpenOptions::new()
+                .write(true)
+                .open(path)
+                .with_context(|| format!("truncate WAL segment {path:?}"))?;
+            f.set_len(valid_end as u64)?;
+            f.sync_data().ok();
+            torn = true;
+        }
+    }
+    Ok((records, info))
+}
+
+/// Decode records from one segment's bytes, pushing those past
+/// `last_seq` into `out`. Returns the byte offset of the first invalid
+/// record (== `bytes.len()` on a clean segment).
+fn scan_segment(bytes: &[u8], last_seq: &mut u64, out: &mut Vec<WalRecord>) -> usize {
+    if bytes.len() < SEGMENT_MAGIC.len() || &bytes[..SEGMENT_MAGIC.len()] != SEGMENT_MAGIC {
+        return 0;
+    }
+    let mut off = SEGMENT_MAGIC.len();
+    loop {
+        let rec_start = off;
+        if bytes.len() - off < 12 {
+            return rec_start; // torn length/checksum prefix (or clean EOF)
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+        let sum = u64::from_le_bytes(bytes[off + 4..off + 12].try_into().unwrap());
+        off += 12;
+        if len > MAX_PAYLOAD || bytes.len() - off < len as usize {
+            return rec_start; // torn payload
+        }
+        let payload = &bytes[off..off + len as usize];
+        off += len as usize;
+        if fnv1a64(payload) != sum {
+            return rec_start; // bit rot / partial overwrite
+        }
+        match decode_payload(payload) {
+            Some(rec) if rec.seq > *last_seq => {
+                *last_seq = rec.seq;
+                out.push(rec);
+            }
+            // Below/at the checkpoint horizon: already applied, skip.
+            Some(_) => {}
+            None => return rec_start,
+        }
+    }
+}
+
+fn decode_payload(payload: &[u8]) -> Option<WalRecord> {
+    if payload.len() < 16 {
+        return None;
+    }
+    let seq = u64::from_le_bytes(payload[0..8].try_into().unwrap());
+    let n_dels = u32::from_le_bytes(payload[8..12].try_into().unwrap()) as usize;
+    let n_adds = u32::from_le_bytes(payload[12..16].try_into().unwrap()) as usize;
+    let want = 16usize
+        .checked_add(n_dels.checked_mul(8)?)?
+        .checked_add(n_adds.checked_mul(12)?)?;
+    if payload.len() != want {
+        return None;
+    }
+    let mut off = 16;
+    let mut dels = Vec::with_capacity(n_dels);
+    for _ in 0..n_dels {
+        let u = u32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+        let v = u32::from_le_bytes(payload[off + 4..off + 8].try_into().unwrap());
+        off += 8;
+        dels.push((u, v));
+    }
+    let mut adds = Vec::with_capacity(n_adds);
+    for _ in 0..n_adds {
+        let u = u32::from_le_bytes(payload[off..off + 4].try_into().unwrap());
+        let v = u32::from_le_bytes(payload[off + 4..off + 8].try_into().unwrap());
+        let w = i32::from_le_bytes(payload[off + 8..off + 12].try_into().unwrap());
+        off += 12;
+        adds.push((u, v, w));
+    }
+    Some(WalRecord { seq, dels, adds })
+}
+
+/// The last sequence number present in the log (0 if empty) — used by
+/// the kill-9 smoke to compare pre/post-crash progress.
+pub fn last_seq(dir: &Path) -> Result<u64> {
+    let (records, _) = replay(dir, 0)?;
+    Ok(records.last().map(|r| r.seq).unwrap_or(0))
+}
+
+/// Truncate the final segment by `n` bytes — a deterministic "torn tail"
+/// for tests and the chaos harness.
+pub fn tear_tail(dir: &Path, n: u64) -> Result<()> {
+    let segs = list_segments(dir)?;
+    let Some((_, path)) = segs.last() else { bail!("no WAL segments in {dir:?}") };
+    let f = OpenOptions::new().write(true).open(path)?;
+    let len = f.metadata()?.len();
+    f.set_len(len.saturating_sub(n))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("starplat-wal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample(seq: u64) -> WalRecord {
+        WalRecord {
+            seq,
+            dels: vec![(seq as u32, seq as u32 + 1)],
+            adds: vec![(seq as u32 + 2, seq as u32 + 3, -(seq as i32))],
+        }
+    }
+
+    fn append_all(w: &mut WalWriter, recs: &[WalRecord]) {
+        for r in recs {
+            w.append(r.seq, &r.dels, &r.adds).unwrap();
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_records_and_order() {
+        let dir = tmpdir("roundtrip");
+        let recs: Vec<_> = (1..=20).map(sample).collect();
+        let mut w = WalWriter::open(&dir, FsyncPolicy::OsBuffered, 1).unwrap();
+        append_all(&mut w, &recs);
+        drop(w);
+        let (got, info) = replay(&dir, 0).unwrap();
+        assert_eq!(got, recs);
+        assert_eq!(info.truncated_bytes, 0);
+        // Replay from a checkpoint horizon skips the prefix.
+        let (tail, _) = replay(&dir, 15).unwrap();
+        assert_eq!(tail, recs[15..]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rotation_splits_segments_and_prune_respects_horizon() {
+        let dir = tmpdir("rotate");
+        let recs: Vec<_> = (1..=50).map(sample).collect();
+        let mut w = WalWriter::open(&dir, FsyncPolicy::OsBuffered, 1).unwrap();
+        w.set_segment_bytes(64); // force a rotation every record or two
+        append_all(&mut w, &recs);
+        let segs = list_segments(&dir).unwrap();
+        assert!(segs.len() > 3, "expected rotation, got {} segments", segs.len());
+        let (got, _) = replay(&dir, 0).unwrap();
+        assert_eq!(got, recs);
+        // Prune everything covered by a checkpoint at seq 30; replay of
+        // the tail must be unaffected.
+        let removed = w.prune_below(30).unwrap();
+        assert!(removed > 0);
+        let (tail, _) = replay(&dir, 30).unwrap();
+        assert_eq!(tail, recs[30..]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_not_fatal() {
+        let dir = tmpdir("torn");
+        let recs: Vec<_> = (1..=10).map(sample).collect();
+        let mut w = WalWriter::open(&dir, FsyncPolicy::SealFsync, 1).unwrap();
+        append_all(&mut w, &recs);
+        drop(w);
+        tear_tail(&dir, 5).unwrap(); // rip bytes off the last record
+        let (got, info) = replay(&dir, 0).unwrap();
+        assert_eq!(got, recs[..9], "last record lost, prefix intact");
+        assert!(info.truncated_bytes > 0);
+        // After truncation the log is clean again and appendable.
+        let (again, info2) = replay(&dir, 0).unwrap();
+        assert_eq!(again, recs[..9]);
+        assert_eq!(info2.truncated_bytes, 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_checksum_stops_replay_at_the_bad_record() {
+        let dir = tmpdir("corrupt");
+        let recs: Vec<_> = (1..=5).map(sample).collect();
+        let mut w = WalWriter::open(&dir, FsyncPolicy::OsBuffered, 1).unwrap();
+        append_all(&mut w, &recs);
+        drop(w);
+        // Flip a byte in the middle of the last record's payload.
+        let (_, path) = list_segments(&dir).unwrap().pop().unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0xff;
+        std::fs::write(&path, &bytes).unwrap();
+        let (got, info) = replay(&dir, 0).unwrap();
+        assert_eq!(got, recs[..4]);
+        assert!(info.truncated_bytes > 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_dir_is_an_empty_log() {
+        let dir = tmpdir("missing");
+        let (got, info) = replay(&dir, 0).unwrap();
+        assert!(got.is_empty());
+        assert_eq!(info.segments, 0);
+    }
+
+    #[test]
+    fn fsync_policy_parses() {
+        assert_eq!("seal-fsync".parse::<FsyncPolicy>().unwrap(), FsyncPolicy::SealFsync);
+        assert_eq!("os-buffered".parse::<FsyncPolicy>().unwrap(), FsyncPolicy::OsBuffered);
+        assert!("sometimes".parse::<FsyncPolicy>().is_err());
+    }
+}

@@ -8,6 +8,7 @@
 
 pub mod barrier;
 pub mod error;
+pub mod failpoint;
 pub mod propcheck;
 pub mod rng;
 pub mod stats;
