@@ -1,0 +1,59 @@
+/* Dynamic connected components (label propagation to the minimum
+ * vertex id, treating edges as undirected via a symmetric exchange).
+ *
+ * This algorithm ships with NO hand-written Rust kernel: it exists to
+ * prove the DSL → bytecode path end-to-end. `run --program` /
+ * `serve --program` lower this file and execute it on the serial or
+ * cpu engine directly.
+ *
+ * Maintenance strategy: edge additions only ever merge components, so
+ * the incremental pass re-floods from the stale labels (monotone, thus
+ * correct). Any deletion may split a component — labels are not
+ * recoverable incrementally from a min-label flood — so the driver
+ * falls back to a full recompute for batches containing deletions.
+ */
+
+Static staticCC(Graph g, propNode<int> comp, propNode<bool> modified) {
+  forall (v in g.nodes()) {
+    v.comp = v;
+  }
+  fixedPoint until (finished : !modified) {
+    g.attachNodeProperty(modified = False);
+    forall (v in g.nodes()) {
+      forall (nbr in g.neighbors(v)) {
+        <nbr.comp, nbr.modified> = <Min(nbr.comp, v.comp), True>;
+        <v.comp, v.modified> = <Min(v.comp, nbr.comp), True>;
+      }
+    }
+  }
+}
+
+Incremental(Graph g, propNode<int> comp, propNode<bool> modified) {
+  /* same flood, seeded from the surviving labels */
+  fixedPoint until (finished : !modified) {
+    g.attachNodeProperty(modified = False);
+    forall (v in g.nodes()) {
+      forall (nbr in g.neighbors(v)) {
+        <nbr.comp, nbr.modified> = <Min(nbr.comp, v.comp), True>;
+        <v.comp, v.modified> = <Min(v.comp, nbr.comp), True>;
+      }
+    }
+  }
+}
+
+Dynamic DynCC(Graph g, updates<g> updateBatch, propNode<int> comp, propNode<bool> modified, int batchSize) {
+  staticCC(g, comp, modified);
+  Batch(updateBatch : batchSize) {
+    int dels = 0;
+    OnDelete (u in updateBatch.currentBatch(0)) {
+      dels += 1;
+    }
+    g.updateCSRDel(updateBatch);
+    g.updateCSRAdd(updateBatch);
+    if (dels > 0) {
+      staticCC(g, comp, modified);
+    } else {
+      Incremental(g, comp, modified);
+    }
+  }
+}

@@ -964,6 +964,16 @@ impl DynamicEngine for CpuEngine {
         Some(CpuEngine::direction_stats(self))
     }
 
+    fn run_program(
+        &self,
+        prog: &crate::dsl::bytecode::Program,
+        phase: crate::dsl::bytecode::Phase<'_>,
+        g: &mut DynGraph,
+        st: &mut crate::dsl::bytecode::ProgState,
+    ) -> EngineResult<()> {
+        crate::dsl::bytecode::execute(prog, phase, st, g, Some((&self.pool, self.sched)))
+    }
+
     fn sssp_static(&self, g: &DynGraph, source: NodeId) -> EngineResult<SsspState> {
         Ok(CpuEngine::sssp_static(self, g, source))
     }

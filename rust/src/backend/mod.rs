@@ -74,6 +74,7 @@ impl BackendKind {
                 supports_direction: false,
                 supports_ranks: false,
                 reports_comm: false,
+                supports_programs: true,
             },
             BackendKind::Cpu => Capabilities {
                 name: "cpu",
@@ -84,6 +85,7 @@ impl BackendKind {
                 supports_direction: true,
                 supports_ranks: false,
                 reports_comm: false,
+                supports_programs: true,
             },
             BackendKind::Dist => Capabilities {
                 name: "dist",
@@ -94,6 +96,7 @@ impl BackendKind {
                 supports_direction: false,
                 supports_ranks: true,
                 reports_comm: true,
+                supports_programs: false,
             },
             BackendKind::Xla => Capabilities {
                 name: "xla",
@@ -104,6 +107,7 @@ impl BackendKind {
                 supports_direction: false,
                 supports_ranks: false,
                 reports_comm: false,
+                supports_programs: false,
             },
         }
     }
@@ -121,7 +125,9 @@ impl BackendKind {
 /// counts) for a fixed configuration — xla's f32 device math is excluded.
 /// The `supports_*` knob flags drive [`make_engine`]'s rejection of
 /// options the backend would otherwise silently drop; `reports_comm`
-/// marks engines whose [`DynamicEngine::drain_comm_secs`] is non-trivial.
+/// marks engines whose [`DynamicEngine::drain_comm_secs`] is non-trivial;
+/// `supports_programs` marks engines that execute lowered DSL bytecode
+/// via [`DynamicEngine::run_program`] (serial + cpu).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Capabilities {
     pub name: &'static str,
@@ -132,6 +138,7 @@ pub struct Capabilities {
     pub supports_direction: bool,
     pub supports_ranks: bool,
     pub reports_comm: bool,
+    pub supports_programs: bool,
 }
 
 /// Engine-construction knobs threaded from the CLI (and the streaming
@@ -183,6 +190,29 @@ pub trait DynamicEngine {
     /// track a traversal direction). Surfaced in `ServiceStats`.
     fn direction_stats(&self) -> Option<cpu::DirectionStats> {
         None
+    }
+
+    // ------------------------------------------------------- DSL bytecode
+
+    /// Execute one phase of a lowered DSL program (see
+    /// [`crate::dsl::bytecode`]): `Phase::Init` runs the driver's
+    /// pre-`Batch` prefix (the static seed), `Phase::Batch` runs the
+    /// per-batch body over a deletion/addition window. Engines advertise
+    /// support via [`Capabilities::supports_programs`]; the default
+    /// implementation is a typed rejection naming the backend.
+    fn run_program(
+        &self,
+        prog: &crate::dsl::bytecode::Program,
+        phase: crate::dsl::bytecode::Phase<'_>,
+        g: &mut DynGraph,
+        st: &mut crate::dsl::bytecode::ProgState,
+    ) -> Result<()> {
+        let _ = (prog, phase, g, st);
+        bail!(
+            "backend `{}` does not support DSL bytecode programs \
+             (supports_programs = false); use --backend serial or --backend cpu",
+            self.capabilities().name
+        );
     }
 
     // ------------------------------------------------------------ SSSP

@@ -57,6 +57,17 @@ impl DynamicEngine for SerialEngine {
         BackendKind::Serial.capabilities()
     }
 
+    fn run_program(
+        &self,
+        prog: &crate::dsl::bytecode::Program,
+        phase: crate::dsl::bytecode::Phase<'_>,
+        g: &mut DynGraph,
+        st: &mut crate::dsl::bytecode::ProgState,
+    ) -> Result<()> {
+        // `par = None` → single-threaded execution (sequential fold order).
+        crate::dsl::bytecode::execute(prog, phase, st, g, None)
+    }
+
     fn sssp_static(&self, g: &DynGraph, source: NodeId) -> Result<SsspState> {
         Ok(SerialEngine::sssp_static(self, g, source))
     }

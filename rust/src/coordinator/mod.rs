@@ -243,6 +243,66 @@ fn tc_cell(
     Ok(cell)
 }
 
+/// Run one experiment cell for a **compiled DSL program** (`run
+/// --program foo.sp`): the same §6 protocol as [`run_cell`], but the
+/// algorithm is the lowered bytecode instead of a hand-written kernel —
+/// the program's `Init` phase is the static recompute and its batch
+/// segment (updateCSR + OnDelete/OnAdd hooks + propagate) is the dynamic
+/// pipeline. Returns the final dynamic-side [`ProgState`] alongside the
+/// timings so the CLI can print the program's scalar result and tests
+/// can check equivalence against the built-in kernels.
+///
+/// [`ProgState`]: crate::dsl::bytecode::ProgState
+pub fn run_program_cell(
+    backend: BackendKind,
+    g0: &DynGraph,
+    percent: f64,
+    batch_size: usize,
+    seed: u64,
+    opts: EngineOpts,
+    prog: &crate::dsl::bytecode::Program,
+    args: &[(String, crate::dsl::bytecode::ScalarVal)],
+) -> Result<(Cell, crate::dsl::bytecode::ProgState)> {
+    use crate::dsl::bytecode::{Phase, ProgState};
+    let e = make_engine(backend, &opts)?;
+    let stream = UpdateStream::generate_percent(g0, percent, batch_size, 9, seed);
+    let mut cell = empty_cell();
+
+    // static protocol: updates applied up-front, Init recomputes from
+    // scratch on the final graph.
+    let mut gs = g0.clone();
+    stream.apply_all_static(&mut gs);
+    e.prepare_graph(&mut gs);
+    let (r, t_static) = time_it(|| -> Result<()> {
+        let mut st = ProgState::new(prog, gs.num_nodes(), args)?;
+        e.run_program(prog, Phase::Init, &mut gs, &mut st)
+    });
+    r?;
+    cell.static_secs = t_static;
+    cell.static_comm_secs = e.drain_comm_secs();
+
+    // dynamic: Init seeds the property on the original graph (not
+    // counted), then the batch segment processes every update batch.
+    let mut gd = g0.clone();
+    e.prepare_graph(&mut gd);
+    let mut st = ProgState::new(prog, gd.num_nodes(), args)?;
+    e.run_program(prog, Phase::Init, &mut gd, &mut st)?;
+    e.drain_comm_secs(); // seeding solve not counted
+    let mut dels = Vec::new();
+    let mut adds = Vec::new();
+    let (r, t_dyn) = time_it(|| -> Result<()> {
+        for b in stream.batches() {
+            b.split_into(&mut dels, &mut adds);
+            e.run_program(prog, Phase::Batch { dels: &dels, adds: &adds }, &mut gd, &mut st)?;
+        }
+        Ok(())
+    });
+    r?;
+    cell.dynamic_secs = t_dyn;
+    cell.dynamic_comm_secs = e.drain_comm_secs();
+    Ok((cell, st))
+}
+
 // ------------------------------------------------------------ streaming
 
 /// One measured *streaming* cell: N producers pushing a generated update
@@ -330,15 +390,16 @@ impl AnyService {
     /// error instead of a panic — it served reads to the end, but there
     /// is no final graph/state to report.
     fn shutdown(self) -> Result<(crate::stream::ServiceReport, Option<RelayStats>)> {
-        let degraded_err = |d: crate::stream::DegradedReport| {
-            anyhow!(
+        let degraded_err = |e: crate::stream::ShutdownError| match e {
+            crate::stream::ShutdownError::Degraded(d) => anyhow!(
                 "service degraded after {} caught engine crash(es): reads were \
                  served to the end (epoch {}, {} batches applied), but graph \
                  and state died with the engine",
                 d.stats.restarts,
                 d.stats.epoch,
                 d.stats.batches
-            )
+            ),
+            other => anyhow!("{other}"),
         };
         match self {
             AnyService::Single(s) => Ok((s.try_shutdown().map_err(degraded_err)?, None)),

@@ -12,6 +12,20 @@ impl Program {
     }
 }
 
+/// A source position (1-based line and column) carried on statements so
+/// sema/lowering diagnostics can point into the `.sp` file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Span {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl std::fmt::Display for Span {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "line {}:{}", self.line, self.col)
+    }
+}
+
 /// Function kinds (§3.3): `Static`, `Dynamic` (the driver with the Batch
 /// construct), and the special `Incremental`/`Decremental` handlers.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -58,30 +72,53 @@ pub enum Type {
 #[derive(Debug, Clone)]
 pub enum Stmt {
     /// `int x = e;` / `propNode<bool> m;` / `node v = e;`
-    Decl { ty: Type, name: String, init: Option<Expr> },
+    Decl { ty: Type, name: String, init: Option<Expr>, span: Span },
     /// `lhs = e;`, `lhs += e;`, `lhs -= e;`
-    Assign { lhs: LValue, op: AssignOp, rhs: Expr },
+    Assign { lhs: LValue, op: AssignOp, rhs: Expr, span: Span },
     /// `<l1, l2, l3> = <Min(a, b), e2, e3>;` — atomic multi-assign (§2)
-    MinAssign { lhs: Vec<LValue>, min_args: (Expr, Expr), rest: Vec<Expr> },
-    If { cond: Expr, then_branch: Vec<Stmt>, else_branch: Vec<Stmt> },
-    While { cond: Expr, body: Vec<Stmt> },
-    DoWhile { body: Vec<Stmt>, cond: Expr },
+    MinAssign { lhs: Vec<LValue>, min_args: (Expr, Expr), rest: Vec<Expr>, span: Span },
+    If { cond: Expr, then_branch: Vec<Stmt>, else_branch: Vec<Stmt>, span: Span },
+    While { cond: Expr, body: Vec<Stmt>, span: Span },
+    DoWhile { body: Vec<Stmt>, cond: Expr, span: Span },
     /// `forall (v in <iter>) { … }` — parallel aggregate (§2)
-    Forall { var: String, iter: Iter, body: Vec<Stmt> },
+    Forall { var: String, iter: Iter, body: Vec<Stmt>, span: Span },
     /// `for (v in <iter>) { … }` — sequential
-    For { var: String, iter: Iter, body: Vec<Stmt> },
+    For { var: String, iter: Iter, body: Vec<Stmt>, span: Span },
     /// `fixedPoint until (flag: !prop) { … }` (§2)
-    FixedPoint { flag: String, prop: String, body: Vec<Stmt> },
+    FixedPoint { flag: String, prop: String, body: Vec<Stmt>, span: Span },
     /// `Batch(updates:size) { … }` (§3.3.1)
-    Batch { updates: String, size: Expr, body: Vec<Stmt> },
+    Batch { updates: String, size: Expr, body: Vec<Stmt>, span: Span },
     /// `OnAdd (u in updates.currentBatch()) { … }` (§3.3.2)
-    OnAdd { var: String, updates: String, body: Vec<Stmt> },
+    OnAdd { var: String, updates: String, body: Vec<Stmt>, span: Span },
     /// `OnDelete (u in updates.currentBatch()) { … }`
-    OnDelete { var: String, updates: String, body: Vec<Stmt> },
+    OnDelete { var: String, updates: String, body: Vec<Stmt>, span: Span },
     Return(Expr),
     /// expression statement (method calls: `g.updateCSRDel(b);`,
     /// function calls: `staticSSSP(g, …);`)
     Expr(Expr),
+}
+
+impl Stmt {
+    /// The statement's source position. `Return`/`Expr` statements carry
+    /// no span of their own (they are tuple variants kept stable for
+    /// pattern-matching callers) and report the default position.
+    pub fn span(&self) -> Span {
+        match self {
+            Stmt::Decl { span, .. }
+            | Stmt::Assign { span, .. }
+            | Stmt::MinAssign { span, .. }
+            | Stmt::If { span, .. }
+            | Stmt::While { span, .. }
+            | Stmt::DoWhile { span, .. }
+            | Stmt::Forall { span, .. }
+            | Stmt::For { span, .. }
+            | Stmt::FixedPoint { span, .. }
+            | Stmt::Batch { span, .. }
+            | Stmt::OnAdd { span, .. }
+            | Stmt::OnDelete { span, .. } => *span,
+            Stmt::Return(_) | Stmt::Expr(_) => Span::default(),
+        }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -1,0 +1,1292 @@
+//! Portable graph bytecode — the register IR every backend executes.
+//!
+//! `lower` compiles a parsed+analyzed `.sp` program into a [`Program`]:
+//! two straight-line instruction segments (`init`, ran once to seed the
+//! algorithm state, and `on_batch`, ran per update batch) over
+//!
+//! * **scalar registers** (`regs`, typed Int/Float/Bool) for the driver
+//!   control flow — loop counters, convergence deltas, batch counts;
+//! * **node properties** (`props`, atomic arrays) for the per-vertex
+//!   state — distances, ranks, component labels, frontier flags;
+//! * a handful of **coarse graph primitives** that map 1:1 onto the
+//!   parallel building blocks the engines already have: [`Instr::Par`]
+//!   (a `forall` sweep with slot-deterministic reductions),
+//!   [`Instr::PropagateFlags`], [`Instr::RepairParents`] (the
+//!   deterministic argmin parent repair shared with the hand-written
+//!   cpu/dist kernels), `ApplyDeletions`/`ApplyAdditions` (diff-CSR
+//!   morphs), and the `UpdCount`/`UpdGet` batch-delta hooks behind
+//!   `OnAdd`/`OnDelete`.
+//!
+//! Design rules that make N algorithms × all backends tractable:
+//!
+//! * **One executor.** [`execute`] is shared by the serial and cpu
+//!   engines — the only difference is whether a thread pool is passed.
+//!   There is zero per-backend, per-algorithm Rust.
+//! * **Determinism.** Parallel reductions write per-item slots indexed
+//!   by domain position and are folded sequentially in index order, so
+//!   serial and cpu runs are bitwise identical (ints, bools, and the
+//!   f64 folds alike). `Min` multi-assignments use the same CAS-min the
+//!   hand-written kernels use; racy companion writes (parents) are made
+//!   deterministic by the trailing `RepairParents` the lowerer inserts.
+//! * **Verification before execution.** [`verify`] checks register and
+//!   property indices, jump targets, and type agreement up front, so
+//!   the hot loop can trust the encoding (the ironplc stack-bytecode
+//!   ADR's portability/determinism/inspectability argument).
+//!
+//! Batching is **external**: the `Batch(...)` construct's chunking is
+//! done by the caller (coordinator batcher or service sealer), and each
+//! sealed batch is one `execute(.., Phase::Batch{..})` call.
+
+use crate::dsl::ast::BinOp;
+use crate::graph::{DynGraph, NodeId, Weight};
+use crate::util::error::{bail, Result};
+use crate::util::threadpool::{Sched, ThreadPool};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub type RegId = usize;
+pub type PropId = usize;
+
+/// Scalar types carried by registers, locals and properties.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ty {
+    Int,
+    Float,
+    Bool,
+}
+
+/// A scalar value (registers, Par-body locals, program results).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScalarVal {
+    I(i64),
+    F(f64),
+    B(bool),
+}
+
+impl ScalarVal {
+    pub fn zero(ty: Ty) -> ScalarVal {
+        match ty {
+            Ty::Int => ScalarVal::I(0),
+            Ty::Float => ScalarVal::F(0.0),
+            Ty::Bool => ScalarVal::B(false),
+        }
+    }
+
+    pub fn ty(&self) -> Ty {
+        match self {
+            ScalarVal::I(_) => Ty::Int,
+            ScalarVal::F(_) => Ty::Float,
+            ScalarVal::B(_) => Ty::Bool,
+        }
+    }
+
+    pub fn as_i(&self) -> Result<i64> {
+        match self {
+            ScalarVal::I(v) => Ok(*v),
+            ScalarVal::B(b) => Ok(*b as i64),
+            ScalarVal::F(v) => bail!("expected int, got float {v}"),
+        }
+    }
+
+    pub fn as_f(&self) -> Result<f64> {
+        match self {
+            ScalarVal::F(v) => Ok(*v),
+            ScalarVal::I(v) => Ok(*v as f64),
+            ScalarVal::B(b) => bail!("expected float, got bool {b}"),
+        }
+    }
+
+    pub fn as_b(&self) -> Result<bool> {
+        match self {
+            ScalarVal::B(v) => Ok(*v),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+}
+
+/// A declared node property: name (for snapshots/tests) + element type.
+#[derive(Debug, Clone)]
+pub struct PropDecl {
+    pub name: String,
+    pub ty: Ty,
+}
+
+/// Which half of the current update batch an instruction addresses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateSel {
+    Dels,
+    Adds,
+}
+
+/// Top-level instructions. Straight-line with explicit jumps; the only
+/// nesting is [`Instr::Par`], whose body is the tree-structured per-item
+/// language below (no jumps inside a parallel region).
+#[derive(Debug, Clone)]
+pub enum Instr {
+    ConstI { dst: RegId, v: i64 },
+    ConstF { dst: RegId, v: f64 },
+    ConstB { dst: RegId, v: bool },
+    Mov { dst: RegId, src: RegId },
+    /// int → float register promotion.
+    CastF { dst: RegId, src: RegId },
+    Bin { dst: RegId, op: BinOp, a: RegId, b: RegId },
+    Not { dst: RegId, src: RegId },
+    Neg { dst: RegId, src: RegId },
+    NumNodes { dst: RegId },
+    NumEdges { dst: RegId },
+    LoadProp { dst: RegId, prop: PropId, idx: RegId },
+    StoreProp { prop: PropId, idx: RegId, val: RegId },
+    /// `attachNodeProperty(p = v)` — refill the whole array.
+    Fill { prop: PropId, val: RegId },
+    /// whole-property copy (`modified = modified_nxt`).
+    CopyProp { dst: PropId, src: PropId },
+    /// fixed-point termination probe: any flag set?
+    AnyTrue { dst: RegId, prop: PropId },
+    /// `propagateNodeFlags(p)` — close flags over out-neighborhoods.
+    PropagateFlags { prop: PropId },
+    /// `updateCSRDel` — apply the batch's deletions to the graph.
+    ApplyDeletions,
+    /// `updateCSRAdd` — apply the batch's additions to the graph.
+    ApplyAdditions,
+    /// Deterministic argmin parent repair, bitwise-identical to the
+    /// hand-written cpu kernel's: `parent[v] = smallest in-neighbor u
+    /// with dist[u] + w(u,v) == dist[v]` (`w = 1` when `unit_weight`),
+    /// `-1` for sources/unreachable. Inserted by the lowerer at segment
+    /// tails wherever a `Min` assignment carries a parent companion.
+    RepairParents { dist: PropId, parent: PropId, unit_weight: bool },
+    /// number of updates in the selected half of the current batch.
+    UpdCount { dst: RegId, sel: UpdateSel },
+    /// load update `idx` of the selected half into (src, dst, weight).
+    UpdGet { sel: UpdateSel, idx: RegId, src: RegId, dst: RegId, weight: RegId },
+    Jump { target: usize },
+    JumpIf { cond: RegId, target: usize },
+    JumpIfNot { cond: RegId, target: usize },
+    Par(ParOp),
+}
+
+/// Iteration domain of a parallel region.
+#[derive(Debug, Clone)]
+pub enum Domain {
+    /// all vertices; the item *is* the vertex id.
+    Nodes,
+    /// out-neighbors of the vertex held in `of`.
+    OutNbrs { of: RegId },
+}
+
+/// How a scalar register is reduced across a parallel region. Every
+/// item owns a private slot (indexed by domain position); slots are
+/// folded into the register sequentially in index order after the
+/// sweep, so the reduction is schedule-independent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccumKind {
+    AddI,
+    AddF,
+    Or,
+}
+
+#[derive(Debug, Clone)]
+pub struct AccumDef {
+    pub reg: RegId,
+    pub kind: AccumKind,
+}
+
+/// A `forall` sweep: per-item statements over a domain, with typed
+/// locals and slot-deterministic reductions.
+#[derive(Debug, Clone)]
+pub struct ParOp {
+    pub domain: Domain,
+    pub locals: Vec<Ty>,
+    pub body: Vec<VStmt>,
+    pub accums: Vec<AccumDef>,
+}
+
+/// Per-item expressions (pure; registers are a read-only snapshot).
+#[derive(Debug, Clone)]
+pub enum VExpr {
+    ConstI(i64),
+    ConstF(f64),
+    ConstB(bool),
+    /// the current item (vertex id) as Int.
+    Subject,
+    Reg(RegId),
+    Local(usize),
+    LoadProp(PropId, Box<VExpr>),
+    OutDegree(Box<VExpr>),
+    IsEdge(Box<VExpr>, Box<VExpr>),
+    /// symmetric membership test against a batch half.
+    Contains(UpdateSel, Box<VExpr>, Box<VExpr>),
+    Bin(BinOp, Box<VExpr>, Box<VExpr>),
+    Not(Box<VExpr>),
+    Neg(Box<VExpr>),
+}
+
+/// Per-item statements.
+#[derive(Debug, Clone)]
+pub enum VStmt {
+    SetLocal(usize, VExpr),
+    StoreProp(PropId, VExpr, VExpr),
+    /// `<p[i], c1[j1], …> = <Min(p[i], val), v1, …>` — CAS-min on an Int
+    /// property; companions are stored only when the CAS lowered the
+    /// value (the §5.1 atomic multi-assignment).
+    MinAssign { prop: PropId, idx: VExpr, val: VExpr, comps: Vec<(PropId, VExpr, VExpr)> },
+    If { cond: VExpr, then: Vec<VStmt>, els: Vec<VStmt> },
+    /// sequential loop over out-neighbors; binds the neighbor id and
+    /// (optionally) the edge weight into locals.
+    ForOut { of: VExpr, nbr: usize, w: Option<usize>, body: Vec<VStmt> },
+    /// sequential loop over in-neighbors (`g.nodes_to(v)`).
+    ForIn { of: VExpr, nbr: usize, body: Vec<VStmt> },
+    /// fold `val` into this item's slot of accumulator `acc`.
+    Accum { acc: usize, val: VExpr },
+}
+
+/// A compiled program: property/register declarations plus the two
+/// instruction segments. `params` names the scalar registers bound from
+/// CLI/driver arguments at state creation; `result` is the register the
+/// driver's `return` lowered into (re-evaluated at every segment tail).
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub props: Vec<PropDecl>,
+    pub regs: Vec<Ty>,
+    pub params: Vec<(String, RegId)>,
+    pub init: Vec<Instr>,
+    pub on_batch: Vec<Instr>,
+    pub result: Option<RegId>,
+}
+
+impl Program {
+    pub fn prop_id(&self, name: &str) -> Option<PropId> {
+        self.props.iter().position(|p| p.name == name)
+    }
+}
+
+/// Property storage: atomic arrays so parallel regions can write
+/// without locks (floats are stored as bit patterns).
+#[derive(Debug)]
+pub enum PropData {
+    I(Vec<AtomicI64>),
+    F(Vec<AtomicU64>),
+    B(Vec<AtomicBool>),
+}
+
+impl Clone for PropData {
+    fn clone(&self) -> Self {
+        match self {
+            PropData::I(v) => {
+                PropData::I(v.iter().map(|x| AtomicI64::new(x.load(Ordering::Relaxed))).collect())
+            }
+            PropData::F(v) => {
+                PropData::F(v.iter().map(|x| AtomicU64::new(x.load(Ordering::Relaxed))).collect())
+            }
+            PropData::B(v) => {
+                PropData::B(v.iter().map(|x| AtomicBool::new(x.load(Ordering::Relaxed))).collect())
+            }
+        }
+    }
+}
+
+impl PropData {
+    fn len(&self) -> usize {
+        match self {
+            PropData::I(v) => v.len(),
+            PropData::F(v) => v.len(),
+            PropData::B(v) => v.len(),
+        }
+    }
+}
+
+/// Mutable program state: one array per property, one value per
+/// register. Created once (serve seed / run init) and threaded through
+/// every batch.
+#[derive(Debug, Clone)]
+pub struct ProgState {
+    pub props: Vec<PropData>,
+    pub regs: Vec<ScalarVal>,
+}
+
+impl ProgState {
+    /// Allocate state for `prog` over an `n`-vertex graph, binding the
+    /// program's scalar parameters by name from `args` (ints promote to
+    /// float parameters; extra args are ignored).
+    pub fn new(prog: &Program, n: usize, args: &[(String, ScalarVal)]) -> Result<ProgState> {
+        let props = prog
+            .props
+            .iter()
+            .map(|p| match p.ty {
+                Ty::Int => PropData::I((0..n).map(|_| AtomicI64::new(0)).collect()),
+                Ty::Float => PropData::F((0..n).map(|_| AtomicU64::new(0)).collect()),
+                Ty::Bool => PropData::B((0..n).map(|_| AtomicBool::new(false)).collect()),
+            })
+            .collect();
+        let mut regs: Vec<ScalarVal> = prog.regs.iter().map(|t| ScalarVal::zero(*t)).collect();
+        for (name, reg) in &prog.params {
+            let Some((_, v)) = args.iter().find(|(a, _)| a == name) else {
+                bail!("program parameter {name:?} not bound (pass it via the driver)");
+            };
+            regs[*reg] = match (prog.regs[*reg], v) {
+                (Ty::Int, ScalarVal::I(x)) => ScalarVal::I(*x),
+                (Ty::Float, ScalarVal::F(x)) => ScalarVal::F(*x),
+                (Ty::Float, ScalarVal::I(x)) => ScalarVal::F(*x as f64),
+                (Ty::Bool, ScalarVal::B(x)) => ScalarVal::B(*x),
+                (want, got) => bail!("program parameter {name:?}: expected {want:?}, got {got:?}"),
+            };
+        }
+        Ok(ProgState { props, regs })
+    }
+
+    /// Snapshot an Int property by name (tests, snapshots, reports).
+    pub fn prop_i64(&self, prog: &Program, name: &str) -> Option<Vec<i64>> {
+        let id = prog.prop_id(name)?;
+        match &self.props[id] {
+            PropData::I(v) => Some(v.iter().map(|x| x.load(Ordering::Relaxed)).collect()),
+            _ => None,
+        }
+    }
+
+    /// Snapshot a Float property by name.
+    pub fn prop_f64(&self, prog: &Program, name: &str) -> Option<Vec<f64>> {
+        let id = prog.prop_id(name)?;
+        match &self.props[id] {
+            PropData::F(v) => {
+                Some(v.iter().map(|x| f64::from_bits(x.load(Ordering::Relaxed))).collect())
+            }
+            _ => None,
+        }
+    }
+
+    /// The driver's `return` value, if it declared one.
+    pub fn result(&self, prog: &Program) -> Option<ScalarVal> {
+        prog.result.map(|r| self.regs[r])
+    }
+}
+
+/// Which segment to execute and the update window it sees.
+#[derive(Debug, Clone, Copy)]
+pub enum Phase<'a> {
+    Init,
+    Batch { dels: &'a [(NodeId, NodeId)], adds: &'a [(NodeId, NodeId, Weight)] },
+}
+
+// ---------------------------------------------------------------------------
+// verifier
+// ---------------------------------------------------------------------------
+
+/// Static checks so [`execute`] can trust the encoding: register /
+/// property / jump-target ranges and top-level type agreement. Runs
+/// once per compile (and in tests against hand-built programs).
+pub fn verify(prog: &Program) -> Result<()> {
+    for (seg_name, code) in [("init", &prog.init), ("on_batch", &prog.on_batch)] {
+        verify_segment(prog, seg_name, code)?;
+    }
+    if let Some(r) = prog.result {
+        if r >= prog.regs.len() {
+            bail!("verify: result register r{r} out of range");
+        }
+    }
+    for (name, r) in &prog.params {
+        if *r >= prog.regs.len() {
+            bail!("verify: parameter {name:?} register r{r} out of range");
+        }
+    }
+    Ok(())
+}
+
+fn verify_segment(prog: &Program, seg: &str, code: &[Instr]) -> Result<()> {
+    let nregs = prog.regs.len();
+    let reg = |r: RegId, want: Option<Ty>, pc: usize| -> Result<Ty> {
+        if r >= nregs {
+            bail!("verify: {seg}@{pc}: register r{r} out of range ({nregs} registers)");
+        }
+        let ty = prog.regs[r];
+        if let Some(w) = want {
+            if ty != w {
+                bail!("verify: {seg}@{pc}: register r{r} is {ty:?}, expected {w:?}");
+            }
+        }
+        Ok(ty)
+    };
+    let prop = |p: PropId, want: Option<Ty>, pc: usize| -> Result<Ty> {
+        let Some(decl) = prog.props.get(p) else {
+            bail!("verify: {seg}@{pc}: property p{p} out of range ({} props)", prog.props.len());
+        };
+        if let Some(w) = want {
+            if decl.ty != w {
+                bail!(
+                    "verify: {seg}@{pc}: property {:?} is {:?}, expected {w:?}",
+                    decl.name,
+                    decl.ty
+                );
+            }
+        }
+        Ok(decl.ty)
+    };
+    let target = |t: usize, pc: usize| -> Result<()> {
+        if t > code.len() {
+            bail!("verify: {seg}@{pc}: jump target {t} out of range (len {})", code.len());
+        }
+        Ok(())
+    };
+    for (pc, ins) in code.iter().enumerate() {
+        match ins {
+            Instr::ConstI { dst, .. } => {
+                reg(*dst, Some(Ty::Int), pc)?;
+            }
+            Instr::ConstF { dst, .. } => {
+                reg(*dst, Some(Ty::Float), pc)?;
+            }
+            Instr::ConstB { dst, .. } => {
+                reg(*dst, Some(Ty::Bool), pc)?;
+            }
+            Instr::Mov { dst, src } => {
+                let t = reg(*src, None, pc)?;
+                reg(*dst, Some(t), pc)?;
+            }
+            Instr::CastF { dst, src } => {
+                reg(*src, Some(Ty::Int), pc)?;
+                reg(*dst, Some(Ty::Float), pc)?;
+            }
+            Instr::Bin { dst, op, a, b } => {
+                let ta = reg(*a, None, pc)?;
+                reg(*b, Some(ta), pc)?;
+                let want = match bin_result_ty(*op, ta) {
+                    Some(t) => t,
+                    None => bail!("verify: {seg}@{pc}: operator {op:?} not defined on {ta:?}"),
+                };
+                reg(*dst, Some(want), pc)?;
+            }
+            Instr::Not { dst, src } => {
+                reg(*src, Some(Ty::Bool), pc)?;
+                reg(*dst, Some(Ty::Bool), pc)?;
+            }
+            Instr::Neg { dst, src } => {
+                let t = reg(*src, None, pc)?;
+                if t == Ty::Bool {
+                    bail!("verify: {seg}@{pc}: negation of a bool register");
+                }
+                reg(*dst, Some(t), pc)?;
+            }
+            Instr::NumNodes { dst } | Instr::NumEdges { dst } => {
+                reg(*dst, Some(Ty::Int), pc)?;
+            }
+            Instr::LoadProp { dst, prop: p, idx } => {
+                reg(*idx, Some(Ty::Int), pc)?;
+                let t = prop(*p, None, pc)?;
+                reg(*dst, Some(t), pc)?;
+            }
+            Instr::StoreProp { prop: p, idx, val } => {
+                reg(*idx, Some(Ty::Int), pc)?;
+                let t = prop(*p, None, pc)?;
+                reg(*val, Some(t), pc)?;
+            }
+            Instr::Fill { prop: p, val } => {
+                let t = prop(*p, None, pc)?;
+                reg(*val, Some(t), pc)?;
+            }
+            Instr::CopyProp { dst, src } => {
+                let t = prop(*src, None, pc)?;
+                prop(*dst, Some(t), pc)?;
+            }
+            Instr::AnyTrue { dst, prop: p } => {
+                prop(*p, Some(Ty::Bool), pc)?;
+                reg(*dst, Some(Ty::Bool), pc)?;
+            }
+            Instr::PropagateFlags { prop: p } => {
+                prop(*p, Some(Ty::Bool), pc)?;
+            }
+            Instr::ApplyDeletions | Instr::ApplyAdditions => {}
+            Instr::RepairParents { dist, parent, .. } => {
+                prop(*dist, Some(Ty::Int), pc)?;
+                prop(*parent, Some(Ty::Int), pc)?;
+            }
+            Instr::UpdCount { dst, .. } => {
+                reg(*dst, Some(Ty::Int), pc)?;
+            }
+            Instr::UpdGet { idx, src, dst, weight, .. } => {
+                reg(*idx, Some(Ty::Int), pc)?;
+                reg(*src, Some(Ty::Int), pc)?;
+                reg(*dst, Some(Ty::Int), pc)?;
+                reg(*weight, Some(Ty::Int), pc)?;
+            }
+            Instr::Jump { target: t } => target(*t, pc)?,
+            Instr::JumpIf { cond, target: t } | Instr::JumpIfNot { cond, target: t } => {
+                reg(*cond, Some(Ty::Bool), pc)?;
+                target(*t, pc)?;
+            }
+            Instr::Par(op) => verify_par(prog, seg, pc, op)?,
+        }
+    }
+    Ok(())
+}
+
+pub(crate) fn bin_result_ty(op: BinOp, operand: Ty) -> Option<Ty> {
+    use BinOp::*;
+    match op {
+        Add | Sub | Mul | Div | Mod => (operand != Ty::Bool).then_some(operand),
+        Lt | Gt | Le | Ge => (operand != Ty::Bool).then_some(Ty::Bool),
+        Eq | Ne => Some(Ty::Bool),
+        And | Or => (operand == Ty::Bool).then_some(Ty::Bool),
+    }
+}
+
+fn verify_par(prog: &Program, seg: &str, pc: usize, op: &ParOp) -> Result<()> {
+    if let Domain::OutNbrs { of } = op.domain {
+        if of >= prog.regs.len() || prog.regs[of] != Ty::Int {
+            bail!("verify: {seg}@{pc}: Par domain register r{of} must be an Int register");
+        }
+    }
+    for a in &op.accums {
+        if a.reg >= prog.regs.len() {
+            bail!("verify: {seg}@{pc}: accumulator register r{} out of range", a.reg);
+        }
+        let want = match a.kind {
+            AccumKind::AddI => Ty::Int,
+            AccumKind::AddF => Ty::Float,
+            AccumKind::Or => Ty::Bool,
+        };
+        if prog.regs[a.reg] != want {
+            bail!(
+                "verify: {seg}@{pc}: accumulator r{} is {:?}, but {:?} reduces {want:?}",
+                a.reg,
+                prog.regs[a.reg],
+                a.kind
+            );
+        }
+    }
+    verify_vstmts(prog, seg, pc, op, &op.body)
+}
+
+fn verify_vstmts(prog: &Program, seg: &str, pc: usize, op: &ParOp, body: &[VStmt]) -> Result<()> {
+    for s in body {
+        match s {
+            VStmt::SetLocal(l, e) => {
+                if *l >= op.locals.len() {
+                    bail!("verify: {seg}@{pc}: local l{l} out of range");
+                }
+                verify_vexpr(prog, seg, pc, op, e)?;
+            }
+            VStmt::StoreProp(p, idx, val) => {
+                if *p >= prog.props.len() {
+                    bail!("verify: {seg}@{pc}: property p{p} out of range");
+                }
+                verify_vexpr(prog, seg, pc, op, idx)?;
+                verify_vexpr(prog, seg, pc, op, val)?;
+            }
+            VStmt::MinAssign { prop, idx, val, comps } => {
+                match prog.props.get(*prop) {
+                    Some(d) if d.ty == Ty::Int => {}
+                    Some(d) => bail!(
+                        "verify: {seg}@{pc}: Min target {:?} must be an Int property, is {:?}",
+                        d.name,
+                        d.ty
+                    ),
+                    None => bail!("verify: {seg}@{pc}: property p{prop} out of range"),
+                }
+                verify_vexpr(prog, seg, pc, op, idx)?;
+                verify_vexpr(prog, seg, pc, op, val)?;
+                for (p, i, v) in comps {
+                    if *p >= prog.props.len() {
+                        bail!("verify: {seg}@{pc}: companion property p{p} out of range");
+                    }
+                    verify_vexpr(prog, seg, pc, op, i)?;
+                    verify_vexpr(prog, seg, pc, op, v)?;
+                }
+            }
+            VStmt::If { cond, then, els } => {
+                verify_vexpr(prog, seg, pc, op, cond)?;
+                verify_vstmts(prog, seg, pc, op, then)?;
+                verify_vstmts(prog, seg, pc, op, els)?;
+            }
+            VStmt::ForOut { of, nbr, w, body } => {
+                verify_vexpr(prog, seg, pc, op, of)?;
+                if *nbr >= op.locals.len() || w.map(|w| w >= op.locals.len()).unwrap_or(false) {
+                    bail!("verify: {seg}@{pc}: ForOut local binding out of range");
+                }
+                verify_vstmts(prog, seg, pc, op, body)?;
+            }
+            VStmt::ForIn { of, nbr, body } => {
+                verify_vexpr(prog, seg, pc, op, of)?;
+                if *nbr >= op.locals.len() {
+                    bail!("verify: {seg}@{pc}: ForIn local binding out of range");
+                }
+                verify_vstmts(prog, seg, pc, op, body)?;
+            }
+            VStmt::Accum { acc, val } => {
+                if *acc >= op.accums.len() {
+                    bail!("verify: {seg}@{pc}: accumulator #{acc} out of range");
+                }
+                verify_vexpr(prog, seg, pc, op, val)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn verify_vexpr(prog: &Program, seg: &str, pc: usize, op: &ParOp, e: &VExpr) -> Result<()> {
+    match e {
+        VExpr::ConstI(_) | VExpr::ConstF(_) | VExpr::ConstB(_) | VExpr::Subject => Ok(()),
+        VExpr::Reg(r) => {
+            if *r >= prog.regs.len() {
+                bail!("verify: {seg}@{pc}: register r{r} out of range in Par body");
+            }
+            Ok(())
+        }
+        VExpr::Local(l) => {
+            if *l >= op.locals.len() {
+                bail!("verify: {seg}@{pc}: local l{l} out of range in Par body");
+            }
+            Ok(())
+        }
+        VExpr::LoadProp(p, idx) => {
+            if *p >= prog.props.len() {
+                bail!("verify: {seg}@{pc}: property p{p} out of range in Par body");
+            }
+            verify_vexpr(prog, seg, pc, op, idx)
+        }
+        VExpr::OutDegree(x) | VExpr::Not(x) | VExpr::Neg(x) => verify_vexpr(prog, seg, pc, op, x),
+        VExpr::IsEdge(a, b) | VExpr::Contains(_, a, b) | VExpr::Bin(_, a, b) => {
+            verify_vexpr(prog, seg, pc, op, a)?;
+            verify_vexpr(prog, seg, pc, op, b)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// executor
+// ---------------------------------------------------------------------------
+
+/// Execute one segment of `prog` against `g`/`st`. `par` selects the
+/// engine flavor: `None` runs items sequentially (serial backend),
+/// `Some((pool, sched))` runs parallel regions on the pool (cpu
+/// backend). Both produce bitwise-identical state (see module docs).
+pub fn execute(
+    prog: &Program,
+    phase: Phase<'_>,
+    st: &mut ProgState,
+    g: &mut DynGraph,
+    par: Option<(&ThreadPool, Sched)>,
+) -> Result<()> {
+    let (code, dels, adds): (&[Instr], &[(NodeId, NodeId)], &[(NodeId, NodeId, Weight)]) =
+        match phase {
+            Phase::Init => (&prog.init, &[], &[]),
+            Phase::Batch { dels, adds } => (&prog.on_batch, dels, adds),
+        };
+    if st.regs.len() != prog.regs.len() || st.props.len() != prog.props.len() {
+        bail!("program state does not match program shape");
+    }
+    for p in &st.props {
+        if p.len() != g.num_nodes() {
+            bail!("program state sized for {} nodes, graph has {}", p.len(), g.num_nodes());
+        }
+    }
+    // Runaway guard: every backward jump burns fuel. Generous bound —
+    // interp's own guard is n*8+256 sweeps per fixed point.
+    let mut fuel: u64 =
+        64 * (g.num_nodes() as u64 + dels.len() as u64 + adds.len() as u64) + (1 << 20);
+    let mut pc = 0usize;
+    while pc < code.len() {
+        let mut next = pc + 1;
+        match &code[pc] {
+            Instr::ConstI { dst, v } => st.regs[*dst] = ScalarVal::I(*v),
+            Instr::ConstF { dst, v } => st.regs[*dst] = ScalarVal::F(*v),
+            Instr::ConstB { dst, v } => st.regs[*dst] = ScalarVal::B(*v),
+            Instr::Mov { dst, src } => st.regs[*dst] = st.regs[*src],
+            Instr::CastF { dst, src } => st.regs[*dst] = ScalarVal::F(st.regs[*src].as_i()? as f64),
+            Instr::Bin { dst, op, a, b } => {
+                st.regs[*dst] = scalar_binop(*op, st.regs[*a], st.regs[*b])?;
+            }
+            Instr::Not { dst, src } => st.regs[*dst] = ScalarVal::B(!st.regs[*src].as_b()?),
+            Instr::Neg { dst, src } => {
+                st.regs[*dst] = match st.regs[*src] {
+                    ScalarVal::I(v) => ScalarVal::I(-v),
+                    ScalarVal::F(v) => ScalarVal::F(-v),
+                    ScalarVal::B(_) => bail!("negation of a bool"),
+                };
+            }
+            Instr::NumNodes { dst } => st.regs[*dst] = ScalarVal::I(g.num_nodes() as i64),
+            Instr::NumEdges { dst } => st.regs[*dst] = ScalarVal::I(g.num_edges() as i64),
+            Instr::LoadProp { dst, prop, idx } => {
+                let i = prop_index(st.regs[*idx].as_i()?, st.props[*prop].len())?;
+                st.regs[*dst] = prop_get(&st.props[*prop], i);
+            }
+            Instr::StoreProp { prop, idx, val } => {
+                let i = prop_index(st.regs[*idx].as_i()?, st.props[*prop].len())?;
+                prop_set(&st.props[*prop], i, st.regs[*val])?;
+            }
+            Instr::Fill { prop, val } => {
+                let v = st.regs[*val];
+                let arr = &st.props[*prop];
+                for i in 0..arr.len() {
+                    prop_set(arr, i, v)?;
+                }
+            }
+            Instr::CopyProp { dst, src } => {
+                if *dst != *src {
+                    let n = st.props[*src].len();
+                    for i in 0..n {
+                        let v = prop_get(&st.props[*src], i);
+                        prop_set(&st.props[*dst], i, v)?;
+                    }
+                }
+            }
+            Instr::AnyTrue { dst, prop } => {
+                let any = match &st.props[*prop] {
+                    PropData::B(v) => v.iter().any(|b| b.load(Ordering::Relaxed)),
+                    _ => bail!("AnyTrue on a non-bool property"),
+                };
+                st.regs[*dst] = ScalarVal::B(any);
+            }
+            Instr::PropagateFlags { prop } => {
+                let PropData::B(arr) = &st.props[*prop] else {
+                    bail!("propagateNodeFlags on a non-bool property");
+                };
+                let mut flags: Vec<bool> = arr.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+                crate::algorithms::pagerank::propagate_node_flags(g, &mut flags);
+                for (cell, f) in arr.iter().zip(flags) {
+                    cell.store(f, Ordering::Relaxed);
+                }
+            }
+            Instr::ApplyDeletions => {
+                if matches!(phase, Phase::Init) {
+                    bail!("updateCSRDel outside a Batch phase");
+                }
+                g.apply_deletions(dels);
+            }
+            Instr::ApplyAdditions => {
+                if matches!(phase, Phase::Init) {
+                    bail!("updateCSRAdd outside a Batch phase");
+                }
+                g.apply_additions(adds);
+            }
+            Instr::RepairParents { dist, parent, unit_weight } => {
+                repair_parents(g, st, *dist, *parent, *unit_weight, par)?;
+            }
+            Instr::UpdCount { dst, sel } => {
+                let c = match sel {
+                    UpdateSel::Dels => dels.len(),
+                    UpdateSel::Adds => adds.len(),
+                };
+                st.regs[*dst] = ScalarVal::I(c as i64);
+            }
+            Instr::UpdGet { sel, idx, src, dst, weight } => {
+                let i = st.regs[*idx].as_i()?;
+                let (s, d, w) = match sel {
+                    UpdateSel::Dels => {
+                        let Some(&(s, d)) = usize::try_from(i).ok().and_then(|i| dels.get(i))
+                        else {
+                            bail!("UpdGet: deletion index {i} out of range ({})", dels.len());
+                        };
+                        (s, d, 1)
+                    }
+                    UpdateSel::Adds => {
+                        let Some(&(s, d, w)) = usize::try_from(i).ok().and_then(|i| adds.get(i))
+                        else {
+                            bail!("UpdGet: addition index {i} out of range ({})", adds.len());
+                        };
+                        (s, d, w)
+                    }
+                };
+                st.regs[*src] = ScalarVal::I(s as i64);
+                st.regs[*dst] = ScalarVal::I(d as i64);
+                st.regs[*weight] = ScalarVal::I(w as i64);
+            }
+            Instr::Jump { target } => next = *target,
+            Instr::JumpIf { cond, target } => {
+                if st.regs[*cond].as_b()? {
+                    next = *target;
+                }
+            }
+            Instr::JumpIfNot { cond, target } => {
+                if !st.regs[*cond].as_b()? {
+                    next = *target;
+                }
+            }
+            Instr::Par(op) => run_par(op, g, st, dels, adds, par)?,
+        }
+        if next <= pc {
+            fuel = fuel.saturating_sub(1);
+            if fuel == 0 {
+                bail!("program exceeded the backward-jump fuel budget (runaway loop?)");
+            }
+        }
+        pc = next;
+    }
+    Ok(())
+}
+
+fn prop_index(i: i64, len: usize) -> Result<usize> {
+    match usize::try_from(i) {
+        Ok(u) if u < len => Ok(u),
+        _ => bail!("vertex index {i} out of range (n = {len})"),
+    }
+}
+
+fn prop_get(p: &PropData, i: usize) -> ScalarVal {
+    match p {
+        PropData::I(v) => ScalarVal::I(v[i].load(Ordering::Relaxed)),
+        PropData::F(v) => ScalarVal::F(f64::from_bits(v[i].load(Ordering::Relaxed))),
+        PropData::B(v) => ScalarVal::B(v[i].load(Ordering::Relaxed)),
+    }
+}
+
+fn prop_set(p: &PropData, i: usize, v: ScalarVal) -> Result<()> {
+    match p {
+        PropData::I(a) => a[i].store(v.as_i()?, Ordering::Relaxed),
+        PropData::F(a) => a[i].store(v.as_f()?.to_bits(), Ordering::Relaxed),
+        PropData::B(a) => a[i].store(v.as_b()?, Ordering::Relaxed),
+    }
+    Ok(())
+}
+
+/// Interp-identical scalar arithmetic: promote to float when either
+/// side is float; int division by zero is an error.
+fn scalar_binop(op: BinOp, a: ScalarVal, b: ScalarVal) -> Result<ScalarVal> {
+    use BinOp::*;
+    if matches!(op, And | Or) {
+        let (x, y) = (a.as_b()?, b.as_b()?);
+        return Ok(ScalarVal::B(if op == And { x && y } else { x || y }));
+    }
+    let float = matches!(a, ScalarVal::F(_)) || matches!(b, ScalarVal::F(_));
+    if float {
+        let (x, y) = (a.as_f()?, b.as_f()?);
+        Ok(match op {
+            Add => ScalarVal::F(x + y),
+            Sub => ScalarVal::F(x - y),
+            Mul => ScalarVal::F(x * y),
+            Div => ScalarVal::F(x / y),
+            Mod => ScalarVal::F(x % y),
+            Lt => ScalarVal::B(x < y),
+            Gt => ScalarVal::B(x > y),
+            Le => ScalarVal::B(x <= y),
+            Ge => ScalarVal::B(x >= y),
+            Eq => ScalarVal::B(x == y),
+            Ne => ScalarVal::B(x != y),
+            And | Or => unreachable!(),
+        })
+    } else {
+        let (x, y) = (a.as_i()?, b.as_i()?);
+        Ok(match op {
+            Add => ScalarVal::I(x + y),
+            Sub => ScalarVal::I(x - y),
+            Mul => ScalarVal::I(x * y),
+            Div => {
+                if y == 0 {
+                    bail!("division by zero");
+                }
+                ScalarVal::I(x / y)
+            }
+            Mod => {
+                if y == 0 {
+                    bail!("modulo by zero");
+                }
+                ScalarVal::I(x % y)
+            }
+            Lt => ScalarVal::B(x < y),
+            Gt => ScalarVal::B(x > y),
+            Le => ScalarVal::B(x <= y),
+            Ge => ScalarVal::B(x >= y),
+            Eq => ScalarVal::B(x == y),
+            Ne => ScalarVal::B(x != y),
+            And | Or => unreachable!(),
+        })
+    }
+}
+
+/// Deterministic argmin parent repair (see [`Instr::RepairParents`]).
+fn repair_parents(
+    g: &DynGraph,
+    st: &ProgState,
+    dist: PropId,
+    parent: PropId,
+    unit_weight: bool,
+    par: Option<(&ThreadPool, Sched)>,
+) -> Result<()> {
+    use crate::algorithms::sssp::INF;
+    let (PropData::I(dist), PropData::I(parent)) = (&st.props[dist], &st.props[parent]) else {
+        bail!("RepairParents needs Int dist/parent properties");
+    };
+    let n = g.num_nodes();
+    let item = |v: usize| {
+        let dv = dist[v].load(Ordering::Relaxed);
+        let mut best = -1i64;
+        if dv < INF {
+            for (u, w) in g.in_neighbors(v as NodeId) {
+                let du = dist[u as usize].load(Ordering::Relaxed);
+                let w = if unit_weight { 1 } else { w as i64 };
+                if du < INF && du + w == dv {
+                    let cand = u as i64;
+                    if best == -1 || cand < best {
+                        best = cand;
+                    }
+                }
+            }
+        }
+        parent[v].store(best, Ordering::Relaxed);
+    };
+    match par {
+        Some((pool, sched)) => pool.parallel_for(n, sched, item),
+        None => (0..n).for_each(item),
+    }
+    Ok(())
+}
+
+/// Shared context for one parallel region.
+struct ParCtx<'a> {
+    g: &'a DynGraph,
+    props: &'a [PropData],
+    regs: &'a [ScalarVal],
+    dels: &'a [(NodeId, NodeId)],
+    adds: &'a [(NodeId, NodeId, Weight)],
+    op: &'a ParOp,
+    /// per-accumulator slot arrays (bit-encoded per kind), indexed by
+    /// domain position — the determinism mechanism.
+    slots: &'a [Vec<AtomicU64>],
+}
+
+fn run_par(
+    op: &ParOp,
+    g: &DynGraph,
+    st: &mut ProgState,
+    dels: &[(NodeId, NodeId)],
+    adds: &[(NodeId, NodeId, Weight)],
+    par: Option<(&ThreadPool, Sched)>,
+) -> Result<()> {
+    // Materialize the domain as (position → subject vertex id).
+    let nbrs: Option<Vec<NodeId>> = match op.domain {
+        Domain::Nodes => None,
+        Domain::OutNbrs { of } => {
+            let v = prop_index(st.regs[of].as_i()?, g.num_nodes())?;
+            Some(g.out_neighbors(v as NodeId).map(|(u, _)| u).collect())
+        }
+    };
+    let len = nbrs.as_ref().map(|v| v.len()).unwrap_or(g.num_nodes());
+    let subject_of = |i: usize| -> i64 {
+        match &nbrs {
+            Some(v) => v[i] as i64,
+            None => i as i64,
+        }
+    };
+    let slots: Vec<Vec<AtomicU64>> = op
+        .accums
+        .iter()
+        .map(|_| (0..len).map(|_| AtomicU64::new(0)).collect())
+        .collect();
+    {
+        let cx = ParCtx { g, props: &st.props, regs: &st.regs, dels, adds, op, slots: &slots };
+        let err: Mutex<Option<String>> = Mutex::new(None);
+        let item = |i: usize| {
+            if err.lock().unwrap().is_some() {
+                return;
+            }
+            let mut locals: Vec<ScalarVal> =
+                op.locals.iter().map(|t| ScalarVal::zero(*t)).collect();
+            if let Err(e) = vexec(&cx, i, subject_of(i), &mut locals, &op.body) {
+                let mut slot = err.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(e.to_string());
+                }
+            }
+        };
+        match par {
+            Some((pool, sched)) => pool.parallel_for(len, sched, item),
+            None => (0..len).for_each(item),
+        }
+        if let Some(e) = err.into_inner().unwrap() {
+            bail!("{e}");
+        }
+    }
+    // Sequential index-order fold: serial ≡ parallel, bitwise.
+    for (a, slots) in op.accums.iter().zip(&slots) {
+        match a.kind {
+            AccumKind::AddI => {
+                let mut acc = st.regs[a.reg].as_i()?;
+                for s in slots {
+                    acc += s.load(Ordering::Relaxed) as i64;
+                }
+                st.regs[a.reg] = ScalarVal::I(acc);
+            }
+            AccumKind::AddF => {
+                let mut acc = st.regs[a.reg].as_f()?;
+                for s in slots {
+                    acc += f64::from_bits(s.load(Ordering::Relaxed));
+                }
+                st.regs[a.reg] = ScalarVal::F(acc);
+            }
+            AccumKind::Or => {
+                let mut acc = st.regs[a.reg].as_b()?;
+                for s in slots {
+                    acc |= s.load(Ordering::Relaxed) != 0;
+                }
+                st.regs[a.reg] = ScalarVal::B(acc);
+            }
+        }
+    }
+    Ok(())
+}
+
+fn vexec(
+    cx: &ParCtx<'_>,
+    item: usize,
+    subject: i64,
+    locals: &mut Vec<ScalarVal>,
+    body: &[VStmt],
+) -> Result<()> {
+    for s in body {
+        match s {
+            VStmt::SetLocal(l, e) => {
+                let v = veval(cx, subject, locals, e)?;
+                // int → float promotion for float locals (mirrors interp
+                // declarations like `float sum = 0;`)
+                locals[*l] = match (locals[*l].ty(), v) {
+                    (Ty::Float, ScalarVal::I(x)) => ScalarVal::F(x as f64),
+                    _ => v,
+                };
+            }
+            VStmt::StoreProp(p, idx, val) => {
+                let i = prop_index(veval(cx, subject, locals, idx)?.as_i()?, cx.props[*p].len())?;
+                let v = veval(cx, subject, locals, val)?;
+                prop_set(&cx.props[*p], i, coerce_for(&cx.props[*p], v))?;
+            }
+            VStmt::MinAssign { prop, idx, val, comps } => {
+                let PropData::I(arr) = &cx.props[*prop] else {
+                    bail!("Min target must be an Int property");
+                };
+                let i = prop_index(veval(cx, subject, locals, idx)?.as_i()?, arr.len())?;
+                let cand = veval(cx, subject, locals, val)?.as_i()?;
+                if crate::backend::cpu::atomic_min(&arr[i], cand) {
+                    for (p, ci, cv) in comps {
+                        let j = prop_index(
+                            veval(cx, subject, locals, ci)?.as_i()?,
+                            cx.props[*p].len(),
+                        )?;
+                        let v = veval(cx, subject, locals, cv)?;
+                        prop_set(&cx.props[*p], j, coerce_for(&cx.props[*p], v))?;
+                    }
+                }
+            }
+            VStmt::If { cond, then, els } => {
+                if veval(cx, subject, locals, cond)?.as_b()? {
+                    vexec(cx, item, subject, locals, then)?;
+                } else {
+                    vexec(cx, item, subject, locals, els)?;
+                }
+            }
+            VStmt::ForOut { of, nbr, w, body } => {
+                let v = prop_index(veval(cx, subject, locals, of)?.as_i()?, cx.g.num_nodes())?;
+                for (u, wt) in cx.g.out_neighbors(v as NodeId) {
+                    locals[*nbr] = ScalarVal::I(u as i64);
+                    if let Some(wl) = w {
+                        locals[*wl] = ScalarVal::I(wt as i64);
+                    }
+                    vexec(cx, item, subject, locals, body)?;
+                }
+            }
+            VStmt::ForIn { of, nbr, body } => {
+                let v = prop_index(veval(cx, subject, locals, of)?.as_i()?, cx.g.num_nodes())?;
+                for (u, _) in cx.g.in_neighbors(v as NodeId) {
+                    locals[*nbr] = ScalarVal::I(u as i64);
+                    vexec(cx, item, subject, locals, body)?;
+                }
+            }
+            VStmt::Accum { acc, val } => {
+                let v = veval(cx, subject, locals, val)?;
+                let slot = &cx.slots[*acc][item];
+                match cx.op.accums[*acc].kind {
+                    AccumKind::AddI => {
+                        let cur = slot.load(Ordering::Relaxed) as i64;
+                        slot.store((cur + v.as_i()?) as u64, Ordering::Relaxed);
+                    }
+                    AccumKind::AddF => {
+                        let cur = f64::from_bits(slot.load(Ordering::Relaxed));
+                        slot.store((cur + v.as_f()?).to_bits(), Ordering::Relaxed);
+                    }
+                    AccumKind::Or => {
+                        let cur = slot.load(Ordering::Relaxed) != 0;
+                        slot.store((cur || v.as_b()?) as u64, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Promote ints for float property stores (the only implicit coercion).
+fn coerce_for(p: &PropData, v: ScalarVal) -> ScalarVal {
+    match (p, v) {
+        (PropData::F(_), ScalarVal::I(x)) => ScalarVal::F(x as f64),
+        _ => v,
+    }
+}
+
+fn veval(
+    cx: &ParCtx<'_>,
+    subject: i64,
+    locals: &[ScalarVal],
+    e: &VExpr,
+) -> Result<ScalarVal> {
+    Ok(match e {
+        VExpr::ConstI(v) => ScalarVal::I(*v),
+        VExpr::ConstF(v) => ScalarVal::F(*v),
+        VExpr::ConstB(v) => ScalarVal::B(*v),
+        VExpr::Subject => ScalarVal::I(subject),
+        VExpr::Reg(r) => cx.regs[*r],
+        VExpr::Local(l) => locals[*l],
+        VExpr::LoadProp(p, idx) => {
+            let i = prop_index(veval(cx, subject, locals, idx)?.as_i()?, cx.props[*p].len())?;
+            prop_get(&cx.props[*p], i)
+        }
+        VExpr::OutDegree(x) => {
+            let v = prop_index(veval(cx, subject, locals, x)?.as_i()?, cx.g.num_nodes())?;
+            ScalarVal::I(cx.g.out_degree(v as NodeId) as i64)
+        }
+        VExpr::IsEdge(a, b) => {
+            let u = veval(cx, subject, locals, a)?.as_i()?;
+            let v = veval(cx, subject, locals, b)?.as_i()?;
+            if u < 0 || v < 0 {
+                ScalarVal::B(false)
+            } else {
+                ScalarVal::B(cx.g.has_edge(u as NodeId, v as NodeId))
+            }
+        }
+        VExpr::Contains(sel, a, b) => {
+            let u = veval(cx, subject, locals, a)?.as_i()?;
+            let v = veval(cx, subject, locals, b)?.as_i()?;
+            let hit = match sel {
+                UpdateSel::Dels => cx.dels.iter().any(|&(s, d)| {
+                    (s as i64 == u && d as i64 == v) || (s as i64 == v && d as i64 == u)
+                }),
+                UpdateSel::Adds => cx.adds.iter().any(|&(s, d, _)| {
+                    (s as i64 == u && d as i64 == v) || (s as i64 == v && d as i64 == u)
+                }),
+            };
+            ScalarVal::B(hit)
+        }
+        VExpr::Bin(op, a, b) => {
+            let x = veval(cx, subject, locals, a)?;
+            let y = veval(cx, subject, locals, b)?;
+            scalar_binop(*op, x, y)?
+        }
+        VExpr::Not(x) => ScalarVal::B(!veval(cx, subject, locals, x)?.as_b()?),
+        VExpr::Neg(x) => match veval(cx, subject, locals, x)? {
+            ScalarVal::I(v) => ScalarVal::I(-v),
+            ScalarVal::F(v) => ScalarVal::F(-v),
+            ScalarVal::B(_) => bail!("negation of a bool"),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::uniform_random;
+
+    fn two_reg_prog(regs: Vec<Ty>, init: Vec<Instr>) -> Program {
+        Program { props: vec![], regs, params: vec![], init, on_batch: vec![], result: None }
+    }
+
+    #[test]
+    fn verifier_rejects_type_mismatched_register() {
+        // Bin Add over (Int, Bool) registers — ill-typed.
+        let p = two_reg_prog(
+            vec![Ty::Int, Ty::Bool],
+            vec![Instr::Bin { dst: 0, op: BinOp::Add, a: 0, b: 1 }],
+        );
+        let err = verify(&p).unwrap_err().to_string();
+        assert!(err.contains("register r1"), "unexpected message: {err}");
+    }
+
+    #[test]
+    fn verifier_rejects_jump_out_of_range() {
+        let p = two_reg_prog(vec![], vec![Instr::Jump { target: 7 }]);
+        let err = verify(&p).unwrap_err().to_string();
+        assert!(err.contains("jump target 7 out of range"), "unexpected message: {err}");
+    }
+
+    #[test]
+    fn verifier_rejects_min_on_float_prop() {
+        let p = Program {
+            props: vec![PropDecl { name: "rank".into(), ty: Ty::Float }],
+            regs: vec![],
+            params: vec![],
+            init: vec![Instr::Par(ParOp {
+                domain: Domain::Nodes,
+                locals: vec![],
+                body: vec![VStmt::MinAssign {
+                    prop: 0,
+                    idx: VExpr::Subject,
+                    val: VExpr::ConstI(0),
+                    comps: vec![],
+                }],
+                accums: vec![],
+            })],
+            on_batch: vec![],
+            result: None,
+        };
+        assert!(verify(&p).unwrap_err().to_string().contains("Int property"));
+    }
+
+    #[test]
+    fn par_reduction_is_deterministic_and_matches_serial() {
+        // sum of out-degrees via an AddI accumulator, serial vs pooled.
+        let g0 = uniform_random(50, 300, 5, 42);
+        let prog = Program {
+            props: vec![],
+            regs: vec![Ty::Int],
+            params: vec![],
+            init: vec![Instr::Par(ParOp {
+                domain: Domain::Nodes,
+                locals: vec![],
+                body: vec![VStmt::Accum {
+                    acc: 0,
+                    val: VExpr::OutDegree(Box::new(VExpr::Subject)),
+                }],
+                accums: vec![AccumDef { reg: 0, kind: AccumKind::AddI }],
+            })],
+            on_batch: vec![],
+            result: Some(0),
+        };
+        verify(&prog).unwrap();
+        let mut g1 = g0.clone();
+        let mut st1 = ProgState::new(&prog, g1.num_nodes(), &[]).unwrap();
+        execute(&prog, Phase::Init, &mut st1, &mut g1, None).unwrap();
+        let pool = ThreadPool::new(4);
+        let mut g2 = g0.clone();
+        let mut st2 = ProgState::new(&prog, g2.num_nodes(), &[]).unwrap();
+        execute(&prog, Phase::Init, &mut st2, &mut g2, Some((&pool, Sched::default()))).unwrap();
+        assert_eq!(st1.regs[0], st2.regs[0]);
+        assert_eq!(st1.regs[0].as_i().unwrap(), g0.num_edges() as i64);
+    }
+
+    #[test]
+    fn runaway_loop_burns_fuel_not_the_process() {
+        let p = two_reg_prog(vec![], vec![Instr::Jump { target: 0 }]);
+        verify(&p).unwrap();
+        let mut g = uniform_random(4, 6, 3, 1);
+        let mut st = ProgState::new(&p, g.num_nodes(), &[]).unwrap();
+        let err = execute(&p, Phase::Init, &mut st, &mut g, None).unwrap_err();
+        assert!(err.to_string().contains("fuel"), "unexpected: {err}");
+    }
+
+    #[test]
+    fn update_hooks_see_the_batch_window() {
+        // on_batch: count dels into r0, adds into r1.
+        let prog = Program {
+            props: vec![],
+            regs: vec![Ty::Int, Ty::Int],
+            params: vec![],
+            init: vec![],
+            on_batch: vec![
+                Instr::UpdCount { dst: 0, sel: UpdateSel::Dels },
+                Instr::UpdCount { dst: 1, sel: UpdateSel::Adds },
+            ],
+            result: None,
+        };
+        verify(&prog).unwrap();
+        let mut g = uniform_random(10, 30, 3, 2);
+        let mut st = ProgState::new(&prog, g.num_nodes(), &[]).unwrap();
+        let dels = [(0u32, 1u32)];
+        let adds = [(2u32, 3u32, 5i32), (4, 5, 1)];
+        execute(&prog, Phase::Batch { dels: &dels, adds: &adds }, &mut st, &mut g, None).unwrap();
+        assert_eq!(st.regs[0], ScalarVal::I(1));
+        assert_eq!(st.regs[1], ScalarVal::I(2));
+    }
+}

@@ -108,7 +108,14 @@ impl Env {
     }
 
     fn set_new(&mut self, name: &str, v: Value) {
-        self.scopes.last_mut().unwrap().insert(name.to_string(), v);
+        // a popped-to-empty scope stack is a bug elsewhere, but it must
+        // not abort the process — recover with a fresh scope
+        if self.scopes.is_empty() {
+            self.scopes.push(HashMap::new());
+        }
+        if let Some(scope) = self.scopes.last_mut() {
+            scope.insert(name.to_string(), v);
+        }
     }
 
     fn assign(&mut self, name: &str, v: Value) -> Result<()> {
@@ -144,6 +151,27 @@ impl<'p> Interp<'p> {
         scalars: &[(&str, Value)],
     ) -> Result<(Value, HashMap<String, Vec<Value>>)> {
         self.stream = Some(stream);
+        self.run_inner(name, scalars)
+    }
+
+    /// Run a driver with NO update stream attached. `Batch` blocks (and
+    /// the hooks inside them) report a typed error instead of executing
+    /// — useful for validating a program against a graph without
+    /// fabricating updates.
+    pub fn run_static(
+        &mut self,
+        name: &str,
+        scalars: &[(&str, Value)],
+    ) -> Result<(Value, HashMap<String, Vec<Value>>)> {
+        self.stream = None;
+        self.run_inner(name, scalars)
+    }
+
+    fn run_inner(
+        &mut self,
+        name: &str,
+        scalars: &[(&str, Value)],
+    ) -> Result<(Value, HashMap<String, Vec<Value>>)> {
         let f = self
             .program
             .find(name)
@@ -200,7 +228,7 @@ impl<'p> Interp<'p> {
 
     fn exec(&mut self, s: &Stmt, env: &mut Env) -> Result<Flow> {
         match s {
-            Stmt::Decl { ty, name, init } => {
+            Stmt::Decl { ty, name, init, .. } => {
                 let v = match (ty, init) {
                     (Type::PropNode(inner), _) => {
                         let n = self.graph.num_nodes();
@@ -214,11 +242,11 @@ impl<'p> Interp<'p> {
                 };
                 env.set_new(name, v);
             }
-            Stmt::Assign { lhs, op, rhs } => {
+            Stmt::Assign { lhs, op, rhs, .. } => {
                 let rv = self.eval(rhs, env)?;
                 self.assign(lhs, *op, rv, env)?;
             }
-            Stmt::MinAssign { lhs, min_args, rest } => {
+            Stmt::MinAssign { lhs, min_args, rest, .. } => {
                 let cur = self.eval(&min_args.0, env)?;
                 let cand = self.eval(&min_args.1, env)?;
                 let fire = match (&cur, &cand) {
@@ -236,7 +264,7 @@ impl<'p> Interp<'p> {
                     }
                 }
             }
-            Stmt::If { cond, then_branch, else_branch } => {
+            Stmt::If { cond, then_branch, else_branch, .. } => {
                 if self.eval(cond, env)?.as_bool()? {
                     env.push();
                     let f = self.exec_block(then_branch, env)?;
@@ -253,7 +281,7 @@ impl<'p> Interp<'p> {
                     }
                 }
             }
-            Stmt::While { cond, body } => {
+            Stmt::While { cond, body, .. } => {
                 let mut sweeps = 0;
                 while self.eval(cond, env)?.as_bool()? {
                     env.push();
@@ -268,7 +296,7 @@ impl<'p> Interp<'p> {
                     }
                 }
             }
-            Stmt::DoWhile { body, cond } => {
+            Stmt::DoWhile { body, cond, .. } => {
                 let mut sweeps = 0;
                 loop {
                     env.push();
@@ -286,7 +314,7 @@ impl<'p> Interp<'p> {
                     }
                 }
             }
-            Stmt::Forall { var, iter, body } | Stmt::For { var, iter, body } => {
+            Stmt::Forall { var, iter, body, .. } | Stmt::For { var, iter, body, .. } => {
                 let items = self.iter_items(iter, env)?;
                 for item in items {
                     env.push();
@@ -298,7 +326,7 @@ impl<'p> Interp<'p> {
                     }
                 }
             }
-            Stmt::FixedPoint { flag: _, prop, body } => {
+            Stmt::FixedPoint { prop, body, .. } => {
                 let mut sweeps = 0;
                 loop {
                     env.push();
@@ -323,9 +351,16 @@ impl<'p> Interp<'p> {
                     }
                 }
             }
-            Stmt::Batch { updates: _, size, body } => {
+            Stmt::Batch { size, body, .. } => {
+                let Some(stream) = self.stream.as_ref() else {
+                    bail!(
+                        "{}: Batch block requires an update stream (run via run_dynamic, \
+                         not run_static)",
+                        s.span()
+                    );
+                };
                 let size = self.eval(size, env)?.as_int()?.max(1) as usize;
-                let total = self.stream.as_ref().map(|s| s.len()).unwrap_or(0);
+                let total = stream.len();
                 let mut start = 0;
                 while start < total {
                     let end = (start + size).min(total);
@@ -340,7 +375,7 @@ impl<'p> Interp<'p> {
                     start = end;
                 }
             }
-            Stmt::OnAdd { var, updates: _, body } => {
+            Stmt::OnAdd { var, body, .. } => {
                 for u in self.batch_updates(UpdateKind::Add)? {
                     env.push();
                     env.set_new(var, u);
@@ -351,7 +386,7 @@ impl<'p> Interp<'p> {
                     }
                 }
             }
-            Stmt::OnDelete { var, updates: _, body } => {
+            Stmt::OnDelete { var, body, .. } => {
                 for u in self.batch_updates(UpdateKind::Delete)? {
                     env.push();
                     env.set_new(var, u);
@@ -375,7 +410,10 @@ impl<'p> Interp<'p> {
 
     fn batch_updates(&self, kind: UpdateKind) -> Result<Vec<Value>> {
         let (lo, hi) = self.cur_batch.ok_or_else(|| anyhow!("OnAdd/OnDelete outside Batch"))?;
-        let stream = self.stream.as_ref().unwrap();
+        let stream = self
+            .stream
+            .as_ref()
+            .ok_or_else(|| anyhow!("OnAdd/OnDelete requires an update stream"))?;
         Ok(stream.updates[lo..hi]
             .iter()
             .filter(|u| u.kind == kind)
@@ -389,7 +427,11 @@ impl<'p> Interp<'p> {
 
     fn current_gbatch(&self) -> Result<GBatch<'_>> {
         let (lo, hi) = self.cur_batch.ok_or_else(|| anyhow!("no current batch"))?;
-        Ok(GBatch { updates: &self.stream.as_ref().unwrap().updates[lo..hi] })
+        let stream = self
+            .stream
+            .as_ref()
+            .ok_or_else(|| anyhow!("batch access requires an update stream"))?;
+        Ok(GBatch { updates: &stream.updates[lo..hi] })
     }
 
     // ------------------------------------------------------ iteration
@@ -945,5 +987,25 @@ mod tests {
             .run_dynamic("f", UpdateStream::new(vec![], 1), &[("batchSize", Value::Int(1))])
             .unwrap_err();
         assert!(err.to_string().contains("ghost"));
+    }
+
+    #[test]
+    fn batch_without_stream_is_a_typed_error() {
+        // run_static attaches no stream; reaching the Batch block must be
+        // a typed error, not a panic on `stream.unwrap()`.
+        let program = load("dsl/sssp_dynamic.sp");
+        let g = generators::uniform_random(10, 30, 5, 7);
+        let mut interp = Interp::new(&program, g);
+        let err = interp
+            .run_static(
+                "DynSSSP",
+                &[("batchSize", Value::Int(4)), ("src", Value::Int(0))],
+            )
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("update stream"),
+            "expected typed stream error, got: {msg}"
+        );
     }
 }

@@ -2,11 +2,13 @@
 
 use crate::util::error::{bail, Result};
 
-/// A lexical token with its source line (for diagnostics).
+/// A lexical token with its source position (for diagnostics).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Token {
     pub kind: Tok,
     pub line: usize,
+    /// 1-based column of the token's first character.
+    pub col: usize,
 }
 
 /// Token kinds. Keywords are recognized in the parser from `Ident` where
@@ -53,13 +55,17 @@ pub fn lex(src: &str) -> Result<Vec<Token>> {
     let mut out = Vec::new();
     let mut i = 0;
     let mut line = 1;
+    // index of the current line's first character; col = i - line_start + 1
+    let mut line_start = 0;
     let n = b.len();
     while i < n {
         let c = b[i];
+        let col = i - line_start + 1;
         match c {
             '\n' => {
                 line += 1;
                 i += 1;
+                line_start = i;
             }
             c if c.is_whitespace() => i += 1,
             '/' if i + 1 < n && b[i + 1] == '/' => {
@@ -72,6 +78,7 @@ pub fn lex(src: &str) -> Result<Vec<Token>> {
                 while i + 1 < n && !(b[i] == '*' && b[i + 1] == '/') {
                     if b[i] == '\n' {
                         line += 1;
+                        line_start = i + 1;
                     }
                     i += 1;
                 }
@@ -83,7 +90,7 @@ pub fn lex(src: &str) -> Result<Vec<Token>> {
                     i += 1;
                 }
                 let word: String = b[start..i].iter().collect();
-                out.push(Token { kind: Tok::Ident(word), line });
+                out.push(Token { kind: Tok::Ident(word), line, col });
             }
             c if c.is_ascii_digit() => {
                 let start = i;
@@ -96,7 +103,7 @@ pub fn lex(src: &str) -> Result<Vec<Token>> {
                 } else {
                     Tok::Int(text.parse()?)
                 };
-                out.push(Token { kind, line });
+                out.push(Token { kind, line, col });
             }
             _ => {
                 let two: String = b[i..(i + 2).min(n)].iter().collect();
@@ -127,15 +134,19 @@ pub fn lex(src: &str) -> Result<Vec<Token>> {
                         ';' => (Tok::Semi, 1),
                         ':' => (Tok::Colon, 1),
                         '.' => (Tok::Dot, 1),
-                        other => bail!("line {line}: unexpected character {other:?}"),
+                        other => bail!("line {line}:{col}: unexpected character {other:?}"),
                     },
                 };
-                out.push(Token { kind, line });
+                out.push(Token { kind, line, col });
                 i += adv;
             }
         }
     }
-    out.push(Token { kind: Tok::Eof, line });
+    out.push(Token {
+        kind: Tok::Eof,
+        line,
+        col: n.saturating_sub(line_start) + 1,
+    });
     Ok(out)
 }
 
@@ -182,6 +193,15 @@ mod tests {
 
     #[test]
     fn rejects_stray_chars() {
-        assert!(lex("a # b").is_err());
+        let err = lex("a # b").unwrap_err().to_string();
+        assert!(err.contains("line 1:3"), "position in message: {err}");
+    }
+
+    #[test]
+    fn tracks_columns() {
+        let toks = lex("ab cd\n  ef").unwrap();
+        assert_eq!((toks[0].line, toks[0].col), (1, 1));
+        assert_eq!((toks[1].line, toks[1].col), (1, 4));
+        assert_eq!((toks[2].line, toks[2].col), (2, 3), "col resets per line");
     }
 }

@@ -1,0 +1,1415 @@
+//! AST → bytecode lowering.
+//!
+//! [`lower`] compiles a parsed+analyzed `.sp` program's `Dynamic` driver
+//! into a [`bytecode::Program`]: everything before the `Batch` construct
+//! becomes the `init` segment, the `Batch` body becomes `on_batch` (the
+//! batch chunking itself is external — the coordinator batcher or the
+//! service sealer decides window boundaries), and a trailing `return`
+//! lowers into a result register re-evaluated at both segment tails.
+//!
+//! Calls to `Static`/`Incremental`/`Decremental` functions are inlined
+//! (monomorphized per call site): `propNode` arguments alias the
+//! caller's property arrays, `updates<g>` arguments carry the caller's
+//! batch-half selection, scalars are copied by value — matching the
+//! tree-walking interpreter's call semantics exactly.
+//!
+//! `forall` statements lower to [`Instr::Par`] regions; assignments to
+//! enclosing scalars inside them are classified as reductions
+//! (`x = x + e` / `x += e` → add, `x = True` → or) and become
+//! slot-deterministic accumulators. A `Min` multi-assignment whose
+//! companion stores the relaxing source vertex is recognized as an
+//! SSSP/BFS-style parent write, and a deterministic
+//! [`Instr::RepairParents`] is appended to both segment tails — the same
+//! argmin repair the hand-written cpu/dist kernels run, which is what
+//! makes bytecode SSSP bitwise-equal to them.
+
+use crate::dsl::ast::{
+    self, AssignOp, BinOp, Expr, FnKind, Function, Iter, LValue, Stmt, Type, UnOp,
+};
+use crate::dsl::bytecode::{
+    self, AccumDef, AccumKind, Domain, Instr, ParOp, PropDecl, PropId, RegId, Ty, UpdateSel,
+    VExpr, VStmt,
+};
+use crate::dsl::sema;
+use crate::util::error::{bail, Result};
+use std::collections::HashMap;
+
+/// Compile source text straight to verified bytecode: parse → sema →
+/// lower → verify. `entry` selects the driver by name; `None` uses the
+/// program's unique `Dynamic` function.
+pub fn compile(src: &str, entry: Option<&str>) -> Result<bytecode::Program> {
+    let prog = crate::dsl::parser::parse_program(src)?;
+    lower(&prog, entry)
+}
+
+/// Lower a parsed program's `Dynamic` driver to verified bytecode.
+pub fn lower(prog: &ast::Program, entry: Option<&str>) -> Result<bytecode::Program> {
+    sema::analyze(prog)?;
+    let f = match entry {
+        Some(name) => prog
+            .find(name)
+            .ok_or_else(|| crate::util::error::anyhow!("no function named {name:?}"))?,
+        None => {
+            let mut dyns = prog.functions.iter().filter(|f| f.kind == FnKind::Dynamic);
+            match (dyns.next(), dyns.next()) {
+                (Some(f), None) => f,
+                (None, _) => bail!("program has no Dynamic driver function"),
+                (Some(_), Some(_)) => {
+                    bail!("program has multiple Dynamic drivers; pass an entry name")
+                }
+            }
+        }
+    };
+    if f.kind != FnKind::Dynamic {
+        bail!("entry function {:?} is not a Dynamic driver", f.name);
+    }
+    let lo = Lowerer {
+        ast: prog,
+        props: Vec::new(),
+        regs: Vec::new(),
+        params: Vec::new(),
+        scopes: vec![HashMap::new()],
+        code: Vec::new(),
+        repairs: Vec::new(),
+        in_batch: false,
+        depth: 0,
+    };
+    let out = lo.lower_driver(f)?;
+    bytecode::verify(&out)?;
+    Ok(out)
+}
+
+/// What a DSL name refers to during lowering.
+#[derive(Debug, Clone, PartialEq)]
+enum Binding {
+    /// scalar (or node-id) register.
+    Reg(RegId),
+    /// a node property array.
+    Prop(PropId),
+    /// the graph parameter.
+    Graph,
+    /// an update batch: `None` = the driver's whole-stream parameter,
+    /// `Some(sel)` = a `currentBatch(0|1)` half.
+    Updates(Option<UpdateSel>),
+    /// the loop variable of a sequential update loop: (src, dst, weight)
+    /// registers refreshed by `UpdGet` each iteration.
+    UpdateVar { src: RegId, dst: RegId, w: RegId },
+}
+
+fn scalar_ty(t: &Type) -> Result<Ty> {
+    Ok(match t {
+        Type::Int | Type::Long | Type::Node => Ty::Int,
+        Type::Float | Type::Double => Ty::Float,
+        Type::Bool => Ty::Bool,
+        other => bail!("type {other:?} has no scalar register representation"),
+    })
+}
+
+struct Lowerer<'a> {
+    ast: &'a ast::Program,
+    props: Vec<PropDecl>,
+    regs: Vec<Ty>,
+    params: Vec<(String, RegId)>,
+    scopes: Vec<HashMap<String, Binding>>,
+    code: Vec<Instr>,
+    /// (dist-prop, parent-prop, unit-weight) pairs detected from `Min`
+    /// companions; RepairParents for each is appended to both segments.
+    repairs: Vec<(PropId, PropId, bool)>,
+    in_batch: bool,
+    depth: usize,
+}
+
+const MAX_INLINE_DEPTH: usize = 16;
+
+impl<'a> Lowerer<'a> {
+    // ---------------------------------------------------- infrastructure
+
+    fn new_reg(&mut self, ty: Ty) -> RegId {
+        self.regs.push(ty);
+        self.regs.len() - 1
+    }
+
+    fn new_prop(&mut self, name: &str, ty: Ty) -> PropId {
+        // distinct inline sites may each declare e.g. `modified_nxt`;
+        // suffix duplicates so by-name snapshot lookups stay unambiguous
+        // (driver params are declared first and keep their bare names).
+        let mut unique = name.to_string();
+        let mut k = 2;
+        while self.props.iter().any(|p| p.name == unique) {
+            unique = format!("{name}#{k}");
+            k += 1;
+        }
+        self.props.push(PropDecl { name: unique, ty });
+        self.props.len() - 1
+    }
+
+    fn emit(&mut self, i: Instr) -> usize {
+        self.code.push(i);
+        self.code.len() - 1
+    }
+
+    fn patch(&mut self, at: usize, target: usize) {
+        match &mut self.code[at] {
+            Instr::Jump { target: t }
+            | Instr::JumpIf { target: t, .. }
+            | Instr::JumpIfNot { target: t, .. } => *t = target,
+            other => unreachable!("patched a non-jump instruction {other:?}"),
+        }
+    }
+
+    fn push_scope(&mut self) {
+        self.scopes.push(HashMap::new());
+    }
+
+    fn pop_scope(&mut self) {
+        self.scopes.pop();
+    }
+
+    fn bind(&mut self, name: &str, b: Binding) {
+        if let Some(scope) = self.scopes.last_mut() {
+            scope.insert(name.to_string(), b);
+        }
+    }
+
+    fn lookup(&self, name: &str) -> Option<Binding> {
+        self.scopes.iter().rev().find_map(|s| s.get(name).cloned())
+    }
+
+    fn prop_named(&self, name: &str) -> Result<(PropId, Ty)> {
+        match self.lookup(name) {
+            Some(Binding::Prop(p)) => Ok((p, self.props[p].ty)),
+            Some(other) => bail!("{name:?} is {other:?}, not a node property"),
+            None => bail!("unknown property {name:?}"),
+        }
+    }
+
+    /// Emit a fresh register holding a typed zero.
+    fn zero_reg(&mut self, ty: Ty) -> RegId {
+        let r = self.new_reg(ty);
+        match ty {
+            Ty::Int => self.emit(Instr::ConstI { dst: r, v: 0 }),
+            Ty::Float => self.emit(Instr::ConstF { dst: r, v: 0.0 }),
+            Ty::Bool => self.emit(Instr::ConstB { dst: r, v: false }),
+        };
+        r
+    }
+
+    /// int → float promotion; anything else must match exactly.
+    fn coerce(&mut self, r: RegId, want: Ty) -> Result<RegId> {
+        let have = self.regs[r];
+        if have == want {
+            Ok(r)
+        } else if have == Ty::Int && want == Ty::Float {
+            let d = self.new_reg(Ty::Float);
+            self.emit(Instr::CastF { dst: d, src: r });
+            Ok(d)
+        } else {
+            bail!("type mismatch: expected {want:?}, found {have:?}")
+        }
+    }
+
+    // ---------------------------------------------------- driver
+
+    fn lower_driver(mut self, f: &Function) -> Result<bytecode::Program> {
+        for p in &f.params {
+            match &p.ty {
+                Type::Graph => self.bind(&p.name, Binding::Graph),
+                Type::Updates => self.bind(&p.name, Binding::Updates(None)),
+                Type::PropNode(inner) => {
+                    let t = scalar_ty(inner)?;
+                    let id = self.new_prop(&p.name, t);
+                    self.bind(&p.name, Binding::Prop(id));
+                }
+                Type::PropEdge(_) => {
+                    bail!("propEdge parameters are not supported by the bytecode backend")
+                }
+                other => {
+                    let t = scalar_ty(other)?;
+                    let r = self.new_reg(t);
+                    self.params.push((p.name.clone(), r));
+                    self.bind(&p.name, Binding::Reg(r));
+                }
+            }
+        }
+        // Split the driver body: pre-Batch stmts → init, the Batch body →
+        // on_batch, and at most a trailing `return` after it.
+        let mut pre: Vec<&Stmt> = Vec::new();
+        let mut batch_body: Option<&[Stmt]> = None;
+        let mut ret: Option<&Expr> = None;
+        for (i, s) in f.body.iter().enumerate() {
+            match s {
+                Stmt::Batch { updates, body, .. } => {
+                    if batch_body.is_some() {
+                        bail!("{}: driver has more than one Batch construct", s.span());
+                    }
+                    match self.lookup(updates) {
+                        Some(Binding::Updates(None)) => {}
+                        _ => bail!(
+                            "{}: Batch({updates}: …) does not name the updates parameter",
+                            s.span()
+                        ),
+                    }
+                    batch_body = Some(body);
+                }
+                Stmt::Return(e) => {
+                    if i + 1 != f.body.len() {
+                        bail!("return must be the driver's final statement");
+                    }
+                    ret = Some(e);
+                }
+                other => {
+                    if batch_body.is_some() {
+                        bail!(
+                            "{}: only `return` may follow the Batch construct",
+                            other.span()
+                        );
+                    }
+                    pre.push(other);
+                }
+            }
+        }
+        let Some(batch_body) = batch_body else {
+            bail!("Dynamic driver {:?} has no Batch construct", f.name);
+        };
+        for s in pre {
+            self.lower_stmt(s)?;
+        }
+        let result = match ret {
+            Some(e) => {
+                let r = self.eval(e)?;
+                let out = self.new_reg(self.regs[r]);
+                self.emit(Instr::Mov { dst: out, src: r });
+                Some(out)
+            }
+            None => None,
+        };
+        let init = std::mem::take(&mut self.code);
+        self.in_batch = true;
+        self.push_scope();
+        for s in batch_body {
+            self.lower_stmt(s)?;
+        }
+        self.pop_scope();
+        if let (Some(out), Some(e)) = (result, ret) {
+            let r = self.eval(e)?;
+            let r = self.coerce(r, self.regs[out])?;
+            self.emit(Instr::Mov { dst: out, src: r });
+        }
+        let mut on_batch = std::mem::take(&mut self.code);
+        let mut init = init;
+        for &(dist, parent, unit_weight) in &self.repairs {
+            init.push(Instr::RepairParents { dist, parent, unit_weight });
+            on_batch.push(Instr::RepairParents { dist, parent, unit_weight });
+        }
+        Ok(bytecode::Program {
+            props: self.props,
+            regs: self.regs,
+            params: self.params,
+            init,
+            on_batch,
+            result,
+        })
+    }
+
+    // ---------------------------------------------------- statements
+
+    fn lower_stmts(&mut self, stmts: &[Stmt]) -> Result<()> {
+        for s in stmts {
+            self.lower_stmt(s)?;
+        }
+        Ok(())
+    }
+
+    fn lower_stmt(&mut self, s: &Stmt) -> Result<()> {
+        let span = s.span();
+        match s {
+            Stmt::Decl { ty, name, init, .. } => match ty {
+                Type::PropNode(inner) => {
+                    let t = scalar_ty(inner)?;
+                    let p = self.new_prop(name, t);
+                    let z = self.zero_reg(t);
+                    self.emit(Instr::Fill { prop: p, val: z });
+                    self.bind(name, Binding::Prop(p));
+                    Ok(())
+                }
+                Type::Updates => {
+                    let Some(Expr::MethodCall { base, method, args }) = init else {
+                        bail!("{span}: updates<> declaration needs a currentBatch(0|1) initializer");
+                    };
+                    if method != "currentBatch" {
+                        bail!("{span}: updates<> declaration needs currentBatch(0|1), found .{method}()");
+                    }
+                    let Expr::Var(b) = &**base else {
+                        bail!("{span}: currentBatch receiver must be the updates parameter");
+                    };
+                    if !matches!(self.lookup(b), Some(Binding::Updates(_))) {
+                        bail!("{span}: {b:?} is not an update batch");
+                    }
+                    let sel = match args.first() {
+                        Some(Expr::IntLit(0)) => UpdateSel::Dels,
+                        Some(Expr::IntLit(1)) => UpdateSel::Adds,
+                        other => bail!("{span}: currentBatch selector must be 0 or 1, found {other:?}"),
+                    };
+                    self.bind(name, Binding::Updates(Some(sel)));
+                    Ok(())
+                }
+                Type::Edge => {
+                    bail!("{span}: edge declarations are only supported inside forall bodies")
+                }
+                Type::PropEdge(_) | Type::Graph => {
+                    bail!("{span}: cannot declare a local of type {ty:?}")
+                }
+                other => {
+                    let t = scalar_ty(other)?;
+                    let r = self.new_reg(t);
+                    match init {
+                        Some(e) => {
+                            let v = self.eval(e)?;
+                            let v = self.coerce(v, t)?;
+                            self.emit(Instr::Mov { dst: r, src: v });
+                        }
+                        None => {
+                            match t {
+                                Ty::Int => self.emit(Instr::ConstI { dst: r, v: 0 }),
+                                Ty::Float => self.emit(Instr::ConstF { dst: r, v: 0.0 }),
+                                Ty::Bool => self.emit(Instr::ConstB { dst: r, v: false }),
+                            };
+                        }
+                    }
+                    self.bind(name, Binding::Reg(r));
+                    Ok(())
+                }
+            },
+            Stmt::Assign { lhs, op, rhs, .. } => self.lower_assign(lhs, *op, rhs, span),
+            Stmt::MinAssign { lhs, min_args, rest, .. } => {
+                self.lower_min_top(lhs, min_args, rest, span)
+            }
+            Stmt::If { cond, then_branch, else_branch, .. } => {
+                let c = self.eval(cond)?;
+                if self.regs[c] != Ty::Bool {
+                    bail!("{span}: if condition must be boolean");
+                }
+                let jskip = self.emit(Instr::JumpIfNot { cond: c, target: 0 });
+                self.push_scope();
+                self.lower_stmts(then_branch)?;
+                self.pop_scope();
+                if else_branch.is_empty() {
+                    let end = self.code.len();
+                    self.patch(jskip, end);
+                } else {
+                    let jend = self.emit(Instr::Jump { target: 0 });
+                    let els = self.code.len();
+                    self.patch(jskip, els);
+                    self.push_scope();
+                    self.lower_stmts(else_branch)?;
+                    self.pop_scope();
+                    let end = self.code.len();
+                    self.patch(jend, end);
+                }
+                Ok(())
+            }
+            Stmt::While { cond, body, .. } => {
+                let start = self.code.len();
+                let c = self.eval(cond)?;
+                if self.regs[c] != Ty::Bool {
+                    bail!("{span}: while condition must be boolean");
+                }
+                let jout = self.emit(Instr::JumpIfNot { cond: c, target: 0 });
+                self.push_scope();
+                self.lower_stmts(body)?;
+                self.pop_scope();
+                self.emit(Instr::Jump { target: start });
+                let end = self.code.len();
+                self.patch(jout, end);
+                Ok(())
+            }
+            Stmt::DoWhile { body, cond, .. } => {
+                let start = self.code.len();
+                self.push_scope();
+                self.lower_stmts(body)?;
+                self.pop_scope();
+                let c = self.eval(cond)?;
+                if self.regs[c] != Ty::Bool {
+                    bail!("{span}: do-while condition must be boolean");
+                }
+                self.emit(Instr::JumpIf { cond: c, target: start });
+                Ok(())
+            }
+            Stmt::FixedPoint { prop, body, .. } => {
+                let (p, t) = self.prop_named(prop)?;
+                if t != Ty::Bool {
+                    bail!("{span}: fixedPoint convergence property {prop:?} must be propNode<bool>");
+                }
+                let start = self.code.len();
+                self.push_scope();
+                self.lower_stmts(body)?;
+                self.pop_scope();
+                let r = self.new_reg(Ty::Bool);
+                self.emit(Instr::AnyTrue { dst: r, prop: p });
+                self.emit(Instr::JumpIf { cond: r, target: start });
+                Ok(())
+            }
+            Stmt::Forall { var, iter, body, .. } => self.lower_par(var, iter, body, span),
+            Stmt::For { var, iter, body, .. } => match iter {
+                Iter::UpdateList(name) => {
+                    let sel = match self.lookup(name) {
+                        Some(Binding::Updates(Some(sel))) => sel,
+                        Some(Binding::Updates(None)) => bail!(
+                            "{span}: iterate a currentBatch(0|1) half, not the whole stream"
+                        ),
+                        _ => bail!("{span}: {name:?} is not an update batch"),
+                    };
+                    self.lower_update_loop(var, sel, body)
+                }
+                _ => bail!(
+                    "{span}: sequential `for` at driver level is only supported over update batches"
+                ),
+            },
+            Stmt::OnAdd { var, updates, body, .. } => {
+                self.check_hook(updates, span)?;
+                self.lower_update_loop(var, UpdateSel::Adds, body)
+            }
+            Stmt::OnDelete { var, updates, body, .. } => {
+                self.check_hook(updates, span)?;
+                self.lower_update_loop(var, UpdateSel::Dels, body)
+            }
+            Stmt::Batch { .. } => bail!("{span}: nested Batch constructs are not supported"),
+            Stmt::Return(_) => bail!("return is only allowed as a function's final statement"),
+            Stmt::Expr(e) => self.lower_expr_stmt(e, span),
+        }
+    }
+
+    fn check_hook(&self, updates: &str, span: ast::Span) -> Result<()> {
+        if !self.in_batch {
+            bail!("{span}: OnAdd/OnDelete must appear inside a Batch construct");
+        }
+        match self.lookup(updates) {
+            Some(Binding::Updates(_)) => Ok(()),
+            _ => bail!("{span}: {updates:?} is not an update batch"),
+        }
+    }
+
+    fn lower_assign(
+        &mut self,
+        lhs: &LValue,
+        op: AssignOp,
+        rhs: &Expr,
+        span: ast::Span,
+    ) -> Result<()> {
+        match lhs {
+            LValue::Var(name) => match self.lookup(name) {
+                Some(Binding::Reg(r)) => {
+                    let v = self.eval(rhs)?;
+                    let v = self.coerce(v, self.regs[r])?;
+                    match op {
+                        AssignOp::Set => {
+                            self.emit(Instr::Mov { dst: r, src: v });
+                        }
+                        AssignOp::Add => {
+                            self.emit(Instr::Bin { dst: r, op: BinOp::Add, a: r, b: v });
+                        }
+                        AssignOp::Sub => {
+                            self.emit(Instr::Bin { dst: r, op: BinOp::Sub, a: r, b: v });
+                        }
+                    }
+                    Ok(())
+                }
+                Some(Binding::Prop(dst)) => {
+                    // whole-property assignment: `modified = modified_nxt;`
+                    if op != AssignOp::Set {
+                        bail!("{span}: only plain `=` is supported between properties");
+                    }
+                    let Expr::Var(srcname) = rhs else {
+                        bail!("{span}: property assignment requires a property on the right");
+                    };
+                    let (src, st) = self.prop_named(srcname)?;
+                    if st != self.props[dst].ty {
+                        bail!("{span}: property copy between different types");
+                    }
+                    self.emit(Instr::CopyProp { dst, src });
+                    Ok(())
+                }
+                Some(other) => bail!("{span}: cannot assign to {name:?} ({other:?})"),
+                None => bail!("{span}: assignment to undeclared variable {name:?}"),
+            },
+            LValue::Member { base, prop } => {
+                let (p, pt) = self.prop_named(prop)?;
+                let idx = self.eval(base)?;
+                let idx = self.coerce(idx, Ty::Int)?;
+                let v = self.eval(rhs)?;
+                let v = self.coerce(v, pt)?;
+                match op {
+                    AssignOp::Set => {
+                        self.emit(Instr::StoreProp { prop: p, idx, val: v });
+                    }
+                    AssignOp::Add | AssignOp::Sub => {
+                        let tmp = self.new_reg(pt);
+                        self.emit(Instr::LoadProp { dst: tmp, prop: p, idx });
+                        let bop = if op == AssignOp::Add { BinOp::Add } else { BinOp::Sub };
+                        self.emit(Instr::Bin { dst: tmp, op: bop, a: tmp, b: v });
+                        self.emit(Instr::StoreProp { prop: p, idx, val: tmp });
+                    }
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Sequential `Min` multi-assignment (OnAdd seeding): fire iff the
+    /// candidate is strictly smaller, companions stored only on fire —
+    /// the interpreter's exact rule.
+    fn lower_min_top(
+        &mut self,
+        lhs: &[LValue],
+        min_args: &(Expr, Expr),
+        rest: &[Expr],
+        span: ast::Span,
+    ) -> Result<()> {
+        let Some(LValue::Member { base, prop }) = lhs.first() else {
+            bail!("{span}: Min assignment target must be a property member");
+        };
+        self.detect_repair(lhs, min_args, rest);
+        let (p, pt) = self.prop_named(prop)?;
+        if pt != Ty::Int {
+            bail!("{span}: Min target {prop:?} must be an int property");
+        }
+        let idx = self.eval(base)?;
+        let idx = self.coerce(idx, Ty::Int)?;
+        let cur = self.new_reg(Ty::Int);
+        self.emit(Instr::LoadProp { dst: cur, prop: p, idx });
+        let cand = self.eval(&min_args.1)?;
+        let cand = self.coerce(cand, Ty::Int)?;
+        let fire = self.new_reg(Ty::Bool);
+        self.emit(Instr::Bin { dst: fire, op: BinOp::Lt, a: cand, b: cur });
+        let jskip = self.emit(Instr::JumpIfNot { cond: fire, target: 0 });
+        self.emit(Instr::StoreProp { prop: p, idx, val: cand });
+        for (lv, re) in lhs[1..].iter().zip(rest) {
+            let LValue::Member { base, prop } = lv else {
+                bail!("{span}: Min companion targets must be property members");
+            };
+            let (cp, cpt) = self.prop_named(prop)?;
+            let cidx = self.eval(base)?;
+            let cidx = self.coerce(cidx, Ty::Int)?;
+            let cv = self.eval(re)?;
+            let cv = self.coerce(cv, cpt)?;
+            self.emit(Instr::StoreProp { prop: cp, idx: cidx, val: cv });
+        }
+        let end = self.code.len();
+        self.patch(jskip, end);
+        Ok(())
+    }
+
+    /// Recognize `<x.D, …, x.P, …> = <Min(x.D, S.D + W), …, S, …>` —
+    /// a shortest-path relaxation whose companion `P` records the
+    /// relaxing source, i.e. a parent pointer. Parent companions are
+    /// racy under parallel CAS-min, so the lowerer schedules a
+    /// deterministic argmin [`Instr::RepairParents`] over (D, P) at both
+    /// segment tails; `W == 1` marks the unit-weight (BFS) variant.
+    fn detect_repair(&mut self, lhs: &[LValue], min_args: &(Expr, Expr), rest: &[Expr]) {
+        let Some(LValue::Member { prop: dname, .. }) = lhs.first() else {
+            return;
+        };
+        let Some(Binding::Prop(d)) = self.lookup(dname) else {
+            return;
+        };
+        let Expr::Binary { op: BinOp::Add, lhs: cl, rhs: cr } = &min_args.1 else {
+            return;
+        };
+        let Expr::Member { base: sbase, prop: sprop } = &**cl else {
+            return;
+        };
+        if self.lookup(sprop) != Some(Binding::Prop(d)) {
+            return;
+        }
+        let unit_weight = matches!(&**cr, Expr::IntLit(1));
+        for (lv, re) in lhs[1..].iter().zip(rest) {
+            let LValue::Member { prop: pname, .. } = lv else {
+                continue;
+            };
+            if **sbase != *re {
+                continue;
+            }
+            if let Some(Binding::Prop(p)) = self.lookup(pname) {
+                if self.props[p].ty == Ty::Int
+                    && !self.repairs.iter().any(|&(rd, rp, _)| rd == d && rp == p)
+                {
+                    self.repairs.push((d, p, unit_weight));
+                }
+            }
+        }
+    }
+
+    /// `OnAdd`/`OnDelete`/`for (u in half)` — a sequential loop over one
+    /// half of the current batch, matching the interpreter's in-order
+    /// iteration exactly.
+    fn lower_update_loop(&mut self, var: &str, sel: UpdateSel, body: &[Stmt]) -> Result<()> {
+        let cnt = self.new_reg(Ty::Int);
+        self.emit(Instr::UpdCount { dst: cnt, sel });
+        let i = self.new_reg(Ty::Int);
+        self.emit(Instr::ConstI { dst: i, v: 0 });
+        let one = self.new_reg(Ty::Int);
+        self.emit(Instr::ConstI { dst: one, v: 1 });
+        let (src, dst, w) =
+            (self.new_reg(Ty::Int), self.new_reg(Ty::Int), self.new_reg(Ty::Int));
+        let start = self.code.len();
+        let more = self.new_reg(Ty::Bool);
+        self.emit(Instr::Bin { dst: more, op: BinOp::Lt, a: i, b: cnt });
+        let jout = self.emit(Instr::JumpIfNot { cond: more, target: 0 });
+        self.emit(Instr::UpdGet { sel, idx: i, src, dst, weight: w });
+        self.push_scope();
+        self.bind(var, Binding::UpdateVar { src, dst, w });
+        self.lower_stmts(body)?;
+        self.pop_scope();
+        self.emit(Instr::Bin { dst: i, op: BinOp::Add, a: i, b: one });
+        self.emit(Instr::Jump { target: start });
+        let end = self.code.len();
+        self.patch(jout, end);
+        Ok(())
+    }
+
+    fn lower_expr_stmt(&mut self, e: &Expr, span: ast::Span) -> Result<()> {
+        match e {
+            Expr::MethodCall { base, method, args } => {
+                let Expr::Var(b) = &**base else {
+                    bail!("{span}: unsupported method receiver");
+                };
+                match (self.lookup(b), method.as_str()) {
+                    (Some(Binding::Graph), "attachNodeProperty") => {
+                        for a in args {
+                            let Expr::KwArg { name, value } = a else {
+                                bail!("{span}: attachNodeProperty takes prop = value arguments");
+                            };
+                            let (p, pt) = self.prop_named(name)?;
+                            let v = self.eval(value)?;
+                            let v = self.coerce(v, pt)?;
+                            self.emit(Instr::Fill { prop: p, val: v });
+                        }
+                        Ok(())
+                    }
+                    (Some(Binding::Graph), "attachEdgeProperty") => Ok(()),
+                    (Some(Binding::Graph), "updateCSRDel") => {
+                        if !self.in_batch {
+                            bail!("{span}: updateCSRDel outside a Batch construct");
+                        }
+                        self.emit(Instr::ApplyDeletions);
+                        Ok(())
+                    }
+                    (Some(Binding::Graph), "updateCSRAdd") => {
+                        if !self.in_batch {
+                            bail!("{span}: updateCSRAdd outside a Batch construct");
+                        }
+                        self.emit(Instr::ApplyAdditions);
+                        Ok(())
+                    }
+                    (Some(Binding::Graph), "propagateNodeFlags") => {
+                        let Some(Expr::Var(pn)) = args.first() else {
+                            bail!("{span}: propagateNodeFlags takes a property name");
+                        };
+                        let (p, pt) = self.prop_named(pn)?;
+                        if pt != Ty::Bool {
+                            bail!("{span}: propagateNodeFlags needs a propNode<bool>");
+                        }
+                        self.emit(Instr::PropagateFlags { prop: p });
+                        Ok(())
+                    }
+                    (_, m) => bail!("{span}: unsupported method call .{m}() as a statement"),
+                }
+            }
+            Expr::Call { name, args } => {
+                self.inline_call(name, args, span)?;
+                Ok(())
+            }
+            other => bail!("{span}: unsupported expression statement {other:?}"),
+        }
+    }
+
+    // ---------------------------------------------------- expressions
+
+    fn eval(&mut self, e: &Expr) -> Result<RegId> {
+        match e {
+            Expr::IntLit(v) => {
+                let r = self.new_reg(Ty::Int);
+                self.emit(Instr::ConstI { dst: r, v: *v });
+                Ok(r)
+            }
+            Expr::FloatLit(v) => {
+                let r = self.new_reg(Ty::Float);
+                self.emit(Instr::ConstF { dst: r, v: *v });
+                Ok(r)
+            }
+            Expr::BoolLit(v) => {
+                let r = self.new_reg(Ty::Bool);
+                self.emit(Instr::ConstB { dst: r, v: *v });
+                Ok(r)
+            }
+            Expr::Inf => {
+                let r = self.new_reg(Ty::Int);
+                self.emit(Instr::ConstI { dst: r, v: crate::algorithms::sssp::INF });
+                Ok(r)
+            }
+            Expr::Var(name) => match self.lookup(name) {
+                Some(Binding::Reg(r)) => Ok(r),
+                Some(other) => bail!("{name:?} ({other:?}) cannot be used as a scalar value"),
+                None => bail!("unknown variable {name:?}"),
+            },
+            Expr::Member { base, prop } => {
+                if let Expr::Var(b) = &**base {
+                    if let Some(Binding::UpdateVar { src, dst, w }) = self.lookup(b) {
+                        return match prop.as_str() {
+                            "source" => Ok(src),
+                            "destination" => Ok(dst),
+                            "weight" => Ok(w),
+                            other => bail!("update tuples have no property {other:?}"),
+                        };
+                    }
+                }
+                let (p, pt) = self.prop_named(prop)?;
+                let idx = self.eval(base)?;
+                let idx = self.coerce(idx, Ty::Int)?;
+                let r = self.new_reg(pt);
+                self.emit(Instr::LoadProp { dst: r, prop: p, idx });
+                Ok(r)
+            }
+            Expr::MethodCall { base, method, .. } => {
+                let is_graph =
+                    matches!(&**base, Expr::Var(b) if self.lookup(b) == Some(Binding::Graph));
+                match method.as_str() {
+                    "num_nodes" if is_graph => {
+                        let r = self.new_reg(Ty::Int);
+                        self.emit(Instr::NumNodes { dst: r });
+                        Ok(r)
+                    }
+                    "num_edges" if is_graph => {
+                        let r = self.new_reg(Ty::Int);
+                        self.emit(Instr::NumEdges { dst: r });
+                        Ok(r)
+                    }
+                    "currentBatch" => {
+                        bail!("currentBatch(…) may only initialize an updates<> declaration")
+                    }
+                    other => bail!("unsupported method .{other}() in sequential driver code"),
+                }
+            }
+            Expr::Call { name, args } => {
+                match self.inline_call(name, args, ast::Span::default())? {
+                    Some(r) => Ok(r),
+                    None => bail!("function {name:?} returns no value"),
+                }
+            }
+            Expr::Unary { op: UnOp::Not, expr } => {
+                let v = self.eval(expr)?;
+                if self.regs[v] != Ty::Bool {
+                    bail!("`!` applied to a non-boolean");
+                }
+                let r = self.new_reg(Ty::Bool);
+                self.emit(Instr::Not { dst: r, src: v });
+                Ok(r)
+            }
+            Expr::Unary { op: UnOp::Neg, expr } => {
+                let v = self.eval(expr)?;
+                let t = self.regs[v];
+                if t == Ty::Bool {
+                    bail!("unary minus applied to a boolean");
+                }
+                let r = self.new_reg(t);
+                self.emit(Instr::Neg { dst: r, src: v });
+                Ok(r)
+            }
+            Expr::Binary { op, lhs, rhs } => {
+                let mut a = self.eval(lhs)?;
+                let mut b = self.eval(rhs)?;
+                match (self.regs[a], self.regs[b]) {
+                    (Ty::Float, Ty::Int) => b = self.coerce(b, Ty::Float)?,
+                    (Ty::Int, Ty::Float) => a = self.coerce(a, Ty::Float)?,
+                    _ => {}
+                }
+                let ta = self.regs[a];
+                let Some(rt) = bytecode::bin_result_ty(*op, ta) else {
+                    bail!("operator {op:?} is not defined on {ta:?} operands");
+                };
+                let r = self.new_reg(rt);
+                self.emit(Instr::Bin { dst: r, op: *op, a, b });
+                Ok(r)
+            }
+            Expr::KwArg { .. } => bail!("keyword argument outside attachNodeProperty"),
+        }
+    }
+
+    // ---------------------------------------------------- call inlining
+
+    /// Monomorphize a `Static`/`Incremental`/`Decremental` call at its
+    /// call site. Returns the register holding the callee's `return`
+    /// value, if it has one (which must be its final statement).
+    fn inline_call(
+        &mut self,
+        name: &str,
+        args: &[Expr],
+        span: ast::Span,
+    ) -> Result<Option<RegId>> {
+        let Some(f) = self.ast.find(name) else {
+            bail!("{span}: call to unknown function {name:?}");
+        };
+        if f.kind == FnKind::Dynamic {
+            bail!("{span}: cannot call the Dynamic driver {name:?}");
+        }
+        if self.depth >= MAX_INLINE_DEPTH {
+            bail!("{span}: call inlining depth exceeded ({MAX_INLINE_DEPTH}) — recursive calls?");
+        }
+        if f.params.len() != args.len() {
+            bail!(
+                "{span}: {name:?} takes {} arguments, {} supplied",
+                f.params.len(),
+                args.len()
+            );
+        }
+        let mut frame = HashMap::new();
+        for (p, a) in f.params.iter().zip(args) {
+            let binding = match &p.ty {
+                Type::Graph => match a {
+                    Expr::Var(v) if self.lookup(v) == Some(Binding::Graph) => Binding::Graph,
+                    _ => bail!("{span}: argument for Graph parameter {:?} must be the graph", p.name),
+                },
+                Type::Updates => match a {
+                    Expr::Var(v) => match self.lookup(v) {
+                        Some(b @ Binding::Updates(_)) => b,
+                        _ => bail!("{span}: {v:?} is not an update batch"),
+                    },
+                    _ => bail!("{span}: argument for updates parameter must be a batch name"),
+                },
+                Type::PropNode(inner) => match a {
+                    Expr::Var(v) => match self.lookup(v) {
+                        Some(Binding::Prop(id)) => {
+                            if self.props[id].ty != scalar_ty(inner)? {
+                                bail!("{span}: property {v:?} type mismatch for {:?}", p.name);
+                            }
+                            Binding::Prop(id)
+                        }
+                        _ => bail!("{span}: {v:?} is not a node property"),
+                    },
+                    _ => bail!("{span}: argument for propNode parameter must be a property name"),
+                },
+                Type::PropEdge(_) | Type::Edge => {
+                    bail!("{span}: {:?} parameters are not supported", p.ty)
+                }
+                other => {
+                    // scalars are passed by value: copy into a fresh register
+                    // so callee-side assignment can't alias the caller's.
+                    let t = scalar_ty(other)?;
+                    let v = self.eval(a)?;
+                    let v = self.coerce(v, t)?;
+                    let fresh = self.new_reg(t);
+                    self.emit(Instr::Mov { dst: fresh, src: v });
+                    Binding::Reg(fresh)
+                }
+            };
+            frame.insert(p.name.clone(), binding);
+        }
+        let saved = std::mem::replace(&mut self.scopes, vec![frame]);
+        self.depth += 1;
+        let (body, ret) = match f.body.split_last() {
+            Some((Stmt::Return(e), rest)) => (rest, Some(e)),
+            _ => (&f.body[..], None),
+        };
+        self.lower_stmts(body)?;
+        let out = match ret {
+            Some(e) => Some(self.eval(e)?),
+            None => None,
+        };
+        self.depth -= 1;
+        self.scopes = saved;
+        Ok(out)
+    }
+
+    // ---------------------------------------------------- parallel regions
+
+    /// `forall` → [`Instr::Par`]. The domain is materialized up front
+    /// (nodes, or the out-neighbors of an evaluated vertex); filters
+    /// become guards at execution time — equivalent to the interpreter's
+    /// pre-collected item lists because loop bodies only ever write the
+    /// subject's own flags or disjoint properties.
+    fn lower_par(&mut self, var: &str, iter: &Iter, body: &[Stmt], span: ast::Span) -> Result<()> {
+        let (domain, filter) = match iter {
+            Iter::Nodes { filter, .. } => (Domain::Nodes, filter.as_ref()),
+            Iter::Neighbors { of, filter, .. } => {
+                let r = self.eval(of)?;
+                let r = self.coerce(r, Ty::Int)?;
+                (Domain::OutNbrs { of: r }, filter.as_ref())
+            }
+            Iter::NodesTo { .. } => {
+                bail!("{span}: parallel iteration over in-neighbors is not supported")
+            }
+            Iter::UpdateList(_) => {
+                bail!("{span}: update batches are iterated sequentially (for/OnAdd/OnDelete)")
+            }
+        };
+        let mut pl = ParLower {
+            lo: self,
+            subject: var.to_string(),
+            locals: Vec::new(),
+            scopes: vec![HashMap::new()],
+            forouts: Vec::new(),
+            accums: Vec::new(),
+            accum_map: HashMap::new(),
+        };
+        let guard = match filter {
+            Some(f) => Some(pl.vexpr(f)?),
+            None => None,
+        };
+        let mut vbody = pl.vlower_stmts(body)?;
+        if let Some(cond) = guard {
+            vbody = vec![VStmt::If { cond, then: vbody, els: Vec::new() }];
+        }
+        let (locals, accums) = (pl.locals, pl.accums);
+        self.emit(Instr::Par(ParOp { domain, locals, body: vbody, accums }));
+        Ok(())
+    }
+}
+
+/// What a name means inside a parallel region, on top of the outer
+/// [`Binding`] table.
+#[derive(Debug, Clone)]
+enum VBind {
+    Local(usize),
+    /// `edge e = g.get_edge(a, b)` — symbolic: source/destination are
+    /// the lowered argument expressions; `w` is the enclosing neighbor
+    /// loop's weight local when `b` is its loop variable.
+    Edge { src: VExpr, dst: VExpr, w: Option<usize> },
+}
+
+struct ParLower<'a, 'b> {
+    lo: &'b mut Lowerer<'a>,
+    subject: String,
+    locals: Vec<Ty>,
+    scopes: Vec<HashMap<String, VBind>>,
+    /// enclosing neighbor loops: (nbr local, weight local).
+    forouts: Vec<(usize, usize)>,
+    accums: Vec<AccumDef>,
+    accum_map: HashMap<RegId, usize>,
+}
+
+impl ParLower<'_, '_> {
+    fn new_local(&mut self, ty: Ty) -> usize {
+        self.locals.push(ty);
+        self.locals.len() - 1
+    }
+
+    fn vbind(&mut self, name: &str, b: VBind) {
+        if let Some(scope) = self.scopes.last_mut() {
+            scope.insert(name.to_string(), b);
+        }
+    }
+
+    fn vlookup(&self, name: &str) -> Option<VBind> {
+        self.scopes.iter().rev().find_map(|s| s.get(name).cloned())
+    }
+
+    /// Find or create the accumulator for an enclosing scalar register.
+    fn accum_for(&mut self, reg: RegId, kind: AccumKind) -> Result<usize> {
+        if let Some(&i) = self.accum_map.get(&reg) {
+            if self.accums[i].kind != kind {
+                bail!("conflicting reduction kinds on the same variable inside forall");
+            }
+            return Ok(i);
+        }
+        self.accums.push(AccumDef { reg, kind });
+        let i = self.accums.len() - 1;
+        self.accum_map.insert(reg, i);
+        Ok(i)
+    }
+
+    fn vlower_stmts(&mut self, stmts: &[Stmt]) -> Result<Vec<VStmt>> {
+        let mut out = Vec::new();
+        for s in stmts {
+            self.vlower_stmt(s, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    fn vlower_stmt(&mut self, s: &Stmt, out: &mut Vec<VStmt>) -> Result<()> {
+        let span = s.span();
+        match s {
+            Stmt::Decl { ty: Type::Edge, name, init, .. } => {
+                let Some(Expr::MethodCall { method, args, .. }) = init else {
+                    bail!("{span}: edge locals must be initialized with g.get_edge(u, v)");
+                };
+                if method != "get_edge" || args.len() != 2 {
+                    bail!("{span}: edge locals must be initialized with g.get_edge(u, v)");
+                }
+                let src = self.vexpr(&args[0])?;
+                let dst = self.vexpr(&args[1])?;
+                let w = match &dst {
+                    VExpr::Local(l) => self
+                        .forouts
+                        .iter()
+                        .rev()
+                        .find(|(nbr, _)| nbr == l)
+                        .map(|&(_, w)| w),
+                    _ => None,
+                };
+                self.vbind(name, VBind::Edge { src, dst, w });
+                Ok(())
+            }
+            Stmt::Decl { ty, name, init, .. } => {
+                let t = scalar_ty(ty)
+                    .map_err(|e| crate::util::error::anyhow!("{span}: {e}"))?;
+                let l = self.new_local(t);
+                let v = match init {
+                    Some(e) => self.vexpr(e)?,
+                    None => match t {
+                        Ty::Int => VExpr::ConstI(0),
+                        Ty::Float => VExpr::ConstF(0.0),
+                        Ty::Bool => VExpr::ConstB(false),
+                    },
+                };
+                self.vbind(name, VBind::Local(l));
+                out.push(VStmt::SetLocal(l, v));
+                Ok(())
+            }
+            Stmt::Assign { lhs, op, rhs, .. } => self.vlower_assign(lhs, *op, rhs, span, out),
+            Stmt::MinAssign { lhs, min_args, rest, .. } => {
+                self.lo.detect_repair(lhs, min_args, rest);
+                let Some(LValue::Member { base, prop }) = lhs.first() else {
+                    bail!("{span}: Min assignment target must be a property member");
+                };
+                let (p, pt) = self.lo.prop_named(prop)?;
+                if pt != Ty::Int {
+                    bail!("{span}: Min target {prop:?} must be an int property");
+                }
+                let idx = self.vexpr(base)?;
+                let val = self.vexpr(&min_args.1)?;
+                let mut comps = Vec::new();
+                for (lv, re) in lhs[1..].iter().zip(rest) {
+                    let LValue::Member { base, prop } = lv else {
+                        bail!("{span}: Min companion targets must be property members");
+                    };
+                    let (cp, _) = self.lo.prop_named(prop)?;
+                    comps.push((cp, self.vexpr(base)?, self.vexpr(re)?));
+                }
+                out.push(VStmt::MinAssign { prop: p, idx, val, comps });
+                Ok(())
+            }
+            Stmt::If { cond, then_branch, else_branch, .. } => {
+                let cond = self.vexpr(cond)?;
+                self.scopes.push(HashMap::new());
+                let then = self.vlower_stmts(then_branch)?;
+                self.scopes.pop();
+                self.scopes.push(HashMap::new());
+                let els = self.vlower_stmts(else_branch)?;
+                self.scopes.pop();
+                out.push(VStmt::If { cond, then, els });
+                Ok(())
+            }
+            Stmt::Forall { var, iter, body, .. } | Stmt::For { var, iter, body, .. } => {
+                match iter {
+                    Iter::Neighbors { of, filter, .. } => {
+                        let of = self.vexpr(of)?;
+                        let nbr = self.new_local(Ty::Int);
+                        let w = self.new_local(Ty::Int);
+                        self.scopes.push(HashMap::new());
+                        self.vbind(var, VBind::Local(nbr));
+                        self.forouts.push((nbr, w));
+                        let guard = match filter {
+                            Some(f) => Some(self.vexpr(f)?),
+                            None => None,
+                        };
+                        let mut body = self.vlower_stmts(body)?;
+                        self.forouts.pop();
+                        self.scopes.pop();
+                        if let Some(cond) = guard {
+                            body = vec![VStmt::If { cond, then: body, els: Vec::new() }];
+                        }
+                        out.push(VStmt::ForOut { of, nbr, w: Some(w), body });
+                        Ok(())
+                    }
+                    Iter::NodesTo { of, .. } => {
+                        let of = self.vexpr(of)?;
+                        let nbr = self.new_local(Ty::Int);
+                        self.scopes.push(HashMap::new());
+                        self.vbind(var, VBind::Local(nbr));
+                        let body = self.vlower_stmts(body)?;
+                        self.scopes.pop();
+                        out.push(VStmt::ForIn { of, nbr, body });
+                        Ok(())
+                    }
+                    Iter::Nodes { .. } => {
+                        bail!("{span}: nested all-nodes loops inside forall are not supported")
+                    }
+                    Iter::UpdateList(_) => {
+                        bail!("{span}: update batches cannot be iterated inside forall")
+                    }
+                }
+            }
+            other => bail!(
+                "{span}: statement {other:?} is not supported inside a parallel region"
+            ),
+        }
+    }
+
+    fn vlower_assign(
+        &mut self,
+        lhs: &LValue,
+        op: AssignOp,
+        rhs: &Expr,
+        span: ast::Span,
+        out: &mut Vec<VStmt>,
+    ) -> Result<()> {
+        match lhs {
+            LValue::Var(name) => {
+                if let Some(VBind::Local(l)) = self.vlookup(name) {
+                    let v = self.vexpr(rhs)?;
+                    let v = match op {
+                        AssignOp::Set => v,
+                        AssignOp::Add => {
+                            VExpr::Bin(BinOp::Add, Box::new(VExpr::Local(l)), Box::new(v))
+                        }
+                        AssignOp::Sub => {
+                            VExpr::Bin(BinOp::Sub, Box::new(VExpr::Local(l)), Box::new(v))
+                        }
+                    };
+                    out.push(VStmt::SetLocal(l, v));
+                    return Ok(());
+                }
+                if matches!(self.vlookup(name), Some(VBind::Edge { .. })) || *name == self.subject {
+                    bail!("{span}: cannot assign to {name:?} inside forall");
+                }
+                match self.lo.lookup(name) {
+                    Some(Binding::Reg(r)) => {
+                        // reductions into enclosing scalars:
+                        //   x += e / x -= e / x = x ± e  → add accumulator
+                        //   x = True                     → or accumulator
+                        let delta: Option<VExpr> = match (op, rhs) {
+                            (AssignOp::Add, e) => Some(self.vexpr(e)?),
+                            (AssignOp::Sub, e) => {
+                                Some(VExpr::Neg(Box::new(self.vexpr(e)?)))
+                            }
+                            (AssignOp::Set, Expr::Binary { op: BinOp::Add, lhs: a, rhs: b })
+                                if matches!(&**a, Expr::Var(v) if v == name) =>
+                            {
+                                Some(self.vexpr(b)?)
+                            }
+                            (AssignOp::Set, Expr::Binary { op: BinOp::Add, lhs: a, rhs: b })
+                                if matches!(&**b, Expr::Var(v) if v == name) =>
+                            {
+                                Some(self.vexpr(a)?)
+                            }
+                            (AssignOp::Set, Expr::Binary { op: BinOp::Sub, lhs: a, rhs: b })
+                                if matches!(&**a, Expr::Var(v) if v == name) =>
+                            {
+                                Some(VExpr::Neg(Box::new(self.vexpr(b)?)))
+                            }
+                            (AssignOp::Set, Expr::BoolLit(true)) => {
+                                let acc = self.accum_for(r, AccumKind::Or)?;
+                                out.push(VStmt::Accum { acc, val: VExpr::ConstB(true) });
+                                return Ok(());
+                            }
+                            _ => None,
+                        };
+                        let Some(delta) = delta else {
+                            bail!(
+                                "{span}: only reduction-shaped assignments (x = x + e, x += e, \
+                                 x = True) to enclosing scalars are allowed inside forall"
+                            );
+                        };
+                        let kind = match self.lo.regs[r] {
+                            Ty::Int => AccumKind::AddI,
+                            Ty::Float => AccumKind::AddF,
+                            Ty::Bool => bail!(
+                                "{span}: boolean reductions inside forall support only `= True`"
+                            ),
+                        };
+                        let acc = self.accum_for(r, kind)?;
+                        out.push(VStmt::Accum { acc, val: delta });
+                        Ok(())
+                    }
+                    Some(other) => {
+                        bail!("{span}: cannot assign to {name:?} ({other:?}) inside forall")
+                    }
+                    None => bail!("{span}: assignment to undeclared variable {name:?}"),
+                }
+            }
+            LValue::Member { base, prop } => {
+                if op != AssignOp::Set {
+                    bail!("{span}: compound property updates inside forall are not supported");
+                }
+                let (p, _) = self.lo.prop_named(prop)?;
+                let idx = self.vexpr(base)?;
+                let val = self.vexpr(rhs)?;
+                out.push(VStmt::StoreProp(p, idx, val));
+                Ok(())
+            }
+        }
+    }
+
+    fn vexpr(&mut self, e: &Expr) -> Result<VExpr> {
+        Ok(match e {
+            Expr::IntLit(v) => VExpr::ConstI(*v),
+            Expr::FloatLit(v) => VExpr::ConstF(*v),
+            Expr::BoolLit(v) => VExpr::ConstB(*v),
+            Expr::Inf => VExpr::ConstI(crate::algorithms::sssp::INF),
+            Expr::Var(name) => {
+                if let Some(b) = self.vlookup(name) {
+                    match b {
+                        VBind::Local(l) => VExpr::Local(l),
+                        VBind::Edge { .. } => bail!("edge {name:?} used as a scalar value"),
+                    }
+                } else if name == &self.subject {
+                    VExpr::Subject
+                } else {
+                    match self.lo.lookup(name) {
+                        Some(Binding::Reg(r)) => VExpr::Reg(r),
+                        // a bare property name in a filter refers to the
+                        // subject's value: `.filter(modified == True)`
+                        Some(Binding::Prop(p)) => {
+                            VExpr::LoadProp(p, Box::new(VExpr::Subject))
+                        }
+                        Some(other) => bail!("{name:?} ({other:?}) used as a scalar value"),
+                        None => bail!("unknown identifier {name:?} inside forall"),
+                    }
+                }
+            }
+            Expr::Member { base, prop } => {
+                if let Expr::Var(b) = &**base {
+                    if let Some(VBind::Edge { src, dst, w }) = self.vlookup(b) {
+                        return Ok(match prop.as_str() {
+                            "weight" => match w {
+                                Some(l) => VExpr::Local(l),
+                                None => bail!(
+                                    "edge weight is only available for neighbor-loop edges"
+                                ),
+                            },
+                            "source" => src,
+                            "destination" => dst,
+                            other => bail!("edges have no property {other:?}"),
+                        });
+                    }
+                    if let Some(Binding::UpdateVar { src, dst, w }) = self.lo.lookup(b) {
+                        return Ok(match prop.as_str() {
+                            "source" => VExpr::Reg(src),
+                            "destination" => VExpr::Reg(dst),
+                            "weight" => VExpr::Reg(w),
+                            other => bail!("update tuples have no property {other:?}"),
+                        });
+                    }
+                }
+                let (p, _) = self.lo.prop_named(prop)?;
+                let idx = self.vexpr(base)?;
+                VExpr::LoadProp(p, Box::new(idx))
+            }
+            Expr::MethodCall { base, method, args } => match method.as_str() {
+                "count_outNbrs" => {
+                    let Some(a) = args.first() else {
+                        bail!("count_outNbrs needs a vertex argument");
+                    };
+                    VExpr::OutDegree(Box::new(self.vexpr(a)?))
+                }
+                "is_an_edge" => {
+                    if args.len() != 2 {
+                        bail!("is_an_edge needs two vertex arguments");
+                    }
+                    VExpr::IsEdge(
+                        Box::new(self.vexpr(&args[0])?),
+                        Box::new(self.vexpr(&args[1])?),
+                    )
+                }
+                "contains" => {
+                    let Expr::Var(b) = &**base else {
+                        bail!("contains receiver must be an update batch");
+                    };
+                    let sel = match self.lo.lookup(b) {
+                        Some(Binding::Updates(Some(sel))) => sel,
+                        _ => bail!("{b:?} is not a currentBatch(0|1) half"),
+                    };
+                    if args.len() != 2 {
+                        bail!("contains needs two vertex arguments");
+                    }
+                    VExpr::Contains(
+                        sel,
+                        Box::new(self.vexpr(&args[0])?),
+                        Box::new(self.vexpr(&args[1])?),
+                    )
+                }
+                other => bail!("unsupported method .{other}() inside forall"),
+            },
+            Expr::Call { name, .. } => {
+                bail!("call to {name:?} inside forall — function calls are sequential-only")
+            }
+            Expr::Unary { op: UnOp::Not, expr } => VExpr::Not(Box::new(self.vexpr(expr)?)),
+            Expr::Unary { op: UnOp::Neg, expr } => VExpr::Neg(Box::new(self.vexpr(expr)?)),
+            Expr::Binary { op, lhs, rhs } => VExpr::Bin(
+                *op,
+                Box::new(self.vexpr(lhs)?),
+                Box::new(self.vexpr(rhs)?),
+            ),
+            Expr::KwArg { .. } => bail!("keyword argument outside attachNodeProperty"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowers_all_shipped_programs() {
+        for (name, src) in [
+            ("sssp", include_str!("../../dsl/sssp_dynamic.sp")),
+            ("bfs", include_str!("../../dsl/bfs_dynamic.sp")),
+            ("pagerank", include_str!("../../dsl/pagerank_dynamic.sp")),
+            ("tc", include_str!("../../dsl/tc_dynamic.sp")),
+            ("cc", include_str!("../../dsl/cc_dynamic.sp")),
+        ] {
+            let prog = compile(src, None).unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!prog.init.is_empty(), "{name}: empty init segment");
+            assert!(!prog.on_batch.is_empty(), "{name}: empty batch segment");
+        }
+    }
+
+    #[test]
+    fn sssp_records_weighted_parent_repair() {
+        let prog = compile(include_str!("../../dsl/sssp_dynamic.sp"), None).unwrap();
+        let repairs: Vec<_> = prog
+            .init
+            .iter()
+            .filter_map(|i| match i {
+                Instr::RepairParents { dist, parent, unit_weight } => {
+                    Some((*dist, *parent, *unit_weight))
+                }
+                _ => None,
+            })
+            .collect();
+        assert_eq!(repairs.len(), 1, "one (dist, parent) repair pair");
+        let (d, p, unit) = repairs[0];
+        assert_eq!(prog.props[d].name, "dist");
+        assert_eq!(prog.props[p].name, "parent");
+        assert!(!unit, "sssp relaxes with edge weights");
+        // the batch segment repairs the same pair
+        assert!(prog.on_batch.iter().any(|i| matches!(
+            i,
+            Instr::RepairParents { dist, parent, .. } if *dist == d && *parent == p
+        )));
+    }
+
+    #[test]
+    fn bfs_repair_is_unit_weight() {
+        let prog = compile(include_str!("../../dsl/bfs_dynamic.sp"), None).unwrap();
+        assert!(prog.init.iter().any(|i| matches!(
+            i,
+            Instr::RepairParents { unit_weight: true, .. }
+        )));
+    }
+
+    #[test]
+    fn tc_has_result_register_and_no_props() {
+        let prog = compile(include_str!("../../dsl/tc_dynamic.sp"), None).unwrap();
+        assert!(prog.result.is_some(), "DynTC returns the triangle count");
+        assert!(prog.props.is_empty(), "TC declares no node properties");
+    }
+
+    #[test]
+    fn unknown_entry_is_an_error() {
+        let err = compile(include_str!("../../dsl/tc_dynamic.sp"), Some("NoSuchFn"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("NoSuchFn"), "unexpected: {err}");
+    }
+}

@@ -4,13 +4,21 @@
 //! insertion), a reference interpreter that *executes* DSL programs over
 //! the diff-CSR substrate, and the per-backend C++ code emitters (§4).
 //!
+//! Beyond the interpreter and the C++ emitters, `lower` compiles a
+//! checked AST to the register-based bytecode in `bytecode`, which the
+//! serial and cpu engines execute natively — the path behind
+//! `run --program` / `serve --program`.
+//!
 //! The shipped programs in `dsl/*.sp` are the paper's Appendix A
-//! listings (Figs. 19–21).
+//! listings (Figs. 19–21), plus `cc_dynamic.sp` (connected components,
+//! bytecode-only — no hand-written kernel).
 
 pub mod ast;
+pub mod bytecode;
 pub mod emit;
 pub mod interp;
 pub mod lexer;
+pub mod lower;
 pub mod parser;
 pub mod sema;
 

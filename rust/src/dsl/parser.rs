@@ -33,8 +33,11 @@ impl Parser {
         &self.toks[(self.pos + 1).min(self.toks.len() - 1)].kind
     }
 
-    fn line(&self) -> usize {
-        self.toks[self.pos.min(self.toks.len() - 1)].line
+    /// Source position of the current token, for diagnostics and for
+    /// stamping statements as they are built.
+    fn span(&self) -> Span {
+        let t = &self.toks[self.pos.min(self.toks.len() - 1)];
+        Span { line: t.line as u32, col: t.col as u32 }
     }
 
     fn at(&self, t: &Tok) -> bool {
@@ -54,14 +57,14 @@ impl Parser {
             self.pos += 1;
             Ok(())
         } else {
-            bail!("line {}: expected {:?}, found {:?}", self.line(), t, self.peek())
+            bail!("{}: expected {:?}, found {:?}", self.span(), t, self.peek())
         }
     }
 
     fn ident(&mut self) -> Result<String> {
         match self.bump() {
             Tok::Ident(s) => Ok(s),
-            other => bail!("line {}: expected identifier, found {other:?}", self.line()),
+            other => bail!("{}: expected identifier, found {other:?}", self.span()),
         }
     }
 
@@ -117,7 +120,7 @@ impl Parser {
                 self.expect(Tok::Gt)?;
                 Type::Updates
             }
-            other => bail!("line {}: unknown type {other:?}", self.line()),
+            other => bail!("{}: unknown type {other:?}", self.span()),
         })
     }
 
@@ -131,8 +134,8 @@ impl Parser {
             "Incremental" => (FnKind::Incremental, "Incremental".to_string()),
             "Decremental" => (FnKind::Decremental, "Decremental".to_string()),
             other => bail!(
-                "line {}: expected Static/Dynamic/Incremental/Decremental, found {other:?}",
-                self.line()
+                "{}: expected Static/Dynamic/Incremental/Decremental, found {other:?}",
+                self.span()
             ),
         };
         self.expect(Tok::LParen)?;
@@ -166,21 +169,22 @@ impl Parser {
     // ------------------------------------------------------ statements
 
     fn stmt(&mut self) -> Result<Stmt> {
+        let span = self.span();
         // Min multi-assign: `<lv, lv, lv> = <Min(a,b), e, e>;`
         if self.at(&Tok::Lt) {
-            return self.min_assign();
+            return self.min_assign(span);
         }
         if let Tok::Ident(w) = self.peek() {
             match w.as_str() {
-                "if" => return self.if_stmt(),
-                "while" => return self.while_stmt(),
-                "do" => return self.do_while(),
-                "forall" => return self.loop_stmt(true),
-                "for" => return self.loop_stmt(false),
-                "fixedPoint" => return self.fixed_point(),
-                "Batch" => return self.batch(),
-                "OnAdd" => return self.on_update(true),
-                "OnDelete" => return self.on_update(false),
+                "if" => return self.if_stmt(span),
+                "while" => return self.while_stmt(span),
+                "do" => return self.do_while(span),
+                "forall" => return self.loop_stmt(true, span),
+                "for" => return self.loop_stmt(false, span),
+                "fixedPoint" => return self.fixed_point(span),
+                "Batch" => return self.batch(span),
+                "OnAdd" => return self.on_update(true, span),
+                "OnDelete" => return self.on_update(false, span),
                 "return" => {
                     self.bump();
                     let e = self.expr()?;
@@ -201,7 +205,7 @@ impl Parser {
                 None
             };
             self.expect(Tok::Semi)?;
-            return Ok(Stmt::Decl { ty, name, init });
+            return Ok(Stmt::Decl { ty, name, init, span });
         }
         // Expression-led: assignment or expression statement.
         let e = self.expr()?;
@@ -215,27 +219,27 @@ impl Parser {
             self.bump();
             let rhs = self.expr()?;
             self.expect(Tok::Semi)?;
-            let lhs = Self::lvalue(e, self.line())?;
-            return Ok(Stmt::Assign { lhs, op, rhs });
+            let lhs = Self::lvalue(e, span)?;
+            return Ok(Stmt::Assign { lhs, op, rhs, span });
         }
         self.expect(Tok::Semi)?;
         Ok(Stmt::Expr(e))
     }
 
-    fn lvalue(e: Expr, line: usize) -> Result<LValue> {
+    fn lvalue(e: Expr, span: Span) -> Result<LValue> {
         match e {
             Expr::Var(v) => Ok(LValue::Var(v)),
             Expr::Member { base, prop } => Ok(LValue::Member { base: *base, prop }),
-            other => Err(anyhow!("line {line}: not assignable: {other:?}")),
+            other => Err(anyhow!("{span}: not assignable: {other:?}")),
         }
     }
 
-    fn min_assign(&mut self) -> Result<Stmt> {
+    fn min_assign(&mut self, span: Span) -> Result<Stmt> {
         self.expect(Tok::Lt)?;
         let mut lhs = Vec::new();
         loop {
             let e = self.expr_primary_chain()?;
-            lhs.push(Self::lvalue(e, self.line())?);
+            lhs.push(Self::lvalue(e, span)?);
             if !self.at(&Tok::Comma) {
                 break;
             }
@@ -246,7 +250,7 @@ impl Parser {
         self.expect(Tok::Lt)?;
         // first element must be Min(a, b)
         if !self.eat_ident("Min") {
-            bail!("line {}: Min(...) expected as first tuple element", self.line());
+            bail!("{}: Min(...) expected as first tuple element", self.span());
         }
         self.expect(Tok::LParen)?;
         let a = self.expr()?;
@@ -262,12 +266,16 @@ impl Parser {
         self.expect(Tok::Gt)?;
         self.expect(Tok::Semi)?;
         if lhs.len() != rest.len() + 1 {
-            bail!("Min multi-assign arity mismatch: {} lhs vs {} rhs", lhs.len(), rest.len() + 1);
+            bail!(
+                "{span}: Min multi-assign arity mismatch: {} lhs vs {} rhs",
+                lhs.len(),
+                rest.len() + 1
+            );
         }
-        Ok(Stmt::MinAssign { lhs, min_args: (a, b), rest })
+        Ok(Stmt::MinAssign { lhs, min_args: (a, b), rest, span })
     }
 
-    fn if_stmt(&mut self) -> Result<Stmt> {
+    fn if_stmt(&mut self, span: Span) -> Result<Stmt> {
         self.bump(); // if
         self.expect(Tok::LParen)?;
         let cond = self.expr()?;
@@ -275,53 +283,54 @@ impl Parser {
         let then_branch = self.block()?;
         let else_branch = if self.eat_ident("else") {
             if self.at_ident("if") {
-                vec![self.if_stmt()?]
+                let inner = self.span();
+                vec![self.if_stmt(inner)?]
             } else {
                 self.block()?
             }
         } else {
             Vec::new()
         };
-        Ok(Stmt::If { cond, then_branch, else_branch })
+        Ok(Stmt::If { cond, then_branch, else_branch, span })
     }
 
-    fn while_stmt(&mut self) -> Result<Stmt> {
+    fn while_stmt(&mut self, span: Span) -> Result<Stmt> {
         self.bump();
         self.expect(Tok::LParen)?;
         let cond = self.expr()?;
         self.expect(Tok::RParen)?;
         let body = self.block()?;
-        Ok(Stmt::While { cond, body })
+        Ok(Stmt::While { cond, body, span })
     }
 
-    fn do_while(&mut self) -> Result<Stmt> {
+    fn do_while(&mut self, span: Span) -> Result<Stmt> {
         self.bump(); // do
         let body = self.block()?;
         if !self.eat_ident("while") {
-            bail!("line {}: expected while after do-block", self.line());
+            bail!("{}: expected while after do-block", self.span());
         }
         self.expect(Tok::LParen)?;
         let cond = self.expr()?;
         self.expect(Tok::RParen)?;
         self.expect(Tok::Semi)?;
-        Ok(Stmt::DoWhile { body, cond })
+        Ok(Stmt::DoWhile { body, cond, span })
     }
 
     /// `forall (v in <domain>) { … }` / `for (...)`.
-    fn loop_stmt(&mut self, parallel: bool) -> Result<Stmt> {
+    fn loop_stmt(&mut self, parallel: bool, span: Span) -> Result<Stmt> {
         self.bump(); // forall | for
         self.expect(Tok::LParen)?;
         let var = self.ident()?;
         if !self.eat_ident("in") {
-            bail!("line {}: expected `in`", self.line());
+            bail!("{}: expected `in`", self.span());
         }
         let iter = self.iter_domain()?;
         self.expect(Tok::RParen)?;
         let body = self.block()?;
         Ok(if parallel {
-            Stmt::Forall { var, iter, body }
+            Stmt::Forall { var, iter, body, span }
         } else {
-            Stmt::For { var, iter, body }
+            Stmt::For { var, iter, body, span }
         })
     }
 
@@ -347,7 +356,7 @@ impl Parser {
         let filter = if self.at(&Tok::Dot) {
             self.bump();
             if !self.eat_ident("filter") {
-                bail!("line {}: only .filter() may follow an iteration domain", self.line());
+                bail!("{}: only .filter() may follow an iteration domain", self.span());
             }
             self.expect(Tok::LParen)?;
             let f = self.expr()?;
@@ -367,14 +376,14 @@ impl Parser {
                 graph: base,
                 of: args.into_iter().next().ok_or_else(|| anyhow!("nodes_to() needs arg"))?,
             }),
-            other => bail!("line {}: unknown iteration domain .{other}()", self.line()),
+            other => bail!("{}: unknown iteration domain .{other}()", self.span()),
         }
     }
 
-    fn fixed_point(&mut self) -> Result<Stmt> {
+    fn fixed_point(&mut self, span: Span) -> Result<Stmt> {
         self.bump(); // fixedPoint
         if !self.eat_ident("until") {
-            bail!("line {}: expected `until`", self.line());
+            bail!("{}: expected `until`", self.span());
         }
         self.expect(Tok::LParen)?;
         let flag = self.ident()?;
@@ -383,10 +392,10 @@ impl Parser {
         let prop = self.ident()?;
         self.expect(Tok::RParen)?;
         let body = self.block()?;
-        Ok(Stmt::FixedPoint { flag, prop, body })
+        Ok(Stmt::FixedPoint { flag, prop, body, span })
     }
 
-    fn batch(&mut self) -> Result<Stmt> {
+    fn batch(&mut self, span: Span) -> Result<Stmt> {
         self.bump(); // Batch
         self.expect(Tok::LParen)?;
         let updates = self.ident()?;
@@ -394,20 +403,20 @@ impl Parser {
         let size = self.expr()?;
         self.expect(Tok::RParen)?;
         let body = self.block()?;
-        Ok(Stmt::Batch { updates, size, body })
+        Ok(Stmt::Batch { updates, size, body, span })
     }
 
-    fn on_update(&mut self, add: bool) -> Result<Stmt> {
+    fn on_update(&mut self, add: bool, span: Span) -> Result<Stmt> {
         self.bump(); // OnAdd | OnDelete
         self.expect(Tok::LParen)?;
         let var = self.ident()?;
         if !self.eat_ident("in") {
-            bail!("line {}: expected `in`", self.line());
+            bail!("{}: expected `in`", self.span());
         }
         let updates = self.ident()?;
         self.expect(Tok::Dot)?;
         if !self.eat_ident("currentBatch") {
-            bail!("line {}: expected currentBatch()", self.line());
+            bail!("{}: expected currentBatch()", self.span());
         }
         self.expect(Tok::LParen)?;
         // optional selector arg (0 = deletes, 1 = adds) — ignored here,
@@ -419,9 +428,9 @@ impl Parser {
         self.expect(Tok::RParen)?;
         let body = self.block()?;
         Ok(if add {
-            Stmt::OnAdd { var, updates, body }
+            Stmt::OnAdd { var, updates, body, span }
         } else {
-            Stmt::OnDelete { var, updates, body }
+            Stmt::OnDelete { var, updates, body, span }
         })
     }
 
@@ -588,7 +597,7 @@ impl Parser {
                     }
                 }
             },
-            other => bail!("line {}: unexpected token {other:?} in expression", self.line()),
+            other => bail!("{}: unexpected token {other:?} in expression", self.span()),
         }
     }
 }
@@ -664,6 +673,22 @@ mod tests {
     fn rejects_garbage() {
         assert!(parse_program("Static f(Graph g) { 5 = x; }").is_err());
         assert!(parse_program("NotAKind f() {}").is_err());
+    }
+
+    #[test]
+    fn statements_carry_spans() {
+        let src = "Static f(Graph g) {\n  int x = 0;\n  x = 1;\n}";
+        let p = parse_program(src).unwrap();
+        assert_eq!(p.functions[0].body[0].span(), Span { line: 2, col: 3 });
+        assert_eq!(p.functions[0].body[1].span(), Span { line: 3, col: 3 });
+    }
+
+    #[test]
+    fn parse_errors_carry_line_and_col() {
+        let err = parse_program("Static f(Graph g) {\n  forall (v on g.nodes()) { }\n}")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("line 2:"), "line:col in message: {err}");
     }
 
     #[test]

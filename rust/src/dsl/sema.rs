@@ -65,12 +65,19 @@ pub fn analyze(p: &Program) -> Result<Analysis> {
     let mut out = Analysis::default();
     for f in &p.functions {
         let mut fa = FnAnalysis::default();
+        // update-tuple/edge members are always available
+        let mut props: BTreeSet<String> =
+            ["source", "destination", "weight"].iter().map(|s| s.to_string()).collect();
         for param in &f.params {
             if let Type::PropNode(_) = param.ty {
                 fa.node_props.insert(param.name.clone());
             }
+            if matches!(param.ty, Type::PropNode(_) | Type::PropEdge(_)) {
+                props.insert(param.name.clone());
+            }
         }
-        let mut ctx = Ctx { fa: &mut fa, known: &known, fn_kind: f.kind };
+        let mut ctx =
+            Ctx { fa: &mut fa, known: &known, fn_kind: f.kind, props, in_batch: false };
         ctx.stmts(&f.body, 0)?;
         out.functions.insert(f.name.clone(), fa);
     }
@@ -81,6 +88,10 @@ struct Ctx<'a> {
     fa: &'a mut FnAnalysis,
     known: &'a BTreeSet<&'a str>,
     fn_kind: FnKind,
+    /// property names visible so far (params + earlier declarations);
+    /// member accesses against anything else are an error.
+    props: BTreeSet<String>,
+    in_batch: bool,
 }
 
 impl Ctx<'_> {
@@ -91,23 +102,82 @@ impl Ctx<'_> {
         Ok(())
     }
 
+    /// Error if `e` mentions a property (member access or
+    /// `attachNodeProperty` keyword) that is not in scope.
+    fn check_expr(&self, e: &Expr, span: Span) -> Result<()> {
+        let mut mentioned = BTreeSet::new();
+        collect_prop_mentions(e, &mut mentioned);
+        for p in mentioned {
+            if !self.props.contains(&p) {
+                bail!("{span}: undefined property {p:?}");
+            }
+        }
+        Ok(())
+    }
+
+    fn check_iter(&self, iter: &Iter, span: Span) -> Result<()> {
+        match iter {
+            Iter::Nodes { filter, .. } => {
+                if let Some(f) = filter {
+                    self.check_expr(f, span)?;
+                }
+            }
+            Iter::Neighbors { of, filter, .. } => {
+                self.check_expr(of, span)?;
+                if let Some(f) = filter {
+                    self.check_expr(f, span)?;
+                }
+            }
+            Iter::NodesTo { of, .. } => self.check_expr(of, span)?,
+            Iter::UpdateList(_) => {}
+        }
+        Ok(())
+    }
+
+    fn check_lvalue(&self, lv: &LValue, span: Span) -> Result<()> {
+        if let LValue::Member { base, prop } = lv {
+            if !self.props.contains(prop) {
+                bail!("{span}: undefined property {prop:?}");
+            }
+            self.check_expr(base, span)?;
+        }
+        Ok(())
+    }
+
     fn stmt(&mut self, s: &Stmt, forall_depth: usize) -> Result<()> {
+        let span = s.span();
         match s {
-            Stmt::Decl { ty, name, .. } => {
+            Stmt::Decl { ty, name, init, .. } => {
                 if matches!(ty, Type::PropNode(_) | Type::PropEdge(_)) {
                     self.fa.node_props.insert(name.clone());
+                    self.props.insert(name.clone());
+                }
+                if let Some(e) = init {
+                    self.check_expr(e, span)?;
                 }
             }
-            Stmt::Batch { body, .. } => {
+            Stmt::Batch { body, size, .. } => {
                 if self.fn_kind != FnKind::Dynamic {
-                    bail!("Batch construct is only allowed in Dynamic functions (§3.3.1)");
+                    bail!(
+                        "{span}: Batch construct is only allowed in Dynamic functions (§3.3.1)"
+                    );
                 }
+                self.check_expr(size, span)?;
+                let saved = self.in_batch;
+                self.in_batch = true;
                 self.stmts(body, forall_depth)?;
+                self.in_batch = saved;
             }
             Stmt::OnAdd { body, .. } | Stmt::OnDelete { body, .. } => {
+                if !self.in_batch {
+                    bail!(
+                        "{span}: OnAdd/OnDelete hooks are only allowed inside a Batch \
+                         construct (§3.3.2)"
+                    );
+                }
                 self.stmts(body, forall_depth)?;
             }
-            Stmt::Forall { var, iter, body } => {
+            Stmt::Forall { var, iter, body, .. } => {
                 let mut info = ForallInfo {
                     reads: BTreeSet::new(),
                     writes: BTreeMap::new(),
@@ -122,23 +192,51 @@ impl Ctx<'_> {
                     self.fa.dirty_props.insert(p.clone());
                 }
                 self.fa.foralls.push(info);
+                self.check_iter(iter, span)?;
                 self.stmts(body, forall_depth + 1)?;
             }
-            Stmt::For { body, .. } => self.stmts(body, forall_depth)?,
-            Stmt::FixedPoint { body, .. } => self.stmts(body, forall_depth)?,
-            Stmt::If { then_branch, else_branch, .. } => {
+            Stmt::For { iter, body, .. } => {
+                self.check_iter(iter, span)?;
+                self.stmts(body, forall_depth)?;
+            }
+            Stmt::FixedPoint { prop, body, .. } => {
+                if !self.props.contains(prop) {
+                    bail!("{span}: undefined property {prop:?} in fixedPoint condition");
+                }
+                self.stmts(body, forall_depth)?;
+            }
+            Stmt::If { cond, then_branch, else_branch, .. } => {
+                self.check_expr(cond, span)?;
                 self.stmts(then_branch, forall_depth)?;
                 self.stmts(else_branch, forall_depth)?;
             }
-            Stmt::While { body, .. } | Stmt::DoWhile { body, .. } => {
+            Stmt::While { cond, body, .. } | Stmt::DoWhile { body, cond, .. } => {
+                self.check_expr(cond, span)?;
                 self.stmts(body, forall_depth)?
             }
-            Stmt::Expr(Expr::Call { name, .. }) => {
-                if !self.known.contains(name.as_str()) {
-                    bail!("call to unknown function {name:?}");
+            Stmt::Assign { lhs, rhs, .. } => {
+                self.check_lvalue(lhs, span)?;
+                self.check_expr(rhs, span)?;
+            }
+            Stmt::MinAssign { lhs, min_args, rest, .. } => {
+                for lv in lhs {
+                    self.check_lvalue(lv, span)?;
+                }
+                self.check_expr(&min_args.0, span)?;
+                self.check_expr(&min_args.1, span)?;
+                for e in rest {
+                    self.check_expr(e, span)?;
                 }
             }
-            _ => {}
+            Stmt::Expr(e) => {
+                if let Expr::Call { name, .. } = e {
+                    if !self.known.contains(name.as_str()) {
+                        bail!("call to unknown function {name:?}");
+                    }
+                }
+                self.check_expr(e, span)?;
+            }
+            Stmt::Return(e) => self.check_expr(e, span)?,
         }
         Ok(())
     }
@@ -147,7 +245,7 @@ impl Ctx<'_> {
     fn scan_forall(loop_var: &str, body: &[Stmt], info: &mut ForallInfo) {
         for s in body {
             match s {
-                Stmt::Assign { lhs, op, rhs } => {
+                Stmt::Assign { lhs, op, rhs, .. } => {
                     collect_props(rhs, &mut info.reads);
                     match lhs {
                         LValue::Member { base, prop } => {
@@ -163,7 +261,7 @@ impl Ctx<'_> {
                         }
                     }
                 }
-                Stmt::MinAssign { lhs, min_args, rest } => {
+                Stmt::MinAssign { lhs, min_args, rest, .. } => {
                     collect_props(&min_args.0, &mut info.reads);
                     collect_props(&min_args.1, &mut info.reads);
                     for e in rest {
@@ -175,12 +273,12 @@ impl Ctx<'_> {
                         }
                     }
                 }
-                Stmt::If { cond, then_branch, else_branch } => {
+                Stmt::If { cond, then_branch, else_branch, .. } => {
                     collect_props(cond, &mut info.reads);
                     Self::scan_forall(loop_var, then_branch, info);
                     Self::scan_forall(loop_var, else_branch, info);
                 }
-                Stmt::While { cond, body } | Stmt::DoWhile { body, cond } => {
+                Stmt::While { cond, body, .. } | Stmt::DoWhile { body, cond, .. } => {
                     collect_props(cond, &mut info.reads);
                     Self::scan_forall(loop_var, body, info);
                 }
@@ -219,6 +317,25 @@ fn upgrade(map: &mut BTreeMap<String, Sync>, prop: &str, sync: Sync) {
     };
     if rank(sync) >= rank(cur) {
         map.insert(prop.to_string(), sync);
+    }
+}
+
+/// Like [`collect_props`], but also counts `attachNodeProperty(p = …)`
+/// keyword names as property mentions — used for definedness checking.
+fn collect_prop_mentions(e: &Expr, out: &mut BTreeSet<String>) {
+    if let Expr::KwArg { name, value } = e {
+        out.insert(name.clone());
+        collect_prop_mentions(value, out);
+        return;
+    }
+    collect_props(e, out);
+    // descend for KwArgs nested under method calls
+    if let Expr::MethodCall { args, .. } = e {
+        for a in args {
+            if let Expr::KwArg { name, .. } = a {
+                out.insert(name.clone());
+            }
+        }
     }
 }
 
@@ -304,6 +421,24 @@ mod tests {
         let src = "Static f(Graph g) { mystery(g); }";
         let p = parse_program(src).unwrap();
         assert!(analyze(&p).is_err());
+    }
+
+    #[test]
+    fn undefined_property_has_positioned_message() {
+        let src = "Static f(Graph g, propNode<int> dist) {\n  forall (v in g.nodes()) {\n    v.distt = 0;\n  }\n}";
+        let p = parse_program(src).unwrap();
+        let err = analyze(&p).unwrap_err().to_string();
+        assert!(err.contains("undefined property \"distt\""), "names the property: {err}");
+        assert!(err.contains("line 3:"), "points at the statement: {err}");
+    }
+
+    #[test]
+    fn on_add_outside_batch_rejected() {
+        let src = "Dynamic D(Graph g, updates<g> u, int batchSize) {\n  OnAdd (e in u.currentBatch()) {\n    int x = 0;\n  }\n  Batch(u : batchSize) { int y = 0; }\n}";
+        let p = parse_program(src).unwrap();
+        let err = analyze(&p).unwrap_err().to_string();
+        assert!(err.contains("inside a Batch"), "explains the constraint: {err}");
+        assert!(err.contains("line 2:"), "points at the hook: {err}");
     }
 
     #[test]

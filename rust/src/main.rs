@@ -4,6 +4,7 @@
 //!   compile --target omp|mpi|cuda <file.sp> [-o out.cc]
 //!       parse + analyze a DSL program and emit backend C++.
 //!   run --algo sssp|pr|tc --backend serial|cpu|dist|xla
+//!       [--program file.sp [--fn Name]]
 //!       [--graph rmat|uniform|road] [--nodes N] [--percent P]
 //!       [--batch B] [--seed S] [--threads T]
 //!       [--sched dynamic[:<chunk>]|static|partitioned]
@@ -12,7 +13,13 @@
 //!       run one dynamic-vs-static experiment cell and print timings.
 //!       `--threads/--sched/--direction` tune the cpu engine, `--ranks`
 //!       the dist engine; a knob the chosen backend lacks is an error.
+//!       `--program` replaces the built-in `--algo` kernel with a DSL
+//!       program compiled to bytecode (`dsl::lower::compile`) and run
+//!       through `DynamicEngine::run_program` — serial and cpu only
+//!       (`Capabilities::supports_programs`). `--fn` picks the entry
+//!       when the file has several Dynamic functions.
 //!   serve --algo sssp|pr|tc [--backend serial|cpu|dist|xla]
+//!       [--program file.sp [--fn Name]]
 //!       [--producers N] [--readers M]
 //!       [--batch B] [--deadline-ms D] [--shards S] [--ingest-shards Q]
 //!       [--runtime persistent|spawn] [--steal on|off] [--rebalance T|off]
@@ -48,18 +55,21 @@
 //!       writes a Chrome-trace/Perfetto JSON on shutdown; `--stats-every`
 //!       emits a one-line JSON metrics snapshot at that interval;
 //!       `--hist off` swaps the batch-latency histogram for the sampling
-//!       reservoir.
+//!       reservoir. `--program` serves a compiled DSL program instead of
+//!       a built-in kernel (single-engine serial/cpu backends only;
+//!       incompatible with `--wal` and `--shards` > 1 — program state is
+//!       not checkpointable and does not shard).
 //!   interp <file.sp> --fn <DynName> [--nodes N] [--percent P] …
 //!       execute a DSL program through the reference interpreter.
 //!   inspect
 //!       list the AOT artifacts the xla backend will use.
 
 use starplat_dyn::backend::{BackendKind, Direction, EngineOpts};
-use starplat_dyn::coordinator::{run_cell_with, run_stream_cell, Algo};
+use starplat_dyn::coordinator::{run_cell_with, run_program_cell, run_stream_cell, Algo};
 use starplat_dyn::dsl::{self, emit::Target};
 use starplat_dyn::graph::generators;
 use starplat_dyn::runtime::ArtifactManifest;
-use starplat_dyn::stream::{MergePolicy, ServiceConfig};
+use starplat_dyn::stream::{MergePolicy, ProgramConfig, ServiceConfig};
 use starplat_dyn::util::error::{anyhow, bail, Context, Result};
 use starplat_dyn::util::threadpool::Sched;
 
@@ -166,6 +176,44 @@ fn make_graph(args: &Args) -> starplat_dyn::graph::DynGraph {
     }
 }
 
+/// Compile `--program file.sp` to bytecode and bind the CLI's standard
+/// scalar arguments (the same names and defaults the `interp` subcommand
+/// uses), filtered down to the parameters the program actually declares.
+/// A program parameter outside that set is an up-front error rather than
+/// a mid-run one.
+fn load_program(
+    path: &str,
+    entry: Option<&str>,
+    batch: usize,
+) -> Result<(std::sync::Arc<dsl::bytecode::Program>, Vec<(String, dsl::bytecode::ScalarVal)>)> {
+    use dsl::bytecode::ScalarVal;
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading --program {path}"))?;
+    let prog = dsl::lower::compile(&src, entry)?;
+    let defaults: &[(&str, ScalarVal)] = &[
+        ("batchSize", ScalarVal::I(batch as i64)),
+        ("src", ScalarVal::I(0)),
+        ("beta", ScalarVal::F(1e-3)),
+        ("delta", ScalarVal::F(0.85)),
+        ("maxIter", ScalarVal::I(100)),
+    ];
+    let args: Vec<(String, ScalarVal)> = defaults
+        .iter()
+        .copied()
+        .filter(|(name, _)| prog.params.iter().any(|(p, _)| p.as_str() == *name))
+        .map(|(name, v)| (name.to_string(), v))
+        .collect();
+    for (p, _) in &prog.params {
+        if !args.iter().any(|(n, _)| n == p) {
+            bail!(
+                "program parameter {p:?} has no CLI binding \
+                 (supported: batchSize, src, beta, delta, maxIter)"
+            );
+        }
+    }
+    Ok((std::sync::Arc::new(prog), args))
+}
+
 fn real_main() -> Result<()> {
     // Chaos sites armed from the environment apply to every subcommand;
     // `serve --failpoints` below overrides the env spec.
@@ -210,15 +258,40 @@ fn real_main() -> Result<()> {
             let seed: u64 = args.get("seed", "42").parse()?;
             let opts = engine_opts(&args)?;
             let g = make_graph(&args);
-            println!(
-                "graph: {} nodes / {} edges; {percent}% updates, batch {batch}, \
-                 backend {}, {}",
-                g.num_nodes(),
-                g.num_edges(),
-                backend.name(),
-                describe_opts(&opts)
-            );
-            let cell = run_cell_with(algo, backend, &g, percent, batch, seed, opts)?;
+            let cell = if let Some(path) = args.flags.get("program") {
+                // --program replaces the built-in kernel: compile the DSL
+                // source to bytecode and drive it through the same §6
+                // protocol (--algo is ignored).
+                let entry = args.flags.get("fn").map(|s| s.as_str());
+                let (prog, pargs) = load_program(path, entry, batch)?;
+                println!(
+                    "graph: {} nodes / {} edges; {percent}% updates, batch {batch}, \
+                     backend {}, {}, program {path}",
+                    g.num_nodes(),
+                    g.num_edges(),
+                    backend.name(),
+                    describe_opts(&opts)
+                );
+                let (cell, st) =
+                    run_program_cell(backend, &g, percent, batch, seed, opts, &prog, &pargs)?;
+                if let Some(ret) = st.result(&prog) {
+                    println!("result  : {ret:?}");
+                }
+                for p in &prog.props {
+                    println!("prop {}: {} entries", p.name, g.num_nodes());
+                }
+                cell
+            } else {
+                println!(
+                    "graph: {} nodes / {} edges; {percent}% updates, batch {batch}, \
+                     backend {}, {}",
+                    g.num_nodes(),
+                    g.num_edges(),
+                    backend.name(),
+                    describe_opts(&opts)
+                );
+                run_cell_with(algo, backend, &g, percent, batch, seed, opts)?
+            };
             println!(
                 "static  : {:.6}s (+{:.6}s modeled comm)",
                 cell.static_secs, cell.static_comm_secs
@@ -299,6 +372,15 @@ fn real_main() -> Result<()> {
                 "off" => false,
                 other => bail!("--hist {other:?}: expected on|off"),
             };
+            if let Some(path) = args.flags.get("program") {
+                // serve a compiled DSL program instead of the --algo
+                // kernel; the service rejects --wal and --shards > 1.
+                let entry = args.flags.get("fn").map(|s| s.as_str());
+                let (prog, pargs) = load_program(path, entry, cfg.batch_capacity)?;
+                cfg.program = Some(ProgramConfig { prog, args: pargs });
+            }
+            let served_prog =
+                cfg.program.as_ref().map(|pc| std::sync::Arc::clone(&pc.prog));
             let g = make_graph(&args);
             if cfg.engine_shards > 1 {
                 println!(
@@ -347,7 +429,13 @@ fn real_main() -> Result<()> {
             if let Some(d) = cfg.submit_deadline {
                 println!("shed deadline  : {d:?} producer patience, then shed");
             }
-            let (cell, _report) =
+            if let Some(path) = args.flags.get("program") {
+                println!(
+                    "program        : {path} (DSL bytecode; --algo sets the \
+                     workload shape only)"
+                );
+            }
+            let (cell, report) =
                 run_stream_cell(algo, &g, percent, producers, readers, cfg, seed)?;
             if let Some(relay) = cell.relay {
                 println!(
@@ -428,6 +516,22 @@ fn real_main() -> Result<()> {
                 );
             }
             println!("snapshot reads : {} (epoch {})", cell.snapshot_reads, cell.stats.epoch);
+            if let (Some(prog), Some(st)) = (&served_prog, report.program()) {
+                if let Some(ret) = st.result(prog) {
+                    println!("program result : {ret:?}");
+                }
+                for p in &prog.props {
+                    use starplat_dyn::dsl::bytecode::Ty;
+                    let entries = match p.ty {
+                        Ty::Int => st.prop_i64(prog, &p.name).map(|v| v.len()),
+                        Ty::Float => st.prop_f64(prog, &p.name).map(|v| v.len()),
+                        Ty::Bool => None, // transient flags are not published
+                    };
+                    if let Some(n) = entries {
+                        println!("program prop   : {} ({n} entries)", p.name);
+                    }
+                }
+            }
             if let (Some(path), Some(tracer)) = (&trace_out, &tracer) {
                 // service shutdown joined every pipeline thread inside
                 // run_stream_cell, so the tracks have quiesced

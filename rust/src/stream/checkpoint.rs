@@ -93,6 +93,9 @@ impl Checkpoint {
             AlgoState::Sssp(_) => 0,
             AlgoState::Pr(_) => 1,
             AlgoState::Tc(_) => 2,
+            AlgoState::Program { .. } => {
+                unreachable!("program state is never checkpointed (serve --program rejects --wal)")
+            }
         };
         b.push(tag);
         b.extend_from_slice(&self.seq.to_le_bytes());
@@ -124,6 +127,9 @@ impl Checkpoint {
             }
             AlgoState::Tc(st) => {
                 b.extend_from_slice(&st.triangles.to_le_bytes());
+            }
+            AlgoState::Program { .. } => {
+                unreachable!("program state is never checkpointed (serve --program rejects --wal)")
             }
         }
         b

@@ -74,8 +74,9 @@ pub use batcher::{BatchMeta, Batcher, CloseReason, MergeGovernor, MergePolicy, M
 pub use checkpoint::Checkpoint;
 pub use ingest::{Counters, DrainTimeout, Ingest, SubmitError};
 pub use service::{
-    AlgoState, DegradedReport, DurabilityConfig, GraphService, ServiceConfig, ServiceReport,
-    ServiceStats, ShardLoad, ShardedReport, ShardedService, StageSecs,
+    AlgoState, DegradedReport, DurabilityConfig, GraphService, ProgramConfig, ServiceConfig,
+    ServiceReport, ServiceStats, ShardLoad, ShardedReport, ShardedService, ShutdownError,
+    StageSecs,
 };
 pub use shard::{RelayStats, ShardedEngine, ShardedGraph};
 pub use snapshot::{PropTable, SnapshotCell};

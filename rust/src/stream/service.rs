@@ -107,6 +107,21 @@ pub struct ServiceConfig {
     /// blocking producers indefinitely. Library users call
     /// [`GraphService::submit_deadline`] directly.
     pub submit_deadline: Option<Duration>,
+    /// When set, the engine serves this lowered DSL program instead of
+    /// the built-in `algo` kernels (`serve --program`): the Init segment
+    /// seeds the state, the OnBatch segment propagates every batch.
+    /// Requires a backend with `supports_programs` (serial/cpu); `algo`
+    /// is ignored. Incompatible with `--wal` (program state is not
+    /// checkpointable) and with the sharded service.
+    pub program: Option<ProgramConfig>,
+}
+
+/// A lowered DSL program plus the scalar arguments to bind at seed time
+/// (see [`ServiceConfig::program`]).
+#[derive(Debug, Clone)]
+pub struct ProgramConfig {
+    pub prog: Arc<crate::dsl::bytecode::Program>,
+    pub args: Vec<(String, crate::dsl::bytecode::ScalarVal)>,
 }
 
 impl ServiceConfig {
@@ -132,6 +147,7 @@ impl ServiceConfig {
             pr_max_iter: 100,
             durability: DurabilityConfig::default(),
             submit_deadline: None,
+            program: None,
         }
     }
 }
@@ -175,6 +191,12 @@ pub enum AlgoState {
     Sssp(SsspState),
     Pr(PrState),
     Tc(TcState),
+    /// A lowered DSL program's live state (`serve --program`): the
+    /// bytecode (shared with the config) and its property/register file.
+    Program {
+        prog: Arc<crate::dsl::bytecode::Program>,
+        st: crate::dsl::bytecode::ProgState,
+    },
 }
 
 /// Per-shard load telemetry (sharded service): lets skew, stealing, and
@@ -343,6 +365,14 @@ impl ServiceReport {
     pub fn tc(&self) -> Option<&TcState> {
         match &self.state {
             AlgoState::Tc(st) => Some(st),
+            _ => None,
+        }
+    }
+
+    /// The served DSL program's final state (`serve --program`).
+    pub fn program(&self) -> Option<&crate::dsl::bytecode::ProgState> {
+        match &self.state {
+            AlgoState::Program { st, .. } => Some(st),
             _ => None,
         }
     }
@@ -524,6 +554,37 @@ pub struct DegradedReport {
     pub stats: ServiceStats,
 }
 
+/// Why `try_shutdown` produced no report. Shutdown is idempotent: the
+/// first call takes the engine thread's handle and joins it; every later
+/// call observes the empty slot and gets `AlreadyShutDown` instead of
+/// the panic the old `expect("shutdown called once")` raised.
+#[derive(Debug)]
+pub enum ShutdownError {
+    /// A previous `shutdown`/`try_shutdown` call already joined the
+    /// engine and took the report.
+    AlreadyShutDown,
+    /// Engine dead past recovery: only the final stats survive.
+    Degraded(DegradedReport),
+}
+
+impl std::fmt::Display for ShutdownError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShutdownError::AlreadyShutDown => {
+                write!(f, "shutdown already performed on this service")
+            }
+            ShutdownError::Degraded(d) => write!(
+                f,
+                "engine degraded after {} caught crash(es); graph and state \
+                 died with the engine",
+                d.stats.restarts
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ShutdownError {}
+
 /// Handle to a running streaming service. Clone-free: share via `Arc`.
 pub struct GraphService {
     ingest: Arc<Ingest>,
@@ -535,8 +596,21 @@ pub struct GraphService {
 }
 
 /// Run the configured backend's initial static solve (the seed state the
-/// engine thread evolves batch by batch).
-fn seed_state(engine: &dyn DynamicEngine, g: &DynGraph, cfg: &ServiceConfig) -> Result<AlgoState> {
+/// engine thread evolves batch by batch). `g` is mutable because a DSL
+/// program's Init segment runs through the same bytecode interpreter as
+/// its batch segment (graph-mutating instructions and all); the built-in
+/// kernels never touch it here.
+fn seed_state(
+    engine: &dyn DynamicEngine,
+    g: &mut DynGraph,
+    cfg: &ServiceConfig,
+) -> Result<AlgoState> {
+    use crate::dsl::bytecode::{Phase, ProgState};
+    if let Some(pc) = &cfg.program {
+        let mut st = ProgState::new(&pc.prog, g.num_nodes(), &pc.args)?;
+        engine.run_program(&pc.prog, Phase::Init, g, &mut st)?;
+        return Ok(AlgoState::Program { prog: Arc::clone(&pc.prog), st });
+    }
     Ok(match cfg.algo {
         Algo::Sssp => AlgoState::Sssp(engine.sssp_static(g, cfg.source)?),
         Algo::Pr => {
@@ -563,6 +637,12 @@ impl GraphService {
     /// first snapshot is published, or with the startup error (unknown
     /// knob combination, xla without PJRT, failed static solve).
     pub fn try_start(mut g: DynGraph, cfg: ServiceConfig) -> Result<Self> {
+        if cfg.program.is_some() && cfg.durability.wal_dir.is_some() {
+            bail!(
+                "serve --program does not support --wal: DSL program state is \
+                 not checkpointable; drop --wal or serve a built-in algorithm"
+            );
+        }
         // The service owns the merge schedule (policy-driven, from the
         // batcher's seat) — disable the graph's built-in period.
         g.merge_period = 0;
@@ -700,25 +780,23 @@ impl GraphService {
 
     /// Stop the service: reject new submissions, flush the backlog through
     /// the engine, join, and hand back graph + state + final stats.
-    /// Panics if the engine degraded mid-stream;
-    /// [`try_shutdown`](Self::try_shutdown) reports that case as a value.
-    pub fn shutdown(self) -> ServiceReport {
-        self.try_shutdown().unwrap_or_else(|d| {
-            panic!(
-                "engine degraded after {} caught crash(es); reads were served \
-                 to the end, but graph and state died with the engine",
-                d.stats.restarts
-            )
-        })
+    /// Panics if the engine degraded mid-stream or shutdown already ran;
+    /// [`try_shutdown`](Self::try_shutdown) reports both cases as values.
+    pub fn shutdown(&self) -> ServiceReport {
+        self.try_shutdown().unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// [`shutdown`](Self::shutdown) that surfaces engine death as a
-    /// value: a degraded service yields `Err(DegradedReport)` carrying
-    /// the final stats instead of panicking the caller.
-    pub fn try_shutdown(self) -> std::result::Result<ServiceReport, DegradedReport> {
+    /// [`shutdown`](Self::shutdown) that surfaces engine death — and
+    /// repeated shutdown — as values instead of panicking: a degraded
+    /// service yields [`ShutdownError::Degraded`] carrying the final
+    /// stats; any call after the first yields
+    /// [`ShutdownError::AlreadyShutDown`].
+    pub fn try_shutdown(&self) -> std::result::Result<ServiceReport, ShutdownError> {
+        let Some(handle) = self.worker.lock().unwrap().take() else {
+            return Err(ShutdownError::AlreadyShutDown);
+        };
         self.shared.stop.store(true, Ordering::Release);
         self.ingest.stop();
-        let handle = self.worker.lock().unwrap().take().expect("shutdown called once");
         let out = handle.join().expect("engine supervisor panicked");
         if let Some(s) = self.sampler.lock().unwrap().take() {
             let _ = s.join();
@@ -726,7 +804,7 @@ impl GraphService {
         let stats = self.stats();
         match out {
             Some((graph, state)) => Ok(ServiceReport { graph, state, stats }),
-            None => Err(DegradedReport { stats }),
+            None => Err(ShutdownError::Degraded(DegradedReport { stats })),
         }
     }
 }
@@ -856,6 +934,28 @@ fn fill_props(t: &mut PropTable, state: &AlgoState) {
         }
         AlgoState::Tc(st) => {
             t.triangles = st.triangles;
+        }
+        AlgoState::Program { prog, st } => {
+            use crate::dsl::bytecode::Ty;
+            t.prog_ints.clear();
+            t.prog_floats.clear();
+            for p in &prog.props {
+                match p.ty {
+                    Ty::Int => {
+                        if let Some(v) = st.prop_i64(prog, &p.name) {
+                            t.prog_ints.push((p.name.clone(), v));
+                        }
+                    }
+                    Ty::Float => {
+                        if let Some(v) = st.prop_f64(prog, &p.name) {
+                            t.prog_floats.push((p.name.clone(), v));
+                        }
+                    }
+                    // transient convergence flags — not part of the answer
+                    Ty::Bool => {}
+                }
+            }
+            t.prog_result = st.result(prog);
         }
     }
 }
@@ -1015,6 +1115,12 @@ fn apply_single_batch(
             dels.retain(|&(u, v)| g.has_edge(u, v));
             engine.tc_dynamic_batch(g, st, dels, adds)
         }
+        AlgoState::Program { prog, st } => engine.run_program(
+            prog,
+            crate::dsl::bytecode::Phase::Batch { dels, adds },
+            g,
+            st,
+        ),
     }
 }
 
@@ -1063,7 +1169,7 @@ fn init_single(
         .take()
         .ok_or_else(|| anyhow!("engine restart requires a WAL checkpoint to recover from"))?;
     engine.prepare_graph(&mut g);
-    let state = seed_state(&*engine, &g, cfg)?;
+    let state = seed_state(&*engine, &mut g, cfg)?;
     // Seeding solve comm is not counted, mirroring the offline cells'
     // protocol (the dynamic measurement starts here).
     engine.drain_comm_secs();
@@ -1366,6 +1472,12 @@ impl ShardedService {
                  knobs or drop --shards"
             );
         }
+        if cfg.program.is_some() {
+            bail!(
+                "serve --program runs on the single-engine service only; \
+                 drop --engine-shards (or set it to 1) to serve a DSL program"
+            );
+        }
         let snapshots = Arc::new(SnapshotCell::new());
         let mut ingest_raw = Ingest::new(cfg.shards, cfg.shard_capacity, cfg.symmetric);
         if let Some(tracer) = &cfg.telemetry.tracer {
@@ -1500,25 +1612,24 @@ impl ShardedService {
 
     /// Stop the service: reject new submissions, flush the backlog through
     /// the shards, join, and hand back shards + state + stats + relay
-    /// telemetry. Panics if the fleet degraded mid-stream;
-    /// [`try_shutdown`](Self::try_shutdown) reports that case as a value.
-    pub fn shutdown(self) -> ShardedReport {
-        self.try_shutdown().unwrap_or_else(|d| {
-            panic!(
-                "sharded engine degraded after {} caught crash(es); reads were \
-                 served to the end, but shards and state died with the fleet",
-                d.stats.restarts
-            )
-        })
+    /// telemetry. Panics if the fleet degraded mid-stream or shutdown
+    /// already ran; [`try_shutdown`](Self::try_shutdown) reports both
+    /// cases as values.
+    pub fn shutdown(&self) -> ShardedReport {
+        self.try_shutdown().unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// [`shutdown`](Self::shutdown) that surfaces fleet death as a value:
-    /// a degraded service yields `Err(DegradedReport)` carrying the final
-    /// stats instead of panicking the caller.
-    pub fn try_shutdown(self) -> std::result::Result<ShardedReport, DegradedReport> {
+    /// [`shutdown`](Self::shutdown) that surfaces fleet death — and
+    /// repeated shutdown — as values instead of panicking: a degraded
+    /// service yields [`ShutdownError::Degraded`] carrying the final
+    /// stats; any call after the first yields
+    /// [`ShutdownError::AlreadyShutDown`].
+    pub fn try_shutdown(&self) -> std::result::Result<ShardedReport, ShutdownError> {
+        let Some(handle) = self.worker.lock().unwrap().take() else {
+            return Err(ShutdownError::AlreadyShutDown);
+        };
         self.shared.stop.store(true, Ordering::Release);
         self.ingest.stop();
-        let handle = self.worker.lock().unwrap().take().expect("shutdown called once");
         let out = handle.join().expect("sharded engine supervisor panicked");
         if let Some(s) = self.sampler.lock().unwrap().take() {
             let _ = s.join();
@@ -1526,7 +1637,7 @@ impl ShardedService {
         let stats = self.stats();
         match out {
             Some((graph, state, relay)) => Ok(ShardedReport { graph, state, stats, relay }),
-            None => Err(DegradedReport { stats }),
+            None => Err(ShutdownError::Degraded(DegradedReport { stats })),
         }
     }
 }
@@ -1558,6 +1669,10 @@ fn apply_sharded_batch(
         AlgoState::Sssp(st) => engine.sssp_dynamic_batch(g, st, dels_by, adds_by),
         AlgoState::Pr(st) => engine.pr_dynamic_batch(g, st, dels_by, adds_by),
         AlgoState::Tc(st) => engine.tc_dynamic_batch(g, st, dels_by, adds_by),
+        // ShardedService::try_start rejects program configs up front.
+        AlgoState::Program { .. } => {
+            bail!("the sharded service does not execute DSL bytecode programs")
+        }
     }
     Ok(())
 }

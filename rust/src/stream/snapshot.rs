@@ -53,6 +53,13 @@ pub struct PropTable {
     pub rank: Vec<f64>,
     /// Triangle count (meaningful only when the service runs TC).
     pub triangles: i64,
+    /// DSL program int-typed node properties by name (`serve --program`;
+    /// empty otherwise).
+    pub prog_ints: Vec<(String, Vec<i64>)>,
+    /// DSL program float-typed node properties by name.
+    pub prog_floats: Vec<(String, Vec<f64>)>,
+    /// DSL program scalar return value, if the driver returns one.
+    pub prog_result: Option<crate::dsl::bytecode::ScalarVal>,
 }
 
 /// The double-buffered publication cell.

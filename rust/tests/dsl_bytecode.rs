@@ -1,0 +1,376 @@
+//! Golden parity for the DSL → bytecode path: every shipped `dsl/*.sp`
+//! program is compiled (`dsl::lower::compile`), executed through
+//! `DynamicEngine::run_program` on the serial *and* cpu backends, and
+//! checked against the hand-written kernels / oracles the interpreter
+//! tests pin. Connected components has no hand-written kernel at all —
+//! its oracle is a union-find over the final edge list — which is the
+//! end-to-end proof that a new algorithm ships from a `.sp` file with
+//! zero per-backend Rust.
+//!
+//! `negative_*` tests pin the typed-error surface: compile-time spans,
+//! verifier rejections, unsupported backends, and the service-level
+//! gating of `serve --program` (WAL, sharding, double shutdown).
+
+use starplat_dyn::algorithms::{bfs, pagerank, sssp, triangle};
+use starplat_dyn::backend::{make_engine, BackendKind, DynamicEngine, EngineOpts};
+use starplat_dyn::coordinator::Algo;
+use starplat_dyn::dsl::bytecode::{self, Phase, ProgState, Program, ScalarVal};
+use starplat_dyn::dsl::lower;
+use starplat_dyn::graph::{generators, DynGraph, NodeId, UpdateStream};
+use starplat_dyn::stream::{GraphService, ProgramConfig, ServiceConfig, ShardedService, ShutdownError};
+use std::sync::Arc;
+
+fn compile_file(path: &str) -> Program {
+    let src = std::fs::read_to_string(path).unwrap_or_else(|e| panic!("{path}: {e}"));
+    lower::compile(&src, None).unwrap_or_else(|e| panic!("{path}: {e}"))
+}
+
+fn engine(kind: BackendKind) -> Box<dyn DynamicEngine> {
+    make_engine(kind, &EngineOpts::default()).unwrap()
+}
+
+/// The `run --program` protocol: Init on the starting graph, then the
+/// batch segment once per update batch. Returns the final (graph, state).
+fn run_prog(
+    e: &dyn DynamicEngine,
+    prog: &Program,
+    g0: &DynGraph,
+    stream: &UpdateStream,
+    args: &[(String, ScalarVal)],
+) -> (DynGraph, ProgState) {
+    let mut g = g0.clone();
+    let mut st = ProgState::new(prog, g.num_nodes(), args).unwrap();
+    e.run_program(prog, Phase::Init, &mut g, &mut st).unwrap();
+    let mut dels = Vec::new();
+    let mut adds = Vec::new();
+    for b in stream.batches() {
+        b.split_into(&mut dels, &mut adds);
+        e.run_program(prog, Phase::Batch { dels: &dels, adds: &adds }, &mut g, &mut st)
+            .unwrap();
+    }
+    (g, st)
+}
+
+fn args(list: &[(&str, ScalarVal)]) -> Vec<(String, ScalarVal)> {
+    list.iter().map(|(n, v)| (n.to_string(), *v)).collect()
+}
+
+/// Parents must form a valid shortest-path tree: `parent[v] = -1` iff
+/// `v` is the source or unreached; otherwise the tree edge exists and is
+/// tight (`dist[v] = dist[parent] + w`). Tie-breaks may differ between
+/// implementations, so validity — not identity — is the invariant.
+fn assert_valid_sp_tree(g: &DynGraph, dist: &[i64], parent: &[i64], src: NodeId) {
+    const INF: i64 = i64::MAX / 4;
+    for v in 0..g.num_nodes() {
+        let p = parent[v];
+        if v as NodeId == src || dist[v] >= INF {
+            assert_eq!(p, -1, "node {v}: source/unreached must have parent -1");
+            continue;
+        }
+        assert!(p >= 0, "node {v}: reached non-source must have a parent");
+        let w = g
+            .out_neighbors(p as NodeId)
+            .find(|&(nbr, _)| nbr == v as NodeId)
+            .map(|(_, w)| w)
+            .unwrap_or_else(|| panic!("node {v}: tree edge {p}->{v} not in graph"));
+        assert_eq!(
+            dist[v],
+            dist[p as usize] + w as i64,
+            "node {v}: tree edge {p}->{v} is not tight"
+        );
+    }
+}
+
+#[test]
+fn bytecode_sssp_matches_oracle_and_cpu_is_bitwise_equal_to_serial() {
+    let prog = compile_file("dsl/sssp_dynamic.sp");
+    let g0 = generators::uniform_random(60, 260, 9, 91);
+    let stream = UpdateStream::generate_percent(&g0, 12.0, 8, 9, 92);
+    let a = args(&[("batchSize", ScalarVal::I(8)), ("src", ScalarVal::I(0))]);
+
+    let (gs, st_serial) = run_prog(&*engine(BackendKind::Serial), &prog, &g0, &stream, &a);
+    let (gc, st_cpu) = run_prog(&*engine(BackendKind::Cpu), &prog, &g0, &stream, &a);
+
+    // ground truth: dijkstra on the fully-updated graph
+    let mut g2 = g0.clone();
+    stream.apply_all_static(&mut g2);
+    let want = sssp::dijkstra_oracle(&g2, 0);
+    let dist = st_serial.prop_i64(&prog, "dist").unwrap();
+    assert_eq!(dist, want, "bytecode DynSSSP != dijkstra oracle");
+    assert_eq!(gs.edges_sorted(), g2.edges_sorted(), "updateCSR drifted from static apply");
+
+    // the cpu engine's slot-deterministic Par fold must be bitwise equal
+    assert_eq!(dist, st_cpu.prop_i64(&prog, "dist").unwrap(), "serial != cpu dist");
+    let parent = st_serial.prop_i64(&prog, "parent").unwrap();
+    assert_eq!(parent, st_cpu.prop_i64(&prog, "parent").unwrap(), "serial != cpu parent");
+    assert_valid_sp_tree(&gc, &dist, &parent, 0);
+
+    // the same stream through the hand-written cpu kernel lands on the
+    // same distances (its parents may tie-break differently)
+    let ke = engine(BackendKind::Cpu);
+    let mut gk = g0.clone();
+    let mut kst = ke.sssp_static(&gk, 0).unwrap();
+    for b in stream.batches() {
+        ke.sssp_dynamic_batch(&mut gk, &mut kst, &b).unwrap();
+    }
+    assert_eq!(dist, kst.dist, "bytecode != hand-written cpu kernel dist");
+    assert_valid_sp_tree(&gk, &kst.dist, &kst.parent, 0);
+}
+
+#[test]
+fn bytecode_static_sssp_on_grid_matches_dijkstra() {
+    let prog = compile_file("dsl/sssp_dynamic.sp");
+    let g0 = generators::road_grid(7, 7, 9, 93);
+    let stream = UpdateStream::new(vec![], 8); // no updates: Init only
+    let a = args(&[("batchSize", ScalarVal::I(8)), ("src", ScalarVal::I(3))]);
+    let (g, st) = run_prog(&*engine(BackendKind::Serial), &prog, &g0, &stream, &a);
+    let dist = st.prop_i64(&prog, "dist").unwrap();
+    assert_eq!(dist, sssp::dijkstra_oracle(&g0, 3));
+    assert_valid_sp_tree(&g, &dist, &st.prop_i64(&prog, "parent").unwrap(), 3);
+}
+
+#[test]
+fn bytecode_pagerank_tracks_reference_pipeline() {
+    let prog = compile_file("dsl/pagerank_dynamic.sp");
+    let g0 = generators::rmat(6, 220, 0.5, 0.2, 0.2, 94);
+    let n = g0.num_nodes();
+    let stream = UpdateStream::generate_percent(&g0, 6.0, 16, 9, 95);
+    let a = args(&[
+        ("beta", ScalarVal::F(1e-9)),
+        ("delta", ScalarVal::F(0.85)),
+        ("maxIter", ScalarVal::I(100)),
+        ("batchSize", ScalarVal::I(16)),
+    ]);
+
+    let (_, st_serial) = run_prog(&*engine(BackendKind::Serial), &prog, &g0, &stream, &a);
+    let (_, st_cpu) = run_prog(&*engine(BackendKind::Cpu), &prog, &g0, &stream, &a);
+    let got = st_serial.prop_f64(&prog, "pageRank").unwrap();
+    assert_eq!(
+        got,
+        st_cpu.prop_f64(&prog, "pageRank").unwrap(),
+        "serial != cpu pageRank (slot fold must be deterministic)"
+    );
+
+    let mut g = g0.clone();
+    let mut st = pagerank::PrState::new(n, 1e-9, 0.85, 100);
+    pagerank::static_pagerank(&g, &mut st);
+    for b in stream.batches() {
+        pagerank::dynamic_batch(&mut g, &mut st, &b);
+    }
+    let l1: f64 = got.iter().zip(&st.rank).map(|(a, b)| (a - b).abs()).sum();
+    assert!(l1 < 1e-6, "bytecode PR drifted from reference pipeline: l1={l1}");
+}
+
+#[test]
+fn bytecode_tc_matches_recount_on_updated_graph() {
+    use starplat_dyn::graph::{Update, UpdateKind};
+    let prog = compile_file("dsl/tc_dynamic.sp");
+    let g0 = triangle::symmetrize(&generators::uniform_random(30, 160, 5, 96));
+    let (dels, adds) = triangle::symmetric_updates(&g0, 14.0, 4, 97);
+    let mut upd = Vec::new();
+    for (db, ab) in dels.iter().zip(&adds) {
+        for &(u, v) in db {
+            upd.push(Update { kind: UpdateKind::Delete, src: u, dst: v, weight: 1 });
+        }
+        for &(u, v, w) in ab {
+            upd.push(Update { kind: UpdateKind::Add, src: u, dst: v, weight: w });
+        }
+    }
+    let total = upd.len().max(1);
+    let stream = UpdateStream::new(upd, total);
+    let a = args(&[("batchSize", ScalarVal::I(total as i64))]);
+    let (g, st) = run_prog(&*engine(BackendKind::Cpu), &prog, &g0, &stream, &a);
+    let got = match st.result(&prog) {
+        Some(ScalarVal::I(t)) => t,
+        other => panic!("DynTC must return an int triangle count, got {other:?}"),
+    };
+    assert_eq!(got, triangle::static_tc(&g).triangles, "delta TC != recount");
+}
+
+#[test]
+fn bytecode_bfs_matches_hand_written() {
+    let prog = compile_file("dsl/bfs_dynamic.sp");
+    let g0 = generators::uniform_random(50, 180, 3, 99);
+    let stream = UpdateStream::generate_percent(&g0, 10.0, 8, 3, 100);
+    let a = args(&[("batchSize", ScalarVal::I(8)), ("src", ScalarVal::I(0))]);
+    let (_, st) = run_prog(&*engine(BackendKind::Serial), &prog, &g0, &stream, &a);
+    let mut g2 = g0.clone();
+    stream.apply_all_static(&mut g2);
+    let want = bfs::static_bfs(&g2, 0);
+    assert_eq!(st.prop_i64(&prog, "level").unwrap(), want.level, "bytecode BFS != kernel");
+}
+
+// ---------------------------------------------------------- connected
+// components: the algorithm with no hand-written kernel anywhere in the
+// crate. Oracle: union-find over the final edge list, labeling each
+// component with its minimum vertex id.
+
+fn cc_oracle(g: &DynGraph) -> Vec<i64> {
+    let n = g.num_nodes();
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(p: &mut [usize], mut x: usize) -> usize {
+        while p[x] != x {
+            p[x] = p[p[x]];
+            x = p[x];
+        }
+        x
+    }
+    for (u, v, _) in g.edges_sorted() {
+        let (ru, rv) = (find(&mut parent, u as usize), find(&mut parent, v as usize));
+        if ru != rv {
+            parent[ru.max(rv)] = ru.min(rv);
+        }
+    }
+    let mut label = vec![i64::MAX; n];
+    for v in 0..n {
+        let r = find(&mut parent, v);
+        label[r] = label[r].min(v as i64);
+    }
+    (0..n).map(|v| label[find(&mut parent, v)]).collect()
+}
+
+#[test]
+fn bytecode_cc_matches_union_find_oracle() {
+    let prog = compile_file("dsl/cc_dynamic.sp");
+    let g0 = generators::uniform_random(80, 320, 5, 101);
+    // mixed stream: deletion batches exercise the full-recompute branch,
+    // add-only batches the monotone re-flood
+    let stream = UpdateStream::generate_percent(&g0, 10.0, 16, 9, 102);
+    let a = args(&[("batchSize", ScalarVal::I(16))]);
+
+    let (gs, st_serial) = run_prog(&*engine(BackendKind::Serial), &prog, &g0, &stream, &a);
+    let (_, st_cpu) = run_prog(&*engine(BackendKind::Cpu), &prog, &g0, &stream, &a);
+
+    let mut g2 = g0.clone();
+    stream.apply_all_static(&mut g2);
+    assert_eq!(gs.edges_sorted(), g2.edges_sorted());
+    let comp = st_serial.prop_i64(&prog, "comp").unwrap();
+    assert_eq!(comp, cc_oracle(&g2), "bytecode DynCC != union-find oracle");
+    assert_eq!(comp, st_cpu.prop_i64(&prog, "comp").unwrap(), "serial != cpu comp");
+}
+
+/// The `serve --program` path end-to-end: a [`GraphService`] seeded with
+/// the compiled CC program ingests live updates, publishes `comp` through
+/// the snapshot cell, and reports the final program state on shutdown —
+/// all without a single CC-specific line of backend Rust.
+#[test]
+fn cc_program_serves_end_to_end() {
+    let prog = Arc::new(compile_file("dsl/cc_dynamic.sp"));
+    let g0 = generators::uniform_random(120, 500, 5, 103);
+    let workload = UpdateStream::generate_percent(&g0, 8.0, 1, 9, 104).updates;
+
+    for backend in [BackendKind::Serial, BackendKind::Cpu] {
+        let mut cfg = ServiceConfig::new(Algo::Sssp); // algo is ignored with a program
+        cfg.backend = backend;
+        cfg.batch_capacity = 64;
+        cfg.batch_deadline = std::time::Duration::from_millis(2);
+        cfg.program = Some(ProgramConfig {
+            prog: Arc::clone(&prog),
+            args: args(&[("batchSize", ScalarVal::I(64))]),
+        });
+        let svc = GraphService::try_start(g0.clone(), cfg).unwrap();
+        for u in workload.iter().copied() {
+            svc.submit(u);
+        }
+        svc.drain();
+        let published = svc.with_snapshot(|t| {
+            t.prog_ints
+                .iter()
+                .find(|(name, _)| name.as_str() == "comp")
+                .map(|(_, v)| v.clone())
+        });
+        let report = svc.try_shutdown().unwrap();
+        let st = report.program().expect("program service reports program state");
+        let comp = st.prop_i64(&prog, "comp").unwrap();
+        assert_eq!(comp, cc_oracle(&report.graph), "served CC != oracle ({backend:?})");
+        let published = published.unwrap_or_else(|| {
+            panic!("snapshot must publish the comp property ({backend:?})")
+        });
+        // the snapshot was taken after the last applied batch == final state
+        assert_eq!(published, comp, "published snapshot != final state ({backend:?})");
+    }
+}
+
+// ------------------------------------------------------------ negative
+// paths: typed errors with spans, capability gating, service gating.
+
+#[test]
+fn negative_undefined_property_error_carries_span() {
+    let src = "Dynamic f(Graph g, updates<g> u, int batchSize) {\n  Batch(u : batchSize) {\n    forall (v in g.nodes()) { v.ghost = 1; }\n  }\n}";
+    let err = lower::compile(src, None).unwrap_err().to_string();
+    assert!(err.contains("ghost"), "names the property: {err}");
+    assert!(err.contains("line 3:"), "carries the source line: {err}");
+}
+
+#[test]
+fn negative_hook_outside_batch_is_rejected_with_span() {
+    let src = "Dynamic f(Graph g, updates<g> u, int batchSize) {\n  OnAdd (x in u.currentBatch(1)) { int q = 0; }\n}";
+    let err = lower::compile(src, None).unwrap_err().to_string();
+    assert!(
+        err.contains("inside a Batch"),
+        "hook placement must be a sema error: {err}"
+    );
+    assert!(err.contains("line 2:"), "carries the source line: {err}");
+}
+
+#[test]
+fn negative_verifier_rejects_corrupted_program() {
+    let mut prog = compile_file("dsl/cc_dynamic.sp");
+    prog.init.push(bytecode::Instr::Jump { target: 999_999 });
+    let err = bytecode::verify(&prog).unwrap_err().to_string();
+    assert!(err.contains("jump target"), "unexpected verifier message: {err}");
+}
+
+#[test]
+fn negative_dist_backend_rejects_programs() {
+    let prog = compile_file("dsl/cc_dynamic.sp");
+    let e = engine(BackendKind::Dist);
+    assert!(!e.capabilities().supports_programs);
+    let mut g = generators::uniform_random(10, 40, 5, 105);
+    let mut st =
+        ProgState::new(&prog, g.num_nodes(), &args(&[("batchSize", ScalarVal::I(4))])).unwrap();
+    let err = e.run_program(&prog, Phase::Init, &mut g, &mut st).unwrap_err().to_string();
+    assert!(
+        err.contains("does not support DSL bytecode programs"),
+        "unexpected: {err}"
+    );
+}
+
+#[test]
+fn negative_serve_program_rejects_wal() {
+    let prog = Arc::new(compile_file("dsl/cc_dynamic.sp"));
+    let mut cfg = ServiceConfig::new(Algo::Sssp);
+    cfg.program =
+        Some(ProgramConfig { prog, args: args(&[("batchSize", ScalarVal::I(8))]) });
+    cfg.durability.wal_dir = Some(std::env::temp_dir().join("starplat-prog-wal-negative"));
+    let g = generators::uniform_random(10, 40, 5, 106);
+    let err = GraphService::try_start(g, cfg).unwrap_err().to_string();
+    assert!(err.contains("--wal"), "program+wal must be rejected up front: {err}");
+}
+
+#[test]
+fn negative_sharded_service_rejects_programs() {
+    let prog = Arc::new(compile_file("dsl/cc_dynamic.sp"));
+    let mut cfg = ServiceConfig::new(Algo::Sssp);
+    cfg.engine_shards = 2;
+    cfg.program =
+        Some(ProgramConfig { prog, args: args(&[("batchSize", ScalarVal::I(8))]) });
+    let g = generators::uniform_random(40, 160, 5, 107);
+    let err = ShardedService::try_start(g, cfg).unwrap_err().to_string();
+    assert!(
+        err.contains("single-engine"),
+        "sharded+program must be rejected up front: {err}"
+    );
+}
+
+#[test]
+fn negative_second_shutdown_is_typed_not_a_panic() {
+    let g = generators::uniform_random(30, 120, 5, 108);
+    let svc = GraphService::try_start(g, ServiceConfig::new(Algo::Sssp)).unwrap();
+    svc.drain();
+    svc.try_shutdown().expect("healthy first shutdown succeeds");
+    assert!(
+        matches!(svc.try_shutdown(), Err(ShutdownError::AlreadyShutDown)),
+        "second shutdown must be AlreadyShutDown"
+    );
+}

@@ -36,7 +36,8 @@ use starplat_dyn::backend::{BackendKind, EngineOpts};
 use starplat_dyn::coordinator::{stream_workload, Algo};
 use starplat_dyn::graph::{generators, DynGraph, NodeId, Update, UpdateKind, UpdateStream};
 use starplat_dyn::stream::{
-    wal, GraphService, Ingest, MergePolicy, ServiceConfig, ShardedService, SubmitError,
+    wal, GraphService, Ingest, MergePolicy, ServiceConfig, ShardedService, ShutdownError,
+    SubmitError,
 };
 use starplat_dyn::util::failpoint::{self, Scenario};
 use starplat_dyn::util::threadpool::Sched;
@@ -146,10 +147,11 @@ fn feed_single(g0: &DynGraph, w: &[Update], cfg: ServiceConfig) -> u64 {
     let epoch = svc.epoch();
     match svc.try_shutdown() {
         Ok(_) => {} // the site never fired (legal for probabilistic specs)
-        Err(d) => {
+        Err(ShutdownError::Degraded(d)) => {
             assert!(d.stats.degraded, "typed shutdown error implies degraded stats");
             assert!(d.stats.restarts >= 1, "a caught crash must be counted");
         }
+        Err(e) => panic!("unexpected shutdown error: {e}"),
     }
     epoch
 }
@@ -165,10 +167,11 @@ fn feed_sharded(g0: &DynGraph, w: &[Update], cfg: ServiceConfig) -> u64 {
     let epoch = svc.epoch();
     match svc.try_shutdown() {
         Ok(_) => {}
-        Err(d) => {
+        Err(ShutdownError::Degraded(d)) => {
             assert!(d.stats.degraded);
             assert!(d.stats.restarts >= 1);
         }
+        Err(e) => panic!("unexpected shutdown error: {e}"),
     }
     epoch
 }
@@ -485,9 +488,18 @@ fn engine_death_without_wal_degrades_to_read_only() {
     );
     assert!(!svc.insert(3, 4, 1), "bool submits must also be rejected");
     svc.drain_timeout(DRAIN).expect("poison sweep settles the backlog");
-    let d = svc.try_shutdown().expect_err("degraded shutdown must be typed");
+    let ShutdownError::Degraded(d) =
+        svc.try_shutdown().expect_err("degraded shutdown must be typed")
+    else {
+        panic!("expected Degraded");
+    };
     assert!(d.stats.degraded);
     assert_eq!(d.stats.restarts, 1, "one caught crash, zero budget");
+    // Shutdown is idempotent: the report is gone, the second call says so.
+    assert!(
+        matches!(svc.try_shutdown(), Err(ShutdownError::AlreadyShutDown)),
+        "second shutdown must be AlreadyShutDown, not a panic"
+    );
 }
 
 /// The sharded fleet funnels worker panics through the same supervisor:
@@ -514,9 +526,17 @@ fn sharded_engine_death_degrades_to_read_only() {
         || svc.epoch(),
     );
     svc.drain_timeout(DRAIN).expect("poison sweep settles the backlog");
-    let d = svc.try_shutdown().expect_err("degraded shutdown must be typed");
+    let ShutdownError::Degraded(d) =
+        svc.try_shutdown().expect_err("degraded shutdown must be typed")
+    else {
+        panic!("expected Degraded");
+    };
     assert!(d.stats.degraded);
     assert_eq!(d.stats.restarts, 1);
+    assert!(
+        matches!(svc.try_shutdown(), Err(ShutdownError::AlreadyShutDown)),
+        "second sharded shutdown must be AlreadyShutDown, not a panic"
+    );
 }
 
 // ------------------------------------------------------ overload shedding
