@@ -70,6 +70,20 @@ fn main() -> Result<()> {
         prog.on_batch.len()
     );
 
+    // the IR-level certificate: what the race/effect analysis proved
+    // about the lowered program (also: `starplat analyze dsl/cc_dynamic.sp`).
+    println!("  facts: {}", prog.facts.summary());
+    for lf in &prog.facts.loops {
+        println!(
+            "    par {}@{} ({}, {}) sync=[{}]",
+            lf.seg,
+            lf.pc,
+            lf.span,
+            lf.domain,
+            lf.sync.join(", ")
+        );
+    }
+
     let engine = make_engine(BackendKind::Cpu, &EngineOpts::default())?;
     let mut g = generators::uniform_random(2000, 16_000, 9, 42);
     let stream = UpdateStream::generate_percent(&g, 5.0, 64, 9, 7);

@@ -199,7 +199,9 @@ pub trait DynamicEngine {
     /// pre-`Batch` prefix (the static seed), `Phase::Batch` runs the
     /// per-batch body over a deletion/addition window. Engines advertise
     /// support via [`Capabilities::supports_programs`]; the default
-    /// implementation is a typed rejection naming the backend.
+    /// implementation is a typed rejection that consults the program's
+    /// analysis certificate to name the construct this backend has no
+    /// lowering for.
     fn run_program(
         &self,
         prog: &crate::dsl::bytecode::Program,
@@ -207,11 +209,12 @@ pub trait DynamicEngine {
         g: &mut DynGraph,
         st: &mut crate::dsl::bytecode::ProgState,
     ) -> Result<()> {
-        let _ = (prog, phase, g, st);
+        let _ = (phase, g, st);
         bail!(
-            "backend `{}` does not support DSL bytecode programs \
-             (supports_programs = false); use --backend serial or --backend cpu",
-            self.capabilities().name
+            "backend `{}` does not support DSL bytecode programs: {}; \
+             use --backend serial or --backend cpu",
+            self.capabilities().name,
+            prog.facts.blocking_construct(),
         );
     }
 

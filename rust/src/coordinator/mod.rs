@@ -265,6 +265,10 @@ pub fn run_program_cell(
 ) -> Result<(Cell, crate::dsl::bytecode::ProgState)> {
     use crate::dsl::bytecode::{Phase, ProgState};
     let e = make_engine(backend, &opts)?;
+    // Admission up front: the certificate names the blocking construct
+    // before any graph clone or static solve is paid for.
+    let caps = e.capabilities();
+    prog.facts.admit(caps.name, caps.supports_programs)?;
     let stream = UpdateStream::generate_percent(g0, percent, batch_size, 9, seed);
     let mut cell = empty_cell();
 

@@ -1,0 +1,1153 @@
+//! Static race & effect analysis over the bytecode IR.
+//!
+//! [`certify`] runs between `lower` and `verify`: it walks every
+//! [`Instr::Par`] region of a lowered [`Program`] and
+//!
+//! 1. computes **effect summaries** — per property, the read/write sets
+//!    classified by access shape (owner-local `v.prop`, neighbor
+//!    `nbr.prop`, edge-endpoint src/dst registers, loop-uniform
+//!    registers, indirect pointer chains like `v.parent.modified`);
+//! 2. runs **race detection** over cross-iteration write-write and
+//!    read-write conflicts, admitting exactly the shapes the executor
+//!    makes deterministic — owner-disjoint stores, slot-folded
+//!    accumulator reductions, monotone CAS-min relaxations with
+//!    idempotent-constant or repair-covered companions — and rejecting
+//!    everything else with a `line:col`-spanned, coded diagnostic;
+//! 3. infers the **synchronization** the lowerer used to hand-pattern
+//!    match: the `(dist, parent)` pairs needing a deterministic
+//!    [`Instr::RepairParents`] at the segment tails are derived here
+//!    ([`infer_repairs`]) from the relax shape in the IR, not from AST
+//!    pattern matching in the lowerer;
+//! 4. emits a [`ProgramFacts`] **certificate** (per-loop sync
+//!    annotations, determinism verdict incl. f64 fold-order safety,
+//!    batch-segment monotonicity, dead-property and unreachable-code
+//!    reports, lint diagnostics) that travels with the compiled program
+//!    and drives per-program backend admission — `run_program` on a
+//!    backend without a bytecode executor explains *which* construct
+//!    blocks it instead of a blanket capability bit.
+//!
+//! Diagnostic codes (errors reject the program; lints are warnings):
+//!
+//! * `R001` — plain store through a non-owner index in a parallel loop
+//!   (cross-iteration write-write race).
+//! * `R002` — CAS-min companion write that is neither an idempotent
+//!   constant nor the relax source covered by a parent repair
+//!   (non-monotone companion; its final value would be schedule-dependent).
+//! * `R003` — cross-iteration read of a property whose writes in the
+//!   same loop are neither all monotone CAS-min nor all identical
+//!   constants (read-after-racy-write).
+//! * `R004` — plain stores and CAS-min mixed on one property in one
+//!   loop (the store races the relax).
+//! * `L001` (lint) — property read in the batch segment but never
+//!   written by `Init` or a prior batch statement (it silently reads
+//!   the zero-fill from state creation).
+
+use crate::dsl::ast::Span;
+use crate::dsl::bytecode::{
+    AccumKind, Domain, Instr, ParOp, Program, PropId, RegId, VExpr, VStmt,
+};
+use crate::util::error::{bail, Result};
+use std::collections::{BTreeMap, BTreeSet};
+
+// ---------------------------------------------------------------------------
+// taxonomy
+// ---------------------------------------------------------------------------
+
+/// How a property element is addressed from inside a parallel loop,
+/// relative to the loop's subject vertex.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum AccessShape {
+    /// `v.prop` — indexed by the subject; disjoint across iterations.
+    Owner,
+    /// `nbr.prop` — indexed by a neighbor-loop binding; cross-vertex.
+    Neighbor,
+    /// indexed by an update-tuple src/dst register (edge endpoint).
+    EdgeEndpoint,
+    /// indexed by a loop-invariant register: every iteration addresses
+    /// the same element.
+    Uniform,
+    /// indexed through a pointer chain (`v.parent.modified`) or any
+    /// other computed index.
+    Indirect,
+}
+
+impl AccessShape {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            AccessShape::Owner => "owner",
+            AccessShape::Neighbor => "neighbor",
+            AccessShape::EdgeEndpoint => "edge-endpoint",
+            AccessShape::Uniform => "uniform",
+            AccessShape::Indirect => "indirect",
+        }
+    }
+}
+
+impl std::fmt::Display for AccessShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// What kind of write a site is, after classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WriteClass {
+    /// plain store; safe only owner-shaped (disjoint cells).
+    Plain,
+    /// monotone CAS-min — commutative, idempotent, schedule-independent
+    /// at the fixed point.
+    CasMin,
+    /// companion storing a constant: every racing writer stores the
+    /// same value, so the outcome is schedule-independent.
+    FlagConst,
+    /// companion storing the relax source (a parent pointer); racy on
+    /// its own, made deterministic by the trailing argmin
+    /// `RepairParents` this analysis schedules.
+    Repaired,
+}
+
+impl WriteClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WriteClass::Plain => "store",
+            WriteClass::CasMin => "cas-min",
+            WriteClass::FlagConst => "flag-const",
+            WriteClass::Repaired => "parent-repaired",
+        }
+    }
+}
+
+/// A `(dist, parent)` pair whose companion writes need the
+/// deterministic argmin repair at both segment tails.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RepairSpec {
+    pub dist: PropId,
+    pub parent: PropId,
+    pub unit_weight: bool,
+}
+
+/// One write site inside a parallel loop.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WriteFacts {
+    pub shape: AccessShape,
+    pub class: WriteClass,
+}
+
+/// Effect summary for one property inside one parallel loop.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct EffectFacts {
+    pub prop: String,
+    /// distinct read shapes (deduplicated, sorted).
+    pub reads: Vec<AccessShape>,
+    /// every write site, in body order.
+    pub writes: Vec<WriteFacts>,
+}
+
+/// Per-loop certificate entry.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LoopFacts {
+    /// `"init"` or `"on_batch"`.
+    pub seg: &'static str,
+    pub pc: usize,
+    pub span: Span,
+    /// `"nodes"` or `"out-neighbors"`.
+    pub domain: &'static str,
+    /// inferred synchronization tags: `owner-writes`, `cas-relax`,
+    /// `slot-fold`, `monotone-flag`, `relaxed-read`, `pure`.
+    pub sync: Vec<&'static str>,
+    pub effects: Vec<EffectFacts>,
+    /// slot-folded reductions: (register, kind).
+    pub accums: Vec<(RegId, AccumKind)>,
+}
+
+/// A warning-level diagnostic (does not reject the program).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Lint {
+    pub code: &'static str,
+    pub seg: &'static str,
+    pub pc: usize,
+    /// the enclosing loop's span when the read sits in one,
+    /// `Span::default()` for straight-line driver code.
+    pub span: Span,
+    pub message: String,
+}
+
+impl std::fmt::Display for Lint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.span == Span::default() {
+            write!(f, "{}@{}: {}: {}", self.seg, self.pc, self.code, self.message)
+        } else {
+            write!(f, "{}: {}: {}", self.span, self.code, self.message)
+        }
+    }
+}
+
+/// The analysis certificate attached to every compiled [`Program`].
+///
+/// Hand-built programs (tests) carry `Default::default()` — no loops,
+/// `certified = false` — and are rejected by program-less backends with
+/// the generic explanation.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProgramFacts {
+    /// true iff [`certify`] ran (distinguishes a real certificate from
+    /// a defaulted one on hand-built programs).
+    pub certified: bool,
+    pub loops: Vec<LoopFacts>,
+    pub repairs: Vec<RepairSpec>,
+    /// property names for the repair pairs (JSON/report convenience).
+    pub repair_names: Vec<(String, String)>,
+    /// every cross-vertex (non-owner) write in the program is a
+    /// monotone CAS-min relax or one of its admissible companions —
+    /// the precondition a dist superstep lowering needs.
+    pub relax_only_cross_vertex_writes: bool,
+    /// every cross-vertex write in the *batch* segment is monotone
+    /// (CAS-min or idempotent flag) — Incremental hooks only move
+    /// labels toward the fixed point.
+    pub batch_monotone: bool,
+    /// no race diagnostics: serial and parallel execution are bitwise
+    /// identical (per-item slots, index-order folds, CAS-min + repair).
+    pub deterministic: bool,
+    /// float reductions are slot-folded in index order, so f64
+    /// non-associativity cannot leak schedule dependence.
+    pub f64_fold_order_safe: bool,
+    /// number of `AddF` accumulators the fold-order guarantee covers.
+    pub float_accums: usize,
+    /// properties never read by any instruction in either segment.
+    pub dead_props: Vec<String>,
+    /// instructions unreachable from either segment's entry.
+    pub unreachable_instrs: usize,
+    pub lints: Vec<Lint>,
+}
+
+// ---------------------------------------------------------------------------
+// entry points
+// ---------------------------------------------------------------------------
+
+/// Analyze a freshly-lowered program: infer the repair schedule, append
+/// the [`Instr::RepairParents`] tails, run race detection, and return
+/// the certificate. Called by `lower` between lowering and `verify`.
+pub fn certify(prog: &mut Program) -> Result<ProgramFacts> {
+    let repairs = infer_repairs(prog);
+    for r in &repairs {
+        let ins = Instr::RepairParents {
+            dist: r.dist,
+            parent: r.parent,
+            unit_weight: r.unit_weight,
+        };
+        prog.init.push(ins.clone());
+        prog.on_batch.push(ins);
+    }
+    analyze_program(prog, &repairs)
+}
+
+/// Derive the repair schedule from the IR: a parallel
+/// `MinAssign { prop: d, val: d[src] + w, comps }` whose companion
+/// stores `src` into an Int property `p` is an SSSP/BFS-style relax
+/// recording a parent pointer — racy under CAS-min, so `(d, p)` gets a
+/// deterministic argmin [`Instr::RepairParents`] at both segment tails
+/// (`w == 1` marks the unit-weight BFS variant). This replaces the
+/// lowerer's old AST pattern match; sequential relaxes (OnAdd seeding)
+/// need no repair of their own — they are deterministic, and the pairs
+/// they touch are exactly the ones the parallel relaxes already
+/// register.
+pub fn infer_repairs(prog: &Program) -> Vec<RepairSpec> {
+    let mut out: Vec<RepairSpec> = Vec::new();
+    for code in [&prog.init, &prog.on_batch] {
+        for ins in code {
+            if let Instr::Par(op) = ins {
+                repairs_in_body(&op.body, &mut out);
+            }
+        }
+    }
+    out
+}
+
+fn repairs_in_body(body: &[VStmt], out: &mut Vec<RepairSpec>) {
+    for s in body {
+        match s {
+            VStmt::MinAssign { prop, val, comps, .. } => {
+                if let Some((src, unit_weight)) = relax_source(*prop, val) {
+                    for (p, _ci, cv) in comps {
+                        if cv == src && !out.iter().any(|r| r.dist == *prop && r.parent == *p) {
+                            out.push(RepairSpec { dist: *prop, parent: *p, unit_weight });
+                        }
+                    }
+                }
+            }
+            VStmt::If { then, els, .. } => {
+                repairs_in_body(then, out);
+                repairs_in_body(els, out);
+            }
+            VStmt::ForOut { body, .. } | VStmt::ForIn { body, .. } => repairs_in_body(body, out),
+            VStmt::SetLocal(..) | VStmt::StoreProp(..) | VStmt::Accum { .. } => {}
+        }
+    }
+}
+
+/// `val == d[src] + w` for the relax on property `d`: returns the
+/// source index expression and whether `w` is the literal 1.
+fn relax_source(d: PropId, val: &VExpr) -> Option<(&VExpr, bool)> {
+    let VExpr::Bin(crate::dsl::ast::BinOp::Add, lhs, rhs) = val else {
+        return None;
+    };
+    let VExpr::LoadProp(p, src) = &**lhs else {
+        return None;
+    };
+    if *p != d {
+        return None;
+    }
+    Some((&**src, matches!(&**rhs, VExpr::ConstI(1))))
+}
+
+/// The full pass over an already-repair-scheduled program. Errors are
+/// race diagnostics; `Ok` carries the certificate.
+pub fn analyze_program(prog: &Program, repairs: &[RepairSpec]) -> Result<ProgramFacts> {
+    let mut facts = ProgramFacts {
+        certified: true,
+        repairs: repairs.to_vec(),
+        repair_names: repairs
+            .iter()
+            .map(|r| (prog.props[r.dist].name.clone(), prog.props[r.parent].name.clone()))
+            .collect(),
+        deterministic: true,
+        f64_fold_order_safe: true,
+        relax_only_cross_vertex_writes: true,
+        batch_monotone: true,
+        ..Default::default()
+    };
+
+    for (seg, code) in [("init", &prog.init), ("on_batch", &prog.on_batch)] {
+        let upd_regs = endpoint_regs(prog, code);
+        for (pc, ins) in code.iter().enumerate() {
+            if let Instr::Par(op) = ins {
+                let lf = analyze_par(prog, seg, pc, op, &upd_regs, repairs)?;
+                for e in &lf.effects {
+                    for w in &e.writes {
+                        if w.shape != AccessShape::Owner && w.class == WriteClass::Plain {
+                            facts.relax_only_cross_vertex_writes = false;
+                        }
+                        if seg == "on_batch"
+                            && w.shape != AccessShape::Owner
+                            && !matches!(w.class, WriteClass::CasMin | WriteClass::FlagConst)
+                            && w.class != WriteClass::Repaired
+                        {
+                            facts.batch_monotone = false;
+                        }
+                    }
+                }
+                facts.float_accums +=
+                    lf.accums.iter().filter(|(_, k)| *k == AccumKind::AddF).count();
+                facts.loops.push(lf);
+            }
+        }
+    }
+
+    facts.dead_props = dead_props(prog);
+    facts.unreachable_instrs = unreachable_instrs(&prog.init) + unreachable_instrs(&prog.on_batch);
+    facts.lints = uninit_read_lints(prog);
+    Ok(facts)
+}
+
+// ---------------------------------------------------------------------------
+// per-loop effect summary + race detection
+// ---------------------------------------------------------------------------
+
+/// Internal per-property accumulation while walking one Par body.
+#[derive(Default)]
+struct PropEffect {
+    reads: BTreeSet<AccessShape>,
+    writes: Vec<WriteSite>,
+}
+
+struct WriteSite {
+    shape: AccessShape,
+    class: WriteClass,
+    /// the stored constant, when the value is a literal (idempotence
+    /// check for racy reads of flag properties).
+    cval: Option<ConstVal>,
+    span: Span,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum ConstVal {
+    I(i64),
+    F(f64),
+    B(bool),
+}
+
+fn const_of(e: &VExpr) -> Option<ConstVal> {
+    match e {
+        VExpr::ConstI(v) => Some(ConstVal::I(*v)),
+        VExpr::ConstF(v) => Some(ConstVal::F(*v)),
+        VExpr::ConstB(v) => Some(ConstVal::B(*v)),
+        _ => None,
+    }
+}
+
+struct LoopWalk<'a> {
+    prog: &'a Program,
+    upd_regs: &'a [bool],
+    repairs: &'a [RepairSpec],
+    /// locals currently bound as neighbor-loop variables.
+    nbr_locals: Vec<bool>,
+    /// innermost enclosing loop span (the Par's own span at top level).
+    spans: Vec<Span>,
+    effects: BTreeMap<PropId, PropEffect>,
+}
+
+impl LoopWalk<'_> {
+    fn span(&self) -> Span {
+        *self.spans.last().expect("span stack never empty")
+    }
+
+    fn shape(&self, idx: &VExpr) -> AccessShape {
+        match idx {
+            VExpr::Subject => AccessShape::Owner,
+            VExpr::Local(l) if self.nbr_locals[*l] => AccessShape::Neighbor,
+            VExpr::Reg(r) if self.upd_regs[*r] => AccessShape::EdgeEndpoint,
+            VExpr::Reg(_) => AccessShape::Uniform,
+            _ => AccessShape::Indirect,
+        }
+    }
+
+    fn read(&mut self, p: PropId, shape: AccessShape) {
+        self.effects.entry(p).or_default().reads.insert(shape);
+    }
+
+    fn write(&mut self, p: PropId, site: WriteSite) {
+        self.effects.entry(p).or_default().writes.push(site);
+    }
+
+    /// Record every property read inside an expression.
+    fn reads_in(&mut self, e: &VExpr) {
+        match e {
+            VExpr::LoadProp(p, idx) => {
+                let s = self.shape(idx);
+                self.read(*p, s);
+                self.reads_in(idx);
+            }
+            VExpr::OutDegree(x) | VExpr::Not(x) | VExpr::Neg(x) => self.reads_in(x),
+            VExpr::IsEdge(a, b) | VExpr::Contains(_, a, b) | VExpr::Bin(_, a, b) => {
+                self.reads_in(a);
+                self.reads_in(b);
+            }
+            VExpr::ConstI(_)
+            | VExpr::ConstF(_)
+            | VExpr::ConstB(_)
+            | VExpr::Subject
+            | VExpr::Reg(_)
+            | VExpr::Local(_) => {}
+        }
+    }
+
+    fn walk(&mut self, body: &[VStmt]) -> Result<()> {
+        for s in body {
+            match s {
+                VStmt::SetLocal(_, e) => self.reads_in(e),
+                VStmt::StoreProp(p, idx, val) => {
+                    self.reads_in(idx);
+                    self.reads_in(val);
+                    let site = WriteSite {
+                        shape: self.shape(idx),
+                        class: WriteClass::Plain,
+                        cval: const_of(val),
+                        span: self.span(),
+                    };
+                    self.write(*p, site);
+                }
+                VStmt::MinAssign { prop, idx, val, comps } => {
+                    self.reads_in(idx);
+                    self.reads_in(val);
+                    // the CAS reads its target before comparing.
+                    let tshape = self.shape(idx);
+                    self.read(*prop, tshape);
+                    self.write(
+                        *prop,
+                        WriteSite {
+                            shape: tshape,
+                            class: WriteClass::CasMin,
+                            cval: None,
+                            span: self.span(),
+                        },
+                    );
+                    let src = relax_source(*prop, val).map(|(s, _)| s);
+                    for (cp, ci, cv) in comps {
+                        self.reads_in(ci);
+                        self.reads_in(cv);
+                        let cshape = self.shape(ci);
+                        let class = if const_of(cv).is_some() {
+                            WriteClass::FlagConst
+                        } else if src.is_some_and(|s| cv == s)
+                            && self.repairs.iter().any(|r| r.dist == *prop && r.parent == *cp)
+                        {
+                            WriteClass::Repaired
+                        } else {
+                            bail!(
+                                "{}: R002: companion write to property {:?} ({} index) under \
+                                 the CAS-min on {:?} is neither an idempotent constant nor the \
+                                 relax source — its final value depends on the winning schedule",
+                                self.span(),
+                                self.prog.props[*cp].name,
+                                cshape,
+                                self.prog.props[*prop].name,
+                            );
+                        };
+                        let site = WriteSite {
+                            shape: cshape,
+                            class,
+                            cval: const_of(cv),
+                            span: self.span(),
+                        };
+                        self.write(*cp, site);
+                    }
+                }
+                VStmt::If { cond, then, els } => {
+                    self.reads_in(cond);
+                    self.walk(then)?;
+                    self.walk(els)?;
+                }
+                VStmt::ForOut { of, nbr, body, span, .. } => {
+                    self.reads_in(of);
+                    self.nbr_locals[*nbr] = true;
+                    self.spans.push(*span);
+                    self.walk(body)?;
+                    self.spans.pop();
+                    self.nbr_locals[*nbr] = false;
+                }
+                VStmt::ForIn { of, nbr, body, span } => {
+                    self.reads_in(of);
+                    self.nbr_locals[*nbr] = true;
+                    self.spans.push(*span);
+                    self.walk(body)?;
+                    self.spans.pop();
+                    self.nbr_locals[*nbr] = false;
+                }
+                VStmt::Accum { val, .. } => self.reads_in(val),
+            }
+        }
+        Ok(())
+    }
+}
+
+fn analyze_par(
+    prog: &Program,
+    seg: &'static str,
+    pc: usize,
+    op: &ParOp,
+    upd_regs: &[bool],
+    repairs: &[RepairSpec],
+) -> Result<LoopFacts> {
+    let mut w = LoopWalk {
+        prog,
+        upd_regs,
+        repairs,
+        nbr_locals: vec![false; op.locals.len()],
+        spans: vec![op.span],
+        effects: BTreeMap::new(),
+    };
+    w.walk(&op.body)?;
+    let effects = std::mem::take(&mut w.effects);
+
+    // race detection per property.
+    let mut tags: BTreeSet<&'static str> = BTreeSet::new();
+    for (pid, eff) in &effects {
+        let pname = &prog.props[*pid].name;
+        if let Some(site) = eff
+            .writes
+            .iter()
+            .find(|s| s.class == WriteClass::Plain && s.shape != AccessShape::Owner)
+        {
+            bail!(
+                "{}: R001: parallel loop writes property {:?} through a {} index — a plain \
+                 store in a parallel region is a cross-iteration write-write race (reduce into \
+                 a scalar, or relax with <Min(...)>)",
+                site.span,
+                pname,
+                site.shape,
+            );
+        }
+        let has_plain = eff.writes.iter().any(|s| s.class == WriteClass::Plain);
+        let has_min = eff.writes.iter().any(|s| s.class == WriteClass::CasMin);
+        if has_plain && has_min {
+            let site = eff.writes.iter().find(|s| s.class == WriteClass::Plain).unwrap();
+            bail!(
+                "{}: R004: property {:?} is both plainly stored and CAS-min relaxed in one \
+                 parallel loop — the store races the relax",
+                site.span,
+                pname,
+            );
+        }
+        if !eff.reads.is_empty() && !eff.writes.is_empty() {
+            let crosses = eff.reads.iter().any(|s| *s != AccessShape::Owner)
+                || eff.writes.iter().any(|s| s.shape != AccessShape::Owner);
+            if crosses {
+                let all_min = eff.writes.iter().all(|s| s.class == WriteClass::CasMin);
+                let all_same_const = eff.writes.first().is_some_and(|first| {
+                    first.cval.is_some() && eff.writes.iter().all(|s| s.cval == first.cval)
+                });
+                if all_min {
+                    tags.insert("relaxed-read");
+                } else if all_same_const {
+                    tags.insert("monotone-flag");
+                } else {
+                    let shape = eff
+                        .reads
+                        .iter()
+                        .find(|s| **s != AccessShape::Owner)
+                        .copied()
+                        .unwrap_or(AccessShape::Owner);
+                    let site = eff
+                        .writes
+                        .iter()
+                        .find(|s| s.shape != AccessShape::Owner)
+                        .unwrap_or(&eff.writes[0]);
+                    bail!(
+                        "{}: R003: property {:?} is read through a {} index while another \
+                         iteration may be storing it — the read observes a racy in-flight \
+                         value (double-buffer the property, or make every write a CAS-min or \
+                         an identical constant)",
+                        site.span,
+                        pname,
+                        shape,
+                    );
+                }
+            }
+        }
+        for s in &eff.writes {
+            match s.class {
+                WriteClass::CasMin => {
+                    tags.insert("cas-relax");
+                }
+                WriteClass::Plain if s.shape == AccessShape::Owner => {
+                    tags.insert("owner-writes");
+                }
+                _ => {}
+            }
+        }
+    }
+    if !op.accums.is_empty() {
+        tags.insert("slot-fold");
+    }
+    if tags.is_empty() {
+        tags.insert("pure");
+    }
+
+    Ok(LoopFacts {
+        seg,
+        pc,
+        span: op.span,
+        domain: match op.domain {
+            Domain::Nodes => "nodes",
+            Domain::OutNbrs { .. } => "out-neighbors",
+        },
+        sync: tags.into_iter().collect(),
+        effects: effects
+            .into_iter()
+            .map(|(pid, eff)| EffectFacts {
+                prop: prog.props[pid].name.clone(),
+                reads: eff.reads.into_iter().collect(),
+                writes: eff
+                    .writes
+                    .into_iter()
+                    .map(|s| WriteFacts { shape: s.shape, class: s.class })
+                    .collect(),
+            })
+            .collect(),
+        accums: op.accums.iter().map(|a| (a.reg, a.kind)).collect(),
+    })
+}
+
+/// Registers holding update-tuple endpoints in this segment: tainted by
+/// `UpdGet` src/dst and propagated through `Mov` to a fixed point.
+fn endpoint_regs(prog: &Program, code: &[Instr]) -> Vec<bool> {
+    let mut t = vec![false; prog.regs.len()];
+    loop {
+        let mut changed = false;
+        for ins in code {
+            match ins {
+                Instr::UpdGet { src, dst, .. } => {
+                    for r in [*src, *dst] {
+                        if !t[r] {
+                            t[r] = true;
+                            changed = true;
+                        }
+                    }
+                }
+                Instr::Mov { dst, src } if t[*src] && !t[*dst] => {
+                    t[*dst] = true;
+                    changed = true;
+                }
+                _ => {}
+            }
+        }
+        if !changed {
+            return t;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// whole-program reports: dead properties, unreachable code, uninit reads
+// ---------------------------------------------------------------------------
+
+/// (reads, writes) of one instruction at the property level, Par bodies
+/// included.
+fn instr_prop_effects(ins: &Instr, reads: &mut BTreeSet<PropId>, writes: &mut BTreeSet<PropId>) {
+    match ins {
+        Instr::LoadProp { prop, .. } | Instr::AnyTrue { prop, .. } => {
+            reads.insert(*prop);
+        }
+        Instr::StoreProp { prop, .. } | Instr::Fill { prop, .. } => {
+            writes.insert(*prop);
+        }
+        Instr::CopyProp { dst, src } => {
+            reads.insert(*src);
+            writes.insert(*dst);
+        }
+        Instr::PropagateFlags { prop } => {
+            reads.insert(*prop);
+            writes.insert(*prop);
+        }
+        Instr::RepairParents { dist, parent, .. } => {
+            reads.insert(*dist);
+            writes.insert(*parent);
+        }
+        Instr::Par(op) => vstmt_prop_effects(&op.body, reads, writes),
+        _ => {}
+    }
+}
+
+fn vexpr_prop_reads(e: &VExpr, reads: &mut BTreeSet<PropId>) {
+    match e {
+        VExpr::LoadProp(p, idx) => {
+            reads.insert(*p);
+            vexpr_prop_reads(idx, reads);
+        }
+        VExpr::OutDegree(x) | VExpr::Not(x) | VExpr::Neg(x) => vexpr_prop_reads(x, reads),
+        VExpr::IsEdge(a, b) | VExpr::Contains(_, a, b) | VExpr::Bin(_, a, b) => {
+            vexpr_prop_reads(a, reads);
+            vexpr_prop_reads(b, reads);
+        }
+        _ => {}
+    }
+}
+
+fn vstmt_prop_effects(
+    body: &[VStmt],
+    reads: &mut BTreeSet<PropId>,
+    writes: &mut BTreeSet<PropId>,
+) {
+    for s in body {
+        match s {
+            VStmt::SetLocal(_, e) | VStmt::Accum { val: e, .. } => vexpr_prop_reads(e, reads),
+            VStmt::StoreProp(p, idx, val) => {
+                writes.insert(*p);
+                vexpr_prop_reads(idx, reads);
+                vexpr_prop_reads(val, reads);
+            }
+            VStmt::MinAssign { prop, idx, val, comps } => {
+                reads.insert(*prop);
+                writes.insert(*prop);
+                vexpr_prop_reads(idx, reads);
+                vexpr_prop_reads(val, reads);
+                for (p, ci, cv) in comps {
+                    writes.insert(*p);
+                    vexpr_prop_reads(ci, reads);
+                    vexpr_prop_reads(cv, reads);
+                }
+            }
+            VStmt::If { cond, then, els } => {
+                vexpr_prop_reads(cond, reads);
+                vstmt_prop_effects(then, reads, writes);
+                vstmt_prop_effects(els, reads, writes);
+            }
+            VStmt::ForOut { of, body, .. } | VStmt::ForIn { of, body, .. } => {
+                vexpr_prop_reads(of, reads);
+                vstmt_prop_effects(body, reads, writes);
+            }
+        }
+    }
+}
+
+fn dead_props(prog: &Program) -> Vec<String> {
+    let mut reads = BTreeSet::new();
+    let mut writes = BTreeSet::new();
+    for ins in prog.init.iter().chain(&prog.on_batch) {
+        instr_prop_effects(ins, &mut reads, &mut writes);
+    }
+    prog.props
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| !reads.contains(i))
+        .map(|(_, d)| d.name.clone())
+        .collect()
+}
+
+fn unreachable_instrs(code: &[Instr]) -> usize {
+    if code.is_empty() {
+        return 0;
+    }
+    let mut seen = vec![false; code.len()];
+    let mut stack = vec![0usize];
+    while let Some(pc) = stack.pop() {
+        if pc >= code.len() || seen[pc] {
+            continue;
+        }
+        seen[pc] = true;
+        match &code[pc] {
+            Instr::Jump { target } => stack.push(*target),
+            Instr::JumpIf { target, .. } | Instr::JumpIfNot { target, .. } => {
+                stack.push(*target);
+                stack.push(pc + 1);
+            }
+            _ => stack.push(pc + 1),
+        }
+    }
+    seen.iter().filter(|s| !**s).count()
+}
+
+/// L001: properties read in the batch segment before any write in Init
+/// or earlier in the segment (execution still sees the zero-fill from
+/// state creation, so this is a warning, not an error).
+fn uninit_read_lints(prog: &Program) -> Vec<Lint> {
+    let mut written: BTreeSet<PropId> = BTreeSet::new();
+    for ins in &prog.init {
+        let mut r = BTreeSet::new();
+        instr_prop_effects(ins, &mut r, &mut written);
+    }
+    let mut lints = Vec::new();
+    let mut flagged: BTreeSet<PropId> = BTreeSet::new();
+    for (pc, ins) in prog.on_batch.iter().enumerate() {
+        let (mut reads, mut writes) = (BTreeSet::new(), BTreeSet::new());
+        instr_prop_effects(ins, &mut reads, &mut writes);
+        for p in reads {
+            if !written.contains(&p) && flagged.insert(p) {
+                let span = match ins {
+                    Instr::Par(op) => op.span,
+                    _ => Span::default(),
+                };
+                lints.push(Lint {
+                    code: "L001",
+                    seg: "on_batch",
+                    pc,
+                    span,
+                    message: format!(
+                        "property {:?} is read in the batch segment but never written by Init \
+                         or a prior batch statement — it reads the zero-fill from state creation",
+                        prog.props[p].name
+                    ),
+                });
+            }
+        }
+        written.extend(writes);
+    }
+    lints
+}
+
+// ---------------------------------------------------------------------------
+// certificate: admission, summary, JSON
+// ---------------------------------------------------------------------------
+
+impl ProgramFacts {
+    /// Name the construct that blocks a backend without a bytecode
+    /// executor — the most demanding feature first (cross-vertex relax,
+    /// then float folds, then anything at all).
+    pub fn blocking_construct(&self) -> String {
+        if !self.certified {
+            return "the program carries no analysis certificate (hand-built bytecode)".into();
+        }
+        for lf in &self.loops {
+            for e in &lf.effects {
+                if let Some(w) = e.writes.iter().find(|w| w.shape != AccessShape::Owner) {
+                    return format!(
+                        "the parallel loop at {} ({}@{}) {} property {:?} through a {} index \
+                         (cross-vertex {})",
+                        lf.span,
+                        lf.seg,
+                        lf.pc,
+                        if w.class == WriteClass::CasMin { "min-writes" } else { "writes" },
+                        e.prop,
+                        w.shape,
+                        w.class.as_str(),
+                    );
+                }
+            }
+        }
+        for lf in &self.loops {
+            if lf.accums.iter().any(|(_, k)| *k == AccumKind::AddF) {
+                return format!(
+                    "the parallel loop at {} ({}@{}) folds a float reduction \
+                     (slot-ordered f64 fold)",
+                    lf.span, lf.seg, lf.pc,
+                );
+            }
+        }
+        if let Some(lf) = self.loops.first() {
+            return format!(
+                "the parallel loop at {} ({}@{}) needs a bytecode executor",
+                lf.span, lf.seg, lf.pc,
+            );
+        }
+        "the program's driver segments need a bytecode executor".into()
+    }
+
+    /// Typed admission check: `Ok` iff `supports_programs`; the error
+    /// names the offending construct from the certificate.
+    pub fn admit(&self, backend: &str, supports_programs: bool) -> Result<()> {
+        if supports_programs {
+            return Ok(());
+        }
+        bail!(
+            "backend `{backend}` does not support DSL bytecode programs: {}; run it on \
+             --backend serial or --backend cpu",
+            self.blocking_construct(),
+        )
+    }
+
+    /// One-line human verdict for `run --program` / `serve --program`.
+    pub fn summary(&self) -> String {
+        let relaxes = self
+            .loops
+            .iter()
+            .filter(|l| l.sync.contains(&"cas-relax"))
+            .count();
+        format!(
+            "{} parallel loops ({} cas-relax), {} repair pairs, {} reductions ({} f64 \
+             slot-folded), cross-vertex writes {}, batch {}, {}{}",
+            self.loops.len(),
+            relaxes,
+            self.repairs.len(),
+            self.loops.iter().map(|l| l.accums.len()).sum::<usize>(),
+            self.float_accums,
+            if self.relax_only_cross_vertex_writes { "relax-only" } else { "unconstrained" },
+            if self.batch_monotone { "monotone" } else { "non-monotone" },
+            if self.deterministic { "deterministic" } else { "racy" },
+            if self.lints.is_empty() {
+                String::new()
+            } else {
+                format!(", {} lint(s)", self.lints.len())
+            },
+        )
+    }
+
+    /// Serialize the certificate as JSON (hand-rolled: the crate is
+    /// zero-dependency; `telemetry::trace::validate_json` checks it).
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(1024);
+        s.push('{');
+        push_kv(&mut s, "certified", &self.certified.to_string());
+        s.push_str("\"loops\":[");
+        for (i, lf) in self.loops.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push('{');
+            push_kv(&mut s, "seg", &quote(lf.seg));
+            push_kv(&mut s, "pc", &lf.pc.to_string());
+            push_kv(&mut s, "line", &lf.span.line.to_string());
+            push_kv(&mut s, "col", &lf.span.col.to_string());
+            push_kv(&mut s, "domain", &quote(lf.domain));
+            s.push_str("\"sync\":[");
+            for (j, t) in lf.sync.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                s.push_str(&quote(t));
+            }
+            s.push_str("],\"effects\":[");
+            for (j, e) in lf.effects.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                s.push('{');
+                push_kv(&mut s, "prop", &quote(&e.prop));
+                s.push_str("\"reads\":[");
+                for (k, r) in e.reads.iter().enumerate() {
+                    if k > 0 {
+                        s.push(',');
+                    }
+                    s.push_str(&quote(r.as_str()));
+                }
+                s.push_str("],\"writes\":[");
+                for (k, w) in e.writes.iter().enumerate() {
+                    if k > 0 {
+                        s.push(',');
+                    }
+                    s.push_str(&format!(
+                        "{{\"shape\":{},\"class\":{}}}",
+                        quote(w.shape.as_str()),
+                        quote(w.class.as_str())
+                    ));
+                }
+                s.push_str("]}");
+            }
+            s.push_str("],\"accums\":[");
+            for (j, (reg, kind)) in lf.accums.iter().enumerate() {
+                if j > 0 {
+                    s.push(',');
+                }
+                let k = match kind {
+                    AccumKind::AddI => "add-int",
+                    AccumKind::AddF => "add-float",
+                    AccumKind::Or => "or",
+                };
+                s.push_str(&format!("{{\"reg\":{reg},\"kind\":{}}}", quote(k)));
+            }
+            s.push_str("]}");
+        }
+        s.push_str("],\"repairs\":[");
+        for (i, (r, (dn, pn))) in self.repairs.iter().zip(&self.repair_names).enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"dist\":{},\"parent\":{},\"unit_weight\":{}}}",
+                quote(dn),
+                quote(pn),
+                r.unit_weight
+            ));
+        }
+        s.push_str("],");
+        s.push_str("\"determinism\":{");
+        push_kv(&mut s, "deterministic", &self.deterministic.to_string());
+        push_kv(&mut s, "f64_fold_order_safe", &self.f64_fold_order_safe.to_string());
+        s.push_str(&format!("\"float_accums\":{}}},", self.float_accums));
+        push_kv(
+            &mut s,
+            "relax_only_cross_vertex_writes",
+            &self.relax_only_cross_vertex_writes.to_string(),
+        );
+        push_kv(&mut s, "batch_monotone", &self.batch_monotone.to_string());
+        s.push_str("\"dead_props\":[");
+        for (i, p) in self.dead_props.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&quote(p));
+        }
+        s.push_str("],");
+        s.push_str(&format!("\"unreachable_instrs\":{},", self.unreachable_instrs));
+        s.push_str("\"lints\":[");
+        for (i, l) in self.lints.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"code\":{},\"seg\":{},\"pc\":{},\"line\":{},\"col\":{},\"message\":{}}}",
+                quote(l.code),
+                quote(l.seg),
+                l.pc,
+                l.span.line,
+                l.span.col,
+                quote(&l.message)
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+fn push_kv(s: &mut String, key: &str, raw_val: &str) {
+    s.push_str(&format!("{}:{raw_val},", quote(key)));
+}
+
+fn quote(v: &str) -> String {
+    let mut out = String::with_capacity(v.len() + 2);
+    out.push('"');
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::lower;
+
+    fn facts_of(src: &str) -> ProgramFacts {
+        lower::compile(src, None).unwrap().facts
+    }
+
+    #[test]
+    fn sssp_certificate_is_relax_only_with_one_repair() {
+        let f = facts_of(include_str!("../../dsl/sssp_dynamic.sp"));
+        assert!(f.certified && f.deterministic && f.f64_fold_order_safe);
+        assert!(f.relax_only_cross_vertex_writes);
+        assert!(f.batch_monotone);
+        assert_eq!(f.repair_names, vec![("dist".to_string(), "parent".to_string())]);
+        assert!(!f.repairs[0].unit_weight);
+        assert!(f.lints.is_empty(), "unexpected lints: {:?}", f.lints);
+        assert_eq!(f.unreachable_instrs, 0);
+        // the relax loops carry cas-relax sync; reads of dist are relaxed
+        assert!(f
+            .loops
+            .iter()
+            .any(|l| l.sync.contains(&"cas-relax") && l.sync.contains(&"relaxed-read")));
+        // the decremental cascade is a monotone flag sweep
+        assert!(f.loops.iter().any(|l| l.sync.contains(&"monotone-flag")));
+    }
+
+    #[test]
+    fn cc_certificate_has_no_repairs_but_relaxes_both_directions() {
+        let f = facts_of(include_str!("../../dsl/cc_dynamic.sp"));
+        assert!(f.repairs.is_empty(), "cc has no parent companion");
+        assert!(f.relax_only_cross_vertex_writes);
+        let relax = f
+            .loops
+            .iter()
+            .find(|l| l.sync.contains(&"cas-relax"))
+            .expect("cc has relax loops");
+        let comp = relax.effects.iter().find(|e| e.prop == "comp").unwrap();
+        assert!(comp.reads.contains(&AccessShape::Owner));
+        assert!(comp.reads.contains(&AccessShape::Neighbor));
+        assert!(comp.writes.iter().all(|w| w.class == WriteClass::CasMin));
+    }
+
+    #[test]
+    fn pagerank_certificate_covers_float_folds() {
+        let f = facts_of(include_str!("../../dsl/pagerank_dynamic.sp"));
+        assert!(f.float_accums > 0, "pagerank folds f64 diffs");
+        assert!(f.f64_fold_order_safe);
+        assert!(f.relax_only_cross_vertex_writes, "all pagerank writes are owner-local");
+        // the pull sweep reads neighbor ranks but double-buffers writes
+        assert!(f.loops.iter().any(|l| l
+            .effects
+            .iter()
+            .any(|e| e.prop == "pageRank" && e.reads.contains(&AccessShape::Neighbor))));
+    }
+
+    #[test]
+    fn facts_json_is_valid_for_all_shipped_programs() {
+        for src in [
+            include_str!("../../dsl/sssp_dynamic.sp"),
+            include_str!("../../dsl/bfs_dynamic.sp"),
+            include_str!("../../dsl/pagerank_dynamic.sp"),
+            include_str!("../../dsl/tc_dynamic.sp"),
+            include_str!("../../dsl/cc_dynamic.sp"),
+        ] {
+            let f = facts_of(src);
+            let json = f.to_json();
+            crate::telemetry::trace::validate_json(&json)
+                .unwrap_or_else(|e| panic!("invalid facts JSON: {e}\n{json}"));
+        }
+    }
+
+    #[test]
+    fn default_facts_admit_program_backends_and_explain_others() {
+        let f = ProgramFacts::default();
+        f.admit("cpu", true).unwrap();
+        let err = f.admit("dist", false).unwrap_err().to_string();
+        assert!(err.contains("does not support DSL bytecode programs"), "{err}");
+        assert!(err.contains("no analysis certificate"), "{err}");
+    }
+}

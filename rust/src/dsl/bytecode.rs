@@ -37,7 +37,7 @@
 //! done by the caller (coordinator batcher or service sealer), and each
 //! sealed batch is one `execute(.., Phase::Batch{..})` call.
 
-use crate::dsl::ast::BinOp;
+use crate::dsl::ast::{BinOp, Span};
 use crate::graph::{DynGraph, NodeId, Weight};
 use crate::util::error::{bail, Result};
 use crate::util::threadpool::{Sched, ThreadPool};
@@ -151,8 +151,9 @@ pub enum Instr {
     /// Deterministic argmin parent repair, bitwise-identical to the
     /// hand-written cpu kernel's: `parent[v] = smallest in-neighbor u
     /// with dist[u] + w(u,v) == dist[v]` (`w = 1` when `unit_weight`),
-    /// `-1` for sources/unreachable. Inserted by the lowerer at segment
-    /// tails wherever a `Min` assignment carries a parent companion.
+    /// `-1` for sources/unreachable. Scheduled by the race analysis
+    /// ([`crate::dsl::analyze::certify`]) at segment tails wherever a
+    /// `Min` assignment carries a parent companion.
     RepairParents { dist: PropId, parent: PropId, unit_weight: bool },
     /// number of updates in the selected half of the current batch.
     UpdCount { dst: RegId, sel: UpdateSel },
@@ -198,10 +199,12 @@ pub struct ParOp {
     pub locals: Vec<Ty>,
     pub body: Vec<VStmt>,
     pub accums: Vec<AccumDef>,
+    /// source span of the `forall`, for analysis diagnostics.
+    pub span: Span,
 }
 
 /// Per-item expressions (pure; registers are a read-only snapshot).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum VExpr {
     ConstI(i64),
     ConstF(f64),
@@ -232,9 +235,9 @@ pub enum VStmt {
     If { cond: VExpr, then: Vec<VStmt>, els: Vec<VStmt> },
     /// sequential loop over out-neighbors; binds the neighbor id and
     /// (optionally) the edge weight into locals.
-    ForOut { of: VExpr, nbr: usize, w: Option<usize>, body: Vec<VStmt> },
+    ForOut { of: VExpr, nbr: usize, w: Option<usize>, body: Vec<VStmt>, span: Span },
     /// sequential loop over in-neighbors (`g.nodes_to(v)`).
-    ForIn { of: VExpr, nbr: usize, body: Vec<VStmt> },
+    ForIn { of: VExpr, nbr: usize, body: Vec<VStmt>, span: Span },
     /// fold `val` into this item's slot of accumulator `acc`.
     Accum { acc: usize, val: VExpr },
 }
@@ -251,6 +254,9 @@ pub struct Program {
     pub init: Vec<Instr>,
     pub on_batch: Vec<Instr>,
     pub result: Option<RegId>,
+    /// the race/effect analysis certificate attached by `lower`
+    /// (defaulted — uncertified — on hand-built programs).
+    pub facts: crate::dsl::analyze::ProgramFacts,
 }
 
 impl Program {
@@ -595,14 +601,14 @@ fn verify_vstmts(prog: &Program, seg: &str, pc: usize, op: &ParOp, body: &[VStmt
                 verify_vstmts(prog, seg, pc, op, then)?;
                 verify_vstmts(prog, seg, pc, op, els)?;
             }
-            VStmt::ForOut { of, nbr, w, body } => {
+            VStmt::ForOut { of, nbr, w, body, .. } => {
                 verify_vexpr(prog, seg, pc, op, of)?;
                 if *nbr >= op.locals.len() || w.map(|w| w >= op.locals.len()).unwrap_or(false) {
                     bail!("verify: {seg}@{pc}: ForOut local binding out of range");
                 }
                 verify_vstmts(prog, seg, pc, op, body)?;
             }
-            VStmt::ForIn { of, nbr, body } => {
+            VStmt::ForIn { of, nbr, body, .. } => {
                 verify_vexpr(prog, seg, pc, op, of)?;
                 if *nbr >= op.locals.len() {
                     bail!("verify: {seg}@{pc}: ForIn local binding out of range");
@@ -1069,7 +1075,7 @@ fn vexec(
                     vexec(cx, item, subject, locals, els)?;
                 }
             }
-            VStmt::ForOut { of, nbr, w, body } => {
+            VStmt::ForOut { of, nbr, w, body, .. } => {
                 let v = prop_index(veval(cx, subject, locals, of)?.as_i()?, cx.g.num_nodes())?;
                 for (u, wt) in cx.g.out_neighbors(v as NodeId) {
                     locals[*nbr] = ScalarVal::I(u as i64);
@@ -1079,7 +1085,7 @@ fn vexec(
                     vexec(cx, item, subject, locals, body)?;
                 }
             }
-            VStmt::ForIn { of, nbr, body } => {
+            VStmt::ForIn { of, nbr, body, .. } => {
                 let v = prop_index(veval(cx, subject, locals, of)?.as_i()?, cx.g.num_nodes())?;
                 for (u, _) in cx.g.in_neighbors(v as NodeId) {
                     locals[*nbr] = ScalarVal::I(u as i64);
@@ -1180,7 +1186,15 @@ mod tests {
     use crate::graph::generate::uniform_random;
 
     fn two_reg_prog(regs: Vec<Ty>, init: Vec<Instr>) -> Program {
-        Program { props: vec![], regs, params: vec![], init, on_batch: vec![], result: None }
+        Program {
+            props: vec![],
+            regs,
+            params: vec![],
+            init,
+            on_batch: vec![],
+            result: None,
+            facts: Default::default(),
+        }
     }
 
     #[test]
@@ -1217,9 +1231,11 @@ mod tests {
                     comps: vec![],
                 }],
                 accums: vec![],
+                span: Span::default(),
             })],
             on_batch: vec![],
             result: None,
+            facts: Default::default(),
         };
         assert!(verify(&p).unwrap_err().to_string().contains("Int property"));
     }
@@ -1240,6 +1256,7 @@ mod tests {
                     val: VExpr::OutDegree(Box::new(VExpr::Subject)),
                 }],
                 accums: vec![AccumDef { reg: 0, kind: AccumKind::AddI }],
+                span: Span::default(),
             })],
             on_batch: vec![],
             result: Some(0),
@@ -1279,6 +1296,7 @@ mod tests {
                 Instr::UpdCount { dst: 1, sel: UpdateSel::Adds },
             ],
             result: None,
+            facts: Default::default(),
         };
         verify(&prog).unwrap();
         let mut g = uniform_random(10, 30, 3, 2);

@@ -16,12 +16,17 @@
 //! `forall` statements lower to [`Instr::Par`] regions; assignments to
 //! enclosing scalars inside them are classified as reductions
 //! (`x = x + e` / `x += e` → add, `x = True` → or) and become
-//! slot-deterministic accumulators. A `Min` multi-assignment whose
-//! companion stores the relaxing source vertex is recognized as an
-//! SSSP/BFS-style parent write, and a deterministic
-//! [`Instr::RepairParents`] is appended to both segment tails — the same
-//! argmin repair the hand-written cpu/dist kernels run, which is what
-//! makes bytecode SSSP bitwise-equal to them.
+//! slot-deterministic accumulators. The lowerer itself emits no
+//! synchronization schedule beyond that: after `lower_driver` the
+//! race/effect analysis ([`crate::dsl::analyze::certify`]) scans the IR,
+//! infers the SSSP/BFS-style `(dist, parent)` pairs from the `Min`
+//! relax shapes, appends the deterministic [`Instr::RepairParents`] to
+//! both segment tails — the same argmin repair the hand-written cpu/dist
+//! kernels run, which is what makes bytecode SSSP bitwise-equal to
+//! them — and attaches the [`ProgramFacts`] certificate that backend
+//! admission consults.
+//!
+//! [`ProgramFacts`]: crate::dsl::analyze::ProgramFacts
 
 use crate::dsl::ast::{
     self, AssignOp, BinOp, Expr, FnKind, Function, Iter, LValue, Stmt, Type, UnOp,
@@ -70,11 +75,13 @@ pub fn lower(prog: &ast::Program, entry: Option<&str>) -> Result<bytecode::Progr
         params: Vec::new(),
         scopes: vec![HashMap::new()],
         code: Vec::new(),
-        repairs: Vec::new(),
         in_batch: false,
         depth: 0,
     };
-    let out = lo.lower_driver(f)?;
+    let mut out = lo.lower_driver(f)?;
+    // Race/effect analysis: infers the RepairParents schedule from the
+    // relax shapes, rejects racy programs, and attaches the certificate.
+    out.facts = crate::dsl::analyze::certify(&mut out)?;
     bytecode::verify(&out)?;
     Ok(out)
 }
@@ -112,9 +119,6 @@ struct Lowerer<'a> {
     params: Vec<(String, RegId)>,
     scopes: Vec<HashMap<String, Binding>>,
     code: Vec<Instr>,
-    /// (dist-prop, parent-prop, unit-weight) pairs detected from `Min`
-    /// companions; RepairParents for each is appended to both segments.
-    repairs: Vec<(PropId, PropId, bool)>,
     in_batch: bool,
     depth: usize,
 }
@@ -295,12 +299,7 @@ impl<'a> Lowerer<'a> {
             let r = self.coerce(r, self.regs[out])?;
             self.emit(Instr::Mov { dst: out, src: r });
         }
-        let mut on_batch = std::mem::take(&mut self.code);
-        let mut init = init;
-        for &(dist, parent, unit_weight) in &self.repairs {
-            init.push(Instr::RepairParents { dist, parent, unit_weight });
-            on_batch.push(Instr::RepairParents { dist, parent, unit_weight });
-        }
+        let on_batch = std::mem::take(&mut self.code);
         Ok(bytecode::Program {
             props: self.props,
             regs: self.regs,
@@ -308,6 +307,9 @@ impl<'a> Lowerer<'a> {
             init,
             on_batch,
             result,
+            // the analysis pass fills this in (and appends the
+            // RepairParents schedule it infers from the relax shapes).
+            facts: Default::default(),
         })
     }
 
@@ -568,7 +570,6 @@ impl<'a> Lowerer<'a> {
         let Some(LValue::Member { base, prop }) = lhs.first() else {
             bail!("{span}: Min assignment target must be a property member");
         };
-        self.detect_repair(lhs, min_args, rest);
         let (p, pt) = self.prop_named(prop)?;
         if pt != Ty::Int {
             bail!("{span}: Min target {prop:?} must be an int property");
@@ -597,46 +598,6 @@ impl<'a> Lowerer<'a> {
         let end = self.code.len();
         self.patch(jskip, end);
         Ok(())
-    }
-
-    /// Recognize `<x.D, …, x.P, …> = <Min(x.D, S.D + W), …, S, …>` —
-    /// a shortest-path relaxation whose companion `P` records the
-    /// relaxing source, i.e. a parent pointer. Parent companions are
-    /// racy under parallel CAS-min, so the lowerer schedules a
-    /// deterministic argmin [`Instr::RepairParents`] over (D, P) at both
-    /// segment tails; `W == 1` marks the unit-weight (BFS) variant.
-    fn detect_repair(&mut self, lhs: &[LValue], min_args: &(Expr, Expr), rest: &[Expr]) {
-        let Some(LValue::Member { prop: dname, .. }) = lhs.first() else {
-            return;
-        };
-        let Some(Binding::Prop(d)) = self.lookup(dname) else {
-            return;
-        };
-        let Expr::Binary { op: BinOp::Add, lhs: cl, rhs: cr } = &min_args.1 else {
-            return;
-        };
-        let Expr::Member { base: sbase, prop: sprop } = &**cl else {
-            return;
-        };
-        if self.lookup(sprop) != Some(Binding::Prop(d)) {
-            return;
-        }
-        let unit_weight = matches!(&**cr, Expr::IntLit(1));
-        for (lv, re) in lhs[1..].iter().zip(rest) {
-            let LValue::Member { prop: pname, .. } = lv else {
-                continue;
-            };
-            if **sbase != *re {
-                continue;
-            }
-            if let Some(Binding::Prop(p)) = self.lookup(pname) {
-                if self.props[p].ty == Ty::Int
-                    && !self.repairs.iter().any(|&(rd, rp, _)| rd == d && rp == p)
-                {
-                    self.repairs.push((d, p, unit_weight));
-                }
-            }
-        }
     }
 
     /// `OnAdd`/`OnDelete`/`for (u in half)` — a sequential loop over one
@@ -960,7 +921,7 @@ impl<'a> Lowerer<'a> {
             vbody = vec![VStmt::If { cond, then: vbody, els: Vec::new() }];
         }
         let (locals, accums) = (pl.locals, pl.accums);
-        self.emit(Instr::Par(ParOp { domain, locals, body: vbody, accums }));
+        self.emit(Instr::Par(ParOp { domain, locals, body: vbody, accums, span }));
         Ok(())
     }
 }
@@ -1067,7 +1028,6 @@ impl ParLower<'_, '_> {
             }
             Stmt::Assign { lhs, op, rhs, .. } => self.vlower_assign(lhs, *op, rhs, span, out),
             Stmt::MinAssign { lhs, min_args, rest, .. } => {
-                self.lo.detect_repair(lhs, min_args, rest);
                 let Some(LValue::Member { base, prop }) = lhs.first() else {
                     bail!("{span}: Min assignment target must be a property member");
                 };
@@ -1118,7 +1078,7 @@ impl ParLower<'_, '_> {
                         if let Some(cond) = guard {
                             body = vec![VStmt::If { cond, then: body, els: Vec::new() }];
                         }
-                        out.push(VStmt::ForOut { of, nbr, w: Some(w), body });
+                        out.push(VStmt::ForOut { of, nbr, w: Some(w), body, span });
                         Ok(())
                     }
                     Iter::NodesTo { of, .. } => {
@@ -1128,7 +1088,7 @@ impl ParLower<'_, '_> {
                         self.vbind(var, VBind::Local(nbr));
                         let body = self.vlower_stmts(body)?;
                         self.scopes.pop();
-                        out.push(VStmt::ForIn { of, nbr, body });
+                        out.push(VStmt::ForIn { of, nbr, body, span });
                         Ok(())
                     }
                     Iter::Nodes { .. } => {

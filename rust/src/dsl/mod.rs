@@ -13,6 +13,7 @@
 //! listings (Figs. 19–21), plus `cc_dynamic.sp` (connected components,
 //! bytecode-only — no hand-written kernel).
 
+pub mod analyze;
 pub mod ast;
 pub mod bytecode;
 pub mod emit;

@@ -37,6 +37,8 @@ pub struct ForallInfo {
     pub writes: BTreeMap<String, Sync>,
     /// scalar reduction variables (name → sync)
     pub reductions: BTreeSet<String>,
+    /// source location of the `forall`, for reports and diagnostics
+    pub span: Span,
     /// nesting depth (outermost = 0); backends parallelize depth 0 only
     pub depth: usize,
 }
@@ -182,6 +184,7 @@ impl Ctx<'_> {
                     reads: BTreeSet::new(),
                     writes: BTreeMap::new(),
                     reductions: BTreeSet::new(),
+                    span,
                     depth: forall_depth,
                 };
                 Self::scan_forall(var, body, &mut info);

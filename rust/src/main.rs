@@ -220,7 +220,7 @@ fn real_main() -> Result<()> {
     starplat_dyn::util::failpoint::configure_from_env()?;
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let Some(cmd) = argv.first() else {
-        println!("usage: starplat <compile|run|serve|interp|inspect> [options]");
+        println!("usage: starplat <compile|run|serve|analyze|interp|inspect> [options]");
         return Ok(());
     };
     let args = Args::parse(&argv[1..]);
@@ -272,6 +272,7 @@ fn real_main() -> Result<()> {
                     backend.name(),
                     describe_opts(&opts)
                 );
+                println!("analysis: {}", prog.facts.summary());
                 let (cell, st) =
                     run_program_cell(backend, &g, percent, batch, seed, opts, &prog, &pargs)?;
                 if let Some(ret) = st.result(&prog) {
@@ -434,6 +435,9 @@ fn real_main() -> Result<()> {
                     "program        : {path} (DSL bytecode; --algo sets the \
                      workload shape only)"
                 );
+                if let Some(p) = &served_prog {
+                    println!("analysis       : {}", p.facts.summary());
+                }
             }
             let (cell, report) =
                 run_stream_cell(algo, &g, percent, producers, readers, cfg, seed)?;
@@ -573,6 +577,36 @@ fn real_main() -> Result<()> {
                 println!("prop {k}: {} entries", v.len());
             }
         }
+        "analyze" => {
+            // Race/effect analysis only: compile to bytecode (rejecting
+            // racy programs with spanned diagnostics), emit the
+            // ProgramFacts certificate as JSON, and surface lints. Any
+            // lint is a nonzero exit so CI can gate on a clean report.
+            let file = args.positional.first().context(
+                "usage: starplat analyze file.sp [--fn Name] [--json-out facts.json]",
+            )?;
+            let entry = args.flags.get("fn").map(|s| s.as_str());
+            let src = std::fs::read_to_string(file)
+                .with_context(|| format!("reading {file}"))?;
+            let prog = dsl::lower::compile(&src, entry)?;
+            let json = prog.facts.to_json();
+            starplat_dyn::telemetry::trace::validate_json(&json)
+                .map_err(|e| anyhow!("internal: facts JSON failed validation: {e}"))?;
+            match args.flags.get("json-out") {
+                Some(path) => {
+                    std::fs::write(path, &json)?;
+                    println!("wrote facts ({} bytes) to {path}", json.len());
+                }
+                None => println!("{json}"),
+            }
+            println!("analysis: {}", prog.facts.summary());
+            for l in &prog.facts.lints {
+                println!("warning: {l}");
+            }
+            if !prog.facts.lints.is_empty() {
+                bail!("{} lint diagnostic(s) in {file}", prog.facts.lints.len());
+            }
+        }
         "inspect" => {
             let m = ArtifactManifest::load(&ArtifactManifest::default_dir())?;
             println!("artifacts in {}:", m.dir.display());
@@ -588,7 +622,9 @@ fn real_main() -> Result<()> {
                 );
             }
         }
-        other => bail!("unknown subcommand {other:?} (compile|run|serve|interp|inspect)"),
+        other => {
+            bail!("unknown subcommand {other:?} (compile|run|serve|analyze|interp|inspect)")
+        }
     }
     Ok(())
 }

@@ -607,6 +607,10 @@ fn seed_state(
 ) -> Result<AlgoState> {
     use crate::dsl::bytecode::{Phase, ProgState};
     if let Some(pc) = &cfg.program {
+        // Admission before any state is built: the analysis certificate
+        // names the construct a non-program backend has no lowering for.
+        let caps = engine.capabilities();
+        pc.prog.facts.admit(caps.name, caps.supports_programs)?;
         let mut st = ProgState::new(&pc.prog, g.num_nodes(), &pc.args)?;
         engine.run_program(&pc.prog, Phase::Init, g, &mut st)?;
         return Ok(AlgoState::Program { prog: Arc::clone(&pc.prog), st });

@@ -334,6 +334,33 @@ fn negative_dist_backend_rejects_programs() {
         err.contains("does not support DSL bytecode programs"),
         "unexpected: {err}"
     );
+    // the rejection is analysis-driven: it names the blocking construct
+    // (cc's neighbor-indexed CAS-min relax), not just a capability bit.
+    assert!(err.contains("comp"), "names the property: {err}");
+    assert!(err.contains("neighbor"), "names the access shape: {err}");
+    assert!(err.contains("line "), "carries the loop's source span: {err}");
+}
+
+#[test]
+fn negative_run_program_cell_admission_names_construct() {
+    // coordinator-level admission fires before any static solve is paid
+    // for, with the same certificate-driven message.
+    let prog = compile_file("dsl/sssp_dynamic.sp");
+    let g = generators::uniform_random(20, 80, 5, 115);
+    let err = starplat_dyn::coordinator::run_program_cell(
+        BackendKind::Dist,
+        &g,
+        5.0,
+        8,
+        42,
+        EngineOpts::default(),
+        &prog,
+        &args(&[("batchSize", ScalarVal::I(8)), ("src", ScalarVal::I(0))]),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("does not support DSL bytecode programs"), "unexpected: {err}");
+    assert!(err.contains("dist"), "names the property or backend: {err}");
 }
 
 #[test]
@@ -373,4 +400,199 @@ fn negative_second_shutdown_is_typed_not_a_panic() {
         matches!(svc.try_shutdown(), Err(ShutdownError::AlreadyShutDown)),
         "second shutdown must be AlreadyShutDown"
     );
+}
+
+// ------------------------------------------------------------- analysis
+// race rejection: hand-written racy programs, each refused with the
+// expected diagnostic code and the offending loop's source span.
+
+#[test]
+fn negative_plain_neighbor_write_is_a_write_write_race() {
+    let src = "\
+Dynamic RacyPush(Graph g, updates<g> u, propNode<int> x, int batchSize) {
+  g.attachNodeProperty(x = 0);
+  Batch(u : batchSize) {
+    forall (v in g.nodes()) {
+      forall (nbr in g.neighbors(v)) {
+        nbr.x = v.x + 1;
+      }
+    }
+  }
+}";
+    let err = lower::compile(src, None).unwrap_err().to_string();
+    assert!(err.contains("R001"), "write-write race code: {err}");
+    assert!(err.contains("\"x\""), "names the property: {err}");
+    assert!(err.contains("neighbor"), "names the access shape: {err}");
+    assert!(err.contains("line 5:"), "spans the offending loop: {err}");
+}
+
+#[test]
+fn negative_non_monotone_min_companion_is_rejected() {
+    let src = "\
+Dynamic RacyMin(Graph g, updates<g> u, propNode<int> comp, propNode<int> hops, int batchSize) {
+  g.attachNodeProperty(comp = 0, hops = 0);
+  Batch(u : batchSize) {
+    forall (v in g.nodes()) {
+      forall (nbr in g.neighbors(v)) {
+        <nbr.comp, nbr.hops> = <Min(nbr.comp, v.comp), v.comp + 1>;
+      }
+    }
+  }
+}";
+    // `hops` is neither a constant flag nor the relax source (`v.comp + 1`
+    // is not the CAS-min's source vertex), so its final value depends on
+    // which relax wins — a schedule-dependent companion.
+    let err = lower::compile(src, None).unwrap_err().to_string();
+    assert!(err.contains("R002"), "companion race code: {err}");
+    assert!(err.contains("\"hops\""), "names the companion property: {err}");
+    assert!(err.contains("line 5:"), "spans the offending loop: {err}");
+}
+
+#[test]
+fn negative_read_after_racy_write_is_rejected() {
+    let src = "\
+Dynamic RacyRead(Graph g, updates<g> u, propNode<int> x, propNode<int> y, int batchSize) {
+  g.attachNodeProperty(x = 0, y = 0);
+  Batch(u : batchSize) {
+    forall (v in g.nodes()) {
+      v.x = v.x + 2;
+      forall (nbr in g.neighbors(v)) {
+        if (nbr.x > 0) {
+          v.y = 1;
+        }
+      }
+    }
+  }
+}";
+    // every iteration both increments its own `x` and reads neighbors'
+    // `x`: the reads observe in-flight values of a non-monotone store.
+    let err = lower::compile(src, None).unwrap_err().to_string();
+    assert!(err.contains("R003"), "read-write race code: {err}");
+    assert!(err.contains("\"x\""), "names the property: {err}");
+    assert!(err.contains("neighbor"), "names the racy read shape: {err}");
+    assert!(err.contains("line 4:"), "spans the enclosing parallel loop: {err}");
+}
+
+#[test]
+fn uninitialized_batch_read_lints_but_compiles() {
+    let src = "\
+Dynamic ColdRead(Graph g, updates<g> u, propNode<int> x, propNode<int> y, int batchSize) {
+  g.attachNodeProperty(y = 0);
+  Batch(u : batchSize) {
+    forall (v in g.nodes()) {
+      v.y = v.x;
+    }
+  }
+}";
+    // `x` is read in the batch segment but never written: a warning (the
+    // zero-fill is well-defined), not a rejection.
+    let prog = lower::compile(src, None).expect("lints must not block compilation");
+    assert_eq!(prog.facts.lints.len(), 1, "exactly one lint: {:?}", prog.facts.lints);
+    let l = &prog.facts.lints[0];
+    assert_eq!(l.code, "L001");
+    assert_eq!(l.seg, "on_batch");
+    assert!(l.message.contains("\"x\""), "names the property: {}", l.message);
+    assert_eq!(l.span.line, 4, "spans the reading loop: {}", l);
+    // and `y` is written but never read anywhere — dead.
+    assert_eq!(prog.facts.dead_props, vec!["y".to_string()]);
+}
+
+/// Propcheck-style sweep: on every shipped `.sp`, the analysis-driven
+/// lowering (inferred RepairParents, certificate attached) must keep the
+/// serial and cpu backends bitwise identical across seeds, carry a clean
+/// deterministic certificate, and emit valid facts JSON.
+#[test]
+fn sweep_shipped_programs_certificates_and_serial_cpu_parity() {
+    let shipped: [(&str, Vec<(&str, ScalarVal)>); 5] = [
+        (
+            "dsl/sssp_dynamic.sp",
+            vec![("batchSize", ScalarVal::I(8)), ("src", ScalarVal::I(0))],
+        ),
+        (
+            "dsl/bfs_dynamic.sp",
+            vec![("batchSize", ScalarVal::I(8)), ("src", ScalarVal::I(0))],
+        ),
+        (
+            "dsl/pagerank_dynamic.sp",
+            vec![
+                ("batchSize", ScalarVal::I(8)),
+                ("beta", ScalarVal::F(1e-6)),
+                ("delta", ScalarVal::F(0.85)),
+                ("maxIter", ScalarVal::I(50)),
+            ],
+        ),
+        ("dsl/tc_dynamic.sp", vec![("batchSize", ScalarVal::I(8))]),
+        ("dsl/cc_dynamic.sp", vec![("batchSize", ScalarVal::I(8))]),
+    ];
+    for (path, arglist) in shipped {
+        let prog = compile_file(path);
+        let f = &prog.facts;
+        assert!(f.certified && f.deterministic, "{path}: clean certificate expected");
+        assert!(f.relax_only_cross_vertex_writes, "{path}: shipped programs are relax-only");
+        assert!(f.batch_monotone, "{path}: cross-vertex batch writes are monotone");
+        assert!(f.f64_fold_order_safe, "{path}: slot folds are index-ordered");
+        assert!(f.lints.is_empty(), "{path}: no lints expected: {:?}", f.lints);
+        assert_eq!(f.unreachable_instrs, 0, "{path}: all instructions reachable");
+        assert!(!f.loops.is_empty(), "{path}: certificate covers the Par loops");
+        starplat_dyn::telemetry::trace::validate_json(&f.to_json())
+            .unwrap_or_else(|e| panic!("{path}: invalid facts JSON: {e}"));
+
+        // repair schedule: inferred from the IR, mirrored at both tails.
+        let want_repairs: &[(&str, &str, bool)] = match path {
+            "dsl/sssp_dynamic.sp" => &[("dist", "parent", false)],
+            "dsl/bfs_dynamic.sp" => &[("level", "parent", true)],
+            _ => &[],
+        };
+        let got: Vec<(&str, &str, bool)> = f
+            .repairs
+            .iter()
+            .zip(&f.repair_names)
+            .map(|(r, (d, p))| (d.as_str(), p.as_str(), r.unit_weight))
+            .collect();
+        assert_eq!(got, want_repairs, "{path}: inferred repair schedule");
+        for seg in [&prog.init, &prog.on_batch] {
+            let tail_repairs = seg
+                .iter()
+                .filter(|i| matches!(i, bytecode::Instr::RepairParents { .. }))
+                .count();
+            assert_eq!(tail_repairs, f.repairs.len(), "{path}: RepairParents at segment tail");
+        }
+
+        // bitwise serial ≡ cpu over multiple update streams.
+        for seed in [7u64, 11] {
+            let g0 = generators::uniform_random(60, 240, 5, seed);
+            let stream = UpdateStream::generate_percent(&g0, 10.0, 8, 9, seed + 1);
+            let a = args(&arglist);
+            let (_, st_s) = run_prog(&*engine(BackendKind::Serial), &prog, &g0, &stream, &a);
+            let (_, st_c) = run_prog(&*engine(BackendKind::Cpu), &prog, &g0, &stream, &a);
+            for p in &prog.props {
+                match p.ty {
+                    bytecode::Ty::Int => assert_eq!(
+                        st_s.prop_i64(&prog, &p.name),
+                        st_c.prop_i64(&prog, &p.name),
+                        "{path} seed {seed}: serial != cpu on int prop {}",
+                        p.name
+                    ),
+                    bytecode::Ty::Float => {
+                        let bits = |st: &ProgState| {
+                            st.prop_f64(&prog, &p.name)
+                                .map(|v| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>())
+                        };
+                        assert_eq!(
+                            bits(&st_s),
+                            bits(&st_c),
+                            "{path} seed {seed}: serial != cpu bits on float prop {}",
+                            p.name
+                        );
+                    }
+                    bytecode::Ty::Bool => {}
+                }
+            }
+            assert_eq!(
+                st_s.result(&prog),
+                st_c.result(&prog),
+                "{path} seed {seed}: serial != cpu result"
+            );
+        }
+    }
 }
